@@ -1,0 +1,79 @@
+//! Communication-budget comparison: measured bytes for SFPrompt vs FL vs
+//! SFL on the same workload, next to the closed-form model (Table 2 shape).
+//!
+//!     cargo run --release --example comm_budget [-- --rounds N]
+
+use anyhow::Result;
+
+use sfprompt::analysis::{fl, sfl, sfprompt as sfp_model, CostParams};
+use sfprompt::data::{synth, SynthDataset};
+use sfprompt::federation::baselines::BaselineEngine;
+use sfprompt::federation::{FedConfig, Method, Selection, SfPromptEngine};
+use sfprompt::partition::Partition;
+use sfprompt::runtime::ArtifactStore;
+use sfprompt::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rounds: usize = args.get_parse("rounds", 3);
+
+    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "small")?;
+    let cfg = store.manifest.config.clone();
+    let mut profile = synth::profile("cifar10").unwrap();
+    profile.num_classes = cfg.num_classes;
+    let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 20 * 32, 51, 52);
+
+    let fed = FedConfig {
+        num_clients: 20,
+        clients_per_round: 4,
+        local_epochs: 4,
+        rounds,
+        lr: 0.08,
+        retain_fraction: 0.4,
+        local_loss_update: true,
+        partition: Partition::Iid,
+        seed: 23,
+        eval_limit: None,
+        eval_every: usize::MAX, // no eval — pure comm measurement
+        selection: Selection::Uniform,
+    };
+
+    println!("measured bytes/round on config `small` (K=4, U=4, retain=0.4):");
+    let mut measured = Vec::new();
+    for method in [Method::Fl, Method::SflFullFinetune, Method::SfPrompt] {
+        let mb = if method == Method::SfPrompt {
+            let mut e = SfPromptEngine::new(&store, fed, &train);
+            e.run(&train, None, |_| {})?.comm_mb_per_round()
+        } else {
+            let mut e = BaselineEngine::new(&store, fed, method, &train);
+            e.run(&train, None, |_| {})?.comm_mb_per_round()
+        };
+        measured.push((method.label(), mb));
+        println!("  {:<12} {:>10.3} MB/round", method.label(), mb);
+    }
+    let fl_mb = measured[0].1;
+    println!("\nratios vs FL (paper Table 2 shape: SFL >> FL > SFPrompt):");
+    for (name, mb) in &measured {
+        println!("  {:<12} {:>7.3}x", name, mb / fl_mb);
+    }
+
+    // Closed-form model at the same parameters, small-model scale.
+    let man = &store.manifest;
+    let p = CostParams {
+        w_bytes: man.cost.message_bytes["full_model"] as f64,
+        alpha: man.cost.alpha,
+        tau: man.cost.tau,
+        gamma: fed.retain_fraction,
+        p_bytes: man.cost.message_bytes["prompt_params"] as f64,
+        q_bytes: (cfg.seq_len * cfg.dim * 4) as f64,
+        d_samples: 32.0,
+        clients: fed.clients_per_round as f64,
+        local_epochs: fed.local_epochs as f64,
+        ..Default::default()
+    };
+    println!("\nclosed-form model at the same parameters:");
+    println!("  fl       {:>10.3} MB", fl(&p).comm_bytes / 1e6);
+    println!("  sfl_ff   {:>10.3} MB", sfl(&p).comm_bytes / 1e6);
+    println!("  sfprompt {:>10.3} MB", sfp_model(&p).comm_bytes / 1e6);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Non-IID + pruning scenario (the paper's hardest setting).
+//!
+//! Splits a cifar100-like corpus over 50 clients with Dirichlet(0.1) label
+//! skew, then compares SFPrompt at several EL2N retain fractions —
+//! demonstrating the Fig-7 claim that deep pruning costs little accuracy
+//! because Phase-1 local-loss updates still see all local data.
+//!
+//!     cargo run --release --example noniid_pruning [-- --rounds N]
+
+use anyhow::Result;
+
+use sfprompt::data::{synth, SynthDataset};
+use sfprompt::federation::{Selection, FedConfig, SfPromptEngine};
+use sfprompt::partition::{label_skew, partition, Partition};
+use sfprompt::runtime::ArtifactStore;
+use sfprompt::util::cli::Args;
+use sfprompt::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let rounds: usize = args.get_parse("rounds", 6);
+
+    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "small_c100")?;
+    let cfg = store.manifest.config.clone();
+    let mut profile = synth::profile("cifar100").unwrap();
+    profile.num_classes = cfg.num_classes;
+
+    let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 50 * 32, 41, 42);
+    let eval = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 160, 41, 43);
+
+    // Show how skewed Dirichlet(0.1) actually is vs IID.
+    let labels = train.labels();
+    let mut rng = Rng::new(5);
+    let skew_noniid = label_skew(
+        &labels,
+        &partition(&labels, 50, Partition::Dirichlet { alpha: 0.1 }, &mut rng),
+    );
+    let skew_iid = label_skew(&labels, &partition(&labels, 50, Partition::Iid, &mut rng));
+    println!("label skew (TV distance): dirichlet(0.1)={skew_noniid:.3} iid={skew_iid:.3}");
+
+    for retain in [1.0, 0.4, 0.2] {
+        let fed = FedConfig {
+            num_clients: 50,
+            clients_per_round: 5,
+            local_epochs: 5,
+            rounds,
+            lr: 0.08,
+            retain_fraction: retain,
+            local_loss_update: true,
+            partition: Partition::Dirichlet { alpha: 0.1 },
+            seed: 17,
+            eval_limit: Some(160),
+            eval_every: rounds,
+            selection: Selection::Uniform,
+        };
+        let mut engine = SfPromptEngine::new(&store, fed, &train);
+        let hist = engine.run(&train, Some(&eval), |_| {})?;
+        println!(
+            "retain={:.1}: final acc {:.4}, split-pass comm {:.2} MB/round",
+            retain,
+            hist.final_accuracy(),
+            hist.comm_mb_per_round()
+        );
+    }
+    println!("expected shape: accuracy degrades only mildly as retain shrinks, comm drops ~linearly");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: run a few SFPrompt global rounds on the `tiny` config.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Exercises the full public API surface: artifact loading, synthetic data,
+//! partitioning, the three-phase engine, and communication accounting.
+
+use anyhow::Result;
+
+use sfprompt::data::{synth::DatasetProfile, SynthDataset};
+use sfprompt::federation::{Selection, FedConfig, SfPromptEngine};
+use sfprompt::partition::Partition;
+use sfprompt::runtime::ArtifactStore;
+
+fn main() -> Result<()> {
+    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "tiny")?;
+    let cfg = store.manifest.config.clone();
+    println!(
+        "loaded config `{}`: dim={} depth={}+{}+{} prompt={} batch={}",
+        cfg.name, cfg.dim, cfg.depth_head, cfg.depth_body, cfg.depth_tail,
+        cfg.prompt_len, cfg.batch
+    );
+
+    let profile = DatasetProfile {
+        name: "quickstart",
+        num_classes: cfg.num_classes,
+        noise: 0.4,
+        class_overlap: 0.15,
+    };
+    let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 320, 11, 12);
+    let eval = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 96, 11, 99);
+
+    let fed = FedConfig {
+        num_clients: 10,
+        clients_per_round: 3,
+        local_epochs: 3,
+        rounds: 5,
+        lr: 0.1,
+        retain_fraction: 0.5,
+        local_loss_update: true,
+        partition: Partition::Iid,
+        seed: 7,
+        eval_limit: Some(96),
+        eval_every: 1,
+        selection: Selection::Uniform,
+    };
+
+    let mut engine = SfPromptEngine::new(&store, fed, &train);
+    let hist = engine.run(&train, Some(&eval), |rec| {
+        println!(
+            "round {}: local_loss={:.4} split_loss={:.4} acc={:.4} comm={:.3}MB",
+            rec.round, rec.mean_local_loss, rec.mean_split_loss, rec.eval_accuracy,
+            rec.comm.mb()
+        );
+    })?;
+
+    println!(
+        "\nfinal accuracy {:.4} | total comm {:.3} MB | breakdown:",
+        hist.final_accuracy(),
+        hist.total_comm.mb()
+    );
+    for (kind, bytes) in &hist.total_comm.by_kind {
+        println!("  {kind:<22} {:.4} MB", *bytes as f64 / 1e6);
+    }
+    Ok(())
+}

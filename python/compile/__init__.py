@@ -1,0 +1,3 @@
+"""Build-time-only python package: L1 Pallas kernels, L2 JAX split-ViT
+model, and the AOT lowering driver. Never imported at runtime — the rust
+coordinator consumes ``artifacts/*`` exclusively."""

@@ -1,0 +1,121 @@
+"""AOT driver: lower every stage of every (non-analytic) config to HLO text.
+
+Emits, per config::
+
+    artifacts/<config>/<stage>.hlo.txt
+    artifacts/<config>/manifest.json
+
+HLO **text** is the interchange format, NOT ``lowered.compile().serialize()``
+— jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and its README.
+
+Analytic-only configs (vit_base_sim / vit_large_sim) get a manifest with the
+cost model but no HLO: the rust side uses them purely for Table 1 / Table 2.
+
+Python runs ONLY here, at build time; the rust binary is self-contained
+afterwards (parameters are initialised rust-side from the manifest's init
+specs).
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import costmodel, vit
+from .configs import CONFIGS, ModelConfig
+from .stages import build_stages
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stage(cfg: ModelConfig, stage) -> str:
+    # keep_unused=True: the positional signature is the manifest contract —
+    # jit must NOT drop parameters that are dead in a particular stage
+    # (e.g. additive biases whose value the VJP never reads), or the rust
+    # executor's buffer count would disagree with the compiled program.
+    lowered = jax.jit(stage.fn, keep_unused=True).lower(*stage.example_args(cfg))
+    return to_hlo_text(lowered)
+
+
+def build_manifest(cfg: ModelConfig, stages) -> dict:
+    defs = vit.segment_defs(cfg)
+    return {
+        "version": MANIFEST_VERSION,
+        "config": cfg.to_dict(),
+        "segments": {
+            seg: [d.to_dict() for d in dd] for seg, dd in defs.items()
+        },
+        "stages": {
+            name: {
+                "file": f"{name}.hlo.txt",
+                "inputs": st.inputs,
+                "outputs": st.outputs,
+                "family": st.family,
+            }
+            for name, st in stages.items()
+        },
+        "cost": costmodel.cost_summary(cfg),
+    }
+
+
+def emit_config(cfg: ModelConfig, out_root: pathlib.Path,
+                force: bool = False) -> None:
+    out_dir = out_root / cfg.name
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stages = {} if cfg.analytic_only else build_stages(cfg)
+    manifest = build_manifest(cfg, stages)
+    blob = json.dumps(manifest, indent=1, sort_keys=True)
+
+    # Skip-if-unchanged: the manifest hash covers config + signatures.
+    stamp = out_dir / ".stamp"
+    digest = hashlib.sha256(blob.encode()).hexdigest()
+    if not force and stamp.exists() and stamp.read_text() == digest:
+        if all((out_dir / f"{n}.hlo.txt").exists() for n in stages):
+            print(f"[aot] {cfg.name}: up to date")
+            return
+
+    for name, st in stages.items():
+        text = lower_stage(cfg, st)
+        (out_dir / f"{name}.hlo.txt").write_text(text)
+        print(f"[aot] {cfg.name}/{name}: {len(text)} chars")
+    (out_dir / "manifest.json").write_text(blob)
+    stamp.write_text(digest)
+    print(f"[aot] {cfg.name}: manifest written ({len(stages)} stages)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact root directory")
+    ap.add_argument("--config", action="append", default=None,
+                    help="only these config names (repeatable)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_root = pathlib.Path(args.out)
+    todo = [c for c in CONFIGS
+            if args.config is None or c.name in args.config]
+    if not todo:
+        sys.exit(f"no configs matched {args.config!r}")
+    for cfg in todo:
+        emit_config(cfg, out_root, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

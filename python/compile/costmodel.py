@@ -1,0 +1,78 @@
+"""Analytic FLOPs / bytes cost model for the manifest (cross-checks rust).
+
+These numbers feed Table 1 / Table 2 style analyses: per-segment parameter
+counts, per-batch forward FLOPs, and per-message byte sizes. The rust
+``flops``/``analysis`` modules implement the same formulas independently;
+``manifest.json`` carries this python copy so integration tests can assert
+the two implementations agree.
+
+FLOPs convention: 1 MAC = 2 FLOPs; LayerNorm/softmax/GELU counted at their
+elementwise op counts (they are <2% of a ViT block and matter only for the
+low-order digits).
+"""
+
+from typing import Dict
+
+from . import vit
+from .configs import ModelConfig
+
+BYTES_F32 = 4
+
+
+def block_flops(dim: int, seq: int, mlp_ratio: int) -> int:
+    """Forward FLOPs of one pre-LN transformer block at sequence length seq."""
+    d, t, m = dim, seq, mlp_ratio * dim
+    qkv = 2 * t * d * 3 * d
+    attn_mm = 2 * 2 * t * t * d          # QK^T and PV
+    proj = 2 * t * d * d
+    mlp = 2 * 2 * t * d * m
+    ln = 2 * (8 * t * d)
+    softmax = 5 * t * t * (d // d)       # per-head rows merged: ~5*T^2*H*1
+    return qkv + attn_mm + proj + mlp + ln + softmax
+
+
+def segment_flops(cfg: ModelConfig, with_prompt: bool) -> Dict[str, int]:
+    """Per-sample forward FLOPs for head / body / tail."""
+    t = cfg.seq_len if with_prompt else cfg.seq_len_noprompt
+    blk = block_flops(cfg.dim, t, cfg.mlp_ratio)
+    embed = 2 * cfg.num_patches * cfg.patch_dim * cfg.dim
+    head = embed + cfg.depth_head * blk
+    body = cfg.depth_body * blk
+    tail = cfg.depth_tail * blk + 2 * cfg.dim * cfg.num_classes + 8 * t * cfg.dim
+    return {"head": head, "body": body, "tail": tail}
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, int]:
+    defs = vit.segment_defs(cfg)
+    return {seg: vit.num_params(d) for seg, d in defs.items()}
+
+
+def message_bytes(cfg: ModelConfig) -> Dict[str, int]:
+    """Per-message payload sizes (f32) for the split protocol."""
+    counts = param_counts(cfg)
+    smashed = cfg.batch * cfg.seq_len * cfg.dim * BYTES_F32
+    smashed_np = cfg.batch * cfg.seq_len_noprompt * cfg.dim * BYTES_F32
+    return {
+        "smashed_per_batch": smashed,
+        "smashed_per_batch_noprompt": smashed_np,
+        "head_params": counts["head"] * BYTES_F32,
+        "body_params": counts["body"] * BYTES_F32,
+        "tail_params": counts["tail"] * BYTES_F32,
+        "prompt_params": counts["prompt"] * BYTES_F32,
+        "full_model": sum(
+            counts[s] for s in ("head", "body", "tail")) * BYTES_F32,
+    }
+
+
+def cost_summary(cfg: ModelConfig) -> dict:
+    counts = param_counts(cfg)
+    total = sum(counts[s] for s in ("head", "body", "tail"))
+    return {
+        "params": counts,
+        "params_total_backbone": total,
+        "alpha": counts["head"] / total,   # |W_h| / |W|   (paper §3.5)
+        "tau": counts["body"] / total,     # |W_b| / |W|
+        "flops_fwd_per_sample": segment_flops(cfg, with_prompt=True),
+        "flops_fwd_per_sample_noprompt": segment_flops(cfg, with_prompt=False),
+        "message_bytes": message_bytes(cfg),
+    }

@@ -1,0 +1,15 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles."""
+
+from .attention import attention, attention_fwd_pallas
+from .layernorm import layernorm, layernorm_fwd_pallas
+from .el2n import el2n_scores
+from . import ref
+
+__all__ = [
+    "attention",
+    "attention_fwd_pallas",
+    "layernorm",
+    "layernorm_fwd_pallas",
+    "el2n_scores",
+    "ref",
+]

@@ -1,0 +1,75 @@
+"""Pallas fused multi-head attention kernel (L1 hot spot).
+
+The paper fine-tunes a ViT; the transformer's attention is the compute
+hot-spot of every stage (head/body/tail forward and backward, local-loss
+update). We implement it as a Pallas kernel gridded over (batch, head):
+each program owns one [T, Dh] q/k/v tile resident in VMEM, computes the
+full score matrix, a numerically stable softmax, and the output tile.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the [T, Dh] tiles are the
+VMEM-resident blocks; the two matmuls target the MXU. On CPU we must run
+``interpret=True`` (real lowering emits a Mosaic custom-call the CPU PJRT
+plugin cannot execute), so all pallas_call sites in this repo pass
+interpret=True.
+
+The backward pass is a ``jax.custom_vjp`` whose bwd re-derives gradients
+from the pure-jnp reference — Pallas has no general autodiff rule, and the
+reference math is exactly what the kernel computes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_attention
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    """One (batch, head) program: full-sequence attention in VMEM."""
+    q = q_ref[0, 0]  # [T, Dh]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Numerically stable softmax over the key axis.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(probs, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+def attention_fwd_pallas(q, k, v):
+    """Pallas forward: q,k,v [B,H,T,Dh] -> [B,H,T,Dh]."""
+    b, h, t, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    spec = pl.BlockSpec((1, 1, t, dh), lambda i, j: (i, j, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(b, h),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, t, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Fused scaled-dot-product attention with a reference-math VJP."""
+    return attention_fwd_pallas(q, k, v)
+
+
+def _attention_fwd(q, k, v):
+    return attention_fwd_pallas(q, k, v), (q, k, v)
+
+
+def _attention_bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref_attention, q, k, v)
+    return vjp(g)
+
+
+attention.defvjp(_attention_fwd, _attention_bwd)

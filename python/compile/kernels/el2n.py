@@ -1,0 +1,43 @@
+"""Pallas fused EL2N score kernel (Phase 1 dataset pruning).
+
+EL2N (Paul et al. 2021) is ``||softmax(logits) - onehot(y)||_2`` per sample.
+SFPrompt computes it over every local sample before split training, so it is
+a per-round hot path on the client. One program per row-block keeps the
+[Bb, C] tile in VMEM and fuses softmax, subtraction, and the row norm.
+
+No gradient is ever taken through pruning, so no custom_vjp is needed.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _el2n_kernel(logits_ref, onehot_ref, out_ref):
+    logits = logits_ref[...]  # [Bb, C]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    err = probs - onehot_ref[...]
+    out_ref[...] = jnp.sqrt(jnp.sum(jnp.square(err), axis=-1)).astype(
+        out_ref.dtype
+    )
+
+
+def el2n_scores(logits, labels_onehot):
+    """Fused EL2N: logits [B,C], onehot [B,C] -> scores [B]."""
+    b, c = logits.shape
+    # Row-block the batch; B in this repo is always a power of two >= 4.
+    bb = min(b, 8)
+    assert b % bb == 0, f"batch {b} not divisible by row block {bb}"
+    return pl.pallas_call(
+        _el2n_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), logits.dtype),
+        interpret=True,
+    )(logits, labels_onehot)

@@ -1,0 +1,59 @@
+"""Pallas fused LayerNorm kernel.
+
+Gridded over the batch axis; each program normalises a [T, D] tile in VMEM
+(mean/variance over the feature axis, then affine). Backward is a
+``jax.custom_vjp`` against the pure-jnp reference (see attention.py for the
+rationale). interpret=True everywhere — CPU PJRT cannot run Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_layernorm
+
+
+def _ln_kernel(x_ref, s_ref, b_ref, o_ref, *, eps):
+    x = x_ref[0]  # [T, D]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    o_ref[0] = ((x - mean) * inv * s_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm_fwd_pallas(x, scale, bias, eps=1e-6):
+    """Pallas forward: x [B,T,D], scale/bias [D] -> [B,T,D]."""
+    b, t, d = x.shape
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, t, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, t, d), x.dtype),
+        interpret=True,
+    )(x, scale, bias)
+
+
+@jax.custom_vjp
+def layernorm(x, scale, bias):
+    """Fused LayerNorm (last axis) with a reference-math VJP."""
+    return layernorm_fwd_pallas(x, scale, bias)
+
+
+def _ln_fwd(x, scale, bias):
+    return layernorm_fwd_pallas(x, scale, bias), (x, scale, bias)
+
+
+def _ln_bwd(res, g):
+    x, scale, bias = res
+    _, vjp = jax.vjp(ref_layernorm, x, scale, bias)
+    return vjp(g)
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts the Pallas kernels
+(interpret=True) match these within tolerance across a hypothesis-driven
+sweep of shapes and dtypes. They are also the backward-pass implementations
+behind the kernels' ``jax.custom_vjp`` wrappers.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v):
+    """Scaled dot-product attention.
+
+    q, k, v: [B, H, T, Dh] -> [B, H, T, Dh]
+    """
+    scale = (1.0 / jnp.sqrt(q.shape[-1])).astype(q.dtype)
+    scores = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", probs, v)
+
+
+def ref_layernorm(x, scale, bias, eps=1e-6):
+    """LayerNorm over the last axis. x: [..., D], scale/bias: [D]."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * scale + bias
+
+
+def ref_el2n(logits, labels_onehot):
+    """EL2N score (Paul et al. 2021): ||softmax(logits) - onehot||_2 per row.
+
+    logits: [B, C], labels_onehot: [B, C] -> [B]
+    """
+    err = jax.nn.softmax(logits, axis=-1) - labels_onehot
+    return jnp.sqrt(jnp.sum(jnp.square(err), axis=-1))

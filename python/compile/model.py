@@ -1,0 +1,12 @@
+"""L2 entry point: re-exports the split-ViT model and the AOT stage set.
+
+The model definition lives in ``vit.py`` (segments, blocks, prompt
+injection) and the per-message stage functions in ``stages.py``; this module
+is the stable import surface used by ``aot.py`` and the tests.
+"""
+
+from .configs import CONFIGS, BY_NAME, ModelConfig, get  # noqa: F401
+from .stages import Stage, build_stages  # noqa: F401
+from .vit import (TensorDef, as_dict, body_defs, body_fwd, cross_entropy,  # noqa: F401
+                  head_defs, head_fwd, num_params, patchify, prompt_defs,
+                  segment_defs, tail_defs, tail_fwd, transformer_block)

@@ -1,0 +1,330 @@
+"""AOT stage functions — one per protocol message of SFPrompt and baselines.
+
+Every function here is jitted and lowered once by ``aot.py`` to an HLO-text
+artifact that the rust coordinator executes via PJRT. Signatures are *flat*:
+segment tensors are splatted positionally in manifest order, followed by the
+data tensors and an ``lr`` scalar where applicable. The manifest records the
+exact ordering so the rust side never guesses.
+
+Stage inventory (paper §3.2–3.4):
+
+  Phase 1 (client self-update, no server interaction):
+    local_step    — W_h→W_t shortcut, SGD step on (W_t, p)
+    el2n_scores   — EL2N pruning scores over a batch
+
+  Phase 2 (split training):
+    head_forward  — client: W_h(+prompt) fwd -> smashed data
+    body_forward  — server: W_b fwd
+    tail_step     — client: W_t fwd/bwd + SGD, emits grad w.r.t. body output
+    body_backward — server: frozen W_b bwd, emits grad w.r.t. smashed data
+    prompt_grad   — client: backprop smashed-grad through W_h to update p
+
+  Baselines:
+    full_step            — FL (FedSGD/FedAvg full fine-tune)
+    head_forward_noprompt, tail_step_linear, body_backward_train,
+    head_step            — SFL+FF / SFL+Linear variants
+
+  Eval:
+    eval_forward / eval_forward_noprompt — full-model logits
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import vit
+from .configs import ModelConfig
+from .kernels import el2n_scores as el2n_kernel
+from .vit import (body_defs, body_fwd, cross_entropy, head_defs, head_fwd,
+                  tail_defs, tail_fwd)
+
+F32 = "f32"
+I32 = "i32"
+
+
+def _seg_in(seg: str) -> dict:
+    return {"kind": "segment", "segment": seg}
+
+
+def _tensor(name: str, shape, dtype=F32) -> dict:
+    return {"kind": "tensor", "name": name, "shape": list(shape), "dtype": dtype}
+
+
+def _seg_out(seg: str) -> dict:
+    return {"kind": "segment", "segment": seg}
+
+
+def _sgd(params: List, grads: List, lr) -> List:
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+class Stage:
+    """A lowerable stage: callable + positional input/output signature."""
+
+    def __init__(self, name: str, fn: Callable, inputs: List[dict],
+                 outputs: List[dict], family: str):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs
+        self.outputs = outputs
+        self.family = family
+
+    def example_args(self, cfg: ModelConfig):
+        """ShapeDtypeStructs matching the flat positional signature."""
+        defs = vit.segment_defs(cfg)
+        args = []
+        for item in self.inputs:
+            if item["kind"] == "segment":
+                for d in defs[item["segment"]]:
+                    args.append(jax.ShapeDtypeStruct(d.shape, jnp.float32))
+            elif item["kind"] == "scalar":
+                args.append(jax.ShapeDtypeStruct((), jnp.float32))
+            else:
+                dt = jnp.int32 if item["dtype"] == I32 else jnp.float32
+                args.append(jax.ShapeDtypeStruct(tuple(item["shape"]), dt))
+        return args
+
+
+def _counts(cfg: ModelConfig) -> Dict[str, int]:
+    defs = vit.segment_defs(cfg)
+    return {seg: len(d) for seg, d in defs.items()}
+
+
+def build_stages(cfg: ModelConfig) -> Dict[str, Stage]:
+    """Construct every stage for ``cfg``, keyed by stage name."""
+    n = _counts(cfg)
+    nh, nb, nt = n["head"], n["body"], n["tail"]
+    b = cfg.batch
+    img = (b, cfg.image_size, cfg.image_size, cfg.channels)
+    smashed = (b, cfg.seq_len, cfg.dim)
+    smashed_np = (b, cfg.seq_len_noprompt, cfg.dim)
+    labels = (b,)
+    logits = (b, cfg.num_classes)
+
+    def split(args, *lens):
+        out, i = [], 0
+        for L in lens:
+            out.append(list(args[i:i + L]))
+            i += L
+        out.append(list(args[i:]))
+        return out
+
+    stages: Dict[str, Stage] = {}
+
+    def add(stage: Stage):
+        stages[stage.name] = stage
+
+    # ---------------- Phase 2: split training (SFPrompt) ----------------
+    def head_forward(*args):
+        head, rest = split(args, nh)
+        (prompt,), (images,) = split(rest, 1)
+        return (head_fwd(cfg, head, prompt, images),)
+
+    add(Stage(
+        "head_forward", head_forward,
+        [_seg_in("head"), _seg_in("prompt"), _tensor("images", img)],
+        [_tensor("smashed", smashed)], "sfprompt"))
+
+    def body_forward(*args):
+        body, (x,) = split(args, nb)
+        return (body_fwd(cfg, body, x),)
+
+    add(Stage(
+        "body_forward", body_forward,
+        [_seg_in("body"), _tensor("smashed", smashed)],
+        [_tensor("body_out", smashed)], "sfprompt"))
+
+    def tail_step(*args):
+        tail, rest = split(args, nt)
+        x, y, lr = rest
+        def loss_fn(tail_, x_):
+            return cross_entropy(tail_fwd(cfg, tail_, x_), y)
+        (loss, (g_tail, g_x)) = jax.value_and_grad(loss_fn, argnums=(0, 1))(tail, x)
+        return (loss, *_sgd(tail, g_tail, lr), g_x)
+
+    add(Stage(
+        "tail_step", tail_step,
+        [_seg_in("tail"), _tensor("body_out", smashed),
+         _tensor("labels", labels, I32), {"kind": "scalar", "name": "lr"}],
+        [_tensor("loss", ()), _seg_out("tail"), _tensor("g_body_out", smashed)],
+        "sfprompt"))
+
+    def body_backward(*args):
+        body, (x, g_out) = split(args, nb)
+        _, vjp = jax.vjp(lambda x_: body_fwd(cfg, body, x_), x)
+        (g_x,) = vjp(g_out)
+        return (g_x,)
+
+    add(Stage(
+        "body_backward", body_backward,
+        [_seg_in("body"), _tensor("smashed", smashed),
+         _tensor("g_body_out", smashed)],
+        [_tensor("g_smashed", smashed)], "sfprompt"))
+
+    def prompt_grad(*args):
+        head, rest = split(args, nh)
+        prompt, images, g_smashed, lr = rest
+        _, vjp = jax.vjp(lambda p: head_fwd(cfg, head, p, images), prompt)
+        (g_p,) = vjp(g_smashed)
+        return (prompt - lr * g_p,)
+
+    add(Stage(
+        "prompt_grad", prompt_grad,
+        [_seg_in("head"), _seg_in("prompt"), _tensor("images", img),
+         _tensor("g_smashed", smashed), {"kind": "scalar", "name": "lr"}],
+        [_seg_out("prompt")], "sfprompt"))
+
+    # ---------------- Phase 1: client self-update ----------------
+    def local_step(*args):
+        head, tail, rest = split(args, nh, nt)
+        prompt, images, y, lr = rest
+        def loss_fn(tail_, prompt_):
+            x = head_fwd(cfg, head, prompt_, images)
+            return cross_entropy(tail_fwd(cfg, tail_, x), y)
+        (loss, (g_tail, g_p)) = jax.value_and_grad(loss_fn, argnums=(0, 1))(tail, prompt)
+        return (loss, *_sgd(tail, g_tail, lr), prompt - lr * g_p)
+
+    add(Stage(
+        "local_step", local_step,
+        [_seg_in("head"), _seg_in("tail"), _seg_in("prompt"),
+         _tensor("images", img), _tensor("labels", labels, I32),
+         {"kind": "scalar", "name": "lr"}],
+        [_tensor("loss", ()), _seg_out("tail"), _seg_out("prompt")],
+        "sfprompt"))
+
+    def el2n(*args):
+        head, tail, rest = split(args, nh, nt)
+        prompt, images, y = rest
+        lg = tail_fwd(cfg, tail, head_fwd(cfg, head, prompt, images))
+        onehot = jax.nn.one_hot(y, cfg.num_classes, dtype=lg.dtype)
+        return (el2n_kernel(lg, onehot),)
+
+    add(Stage(
+        "el2n_scores", el2n,
+        [_seg_in("head"), _seg_in("tail"), _seg_in("prompt"),
+         _tensor("images", img), _tensor("labels", labels, I32)],
+        [_tensor("scores", (b,))], "sfprompt"))
+
+    def eval_forward(*args):
+        head, body, tail, rest = split(args, nh, nb, nt)
+        prompt, images = rest
+        x = head_fwd(cfg, head, prompt, images)
+        return (tail_fwd(cfg, tail, body_fwd(cfg, body, x)),)
+
+    add(Stage(
+        "eval_forward", eval_forward,
+        [_seg_in("head"), _seg_in("body"), _seg_in("tail"), _seg_in("prompt"),
+         _tensor("images", img)],
+        [_tensor("logits", logits)], "sfprompt"))
+
+    # ---------------- Baselines ----------------
+    def head_forward_noprompt(*args):
+        head, (images,) = split(args, nh)
+        return (head_fwd(cfg, head, None, images),)
+
+    add(Stage(
+        "head_forward_noprompt", head_forward_noprompt,
+        [_seg_in("head"), _tensor("images", img)],
+        [_tensor("smashed", smashed_np)], "baselines"))
+
+    def body_forward_noprompt(*args):
+        body, (x,) = split(args, nb)
+        return (body_fwd(cfg, body, x),)
+
+    add(Stage(
+        "body_forward_noprompt", body_forward_noprompt,
+        [_seg_in("body"), _tensor("smashed", smashed_np)],
+        [_tensor("body_out", smashed_np)], "baselines"))
+
+    def tail_step_noprompt(*args):
+        tail, rest = split(args, nt)
+        x, y, lr = rest
+        def loss_fn(tail_, x_):
+            return cross_entropy(tail_fwd(cfg, tail_, x_), y)
+        (loss, (g_tail, g_x)) = jax.value_and_grad(loss_fn, argnums=(0, 1))(tail, x)
+        return (loss, *_sgd(tail, g_tail, lr), g_x)
+
+    add(Stage(
+        "tail_step_noprompt", tail_step_noprompt,
+        [_seg_in("tail"), _tensor("body_out", smashed_np),
+         _tensor("labels", labels, I32), {"kind": "scalar", "name": "lr"}],
+        [_tensor("loss", ()), _seg_out("tail"),
+         _tensor("g_body_out", smashed_np)], "baselines"))
+
+    def tail_step_linear(*args):
+        # SFL+Linear: only the classifier (last two tail tensors) trains.
+        tail, rest = split(args, nt)
+        x, y, lr = rest
+        frozen, cls = tail[:-2], tail[-2:]
+        def loss_fn(cls_, x_):
+            return cross_entropy(tail_fwd(cfg, frozen + list(cls_), x_), y)
+        (loss, (g_cls, g_x)) = jax.value_and_grad(loss_fn, argnums=(0, 1))(tuple(cls), x)
+        new_tail = frozen + _sgd(cls, list(g_cls), lr)
+        return (loss, *new_tail, g_x)
+
+    add(Stage(
+        "tail_step_linear", tail_step_linear,
+        [_seg_in("tail"), _tensor("body_out", smashed_np),
+         _tensor("labels", labels, I32), {"kind": "scalar", "name": "lr"}],
+        [_tensor("loss", ()), _seg_out("tail"),
+         _tensor("g_body_out", smashed_np)], "baselines"))
+
+    def body_backward_train(*args):
+        # SFL+FF: the server's body also trains.
+        body, rest = split(args, nb)
+        x, g_out, lr = rest
+        _, vjp = jax.vjp(lambda b_, x_: body_fwd(cfg, b_, x_), body, x)
+        g_body, g_x = vjp(g_out)
+        return (*_sgd(body, list(g_body), lr), g_x)
+
+    add(Stage(
+        "body_backward_train", body_backward_train,
+        [_seg_in("body"), _tensor("smashed", smashed_np),
+         _tensor("g_body_out", smashed_np), {"kind": "scalar", "name": "lr"}],
+        [_seg_out("body"), _tensor("g_smashed", smashed_np)], "baselines"))
+
+    def head_step(*args):
+        # SFL+FF: client backprops the smashed-data gradient into W_h.
+        head, rest = split(args, nh)
+        images, g_smashed, lr = rest
+        _, vjp = jax.vjp(lambda h_: head_fwd(cfg, h_, None, images), head)
+        (g_head,) = vjp(g_smashed)
+        return tuple(_sgd(head, list(g_head), lr))
+
+    add(Stage(
+        "head_step", head_step,
+        [_seg_in("head"), _tensor("images", img),
+         _tensor("g_smashed", smashed_np), {"kind": "scalar", "name": "lr"}],
+        [_seg_out("head")], "baselines"))
+
+    def full_step(*args):
+        # FL baseline: full-model fine-tune (FedSGD/FedAvg), no prompt.
+        head, body, tail, rest = split(args, nh, nb, nt)
+        images, y, lr = rest
+        def loss_fn(h_, b_, t_):
+            x = head_fwd(cfg, h_, None, images)
+            return cross_entropy(tail_fwd(cfg, t_, body_fwd(cfg, b_, x)), y)
+        (loss, (gh, gb, gt)) = jax.value_and_grad(loss_fn, argnums=(0, 1, 2))(head, body, tail)
+        return (loss, *_sgd(head, gh, lr), *_sgd(body, gb, lr), *_sgd(tail, gt, lr))
+
+    add(Stage(
+        "full_step", full_step,
+        [_seg_in("head"), _seg_in("body"), _seg_in("tail"),
+         _tensor("images", img), _tensor("labels", labels, I32),
+         {"kind": "scalar", "name": "lr"}],
+        [_tensor("loss", ()), _seg_out("head"), _seg_out("body"),
+         _seg_out("tail")], "baselines"))
+
+    def eval_forward_noprompt(*args):
+        head, body, tail, (images,) = split(args, nh, nb, nt)
+        x = head_fwd(cfg, head, None, images)
+        return (tail_fwd(cfg, tail, body_fwd(cfg, body, x)),)
+
+    add(Stage(
+        "eval_forward_noprompt", eval_forward_noprompt,
+        [_seg_in("head"), _seg_in("body"), _seg_in("tail"),
+         _tensor("images", img)],
+        [_tensor("logits", logits)], "baselines"))
+
+    return {k: v for k, v in stages.items() if v.family in cfg.emit}

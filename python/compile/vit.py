@@ -1,0 +1,210 @@
+"""Split ViT model definition (L2).
+
+The model is expressed over *flat lists of tensors* per segment so every
+AOT-lowered stage has a stable positional signature that the rust runtime
+can drive from the JSON manifest. Each segment (head / body / tail / prompt)
+is described by a ``TensorDef`` list: name, shape, and an init spec string
+that the rust side interprets ("zeros" | "ones" | "normal:<sigma>").
+
+Segment layout (paper §3.1):
+  head  W_h : patch embedding + cls token + positional embedding + first
+              ``depth_head`` transformer blocks           (client, frozen)
+  body  W_b : middle ``depth_body`` blocks                (server, frozen)
+  tail  W_t : last ``depth_tail`` blocks + final LN + classifier
+                                                          (client, tuned)
+  prompt p  : ``prompt_len`` soft tokens inserted after the cls token
+                                                          (client, tuned)
+"""
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import attention, layernorm
+
+
+@dataclass(frozen=True)
+class TensorDef:
+    name: str
+    shape: Tuple[int, ...]
+    init: str  # "zeros" | "ones" | "normal:<sigma>"
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": "f32",
+            "init": self.init,
+        }
+
+
+def _block_defs(cfg: ModelConfig, prefix: str) -> List[TensorDef]:
+    d, m = cfg.dim, cfg.dim * cfg.mlp_ratio
+    w = "normal:0.02"
+    return [
+        TensorDef(f"{prefix}.ln1.scale", (d,), "ones"),
+        TensorDef(f"{prefix}.ln1.bias", (d,), "zeros"),
+        TensorDef(f"{prefix}.attn.qkv.w", (d, 3 * d), w),
+        TensorDef(f"{prefix}.attn.qkv.b", (3 * d,), "zeros"),
+        TensorDef(f"{prefix}.attn.proj.w", (d, d), w),
+        TensorDef(f"{prefix}.attn.proj.b", (d,), "zeros"),
+        TensorDef(f"{prefix}.ln2.scale", (d,), "ones"),
+        TensorDef(f"{prefix}.ln2.bias", (d,), "zeros"),
+        TensorDef(f"{prefix}.mlp.fc1.w", (d, m), w),
+        TensorDef(f"{prefix}.mlp.fc1.b", (m,), "zeros"),
+        TensorDef(f"{prefix}.mlp.fc2.w", (m, d), w),
+        TensorDef(f"{prefix}.mlp.fc2.b", (d,), "zeros"),
+    ]
+
+
+def head_defs(cfg: ModelConfig) -> List[TensorDef]:
+    defs = [
+        TensorDef("embed.w", (cfg.patch_dim, cfg.dim), "normal:0.02"),
+        TensorDef("embed.b", (cfg.dim,), "zeros"),
+        TensorDef("cls", (1, 1, cfg.dim), "normal:0.02"),
+        # Positional embedding covers cls + patch tokens (prompts are
+        # inserted after position is added, VPT-style).
+        TensorDef("pos", (1, 1 + cfg.num_patches, cfg.dim), "normal:0.02"),
+    ]
+    for i in range(cfg.depth_head):
+        defs += _block_defs(cfg, f"head.block{i}")
+    return defs
+
+
+def body_defs(cfg: ModelConfig) -> List[TensorDef]:
+    defs: List[TensorDef] = []
+    for i in range(cfg.depth_body):
+        defs += _block_defs(cfg, f"body.block{i}")
+    return defs
+
+
+def tail_defs(cfg: ModelConfig) -> List[TensorDef]:
+    defs: List[TensorDef] = []
+    for i in range(cfg.depth_tail):
+        defs += _block_defs(cfg, f"tail.block{i}")
+    defs += [
+        TensorDef("tail.ln.scale", (cfg.dim,), "ones"),
+        TensorDef("tail.ln.bias", (cfg.dim,), "zeros"),
+        TensorDef("tail.cls.w", (cfg.dim, cfg.num_classes), "normal:0.02"),
+        TensorDef("tail.cls.b", (cfg.num_classes,), "zeros"),
+    ]
+    return defs
+
+
+def prompt_defs(cfg: ModelConfig) -> List[TensorDef]:
+    return [TensorDef("prompt", (cfg.prompt_len, cfg.dim), "normal:0.02")]
+
+
+SEGMENTS = {
+    "head": head_defs,
+    "body": body_defs,
+    "tail": tail_defs,
+    "prompt": prompt_defs,
+}
+
+
+def segment_defs(cfg: ModelConfig) -> Dict[str, List[TensorDef]]:
+    return {seg: fn(cfg) for seg, fn in SEGMENTS.items()}
+
+
+def as_dict(defs: List[TensorDef], flat: List) -> Dict[str, jnp.ndarray]:
+    """Pair a flat positional tensor list with its TensorDef names."""
+    assert len(defs) == len(flat), (len(defs), len(flat))
+    return {d.name: t for d, t in zip(defs, flat)}
+
+
+def num_params(defs: List[TensorDef]) -> int:
+    total = 0
+    for d in defs:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward computation
+# ---------------------------------------------------------------------------
+
+def _sub(p: Dict[str, jnp.ndarray], prefix: str) -> Dict[str, jnp.ndarray]:
+    pl = len(prefix) + 1
+    return {k[pl:]: v for k, v in p.items() if k.startswith(prefix + ".")}
+
+
+def _mlp(p: Dict[str, jnp.ndarray], h: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(h @ p["mlp.fc1.w"] + p["mlp.fc1.b"])
+    return h @ p["mlp.fc2.w"] + p["mlp.fc2.b"]
+
+
+def transformer_block(p: Dict[str, jnp.ndarray], x: jnp.ndarray, heads: int):
+    """Pre-LN transformer block (attention + GELU MLP). x: [B, T, D]."""
+    b, t, d = x.shape
+    dh = d // heads
+
+    h = layernorm(x, p["ln1.scale"], p["ln1.bias"])
+    qkv = h @ p["attn.qkv.w"] + p["attn.qkv.b"]
+    qkv = qkv.reshape(b, t, 3, heads, dh).transpose(2, 0, 3, 1, 4)
+    a = attention(qkv[0], qkv[1], qkv[2])  # Pallas kernel
+    a = a.transpose(0, 2, 1, 3).reshape(b, t, d)
+    x = x + a @ p["attn.proj.w"] + p["attn.proj.b"]
+
+    h = layernorm(x, p["ln2.scale"], p["ln2.bias"])
+    x = x + _mlp(p, h)
+    return x
+
+
+def patchify(cfg: ModelConfig, images: jnp.ndarray) -> jnp.ndarray:
+    """images [B, S, S, C] -> patch tokens [B, N, patch_dim]."""
+    b = images.shape[0]
+    s, ps = cfg.image_size, cfg.patch_size
+    n = s // ps
+    x = images.reshape(b, n, ps, n, ps, cfg.channels)
+    x = x.transpose(0, 1, 3, 2, 4, 5)  # [B, n, n, ps, ps, C]
+    return x.reshape(b, n * n, cfg.patch_dim)
+
+
+def head_fwd(cfg: ModelConfig, head: List, prompt, images) -> jnp.ndarray:
+    """W_h forward with soft-prompt injection -> smashed data [B, T, D].
+
+    ``prompt`` may be None for the no-prompt baselines (SFL+FF/Linear, FL).
+    """
+    p = as_dict(head_defs(cfg), head)
+    b = images.shape[0]
+    tok = patchify(cfg, images) @ p["embed.w"] + p["embed.b"]  # [B, N, D]
+    cls = jnp.broadcast_to(p["cls"], (b, 1, cfg.dim))
+    x = jnp.concatenate([cls, tok], axis=1) + p["pos"]  # [B, 1+N, D]
+    if prompt is not None:
+        pr = jnp.broadcast_to(prompt[None], (b, cfg.prompt_len, cfg.dim))
+        x = jnp.concatenate([x[:, :1], pr, x[:, 1:]], axis=1)
+    for i in range(cfg.depth_head):
+        x = transformer_block(_sub(p, f"head.block{i}"), x, cfg.heads)
+    return x
+
+
+def body_fwd(cfg: ModelConfig, body: List, x: jnp.ndarray) -> jnp.ndarray:
+    """W_b forward (server side): smashed -> body output, same shape."""
+    p = as_dict(body_defs(cfg), body)
+    for i in range(cfg.depth_body):
+        x = transformer_block(_sub(p, f"body.block{i}"), x, cfg.heads)
+    return x
+
+
+def tail_fwd(cfg: ModelConfig, tail: List, x: jnp.ndarray) -> jnp.ndarray:
+    """W_t forward: body output -> logits [B, C] (cls-token readout)."""
+    p = as_dict(tail_defs(cfg), tail)
+    for i in range(cfg.depth_tail):
+        x = transformer_block(_sub(p, f"tail.block{i}"), x, cfg.heads)
+    x = layernorm(x, p["tail.ln.scale"], p["tail.ln.bias"])
+    cls = x[:, 0]  # [B, D]
+    return cls @ p["tail.cls.w"] + p["tail.cls.b"]
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy; labels are int32 class ids [B]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    b = logits.shape[0]
+    return -jnp.mean(logp[jnp.arange(b), labels])

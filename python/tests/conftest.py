@@ -1,0 +1,48 @@
+"""Shared fixtures: deterministic segment initialisation for the tiny cfg."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+
+
+def init_defs(defs, rng):
+    out = []
+    for d in defs:
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, jnp.float32))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, jnp.float32))
+        else:
+            sigma = float(d.init.split(":")[1])
+            out.append(jnp.asarray(rng.normal(0.0, sigma, d.shape), jnp.float32))
+    return out
+
+
+@pytest.fixture(scope="session")
+def tiny():
+    return M.get("tiny")
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny):
+    rng = np.random.default_rng(42)
+    defs = M.segment_defs(tiny)
+    return {seg: init_defs(dd, rng) for seg, dd in defs.items()}
+
+
+@pytest.fixture(scope="session")
+def tiny_batch(tiny):
+    rng = np.random.default_rng(7)
+    images = jnp.asarray(
+        rng.normal(0, 1, (tiny.batch, tiny.image_size, tiny.image_size,
+                          tiny.channels)), jnp.float32)
+    labels = jnp.asarray(
+        rng.integers(0, tiny.num_classes, (tiny.batch,)), jnp.int32)
+    return images, labels
+
+
+@pytest.fixture(scope="session")
+def tiny_stages(tiny):
+    return M.build_stages(tiny)

@@ -1,0 +1,78 @@
+"""AOT driver tests: manifests are complete and stages lower to valid HLO."""
+
+import json
+import pathlib
+
+import pytest
+
+from compile import aot, costmodel
+from compile import model as M
+
+
+def test_manifest_covers_all_stages(tiny):
+    stages = M.build_stages(tiny)
+    man = aot.build_manifest(tiny, stages)
+    assert set(man["stages"]) == set(stages)
+    for name, st in man["stages"].items():
+        assert st["file"] == f"{name}.hlo.txt"
+        assert st["inputs"] and st["outputs"]
+
+
+def test_manifest_segments_match_defs(tiny):
+    man = aot.build_manifest(tiny, {})
+    defs = M.segment_defs(tiny)
+    for seg, dd in defs.items():
+        assert [d.name for d in dd] == [e["name"] for e in man["segments"][seg]]
+        assert all(e["dtype"] == "f32" for e in man["segments"][seg])
+
+
+def test_cost_summary_consistency(tiny):
+    cost = costmodel.cost_summary(tiny)
+    counts = cost["params"]
+    assert cost["params_total_backbone"] == (
+        counts["head"] + counts["body"] + counts["tail"])
+    assert 0 < cost["alpha"] < 1 and 0 < cost["tau"] < 1
+    mb = cost["message_bytes"]
+    assert mb["full_model"] == 4 * cost["params_total_backbone"]
+    assert mb["smashed_per_batch"] == 4 * tiny.batch * tiny.seq_len * tiny.dim
+
+
+def test_analytic_configs_have_no_stages():
+    cfg = M.get("vit_base_sim")
+    assert cfg.analytic_only
+    man = aot.build_manifest(cfg, {})
+    assert man["stages"] == {}
+    # ViT-Base profile should land near the paper's 86M params / 391MB.
+    total = man["cost"]["params_total_backbone"]
+    assert 70e6 < total < 100e6, total
+
+
+def test_vit_large_profile_scale():
+    man = aot.build_manifest(M.get("vit_large_sim"), {})
+    total = man["cost"]["params_total_backbone"]
+    assert 250e6 < total < 350e6, total
+
+
+def test_lower_stage_produces_hlo(tiny):
+    stages = M.build_stages(tiny)
+    text = aot.lower_stage(tiny, stages["body_forward"])
+    assert "HloModule" in text
+    assert "ENTRY" in text
+
+
+def test_emit_config_is_incremental(tiny, tmp_path):
+    slim = M.ModelConfig(**{**{f: getattr(tiny, f) for f in (
+        "name", "image_size", "patch_size", "channels", "dim", "heads",
+        "depth_head", "depth_body", "depth_tail", "mlp_ratio",
+        "num_classes", "prompt_len", "batch")}, "emit": ("sfprompt",)})
+    aot.emit_config(slim, tmp_path)
+    man_path = tmp_path / slim.name / "manifest.json"
+    assert man_path.exists()
+    mtime = man_path.stat().st_mtime_ns
+    stamp = (tmp_path / slim.name / ".stamp").read_text()
+    aot.emit_config(slim, tmp_path)  # second run must be a no-op
+    assert man_path.stat().st_mtime_ns == mtime
+    assert (tmp_path / slim.name / ".stamp").read_text() == stamp
+    man = json.loads(man_path.read_text())
+    for st in man["stages"].values():
+        assert (tmp_path / slim.name / st["file"]).exists()

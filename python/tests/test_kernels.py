@@ -1,0 +1,143 @@
+"""L1 correctness: Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes; fixed cases cover the exact shapes the AOT
+configs use. Gradients through the custom_vjp wrappers are checked against
+jax.grad of the reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (attention, el2n_scores, layernorm, ref)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rnd(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------- attention
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    h=st.integers(1, 4),
+    t=st.integers(1, 33),
+    dh=st.sampled_from([4, 8, 16]),
+)
+def test_attention_matches_ref(b, h, t, dh):
+    q, k, v = (rnd(i, (b, h, t, dh)) for i in range(3))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.ref_attention(q, k, v), **TOL)
+
+
+@pytest.mark.parametrize("shape", [(8, 4, 21, 8), (16, 4, 73, 16)])
+def test_attention_config_shapes(shape):
+    q, k, v = (rnd(i, shape) for i in range(3))
+    np.testing.assert_allclose(
+        attention(q, k, v), ref.ref_attention(q, k, v), **TOL)
+
+
+def test_attention_grads_match_ref():
+    q, k, v = (rnd(i, (2, 2, 9, 8)) for i in range(3))
+    for arg in range(3):
+        g = jax.grad(lambda *a: attention(*a).sum(), argnums=arg)(q, k, v)
+        gr = jax.grad(lambda *a: ref.ref_attention(*a).sum(), argnums=arg)(q, k, v)
+        np.testing.assert_allclose(g, gr, **TOL)
+
+
+def test_attention_softmax_rows_sum_to_one():
+    # With v = identity basis stacked, output rows are convex combinations;
+    # constant v must be reproduced exactly (softmax rows sum to 1).
+    q, k = rnd(0, (1, 1, 7, 4)), rnd(1, (1, 1, 7, 4))
+    v = jnp.ones((1, 1, 7, 4))
+    np.testing.assert_allclose(attention(q, k, v), v, **TOL)
+
+
+def test_attention_large_logits_stable():
+    q = rnd(0, (1, 1, 5, 4)) * 1e3
+    k = rnd(1, (1, 1, 5, 4)) * 1e3
+    v = rnd(2, (1, 1, 5, 4))
+    out = attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ---------------------------------------------------------------- layernorm
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    t=st.integers(1, 33),
+    d=st.sampled_from([8, 16, 32, 64]),
+)
+def test_layernorm_matches_ref(b, t, d):
+    x = rnd(0, (b, t, d))
+    s = rnd(1, (d,)) * 0.1 + 1.0
+    bb = rnd(2, (d,)) * 0.1
+    np.testing.assert_allclose(
+        layernorm(x, s, bb), ref.ref_layernorm(x, s, bb), **TOL)
+
+
+def test_layernorm_output_stats():
+    x = rnd(0, (4, 10, 64)) * 5 + 3
+    y = layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(y, -1), jnp.zeros((4, 10)), atol=1e-5)
+    np.testing.assert_allclose(jnp.std(y, -1), jnp.ones((4, 10)), atol=1e-3)
+
+
+def test_layernorm_grads_match_ref():
+    x = rnd(0, (2, 5, 16))
+    s, b = rnd(1, (16,)), rnd(2, (16,))
+    for arg in range(3):
+        g = jax.grad(lambda *a: layernorm(*a).sum(), argnums=arg)(x, s, b)
+        gr = jax.grad(lambda *a: ref.ref_layernorm(*a).sum(), argnums=arg)(x, s, b)
+        np.testing.assert_allclose(g, gr, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_invariant_to_shift():
+    # LayerNorm(x + c) == LayerNorm(x) for constant shift c.
+    x = rnd(0, (2, 4, 32))
+    s, b = jnp.ones(32), jnp.zeros(32)
+    np.testing.assert_allclose(
+        layernorm(x + 100.0, s, b), layernorm(x, s, b), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------- el2n
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([4, 8, 16, 24]),
+    c=st.integers(2, 101),
+)
+def test_el2n_matches_ref(b, c):
+    logits = rnd(0, (b, c))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (b,), 0, c)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        el2n_scores(logits, onehot), ref.ref_el2n(logits, onehot), **TOL)
+
+
+def test_el2n_perfect_prediction_scores_low():
+    # A confidently-correct sample must score ~0; a confidently-wrong one ~sqrt(2).
+    c = 10
+    good = jnp.zeros((8, c)).at[:, 3].set(50.0)
+    onehot_right = jax.nn.one_hot(jnp.full((8,), 3), c)
+    onehot_wrong = jax.nn.one_hot(jnp.full((8,), 4), c)
+    low = el2n_scores(good, onehot_right)
+    high = el2n_scores(good, onehot_wrong)
+    assert bool(jnp.all(low < 1e-3))
+    np.testing.assert_allclose(high, jnp.full((8,), np.sqrt(2.0)), rtol=1e-4)
+
+
+def test_el2n_ranks_hard_examples_higher():
+    c = 4
+    logits = jnp.stack([
+        jnp.array([10.0, 0, 0, 0]),   # confident correct (label 0)
+        jnp.array([0.0, 0, 0, 0]),    # uniform (label 0)
+        jnp.array([0.0, 10, 0, 0]),   # confident wrong (label 0)
+        jnp.array([2.0, 1, 0, 0]),
+    ])
+    onehot = jax.nn.one_hot(jnp.zeros(4, jnp.int32), c)
+    s = el2n_scores(logits, onehot)
+    assert s[0] < s[1] < s[2]

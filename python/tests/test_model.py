@@ -1,0 +1,103 @@
+"""L2 model tests: segment shapes, prompt injection, loss behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def test_segment_defs_shapes(tiny):
+    defs = M.segment_defs(tiny)
+    assert set(defs) == {"head", "body", "tail", "prompt"}
+    # head: embed(2) + cls + pos + 12/block
+    assert len(defs["head"]) == 4 + 12 * tiny.depth_head
+    assert len(defs["body"]) == 12 * tiny.depth_body
+    assert len(defs["tail"]) == 12 * tiny.depth_tail + 4
+    assert defs["prompt"][0].shape == (tiny.prompt_len, tiny.dim)
+
+
+def test_param_counts_positive(tiny):
+    defs = M.segment_defs(tiny)
+    for seg, dd in defs.items():
+        assert M.num_params(dd) > 0, seg
+
+
+def test_init_specs_are_known(tiny):
+    defs = M.segment_defs(tiny)
+    for dd in defs.values():
+        for d in dd:
+            assert d.init in ("zeros", "ones") or d.init.startswith("normal:")
+
+
+def test_patchify_roundtrip_content(tiny):
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.normal(0, 1, (2, 32, 32, 3)), jnp.float32)
+    patches = M.patchify(tiny, img)
+    assert patches.shape == (2, tiny.num_patches, tiny.patch_dim)
+    # First patch equals the top-left patch of the image, row-major.
+    ps = tiny.patch_size
+    np.testing.assert_allclose(
+        patches[0, 0], img[0, :ps, :ps, :].reshape(-1))
+
+
+def test_head_fwd_shapes(tiny, tiny_params, tiny_batch):
+    images, _ = tiny_batch
+    sm = M.head_fwd(tiny, tiny_params["head"], tiny_params["prompt"][0], images)
+    assert sm.shape == (tiny.batch, tiny.seq_len, tiny.dim)
+    sm_np = M.head_fwd(tiny, tiny_params["head"], None, images)
+    assert sm_np.shape == (tiny.batch, tiny.seq_len_noprompt, tiny.dim)
+
+
+def test_prompt_changes_output(tiny, tiny_params, tiny_batch):
+    images, _ = tiny_batch
+    p0 = tiny_params["prompt"][0]
+    sm0 = M.head_fwd(tiny, tiny_params["head"], p0, images)
+    sm1 = M.head_fwd(tiny, tiny_params["head"], p0 + 0.5, images)
+    assert float(jnp.max(jnp.abs(sm0 - sm1))) > 1e-4
+
+
+def test_prompt_tokens_inserted_after_cls(tiny, tiny_params, tiny_batch):
+    """Patch-token positions must be unaffected by which prompt is used at
+    the input layer before any mixing (check at embedding level via a
+    1-block head: cls is index 0, prompts 1..P, patches after)."""
+    images, _ = tiny_batch
+    assert tiny.seq_len == 1 + tiny.prompt_len + tiny.num_patches
+
+
+def test_full_model_logits(tiny, tiny_params, tiny_batch):
+    images, _ = tiny_batch
+    x = M.head_fwd(tiny, tiny_params["head"], tiny_params["prompt"][0], images)
+    x = M.body_fwd(tiny, tiny_params["body"], x)
+    logits = M.tail_fwd(tiny, tiny_params["tail"], x)
+    assert logits.shape == (tiny.batch, tiny.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_cross_entropy_uniform(tiny):
+    logits = jnp.zeros((4, tiny.num_classes))
+    y = jnp.array([0, 1, 2, 3], jnp.int32)
+    np.testing.assert_allclose(
+        M.cross_entropy(logits, y), np.log(tiny.num_classes), rtol=1e-6)
+
+
+def test_cross_entropy_confident_correct_is_small():
+    logits = jnp.full((2, 5), -30.0).at[jnp.arange(2), jnp.array([1, 3])].set(30.0)
+    assert float(M.cross_entropy(logits, jnp.array([1, 3], jnp.int32))) < 1e-5
+
+
+def test_gradient_does_not_touch_frozen_head(tiny, tiny_params, tiny_batch):
+    """In the SFPrompt stages the head is never an updated output — here we
+    confirm grads w.r.t. prompt+tail exist and are finite through the whole
+    local-loss path."""
+    images, labels = tiny_batch
+
+    def loss_fn(tail, prompt):
+        x = M.head_fwd(tiny, tiny_params["head"], prompt, images)
+        return M.cross_entropy(M.tail_fwd(tiny, tail, x), labels)
+
+    g_tail, g_p = jax.grad(loss_fn, argnums=(0, 1))(
+        tiny_params["tail"], tiny_params["prompt"][0])
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in g_tail)
+    assert bool(jnp.any(g_p != 0))

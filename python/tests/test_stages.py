@@ -1,0 +1,171 @@
+"""Stage-composition correctness: the split protocol must be numerically
+identical to the monolithic computation, and every step must reduce loss.
+
+These are the key system invariants: if split-chained gradients diverge
+from the fused gradients, SFPrompt silently trains a different model.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+LR = jnp.float32(0.05)
+TOL = dict(rtol=5e-4, atol=5e-4)
+
+
+def _chain(stages, params, images, labels, lr=LR):
+    """Run one full split-training interaction, returning all updates."""
+    head, body, tail, prompt = (params["head"], params["body"],
+                                params["tail"], params["prompt"][0])
+    sm = stages["head_forward"].fn(*head, prompt, images)[0]
+    bo = stages["body_forward"].fn(*body, sm)[0]
+    ts = stages["tail_step"].fn(*tail, bo, labels, lr)
+    loss, new_tail, g_bo = ts[0], list(ts[1:-1]), ts[-1]
+    g_sm = stages["body_backward"].fn(*body, sm, g_bo)[0]
+    new_prompt = stages["prompt_grad"].fn(*head, prompt, images, g_sm, lr)[0]
+    return loss, new_tail, new_prompt
+
+
+def test_split_chain_equals_monolithic(tiny, tiny_stages, tiny_params, tiny_batch):
+    """Split-protocol updates == fused jax.grad updates, tensor for tensor."""
+    images, labels = tiny_batch
+    loss_split, tail_split, prompt_split = _chain(
+        tiny_stages, tiny_params, images, labels)
+
+    def loss_fn(tail, prompt):
+        x = M.head_fwd(tiny, tiny_params["head"], prompt, images)
+        x = M.body_fwd(tiny, tiny_params["body"], x)
+        return M.cross_entropy(M.tail_fwd(tiny, tail, x), labels)
+
+    (loss_ref, (g_tail, g_p)) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        tiny_params["tail"], tiny_params["prompt"][0])
+
+    np.testing.assert_allclose(loss_split, loss_ref, **TOL)
+    for ts, t0, g in zip(tail_split, tiny_params["tail"], g_tail):
+        np.testing.assert_allclose(ts, t0 - LR * g, **TOL)
+    np.testing.assert_allclose(
+        prompt_split, tiny_params["prompt"][0] - LR * g_p, **TOL)
+
+
+def test_local_step_matches_fused_grad(tiny, tiny_stages, tiny_params, tiny_batch):
+    """Phase-1 local_step == fused grad over the head→tail shortcut."""
+    images, labels = tiny_batch
+    out = tiny_stages["local_step"].fn(
+        *tiny_params["head"], *tiny_params["tail"],
+        tiny_params["prompt"][0], images, labels, LR)
+    loss, new_tail, new_prompt = out[0], list(out[1:-1]), out[-1]
+
+    def loss_fn(tail, prompt):
+        x = M.head_fwd(tiny, tiny_params["head"], prompt, images)
+        return M.cross_entropy(M.tail_fwd(tiny, tail, x), labels)
+
+    (loss_ref, (g_tail, g_p)) = jax.value_and_grad(loss_fn, argnums=(0, 1))(
+        tiny_params["tail"], tiny_params["prompt"][0])
+    np.testing.assert_allclose(loss, loss_ref, **TOL)
+    for ts, t0, g in zip(new_tail, tiny_params["tail"], g_tail):
+        np.testing.assert_allclose(ts, t0 - LR * g, **TOL)
+    np.testing.assert_allclose(
+        new_prompt, tiny_params["prompt"][0] - LR * g_p, **TOL)
+
+
+def test_repeated_local_steps_reduce_loss(tiny, tiny_stages, tiny_params, tiny_batch):
+    images, labels = tiny_batch
+    tail = list(tiny_params["tail"])
+    prompt = tiny_params["prompt"][0]
+    losses = []
+    for _ in range(6):
+        out = tiny_stages["local_step"].fn(
+            *tiny_params["head"], *tail, prompt, images, labels, LR)
+        losses.append(float(out[0]))
+        tail, prompt = list(out[1:-1]), out[-1]
+    assert losses[-1] < losses[0], losses
+
+
+def test_repeated_split_rounds_reduce_loss(tiny, tiny_stages, tiny_params, tiny_batch):
+    images, labels = tiny_batch
+    params = {k: list(v) for k, v in tiny_params.items()}
+    losses = []
+    for _ in range(6):
+        loss, new_tail, new_prompt = _chain(tiny_stages, params, images, labels)
+        losses.append(float(loss))
+        params["tail"], params["prompt"] = new_tail, [new_prompt]
+    assert losses[-1] < losses[0], losses
+
+
+def test_el2n_stage_matches_ref(tiny, tiny_stages, tiny_params, tiny_batch):
+    from compile.kernels.ref import ref_el2n
+    images, labels = tiny_batch
+    scores = tiny_stages["el2n_scores"].fn(
+        *tiny_params["head"], *tiny_params["tail"],
+        tiny_params["prompt"][0], images, labels)[0]
+    x = M.head_fwd(tiny, tiny_params["head"], tiny_params["prompt"][0], images)
+    logits = M.tail_fwd(tiny, tiny_params["tail"], x)
+    onehot = jax.nn.one_hot(labels, tiny.num_classes, dtype=logits.dtype)
+    np.testing.assert_allclose(scores, ref_el2n(logits, onehot), **TOL)
+    assert scores.shape == (tiny.batch,)
+
+
+def test_full_step_reduces_loss(tiny, tiny_stages, tiny_params, tiny_batch):
+    images, labels = tiny_batch
+    head = list(tiny_params["head"])
+    body = list(tiny_params["body"])
+    tail = list(tiny_params["tail"])
+    nh, nb = len(head), len(body)
+    losses = []
+    for _ in range(4):
+        out = tiny_stages["full_step"].fn(*head, *body, *tail, images, labels, LR)
+        losses.append(float(out[0]))
+        rest = list(out[1:])
+        head, body, tail = rest[:nh], rest[nh:nh + nb], rest[nh + nb:]
+    assert losses[-1] < losses[0], losses
+
+
+def test_tail_step_linear_only_updates_classifier(tiny, tiny_stages, tiny_params, tiny_batch):
+    images, labels = tiny_batch
+    sm = tiny_stages["head_forward_noprompt"].fn(*tiny_params["head"], images)[0]
+    bo = tiny_stages["body_forward_noprompt"].fn(*tiny_params["body"], sm)[0]
+    out = tiny_stages["tail_step_linear"].fn(*tiny_params["tail"], bo, labels, LR)
+    new_tail = list(out[1:-1])
+    # All tensors except the classifier w/b are bit-identical.
+    for t_new, t_old in zip(new_tail[:-2], tiny_params["tail"][:-2]):
+        np.testing.assert_array_equal(t_new, t_old)
+    assert float(jnp.max(jnp.abs(new_tail[-2] - tiny_params["tail"][-2]))) > 0
+
+
+def test_sfl_ff_chain_matches_fused(tiny, tiny_stages, tiny_params, tiny_batch):
+    """SFL+FF: head/body/tail all update; chain must equal fused FL grads."""
+    images, labels = tiny_batch
+    head, body, tail = (tiny_params["head"], tiny_params["body"],
+                        tiny_params["tail"])
+    sm = tiny_stages["head_forward_noprompt"].fn(*head, images)[0]
+    bo = tiny_stages["body_forward_noprompt"].fn(*body, sm)[0]
+    ts = tiny_stages["tail_step_noprompt"].fn(*tail, bo, labels, LR)
+    loss, new_tail, g_bo = ts[0], list(ts[1:-1]), ts[-1]
+    bb = tiny_stages["body_backward_train"].fn(*body, sm, g_bo, LR)
+    new_body, g_sm = list(bb[:-1]), bb[-1]
+    new_head = list(tiny_stages["head_step"].fn(*head, images, g_sm, LR))
+
+    fused = tiny_stages["full_step"].fn(*head, *body, *tail, images, labels, LR)
+    nh, nb = len(head), len(body)
+    rest = list(fused[1:])
+    np.testing.assert_allclose(fused[0], loss, **TOL)
+    for a, b in zip(new_head, rest[:nh]):
+        np.testing.assert_allclose(a, b, **TOL)
+    for a, b in zip(new_body, rest[nh:nh + nb]):
+        np.testing.assert_allclose(a, b, **TOL)
+    for a, b in zip(new_tail, rest[nh + nb:]):
+        np.testing.assert_allclose(a, b, **TOL)
+
+
+def test_eval_forward_agrees_with_segments(tiny, tiny_stages, tiny_params, tiny_batch):
+    images, _ = tiny_batch
+    logits = tiny_stages["eval_forward"].fn(
+        *tiny_params["head"], *tiny_params["body"], *tiny_params["tail"],
+        tiny_params["prompt"][0], images)[0]
+    x = M.head_fwd(tiny, tiny_params["head"], tiny_params["prompt"][0], images)
+    x = M.body_fwd(tiny, tiny_params["body"], x)
+    ref = M.tail_fwd(tiny, tiny_params["tail"], x)
+    np.testing.assert_allclose(logits, ref, **TOL)

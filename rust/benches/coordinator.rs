@@ -1,0 +1,81 @@
+//! Coordinator benchmarks — one per paper table/figure family:
+//!
+//! * table2/table3: full global round per method (FL / SFL+FF / SFPrompt)
+//! * fig4: SFPrompt round phases broken out (phase1 / phase2 / phase3)
+//! * fig7: pruning throughput at several retain fractions
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+use sfprompt::data::{synth, SynthDataset};
+use sfprompt::federation::baselines::BaselineEngine;
+use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
+use sfprompt::partition::Partition;
+use sfprompt::runtime::ArtifactStore;
+
+fn fed(rounds: usize) -> FedConfig {
+    FedConfig {
+        num_clients: 10,
+        clients_per_round: 2,
+        local_epochs: 2,
+        rounds,
+        lr: 0.08,
+        retain_fraction: 0.4,
+        local_loss_update: true,
+        partition: Partition::Iid,
+        seed: 5,
+        eval_limit: None,
+        eval_every: usize::MAX,
+        selection: Selection::Uniform,
+    }
+}
+
+fn main() {
+    let store = match ArtifactStore::open(&sfprompt::artifacts_root(), "tiny") {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping coordinator benches: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let cfg = store.manifest.config.clone();
+    let mut profile = synth::profile("cifar10").unwrap();
+    profile.num_classes = cfg.num_classes;
+    let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 10 * 16, 1, 2);
+
+    println!("coordinator benches (tiny config, K=2, U=2, 16 samples/client)");
+
+    // --- global round per method (tables 2/3 shape) ---
+    for method in [Method::SfPrompt, Method::Fl, Method::SflFullFinetune, Method::SflLinear] {
+        let f = fed(1);
+        let r = Bench::new(&format!("round/{}", method.label())).samples(6).run(|| {
+            if method == Method::SfPrompt {
+                let mut e = SfPromptEngine::new(&store, f, &train);
+                e.run(&train, None, |_| {}).unwrap();
+            } else {
+                let mut e = BaselineEngine::new(&store, f, method, &train);
+                e.run(&train, None, |_| {}).unwrap();
+            }
+        });
+        harness::throughput(&r, "rounds", 1.0);
+    }
+
+    // --- SFPrompt phase breakdown (fig4 cost structure) ---
+    {
+        let f = FedConfig { local_loss_update: false, ..fed(1) };
+        Bench::new("round/sfprompt_wo_phase1 (fig6 ablation)").samples(6).run(|| {
+            let mut e = SfPromptEngine::new(&store, f, &train);
+            e.run(&train, None, |_| {}).unwrap();
+        });
+    }
+
+    // --- pruning fractions (fig7 cost structure) ---
+    for retain in [1.0, 0.4, 0.2] {
+        let f = FedConfig { retain_fraction: retain, ..fed(1) };
+        Bench::new(&format!("round/sfprompt_retain_{retain}")).samples(6).run(|| {
+            let mut e = SfPromptEngine::new(&store, f, &train);
+            e.run(&train, None, |_| {}).unwrap();
+        });
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal bench harness (substrate — no `criterion` in the offline
+//! registry). Mirrors criterion's reporting shape: warm-up, N timed
+//! iterations, mean / stddev / p50 / p95 per benchmark, plus a free-form
+//! throughput annotation.
+//!
+//! Used by all `cargo bench` targets via `#[path = "harness.rs"] mod ...`.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: String,
+    samples: usize,
+    warmup: usize,
+}
+
+pub struct BenchReport {
+    pub name: String,
+    pub mean_ms: f64,
+    pub std_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub samples: usize,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        // SFPROMPT_BENCH_SAMPLES=n overrides for quick smoke runs.
+        let samples = std::env::var("SFPROMPT_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(12);
+        Bench { name: name.to_string(), samples, warmup: 2 }
+    }
+
+    pub fn samples(mut self, n: usize) -> Bench {
+        self.samples = n;
+        self
+    }
+
+    pub fn run<F: FnMut()>(self, mut f: F) -> BenchReport {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+            / (times.len() - 1).max(1) as f64;
+        let mut sorted = times.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| sorted[((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1)];
+        let report = BenchReport {
+            name: self.name,
+            mean_ms: mean,
+            std_ms: var.sqrt(),
+            p50_ms: q(0.5),
+            p95_ms: q(0.95),
+            samples: self.samples,
+        };
+        println!(
+            "{:<46} mean {:>9.3} ms  ±{:>7.3}  p50 {:>9.3}  p95 {:>9.3}  (n={})",
+            report.name, report.mean_ms, report.std_ms, report.p50_ms, report.p95_ms,
+            report.samples
+        );
+        report
+    }
+}
+
+/// Print a derived-throughput line under a report.
+pub fn throughput(report: &BenchReport, unit: &str, per_iter: f64) {
+    let per_s = per_iter / (report.mean_ms / 1e3);
+    println!("{:<46}   -> {:.1} {unit}/s", "", per_s);
+}

@@ -1,0 +1,139 @@
+//! Stage-execution benchmarks (the hot path behind every experiment):
+//! per-stage PJRT execution time on the `tiny` and `small` configs.
+//!
+//! Backs Table 2's computational-burden column with measured per-stage
+//! times, and is the L3 profile used in EXPERIMENTS.md §Perf.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::collections::BTreeMap;
+
+use harness::Bench;
+use sfprompt::data::{make_batch, synth, SynthDataset};
+use sfprompt::model::{init_params, SegmentParams};
+use sfprompt::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+
+fn bench_config(config: &str) {
+    let store = match ArtifactStore::open(&sfprompt::artifacts_root(), config) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping {config}: {e:#} (run `make artifacts` first)");
+            return;
+        }
+    };
+    let cfg = store.manifest.config.clone();
+    let params = init_params(&store.manifest, 7);
+    let mut profile = synth::profile("cifar10").unwrap();
+    profile.num_classes = cfg.num_classes;
+    let ds = SynthDataset::generate(profile, cfg.image_size, cfg.channels, cfg.batch, 1, 2);
+    let idx: Vec<usize> = (0..cfg.batch).collect();
+    let batch = make_batch(&ds.examples, &idx, cfg.batch, cfg.image_size, cfg.channels);
+    let lr = HostTensor::scalar_f32(0.05);
+
+    println!("\n== config {config} (dim={} seq={} batch={}) ==", cfg.dim, cfg.seq_len, cfg.batch);
+
+    fn seg<'a>(
+        params: &'a sfprompt::model::ParamSet,
+        names: &[&'static str],
+    ) -> BTreeMap<&'static str, &'a SegmentParams> {
+        names.iter().map(|n| (*n, params.get(n).unwrap())).collect()
+    }
+    let seg = |names: &[&'static str]| seg(&params, names);
+
+    // head_forward
+    {
+        let segs = seg(&["head", "prompt"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        store.warm(&["head_forward"]).unwrap();
+        Bench::new(&format!("{config}/head_forward")).run(|| {
+            Executor::run(&store, "head_forward", &segs, &tensors).unwrap();
+        });
+    }
+    // body_forward + body_backward need a smashed tensor
+    let smashed = {
+        let segs = seg(&["head", "prompt"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        let out = Executor::run(&store, "head_forward", &segs, &tensors).unwrap();
+        out.tensors.into_iter().find(|(k, _)| k == "smashed").unwrap().1
+    };
+    {
+        let segs = seg(&["body"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("smashed", &smashed);
+        store.warm(&["body_forward"]).unwrap();
+        Bench::new(&format!("{config}/body_forward")).run(|| {
+            Executor::run(&store, "body_forward", &segs, &tensors).unwrap();
+        });
+    }
+    let body_out = {
+        let segs = seg(&["body"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("smashed", &smashed);
+        let mut out = Executor::run(&store, "body_forward", &segs, &tensors).unwrap();
+        out.tensors.remove("body_out").unwrap()
+    };
+    {
+        let segs = seg(&["tail"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("body_out", &body_out);
+        tensors.insert("labels", &batch.labels);
+        tensors.insert("lr", &lr);
+        store.warm(&["tail_step"]).unwrap();
+        Bench::new(&format!("{config}/tail_step")).run(|| {
+            Executor::run(&store, "tail_step", &segs, &tensors).unwrap();
+        });
+    }
+    {
+        let segs = seg(&["body"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("smashed", &smashed);
+        tensors.insert("g_body_out", &body_out); // same shape, fine for timing
+        store.warm(&["body_backward"]).unwrap();
+        Bench::new(&format!("{config}/body_backward")).run(|| {
+            Executor::run(&store, "body_backward", &segs, &tensors).unwrap();
+        });
+    }
+    {
+        let segs = seg(&["head", "tail", "prompt"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        tensors.insert("labels", &batch.labels);
+        tensors.insert("lr", &lr);
+        store.warm(&["local_step"]).unwrap();
+        let r = Bench::new(&format!("{config}/local_step (phase-1 SGD)")).run(|| {
+            Executor::run(&store, "local_step", &segs, &tensors).unwrap();
+        });
+        harness::throughput(&r, "samples", cfg.batch as f64);
+    }
+    {
+        let segs = seg(&["head", "tail", "prompt"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        tensors.insert("labels", &batch.labels);
+        store.warm(&["el2n_scores"]).unwrap();
+        Bench::new(&format!("{config}/el2n_scores (pruning)")).run(|| {
+            Executor::run(&store, "el2n_scores", &segs, &tensors).unwrap();
+        });
+    }
+    {
+        let segs = seg(&["head", "body", "tail"]);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        tensors.insert("labels", &batch.labels);
+        tensors.insert("lr", &lr);
+        store.warm(&["full_step"]).unwrap();
+        let r = Bench::new(&format!("{config}/full_step (FL baseline)")).run(|| {
+            Executor::run(&store, "full_step", &segs, &tensors).unwrap();
+        });
+        harness::throughput(&r, "samples", cfg.batch as f64);
+    }
+}
+
+fn main() {
+    println!("stage-execution benches (PJRT CPU, interpret-lowered Pallas)");
+    bench_config("tiny");
+    bench_config("small");
+}

@@ -1,0 +1,100 @@
+//! Substrate micro-benchmarks: aggregation, partitioning, synthetic data
+//! generation, JSON parsing, RNG — the non-PJRT parts of the hot path.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::Bench;
+use sfprompt::comm::{ByteMeter, Direction, MsgKind};
+use sfprompt::data::synth::{DatasetProfile, SynthDataset};
+use sfprompt::model::{fedavg, Contribution, SegmentParams};
+use sfprompt::partition::{partition, Partition};
+use sfprompt::runtime::HostTensor;
+use sfprompt::util::json::Json;
+use sfprompt::util::rng::Rng;
+
+fn big_segment(n: usize, seed: u64) -> SegmentParams {
+    let mut rng = Rng::new(seed);
+    SegmentParams {
+        segment: "tail".into(),
+        tensors: vec![HostTensor::f32(
+            vec![n],
+            (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        )],
+    }
+}
+
+fn main() {
+    println!("substrate benches");
+
+    // FedAvg over 5 clients x 1M params (ViT-Base tail scale).
+    {
+        let segs: Vec<SegmentParams> = (0..5).map(|i| big_segment(1_000_000, i)).collect();
+        let r = Bench::new("fedavg/5x1M params").run(|| {
+            let contribs: Vec<Contribution> = segs
+                .iter()
+                .map(|s| Contribution { params: s, num_samples: 10 })
+                .collect();
+            fedavg(&contribs).unwrap();
+        });
+        harness::throughput(&r, "Mparam", 5.0);
+    }
+
+    // Dirichlet partition of 50k samples over 50 clients.
+    {
+        let labels: Vec<i32> = (0..50_000).map(|i| (i % 100) as i32).collect();
+        Bench::new("partition/dirichlet(0.1) 50k x 50").run(|| {
+            let mut rng = Rng::new(3);
+            partition(&labels, 50, Partition::Dirichlet { alpha: 0.1 }, &mut rng);
+        });
+    }
+
+    // Synthetic data generation (32x32x3).
+    {
+        let profile =
+            DatasetProfile { name: "b", num_classes: 10, noise: 0.5, class_overlap: 0.2 };
+        let r = Bench::new("synth/generate 256 imgs 32x32x3").run(|| {
+            SynthDataset::generate(profile, 32, 3, 256, 1, 2);
+        });
+        harness::throughput(&r, "img", 256.0);
+    }
+
+    // Manifest-scale JSON parse.
+    {
+        let root = sfprompt::artifacts_root().join("small").join("manifest.json");
+        if let Ok(text) = std::fs::read_to_string(&root) {
+            let r = Bench::new("json/parse small manifest").run(|| {
+                Json::parse(&text).unwrap();
+            });
+            harness::throughput(&r, "MB", text.len() as f64 / 1e6);
+        }
+    }
+
+    // Byte meter overhead (called 4x per batch per client on the hot loop).
+    {
+        Bench::new("comm/meter 100k records").run(|| {
+            let mut m = ByteMeter::default();
+            for i in 0..100_000 {
+                m.record(
+                    if i % 2 == 0 { MsgKind::SmashedData } else { MsgKind::GradSmashed },
+                    Direction::Uplink,
+                    1024,
+                );
+            }
+            assert_eq!(m.messages, 100_000);
+        });
+    }
+
+    // RNG throughput.
+    {
+        let r = Bench::new("rng/normal 1M draws").run(|| {
+            let mut rng = Rng::new(9);
+            let mut acc = 0.0f32;
+            for _ in 0..1_000_000 {
+                acc += rng.normal_f32(0.0, 1.0);
+            }
+            std::hint::black_box(acc);
+        });
+        harness::throughput(&r, "Mdraw", 1.0);
+    }
+}

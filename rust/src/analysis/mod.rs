@@ -1,0 +1,190 @@
+//! Closed-form cost model — paper §3.5 / Table 1.
+//!
+//! Reproduces the per-global-round computational burden, communication
+//! cost, and latency expressions for FL, SFL, and SFPrompt, in the paper's
+//! own notation:
+//!
+//! * `|W|`  — model size (bytes), split as `|W_h| = α|W|`, `|W_b| = τ|W|`,
+//!   `|W_t| = (1−α−τ)|W|`
+//! * `q`    — cut-layer (smashed data) size per sample, bytes
+//! * `|D|`  — local dataset size (samples), `γ` — retained fraction after
+//!   EL2N pruning
+//! * `U`    — local epochs per global round, `K` — selected clients,
+//!   `R`    — shared link rate (bytes/s; effective R/K per client)
+//! * `P_C`, `P_S` — client/server compute power, expressed in
+//!   "param-bytes processed per second": updating model `W` on `D` takes
+//!   `|D||W|/P` seconds, of which forward is the fraction `β`.
+//!
+//! One refinement relative to the printed table: the SFL smashed-data
+//! traffic is multiplied by `U` (each local epoch crosses the cut layer),
+//! which is exactly the effect the paper's own Figure 2 plots; the printed
+//! table folds U into its Figure-2 discussion. SFPrompt's split-training
+//! traffic is NOT multiplied by `U` because its local epochs are
+//! local-loss updates that never touch the network — that asymmetry *is*
+//! the contribution.
+
+/// Inputs to the closed-form model.
+#[derive(Debug, Clone, Copy)]
+pub struct CostParams {
+    pub w_bytes: f64,
+    pub alpha: f64,
+    pub tau: f64,
+    /// retained fraction after pruning (γ in the paper)
+    pub gamma: f64,
+    /// prompt parameter bytes
+    pub p_bytes: f64,
+    /// cut-layer bytes per sample (q)
+    pub q_bytes: f64,
+    /// local dataset size (samples)
+    pub d_samples: f64,
+    pub clients: f64,       // K
+    pub local_epochs: f64,  // U
+    pub rate: f64,          // R, bytes/s
+    pub p_client: f64,      // P_C, param-bytes/s
+    pub p_server: f64,      // P_S
+    pub beta: f64,          // forward fraction of a step
+}
+
+impl Default for CostParams {
+    fn default() -> Self {
+        CostParams {
+            w_bytes: 391e6, // ViT-Base, paper Table 2
+            alpha: 0.15,
+            tau: 0.75,
+            gamma: 0.4,
+            p_bytes: 16.0 * 768.0 * 4.0,
+            q_bytes: 197.0 * 768.0 * 4.0,
+            // Back-solved from the paper's own Table 2: FL = 2|W|K = 3910 MB
+            // and SFL ≈ 4q|D|UK ≈ 30.4 GB jointly pin |D| ≈ 250 samples.
+            d_samples: 250.0,
+            clients: 5.0,
+            local_epochs: 10.0,
+            rate: 12.5e6,
+            p_client: 2e9,
+            p_server: 200e9,
+            beta: 1.0 / 3.0,
+        }
+    }
+}
+
+/// Per-round costs of one method.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundCost {
+    /// per-client computational burden, param-bytes processed
+    pub compute_client: f64,
+    /// total bytes on the wire (all K clients)
+    pub comm_bytes: f64,
+    /// end-to-end latency, seconds
+    pub latency_s: f64,
+}
+
+/// FL (FedSGD/FedAvg full fine-tune): exchange the whole model, train all
+/// of it locally for U epochs.
+pub fn fl(p: &CostParams) -> RoundCost {
+    let comm = 2.0 * p.w_bytes * p.clients;
+    let compute = p.d_samples * p.w_bytes * p.local_epochs;
+    RoundCost {
+        compute_client: compute,
+        comm_bytes: comm,
+        latency_s: comm / p.rate + compute / p.p_client,
+    }
+}
+
+/// SFL (SplitFed): smashed data + gradients cross the network every local
+/// epoch; the tail-sized client update is exchanged once per round.
+pub fn sfl(p: &CostParams) -> RoundCost {
+    let tail = (1.0 - p.alpha - p.tau) * p.w_bytes;
+    let per_epoch_wire = 4.0 * p.q_bytes * p.d_samples;
+    let comm = (per_epoch_wire * p.local_epochs + 2.0 * tail) * p.clients;
+    let compute = (1.0 - p.tau) * p.d_samples * p.w_bytes * p.local_epochs;
+    let server = p.tau * p.d_samples * p.w_bytes * p.clients * p.local_epochs / p.p_server;
+    RoundCost {
+        compute_client: compute,
+        comm_bytes: comm,
+        latency_s: comm / p.rate + compute / p.p_client + server,
+    }
+}
+
+/// SFPrompt: local-loss epochs are network-free; only one pruned pass
+/// crosses the cut layer per round; only tail+prompt aggregate.
+pub fn sfprompt(p: &CostParams) -> RoundCost {
+    let tail = (1.0 - p.alpha - p.tau) * p.w_bytes;
+    // Distribution of the client model + aggregation of tail & prompt.
+    let model_exchange = 2.0 * (tail + p.p_bytes);
+    // One split-training pass over the γ-pruned dataset: 4 cut-layer
+    // crossings per sample (smashed up, body-out down, grad up, grad down).
+    let split_wire = 4.0 * p.q_bytes * p.gamma * p.d_samples;
+    let comm = (split_wire + model_exchange) * p.clients;
+
+    // Client compute: U local-loss epochs over the full local set on the
+    // (head+tail) shortcut + one split pass over the pruned set + EL2N.
+    let local = (1.0 - p.tau) * p.d_samples * p.w_bytes * p.local_epochs;
+    let split_pass = (1.0 - p.tau) * p.gamma * p.d_samples * p.w_bytes;
+    let el2n = p.beta * (1.0 - p.tau) * p.d_samples * p.w_bytes;
+    let compute = local + split_pass + el2n;
+
+    let server = p.tau * p.gamma * p.d_samples * p.w_bytes * p.clients / p.p_server;
+    RoundCost {
+        compute_client: compute,
+        comm_bytes: comm,
+        latency_s: comm / p.rate + compute / p.p_client + server,
+    }
+}
+
+/// The paper's FL-advantage condition (§3.5): SFPrompt beats FL on
+/// communication when `|W| > 2qγ|D| / (α + τ)`.
+pub fn fl_crossover_w_bytes(p: &CostParams) -> f64 {
+    2.0 * p.q_bytes * p.gamma * p.d_samples / (p.alpha + p.tau)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sfprompt_cheaper_than_sfl_on_comm() {
+        let p = CostParams::default();
+        assert!(sfprompt(&p).comm_bytes < sfl(&p).comm_bytes / 2.0);
+    }
+
+    #[test]
+    fn sfprompt_cheaper_than_fl_for_large_models() {
+        let p = CostParams::default(); // ViT-Base scale
+        assert!(sfprompt(&p).comm_bytes < fl(&p).comm_bytes);
+    }
+
+    #[test]
+    fn fl_wins_for_tiny_models() {
+        let p = CostParams { w_bytes: 1e5, ..Default::default() };
+        assert!(fl(&p).comm_bytes < sfprompt(&p).comm_bytes);
+    }
+
+    #[test]
+    fn crossover_condition_matches_direct_comparison() {
+        let mut p = CostParams::default();
+        let w_star = fl_crossover_w_bytes(&p);
+        // Just above the threshold SFPrompt should win on the split-wire
+        // vs model-exchange tradeoff (ignoring the small prompt/tail terms
+        // the closed form drops, hence the 1.5x margin).
+        p.w_bytes = w_star * 1.5;
+        assert!(sfprompt(&p).comm_bytes < fl(&p).comm_bytes);
+        p.w_bytes = w_star * 0.2;
+        assert!(sfprompt(&p).comm_bytes > fl(&p).comm_bytes);
+    }
+
+    #[test]
+    fn sfl_comm_grows_with_local_epochs_but_fl_does_not() {
+        let p1 = CostParams { local_epochs: 1.0, ..Default::default() };
+        let p10 = CostParams { local_epochs: 10.0, ..Default::default() };
+        assert!(sfl(&p10).comm_bytes > 5.0 * sfl(&p1).comm_bytes);
+        assert_eq!(fl(&p10).comm_bytes, fl(&p1).comm_bytes);
+        assert!((sfprompt(&p10).comm_bytes - sfprompt(&p1).comm_bytes).abs() < 1e-6);
+    }
+
+    #[test]
+    fn split_methods_cut_client_compute() {
+        let p = CostParams::default();
+        assert!(sfl(&p).compute_client < fl(&p).compute_client / 2.0);
+        assert!(sfprompt(&p).compute_client < fl(&p).compute_client / 2.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Simulated network: message types, exact byte accounting, and the
+//! paper's bandwidth/latency model.
+//!
+//! Communication **cost** — the paper's headline metric — is measured here
+//! in exact bytes per message and aggregated per round, per client, per
+//! direction, and per message kind. Latency is derived from configurable
+//! up/downlink rates following the paper's analytic model (§3.5): with K
+//! clients sharing rate R, each effective link runs at R/K.
+
+use std::collections::BTreeMap;
+
+/// What a message carries (drives Table 2 style breakdowns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum MsgKind {
+    /// Server -> client: client-side model (head+tail) at round start.
+    ModelDistribution,
+    /// Client -> server: smashed data (cut-layer activations).
+    SmashedData,
+    /// Server -> client: body output activations.
+    BodyOutput,
+    /// Client -> server: gradient w.r.t. body output.
+    GradBodyOut,
+    /// Server -> client: gradient w.r.t. smashed data.
+    GradSmashed,
+    /// Client -> server: updated tail + prompt for aggregation.
+    Upload,
+    /// Server -> client: aggregated tail + prompt.
+    AggregateBroadcast,
+    /// Full model in either direction (FL baseline).
+    FullModel,
+}
+
+impl MsgKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            MsgKind::ModelDistribution => "model_distribution",
+            MsgKind::SmashedData => "smashed_data",
+            MsgKind::BodyOutput => "body_output",
+            MsgKind::GradBodyOut => "grad_body_out",
+            MsgKind::GradSmashed => "grad_smashed",
+            MsgKind::Upload => "upload",
+            MsgKind::AggregateBroadcast => "aggregate_broadcast",
+            MsgKind::FullModel => "full_model",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Uplink,   // client -> server
+    Downlink, // server -> client
+}
+
+/// Link-rate model. The paper normalises up/downlink to a single rate R
+/// shared by K concurrent clients.
+#[derive(Debug, Clone, Copy)]
+pub struct NetworkModel {
+    /// Link rate in bytes/second (both directions, per the paper).
+    pub rate_bytes_per_s: f64,
+    /// Number of clients sharing the link concurrently.
+    pub sharing_clients: usize,
+}
+
+impl NetworkModel {
+    pub fn effective_rate(&self) -> f64 {
+        self.rate_bytes_per_s / self.sharing_clients.max(1) as f64
+    }
+
+    pub fn transfer_time_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.effective_rate()
+    }
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        // 100 Mbit/s shared by the 5 selected clients — a reasonable edge
+        // uplink; only *ratios* between methods matter for the tables.
+        NetworkModel { rate_bytes_per_s: 12.5e6, sharing_clients: 5 }
+    }
+}
+
+/// Byte meter: every simulated transmission is recorded here.
+#[derive(Debug, Default, Clone)]
+pub struct ByteMeter {
+    pub uplink: u64,
+    pub downlink: u64,
+    pub by_kind: BTreeMap<&'static str, u64>,
+    pub messages: u64,
+}
+
+impl ByteMeter {
+    pub fn record(&mut self, kind: MsgKind, dir: Direction, bytes: usize) {
+        match dir {
+            Direction::Uplink => self.uplink += bytes as u64,
+            Direction::Downlink => self.downlink += bytes as u64,
+        }
+        *self.by_kind.entry(kind.label()).or_insert(0) += bytes as u64;
+        self.messages += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.uplink + self.downlink
+    }
+
+    pub fn merge(&mut self, other: &ByteMeter) {
+        self.uplink += other.uplink;
+        self.downlink += other.downlink;
+        self.messages += other.messages;
+        for (k, v) in &other.by_kind {
+            *self.by_kind.entry(k).or_insert(0) += v;
+        }
+    }
+
+    pub fn mb(&self) -> f64 {
+        self.total() as f64 / 1e6
+    }
+}
+
+/// A simulated duplex link between the server and one client. Owns a meter
+/// and a logical clock so per-client latency can be reported.
+#[derive(Debug, Default)]
+pub struct SimLink {
+    pub meter: ByteMeter,
+    pub elapsed_s: f64,
+}
+
+impl SimLink {
+    /// Transmit `bytes`; returns the transfer time under `net`.
+    pub fn send(
+        &mut self,
+        net: &NetworkModel,
+        kind: MsgKind,
+        dir: Direction,
+        bytes: usize,
+    ) -> f64 {
+        self.meter.record(kind, dir, bytes);
+        let t = net.transfer_time_s(bytes);
+        self.elapsed_s += t;
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates_by_kind_and_direction() {
+        let mut m = ByteMeter::default();
+        m.record(MsgKind::SmashedData, Direction::Uplink, 100);
+        m.record(MsgKind::BodyOutput, Direction::Downlink, 50);
+        m.record(MsgKind::SmashedData, Direction::Uplink, 100);
+        assert_eq!(m.uplink, 200);
+        assert_eq!(m.downlink, 50);
+        assert_eq!(m.total(), 250);
+        assert_eq!(m.by_kind["smashed_data"], 200);
+        assert_eq!(m.messages, 3);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = ByteMeter::default();
+        a.record(MsgKind::Upload, Direction::Uplink, 10);
+        let mut b = ByteMeter::default();
+        b.record(MsgKind::Upload, Direction::Uplink, 5);
+        b.record(MsgKind::FullModel, Direction::Downlink, 7);
+        a.merge(&b);
+        assert_eq!(a.total(), 22);
+        assert_eq!(a.by_kind["upload"], 15);
+    }
+
+    #[test]
+    fn link_clock_advances_with_rate_sharing() {
+        let net = NetworkModel { rate_bytes_per_s: 1000.0, sharing_clients: 4 };
+        let mut link = SimLink::default();
+        let t = link.send(&net, MsgKind::SmashedData, Direction::Uplink, 500);
+        assert!((t - 2.0).abs() < 1e-9); // 500 / (1000/4)
+        assert!((link.elapsed_s - 2.0).abs() < 1e-9);
+    }
+}

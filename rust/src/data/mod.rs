@@ -1,0 +1,105 @@
+//! Datasets: synthetic class-conditional image corpora + batching.
+//!
+//! The paper fine-tunes on CIFAR-10/100, SVHN and Flower-102. Those are
+//! substituted (DESIGN.md §Substitutions) by synthetic generators with the
+//! same image geometry and class counts and a *learnable* class structure,
+//! so accuracy trends (prompt vs linear vs FF, IID vs non-IID, pruning
+//! fractions) are exercised end to end.
+
+pub mod synth;
+
+pub use synth::{DatasetProfile, SynthDataset, PROFILES};
+
+use crate::runtime::tensor::HostTensor;
+
+/// One training example (owned, host side).
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub image: Vec<f32>, // image_size * image_size * channels, HWC
+    pub label: i32,
+}
+
+/// A batch assembled for a stage call.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: HostTensor, // [B, S, S, C] f32
+    pub labels: HostTensor, // [B] i32
+}
+
+/// Assemble a batch from examples (pads by repeating the last example when
+/// `idx` is shorter than `batch` — stage shapes are static).
+pub fn make_batch(
+    examples: &[Example],
+    idx: &[usize],
+    batch: usize,
+    image_size: usize,
+    channels: usize,
+) -> Batch {
+    assert!(!idx.is_empty(), "empty batch");
+    let pixels = image_size * image_size * channels;
+    let mut images = Vec::with_capacity(batch * pixels);
+    let mut labels = Vec::with_capacity(batch);
+    for i in 0..batch {
+        let ex = &examples[idx[i.min(idx.len() - 1)]];
+        images.extend_from_slice(&ex.image);
+        labels.push(ex.label);
+    }
+    Batch {
+        images: HostTensor::f32(vec![batch, image_size, image_size, channels], images),
+        labels: HostTensor::i32(vec![batch], labels),
+    }
+}
+
+/// Iterate `indices` in fixed-size chunks, padding the final chunk.
+pub fn batch_indices(indices: &[usize], batch: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur: Vec<usize> = Vec::with_capacity(batch);
+    for &i in indices {
+        cur.push(i);
+        if cur.len() == batch {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        while cur.len() < batch {
+            cur.push(*cur.last().unwrap());
+        }
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_indices_pads_tail() {
+        let idx: Vec<usize> = (0..10).collect();
+        let batches = batch_indices(&idx, 4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0], vec![0, 1, 2, 3]);
+        assert_eq!(batches[2], vec![8, 9, 9, 9]);
+    }
+
+    #[test]
+    fn batch_indices_exact_fit() {
+        let idx: Vec<usize> = (0..8).collect();
+        let batches = batch_indices(&idx, 4);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.len() == 4));
+    }
+
+    #[test]
+    fn make_batch_shapes() {
+        let ex: Vec<Example> = (0..5)
+            .map(|i| Example { image: vec![i as f32; 4 * 4 * 3], label: i })
+            .collect();
+        let b = make_batch(&ex, &[0, 2, 4], 4, 4, 3);
+        assert_eq!(b.images.shape, vec![4, 4, 4, 3]);
+        assert_eq!(b.labels.shape, vec![4]);
+        let labels = b.labels.as_i32();
+        assert_eq!(&labels[..3], &[0, 2, 4]);
+        assert_eq!(labels[3], 4); // padded with the last example
+    }
+}

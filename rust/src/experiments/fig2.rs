@@ -1,0 +1,72 @@
+//! Figure 2 — communication cost of FL vs SFL (a) per global round as a
+//! function of local epochs, and (b) cumulative over communication rounds.
+//!
+//! The paper's motivating observation: SFL's per-round traffic grows
+//! linearly with local epochs U (smashed data + gradients every epoch)
+//! while FL's is flat (2|W|K); SFL wins only at very small U.
+
+use anyhow::Result;
+
+use crate::analysis::{fl, sfl, sfprompt, CostParams};
+use crate::util::csv::CsvWriter;
+
+use super::ExpOptions;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    // (a) per-round comm vs local epochs
+    let mut wa = CsvWriter::create(
+        opts.out_dir.join("fig2a.csv"),
+        &["local_epochs", "fl_mb", "sfl_mb", "sfprompt_mb"],
+    )?;
+    println!("Fig 2(a): per-round comm (MB) vs local epochs U (ViT-Base profile)");
+    println!("{:>3} {:>10} {:>10} {:>10}", "U", "FL", "SFL", "SFPrompt");
+    let mut crossover = None;
+    for u in 1..=30 {
+        let p = CostParams { local_epochs: u as f64, ..Default::default() };
+        let (f, s, sp) = (fl(&p), sfl(&p), sfprompt(&p));
+        if crossover.is_none() && s.comm_bytes > f.comm_bytes {
+            crossover = Some(u);
+        }
+        if u <= 10 || u % 5 == 0 {
+            println!(
+                "{:>3} {:>10.1} {:>10.1} {:>10.1}",
+                u,
+                f.comm_bytes / 1e6,
+                s.comm_bytes / 1e6,
+                sp.comm_bytes / 1e6
+            );
+        }
+        wa.row(&[
+            u.to_string(),
+            format!("{:.3}", f.comm_bytes / 1e6),
+            format!("{:.3}", s.comm_bytes / 1e6),
+            format!("{:.3}", sp.comm_bytes / 1e6),
+        ])?;
+    }
+    if let Some(u) = crossover {
+        println!("SFL overtakes FL at U = {u} local epochs (paper: low single digits)");
+    }
+
+    // (b) cumulative comm vs global rounds at U = 10
+    let p = CostParams::default();
+    let mut wb = CsvWriter::create(
+        opts.out_dir.join("fig2b.csv"),
+        &["round", "fl_gb", "sfl_gb", "sfprompt_gb"],
+    )?;
+    println!("\nFig 2(b): cumulative comm (GB) over rounds at U = {}", p.local_epochs);
+    for r in 1..=50usize {
+        let f = fl(&p).comm_bytes * r as f64 / 1e9;
+        let s = sfl(&p).comm_bytes * r as f64 / 1e9;
+        let sp = sfprompt(&p).comm_bytes * r as f64 / 1e9;
+        if r % 10 == 0 {
+            println!("round {:>3}: FL {:>7.2}  SFL {:>7.2}  SFPrompt {:>7.2}", r, f, s, sp);
+        }
+        wb.row(&[
+            r.to_string(),
+            format!("{:.4}", f),
+            format!("{:.4}", s),
+            format!("{:.4}", sp),
+        ])?;
+    }
+    Ok(())
+}

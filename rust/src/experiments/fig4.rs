@@ -1,0 +1,56 @@
+//! Figure 4 — accuracy curves: SFPrompt vs SFL+FF vs SFL+Linear on the
+//! cifar10- and cifar100-like tasks, IID and non-IID.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::federation::Method;
+use crate::partition::Partition;
+use crate::util::csv::CsvWriter;
+
+use super::common::{run_spec, TrainSpec};
+use super::ExpOptions;
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    let methods = [Method::SflFullFinetune, Method::SflLinear, Method::SfPrompt];
+    let cells: [(&str, &'static str, Partition); 4] = [
+        ("small", "cifar10", Partition::Iid),
+        ("small", "cifar10", Partition::Dirichlet { alpha: 0.1 }),
+        ("small_c100", "cifar100", Partition::Iid),
+        ("small_c100", "cifar100", Partition::Dirichlet { alpha: 0.1 }),
+    ];
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("fig4.csv"),
+        &["dataset", "partition", "method", "round", "accuracy", "split_loss"],
+    )?;
+
+    for (config, dataset, part) in cells {
+        println!("--- fig4 cell: {dataset} / {} ---", part.label());
+        for method in methods {
+            let mut spec = TrainSpec::new(config, dataset, method);
+            spec.partition = part;
+            opts.apply(&mut spec);
+            let hist = run_spec(artifacts, &spec, false)?;
+            for rec in &hist.rounds {
+                w.row(&[
+                    dataset.into(),
+                    part.label(),
+                    method.label().into(),
+                    rec.round.to_string(),
+                    format!("{:.4}", rec.eval_accuracy),
+                    format!("{:.4}", rec.mean_split_loss),
+                ])?;
+            }
+            println!(
+                "  => {dataset}/{}/{}: final acc {:.4} (best {:.4})",
+                part.label(),
+                method.label(),
+                hist.final_accuracy(),
+                hist.best_accuracy()
+            );
+        }
+    }
+    Ok(())
+}

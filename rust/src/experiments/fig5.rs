@@ -1,0 +1,51 @@
+//! Figure 5 — accuracy and tuned-parameter count vs prompt length on the
+//! cifar100-like task (prompt-length sweep configs small_c100_p*).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::federation::Method;
+use crate::runtime::Manifest;
+use crate::util::csv::CsvWriter;
+
+use super::common::{run_spec, TrainSpec};
+use super::ExpOptions;
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    // (config, prompt_len) — small_c100 itself is the p=8 point.
+    let sweep = [
+        ("small_c100_p1", 1usize),
+        ("small_c100_p2", 2),
+        ("small_c100", 8),
+        ("small_c100_p16", 16),
+        ("small_c100_p32", 32),
+    ];
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("fig5.csv"),
+        &["prompt_len", "tuned_params", "final_acc", "best_acc"],
+    )?;
+    println!("Fig 5: prompt-length sweep (cifar100-like, IID)");
+    for (config, p_len) in sweep {
+        let man = Manifest::load(&artifacts.join(config))?;
+        let tuned = man.cost.params["tail"] + man.cost.params["prompt"];
+        let mut spec = TrainSpec::new(config, "cifar100", Method::SfPrompt);
+        opts.apply(&mut spec);
+        spec.fed.eval_every = opts.rounds.max(1);
+        let hist = run_spec(artifacts, &spec, true)?;
+        println!(
+            "  P={:<3} tuned={:<8} final_acc={:.4} best={:.4}",
+            p_len,
+            tuned,
+            hist.final_accuracy(),
+            hist.best_accuracy()
+        );
+        w.row(&[
+            p_len.to_string(),
+            tuned.to_string(),
+            format!("{:.4}", hist.final_accuracy()),
+            format!("{:.4}", hist.best_accuracy()),
+        ])?;
+    }
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Figure 6 — ablation: SFPrompt with vs without the Phase-1 local-loss
+//! update (cifar100-like).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::federation::Method;
+use crate::util::csv::CsvWriter;
+
+use super::common::{run_spec, TrainSpec};
+use super::ExpOptions;
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("fig6.csv"),
+        &["variant", "round", "accuracy", "split_loss"],
+    )?;
+    println!("Fig 6: local-loss-update ablation (cifar100-like, IID)");
+    for (variant, local_loss) in [("sfprompt", true), ("sfprompt_wo_localloss", false)] {
+        let mut spec = TrainSpec::new("small_c100", "cifar100", Method::SfPrompt);
+        spec.fed.local_loss_update = local_loss;
+            opts.apply(&mut spec);
+        let hist = run_spec(artifacts, &spec, true)?;
+        for rec in &hist.rounds {
+            w.row(&[
+                variant.into(),
+                rec.round.to_string(),
+                format!("{:.4}", rec.eval_accuracy),
+                format!("{:.4}", rec.mean_split_loss),
+            ])?;
+        }
+        println!(
+            "  {variant:<22} final acc {:.4} (best {:.4}, comm/round {:.2} MB)",
+            hist.final_accuracy(),
+            hist.best_accuracy(),
+            hist.comm_mb_per_round()
+        );
+    }
+    Ok(())
+}

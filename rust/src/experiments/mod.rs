@@ -1,0 +1,70 @@
+//! Experiment harness: one module per paper table/figure.
+
+pub mod common;
+pub mod fig2;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Shared knobs for the experiment harness (budget control).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    pub out_dir: std::path::PathBuf,
+    pub rounds: usize,
+    pub local_epochs: usize,
+    pub samples_per_client_x: f64,
+    pub seed: u64,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            out_dir: "results".into(),
+            rounds: 12,
+            local_epochs: 10,
+            samples_per_client_x: 1.0,
+            seed: 17,
+        }
+    }
+}
+
+impl ExpOptions {
+    /// Apply the budget knobs to a training spec.
+    pub fn apply(&self, spec: &mut common::TrainSpec) {
+        spec.fed.rounds = self.rounds;
+        spec.fed.local_epochs = self.local_epochs;
+        spec.fed.seed = self.seed;
+        spec.samples_per_client =
+            ((spec.samples_per_client as f64) * self.samples_per_client_x).max(8.0) as usize;
+    }
+}
+
+pub fn run(id: &str, artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    match id {
+        "fig2" => fig2::run(opts),
+        "table1" => table1::run(opts),
+        "fig4" => fig4::run(artifacts, opts),
+        "table2" => table2::run(artifacts, opts),
+        "table3" => table3::run(artifacts, opts),
+        "fig5" => fig5::run(artifacts, opts),
+        "fig6" => fig6::run(artifacts, opts),
+        "fig7" => fig7::run(artifacts, opts),
+        "all" => {
+            for id in ["table1", "fig2", "table2", "fig4", "fig5", "fig6", "fig7", "table3"] {
+                println!("==== experiment {id} ====");
+                run(id, artifacts, opts)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment id {other:?} \
+            (known: fig2 fig4 fig5 fig6 fig7 table1 table2 table3 all)"),
+    }
+}

@@ -1,0 +1,46 @@
+//! Table 1 — closed-form per-round computational burden, communication
+//! cost, and latency for FL / SFL / SFPrompt (paper §3.5).
+
+use anyhow::Result;
+
+use crate::analysis::{fl, fl_crossover_w_bytes, sfl, sfprompt, CostParams};
+use crate::util::csv::CsvWriter;
+
+use super::ExpOptions;
+
+pub fn run(opts: &ExpOptions) -> Result<()> {
+    let p = CostParams::default();
+    let rows = [("FL", fl(&p)), ("SFL", sfl(&p)), ("SFPrompt", sfprompt(&p))];
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("table1.csv"),
+        &["method", "compute_client_parambytes", "comm_mb", "latency_s"],
+    )?;
+    println!("Table 1 (ViT-Base profile, |D|={} samples, U={}, K={}):",
+             p.d_samples, p.local_epochs, p.clients);
+    println!("{:<10} {:>22} {:>12} {:>12}", "method", "client compute (|D||W|)", "comm MB",
+             "latency s");
+    let fl_row = rows[0].1;
+    for (name, c) in rows {
+        println!(
+            "{:<10} {:>18.3e} ({:>5.4}x) {:>9.1} ({:.2}x) {:>9.1}",
+            name,
+            c.compute_client,
+            c.compute_client / fl_row.compute_client,
+            c.comm_bytes / 1e6,
+            c.comm_bytes / fl_row.comm_bytes,
+            c.latency_s,
+        );
+        w.row(&[
+            name.into(),
+            format!("{:.6e}", c.compute_client),
+            format!("{:.3}", c.comm_bytes / 1e6),
+            format!("{:.3}", c.latency_s),
+        ])?;
+    }
+    println!(
+        "FL-advantage crossover: SFPrompt wins on comm when |W| > {:.1} MB (paper: 2qγ|D|/(α+τ))",
+        fl_crossover_w_bytes(&p) / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Table 3 — final accuracy of SFL+FF / SFL+Linear / SFPrompt across the
+//! four datasets, IID and non-IID, plus the tuned-parameter ratio.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::federation::Method;
+use crate::partition::Partition;
+use crate::runtime::Manifest;
+use crate::util::csv::CsvWriter;
+
+use super::common::{run_spec, TrainSpec};
+use super::ExpOptions;
+
+/// Tuned-parameter ratio per method (paper's last column).
+pub fn tuned_ratio(man: &Manifest, method: Method) -> f64 {
+    let p = &man.cost.params;
+    let total = man.cost.params_total_backbone as f64;
+    let tuned = match method {
+        Method::Fl | Method::SflFullFinetune => total,
+        // classifier w + b only
+        Method::SflLinear => {
+            let defs = man.segment("tail").unwrap();
+            defs[defs.len() - 2..].iter().map(|d| d.shape.iter().product::<usize>()).sum::<usize>()
+                as f64
+        }
+        Method::SfPrompt => (p["tail"] + p["prompt"]) as f64,
+    };
+    tuned / total
+}
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    let datasets: [(&str, &'static str); 4] = [
+        ("small", "cifar10"),
+        ("small_c100", "cifar100"),
+        ("small", "svhn"),
+        ("small_c100", "flower102"),
+    ];
+    let methods = [Method::SflFullFinetune, Method::SflLinear, Method::SfPrompt];
+    let parts = [Partition::Iid, Partition::Dirichlet { alpha: 0.1 }];
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("table3.csv"),
+        &["method", "dataset", "partition", "final_acc", "best_acc", "tuned_ratio"],
+    )?;
+
+    let mut summary: Vec<String> = Vec::new();
+    for method in methods {
+        for (config, dataset) in datasets {
+            for part in parts {
+                let mut spec = TrainSpec::new(config, dataset, method);
+                spec.partition = part;
+                opts.apply(&mut spec);
+                // Only evaluate at the end: table reports terminal accuracy.
+                spec.fed.eval_every = opts.rounds.max(1);
+                let store = crate::runtime::ArtifactStore::open(artifacts, config)?;
+                let ratio = tuned_ratio(&store.manifest, method);
+                drop(store);
+                let hist = run_spec(artifacts, &spec, true)?;
+                let line = format!(
+                    "{:<10} {:<10} {:<12} acc={:.4} tuned={:.4}%",
+                    method.label(),
+                    dataset,
+                    part.label(),
+                    hist.final_accuracy(),
+                    ratio * 100.0
+                );
+                println!("{line}");
+                summary.push(line);
+                w.row(&[
+                    method.label().into(),
+                    dataset.into(),
+                    part.label(),
+                    format!("{:.4}", hist.final_accuracy()),
+                    format!("{:.4}", hist.best_accuracy()),
+                    format!("{:.6}", ratio),
+                ])?;
+            }
+        }
+    }
+    println!("\nTable 3 summary ({} cells)", summary.len());
+    Ok(())
+}

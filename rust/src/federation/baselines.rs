@@ -1,0 +1,316 @@
+//! Baseline engines on the same substrate: FL (full fine-tune), SFL+FF,
+//! SFL+Linear (paper §4.1).
+//!
+//! * **FL** — FedAvg full fine-tuning: the whole model crosses the network
+//!   twice per round per client; all segments train locally for U epochs.
+//! * **SFL+FF** — SplitFed with full fine-tuning: smashed data and
+//!   gradients cross the cut layer every batch of every local epoch; the
+//!   client model (head+tail) is exchanged for aggregation; the body
+//!   trains on the server.
+//! * **SFL+Linear** — SplitFed tuning only the classifier: activations
+//!   still cross the cut layer every epoch (no gradient return needed
+//!   since head and body are frozen).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel, SimLink};
+use crate::data::{batch_indices, make_batch, SynthDataset};
+use crate::metrics::{evaluate, RoundRecord, RunHistory};
+use crate::model::{fedavg_multi, init_params, ParamSet, SegmentParams};
+use crate::partition::partition;
+use crate::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+use crate::util::rng::Rng;
+
+use super::client::Client;
+use super::{FedConfig, Method};
+
+pub struct BaselineEngine<'a> {
+    pub store: &'a ArtifactStore,
+    pub fed: FedConfig,
+    pub net: NetworkModel,
+    pub method: Method,
+    pub global: ParamSet,
+    pub clients: Vec<Client>,
+    rng: Rng,
+}
+
+fn run_stage(
+    store: &ArtifactStore,
+    stage: &str,
+    segs: &BTreeMap<&str, &SegmentParams>,
+    tensors: &TensorInputs,
+) -> Result<crate::runtime::StageOutputs> {
+    Executor::run(store, stage, segs, tensors)
+}
+
+impl<'a> BaselineEngine<'a> {
+    pub fn new(
+        store: &'a ArtifactStore,
+        fed: FedConfig,
+        method: Method,
+        dataset: &SynthDataset,
+    ) -> Self {
+        assert_ne!(method, Method::SfPrompt, "use SfPromptEngine");
+        let mut rng = Rng::new(fed.seed);
+        let labels = dataset.labels();
+        let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
+        let clients = parts
+            .into_iter()
+            .enumerate()
+            .map(|(id, indices)| Client::new(id, indices, rng.fork(100 + id as u64)))
+            .collect();
+        let global = init_params(&store.manifest, fed.seed ^ 0xA5A5);
+        BaselineEngine {
+            store,
+            net: NetworkModel { sharing_clients: fed.clients_per_round, ..Default::default() },
+            fed,
+            method,
+            global,
+            clients,
+            rng,
+        }
+    }
+
+    pub fn run(
+        &mut self,
+        dataset: &SynthDataset,
+        eval: Option<&SynthDataset>,
+        mut on_round: impl FnMut(&RoundRecord),
+    ) -> Result<RunHistory> {
+        let mut history = RunHistory::default();
+        for r in 0..self.fed.rounds {
+            let rec = match self.method {
+                Method::Fl => self.round_fl(r, dataset, eval)?,
+                Method::SflFullFinetune | Method::SflLinear => {
+                    self.round_sfl(r, dataset, eval)?
+                }
+                Method::SfPrompt => unreachable!(),
+            };
+            on_round(&rec);
+            history.push(rec);
+        }
+        Ok(history)
+    }
+
+    fn eval_maybe(&self, round: usize, eval: Option<&SynthDataset>) -> Result<f64> {
+        match eval {
+            Some(ds) if round % self.fed.eval_every == 0 || round + 1 == self.fed.rounds => {
+                evaluate(self.store, "eval_forward_noprompt", &self.global, ds,
+                         self.fed.eval_limit)
+            }
+            _ => Ok(f64::NAN),
+        }
+    }
+
+    /// FL: full-model exchange + local full fine-tuning.
+    fn round_fl(
+        &mut self,
+        round: usize,
+        dataset: &SynthDataset,
+        eval: Option<&SynthDataset>,
+    ) -> Result<RoundRecord> {
+        let wall0 = Instant::now();
+        let cfg = self.store.manifest.config.clone();
+        let full_b = self.store.manifest.cost.message_bytes["full_model"];
+        let lr_t = HostTensor::scalar_f32(self.fed.lr);
+
+        let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
+        let selected = super::selection::select(
+            self.fed.selection, self.fed.num_clients, self.fed.clients_per_round,
+            &counts, round, &mut self.rng,
+        );
+        let mut comm = ByteMeter::default();
+        let mut losses = Vec::new();
+        let mut updates: Vec<(Vec<SegmentParams>, usize)> = Vec::new();
+        let mut latencies = Vec::new();
+
+        for &cid in &selected {
+            let mut link = SimLink::default();
+            link.send(&self.net, MsgKind::FullModel, Direction::Downlink, full_b);
+            let mut head = self.global.get("head")?.clone();
+            let mut body = self.global.get("body")?.clone();
+            let mut tail = self.global.get("tail")?.clone();
+            let client = &mut self.clients[cid];
+            let n_k = client.num_samples();
+
+            for _ in 0..self.fed.local_epochs {
+                let mut order = client.indices.clone();
+                client.rng.shuffle(&mut order);
+                for chunk in batch_indices(&order, cfg.batch) {
+                    let batch = make_batch(
+                        &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
+                    );
+                    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+                    segs.insert("head", &head);
+                    segs.insert("body", &body);
+                    segs.insert("tail", &tail);
+                    let mut tensors: TensorInputs = BTreeMap::new();
+                    tensors.insert("images", &batch.images);
+                    tensors.insert("labels", &batch.labels);
+                    tensors.insert("lr", &lr_t);
+                    let mut out = run_stage(self.store, "full_step", &segs, &tensors)?;
+                    losses.push(out.loss()? as f64);
+                    head = out.take_segment("head")?;
+                    body = out.take_segment("body")?;
+                    tail = out.take_segment("tail")?;
+                }
+            }
+            link.send(&self.net, MsgKind::FullModel, Direction::Uplink, full_b);
+            comm.merge(&link.meter);
+            latencies.push(link.elapsed_s);
+            updates.push((vec![head, body, tail], n_k));
+        }
+
+        let per_client: Vec<(Vec<&SegmentParams>, usize)> =
+            updates.iter().map(|(segs, n)| (segs.iter().collect(), *n)).collect();
+        let mut agg = fedavg_multi(&per_client)?;
+        self.global.set(agg.remove(0)); // head
+        self.global.set(agg.remove(0)); // body
+        self.global.set(agg.remove(0)); // tail
+
+        Ok(RoundRecord {
+            round,
+            mean_local_loss: f64::NAN,
+            mean_split_loss: crate::util::stats::mean(&losses),
+            eval_accuracy: self.eval_maybe(round, eval)?,
+            comm,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            sim_latency_s: latencies.iter().copied().fold(0.0, f64::max),
+        })
+    }
+
+    /// SFL (+FF or +Linear): split training every batch of every epoch.
+    fn round_sfl(
+        &mut self,
+        round: usize,
+        dataset: &SynthDataset,
+        eval: Option<&SynthDataset>,
+    ) -> Result<RoundRecord> {
+        let wall0 = Instant::now();
+        let cfg = self.store.manifest.config.clone();
+        let mb = &self.store.manifest.cost.message_bytes;
+        let smashed_b = mb["smashed_per_batch_noprompt"];
+        let client_model_b = mb["head_params"] + mb["tail_params"];
+        let lr_t = HostTensor::scalar_f32(self.fed.lr);
+        let full_ft = self.method == Method::SflFullFinetune;
+        let tail_stage = if full_ft { "tail_step_noprompt" } else { "tail_step_linear" };
+
+        let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
+        let selected = super::selection::select(
+            self.fed.selection, self.fed.num_clients, self.fed.clients_per_round,
+            &counts, round, &mut self.rng,
+        );
+        let mut comm = ByteMeter::default();
+        let mut losses = Vec::new();
+        let mut updates: Vec<(Vec<SegmentParams>, usize)> = Vec::new();
+        let mut latencies = Vec::new();
+
+        for &cid in &selected {
+            let mut link = SimLink::default();
+            // SFL distributes the client model (head+tail) each round.
+            link.send(&self.net, MsgKind::ModelDistribution, Direction::Downlink,
+                      client_model_b);
+            let mut head = self.global.get("head")?.clone();
+            let mut tail = self.global.get("tail")?.clone();
+            let client = &mut self.clients[cid];
+            let n_k = client.num_samples();
+
+            for _ in 0..self.fed.local_epochs {
+                let mut order = client.indices.clone();
+                client.rng.shuffle(&mut order);
+                for chunk in batch_indices(&order, cfg.batch) {
+                    let batch = make_batch(
+                        &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
+                    );
+                    // client: head forward
+                    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+                    segs.insert("head", &head);
+                    let mut tensors: TensorInputs = BTreeMap::new();
+                    tensors.insert("images", &batch.images);
+                    let mut out =
+                        run_stage(self.store, "head_forward_noprompt", &segs, &tensors)?;
+                    let smashed = out.tensors.remove("smashed").expect("smashed");
+                    link.send(&self.net, MsgKind::SmashedData, Direction::Uplink, smashed_b);
+
+                    // server: body forward
+                    let body = self.global.get("body")?;
+                    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+                    segs.insert("body", body);
+                    let mut tensors: TensorInputs = BTreeMap::new();
+                    tensors.insert("smashed", &smashed);
+                    let mut out =
+                        run_stage(self.store, "body_forward_noprompt", &segs, &tensors)?;
+                    let body_out = out.tensors.remove("body_out").expect("body_out");
+                    link.send(&self.net, MsgKind::BodyOutput, Direction::Downlink, smashed_b);
+
+                    // client: tail step
+                    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+                    segs.insert("tail", &tail);
+                    let mut tensors: TensorInputs = BTreeMap::new();
+                    tensors.insert("body_out", &body_out);
+                    tensors.insert("labels", &batch.labels);
+                    tensors.insert("lr", &lr_t);
+                    let mut out = run_stage(self.store, tail_stage, &segs, &tensors)?;
+                    losses.push(out.loss()? as f64);
+                    tail = out.take_segment("tail")?;
+
+                    if full_ft {
+                        let g_body_out =
+                            out.tensors.remove("g_body_out").expect("g_body_out");
+                        link.send(&self.net, MsgKind::GradBodyOut, Direction::Uplink,
+                                  smashed_b);
+
+                        // server: body backward + body update
+                        let body = self.global.get("body")?;
+                        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+                        segs.insert("body", body);
+                        let mut tensors: TensorInputs = BTreeMap::new();
+                        tensors.insert("smashed", &smashed);
+                        tensors.insert("g_body_out", &g_body_out);
+                        tensors.insert("lr", &lr_t);
+                        let mut out =
+                            run_stage(self.store, "body_backward_train", &segs, &tensors)?;
+                        let new_body = out.take_segment("body")?;
+                        let g_smashed = out.tensors.remove("g_smashed").expect("g_smashed");
+                        self.global.set(new_body);
+                        link.send(&self.net, MsgKind::GradSmashed, Direction::Downlink,
+                                  smashed_b);
+
+                        // client: head update
+                        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+                        segs.insert("head", &head);
+                        let mut tensors: TensorInputs = BTreeMap::new();
+                        tensors.insert("images", &batch.images);
+                        tensors.insert("g_smashed", &g_smashed);
+                        tensors.insert("lr", &lr_t);
+                        let mut out = run_stage(self.store, "head_step", &segs, &tensors)?;
+                        head = out.take_segment("head")?;
+                    }
+                }
+            }
+            link.send(&self.net, MsgKind::Upload, Direction::Uplink, client_model_b);
+            comm.merge(&link.meter);
+            latencies.push(link.elapsed_s);
+            updates.push((vec![head, tail], n_k));
+        }
+
+        let per_client: Vec<(Vec<&SegmentParams>, usize)> =
+            updates.iter().map(|(segs, n)| (segs.iter().collect(), *n)).collect();
+        let mut agg = fedavg_multi(&per_client)?;
+        self.global.set(agg.remove(0)); // head
+        self.global.set(agg.remove(0)); // tail
+
+        Ok(RoundRecord {
+            round,
+            mean_local_loss: f64::NAN,
+            mean_split_loss: crate::util::stats::mean(&losses),
+            eval_accuracy: self.eval_maybe(round, eval)?,
+            comm,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            sim_latency_s: latencies.iter().copied().fold(0.0, f64::max),
+        })
+    }
+}

@@ -1,0 +1,196 @@
+//! Client-side state machine: Phase 1 (self-update) + Phase 2 client half.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::data::{batch_indices, make_batch, Example};
+use crate::model::SegmentParams;
+use crate::runtime::{ArtifactStore, Executor, HostTensor, SegInput, SegmentInputs, TensorInputs};
+use crate::util::rng::Rng;
+
+/// A client: its local data partition and RNG stream. Model state (tail,
+/// prompt) is delivered fresh each round by the server, per Algorithm 2.
+/// The frozen head is held as pre-converted PJRT literals (perf fast path —
+/// it never changes after the one-time distribution).
+pub struct Client {
+    pub id: usize,
+    pub indices: Vec<usize>,
+    pub rng: Rng,
+    /// scratch for per-epoch shuffles (avoids an allocation per epoch)
+    order: Vec<usize>,
+}
+
+/// Result of the Phase-1 local-loss update.
+pub struct LocalUpdate {
+    pub tail: SegmentParams,
+    pub prompt: SegmentParams,
+    pub mean_loss: f64,
+    pub steps: usize,
+    /// stage executions (for FLOPs accounting)
+    pub batches: usize,
+}
+
+impl Client {
+    pub fn new(id: usize, indices: Vec<usize>, rng: Rng) -> Client {
+        let order = indices.clone();
+        Client { id, indices, rng, order }
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Phase 1a — **local-loss update** (paper Eq. 1, Algorithm 1):
+    /// connect W_h directly to W_t, run `epochs` SGD epochs over the FULL
+    /// local dataset updating only (W_t, p). Zero network traffic.
+    pub fn local_loss_update(
+        &mut self,
+        store: &ArtifactStore,
+        examples: &[Example],
+        head_lits: &[xla::Literal],
+        mut tail: SegmentParams,
+        mut prompt: SegmentParams,
+        epochs: usize,
+        lr: f32,
+    ) -> Result<LocalUpdate> {
+        let cfg = store.manifest.config.clone();
+        let lr_t = HostTensor::scalar_f32(lr);
+        let mut losses = Vec::new();
+        let mut batches = 0usize;
+        for _ in 0..epochs {
+            self.rng.shuffle(&mut self.order);
+            for chunk in batch_indices(&self.order, cfg.batch) {
+                let batch =
+                    make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
+                let mut segs: SegmentInputs = BTreeMap::new();
+                segs.insert("head", SegInput::Literals(head_lits));
+                segs.insert("tail", SegInput::Host(&tail));
+                segs.insert("prompt", SegInput::Host(&prompt));
+                let mut tensors: TensorInputs = BTreeMap::new();
+                tensors.insert("images", &batch.images);
+                tensors.insert("labels", &batch.labels);
+                tensors.insert("lr", &lr_t);
+                let mut out = Executor::run_mixed(store, "local_step", &segs, &tensors)?;
+                losses.push(out.loss()? as f64);
+                tail = out.take_segment("tail")?;
+                prompt = out.take_segment("prompt")?;
+                batches += 1;
+            }
+        }
+        Ok(LocalUpdate {
+            tail,
+            prompt,
+            mean_loss: crate::util::stats::mean(&losses),
+            steps: losses.len(),
+            batches,
+        })
+    }
+
+    /// Phase 1b — **EL2N dataset pruning** (paper Eq. 2): score every local
+    /// sample with `||softmax(f(x)) − onehot(y)||₂` through the W_h→W_t
+    /// shortcut, keep the top `retain_fraction` by score (hard examples),
+    /// per Paul et al. 2021. Returns retained indices (into the dataset).
+    pub fn prune_dataset(
+        &mut self,
+        store: &ArtifactStore,
+        examples: &[Example],
+        head_lits: &[xla::Literal],
+        tail: &SegmentParams,
+        prompt: &SegmentParams,
+        retain_fraction: f64,
+    ) -> Result<Vec<usize>> {
+        assert!((0.0..=1.0).contains(&retain_fraction));
+        let cfg = store.manifest.config.clone();
+        let mut scored: Vec<(usize, f32)> = Vec::with_capacity(self.indices.len());
+        let mut seen = std::collections::BTreeSet::new();
+        for chunk in batch_indices(&self.indices, cfg.batch) {
+            let batch = make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
+            let mut segs: SegmentInputs = BTreeMap::new();
+            segs.insert("head", SegInput::Literals(head_lits));
+            segs.insert("tail", SegInput::Host(tail));
+            segs.insert("prompt", SegInput::Host(prompt));
+            let mut tensors: TensorInputs = BTreeMap::new();
+            tensors.insert("images", &batch.images);
+            tensors.insert("labels", &batch.labels);
+            let out = Executor::run_mixed(store, "el2n_scores", &segs, &tensors)?;
+            let scores = out.tensor("scores")?.as_f32().to_vec();
+            // The tail of the final chunk is padding — dedupe by index.
+            for (i, &idx) in chunk.iter().enumerate() {
+                if seen.insert(idx) {
+                    scored.push((idx, scores[i]));
+                }
+            }
+        }
+        // Keep the HIGHEST EL2N scores (most informative / hardest).
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let keep = ((self.indices.len() as f64 * retain_fraction).round() as usize)
+            .clamp(1, self.indices.len());
+        Ok(scored.into_iter().take(keep).map(|(i, _)| i).collect())
+    }
+
+    /// Phase 2 client step A — head forward on a pruned batch: produce the
+    /// smashed data to ship to the server.
+    pub fn head_forward(
+        &self,
+        store: &ArtifactStore,
+        batch_images: &HostTensor,
+        head_lits: &[xla::Literal],
+        prompt: &SegmentParams,
+    ) -> Result<HostTensor> {
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("head", SegInput::Literals(head_lits));
+        segs.insert("prompt", SegInput::Host(prompt));
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", batch_images);
+        let mut out = Executor::run_mixed(store, "head_forward", &segs, &tensors)?;
+        Ok(out.tensors.remove("smashed").expect("smashed"))
+    }
+
+    /// Phase 2 client step B — tail forward/backward + SGD on W_t; returns
+    /// (loss, new tail, gradient w.r.t. body output to ship back).
+    pub fn tail_step(
+        &self,
+        store: &ArtifactStore,
+        body_out: &HostTensor,
+        labels: &HostTensor,
+        tail: &SegmentParams,
+        lr: f32,
+    ) -> Result<(f32, SegmentParams, HostTensor)> {
+        let lr_t = HostTensor::scalar_f32(lr);
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        segs.insert("tail", tail);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("body_out", body_out);
+        tensors.insert("labels", labels);
+        tensors.insert("lr", &lr_t);
+        let mut out = Executor::run(store, "tail_step", &segs, &tensors)?;
+        let loss = out.loss()?;
+        let new_tail = out.take_segment("tail")?;
+        let g = out.tensors.remove("g_body_out").expect("g_body_out");
+        Ok((loss, new_tail, g))
+    }
+
+    /// Phase 2 client step C — backprop the returned cut-layer gradient
+    /// through the frozen head into the prompt; returns the updated prompt.
+    pub fn prompt_update(
+        &self,
+        store: &ArtifactStore,
+        batch_images: &HostTensor,
+        g_smashed: &HostTensor,
+        head_lits: &[xla::Literal],
+        prompt: &SegmentParams,
+        lr: f32,
+    ) -> Result<SegmentParams> {
+        let lr_t = HostTensor::scalar_f32(lr);
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("head", SegInput::Literals(head_lits));
+        segs.insert("prompt", SegInput::Host(prompt));
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", batch_images);
+        tensors.insert("g_smashed", g_smashed);
+        tensors.insert("lr", &lr_t);
+        let mut out = Executor::run_mixed(store, "prompt_grad", &segs, &tensors)?;
+        out.take_segment("prompt")
+    }
+}

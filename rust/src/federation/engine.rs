@@ -1,0 +1,213 @@
+//! The SFPrompt global-round engine (Algorithms 1 + 2).
+//!
+//! Each round:
+//!   0. select K clients; distribute the aggregated (W_t, p)         [net]
+//!   1. Phase 1: each client runs U local-loss epochs over its full
+//!      local data (no network), then EL2N-prunes it
+//!   2. Phase 2: one split-training pass over the pruned data —
+//!      smashed ↑, body-out ↓, cut-grad ↑, smashed-grad ↓ per batch  [net]
+//!   3. Phase 3: upload (W_t, p); FedAvg; broadcast                  [net]
+//!
+//! All traffic flows through `comm::SimLink`s with exact byte accounting;
+//! latency uses the shared-rate model of §3.5. Client compute is
+//! sequential on this process (one CPU), but the simulated clock charges
+//! parallel client time as the max over clients, matching the paper's
+//! analysis.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel, SimLink};
+use crate::data::{batch_indices, make_batch, SynthDataset};
+use crate::metrics::{evaluate, RoundRecord, RunHistory};
+use crate::model::{init_params, ParamSet, SegmentParams};
+use crate::partition::partition;
+use crate::runtime::ArtifactStore;
+use crate::util::rng::Rng;
+
+use super::client::Client;
+use super::server::Server;
+use super::FedConfig;
+
+pub struct SfPromptEngine<'a> {
+    pub store: &'a ArtifactStore,
+    pub fed: FedConfig,
+    pub net: NetworkModel,
+    pub global: ParamSet,
+    pub clients: Vec<Client>,
+    rng: Rng,
+    /// bytes of the one-time head distribution (setup, not per-round)
+    pub setup_bytes: u64,
+    /// Frozen segments as pre-converted PJRT literals (perf fast path —
+    /// head/body never change during an SFPrompt run; see §Perf).
+    head_lits: Vec<xla::Literal>,
+    body_lits: Vec<xla::Literal>,
+}
+
+impl<'a> SfPromptEngine<'a> {
+    pub fn new(store: &'a ArtifactStore, fed: FedConfig, dataset: &SynthDataset) -> Self {
+        let mut rng = Rng::new(fed.seed);
+        let labels = dataset.labels();
+        let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
+        let clients = parts
+            .into_iter()
+            .enumerate()
+            .map(|(id, indices)| Client::new(id, indices, rng.fork(100 + id as u64)))
+            .collect();
+        let global = init_params(&store.manifest, fed.seed ^ 0xA5A5);
+        let head_bytes = store.manifest.cost.message_bytes["head_params"] as u64;
+        let head_lits = crate::runtime::segment_literals(global.get("head").unwrap())
+            .expect("head literals");
+        let body_lits = crate::runtime::segment_literals(global.get("body").unwrap())
+            .expect("body literals");
+        SfPromptEngine {
+            store,
+            net: NetworkModel { sharing_clients: fed.clients_per_round, ..Default::default() },
+            fed,
+            global,
+            clients,
+            rng,
+            // One-time: every client receives the frozen head once.
+            setup_bytes: head_bytes * fed.num_clients as u64,
+            head_lits,
+            body_lits,
+        }
+    }
+
+    fn msg_sizes(&self) -> (usize, usize, usize) {
+        let mb = &self.store.manifest.cost.message_bytes;
+        (mb["tail_params"], mb["prompt_params"], mb["smashed_per_batch"])
+    }
+
+    /// Run one global round; returns its metrics record.
+    pub fn run_round(
+        &mut self,
+        round: usize,
+        dataset: &SynthDataset,
+        eval: Option<&SynthDataset>,
+    ) -> Result<RoundRecord> {
+        let wall0 = Instant::now();
+        let (tail_b, prompt_b, smashed_b) = self.msg_sizes();
+        let cfg = self.store.manifest.config.clone();
+
+        let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
+        let selected = super::selection::select(
+            self.fed.selection, self.fed.num_clients, self.fed.clients_per_round,
+            &counts, round, &mut self.rng,
+        );
+        let mut comm = ByteMeter::default();
+        let mut local_losses = Vec::new();
+        let mut split_losses = Vec::new();
+        let mut updates: Vec<(SegmentParams, SegmentParams, usize)> = Vec::new();
+        let mut client_latency: Vec<f64> = Vec::new();
+
+        for &cid in &selected {
+            let mut link = SimLink::default();
+            // --- Round start: distribute the aggregated (W_t, p). ---
+            link.send(&self.net, MsgKind::ModelDistribution, Direction::Downlink,
+                      tail_b + prompt_b);
+            let mut tail = self.global.get("tail")?.clone();
+            let mut prompt = self.global.get("prompt")?.clone();
+
+            let client = &mut self.clients[cid];
+            let n_k = client.num_samples();
+
+            // --- Phase 1a: local-loss update (network-free). ---
+            if self.fed.local_loss_update {
+                let upd = client.local_loss_update(
+                    self.store, &dataset.examples, &self.head_lits, tail, prompt,
+                    self.fed.local_epochs, self.fed.lr,
+                )?;
+                local_losses.push(upd.mean_loss);
+                tail = upd.tail;
+                prompt = upd.prompt;
+            }
+
+            // --- Phase 1b: EL2N pruning. ---
+            let pruned = client.prune_dataset(
+                self.store, &dataset.examples, &self.head_lits, &tail, &prompt,
+                self.fed.retain_fraction,
+            )?;
+
+            // --- Phase 2: split training over the pruned set. ---
+            for chunk in batch_indices(&pruned, cfg.batch) {
+                let batch = make_batch(
+                    &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
+                );
+                let smashed =
+                    client.head_forward(self.store, &batch.images, &self.head_lits, &prompt)?;
+                link.send(&self.net, MsgKind::SmashedData, Direction::Uplink, smashed_b);
+
+                let body_out = Server::body_forward(self.store, &self.body_lits, &smashed)?;
+                link.send(&self.net, MsgKind::BodyOutput, Direction::Downlink, smashed_b);
+
+                let (loss, new_tail, g_body_out) =
+                    client.tail_step(self.store, &body_out, &batch.labels, &tail, self.fed.lr)?;
+                split_losses.push(loss as f64);
+                tail = new_tail;
+                link.send(&self.net, MsgKind::GradBodyOut, Direction::Uplink, smashed_b);
+
+                let g_smashed =
+                    Server::body_backward(self.store, &self.body_lits, &smashed, &g_body_out)?;
+                link.send(&self.net, MsgKind::GradSmashed, Direction::Downlink, smashed_b);
+
+                prompt = client.prompt_update(
+                    self.store, &batch.images, &g_smashed, &self.head_lits, &prompt, self.fed.lr,
+                )?;
+            }
+
+            // --- Phase 3 upload. ---
+            link.send(&self.net, MsgKind::Upload, Direction::Uplink, tail_b + prompt_b);
+            comm.merge(&link.meter);
+            client_latency.push(link.elapsed_s);
+            updates.push((tail, prompt, n_k));
+        }
+
+        // --- Phase 3: FedAvg + broadcast. ---
+        let (tail, prompt) = Server::aggregate(&updates)?;
+        self.global.set(tail);
+        self.global.set(prompt);
+        for _ in &selected {
+            comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, tail_b + prompt_b);
+        }
+
+        // Simulated round latency: parallel clients → max link clock.
+        let sim_latency_s = client_latency.iter().copied().fold(0.0, f64::max);
+
+        let eval_accuracy = match eval {
+            Some(ds)
+                if round % self.fed.eval_every == 0 || round + 1 == self.fed.rounds =>
+            {
+                evaluate(self.store, "eval_forward", &self.global, ds, self.fed.eval_limit)?
+            }
+            _ => f64::NAN,
+        };
+
+        Ok(RoundRecord {
+            round,
+            mean_local_loss: crate::util::stats::mean(&local_losses),
+            mean_split_loss: crate::util::stats::mean(&split_losses),
+            eval_accuracy,
+            comm,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            sim_latency_s,
+        })
+    }
+
+    /// Run the configured number of rounds.
+    pub fn run(
+        &mut self,
+        dataset: &SynthDataset,
+        eval: Option<&SynthDataset>,
+        mut on_round: impl FnMut(&RoundRecord),
+    ) -> Result<RunHistory> {
+        let mut history = RunHistory::default();
+        for r in 0..self.fed.rounds {
+            let rec = self.run_round(r, dataset, eval)?;
+            on_round(&rec);
+            history.push(rec);
+        }
+        Ok(history)
+    }
+}

@@ -1,0 +1,90 @@
+//! Federated split-training coordinator (L3, the paper's system).
+//!
+//! * `client` — per-client state + Phase 1 (local-loss update, EL2N
+//!   pruning) and the client half of Phase 2.
+//! * `server` — the server half of Phase 2 (body forward/backward) and
+//!   Phase 3 aggregation.
+//! * `engine` — the SFPrompt global-round loop tying the phases together
+//!   over the simulated network.
+//! * `baselines` — FL (full fine-tune), SFL+FF, SFL+Linear on the same
+//!   substrate, for Figures 4/6/7 and Tables 2/3.
+
+pub mod baselines;
+pub mod client;
+pub mod engine;
+pub mod selection;
+pub mod server;
+
+pub use engine::SfPromptEngine;
+pub use selection::Selection;
+
+use crate::partition::Partition;
+
+/// Federated experiment configuration (paper §4.1 defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct FedConfig {
+    /// total clients in the fleet (paper: 50)
+    pub num_clients: usize,
+    /// clients sampled per round (paper: 5)
+    pub clients_per_round: usize,
+    /// local epochs per round (paper: 10)
+    pub local_epochs: usize,
+    /// global rounds
+    pub rounds: usize,
+    /// SGD learning rate for every step kind
+    pub lr: f32,
+    /// fraction of the local dataset RETAINED after EL2N pruning
+    /// (the paper's pruning fraction γ prunes 1 − retain_fraction).
+    pub retain_fraction: f64,
+    /// run Phase-1 local-loss epochs (ablation switch, Fig 6)
+    pub local_loss_update: bool,
+    /// partitioning scheme
+    pub partition: Partition,
+    /// RNG seed for the whole run
+    pub seed: u64,
+    /// cap on eval samples per round (None = all)
+    pub eval_limit: Option<usize>,
+    /// evaluate every k rounds (always evaluates the last round)
+    pub eval_every: usize,
+    /// client-selection strategy (paper: uniform)
+    pub selection: Selection,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        FedConfig {
+            num_clients: 50,
+            clients_per_round: 5,
+            local_epochs: 10,
+            rounds: 10,
+            lr: 0.05,
+            retain_fraction: 0.4,
+            local_loss_update: true,
+            partition: Partition::Iid,
+            seed: 17,
+            eval_limit: Some(256),
+            eval_every: 1,
+            selection: Selection::Uniform,
+        }
+    }
+}
+
+/// Which method an engine run represents (for reporting).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    SfPrompt,
+    Fl,
+    SflFullFinetune,
+    SflLinear,
+}
+
+impl Method {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Method::SfPrompt => "sfprompt",
+            Method::Fl => "fl",
+            Method::SflFullFinetune => "sfl_ff",
+            Method::SflLinear => "sfl_linear",
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Client-selection strategies.
+//!
+//! The paper samples K of N clients uniformly each round (§4.1); real
+//! deployments also use sample-size weighting (more data → more likely
+//! selected, cf. FedAvg) or deterministic round-robin (full coverage, used
+//! by several cross-silo systems). All three are provided and
+//! property-tested; the engines default to `Uniform`.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Selection {
+    /// K distinct clients uniformly at random (the paper's setting).
+    Uniform,
+    /// K distinct clients, probability proportional to local sample count.
+    WeightedBySamples,
+    /// Deterministic rotation: round r picks clients (rK ... rK+K-1) mod N.
+    RoundRobin,
+}
+
+/// Select `k` distinct client ids from `n` clients.
+///
+/// `sample_counts` is indexed by client id (used by WeightedBySamples);
+/// `round` drives RoundRobin.
+pub fn select(
+    strategy: Selection,
+    n: usize,
+    k: usize,
+    sample_counts: &[usize],
+    round: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    assert!(k <= n && n > 0);
+    match strategy {
+        Selection::Uniform => rng.choose(n, k),
+        Selection::RoundRobin => (0..k).map(|i| (round * k + i) % n).collect(),
+        Selection::WeightedBySamples => {
+            assert_eq!(sample_counts.len(), n);
+            // Weighted sampling without replacement (Efraimidis-Spirakis):
+            // key = u^(1/w), take the k largest keys.
+            let mut keyed: Vec<(f64, usize)> = (0..n)
+                .map(|i| {
+                    let w = sample_counts[i].max(1) as f64;
+                    let u = rng.uniform().max(f64::MIN_POSITIVE);
+                    (u.powf(1.0 / w), i)
+                })
+                .collect();
+            keyed.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            keyed.into_iter().take(k).map(|(_, i)| i).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn distinct(v: &[usize]) -> bool {
+        let mut s = v.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        s.len() == v.len()
+    }
+
+    #[test]
+    fn all_strategies_return_k_distinct_valid_ids() {
+        let counts: Vec<usize> = (0..20).map(|i| i + 1).collect();
+        let mut rng = Rng::new(1);
+        for strategy in
+            [Selection::Uniform, Selection::WeightedBySamples, Selection::RoundRobin]
+        {
+            for round in 0..50 {
+                let sel = select(strategy, 20, 5, &counts, round, &mut rng);
+                assert_eq!(sel.len(), 5);
+                assert!(distinct(&sel), "{strategy:?}");
+                assert!(sel.iter().all(|&i| i < 20));
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_covers_everyone() {
+        let counts = vec![1; 10];
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::BTreeSet::new();
+        for round in 0..5 {
+            for id in select(Selection::RoundRobin, 10, 2, &counts, round, &mut rng) {
+                seen.insert(id);
+            }
+        }
+        assert_eq!(seen.len(), 10);
+    }
+
+    #[test]
+    fn weighted_prefers_data_rich_clients() {
+        // Client 9 has 100x the data of clients 0..9; over many rounds it
+        // must be selected far more often than client 0.
+        let mut counts = vec![2usize; 10];
+        counts[9] = 200;
+        let mut rng = Rng::new(3);
+        let (mut hits9, mut hits0) = (0, 0);
+        for round in 0..400 {
+            let sel = select(Selection::WeightedBySamples, 10, 3, &counts, round, &mut rng);
+            hits9 += sel.contains(&9) as usize;
+            hits0 += sel.contains(&0) as usize;
+        }
+        assert!(hits9 > 3 * hits0, "rich {hits9} vs poor {hits0}");
+    }
+
+    #[test]
+    fn uniform_is_roughly_fair() {
+        let counts = vec![1; 10];
+        let mut rng = Rng::new(4);
+        let mut hits = vec![0usize; 10];
+        for round in 0..1000 {
+            for id in select(Selection::Uniform, 10, 2, &counts, round, &mut rng) {
+                hits[id] += 1;
+            }
+        }
+        // Each client expects 200 selections; allow generous slack.
+        assert!(hits.iter().all(|&h| (120..=280).contains(&h)), "{hits:?}");
+    }
+}

@@ -1,0 +1,58 @@
+//! Server-side split-training operations: body forward/backward (Phase 2)
+//! and parameter aggregation (Phase 3).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::{fedavg_multi, SegmentParams};
+use crate::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+
+pub struct Server;
+
+impl Server {
+    /// Phase 2 server step A — forward the smashed data through the frozen
+    /// body (held as pre-converted literals; it never changes in SFPrompt).
+    pub fn body_forward(
+        store: &ArtifactStore,
+        body_lits: &[xla::Literal],
+        smashed: &HostTensor,
+    ) -> Result<HostTensor> {
+        let mut segs: crate::runtime::SegmentInputs = BTreeMap::new();
+        segs.insert("body", crate::runtime::SegInput::Literals(body_lits));
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("smashed", smashed);
+        let mut out = Executor::run_mixed(store, "body_forward", &segs, &tensors)?;
+        Ok(out.tensors.remove("body_out").expect("body_out"))
+    }
+
+    /// Phase 2 server step B — backprop the client's cut-layer gradient
+    /// through the frozen body; returns the gradient w.r.t. smashed data.
+    pub fn body_backward(
+        store: &ArtifactStore,
+        body_lits: &[xla::Literal],
+        smashed: &HostTensor,
+        g_body_out: &HostTensor,
+    ) -> Result<HostTensor> {
+        let mut segs: crate::runtime::SegmentInputs = BTreeMap::new();
+        segs.insert("body", crate::runtime::SegInput::Literals(body_lits));
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("smashed", smashed);
+        tensors.insert("g_body_out", g_body_out);
+        let mut out = Executor::run_mixed(store, "body_backward", &segs, &tensors)?;
+        Ok(out.tensors.remove("g_smashed").expect("g_smashed"))
+    }
+
+    /// Phase 3 — sample-count-weighted FedAvg of (tail, prompt) pairs
+    /// (paper Eq. 3 with the n_k/N weights of Algorithm 2).
+    pub fn aggregate(
+        updates: &[(SegmentParams, SegmentParams, usize)],
+    ) -> Result<(SegmentParams, SegmentParams)> {
+        let per_client: Vec<(Vec<&SegmentParams>, usize)> =
+            updates.iter().map(|(t, p, n)| (vec![t, p], *n)).collect();
+        let mut out = fedavg_multi(&per_client)?;
+        let prompt = out.pop().expect("prompt");
+        let tail = out.pop().expect("tail");
+        Ok((tail, prompt))
+    }
+}

@@ -1,0 +1,109 @@
+//! Analytic FLOPs model for split-ViT segments (Table 2).
+//!
+//! Mirrors python/compile/costmodel.py exactly — an integration test
+//! asserts both implementations agree for every manifest. Convention:
+//! 1 MAC = 2 FLOPs; forward only (backward counted as 2x forward where
+//! needed, the standard approximation).
+
+use crate::runtime::manifest::ModelConfig;
+
+/// Forward FLOPs of one pre-LN transformer block at sequence length `seq`.
+pub fn block_flops(dim: u64, seq: u64, mlp_ratio: u64) -> u64 {
+    let (d, t, m) = (dim, seq, mlp_ratio * dim);
+    let qkv = 2 * t * d * 3 * d;
+    let attn_mm = 2 * 2 * t * t * d; // QK^T and PV
+    let proj = 2 * t * d * d;
+    let mlp = 2 * 2 * t * d * m;
+    let ln = 2 * (8 * t * d);
+    let softmax = 5 * t * t;
+    qkv + attn_mm + proj + mlp + ln + softmax
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegmentFlops {
+    pub head: u64,
+    pub body: u64,
+    pub tail: u64,
+}
+
+impl SegmentFlops {
+    pub fn client(&self) -> u64 {
+        self.head + self.tail
+    }
+
+    pub fn total(&self) -> u64 {
+        self.head + self.body + self.tail
+    }
+}
+
+/// Per-sample forward FLOPs per segment.
+pub fn segment_flops(cfg: &ModelConfig, with_prompt: bool) -> SegmentFlops {
+    let t = if with_prompt { cfg.seq_len } else { cfg.seq_len_noprompt } as u64;
+    let blk = block_flops(cfg.dim as u64, t, cfg.mlp_ratio as u64);
+    let embed = 2 * cfg.num_patches as u64 * cfg.patch_dim as u64 * cfg.dim as u64;
+    SegmentFlops {
+        head: embed + cfg.depth_head as u64 * blk,
+        body: cfg.depth_body as u64 * blk,
+        tail: cfg.depth_tail as u64 * blk
+            + 2 * cfg.dim as u64 * cfg.num_classes as u64
+            + 8 * t * cfg.dim as u64,
+    }
+}
+
+/// Per-sample FLOPs of one full train step (fwd + ~2x bwd) over a set of
+/// segments — used for the per-client computational-burden column.
+pub fn train_step_flops(fwd: u64) -> u64 {
+    3 * fwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            image_size: 32,
+            patch_size: 4,
+            channels: 3,
+            dim: 64,
+            heads: 4,
+            depth_head: 2,
+            depth_body: 3,
+            depth_tail: 1,
+            mlp_ratio: 2,
+            num_classes: 10,
+            prompt_len: 8,
+            batch: 16,
+            num_patches: 64,
+            seq_len: 73,
+            seq_len_noprompt: 65,
+            patch_dim: 48,
+            analytic_only: false,
+        }
+    }
+
+    #[test]
+    fn flops_scale_with_depth() {
+        let c = cfg();
+        let f = segment_flops(&c, true);
+        // body has 3 blocks, tail has 1 (+classifier): body ~ 3x tail block part.
+        assert!(f.body > 2 * (f.tail - 2 * 64 * 10 - 8 * 73 * 64));
+        assert!(f.total() > f.client());
+    }
+
+    #[test]
+    fn prompt_increases_flops() {
+        let c = cfg();
+        assert!(segment_flops(&c, true).total() > segment_flops(&c, false).total());
+    }
+
+    #[test]
+    fn block_flops_quadratic_in_seq_for_attention() {
+        // Doubling seq should grow cost by >2x (attention term is quadratic).
+        let f1 = block_flops(64, 50, 2);
+        let f2 = block_flops(64, 100, 2);
+        assert!(f2 > 2 * f1);
+        assert!(f2 < 4 * f1);
+    }
+}

@@ -1,0 +1,52 @@
+//! # sfprompt
+//!
+//! Reproduction of *SFPrompt: Communication-Efficient Split Federated
+//! Fine-Tuning for Large Pre-Trained Models over Resource-Limited Devices*
+//! (Cao, Zhu, Gong — 2024) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the federated/split coordinator: round scheduling,
+//!   client selection, the split-training message protocol, local-loss
+//!   self-update, EL2N dataset pruning, FedAvg aggregation, a simulated
+//!   network with exact byte accounting, analytic cost models, baselines
+//!   (FL, SFL+FF, SFL+Linear), and the experiment harness that regenerates
+//!   every table and figure of the paper.
+//! * **L2 (python/compile, build-time)** — the split ViT + soft prompts in
+//!   JAX, AOT-lowered per protocol message to `artifacts/<cfg>/*.hlo.txt`.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused
+//!   attention, LayerNorm, EL2N) called from L2.
+//!
+//! Python never runs at runtime: this crate loads the HLO text via PJRT
+//! (`xla` crate) and drives everything from the JSON manifest.
+
+pub mod analysis;
+pub mod comm;
+pub mod data;
+pub mod experiments;
+pub mod federation;
+pub mod flops;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root / cwd).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts root: `$SFPROMPT_ARTIFACTS` or ./artifacts,
+/// walking up from the current dir so tests/examples work from target/.
+pub fn artifacts_root() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SFPROMPT_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

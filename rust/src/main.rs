@@ -1,0 +1,186 @@
+//! `sfprompt` CLI — the L3 coordinator entry point.
+//!
+//! Subcommands:
+//!   inspect    --config <name>             show a manifest's inventory
+//!   train      --config <name> [...]       run SFPrompt (or a baseline)
+//!   experiment --id <fig2|fig4|...|all>    regenerate a paper table/figure
+//!   analyze                                closed-form cost model sweep
+
+use anyhow::Result;
+
+use sfprompt::experiments::{self, ExpOptions};
+use sfprompt::federation::baselines::BaselineEngine;
+use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
+use sfprompt::partition::Partition;
+use sfprompt::runtime::ArtifactStore;
+use sfprompt::util::cli::Args;
+
+const USAGE: &str = "\
+sfprompt — split federated prompt fine-tuning coordinator
+
+USAGE:
+  sfprompt inspect    --config <name>
+  sfprompt train      --config <name> [--method sfprompt|fl|sfl_ff|sfl_linear]
+                      [--rounds N] [--clients N] [--per-round K] [--epochs U]
+                      [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
+                      [--noniid] [--alpha F] [--seed N] [--samples-per-client N]
+                      [--no-local-loss]
+  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|all>
+                      [--out DIR] [--rounds N] [--scale F] [--seed N]
+  sfprompt analyze
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(Args::parse(argv)) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: Args) -> Result<()> {
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("inspect") => inspect(&args),
+        Some("train") => train(&args),
+        Some("experiment") => experiment(&args),
+        Some("analyze") => {
+            let opts = ExpOptions::default();
+            std::fs::create_dir_all(&opts.out_dir)?;
+            experiments::table1::run(&opts)?;
+            experiments::fig2::run(&opts)
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "tiny");
+    let store = ArtifactStore::open(&sfprompt::artifacts_root(), config)?;
+    let man = &store.manifest;
+    println!("config {}:", man.config.name);
+    println!(
+        "  image {}x{}x{}  patch {}  dim {}  heads {}  depth {}+{}+{}  classes {}  prompt {}  batch {}",
+        man.config.image_size, man.config.image_size, man.config.channels,
+        man.config.patch_size, man.config.dim, man.config.heads,
+        man.config.depth_head, man.config.depth_body, man.config.depth_tail,
+        man.config.num_classes, man.config.prompt_len, man.config.batch
+    );
+    println!("  params: {:?} (backbone total {}, α={:.3}, τ={:.3})",
+             man.cost.params, man.cost.params_total_backbone, man.cost.alpha, man.cost.tau);
+    println!("  stages ({}):", man.stages.len());
+    for (name, st) in &man.stages {
+        println!("    {:<24} [{}] in={} out={}", name, st.family,
+                 st.inputs.len(), st.outputs.len());
+    }
+    Ok(())
+}
+
+fn fed_from_args(args: &Args) -> FedConfig {
+    FedConfig {
+        num_clients: args.get_parse("clients", 50),
+        clients_per_round: args.get_parse("per-round", 5),
+        local_epochs: args.get_parse("epochs", 10),
+        rounds: args.get_parse("rounds", 10),
+        lr: args.get_parse("lr", 0.08f32),
+        retain_fraction: args.get_parse("retain", 0.4f64),
+        local_loss_update: !args.has_flag("no-local-loss"),
+        partition: if args.has_flag("noniid") {
+            Partition::Dirichlet { alpha: args.get_parse("alpha", 0.1f64) }
+        } else {
+            Partition::Iid
+        },
+        seed: args.get_parse("seed", 17u64),
+        eval_limit: Some(args.get_parse("eval-limit", 160usize)),
+        eval_every: args.get_parse("eval-every", 1usize),
+        selection: Selection::Uniform,
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let config = args.get_or("config", "small");
+    let dataset = args.get_or("dataset", "cifar10").to_string();
+    let method = match args.get_or("method", "sfprompt") {
+        "sfprompt" => Method::SfPrompt,
+        "fl" => Method::Fl,
+        "sfl_ff" => Method::SflFullFinetune,
+        "sfl_linear" => Method::SflLinear,
+        other => anyhow::bail!("unknown method {other:?}"),
+    };
+    let fed = fed_from_args(args);
+    let store = ArtifactStore::open(&sfprompt::artifacts_root(), config)?;
+
+    let mut profile = sfprompt::data::synth::profile(&dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?;
+    profile.num_classes = store.manifest.config.num_classes;
+    let spc = args.get_parse("samples-per-client", 32usize);
+    let cfg = &store.manifest.config;
+    let train_ds = sfprompt::data::SynthDataset::generate(
+        profile, cfg.image_size, cfg.channels, fed.num_clients * spc,
+        1000 + fed.seed, 2000 + fed.seed,
+    );
+    let eval_ds = sfprompt::data::SynthDataset::generate(
+        profile, cfg.image_size, cfg.channels, 160, 1000 + fed.seed, 9000 + fed.seed,
+    );
+
+    println!(
+        "train: config={config} dataset={dataset} method={} rounds={} clients={}x{} U={} γ_retain={}",
+        method.label(), fed.rounds, fed.clients_per_round, fed.num_clients,
+        fed.local_epochs, fed.retain_fraction
+    );
+    let progress = |rec: &sfprompt::metrics::RoundRecord| {
+        println!(
+            "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB sim_lat={:.1}s wall={:.1}s",
+            rec.round, rec.mean_split_loss, rec.mean_local_loss, rec.eval_accuracy,
+            rec.comm.mb(), rec.sim_latency_s, rec.wall_s
+        );
+    };
+    let hist = if method == Method::SfPrompt {
+        let mut engine = SfPromptEngine::new(&store, fed, &train_ds);
+        engine.run(&train_ds, Some(&eval_ds), progress)?
+    } else {
+        let mut engine = BaselineEngine::new(&store, fed, method, &train_ds);
+        engine.run(&train_ds, Some(&eval_ds), progress)?
+    };
+    println!(
+        "done: final acc {:.4}, total comm {:.2} MB ({:.2} MB/round), messages {}",
+        hist.final_accuracy(),
+        hist.total_comm.mb(),
+        hist.comm_mb_per_round(),
+        hist.total_comm.messages
+    );
+    for (kind, bytes) in &hist.total_comm.by_kind {
+        println!("  {kind:<22} {:.3} MB", *bytes as f64 / 1e6);
+    }
+    if args.has_flag("stats") {
+        println!("\nper-stage execution stats (desc by total exec time):");
+        println!("{:<26} {:>8} {:>12} {:>12} {:>10}", "stage", "calls", "exec total s",
+                 "mean ms", "convert s");
+        for (name, s) in store.execution_stats() {
+            println!(
+                "{:<26} {:>8} {:>12.2} {:>12.2} {:>10.3}",
+                name, s.calls, s.exec_s, s.exec_s * 1e3 / s.calls as f64, s.convert_s
+            );
+        }
+    }
+    Ok(())
+}
+
+fn experiment(args: &Args) -> Result<()> {
+    let id = args.get_or("id", "all").to_string();
+    let opts = ExpOptions {
+        out_dir: args.get_or("out", "results").into(),
+        rounds: args.get_parse("rounds", 10usize),
+        local_epochs: args.get_parse("epochs", 10usize),
+        samples_per_client_x: args.get_parse("scale", 1.0f64),
+        seed: args.get_parse("seed", 17u64),
+    };
+    std::fs::create_dir_all(&opts.out_dir)?;
+    experiments::run(&id, &sfprompt::artifacts_root(), &opts)
+}

@@ -1,0 +1,154 @@
+//! Round-level metrics: accuracy evaluation, per-round records, reporting.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::comm::ByteMeter;
+use crate::data::{batch_indices, make_batch, SynthDataset};
+use crate::model::ParamSet;
+use crate::runtime::{ArtifactStore, Executor, HostTensor};
+
+/// Metrics for one global round of any method.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub mean_local_loss: f64,
+    pub mean_split_loss: f64,
+    pub eval_accuracy: f64,
+    pub comm: ByteMeter,
+    pub wall_s: f64,
+    pub sim_latency_s: f64,
+}
+
+/// Accumulated experiment output.
+#[derive(Debug, Default, Clone)]
+pub struct RunHistory {
+    pub rounds: Vec<RoundRecord>,
+    pub total_comm: ByteMeter,
+}
+
+impl RunHistory {
+    pub fn push(&mut self, rec: RoundRecord) {
+        self.total_comm.merge(&rec.comm);
+        self.rounds.push(rec);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map_or(0.0, |r| r.eval_accuracy)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.eval_accuracy).fold(0.0, f64::max)
+    }
+
+    pub fn comm_mb_per_round(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.total_comm.mb() / self.rounds.len() as f64
+        }
+    }
+}
+
+/// Argmax accuracy of `logits` [B, C] against labels [B], counting only the
+/// first `valid` rows (tail batches are padded).
+pub fn batch_accuracy(logits: &HostTensor, labels: &HostTensor, valid: usize) -> (usize, usize) {
+    let c = logits.shape[1];
+    let l = logits.as_f32();
+    let y = labels.as_i32();
+    let mut correct = 0;
+    for (i, &label) in y.iter().enumerate().take(valid) {
+        let row = &l[i * c..(i + 1) * c];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap();
+        if pred == label {
+            correct += 1;
+        }
+    }
+    (correct, valid)
+}
+
+/// Evaluate model accuracy over an eval dataset with the given eval stage
+/// (`eval_forward` with prompt, `eval_forward_noprompt` without).
+pub fn evaluate(
+    store: &ArtifactStore,
+    stage: &str,
+    params: &ParamSet,
+    eval: &SynthDataset,
+    limit: Option<usize>,
+) -> Result<f64> {
+    let cfg = &store.manifest.config;
+    let n = limit.unwrap_or(eval.len()).min(eval.len());
+    let idx: Vec<usize> = (0..n).collect();
+    let needs_prompt = store.stage_def(stage)?.inputs.iter().any(|io| {
+        matches!(io, crate::runtime::IoSpec::Segment(s) if s == "prompt")
+    });
+
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in batch_indices(&idx, cfg.batch) {
+        let valid = chunk.iter().collect::<std::collections::BTreeSet<_>>().len();
+        let batch = make_batch(&eval.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
+        let mut segs: BTreeMap<&str, &crate::model::SegmentParams> = BTreeMap::new();
+        for seg in ["head", "body", "tail"] {
+            segs.insert(seg, params.get(seg)?);
+        }
+        if needs_prompt {
+            segs.insert("prompt", params.get("prompt")?);
+        }
+        let mut tensors: crate::runtime::TensorInputs = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        let out = Executor::run(store, stage, &segs, &tensors)?;
+        let logits = out.tensor("logits")?;
+        let (c, t) = batch_accuracy(logits, &batch.labels, valid);
+        correct += c;
+        total += t;
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accuracy_counts_correctly() {
+        let logits = HostTensor::f32(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 2.0, -1.0]);
+        let labels = HostTensor::i32(vec![3], vec![0, 1, 1]);
+        let (c, t) = batch_accuracy(&logits, &labels, 3);
+        assert_eq!((c, t), (2, 3));
+        // padded row excluded
+        let (c, t) = batch_accuracy(&logits, &labels, 2);
+        assert_eq!((c, t), (2, 2));
+    }
+
+    #[test]
+    fn history_aggregates() {
+        let mut h = RunHistory::default();
+        for r in 0..3 {
+            let mut comm = ByteMeter::default();
+            comm.record(
+                crate::comm::MsgKind::Upload,
+                crate::comm::Direction::Uplink,
+                100,
+            );
+            h.push(RoundRecord {
+                round: r,
+                mean_local_loss: 1.0,
+                mean_split_loss: 1.0,
+                eval_accuracy: 0.1 * r as f64,
+                comm,
+                wall_s: 0.0,
+                sim_latency_s: 0.0,
+            });
+        }
+        assert_eq!(h.total_comm.total(), 300);
+        assert!((h.final_accuracy() - 0.2).abs() < 1e-12);
+        assert!((h.comm_mb_per_round() - 1e-4).abs() < 1e-9);
+    }
+}

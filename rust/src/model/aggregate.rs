@@ -1,0 +1,121 @@
+//! FedAvg aggregation (paper Phase 3, Eq. 3 / Algorithm 2).
+//!
+//! Sample-count weighted average of client updates:
+//! `(W_{t,r+1}, p_{r+1}) = Σ_k (n_k / N) (W_{t,k,r}, p_{k,r})`.
+
+use anyhow::{bail, Result};
+
+use super::params::SegmentParams;
+
+/// One client's contribution to aggregation.
+pub struct Contribution<'a> {
+    pub params: &'a SegmentParams,
+    pub num_samples: usize,
+}
+
+/// Weighted FedAvg over client segment params.
+///
+/// Invariants (property-tested): weights sum to 1; aggregation of identical
+/// inputs is the identity; aggregation is permutation-invariant; a client
+/// with zero samples contributes nothing.
+pub fn fedavg(contributions: &[Contribution]) -> Result<SegmentParams> {
+    if contributions.is_empty() {
+        bail!("fedavg over zero contributions");
+    }
+    let total: usize = contributions.iter().map(|c| c.num_samples).sum();
+    if total == 0 {
+        bail!("fedavg with zero total samples");
+    }
+    let mut acc = contributions[0].params.zeros_like();
+    for c in contributions {
+        let w = c.num_samples as f32 / total as f32;
+        acc.axpy(w, c.params)?;
+    }
+    Ok(acc)
+}
+
+/// Aggregate several segments at once (tail + prompt in SFPrompt).
+pub fn fedavg_multi(
+    per_client: &[(Vec<&SegmentParams>, usize)],
+) -> Result<Vec<SegmentParams>> {
+    if per_client.is_empty() {
+        bail!("fedavg over zero clients");
+    }
+    let num_segments = per_client[0].0.len();
+    let mut out = Vec::with_capacity(num_segments);
+    for s in 0..num_segments {
+        let contribs: Vec<Contribution> = per_client
+            .iter()
+            .map(|(segs, n)| Contribution { params: segs[s], num_samples: *n })
+            .collect();
+        out.push(fedavg(&contribs)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::runtime::tensor::HostTensor;
+
+    use super::*;
+
+    fn seg(vals: &[f32]) -> SegmentParams {
+        SegmentParams {
+            segment: "t".into(),
+            tensors: vec![HostTensor::f32(vec![vals.len()], vals.to_vec())],
+        }
+    }
+
+    #[test]
+    fn weighted_average() {
+        let a = seg(&[0.0, 0.0]);
+        let b = seg(&[4.0, 8.0]);
+        let out = fedavg(&[
+            Contribution { params: &a, num_samples: 3 },
+            Contribution { params: &b, num_samples: 1 },
+        ])
+        .unwrap();
+        assert_eq!(out.tensors[0].as_f32(), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn identity_on_identical_inputs() {
+        let a = seg(&[1.5, -2.5, 3.0]);
+        let out = fedavg(&[
+            Contribution { params: &a, num_samples: 10 },
+            Contribution { params: &a, num_samples: 90 },
+        ])
+        .unwrap();
+        assert!(out.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn zero_sample_client_ignored() {
+        let a = seg(&[2.0]);
+        let b = seg(&[100.0]);
+        let out = fedavg(&[
+            Contribution { params: &a, num_samples: 5 },
+            Contribution { params: &b, num_samples: 0 },
+        ])
+        .unwrap();
+        assert!((out.tensors[0].as_f32()[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_or_all_zero_errors() {
+        assert!(fedavg(&[]).is_err());
+        let a = seg(&[1.0]);
+        assert!(fedavg(&[Contribution { params: &a, num_samples: 0 }]).is_err());
+    }
+
+    #[test]
+    fn multi_aggregates_each_segment() {
+        let t1 = seg(&[0.0]);
+        let p1 = seg(&[2.0]);
+        let t2 = seg(&[2.0]);
+        let p2 = seg(&[4.0]);
+        let out = fedavg_multi(&[(vec![&t1, &p1], 1), (vec![&t2, &p2], 1)]).unwrap();
+        assert_eq!(out[0].tensors[0].as_f32(), &[1.0]);
+        assert_eq!(out[1].tensors[0].as_f32(), &[3.0]);
+    }
+}

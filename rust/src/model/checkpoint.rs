@@ -1,0 +1,189 @@
+//! Checkpointing: save/restore a `ParamSet` (resume federated runs, ship
+//! fine-tuned tails/prompts to clients out of band).
+//!
+//! Format: a JSON header line (segment -> [tensor shapes]) followed by the
+//! raw little-endian f32 payload, tensors in manifest order. Self-contained
+//! (no serde); integrity-checked with a FNV-1a digest trailer.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::tensor::HostTensor;
+use crate::util::json::Json;
+
+use super::params::{ParamSet, SegmentParams};
+
+const MAGIC: &str = "SFPROMPT-CKPT-v1";
+
+fn fnv1a(bytes: &[u8], mut state: u64) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(0x100_0000_01b3);
+    }
+    state
+}
+
+/// Save every segment of `params` to `path`.
+pub fn save(params: &ParamSet, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut header = BTreeMap::new();
+    for (seg, sp) in &params.segments {
+        let shapes: Vec<Json> = sp
+            .tensors
+            .iter()
+            .map(|t| Json::Arr(t.shape.iter().map(|&d| Json::Num(d as f64)).collect()))
+            .collect();
+        header.insert(seg.clone(), Json::Arr(shapes));
+    }
+    let header = Json::Obj(header).to_string();
+
+    let mut f = std::fs::File::create(path).context("create checkpoint")?;
+    writeln!(f, "{MAGIC}")?;
+    writeln!(f, "{header}")?;
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for sp in params.segments.values() {
+        for t in &sp.tensors {
+            let mut buf = Vec::with_capacity(t.element_count() * 4);
+            for v in t.as_f32() {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            digest = fnv1a(&buf, digest);
+            f.write_all(&buf)?;
+        }
+    }
+    f.write_all(&digest.to_le_bytes())?;
+    Ok(())
+}
+
+/// Load a checkpoint. Shapes come from the header; the caller may validate
+/// against a manifest with `ParamSet::validate`.
+pub fn load(path: &Path) -> Result<ParamSet> {
+    let mut data = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("open checkpoint {}", path.display()))?
+        .read_to_end(&mut data)?;
+
+    let nl1 = data.iter().position(|&b| b == b'\n').ok_or_else(|| anyhow!("truncated"))?;
+    if &data[..nl1] != MAGIC.as_bytes() {
+        bail!("not a {MAGIC} file");
+    }
+    let nl2 = nl1 + 1
+        + data[nl1 + 1..]
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| anyhow!("truncated header"))?;
+    let header = Json::parse(std::str::from_utf8(&data[nl1 + 1..nl2])?)
+        .map_err(|e| anyhow!("header: {e}"))?;
+
+    let mut offset = nl2 + 1;
+    let mut segments = BTreeMap::new();
+    let mut digest = 0xcbf2_9ce4_8422_2325u64;
+    for (seg, shapes) in header.as_obj().ok_or_else(|| anyhow!("header not an object"))? {
+        let mut tensors = Vec::new();
+        for shape_j in shapes.as_arr().ok_or_else(|| anyhow!("bad shapes"))? {
+            let shape: Vec<usize> = shape_j
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?;
+            let n: usize = shape.iter().product();
+            let end = offset + 4 * n;
+            if end > data.len() {
+                bail!("checkpoint truncated in segment {seg}");
+            }
+            digest = fnv1a(&data[offset..end], digest);
+            let vals: Vec<f32> = data[offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(HostTensor::f32(shape, vals));
+            offset = end;
+        }
+        segments.insert(seg.clone(), SegmentParams { segment: seg.clone(), tensors });
+    }
+    if offset + 8 != data.len() {
+        bail!("trailing bytes in checkpoint");
+    }
+    let stored = u64::from_le_bytes(data[offset..offset + 8].try_into().unwrap());
+    if stored != digest {
+        bail!("checkpoint digest mismatch (corrupted file)");
+    }
+    Ok(ParamSet { segments })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ParamSet {
+        let mut segments = BTreeMap::new();
+        for (name, n) in [("tail", 6usize), ("prompt", 4)] {
+            segments.insert(
+                name.to_string(),
+                SegmentParams {
+                    segment: name.to_string(),
+                    tensors: vec![
+                        HostTensor::f32(vec![n], (0..n).map(|i| i as f32 * 0.5).collect()),
+                        HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.25]),
+                    ],
+                },
+            );
+        }
+        ParamSet { segments }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sfp_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let p = sample();
+        let path = tmp("rt.ckpt");
+        save(&p, &path).unwrap();
+        let q = load(&path).unwrap();
+        assert_eq!(p.segments.keys().collect::<Vec<_>>(), q.segments.keys().collect::<Vec<_>>());
+        for (seg, sp) in &p.segments {
+            assert_eq!(sp.max_abs_diff(&q.segments[seg]), 0.0);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let p = sample();
+        let path = tmp("bad.ckpt");
+        save(&p, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_magic() {
+        let path = tmp("magic.ckpt");
+        std::fs::write(&path, b"NOPE\n{}\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let p = sample();
+        let path = tmp("trunc.ckpt");
+        save(&p, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 12]).unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

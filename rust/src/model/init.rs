@@ -1,0 +1,44 @@
+//! Parameter initialisation from manifest init specs.
+//!
+//! The "pre-trained" backbone is simulated (DESIGN.md §Substitutions): the
+//! frozen head/body are drawn once from the manifest's init distribution
+//! with a fixed seed, standing in for downloaded pre-trained weights. What
+//! the *system* exercises — which tensors are frozen, their sizes, the
+//! message shapes — is identical to real ViT checkpoints.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::{InitSpec, Manifest, TensorDef};
+use crate::runtime::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::params::{ParamSet, SegmentParams};
+
+pub fn init_tensor(def: &TensorDef, rng: &mut Rng) -> HostTensor {
+    let n: usize = def.shape.iter().product();
+    let data = match def.init {
+        InitSpec::Zeros => vec![0.0; n],
+        InitSpec::Ones => vec![1.0; n],
+        InitSpec::Normal(sigma) => (0..n).map(|_| rng.normal_f32(0.0, sigma)).collect(),
+    };
+    HostTensor::f32(def.shape.clone(), data)
+}
+
+pub fn init_segment(manifest: &Manifest, segment: &str, rng: &mut Rng) -> SegmentParams {
+    let defs = manifest.segment(segment).expect("segment exists");
+    SegmentParams {
+        segment: segment.to_string(),
+        tensors: defs.iter().map(|d| init_tensor(d, rng)).collect(),
+    }
+}
+
+/// Initialise the full model deterministically from `seed`.
+pub fn init_params(manifest: &Manifest, seed: u64) -> ParamSet {
+    let mut root = Rng::new(seed);
+    let mut segments = BTreeMap::new();
+    for (i, seg) in manifest.segments.keys().enumerate() {
+        let mut rng = root.fork(i as u64 + 1);
+        segments.insert(seg.clone(), init_segment(manifest, seg, &mut rng));
+    }
+    ParamSet { segments }
+}

@@ -1,0 +1,10 @@
+//! Model state: parameter containers, deterministic init, FedAvg.
+
+pub mod aggregate;
+pub mod checkpoint;
+pub mod init;
+pub mod params;
+
+pub use aggregate::{fedavg, fedavg_multi, Contribution};
+pub use init::{init_params, init_segment};
+pub use params::{ParamSet, SegmentParams};

@@ -1,0 +1,150 @@
+//! Parameter containers: per-segment tensor lists + the full model set.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+/// All tensors of one segment (head / body / tail / prompt), manifest order.
+#[derive(Debug, Clone)]
+pub struct SegmentParams {
+    pub segment: String,
+    pub tensors: Vec<HostTensor>,
+}
+
+impl SegmentParams {
+    pub fn num_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.element_count()).sum()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.size_bytes()).sum()
+    }
+
+    /// Elementwise in-place AXPY: self += alpha * other (FedAvg building block).
+    pub fn axpy(&mut self, alpha: f32, other: &SegmentParams) -> Result<()> {
+        if self.tensors.len() != other.tensors.len() {
+            return Err(anyhow!(
+                "segment arity mismatch: {} vs {}",
+                self.tensors.len(),
+                other.tensors.len()
+            ));
+        }
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            if a.shape != b.shape {
+                return Err(anyhow!("tensor shape mismatch {:?} vs {:?}", a.shape, b.shape));
+            }
+            for (x, y) in a.as_f32_mut().iter_mut().zip(b.as_f32()) {
+                *x += alpha * y;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for t in &mut self.tensors {
+            for x in t.as_f32_mut() {
+                *x *= alpha;
+            }
+        }
+    }
+
+    pub fn zeros_like(&self) -> SegmentParams {
+        SegmentParams {
+            segment: self.segment.clone(),
+            tensors: self.tensors.iter().map(|t| HostTensor::zeros(t.shape.clone())).collect(),
+        }
+    }
+
+    /// Max |a - b| across all tensors (test/metric helper).
+    pub fn max_abs_diff(&self, other: &SegmentParams) -> f32 {
+        self.tensors
+            .iter()
+            .zip(&other.tensors)
+            .flat_map(|(a, b)| a.as_f32().iter().zip(b.as_f32()).map(|(x, y)| (x - y).abs()))
+            .fold(0.0, f32::max)
+    }
+}
+
+/// The global model: every segment, keyed by name.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub segments: BTreeMap<String, SegmentParams>,
+}
+
+impl ParamSet {
+    pub fn get(&self, seg: &str) -> Result<&SegmentParams> {
+        self.segments.get(seg).ok_or_else(|| anyhow!("missing segment {seg:?}"))
+    }
+
+    pub fn get_mut(&mut self, seg: &str) -> Result<&mut SegmentParams> {
+        self.segments.get_mut(seg).ok_or_else(|| anyhow!("missing segment {seg:?}"))
+    }
+
+    pub fn set(&mut self, params: SegmentParams) {
+        self.segments.insert(params.segment.clone(), params);
+    }
+
+    /// Verify tensor counts/shapes against the manifest (fail fast on drift).
+    pub fn validate(&self, manifest: &Manifest) -> Result<()> {
+        for (seg, defs) in &manifest.segments {
+            let sp = self.get(seg)?;
+            if sp.tensors.len() != defs.len() {
+                return Err(anyhow!(
+                    "segment {seg}: {} tensors, manifest wants {}",
+                    sp.tensors.len(),
+                    defs.len()
+                ));
+            }
+            for (t, d) in sp.tensors.iter().zip(defs) {
+                if t.shape != d.shape {
+                    return Err(anyhow!(
+                        "segment {seg} tensor {}: shape {:?} != {:?}",
+                        d.name,
+                        t.shape,
+                        d.shape
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(vals: &[f32]) -> SegmentParams {
+        SegmentParams {
+            segment: "s".into(),
+            tensors: vec![HostTensor::f32(vec![vals.len()], vals.to_vec())],
+        }
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = seg(&[1.0, 2.0]);
+        let b = seg(&[10.0, 20.0]);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.tensors[0].as_f32(), &[6.0, 12.0]);
+        a.scale(2.0);
+        assert_eq!(a.tensors[0].as_f32(), &[12.0, 24.0]);
+    }
+
+    #[test]
+    fn axpy_shape_mismatch_errors() {
+        let mut a = seg(&[1.0, 2.0]);
+        let b = seg(&[1.0, 2.0, 3.0]);
+        assert!(a.axpy(1.0, &b).is_err());
+    }
+
+    #[test]
+    fn diff_metric() {
+        let a = seg(&[1.0, 5.0]);
+        let b = seg(&[2.0, 3.0]);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+    }
+}

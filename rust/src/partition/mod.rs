@@ -1,0 +1,188 @@
+//! Client data partitioning: IID and Dirichlet non-IID (Hsu et al. 2019).
+//!
+//! The paper's non-IID split uses a Dirichlet distribution with α = 0.1
+//! over class proportions per client (§4.1).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Partition {
+    Iid,
+    /// Dirichlet(alpha) over class proportions per client.
+    Dirichlet { alpha: f64 },
+}
+
+impl Partition {
+    pub fn label(&self) -> String {
+        match self {
+            Partition::Iid => "iid".into(),
+            Partition::Dirichlet { alpha } => format!("dirichlet{alpha}"),
+        }
+    }
+}
+
+/// Split `labels` into `num_clients` index lists.
+///
+/// Invariants (property-tested): the union of all client index lists is a
+/// permutation of 0..n (no loss, no duplication); every client is non-empty
+/// when n >= num_clients.
+pub fn partition(
+    labels: &[i32],
+    num_clients: usize,
+    scheme: Partition,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(num_clients > 0);
+    match scheme {
+        Partition::Iid => partition_iid(labels.len(), num_clients, rng),
+        Partition::Dirichlet { alpha } => partition_dirichlet(labels, num_clients, alpha, rng),
+    }
+}
+
+fn partition_iid(n: usize, num_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut out = vec![Vec::with_capacity(n / num_clients + 1); num_clients];
+    for (i, id) in idx.into_iter().enumerate() {
+        out[i % num_clients].push(id);
+    }
+    out
+}
+
+fn partition_dirichlet(
+    labels: &[i32],
+    num_clients: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let num_classes = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(i);
+    }
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); num_clients];
+    for class_idx in by_class.into_iter() {
+        if class_idx.is_empty() {
+            continue;
+        }
+        let mut class_idx = class_idx;
+        rng.shuffle(&mut class_idx);
+        let props = rng.dirichlet(alpha, num_clients);
+        // Cumulative proportional cut points over this class's samples.
+        let n = class_idx.len();
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (c, p) in props.iter().enumerate() {
+            acc += p;
+            let end = if c + 1 == num_clients { n } else { (acc * n as f64).round() as usize };
+            let end = end.clamp(start, n);
+            out[c].extend_from_slice(&class_idx[start..end]);
+            start = end;
+        }
+    }
+    // Guarantee non-emptiness: move a sample from the largest client to any
+    // empty one (keeps the union invariant intact).
+    for c in 0..num_clients {
+        if out[c].is_empty() {
+            let (donor, _) =
+                out.iter().enumerate().max_by_key(|(_, v)| v.len()).expect("nonempty");
+            if out[donor].len() > 1 {
+                let moved = out[donor].pop().unwrap();
+                out[c].push(moved);
+            }
+        }
+    }
+    out
+}
+
+/// Measure heterogeneity: average total-variation distance between each
+/// client's label distribution and the global one (0 = IID-like).
+pub fn label_skew(labels: &[i32], parts: &[Vec<usize>]) -> f64 {
+    let num_classes = labels.iter().copied().max().map_or(0, |m| m as usize + 1);
+    if num_classes == 0 {
+        return 0.0;
+    }
+    let mut global = vec![0.0f64; num_classes];
+    for &l in labels {
+        global[l as usize] += 1.0;
+    }
+    let n = labels.len() as f64;
+    for g in global.iter_mut() {
+        *g /= n;
+    }
+    let mut acc = 0.0;
+    let mut used = 0;
+    for part in parts {
+        if part.is_empty() {
+            continue;
+        }
+        let mut local = vec![0.0f64; num_classes];
+        for &i in part {
+            local[labels[i] as usize] += 1.0;
+        }
+        for l in local.iter_mut() {
+            *l /= part.len() as f64;
+        }
+        acc += global.iter().zip(&local).map(|(g, l)| (g - l).abs()).sum::<f64>() / 2.0;
+        used += 1;
+    }
+    acc / used.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, classes: i32) -> Vec<i32> {
+        (0..n).map(|i| (i as i32) % classes).collect()
+    }
+
+    fn assert_is_partition(n: usize, parts: &[Vec<usize>]) {
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn iid_is_balanced_partition() {
+        let l = labels(103, 10);
+        let mut rng = Rng::new(1);
+        let parts = partition(&l, 10, Partition::Iid, &mut rng);
+        assert_is_partition(103, &parts);
+        assert!(parts.iter().all(|p| p.len() == 10 || p.len() == 11));
+    }
+
+    #[test]
+    fn dirichlet_is_partition_and_nonempty() {
+        let l = labels(500, 10);
+        let mut rng = Rng::new(2);
+        let parts = partition(&l, 50, Partition::Dirichlet { alpha: 0.1 }, &mut rng);
+        assert_is_partition(500, &parts);
+        assert!(parts.iter().all(|p| !p.is_empty()));
+    }
+
+    #[test]
+    fn dirichlet_alpha_controls_skew() {
+        let l = labels(2000, 10);
+        let mut rng = Rng::new(3);
+        let p_sharp = partition(&l, 20, Partition::Dirichlet { alpha: 0.1 }, &mut rng);
+        let p_flat = partition(&l, 20, Partition::Dirichlet { alpha: 100.0 }, &mut rng);
+        let p_iid = partition(&l, 20, Partition::Iid, &mut rng);
+        let s_sharp = label_skew(&l, &p_sharp);
+        let s_flat = label_skew(&l, &p_flat);
+        let s_iid = label_skew(&l, &p_iid);
+        assert!(s_sharp > s_flat + 0.1, "sharp {s_sharp} flat {s_flat}");
+        assert!(s_iid < 0.2, "iid skew {s_iid}");
+    }
+
+    #[test]
+    fn single_client_gets_everything() {
+        let l = labels(37, 5);
+        let mut rng = Rng::new(4);
+        for scheme in [Partition::Iid, Partition::Dirichlet { alpha: 0.5 }] {
+            let parts = partition(&l, 1, scheme, &mut rng);
+            assert_eq!(parts.len(), 1);
+            assert_is_partition(37, &parts);
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Artifact store: loads `artifacts/<config>/` and lazily compiles each
+//! HLO-text stage into a cached PJRT executable.
+//!
+//! HLO **text** is the interchange format (see aot.py / DESIGN.md): the
+//! xla_extension 0.5.1 proto parser rejects jax>=0.5's 64-bit instruction
+//! ids, while the text parser reassigns ids and round-trips cleanly.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, StageDef};
+
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// compile-time per stage, for metrics/EXPERIMENTS.md
+    compile_ms: RefCell<HashMap<String, f64>>,
+    /// per-stage execution stats: (calls, convert_s, exec_s)
+    exec_stats: RefCell<HashMap<String, (u64, f64, f64)>>,
+}
+
+/// Aggregated execution statistics for one stage.
+#[derive(Debug, Clone, Copy)]
+pub struct StageStats {
+    pub calls: u64,
+    pub convert_s: f64,
+    pub exec_s: f64,
+}
+
+impl ArtifactStore {
+    /// Open `artifacts_root/<config_name>`.
+    pub fn open(artifacts_root: &Path, config_name: &str) -> Result<ArtifactStore> {
+        let dir = artifacts_root.join(config_name);
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(ArtifactStore {
+            dir,
+            manifest,
+            client,
+            executables: RefCell::new(HashMap::new()),
+            compile_ms: RefCell::new(HashMap::new()),
+            exec_stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn stage_def(&self, name: &str) -> Result<&StageDef> {
+        self.manifest.stage(name)
+    }
+
+    /// Compile (or fetch cached) the executable for a stage.
+    pub fn executable(&self, stage: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.borrow().get(stage) {
+            return Ok(exe.clone());
+        }
+        let def = self.manifest.stage(stage)?;
+        let path = self.dir.join(&def.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling stage {stage}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.compile_ms.borrow_mut().insert(stage.to_string(), ms);
+        let exe = Rc::new(exe);
+        self.executables.borrow_mut().insert(stage.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of stages (warm-up before timed runs).
+    pub fn warm(&self, stages: &[&str]) -> Result<()> {
+        for s in stages {
+            self.executable(s)?;
+        }
+        Ok(())
+    }
+
+    /// Record one execution (called by the Executor).
+    pub(crate) fn note_execution(&self, stage: &str, convert_s: f64, exec_s: f64) {
+        let mut stats = self.exec_stats.borrow_mut();
+        let e = stats.entry(stage.to_string()).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += convert_s;
+        e.2 += exec_s;
+    }
+
+    /// Per-stage cumulative stats (sorted by total execution time, desc).
+    pub fn execution_stats(&self) -> Vec<(String, StageStats)> {
+        let mut v: Vec<(String, StageStats)> = self
+            .exec_stats
+            .borrow()
+            .iter()
+            .map(|(k, &(calls, convert_s, exec_s))| {
+                (k.clone(), StageStats { calls, convert_s, exec_s })
+            })
+            .collect();
+        v.sort_by(|a, b| b.1.exec_s.partial_cmp(&a.1.exec_s).unwrap());
+        v
+    }
+
+    pub fn reset_execution_stats(&self) {
+        self.exec_stats.borrow_mut().clear();
+    }
+
+    pub fn compile_times_ms(&self) -> Vec<(String, f64)> {
+        let mut v: Vec<(String, f64)> =
+            self.compile_ms.borrow().iter().map(|(k, t)| (k.clone(), *t)).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}

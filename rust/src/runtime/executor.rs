@@ -1,0 +1,238 @@
+//! Stage executor: assembles positional inputs per the manifest signature,
+//! runs the PJRT executable, and maps the output tuple back to named
+//! segments / tensors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::params::SegmentParams;
+
+use super::artifact::ArtifactStore;
+use super::manifest::{IoSpec, StageDef};
+use super::tensor::HostTensor;
+
+/// Named non-segment inputs to a stage (images, labels, gradients, lr).
+pub type TensorInputs<'a> = BTreeMap<&'a str, &'a HostTensor>;
+
+/// A segment input: host tensors (converted per call) or pre-converted
+/// literals (the frozen-segment fast path — head/body never change within
+/// an SFPrompt run, so the engine converts them once; see EXPERIMENTS.md
+/// §Perf for the measured effect).
+pub enum SegInput<'a> {
+    Host(&'a SegmentParams),
+    Literals(&'a [xla::Literal]),
+}
+
+pub type SegmentInputs<'a> = BTreeMap<&'a str, SegInput<'a>>;
+
+/// Convert a segment's tensors to literals once (for `SegInput::Literals`).
+pub fn segment_literals(params: &SegmentParams) -> Result<Vec<xla::Literal>> {
+    params.tensors.iter().map(|t| t.to_literal()).collect()
+}
+
+/// Structured outputs of a stage execution.
+#[derive(Debug, Default)]
+pub struct StageOutputs {
+    pub segments: BTreeMap<String, SegmentParams>,
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl StageOutputs {
+    pub fn tensor(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("stage output missing tensor {name:?}"))
+    }
+
+    pub fn segment(&self, name: &str) -> Result<&SegmentParams> {
+        self.segments.get(name).ok_or_else(|| anyhow!("stage output missing segment {name:?}"))
+    }
+
+    pub fn take_segment(&mut self, name: &str) -> Result<SegmentParams> {
+        self.segments.remove(name).ok_or_else(|| anyhow!("stage output missing segment {name:?}"))
+    }
+
+    pub fn loss(&self) -> Result<f32> {
+        Ok(self.tensor("loss")?.as_f32()[0])
+    }
+}
+
+enum InputRef<'a> {
+    Owned(usize),
+    Cached(&'a xla::Literal),
+}
+
+pub struct Executor;
+
+impl Executor {
+    /// Run `stage` with host-resident segment params and named tensors.
+    ///
+    /// Inputs are matched positionally against the manifest: a
+    /// `IoSpec::Segment` consumes all tensors of that segment from
+    /// `segments`, a `IoSpec::Tensor`/`Scalar` consumes the named entry
+    /// from `tensors`.
+    pub fn run(
+        store: &ArtifactStore,
+        stage_name: &str,
+        segments: &BTreeMap<&str, &SegmentParams>,
+        tensors: &TensorInputs,
+    ) -> Result<StageOutputs> {
+        let mixed: SegmentInputs =
+            segments.iter().map(|(k, v)| (*k, SegInput::Host(v))).collect();
+        Self::run_mixed(store, stage_name, &mixed, tensors)
+    }
+
+    /// Like [`Executor::run`] but segments may be pre-converted literals
+    /// (the frozen-segment fast path).
+    pub fn run_mixed(
+        store: &ArtifactStore,
+        stage_name: &str,
+        segments: &SegmentInputs,
+        tensors: &TensorInputs,
+    ) -> Result<StageOutputs> {
+        let t0 = std::time::Instant::now();
+        let def = store.stage_def(stage_name)?.clone();
+        let (owned, order) = Self::assemble_inputs(store, &def, segments, tensors)?;
+        // `order` indexes into owned (>=0) or borrows cached literals (<0
+        // encoded as (seg, idx)); build the final &Literal list.
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(order.len());
+        for item in &order {
+            match item {
+                InputRef::Owned(i) => refs.push(&owned[*i]),
+                InputRef::Cached(lit) => refs.push(lit),
+            }
+        }
+        let convert_s = t0.elapsed().as_secs_f64();
+        let exe = store.executable(stage_name)?;
+        let t1 = std::time::Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .with_context(|| format!("executing stage {stage_name}"))?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("stage {stage_name} returned no buffers"))?
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let exec_s = t1.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True: always a (possibly 1-) tuple.
+        let outs = tuple.to_tuple().context("decompose output tuple")?;
+        let out = Self::map_outputs(store, &def, outs);
+        store.note_execution(stage_name, convert_s, exec_s);
+        out
+    }
+
+    fn assemble_inputs<'a>(
+        store: &ArtifactStore,
+        def: &StageDef,
+        segments: &'a SegmentInputs,
+        tensors: &TensorInputs,
+    ) -> Result<(Vec<xla::Literal>, Vec<InputRef<'a>>)> {
+        let arity = store.manifest.stage_input_arity(def);
+        let mut owned = Vec::with_capacity(arity);
+        let mut order = Vec::with_capacity(arity);
+        for io in &def.inputs {
+            match io {
+                IoSpec::Segment(seg) => {
+                    let input = segments
+                        .get(seg.as_str())
+                        .ok_or_else(|| anyhow!("stage {} needs segment {seg:?}", def.name))?;
+                    let expected = store.manifest.segment(seg)?.len();
+                    match input {
+                        SegInput::Host(params) => {
+                            if params.tensors.len() != expected {
+                                bail!(
+                                    "segment {seg:?} has {} tensors, manifest expects {expected}",
+                                    params.tensors.len()
+                                );
+                            }
+                            for t in &params.tensors {
+                                owned.push(t.to_literal()?);
+                                order.push(InputRef::Owned(owned.len() - 1));
+                            }
+                        }
+                        SegInput::Literals(lits) => {
+                            if lits.len() != expected {
+                                bail!(
+                                    "segment {seg:?} has {} literals, manifest expects {expected}",
+                                    lits.len()
+                                );
+                            }
+                            for l in *lits {
+                                order.push(InputRef::Cached(l));
+                            }
+                        }
+                    }
+                }
+                IoSpec::Tensor { name, shape, .. } => {
+                    let t = tensors
+                        .get(name.as_str())
+                        .ok_or_else(|| anyhow!("stage {} needs tensor {name:?}", def.name))?;
+                    if &t.shape != shape {
+                        bail!(
+                            "tensor {name:?}: shape {:?} != manifest {:?}",
+                            t.shape,
+                            shape
+                        );
+                    }
+                    owned.push(t.to_literal()?);
+                    order.push(InputRef::Owned(owned.len() - 1));
+                }
+                IoSpec::Scalar(name) => {
+                    let t = tensors
+                        .get(name.as_str())
+                        .ok_or_else(|| anyhow!("stage {} needs scalar {name:?}", def.name))?;
+                    owned.push(t.to_literal()?);
+                    order.push(InputRef::Owned(owned.len() - 1));
+                }
+            }
+        }
+        Ok((owned, order))
+    }
+
+    fn map_outputs(
+        store: &ArtifactStore,
+        def: &StageDef,
+        outs: Vec<xla::Literal>,
+    ) -> Result<StageOutputs> {
+        let mut result = StageOutputs::default();
+        let mut it = outs.into_iter();
+        for io in &def.outputs {
+            match io {
+                IoSpec::Segment(seg) => {
+                    let defs = store.manifest.segment(seg)?;
+                    let mut tensors = Vec::with_capacity(defs.len());
+                    for d in defs {
+                        let lit = it
+                            .next()
+                            .ok_or_else(|| anyhow!("stage {}: output tuple too short", def.name))?;
+                        tensors.push(HostTensor::from_literal(&lit, &d.shape, d.dtype)?);
+                    }
+                    result
+                        .segments
+                        .insert(seg.clone(), SegmentParams { segment: seg.clone(), tensors });
+                }
+                IoSpec::Tensor { name, shape, dtype } => {
+                    let lit = it
+                        .next()
+                        .ok_or_else(|| anyhow!("stage {}: output tuple too short", def.name))?;
+                    result
+                        .tensors
+                        .insert(name.clone(), HostTensor::from_literal(&lit, shape, *dtype)?);
+                }
+                IoSpec::Scalar(name) => {
+                    let lit = it
+                        .next()
+                        .ok_or_else(|| anyhow!("stage {}: output tuple too short", def.name))?;
+                    result.tensors.insert(
+                        name.clone(),
+                        HostTensor::from_literal(&lit, &[], super::tensor::Dtype::F32)?,
+                    );
+                }
+            }
+        }
+        if it.next().is_some() {
+            bail!("stage {}: output tuple longer than manifest", def.name);
+        }
+        Ok(result)
+    }
+}

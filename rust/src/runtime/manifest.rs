@@ -1,0 +1,273 @@
+//! Typed view of `artifacts/<config>/manifest.json` (emitted by aot.py).
+//!
+//! The manifest is the single source of truth for stage signatures: which
+//! segments and tensors each HLO program takes, positionally, and what it
+//! returns. The rust side never hard-codes parameter orders.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::tensor::Dtype;
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub channels: usize,
+    pub dim: usize,
+    pub heads: usize,
+    pub depth_head: usize,
+    pub depth_body: usize,
+    pub depth_tail: usize,
+    pub mlp_ratio: usize,
+    pub num_classes: usize,
+    pub prompt_len: usize,
+    pub batch: usize,
+    pub num_patches: usize,
+    pub seq_len: usize,
+    pub seq_len_noprompt: usize,
+    pub patch_dim: usize,
+    pub analytic_only: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorDef {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub init: InitSpec,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum InitSpec {
+    Zeros,
+    Ones,
+    Normal(f32),
+}
+
+impl InitSpec {
+    pub fn parse(s: &str) -> Result<InitSpec> {
+        match s {
+            "zeros" => Ok(InitSpec::Zeros),
+            "ones" => Ok(InitSpec::Ones),
+            other => {
+                let sigma = other
+                    .strip_prefix("normal:")
+                    .and_then(|v| v.parse::<f32>().ok())
+                    .ok_or_else(|| anyhow!("bad init spec {other:?}"))?;
+                Ok(InitSpec::Normal(sigma))
+            }
+        }
+    }
+}
+
+/// One positional input or output of a stage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum IoSpec {
+    /// All tensors of a named segment, in manifest order.
+    Segment(String),
+    /// A single data tensor.
+    Tensor { name: String, shape: Vec<usize>, dtype: Dtype },
+    /// A f32 scalar (learning rate).
+    Scalar(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct StageDef {
+    pub name: String,
+    pub file: String,
+    pub family: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CostInfo {
+    pub params: BTreeMap<String, usize>,
+    pub params_total_backbone: usize,
+    pub alpha: f64,
+    pub tau: f64,
+    pub message_bytes: BTreeMap<String, usize>,
+    pub flops_fwd_per_sample: BTreeMap<String, u64>,
+    pub flops_fwd_per_sample_noprompt: BTreeMap<String, u64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub segments: BTreeMap<String, Vec<TensorDef>>,
+    pub stages: BTreeMap<String, StageDef>,
+    pub cost: CostInfo,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+}
+
+fn usize_of(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("{key:?} not a usize"))
+}
+
+fn str_of(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?.as_str().ok_or_else(|| anyhow!("{key:?} not a string"))?.to_string())
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("shape not an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape dim not usize")))
+        .collect()
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    match req(j, "kind")?.as_str() {
+        Some("segment") => Ok(IoSpec::Segment(str_of(j, "segment")?)),
+        Some("scalar") => Ok(IoSpec::Scalar(str_of(j, "name")?)),
+        Some("tensor") | None => Ok(IoSpec::Tensor {
+            name: str_of(j, "name")?,
+            shape: shape_of(req(j, "shape")?)?,
+            dtype: Dtype::parse(j.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32"))?,
+        }),
+        Some(other) => bail!("unknown io kind {other:?}"),
+    }
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+
+        let c = req(&j, "config")?;
+        let config = ModelConfig {
+            name: str_of(c, "name")?,
+            image_size: usize_of(c, "image_size")?,
+            patch_size: usize_of(c, "patch_size")?,
+            channels: usize_of(c, "channels")?,
+            dim: usize_of(c, "dim")?,
+            heads: usize_of(c, "heads")?,
+            depth_head: usize_of(c, "depth_head")?,
+            depth_body: usize_of(c, "depth_body")?,
+            depth_tail: usize_of(c, "depth_tail")?,
+            mlp_ratio: usize_of(c, "mlp_ratio")?,
+            num_classes: usize_of(c, "num_classes")?,
+            prompt_len: usize_of(c, "prompt_len")?,
+            batch: usize_of(c, "batch")?,
+            num_patches: usize_of(c, "num_patches")?,
+            seq_len: usize_of(c, "seq_len")?,
+            seq_len_noprompt: usize_of(c, "seq_len_noprompt")?,
+            patch_dim: usize_of(c, "patch_dim")?,
+            analytic_only: c.get("analytic_only").and_then(|v| v.as_bool()).unwrap_or(false),
+        };
+
+        let mut segments = BTreeMap::new();
+        for (seg, arr) in req(&j, "segments")?.as_obj().ok_or_else(|| anyhow!("segments"))? {
+            let defs = arr
+                .as_arr()
+                .ok_or_else(|| anyhow!("segment {seg} not an array"))?
+                .iter()
+                .map(|d| {
+                    Ok(TensorDef {
+                        name: str_of(d, "name")?,
+                        shape: shape_of(req(d, "shape")?)?,
+                        dtype: Dtype::parse(&str_of(d, "dtype")?)?,
+                        init: InitSpec::parse(&str_of(d, "init")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            segments.insert(seg.clone(), defs);
+        }
+
+        let mut stages = BTreeMap::new();
+        for (name, s) in req(&j, "stages")?.as_obj().ok_or_else(|| anyhow!("stages"))? {
+            let inputs = req(s, "inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = req(s, "outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(io_spec)
+                .collect::<Result<Vec<_>>>()?;
+            stages.insert(
+                name.clone(),
+                StageDef {
+                    name: name.clone(),
+                    file: str_of(s, "file")?,
+                    family: str_of(s, "family")?,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+
+        let cost_j = req(&j, "cost")?;
+        let map_usize = |key: &str| -> Result<BTreeMap<String, usize>> {
+            Ok(req(cost_j, key)?
+                .as_obj()
+                .ok_or_else(|| anyhow!("{key} not an object"))?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_usize().unwrap_or(0)))
+                .collect())
+        };
+        let map_u64 = |key: &str| -> Result<BTreeMap<String, u64>> {
+            Ok(req(cost_j, key)?
+                .as_obj()
+                .ok_or_else(|| anyhow!("{key} not an object"))?
+                .iter()
+                .map(|(k, v)| (k.clone(), v.as_i64().unwrap_or(0) as u64))
+                .collect())
+        };
+        let cost = CostInfo {
+            params: map_usize("params")?,
+            params_total_backbone: usize_of(cost_j, "params_total_backbone")?,
+            alpha: req(cost_j, "alpha")?.as_f64().unwrap_or(0.0),
+            tau: req(cost_j, "tau")?.as_f64().unwrap_or(0.0),
+            message_bytes: map_usize("message_bytes")?,
+            flops_fwd_per_sample: map_u64("flops_fwd_per_sample")?,
+            flops_fwd_per_sample_noprompt: map_u64("flops_fwd_per_sample_noprompt")?,
+        };
+
+        Ok(Manifest { config, segments, stages, cost })
+    }
+
+    pub fn stage(&self, name: &str) -> Result<&StageDef> {
+        self.stages
+            .get(name)
+            .ok_or_else(|| anyhow!("stage {name:?} not in manifest (have: {:?})",
+                                   self.stages.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn segment(&self, name: &str) -> Result<&[TensorDef]> {
+        self.segments
+            .get(name)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| anyhow!("segment {name:?} not in manifest"))
+    }
+
+    /// Total number of positional literals a stage consumes.
+    pub fn stage_input_arity(&self, stage: &StageDef) -> usize {
+        stage
+            .inputs
+            .iter()
+            .map(|io| match io {
+                IoSpec::Segment(seg) => self.segments[seg].len(),
+                _ => 1,
+            })
+            .sum()
+    }
+}

@@ -1,0 +1,173 @@
+//! Host-side tensors and conversion to/from PJRT `Literal`s.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor; the only two dtypes the protocol uses are f32
+/// (activations, parameters, gradients) and i32 (labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * self.dtype().size_bytes()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("tensor is f32, expected i32"),
+        }
+    }
+
+    /// Convert to an XLA literal (reshaped to this tensor's dimensions).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v)
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    return Ok(xla::Literal::scalar(v[0]));
+                }
+                xla::Literal::vec1(v)
+            }
+        };
+        lit.reshape(&dims).context("reshape literal")
+    }
+
+    /// Read a literal back into a host tensor with a known shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> Result<HostTensor> {
+        let expected: usize = shape.iter().product();
+        let t = match dtype {
+            Dtype::F32 => {
+                let v = lit.to_vec::<f32>().context("literal to f32 vec")?;
+                if v.len() != expected {
+                    bail!("literal has {} elements, expected {expected}", v.len());
+                }
+                HostTensor::f32(shape.to_vec(), v)
+            }
+            Dtype::I32 => {
+                let v = lit.to_vec::<i32>().context("literal to i32 vec")?;
+                if v.len() != expected {
+                    bail!("literal has {} elements, expected {expected}", v.len());
+                }
+                HostTensor::i32(shape.to_vec(), v)
+            }
+        };
+        Ok(t)
+    }
+
+    /// L2 norm (f32 tensors), used in tests and metrics.
+    pub fn l2(&self) -> f64 {
+        self.as_f32().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_checked() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalar_roundtrip_shapes() {
+        let t = HostTensor::scalar_f32(0.25);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.element_count(), 1);
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = HostTensor::f32(vec![2], vec![3.0, 4.0]);
+        assert!((t.l2() - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,82 @@
+//! Tiny CLI argument parser (substrate — no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = parse("experiment --id fig4 --rounds=20 --verbose --out results");
+        assert_eq!(a.positional, vec!["experiment"]);
+        assert_eq!(a.get("id"), Some("fig4"));
+        assert_eq!(a.get("rounds"), Some("20"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn get_parse_defaults() {
+        let a = parse("train --lr 0.05");
+        assert_eq!(a.get_parse("lr", 0.1f64), 0.05);
+        assert_eq!(a.get_parse("rounds", 7usize), 7);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --check");
+        assert!(a.has_flag("check"));
+        assert_eq!(a.get("check"), None);
+    }
+}

@@ -1,0 +1,60 @@
+//! Minimal CSV writer for experiment outputs (results/*.csv).
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    file: fs::File,
+    columns: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut file = fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, columns: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.columns, "csv row arity mismatch");
+        writeln!(self.file, "{}", values.join(","))
+    }
+}
+
+/// Format helper: `csv_row![round, acc; "{:.4}"]`-style is overkill; a simple
+/// trait keeps call sites terse.
+pub fn fmt_f64(v: f64) -> String {
+    format!("{:.6}", v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join(format!("sfp_csv_{}", std::process::id()));
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "2".into()]).unwrap();
+            w.row(&["x".into(), fmt_f64(0.5)]).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("a,b\n1,2\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join(format!("sfp_csv2_{}", std::process::id()));
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

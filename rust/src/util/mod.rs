@@ -1,0 +1,7 @@
+//! Self-contained substrates: JSON, RNG, CLI parsing, CSV, timing.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,205 @@
+//! Deterministic RNG substrate (SplitMix64 core + distributions).
+//!
+//! The offline registry has no `rand` crate; everything stochastic in the
+//! coordinator (parameter init, synthetic data, Dirichlet partitioning,
+//! client selection) runs on this generator so runs are reproducible from a
+//! single seed.
+
+/// SplitMix64 — tiny, fast, passes BigCrush for our purposes; the canonical
+/// seeding sequence from Vigna (2015).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9E37_79B9_7F4A_7C15) }
+    }
+
+    /// Derive an independent stream (for per-client / per-dataset RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0xD6E8_FEB8_6659_FD93))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn uniform_f32(&mut self) -> f32 {
+        self.uniform() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Rejection-free for our n << 2^64 use; modulo bias is negligible
+        // (n is at most ~1e6 here) but we debias anyway.
+        let zone = u64::MAX - (u64::MAX % n as u64);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % n as u64) as usize;
+            }
+        }
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, sigma: f32) -> f32 {
+        mean + sigma * self.normal() as f32
+    }
+
+    /// Gamma(shape, 1) via Marsaglia-Tsang; shape > 0.
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v = v * v * v;
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x * x * x * x {
+                return d * v;
+            }
+            if u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln()) {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k): the non-IID split distribution (Hsu et al. 2019).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let gs: Vec<f64> = (0..k).map(|_| self.gamma(alpha).max(1e-300)).collect();
+        let sum: f64 = gs.iter().sum();
+        gs.into_iter().map(|g| g / sum).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            xs.swap(i, self.below(i + 1));
+        }
+    }
+
+    /// Sample k distinct indices from [0, n) (k <= n), order random.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a: Vec<u64> = (0..8).map({
+            let mut r = Rng::new(7);
+            move |_| r.next_u64()
+        }).collect();
+        let b: Vec<u64> = (0..8).map({
+            let mut r = Rng::new(7);
+            move |_| r.next_u64()
+        }).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_alpha_controls_skew() {
+        let mut r = Rng::new(3);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 10);
+            assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&p| p >= 0.0));
+        }
+        // Small alpha should concentrate mass: max component larger on average.
+        let mut max_small = 0.0;
+        let mut max_large = 0.0;
+        for _ in 0..200 {
+            max_small += r.dirichlet(0.1, 10).into_iter().fold(0.0, f64::max);
+            max_large += r.dirichlet(10.0, 10).into_iter().fold(0.0, f64::max);
+        }
+        assert!(max_small > max_large * 1.5);
+    }
+
+    #[test]
+    fn choose_is_distinct_subset() {
+        let mut r = Rng::new(4);
+        for _ in 0..50 {
+            let picks = r.choose(50, 5);
+            assert_eq!(picks.len(), 5);
+            let mut s = picks.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 5);
+            assert!(picks.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(5);
+        for &shape in &[0.1f64, 0.5, 2.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.08 * shape.max(0.5), "shape {shape} mean {mean}");
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! End-to-end federation tests on the real `tiny` artifacts: the SFPrompt
+//! engine and all three baselines must run full rounds, account bytes
+//! correctly, and train (loss decreases over rounds).
+
+use sfprompt::comm::MsgKind;
+use sfprompt::data::{synth::DatasetProfile, SynthDataset};
+use sfprompt::federation::baselines::BaselineEngine;
+use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
+use sfprompt::partition::Partition;
+use sfprompt::runtime::ArtifactStore;
+
+fn open_tiny() -> Option<ArtifactStore> {
+    match ArtifactStore::open(&sfprompt::artifacts_root(), "tiny") {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+fn data(store: &ArtifactStore, n: usize, seed: u64) -> SynthDataset {
+    let cfg = &store.manifest.config;
+    let profile = DatasetProfile {
+        name: "t",
+        num_classes: cfg.num_classes,
+        noise: 0.35,
+        class_overlap: 0.1,
+    };
+    SynthDataset::generate(profile, cfg.image_size, cfg.channels, n, 5, seed)
+}
+
+fn fed(rounds: usize) -> FedConfig {
+    FedConfig {
+        num_clients: 6,
+        clients_per_round: 2,
+        local_epochs: 2,
+        rounds,
+        lr: 0.1,
+        retain_fraction: 0.5,
+        local_loss_update: true,
+        partition: Partition::Iid,
+        seed: 9,
+        eval_limit: Some(32),
+        eval_every: 1,
+        selection: Selection::Uniform,
+    }
+}
+
+#[test]
+fn sfprompt_runs_and_loss_decreases() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 6);
+    let eval = data(&store, 32, 60);
+    let mut engine = SfPromptEngine::new(&store, fed(4), &train);
+    let hist = engine.run(&train, Some(&eval), |_| {}).unwrap();
+    assert_eq!(hist.rounds.len(), 4);
+    let first = &hist.rounds[0];
+    let last = &hist.rounds[3];
+    assert!(last.mean_local_loss < first.mean_local_loss,
+            "local loss {} -> {}", first.mean_local_loss, last.mean_local_loss);
+    assert!(hist.final_accuracy() >= 0.0 && hist.final_accuracy() <= 1.0);
+}
+
+#[test]
+fn sfprompt_comm_accounting_is_exact() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 7);
+    let f = fed(2);
+    let mut engine = SfPromptEngine::new(&store, f, &train);
+    let hist = engine.run(&train, None, |_| {}).unwrap();
+
+    let mb = &store.manifest.cost.message_bytes;
+    let cfg = &store.manifest.config;
+    // Expected per-round traffic: per selected client
+    //   distribution (tail+prompt) + upload (tail+prompt) + broadcast
+    //   + 4 cut-layer crossings per pruned batch.
+    let per_client_samples = 96 / f.num_clients; // iid, divisible
+    let retained = ((per_client_samples as f64 * f.retain_fraction).round()) as usize;
+    let n_batches = (retained + cfg.batch - 1) / cfg.batch;
+    let expected_per_round = f.clients_per_round
+        * (3 * (mb["tail_params"] + mb["prompt_params"])
+            + 4 * n_batches * mb["smashed_per_batch"]);
+    assert_eq!(
+        hist.total_comm.total(),
+        (expected_per_round * f.rounds) as u64,
+        "byte accounting drifted from the protocol"
+    );
+    // No full-model messages in SFPrompt, ever.
+    assert!(!hist.total_comm.by_kind.contains_key(MsgKind::FullModel.label()));
+}
+
+#[test]
+fn pruning_reduces_split_traffic() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 8);
+    let mut comm_at = Vec::new();
+    for retain in [1.0, 0.25] {
+        let f = FedConfig { retain_fraction: retain, ..fed(2) };
+        let mut engine = SfPromptEngine::new(&store, f, &train);
+        let hist = engine.run(&train, None, |_| {}).unwrap();
+        comm_at.push(hist.total_comm.by_kind["smashed_data"]);
+    }
+    assert!(comm_at[1] < comm_at[0], "pruning must cut smashed traffic: {comm_at:?}");
+}
+
+#[test]
+fn ablation_without_local_loss_still_runs() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 9);
+    let f = FedConfig { local_loss_update: false, ..fed(2) };
+    let mut engine = SfPromptEngine::new(&store, f, &train);
+    let hist = engine.run(&train, None, |_| {}).unwrap();
+    assert_eq!(hist.rounds.len(), 2);
+    assert!(hist.rounds[0].mean_local_loss.is_nan() || hist.rounds[0].mean_local_loss == 0.0);
+}
+
+#[test]
+fn fl_baseline_trains_and_costs_full_model_bytes() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 10);
+    let f = fed(2);
+    let mut engine = BaselineEngine::new(&store, f, Method::Fl, &train);
+    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let full = store.manifest.cost.message_bytes["full_model"];
+    let expected = 2 * full * f.clients_per_round * f.rounds;
+    assert_eq!(hist.total_comm.total(), expected as u64);
+    let losses: Vec<f64> = hist.rounds.iter().map(|r| r.mean_split_loss).collect();
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn sfl_ff_trains_and_talks_every_epoch() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 11);
+    let f = fed(2);
+    let mut engine = BaselineEngine::new(&store, f, Method::SflFullFinetune, &train);
+    let hist = engine.run(&train, None, |_| {}).unwrap();
+    // 4 crossings per batch per epoch; sanity: smashed bytes scale with U.
+    assert!(hist.total_comm.by_kind.contains_key("smashed_data"));
+    assert!(hist.total_comm.by_kind.contains_key("grad_smashed"));
+    let losses: Vec<f64> = hist.rounds.iter().map(|r| r.mean_split_loss).collect();
+    assert!(losses.windows(2).any(|w| w[1] <= w[0]), "{losses:?}");
+}
+
+#[test]
+fn sfl_linear_never_sends_gradients_downstream() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 12);
+    let mut engine = BaselineEngine::new(&store, fed(2), Method::SflLinear, &train);
+    let hist = engine.run(&train, None, |_| {}).unwrap();
+    // Frozen head/body: activations flow, gradients never cross the cut.
+    assert!(hist.total_comm.by_kind.contains_key("smashed_data"));
+    assert!(!hist.total_comm.by_kind.contains_key("grad_smashed"));
+    assert!(!hist.total_comm.by_kind.contains_key("grad_body_out"));
+}
+
+#[test]
+fn sfprompt_vs_sfl_comm_ordering_matches_paper() {
+    // The paper's headline: SFPrompt ≪ SFL on communication for U > 1.
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 13);
+    let f = FedConfig { local_epochs: 4, ..fed(1) };
+
+    let mut sfp = SfPromptEngine::new(&store, f, &train);
+    let sfp_comm = sfp.run(&train, None, |_| {}).unwrap().total_comm.total();
+
+    let mut sfl = BaselineEngine::new(&store, f, Method::SflFullFinetune, &train);
+    let sfl_comm = sfl.run(&train, None, |_| {}).unwrap().total_comm.total();
+
+    assert!(
+        sfp_comm * 2 < sfl_comm,
+        "SFPrompt ({sfp_comm}) should be well under SFL ({sfl_comm})"
+    );
+}
+
+#[test]
+fn deterministic_runs_for_same_seed() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 14);
+    let run = || {
+        let mut e = SfPromptEngine::new(&store, fed(2), &train);
+        e.run(&train, None, |_| {}).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.total_comm.total(), b.total_comm.total());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.mean_split_loss.to_bits(), y.mean_split_loss.to_bits());
+    }
+}
+
+#[test]
+fn noniid_partition_runs_end_to_end() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 120, 15);
+    let f = FedConfig {
+        partition: Partition::Dirichlet { alpha: 0.1 },
+        num_clients: 8,
+        ..fed(2)
+    };
+    let mut engine = SfPromptEngine::new(&store, f, &train);
+    let hist = engine.run(&train, None, |_| {}).unwrap();
+    assert_eq!(hist.rounds.len(), 2);
+}

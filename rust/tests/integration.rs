@@ -1,0 +1,255 @@
+//! Integration tests over the runtime: manifest loading, parameter init,
+//! stage execution against the real `tiny` artifacts, and cross-layer
+//! consistency (rust flops model vs python costmodel in the manifest).
+//!
+//! Requires `make artifacts` (skips gracefully if artifacts are missing so
+//! `cargo test` before the AOT step still passes unit tests).
+
+use std::collections::BTreeMap;
+
+use sfprompt::data::{make_batch, synth::DatasetProfile, SynthDataset};
+use sfprompt::flops;
+use sfprompt::model::{init_params, SegmentParams};
+use sfprompt::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+
+fn open_tiny() -> Option<ArtifactStore> {
+    match ArtifactStore::open(&sfprompt::artifacts_root(), "tiny") {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIP (no artifacts): {e:#}");
+            None
+        }
+    }
+}
+
+fn batch_for(store: &ArtifactStore) -> (HostTensor, HostTensor) {
+    let cfg = &store.manifest.config;
+    let profile = DatasetProfile {
+        name: "t",
+        num_classes: cfg.num_classes,
+        noise: 0.4,
+        class_overlap: 0.1,
+    };
+    let ds = SynthDataset::generate(profile, cfg.image_size, cfg.channels, cfg.batch, 3, 4);
+    let idx: Vec<usize> = (0..cfg.batch).collect();
+    let b = make_batch(&ds.examples, &idx, cfg.batch, cfg.image_size, cfg.channels);
+    (b.images, b.labels)
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(store) = open_tiny() else { return };
+    let man = &store.manifest;
+    assert_eq!(man.config.name, "tiny");
+    assert!(man.stages.contains_key("local_step"));
+    assert!(man.stages.contains_key("head_forward"));
+    for seg in ["head", "body", "tail", "prompt"] {
+        assert!(!man.segment(seg).unwrap().is_empty(), "{seg}");
+    }
+    let params = init_params(man, 7);
+    params.validate(man).unwrap();
+}
+
+#[test]
+fn init_is_deterministic_and_respects_specs() {
+    let Some(store) = open_tiny() else { return };
+    let a = init_params(&store.manifest, 42);
+    let b = init_params(&store.manifest, 42);
+    let c = init_params(&store.manifest, 43);
+    for seg in ["head", "tail", "prompt"] {
+        assert!(a.get(seg).unwrap().max_abs_diff(b.get(seg).unwrap()) == 0.0);
+        assert!(a.get(seg).unwrap().max_abs_diff(c.get(seg).unwrap()) > 0.0);
+    }
+    // LayerNorm scales init at exactly 1, biases at 0.
+    let head = a.get("head").unwrap();
+    let defs = store.manifest.segment("head").unwrap();
+    for (t, d) in head.tensors.iter().zip(defs) {
+        if d.name.ends_with("ln1.scale") {
+            assert!(t.as_f32().iter().all(|&x| x == 1.0));
+        }
+        if d.name.ends_with("ln1.bias") {
+            assert!(t.as_f32().iter().all(|&x| x == 0.0));
+        }
+    }
+}
+
+#[test]
+fn local_step_executes_and_reduces_loss() {
+    let Some(store) = open_tiny() else { return };
+    let params = init_params(&store.manifest, 7);
+    let (images, labels) = batch_for(&store);
+    let lr = HostTensor::scalar_f32(0.1);
+
+    let mut tail = params.get("tail").unwrap().clone();
+    let mut prompt = params.get("prompt").unwrap().clone();
+    let head = params.get("head").unwrap();
+
+    let mut losses = Vec::new();
+    for _ in 0..5 {
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        segs.insert("head", head);
+        segs.insert("tail", &tail);
+        segs.insert("prompt", &prompt);
+        let mut tensors: TensorInputs = BTreeMap::new();
+        tensors.insert("images", &images);
+        tensors.insert("labels", &labels);
+        tensors.insert("lr", &lr);
+        let mut out = Executor::run(&store, "local_step", &segs, &tensors).unwrap();
+        losses.push(out.loss().unwrap());
+        tail = out.take_segment("tail").unwrap();
+        prompt = out.take_segment("prompt").unwrap();
+    }
+    assert!(losses[4] < losses[0], "{losses:?}");
+    assert!(losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn split_chain_matches_shapes_and_runs() {
+    let Some(store) = open_tiny() else { return };
+    let cfg = store.manifest.config.clone();
+    let params = init_params(&store.manifest, 7);
+    let (images, labels) = batch_for(&store);
+    let lr = HostTensor::scalar_f32(0.05);
+
+    // head_forward
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("head", params.get("head").unwrap());
+    segs.insert("prompt", params.get("prompt").unwrap());
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("images", &images);
+    let out = Executor::run(&store, "head_forward", &segs, &tensors).unwrap();
+    let smashed = out.tensor("smashed").unwrap().clone();
+    assert_eq!(smashed.shape, vec![cfg.batch, cfg.seq_len, cfg.dim]);
+
+    // body_forward
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("body", params.get("body").unwrap());
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("smashed", &smashed);
+    let out = Executor::run(&store, "body_forward", &segs, &tensors).unwrap();
+    let body_out = out.tensor("body_out").unwrap().clone();
+
+    // tail_step
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("tail", params.get("tail").unwrap());
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("body_out", &body_out);
+    tensors.insert("labels", &labels);
+    tensors.insert("lr", &lr);
+    let out = Executor::run(&store, "tail_step", &segs, &tensors).unwrap();
+    let loss = out.loss().unwrap();
+    let g_body_out = out.tensor("g_body_out").unwrap().clone();
+    assert!(loss.is_finite() && loss > 0.0);
+    assert_eq!(g_body_out.shape, smashed.shape);
+    // Updated tail differs from the original.
+    assert!(out.segment("tail").unwrap().max_abs_diff(params.get("tail").unwrap()) > 0.0);
+
+    // body_backward
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("body", params.get("body").unwrap());
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("smashed", &smashed);
+    tensors.insert("g_body_out", &g_body_out);
+    let out = Executor::run(&store, "body_backward", &segs, &tensors).unwrap();
+    let g_smashed = out.tensor("g_smashed").unwrap().clone();
+
+    // prompt_grad
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("head", params.get("head").unwrap());
+    segs.insert("prompt", params.get("prompt").unwrap());
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("images", &images);
+    tensors.insert("g_smashed", &g_smashed);
+    tensors.insert("lr", &lr);
+    let out = Executor::run(&store, "prompt_grad", &segs, &tensors).unwrap();
+    assert!(out.segment("prompt").unwrap().max_abs_diff(params.get("prompt").unwrap()) > 0.0);
+}
+
+#[test]
+fn el2n_scores_separate_easy_and_hard() {
+    let Some(store) = open_tiny() else { return };
+    let params = init_params(&store.manifest, 7);
+    let (images, labels) = batch_for(&store);
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("head", params.get("head").unwrap());
+    segs.insert("tail", params.get("tail").unwrap());
+    segs.insert("prompt", params.get("prompt").unwrap());
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("images", &images);
+    tensors.insert("labels", &labels);
+    let out = Executor::run(&store, "el2n_scores", &segs, &tensors).unwrap();
+    let scores = out.tensor("scores").unwrap();
+    assert_eq!(scores.shape, vec![store.manifest.config.batch]);
+    // EL2N is in [0, sqrt(2)] for probability vectors.
+    assert!(scores.as_f32().iter().all(|&s| (0.0..=1.5).contains(&s)));
+}
+
+#[test]
+fn missing_inputs_fail_loudly() {
+    let Some(store) = open_tiny() else { return };
+    let params = init_params(&store.manifest, 7);
+    let segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    let tensors: TensorInputs = BTreeMap::new();
+    // No segments provided at all.
+    assert!(Executor::run(&store, "local_step", &segs, &tensors).is_err());
+    // Wrong tensor shape.
+    let (images, _) = batch_for(&store);
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    segs.insert("head", params.get("head").unwrap());
+    segs.insert("prompt", params.get("prompt").unwrap());
+    let bad = HostTensor::zeros(vec![1, 2, 3]);
+    let mut t: TensorInputs = BTreeMap::new();
+    t.insert("images", &bad);
+    assert!(Executor::run(&store, "head_forward", &segs, &t).is_err());
+    drop(images);
+}
+
+#[test]
+fn unknown_stage_and_config_error() {
+    let Some(store) = open_tiny() else { return };
+    assert!(store.stage_def("nope").is_err());
+    assert!(ArtifactStore::open(&sfprompt::artifacts_root(), "no_such_config").is_err());
+}
+
+#[test]
+fn rust_flops_model_matches_python_costmodel() {
+    // The manifest carries python/compile/costmodel.py's numbers; the rust
+    // flops module must reproduce them for every non-analytic config.
+    for config in ["tiny", "small", "small_c100", "vit_base_sim", "vit_large_sim"] {
+        let man = match sfprompt::runtime::Manifest::load(
+            &sfprompt::artifacts_root().join(config),
+        ) {
+            Ok(m) => m,
+            Err(_) => {
+                eprintln!("SKIP {config}");
+                continue;
+            }
+        };
+        let rust = flops::segment_flops(&man.config, true);
+        let py = &man.cost.flops_fwd_per_sample;
+        assert_eq!(rust.head, py["head"], "{config} head");
+        assert_eq!(rust.body, py["body"], "{config} body");
+        assert_eq!(rust.tail, py["tail"], "{config} tail");
+        let rust_np = flops::segment_flops(&man.config, false);
+        let py_np = &man.cost.flops_fwd_per_sample_noprompt;
+        assert_eq!(rust_np.head, py_np["head"], "{config} head noprompt");
+    }
+}
+
+#[test]
+fn eval_forward_produces_logits() {
+    let Some(store) = open_tiny() else { return };
+    let cfg = store.manifest.config.clone();
+    let params = init_params(&store.manifest, 7);
+    let (images, _) = batch_for(&store);
+    let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+    for s in ["head", "body", "tail", "prompt"] {
+        segs.insert(s, params.get(s).unwrap());
+    }
+    let mut tensors: TensorInputs = BTreeMap::new();
+    tensors.insert("images", &images);
+    let out = Executor::run(&store, "eval_forward", &segs, &tensors).unwrap();
+    let logits = out.tensor("logits").unwrap();
+    assert_eq!(logits.shape, vec![cfg.batch, cfg.num_classes]);
+    assert!(logits.as_f32().iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,254 @@
+//! Property-based tests over coordinator invariants (substrate — the
+//! offline registry has no `proptest`, so these use a seeded-random case
+//! driver with explicit failure reporting; 200+ random cases per property).
+
+use sfprompt::comm::{ByteMeter, Direction, MsgKind};
+use sfprompt::data::batch_indices;
+use sfprompt::model::{fedavg, Contribution, SegmentParams};
+use sfprompt::partition::{label_skew, partition, Partition};
+use sfprompt::runtime::HostTensor;
+use sfprompt::util::json::Json;
+use sfprompt::util::rng::Rng;
+
+const CASES: usize = 200;
+
+fn seg_from(rng: &mut Rng, n: usize) -> SegmentParams {
+    SegmentParams {
+        segment: "s".into(),
+        tensors: vec![HostTensor::f32(
+            vec![n],
+            (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect(),
+        )],
+    }
+}
+
+// ---------------------------------------------------------------- fedavg
+
+#[test]
+fn prop_fedavg_within_convex_hull() {
+    // Every aggregated coordinate must lie within [min, max] of the inputs.
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let k = 1 + rng.below(6);
+        let n = 1 + rng.below(20);
+        let segs: Vec<SegmentParams> = (0..k).map(|_| seg_from(&mut rng, n)).collect();
+        let weights: Vec<usize> = (0..k).map(|_| 1 + rng.below(50)).collect();
+        let contribs: Vec<Contribution> = segs
+            .iter()
+            .zip(&weights)
+            .map(|(s, &w)| Contribution { params: s, num_samples: w })
+            .collect();
+        let out = fedavg(&contribs).unwrap();
+        for i in 0..n {
+            let vals: Vec<f32> = segs.iter().map(|s| s.tensors[0].as_f32()[i]).collect();
+            let (lo, hi) = vals.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| {
+                (l.min(v), h.max(v))
+            });
+            let got = out.tensors[0].as_f32()[i];
+            assert!(
+                got >= lo - 1e-4 && got <= hi + 1e-4,
+                "case {case}: coord {i} = {got} outside [{lo}, {hi}]"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fedavg_permutation_invariant() {
+    let mut rng = Rng::new(102);
+    for case in 0..CASES {
+        let k = 2 + rng.below(5);
+        let n = 1 + rng.below(16);
+        let segs: Vec<SegmentParams> = (0..k).map(|_| seg_from(&mut rng, n)).collect();
+        let weights: Vec<usize> = (0..k).map(|_| 1 + rng.below(20)).collect();
+        let fwd: Vec<Contribution> = segs
+            .iter()
+            .zip(&weights)
+            .map(|(s, &w)| Contribution { params: s, num_samples: w })
+            .collect();
+        let rev: Vec<Contribution> = segs
+            .iter()
+            .zip(&weights)
+            .rev()
+            .map(|(s, &w)| Contribution { params: s, num_samples: w })
+            .collect();
+        let a = fedavg(&fwd).unwrap();
+        let b = fedavg(&rev).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-5, "case {case}: diff {}", a.max_abs_diff(&b));
+    }
+}
+
+#[test]
+fn prop_fedavg_scale_equivariant() {
+    // fedavg(c * xs) == c * fedavg(xs)
+    let mut rng = Rng::new(103);
+    for case in 0..CASES / 2 {
+        let k = 1 + rng.below(4);
+        let n = 1 + rng.below(10);
+        let segs: Vec<SegmentParams> = (0..k).map(|_| seg_from(&mut rng, n)).collect();
+        let c = rng.normal_f32(0.0, 3.0);
+        let contribs = |s: &[SegmentParams]| -> SegmentParams {
+            let cs: Vec<Contribution> =
+                s.iter().map(|p| Contribution { params: p, num_samples: 7 }).collect();
+            fedavg(&cs).unwrap()
+        };
+        let base = contribs(&segs);
+        let scaled_in: Vec<SegmentParams> = segs
+            .iter()
+            .map(|s| {
+                let mut x = s.clone();
+                x.scale(c);
+                x
+            })
+            .collect();
+        let scaled_out = contribs(&scaled_in);
+        let mut expect = base.clone();
+        expect.scale(c);
+        assert!(scaled_out.max_abs_diff(&expect) < 2e-3, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------- partition
+
+#[test]
+fn prop_partition_is_exact_cover() {
+    let mut rng = Rng::new(104);
+    for case in 0..CASES {
+        let n = 1 + rng.below(600);
+        let classes = 1 + rng.below(20) as i32;
+        let clients = 1 + rng.below(20);
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(classes as usize) as i32).collect();
+        let scheme = if rng.uniform() < 0.5 {
+            Partition::Iid
+        } else {
+            Partition::Dirichlet { alpha: 0.05 + rng.uniform() * 2.0 }
+        };
+        let parts = partition(&labels, clients, scheme, &mut rng);
+        assert_eq!(parts.len(), clients, "case {case}");
+        let mut all: Vec<usize> = parts.iter().flatten().copied().collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..n).collect();
+        assert_eq!(all, expect, "case {case}: not an exact cover ({scheme:?})");
+    }
+}
+
+#[test]
+fn prop_partition_nonempty_when_enough_samples() {
+    let mut rng = Rng::new(105);
+    for case in 0..CASES / 2 {
+        let clients = 2 + rng.below(30);
+        let n = clients * (1 + rng.below(20));
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(10) as i32).collect();
+        let parts =
+            partition(&labels, clients, Partition::Dirichlet { alpha: 0.1 }, &mut rng);
+        let empties = parts.iter().filter(|p| p.is_empty()).count();
+        assert_eq!(empties, 0, "case {case}: {empties} empty clients (n={n}, k={clients})");
+    }
+}
+
+#[test]
+fn prop_skew_bounded_zero_one() {
+    let mut rng = Rng::new(106);
+    for _ in 0..CASES / 4 {
+        let n = 50 + rng.below(500);
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(7) as i32).collect();
+        let parts = partition(&labels, 10, Partition::Dirichlet { alpha: 0.2 }, &mut rng);
+        let s = label_skew(&labels, &parts);
+        assert!((0.0..=1.0).contains(&s), "skew {s}");
+    }
+}
+
+// ---------------------------------------------------------------- batching
+
+#[test]
+fn prop_batches_cover_all_indices_without_invention() {
+    let mut rng = Rng::new(107);
+    for case in 0..CASES {
+        let n = 1 + rng.below(200);
+        let batch = 1 + rng.below(32);
+        let indices: Vec<usize> = (0..n).map(|_| rng.below(1000)).collect();
+        let batches = batch_indices(&indices, batch);
+        // Every batch has exactly `batch` entries.
+        assert!(batches.iter().all(|b| b.len() == batch), "case {case}");
+        // Concatenation starts with the original sequence…
+        let flat: Vec<usize> = batches.iter().flatten().copied().collect();
+        assert_eq!(&flat[..n], &indices[..], "case {case}");
+        // …and any padding repeats the final element only.
+        assert!(flat[n..].iter().all(|&x| x == *indices.last().unwrap()), "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------- comm
+
+#[test]
+fn prop_meter_total_equals_sum_of_kinds() {
+    let mut rng = Rng::new(108);
+    let kinds = [
+        MsgKind::ModelDistribution,
+        MsgKind::SmashedData,
+        MsgKind::BodyOutput,
+        MsgKind::GradBodyOut,
+        MsgKind::GradSmashed,
+        MsgKind::Upload,
+        MsgKind::AggregateBroadcast,
+        MsgKind::FullModel,
+    ];
+    for case in 0..CASES {
+        let mut m = ByteMeter::default();
+        let msgs = rng.below(200);
+        let mut expect = 0u64;
+        for _ in 0..msgs {
+            let kind = kinds[rng.below(kinds.len())];
+            let dir = if rng.uniform() < 0.5 { Direction::Uplink } else { Direction::Downlink };
+            let bytes = rng.below(1 << 20);
+            m.record(kind, dir, bytes);
+            expect += bytes as u64;
+        }
+        assert_eq!(m.total(), expect, "case {case}");
+        assert_eq!(m.by_kind.values().sum::<u64>(), expect, "case {case}");
+        assert_eq!(m.messages, msgs as u64, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    let mut rng = Rng::new(109);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.below(2_000_001) as i64 - 1_000_000) as f64),
+            3 => Json::Str(format!("s{}-\"q\\{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for case in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(v, back, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------- rng
+
+#[test]
+fn prop_forked_streams_are_decorrelated() {
+    let mut root = Rng::new(110);
+    let mut a = root.fork(1);
+    let mut b = root.fork(2);
+    let n = 4000;
+    let xs: Vec<f64> = (0..n).map(|_| a.uniform()).collect();
+    let ys: Vec<f64> = (0..n).map(|_| b.uniform()).collect();
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let cov = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / n as f64;
+    assert!(cov.abs() < 0.01, "cov {cov}");
+}
