@@ -36,6 +36,7 @@ fn main() -> Result<()> {
         eval_limit: None,
         eval_every: usize::MAX, // no eval — pure comm measurement
         selection: Selection::Uniform,
+        wire: sfprompt::transport::WireFormat::F32,
     };
 
     println!("measured bytes/round on config `small` (K=4, U=4, retain=0.4):");

@@ -47,6 +47,7 @@ fn main() -> Result<()> {
         eval_limit: Some(256),
         eval_every: 1,
         selection: Selection::Uniform,
+        wire: sfprompt::transport::WireFormat::F32,
     };
 
     let batches_per_client = (spc + cfg.batch - 1) / cfg.batch;

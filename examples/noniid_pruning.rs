@@ -52,6 +52,7 @@ fn main() -> Result<()> {
             eval_limit: Some(160),
             eval_every: rounds,
             selection: Selection::Uniform,
+            wire: sfprompt::transport::WireFormat::F32,
         };
         let mut engine = SfPromptEngine::new(&store, fed, &train);
         let hist = engine.run(&train, Some(&eval), |_| {})?;

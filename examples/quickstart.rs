@@ -43,6 +43,7 @@ fn main() -> Result<()> {
         eval_limit: Some(96),
         eval_every: 1,
         selection: Selection::Uniform,
+        wire: sfprompt::transport::WireFormat::F32,
     };
 
     let mut engine = SfPromptEngine::new(&store, fed, &train);

@@ -28,6 +28,7 @@ fn fed(rounds: usize) -> FedConfig {
         eval_limit: None,
         eval_every: usize::MAX,
         selection: Selection::Uniform,
+        wire: sfprompt::transport::WireFormat::F32,
     }
 }
 

@@ -1,0 +1,77 @@
+//! Transport codec benchmarks: encode/decode throughput per wire format,
+//! at the two payload shapes that dominate real traffic — a per-batch
+//! activation tensor (SmashedData) and a multi-tensor model segment list
+//! (Upload). Needs no artifacts: payloads are synthesised.
+//!
+//!     cargo bench --bench transport
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{throughput, Bench};
+use sfprompt::comm::MsgKind;
+use sfprompt::model::SegmentParams;
+use sfprompt::runtime::HostTensor;
+use sfprompt::transport::{
+    decode_frame, encode_frame, Frame, LoopbackLink, Payload, Transport, WireFormat,
+};
+use sfprompt::util::rng::Rng;
+
+fn activation_frame(rng: &mut Rng) -> Frame {
+    // ViT-Base-ish smashed batch: 8 x 197 x 768 f32.
+    let n = 8 * 197 * 768;
+    let t = HostTensor::f32(vec![8, 197, 768], (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+    Frame::new(MsgKind::SmashedData, 0, 0, Payload::Tensor(t))
+}
+
+fn upload_frame(rng: &mut Rng) -> Frame {
+    // A tail+prompt-style upload: a dozen mixed-size tensors.
+    let segs = ["tail", "prompt"]
+        .iter()
+        .map(|name| SegmentParams {
+            segment: name.to_string(),
+            tensors: (0..6)
+                .map(|i| {
+                    let n = 1 << (8 + i);
+                    HostTensor::f32(vec![n], (0..n).map(|_| rng.normal_f32(0.0, 0.2)).collect())
+                })
+                .collect(),
+        })
+        .collect();
+    Frame::new(MsgKind::Upload, 0, 0, Payload::Segments(segs))
+}
+
+fn main() {
+    let mut rng = Rng::new(99);
+    let frames = [("activation", activation_frame(&mut rng)), ("upload", upload_frame(&mut rng))];
+
+    for (label, frame) in &frames {
+        for wire in [WireFormat::F32, WireFormat::F16, WireFormat::Int8] {
+            let encoded = encode_frame(frame, wire).unwrap();
+            let mb = encoded.len() as f64 / 1e6;
+
+            let rep = Bench::new(&format!("transport/encode/{label}/{}", wire.label()))
+                .run(|| {
+                    let bytes = encode_frame(frame, wire).unwrap();
+                    assert_eq!(bytes.len(), encoded.len());
+                });
+            throughput(&rep, "MB", mb);
+
+            let rep = Bench::new(&format!("transport/decode/{label}/{}", wire.label()))
+                .run(|| {
+                    let back = decode_frame(&encoded).unwrap();
+                    assert_eq!(back.kind, frame.kind);
+                });
+            throughput(&rep, "MB", mb);
+
+            let rep = Bench::new(&format!("transport/loopback/{label}/{}", wire.label()))
+                .run(|| {
+                    let mut link = LoopbackLink::new();
+                    let n = link.send(frame, wire).unwrap();
+                    let (_, m) = link.recv().unwrap();
+                    assert_eq!(n, m);
+                });
+            throughput(&rep, "MB", mb);
+        }
+    }
+}

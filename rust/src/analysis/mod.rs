@@ -137,6 +137,37 @@ pub fn fl_crossover_w_bytes(p: &CostParams) -> f64 {
     2.0 * p.q_bytes * p.gamma * p.d_samples / (p.alpha + p.tau)
 }
 
+/// One point of the closed-form sweep (the `analyze` subcommand).
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRow {
+    pub w_mb: f64,
+    pub local_epochs: f64,
+    pub fl: RoundCost,
+    pub sfl: RoundCost,
+    pub sfprompt: RoundCost,
+}
+
+/// Sweep the closed-form cost model over model scale and local epochs:
+/// |W| log-spaced from 10 MB to 10 GB (quarter-decade steps), at
+/// U ∈ {1, 5, 10, 20}. All other parameters come from `base`.
+pub fn sweep(base: &CostParams) -> Vec<SweepRow> {
+    let mut rows = Vec::new();
+    for &u in &[1.0, 5.0, 10.0, 20.0] {
+        for i in 0..=12 {
+            let w_bytes = 10e6 * 10f64.powf(i as f64 / 4.0);
+            let p = CostParams { w_bytes, local_epochs: u, ..*base };
+            rows.push(SweepRow {
+                w_mb: w_bytes / 1e6,
+                local_epochs: u,
+                fl: fl(&p),
+                sfl: sfl(&p),
+                sfprompt: sfprompt(&p),
+            });
+        }
+    }
+    rows
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,5 +217,24 @@ mod tests {
         let p = CostParams::default();
         assert!(sfl(&p).compute_client < fl(&p).compute_client / 2.0);
         assert!(sfprompt(&p).compute_client < fl(&p).compute_client / 2.0);
+    }
+
+    #[test]
+    fn sweep_covers_the_grid_and_respects_the_crossover() {
+        let base = CostParams::default();
+        let rows = sweep(&base);
+        assert_eq!(rows.len(), 4 * 13);
+        assert!((rows[0].w_mb - 10.0).abs() < 1e-9);
+        assert!((rows[12].w_mb - 10_000.0).abs() < 1e-6);
+        // Deep into the large-model regime SFPrompt must beat FL on comm.
+        let big = rows.iter().find(|r| r.w_mb > 5000.0 && r.local_epochs == 10.0).unwrap();
+        assert!(big.sfprompt.comm_bytes < big.fl.comm_bytes);
+        // All costs stay finite and non-negative across the grid.
+        for r in &rows {
+            for c in [r.fl, r.sfl, r.sfprompt] {
+                assert!(c.comm_bytes.is_finite() && c.comm_bytes >= 0.0);
+                assert!(c.latency_s.is_finite() && c.latency_s >= 0.0);
+            }
+        }
     }
 }

@@ -28,6 +28,9 @@ pub enum MsgKind {
     AggregateBroadcast,
     /// Full model in either direction (FL baseline).
     FullModel,
+    /// Client -> server: the client failed mid-round (control frame, no
+    /// payload); the server tears the round down instead of deadlocking.
+    Abort,
 }
 
 impl MsgKind {
@@ -41,7 +44,38 @@ impl MsgKind {
             MsgKind::Upload => "upload",
             MsgKind::AggregateBroadcast => "aggregate_broadcast",
             MsgKind::FullModel => "full_model",
+            MsgKind::Abort => "abort",
         }
+    }
+
+    /// Wire code stamped into transport frame headers (docs/WIRE.md).
+    pub fn code(&self) -> u8 {
+        match self {
+            MsgKind::ModelDistribution => 0,
+            MsgKind::SmashedData => 1,
+            MsgKind::BodyOutput => 2,
+            MsgKind::GradBodyOut => 3,
+            MsgKind::GradSmashed => 4,
+            MsgKind::Upload => 5,
+            MsgKind::AggregateBroadcast => 6,
+            MsgKind::FullModel => 7,
+            MsgKind::Abort => 8,
+        }
+    }
+
+    pub fn from_code(code: u8) -> anyhow::Result<MsgKind> {
+        Ok(match code {
+            0 => MsgKind::ModelDistribution,
+            1 => MsgKind::SmashedData,
+            2 => MsgKind::BodyOutput,
+            3 => MsgKind::GradBodyOut,
+            4 => MsgKind::GradSmashed,
+            5 => MsgKind::Upload,
+            6 => MsgKind::AggregateBroadcast,
+            7 => MsgKind::FullModel,
+            8 => MsgKind::Abort,
+            other => anyhow::bail!("unknown message kind code {other}"),
+        })
     }
 }
 
@@ -66,8 +100,23 @@ impl NetworkModel {
         self.rate_bytes_per_s / self.sharing_clients.max(1) as f64
     }
 
+    /// Transfer time for `bytes` under the shared-rate model. A zero or
+    /// negative configured rate is a caller bug (it would silently yield
+    /// `inf`/negative latency): debug builds assert, release builds clamp
+    /// the rate to a tiny positive floor so latency stays finite and
+    /// non-negative.
     pub fn transfer_time_s(&self, bytes: usize) -> f64 {
-        bytes as f64 / self.effective_rate()
+        let rate = self.effective_rate();
+        debug_assert!(
+            rate > 0.0 && rate.is_finite(),
+            "NetworkModel rate must be positive and finite, got {rate} \
+             (rate_bytes_per_s={}, sharing_clients={})",
+            self.rate_bytes_per_s,
+            self.sharing_clients
+        );
+        // Floor well above the subnormal range: dividing by
+        // f64::MIN_POSITIVE would overflow straight back to `inf`.
+        bytes as f64 / rate.max(1e-300)
     }
 }
 
@@ -116,30 +165,6 @@ impl ByteMeter {
     }
 }
 
-/// A simulated duplex link between the server and one client. Owns a meter
-/// and a logical clock so per-client latency can be reported.
-#[derive(Debug, Default)]
-pub struct SimLink {
-    pub meter: ByteMeter,
-    pub elapsed_s: f64,
-}
-
-impl SimLink {
-    /// Transmit `bytes`; returns the transfer time under `net`.
-    pub fn send(
-        &mut self,
-        net: &NetworkModel,
-        kind: MsgKind,
-        dir: Direction,
-        bytes: usize,
-    ) -> f64 {
-        self.meter.record(kind, dir, bytes);
-        let t = net.transfer_time_s(bytes);
-        self.elapsed_s += t;
-        t
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,11 +195,44 @@ mod tests {
     }
 
     #[test]
-    fn link_clock_advances_with_rate_sharing() {
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "rate must be positive")]
+    fn zero_rate_asserts_in_debug() {
+        let net = NetworkModel { rate_bytes_per_s: 0.0, sharing_clients: 1 };
+        let _ = net.transfer_time_s(100);
+    }
+
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn zero_rate_clamps_in_release() {
+        for rate in [0.0, -5.0] {
+            let net = NetworkModel { rate_bytes_per_s: rate, sharing_clients: 1 };
+            let t = net.transfer_time_s(100);
+            assert!(t.is_finite() && t >= 0.0, "rate {rate} -> {t}");
+        }
+    }
+
+    #[test]
+    fn msg_kind_codes_roundtrip() {
+        for kind in [
+            MsgKind::ModelDistribution,
+            MsgKind::SmashedData,
+            MsgKind::BodyOutput,
+            MsgKind::GradBodyOut,
+            MsgKind::GradSmashed,
+            MsgKind::Upload,
+            MsgKind::AggregateBroadcast,
+            MsgKind::FullModel,
+            MsgKind::Abort,
+        ] {
+            assert_eq!(MsgKind::from_code(kind.code()).unwrap(), kind);
+        }
+        assert!(MsgKind::from_code(200).is_err());
+    }
+
+    #[test]
+    fn transfer_time_respects_rate_sharing() {
         let net = NetworkModel { rate_bytes_per_s: 1000.0, sharing_clients: 4 };
-        let mut link = SimLink::default();
-        let t = link.send(&net, MsgKind::SmashedData, Direction::Uplink, 500);
-        assert!((t - 2.0).abs() < 1e-9); // 500 / (1000/4)
-        assert!((link.elapsed_s - 2.0).abs() < 1e-9);
+        assert!((net.transfer_time_s(500) - 2.0).abs() < 1e-9); // 500 / (1000/4)
     }
 }

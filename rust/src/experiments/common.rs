@@ -43,6 +43,7 @@ impl TrainSpec {
                 eval_limit: Some(160),
                 eval_every: 1,
                 selection: Selection::Uniform,
+                wire: crate::transport::WireFormat::F32,
             },
             samples_per_client: 32,
             eval_samples: 160,

@@ -9,6 +9,7 @@ pub mod fig7;
 pub mod table1;
 pub mod table2;
 pub mod table3;
+pub mod wire;
 
 use std::path::Path;
 
@@ -57,14 +58,17 @@ pub fn run(id: &str, artifacts: &Path, opts: &ExpOptions) -> Result<()> {
         "fig5" => fig5::run(artifacts, opts),
         "fig6" => fig6::run(artifacts, opts),
         "fig7" => fig7::run(artifacts, opts),
+        "wire" => wire::run(artifacts, opts),
         "all" => {
-            for id in ["table1", "fig2", "table2", "fig4", "fig5", "fig6", "fig7", "table3"] {
+            for id in
+                ["table1", "fig2", "wire", "table2", "fig4", "fig5", "fig6", "fig7", "table3"]
+            {
                 println!("==== experiment {id} ====");
                 run(id, artifacts, opts)?;
             }
             Ok(())
         }
         other => anyhow::bail!("unknown experiment id {other:?} \
-            (known: fig2 fig4 fig5 fig6 fig7 table1 table2 table3 all)"),
+            (known: fig2 fig4 fig5 fig6 fig7 table1 table2 table3 wire all)"),
     }
 }

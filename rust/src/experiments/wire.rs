@@ -1,0 +1,141 @@
+//! Wire table — analytic vs measured vs quantized bytes per message kind.
+//!
+//! Three numbers per protocol message, cross-checked:
+//! 1. the manifest's **analytic** size (`cost.message_bytes`, what the seed
+//!    used to meter), 2. the **measured** f32 frame length from the real
+//!    codec (analytic + framing overhead: length prefix, header, per-tensor
+//!    shape tags, segment names, CRC), and 3. the **quantized** f16/int8
+//!    frame lengths, with the int8 reconstruction error alongside so the
+//!    accuracy/bytes trade-off is visible in one table.
+//!
+//! The engines compress only uplink payloads (`SmashedData`,
+//! `GradBodyOut`, `Upload`); the table still encodes every kind under all
+//! three formats so downlink compression can be judged before it is wired.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::MsgKind;
+use crate::model::init_params;
+use crate::runtime::{HostTensor, Manifest};
+use crate::transport::{encode_frame, Frame, Payload, WireFormat};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+
+use super::ExpOptions;
+
+/// Max |a−b| between a payload and its decoded reconstruction.
+fn max_abs_err(a: &Payload, b: &Payload) -> f64 {
+    let tensors = |p: &Payload| -> Vec<HostTensor> {
+        match p {
+            Payload::Tensor(t) => vec![t.clone()],
+            Payload::Segments(segs) => {
+                segs.iter().flat_map(|s| s.tensors.iter().cloned()).collect()
+            }
+            Payload::Empty => Vec::new(),
+        }
+    };
+    let (ta, tb) = (tensors(a), tensors(b));
+    ta.iter()
+        .zip(&tb)
+        .flat_map(|(x, y)| x.as_f32().iter().zip(y.as_f32()).map(|(u, v)| (u - v).abs() as f64))
+        .fold(0.0, f64::max)
+}
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    let man = ["small", "tiny"]
+        .iter()
+        .find_map(|c| Manifest::load(&artifacts.join(c)).ok())
+        .ok_or_else(|| {
+            anyhow!("wire experiment needs the `small` or `tiny` artifacts (run `make artifacts`)")
+        })?;
+    let cfg = man.config.clone();
+    let params = init_params(&man, opts.seed);
+    let tail = params.get("tail")?.clone();
+    let prompt = params.get("prompt")?.clone();
+    let head = params.get("head")?.clone();
+    let body = params.get("body")?.clone();
+
+    let mut rng = Rng::new(opts.seed ^ 0x5157);
+    let n = cfg.batch * cfg.seq_len * cfg.dim;
+    let smashed = HostTensor::f32(
+        vec![cfg.batch, cfg.seq_len, cfg.dim],
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+    );
+
+    let mb = &man.cost.message_bytes;
+    let act_b = mb["smashed_per_batch"];
+    let model_b = mb["tail_params"] + mb["prompt_params"];
+    let rows: Vec<(MsgKind, Payload, usize)> = vec![
+        (
+            MsgKind::ModelDistribution,
+            Payload::Segments(vec![tail.clone(), prompt.clone()]),
+            model_b,
+        ),
+        (MsgKind::SmashedData, Payload::Tensor(smashed.clone()), act_b),
+        (MsgKind::BodyOutput, Payload::Tensor(smashed.clone()), act_b),
+        (MsgKind::GradBodyOut, Payload::Tensor(smashed.clone()), act_b),
+        (MsgKind::GradSmashed, Payload::Tensor(smashed), act_b),
+        (MsgKind::Upload, Payload::Segments(vec![tail.clone(), prompt]), model_b),
+        (
+            MsgKind::FullModel,
+            Payload::Segments(vec![head, body, tail]),
+            mb["full_model"],
+        ),
+    ];
+
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("wire.csv"),
+        &[
+            "kind", "analytic_bytes", "f32_bytes", "framing_overhead_pct", "f16_bytes",
+            "int8_bytes", "int8_reduction_pct", "int8_max_abs_err",
+        ],
+    )?;
+
+    println!("wire codec on config `{}` (batch={}, seq={}, dim={}):", cfg.name, cfg.batch,
+             cfg.seq_len, cfg.dim);
+    println!(
+        "{:<20} {:>12} {:>12} {:>9} {:>12} {:>12} {:>9} {:>11}",
+        "kind", "analytic B", "f32 B", "frame %", "f16 B", "int8 B", "int8 -%", "int8 err"
+    );
+    let mut uplink_f32 = 0usize;
+    let mut uplink_int8 = 0usize;
+    for (kind, payload, analytic) in rows {
+        let frame = Frame::new(kind, 0, 0, payload);
+        let f32_b = encode_frame(&frame, WireFormat::F32)?.len();
+        let f16_b = encode_frame(&frame, WireFormat::F16)?.len();
+        let int8_bytes = encode_frame(&frame, WireFormat::Int8)?;
+        let int8_b = int8_bytes.len();
+        let decoded = crate::transport::decode_frame(&int8_bytes)?;
+        let err = max_abs_err(&frame.payload, &decoded.payload);
+        let overhead = 100.0 * (f32_b as f64 - analytic as f64) / analytic.max(1) as f64;
+        let reduction = 100.0 * (1.0 - int8_b as f64 / f32_b as f64);
+        if matches!(kind, MsgKind::SmashedData | MsgKind::GradBodyOut | MsgKind::Upload) {
+            uplink_f32 += f32_b;
+            uplink_int8 += int8_b;
+        }
+        println!(
+            "{:<20} {:>12} {:>12} {:>8.2}% {:>12} {:>12} {:>8.1}% {:>11.2e}",
+            kind.label(), analytic, f32_b, overhead, f16_b, int8_b, reduction, err
+        );
+        w.row(&[
+            kind.label().into(),
+            analytic.to_string(),
+            f32_b.to_string(),
+            format!("{overhead:.3}"),
+            f16_b.to_string(),
+            int8_b.to_string(),
+            format!("{reduction:.2}"),
+            format!("{err:.3e}"),
+        ])?;
+    }
+    let uplink_reduction = 100.0 * (1.0 - uplink_int8 as f64 / uplink_f32.max(1) as f64);
+    println!(
+        "\nuplink payloads (smashed + cut-grad + upload): f32 {uplink_f32} B -> int8 \
+         {uplink_int8} B ({uplink_reduction:.1}% reduction)"
+    );
+    println!("engines compress uplink only; run `sfprompt train --wire int8` to measure \
+              the accuracy side of the trade-off");
+    Ok(())
+}

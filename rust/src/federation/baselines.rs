@@ -10,18 +10,24 @@
 //! * **SFL+Linear** — SplitFed tuning only the classifier: activations
 //!   still cross the cut layer every epoch (no gradient return needed
 //!   since head and body are frozen).
+//!
+//! Like the SFPrompt engine, every message is serialised through the
+//! `transport` codec over a channel pair (here driven synchronously — the
+//! engine plays both endpoints), so `ByteMeter` records encoded frame
+//! lengths and SFL's uplink payloads honour `FedConfig::wire`.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel, SimLink};
+use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel};
 use crate::data::{batch_indices, make_batch, SynthDataset};
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{fedavg_multi, init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
 use crate::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+use crate::transport::{channel_pair, Frame, Payload, Transport, WireFormat};
 use crate::util::rng::Rng;
 
 use super::client::Client;
@@ -44,6 +50,21 @@ fn run_stage(
     tensors: &TensorInputs,
 ) -> Result<crate::runtime::StageOutputs> {
     Executor::run(store, stage, segs, tensors)
+}
+
+/// Pop a segments payload of exactly `names.len()` entries, validating the
+/// protocol order; returns the segments in `names` order.
+fn take_segments(payload: Payload, names: &[&str]) -> Result<Vec<SegmentParams>> {
+    let segs = payload.into_segments()?;
+    if segs.len() != names.len() {
+        bail!("expected {} segments, got {}", names.len(), segs.len());
+    }
+    for (s, want) in segs.iter().zip(names) {
+        if s.segment != *want {
+            bail!("expected segment {want:?}, got {:?}", s.segment);
+        }
+    }
+    Ok(segs)
 }
 
 impl<'a> BaselineEngine<'a> {
@@ -105,7 +126,8 @@ impl<'a> BaselineEngine<'a> {
         }
     }
 
-    /// FL: full-model exchange + local full fine-tuning.
+    /// FL: full-model exchange + local full fine-tuning. FL has no split
+    /// uplink payloads, so both directions stay at f32.
     fn round_fl(
         &mut self,
         round: usize,
@@ -114,8 +136,8 @@ impl<'a> BaselineEngine<'a> {
     ) -> Result<RoundRecord> {
         let wall0 = Instant::now();
         let cfg = self.store.manifest.config.clone();
-        let full_b = self.store.manifest.cost.message_bytes["full_model"];
         let lr_t = HostTensor::scalar_f32(self.fed.lr);
+        let r32 = round as u32;
 
         let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
         let selected = super::selection::select(
@@ -128,11 +150,25 @@ impl<'a> BaselineEngine<'a> {
         let mut latencies = Vec::new();
 
         for &cid in &selected {
-            let mut link = SimLink::default();
-            link.send(&self.net, MsgKind::FullModel, Direction::Downlink, full_b);
-            let mut head = self.global.get("head")?.clone();
-            let mut body = self.global.get("body")?.clone();
-            let mut tail = self.global.get("tail")?.clone();
+            let (mut s_end, mut c_end) = channel_pair();
+            let mut link_s = 0.0f64;
+
+            // --- Downlink: the full model, over the wire. ---
+            let payload = Payload::Segments(vec![
+                self.global.get("head")?.clone(),
+                self.global.get("body")?.clone(),
+                self.global.get("tail")?.clone(),
+            ]);
+            let n = s_end
+                .send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
+            comm.record(MsgKind::FullModel, Direction::Downlink, n);
+            link_s += self.net.transfer_time_s(n);
+            let (frame, _) = c_end.recv()?;
+            let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
+            let mut tail = segs.pop().expect("tail");
+            let mut body = segs.pop().expect("body");
+            let mut head = segs.pop().expect("head");
+
             let client = &mut self.clients[cid];
             let n_k = client.num_samples();
 
@@ -158,9 +194,19 @@ impl<'a> BaselineEngine<'a> {
                     tail = out.take_segment("tail")?;
                 }
             }
-            link.send(&self.net, MsgKind::FullModel, Direction::Uplink, full_b);
-            comm.merge(&link.meter);
-            latencies.push(link.elapsed_s);
+
+            // --- Uplink: the updated full model. ---
+            let payload = Payload::Segments(vec![head, body, tail]);
+            c_end.send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
+            let (frame, n) = s_end.recv()?;
+            comm.record(MsgKind::FullModel, Direction::Uplink, n);
+            link_s += self.net.transfer_time_s(n);
+            let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
+            let tail = segs.pop().expect("tail");
+            let body = segs.pop().expect("body");
+            let head = segs.pop().expect("head");
+
+            latencies.push(link_s);
             updates.push((vec![head, body, tail], n_k));
         }
 
@@ -183,6 +229,8 @@ impl<'a> BaselineEngine<'a> {
     }
 
     /// SFL (+FF or +Linear): split training every batch of every epoch.
+    /// Uplink payloads (smashed, cut-layer gradients, the client-model
+    /// upload) honour `FedConfig::wire`; downlink stays f32.
     fn round_sfl(
         &mut self,
         round: usize,
@@ -191,12 +239,11 @@ impl<'a> BaselineEngine<'a> {
     ) -> Result<RoundRecord> {
         let wall0 = Instant::now();
         let cfg = self.store.manifest.config.clone();
-        let mb = &self.store.manifest.cost.message_bytes;
-        let smashed_b = mb["smashed_per_batch_noprompt"];
-        let client_model_b = mb["head_params"] + mb["tail_params"];
         let lr_t = HostTensor::scalar_f32(self.fed.lr);
         let full_ft = self.method == Method::SflFullFinetune;
         let tail_stage = if full_ft { "tail_step_noprompt" } else { "tail_step_linear" };
+        let wire = self.fed.wire;
+        let r32 = round as u32;
 
         let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
         let selected = super::selection::select(
@@ -209,12 +256,25 @@ impl<'a> BaselineEngine<'a> {
         let mut latencies = Vec::new();
 
         for &cid in &selected {
-            let mut link = SimLink::default();
+            let (mut s_end, mut c_end) = channel_pair();
+            let mut link_s = 0.0f64;
+
             // SFL distributes the client model (head+tail) each round.
-            link.send(&self.net, MsgKind::ModelDistribution, Direction::Downlink,
-                      client_model_b);
-            let mut head = self.global.get("head")?.clone();
-            let mut tail = self.global.get("tail")?.clone();
+            let payload = Payload::Segments(vec![
+                self.global.get("head")?.clone(),
+                self.global.get("tail")?.clone(),
+            ]);
+            let n = s_end.send(
+                &Frame::new(MsgKind::ModelDistribution, r32, cid as u32, payload),
+                WireFormat::F32,
+            )?;
+            comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
+            link_s += self.net.transfer_time_s(n);
+            let (frame, _) = c_end.recv()?;
+            let mut segs = take_segments(frame.payload, &["head", "tail"])?;
+            let mut tail = segs.pop().expect("tail");
+            let mut head = segs.pop().expect("head");
+
             let client = &mut self.clients[cid];
             let n_k = client.num_samples();
 
@@ -225,7 +285,7 @@ impl<'a> BaselineEngine<'a> {
                     let batch = make_batch(
                         &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
                     );
-                    // client: head forward
+                    // client: head forward; ship smashed data uplink.
                     let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
                     segs.insert("head", &head);
                     let mut tensors: TensorInputs = BTreeMap::new();
@@ -233,20 +293,34 @@ impl<'a> BaselineEngine<'a> {
                     let mut out =
                         run_stage(self.store, "head_forward_noprompt", &segs, &tensors)?;
                     let smashed = out.tensors.remove("smashed").expect("smashed");
-                    link.send(&self.net, MsgKind::SmashedData, Direction::Uplink, smashed_b);
+                    c_end.send(
+                        &Frame::new(MsgKind::SmashedData, r32, cid as u32, Payload::Tensor(smashed)),
+                        wire,
+                    )?;
+                    let (frame, n) = s_end.recv()?;
+                    comm.record(MsgKind::SmashedData, Direction::Uplink, n);
+                    link_s += self.net.transfer_time_s(n);
+                    let server_smashed = frame.payload.into_tensor()?;
 
-                    // server: body forward
+                    // server: body forward; ship activations downlink.
                     let body = self.global.get("body")?;
                     let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
                     segs.insert("body", body);
                     let mut tensors: TensorInputs = BTreeMap::new();
-                    tensors.insert("smashed", &smashed);
+                    tensors.insert("smashed", &server_smashed);
                     let mut out =
                         run_stage(self.store, "body_forward_noprompt", &segs, &tensors)?;
                     let body_out = out.tensors.remove("body_out").expect("body_out");
-                    link.send(&self.net, MsgKind::BodyOutput, Direction::Downlink, smashed_b);
+                    let n = s_end.send(
+                        &Frame::new(MsgKind::BodyOutput, r32, cid as u32, Payload::Tensor(body_out)),
+                        WireFormat::F32,
+                    )?;
+                    comm.record(MsgKind::BodyOutput, Direction::Downlink, n);
+                    link_s += self.net.transfer_time_s(n);
+                    let (frame, _) = c_end.recv()?;
+                    let body_out = frame.payload.into_tensor()?;
 
-                    // client: tail step
+                    // client: tail step.
                     let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
                     segs.insert("tail", &tail);
                     let mut tensors: TensorInputs = BTreeMap::new();
@@ -260,15 +334,23 @@ impl<'a> BaselineEngine<'a> {
                     if full_ft {
                         let g_body_out =
                             out.tensors.remove("g_body_out").expect("g_body_out");
-                        link.send(&self.net, MsgKind::GradBodyOut, Direction::Uplink,
-                                  smashed_b);
+                        c_end.send(
+                            &Frame::new(
+                                MsgKind::GradBodyOut, r32, cid as u32, Payload::Tensor(g_body_out),
+                            ),
+                            wire,
+                        )?;
+                        let (frame, n) = s_end.recv()?;
+                        comm.record(MsgKind::GradBodyOut, Direction::Uplink, n);
+                        link_s += self.net.transfer_time_s(n);
+                        let g_body_out = frame.payload.into_tensor()?;
 
-                        // server: body backward + body update
+                        // server: body backward + body update.
                         let body = self.global.get("body")?;
                         let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
                         segs.insert("body", body);
                         let mut tensors: TensorInputs = BTreeMap::new();
-                        tensors.insert("smashed", &smashed);
+                        tensors.insert("smashed", &server_smashed);
                         tensors.insert("g_body_out", &g_body_out);
                         tensors.insert("lr", &lr_t);
                         let mut out =
@@ -276,10 +358,18 @@ impl<'a> BaselineEngine<'a> {
                         let new_body = out.take_segment("body")?;
                         let g_smashed = out.tensors.remove("g_smashed").expect("g_smashed");
                         self.global.set(new_body);
-                        link.send(&self.net, MsgKind::GradSmashed, Direction::Downlink,
-                                  smashed_b);
+                        let n = s_end.send(
+                            &Frame::new(
+                                MsgKind::GradSmashed, r32, cid as u32, Payload::Tensor(g_smashed),
+                            ),
+                            WireFormat::F32,
+                        )?;
+                        comm.record(MsgKind::GradSmashed, Direction::Downlink, n);
+                        link_s += self.net.transfer_time_s(n);
+                        let (frame, _) = c_end.recv()?;
+                        let g_smashed = frame.payload.into_tensor()?;
 
-                        // client: head update
+                        // client: head update.
                         let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
                         segs.insert("head", &head);
                         let mut tensors: TensorInputs = BTreeMap::new();
@@ -291,9 +381,18 @@ impl<'a> BaselineEngine<'a> {
                     }
                 }
             }
-            link.send(&self.net, MsgKind::Upload, Direction::Uplink, client_model_b);
-            comm.merge(&link.meter);
-            latencies.push(link.elapsed_s);
+
+            // --- Uplink: the client model, for aggregation. ---
+            let payload = Payload::Segments(vec![head, tail]);
+            c_end.send(&Frame::new(MsgKind::Upload, r32, cid as u32, payload), wire)?;
+            let (frame, n) = s_end.recv()?;
+            comm.record(MsgKind::Upload, Direction::Uplink, n);
+            link_s += self.net.transfer_time_s(n);
+            let mut segs = take_segments(frame.payload, &["head", "tail"])?;
+            let tail = segs.pop().expect("tail");
+            let head = segs.pop().expect("head");
+
+            latencies.push(link_s);
             updates.push((vec![head, tail], n_k));
         }
 

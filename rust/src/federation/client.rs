@@ -1,13 +1,24 @@
 //! Client-side state machine: Phase 1 (self-update) + Phase 2 client half.
+//!
+//! [`client_split_round`] is the wire-level driver: it speaks the full
+//! per-round protocol (model distribution → local phase → split batches →
+//! upload → broadcast) over a [`Transport`], so it can run on its own
+//! thread against the server hub — or against a loopback link in tests.
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use crate::comm::MsgKind;
 use crate::data::{batch_indices, make_batch, Example};
 use crate::model::SegmentParams;
-use crate::runtime::{ArtifactStore, Executor, HostTensor, SegInput, SegmentInputs, TensorInputs};
+use crate::runtime::{
+    ArtifactStore, Executor, HostTensor, ModelConfig, SegInput, SegmentInputs, TensorInputs,
+};
+use crate::transport::{Frame, Payload, Transport};
 use crate::util::rng::Rng;
+
+use super::FedConfig;
 
 /// A client: its local data partition and RNG stream. Model state (tail,
 /// prompt) is delivered fresh each round by the server, per Algorithm 2.
@@ -193,4 +204,109 @@ impl Client {
         let mut out = Executor::run_mixed(store, "prompt_grad", &segs, &tensors)?;
         out.take_segment("prompt")
     }
+}
+
+/// Losses a client reports back from one wire-driven round.
+pub struct ClientRoundOutcome {
+    pub local_losses: Vec<f64>,
+    pub split_losses: Vec<f64>,
+}
+
+fn expect_kind(frame: &Frame, want: MsgKind, cid: u32) -> Result<()> {
+    if frame.kind != want {
+        bail!("client {cid}: expected {:?}, got {:?}", want, frame.kind);
+    }
+    Ok(())
+}
+
+/// Run one full SFPrompt round on the client side of a [`Transport`].
+///
+/// Protocol (client view): recv `ModelDistribution{tail, prompt}` → Phase 1
+/// (local-loss epochs + EL2N pruning, network-free) → per pruned batch:
+/// send `SmashedData`, recv `BodyOutput`, send `GradBodyOut`, recv
+/// `GradSmashed` → send `Upload{tail, prompt}` → recv
+/// `AggregateBroadcast`. Uplink payloads are encoded under `fed.wire`, so
+/// quantization loss feeds back into training exactly as it would on a
+/// real link.
+pub fn client_split_round(
+    client: &mut Client,
+    store: &ArtifactStore,
+    examples: &[Example],
+    head_lits: &[xla::Literal],
+    fed: &FedConfig,
+    cfg: &ModelConfig,
+    round: u32,
+    link: &mut impl Transport,
+) -> Result<ClientRoundOutcome> {
+    let cid = client.id as u32;
+    let wire = fed.wire;
+
+    // --- Round start: receive the aggregated (W_t, p). ---
+    let (frame, _) = link.recv()?;
+    expect_kind(&frame, MsgKind::ModelDistribution, cid)?;
+    let mut segs = frame.payload.into_segments()?;
+    if segs.len() != 2 || segs[0].segment != "tail" || segs[1].segment != "prompt" {
+        bail!(
+            "client {cid}: malformed model distribution ({:?})",
+            segs.iter().map(|s| s.segment.as_str()).collect::<Vec<_>>()
+        );
+    }
+    let mut prompt = segs.pop().expect("prompt");
+    let mut tail = segs.pop().expect("tail");
+
+    let mut local_losses = Vec::new();
+    let mut split_losses = Vec::new();
+
+    // --- Phase 1a: local-loss update (network-free). ---
+    if fed.local_loss_update {
+        let upd = client.local_loss_update(
+            store, examples, head_lits, tail, prompt, fed.local_epochs, fed.lr,
+        )?;
+        local_losses.push(upd.mean_loss);
+        tail = upd.tail;
+        prompt = upd.prompt;
+    }
+
+    // --- Phase 1b: EL2N pruning. ---
+    let pruned =
+        client.prune_dataset(store, examples, head_lits, &tail, &prompt, fed.retain_fraction)?;
+
+    // --- Phase 2: split training over the pruned set. ---
+    for chunk in batch_indices(&pruned, cfg.batch) {
+        let batch = make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
+        let smashed = client.head_forward(store, &batch.images, head_lits, &prompt)?;
+        link.send(
+            &Frame::new(MsgKind::SmashedData, round, cid, Payload::Tensor(smashed)),
+            wire,
+        )?;
+
+        let (frame, _) = link.recv()?;
+        expect_kind(&frame, MsgKind::BodyOutput, cid)?;
+        let body_out = frame.payload.into_tensor()?;
+
+        let (loss, new_tail, g_body_out) =
+            client.tail_step(store, &body_out, &batch.labels, &tail, fed.lr)?;
+        split_losses.push(loss as f64);
+        tail = new_tail;
+        link.send(
+            &Frame::new(MsgKind::GradBodyOut, round, cid, Payload::Tensor(g_body_out)),
+            wire,
+        )?;
+
+        let (frame, _) = link.recv()?;
+        expect_kind(&frame, MsgKind::GradSmashed, cid)?;
+        let g_smashed = frame.payload.into_tensor()?;
+        prompt =
+            client.prompt_update(store, &batch.images, &g_smashed, head_lits, &prompt, fed.lr)?;
+    }
+
+    // --- Phase 3: upload for aggregation, wait for the broadcast. ---
+    link.send(
+        &Frame::new(MsgKind::Upload, round, cid, Payload::Segments(vec![tail, prompt])),
+        wire,
+    )?;
+    let (frame, _) = link.recv()?;
+    expect_kind(&frame, MsgKind::AggregateBroadcast, cid)?;
+
+    Ok(ClientRoundOutcome { local_losses, split_losses })
 }

@@ -8,25 +8,28 @@
 //!      smashed ↑, body-out ↓, cut-grad ↑, smashed-grad ↓ per batch  [net]
 //!   3. Phase 3: upload (W_t, p); FedAvg; broadcast                  [net]
 //!
-//! All traffic flows through `comm::SimLink`s with exact byte accounting;
-//! latency uses the shared-rate model of §3.5. Client compute is
-//! sequential on this process (one CPU), but the simulated clock charges
-//! parallel client time as the max over clients, matching the paper's
-//! analysis.
+//! Every message is serialised through the `transport` codec and moved
+//! over a channel link: `ByteMeter` records **encoded frame lengths**, not
+//! manifest estimates, and uplink payloads honour `FedConfig::wire`
+//! (f32/f16/int8). Each selected client runs on its own thread against the
+//! server [`Hub`], so Phase-2 split training is genuinely concurrent; the
+//! simulated clock still charges the shared-rate model of §3.5, with round
+//! latency = max over per-client link clocks.
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel, SimLink};
-use crate::data::{batch_indices, make_batch, SynthDataset};
+use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel};
+use crate::data::SynthDataset;
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
-use crate::runtime::ArtifactStore;
+use crate::runtime::{ArtifactStore, HostTensor};
+use crate::transport::{Frame, Hub, Payload, WireFormat};
 use crate::util::rng::Rng;
 
-use super::client::Client;
+use super::client::{client_split_round, Client, ClientRoundOutcome};
 use super::server::Server;
 use super::FedConfig;
 
@@ -75,11 +78,6 @@ impl<'a> SfPromptEngine<'a> {
         }
     }
 
-    fn msg_sizes(&self) -> (usize, usize, usize) {
-        let mb = &self.store.manifest.cost.message_bytes;
-        (mb["tail_params"], mb["prompt_params"], mb["smashed_per_batch"])
-    }
-
     /// Run one global round; returns its metrics record.
     pub fn run_round(
         &mut self,
@@ -88,7 +86,6 @@ impl<'a> SfPromptEngine<'a> {
         eval: Option<&SynthDataset>,
     ) -> Result<RoundRecord> {
         let wall0 = Instant::now();
-        let (tail_b, prompt_b, smashed_b) = self.msg_sizes();
         let cfg = self.store.manifest.config.clone();
 
         let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
@@ -96,84 +93,130 @@ impl<'a> SfPromptEngine<'a> {
             self.fed.selection, self.fed.num_clients, self.fed.clients_per_round,
             &counts, round, &mut self.rng,
         );
+        let k = selected.len();
+
         let mut comm = ByteMeter::default();
+        let mut elapsed = vec![0.0f64; k];
+        let (hub, endpoints) = Hub::new(k);
+        let net = self.net;
+
+        // --- Round start: distribute the aggregated (W_t, p). ---
+        let dist = Payload::Segments(vec![
+            self.global.get("tail")?.clone(),
+            self.global.get("prompt")?.clone(),
+        ]);
+        for (slot, &cid) in selected.iter().enumerate() {
+            let frame =
+                Frame::new(MsgKind::ModelDistribution, round as u32, cid as u32, dist.clone());
+            let n = hub.send_to(slot, &frame, WireFormat::F32)?;
+            comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
+            elapsed[slot] += net.transfer_time_s(n);
+        }
+
+        // Threads own the selected clients for the round; park stand-ins.
+        let taken: Vec<Client> = selected
+            .iter()
+            .map(|&cid| {
+                std::mem::replace(&mut self.clients[cid], Client::new(cid, Vec::new(), Rng::new(0)))
+            })
+            .collect();
+        let n_ks: Vec<usize> = taken.iter().map(|c| c.num_samples()).collect();
+
+        let fed = self.fed;
+        let store = self.store;
+        let head_lits: &[xla::Literal] = &self.head_lits;
+        let body_lits: &[xla::Literal] = &self.body_lits;
+        let examples = &dataset.examples;
+        let cfg_ref = &cfg;
+        let selected_ref = &selected;
+
+        let (agg_result, joined) = std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(k);
+            for (client, mut link) in taken.into_iter().zip(endpoints) {
+                handles.push(scope.spawn(move || {
+                    let mut client = client;
+                    let cid = client.id as u32;
+                    // A thread that dies without telling the server would
+                    // leave serve_round blocked forever (the other clients
+                    // keep the hub's inbound channel alive) — so both the
+                    // Err path and the panic path send an Abort frame.
+                    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        client_split_round(
+                            &mut client, store, examples, head_lits, &fed, cfg_ref,
+                            round as u32, &mut link,
+                        )
+                    }));
+                    let out = match caught {
+                        Ok(out) => out,
+                        Err(payload) => {
+                            let abort =
+                                Frame::new(MsgKind::Abort, round as u32, cid, Payload::Empty);
+                            let _ = link.send(&abort, WireFormat::F32);
+                            std::panic::resume_unwind(payload);
+                        }
+                    };
+                    if out.is_err() {
+                        let abort =
+                            Frame::new(MsgKind::Abort, round as u32, cid, Payload::Empty);
+                        let _ = link.send(&abort, WireFormat::F32);
+                    }
+                    (client, out)
+                }));
+            }
+
+            // --- Server: route Phase-2 traffic, FedAvg, broadcast. ---
+            let agg_result = serve_round(
+                store, body_lits, &net, &hub, selected_ref, round as u32,
+                &n_ks, &mut comm, &mut elapsed,
+            );
+            // Dropping the hub unblocks any client still waiting on a recv
+            // after a server-side error.
+            drop(hub);
+            let joined: Vec<(Client, Result<ClientRoundOutcome>)> = handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread panicked"))
+                .collect();
+            (agg_result, joined)
+        });
+
+        // Restore clients to the fleet and gather per-client losses.
         let mut local_losses = Vec::new();
         let mut split_losses = Vec::new();
-        let mut updates: Vec<(SegmentParams, SegmentParams, usize)> = Vec::new();
-        let mut client_latency: Vec<f64> = Vec::new();
-
-        for &cid in &selected {
-            let mut link = SimLink::default();
-            // --- Round start: distribute the aggregated (W_t, p). ---
-            link.send(&self.net, MsgKind::ModelDistribution, Direction::Downlink,
-                      tail_b + prompt_b);
-            let mut tail = self.global.get("tail")?.clone();
-            let mut prompt = self.global.get("prompt")?.clone();
-
-            let client = &mut self.clients[cid];
-            let n_k = client.num_samples();
-
-            // --- Phase 1a: local-loss update (network-free). ---
-            if self.fed.local_loss_update {
-                let upd = client.local_loss_update(
-                    self.store, &dataset.examples, &self.head_lits, tail, prompt,
-                    self.fed.local_epochs, self.fed.lr,
-                )?;
-                local_losses.push(upd.mean_loss);
-                tail = upd.tail;
-                prompt = upd.prompt;
+        let mut client_err: Option<anyhow::Error> = None;
+        for (slot, (client, out)) in joined.into_iter().enumerate() {
+            self.clients[selected[slot]] = client;
+            match out {
+                Ok(o) => {
+                    local_losses.extend(o.local_losses);
+                    split_losses.extend(o.split_losses);
+                }
+                Err(e) if client_err.is_none() => {
+                    client_err =
+                        Some(e.context(format!("client {} in round {round}", selected[slot])));
+                }
+                Err(_) => {}
             }
-
-            // --- Phase 1b: EL2N pruning. ---
-            let pruned = client.prune_dataset(
-                self.store, &dataset.examples, &self.head_lits, &tail, &prompt,
-                self.fed.retain_fraction,
-            )?;
-
-            // --- Phase 2: split training over the pruned set. ---
-            for chunk in batch_indices(&pruned, cfg.batch) {
-                let batch = make_batch(
-                    &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
-                );
-                let smashed =
-                    client.head_forward(self.store, &batch.images, &self.head_lits, &prompt)?;
-                link.send(&self.net, MsgKind::SmashedData, Direction::Uplink, smashed_b);
-
-                let body_out = Server::body_forward(self.store, &self.body_lits, &smashed)?;
-                link.send(&self.net, MsgKind::BodyOutput, Direction::Downlink, smashed_b);
-
-                let (loss, new_tail, g_body_out) =
-                    client.tail_step(self.store, &body_out, &batch.labels, &tail, self.fed.lr)?;
-                split_losses.push(loss as f64);
-                tail = new_tail;
-                link.send(&self.net, MsgKind::GradBodyOut, Direction::Uplink, smashed_b);
-
-                let g_smashed =
-                    Server::body_backward(self.store, &self.body_lits, &smashed, &g_body_out)?;
-                link.send(&self.net, MsgKind::GradSmashed, Direction::Downlink, smashed_b);
-
-                prompt = client.prompt_update(
-                    self.store, &batch.images, &g_smashed, &self.head_lits, &prompt, self.fed.lr,
-                )?;
-            }
-
-            // --- Phase 3 upload. ---
-            link.send(&self.net, MsgKind::Upload, Direction::Uplink, tail_b + prompt_b);
-            comm.merge(&link.meter);
-            client_latency.push(link.elapsed_s);
-            updates.push((tail, prompt, n_k));
         }
-
-        // --- Phase 3: FedAvg + broadcast. ---
-        let (tail, prompt) = Server::aggregate(&updates)?;
+        let (tail, prompt) = match (agg_result, client_err) {
+            (Ok(pair), None) => pair,
+            (Ok(_), Some(e)) => return Err(e),
+            (Err(server_err), Some(client_e)) => {
+                // A deliberate client Abort makes the client error the root
+                // cause; any other server-side failure (decode error, body
+                // stage failure, …) is the root cause itself — the clients
+                // only saw the hub close underneath them.
+                if server_err.to_string().contains("aborted round") {
+                    return Err(client_e);
+                }
+                return Err(server_err);
+            }
+            (Err(server_err), None) => return Err(server_err),
+        };
         self.global.set(tail);
         self.global.set(prompt);
-        for _ in &selected {
-            comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, tail_b + prompt_b);
-        }
 
         // Simulated round latency: parallel clients → max link clock.
-        let sim_latency_s = client_latency.iter().copied().fold(0.0, f64::max);
+        let sim_latency_s = elapsed.iter().copied().fold(0.0, f64::max);
 
         let eval_accuracy = match eval {
             Some(ds)
@@ -210,4 +253,101 @@ impl<'a> SfPromptEngine<'a> {
         }
         Ok(history)
     }
+}
+
+/// Server half of one round: route split-training frames from the hub
+/// until every selected client has uploaded, then FedAvg and broadcast.
+/// Records every encoded frame length into `comm` and advances each
+/// client's simulated link clock.
+#[allow(clippy::too_many_arguments)]
+fn serve_round(
+    store: &ArtifactStore,
+    body_lits: &[xla::Literal],
+    net: &NetworkModel,
+    hub: &Hub,
+    selected: &[usize],
+    round: u32,
+    n_ks: &[usize],
+    comm: &mut ByteMeter,
+    elapsed: &mut [f64],
+) -> Result<(SegmentParams, SegmentParams)> {
+    let slot_of = |cid: u32| {
+        selected
+            .iter()
+            .position(|&c| c as u32 == cid)
+            .ok_or_else(|| anyhow!("frame from unknown client {cid}"))
+    };
+    let k = selected.len();
+    let mut smashed_cache: Vec<Option<HostTensor>> = vec![None; k];
+    let mut uploads: Vec<Option<(SegmentParams, SegmentParams)>> = vec![None; k];
+    let mut pending = k;
+
+    while pending > 0 {
+        let (frame, n) = hub.recv_any()?;
+        let slot = slot_of(frame.client)?;
+        comm.record(frame.kind, Direction::Uplink, n);
+        elapsed[slot] += net.transfer_time_s(n);
+        match frame.kind {
+            MsgKind::SmashedData => {
+                let smashed = frame.payload.into_tensor()?;
+                let body_out = Server::body_forward(store, body_lits, &smashed)?;
+                smashed_cache[slot] = Some(smashed);
+                let reply =
+                    Frame::new(MsgKind::BodyOutput, round, frame.client, Payload::Tensor(body_out));
+                let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
+                comm.record(MsgKind::BodyOutput, Direction::Downlink, nb);
+                elapsed[slot] += net.transfer_time_s(nb);
+            }
+            MsgKind::GradBodyOut => {
+                let g_body_out = frame.payload.into_tensor()?;
+                let smashed = smashed_cache[slot].as_ref().ok_or_else(|| {
+                    anyhow!("client {} sent a gradient before smashed data", frame.client)
+                })?;
+                let g_smashed = Server::body_backward(store, body_lits, smashed, &g_body_out)?;
+                let reply = Frame::new(
+                    MsgKind::GradSmashed, round, frame.client, Payload::Tensor(g_smashed),
+                );
+                let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
+                comm.record(MsgKind::GradSmashed, Direction::Downlink, nb);
+                elapsed[slot] += net.transfer_time_s(nb);
+            }
+            MsgKind::Upload => {
+                let mut segs = frame.payload.into_segments()?;
+                if segs.len() != 2 {
+                    return Err(anyhow!(
+                        "client {}: malformed upload ({} segments)",
+                        frame.client,
+                        segs.len()
+                    ));
+                }
+                let prompt = segs.pop().expect("prompt");
+                let tail = segs.pop().expect("tail");
+                uploads[slot] = Some((tail, prompt));
+                pending -= 1;
+            }
+            MsgKind::Abort => {
+                return Err(anyhow!("client {} aborted round {round}", frame.client));
+            }
+            other => return Err(anyhow!("unexpected {:?} frame on the server", other)),
+        }
+    }
+
+    // --- Phase 3: FedAvg + broadcast over the wire. ---
+    let updates: Vec<(SegmentParams, SegmentParams, usize)> = uploads
+        .into_iter()
+        .zip(n_ks)
+        .map(|(u, &n_k)| {
+            let (tail, prompt) = u.expect("every pending upload was collected");
+            (tail, prompt, n_k)
+        })
+        .collect();
+    let (tail, prompt) = Server::aggregate(&updates)?;
+    let bc = Payload::Segments(vec![tail.clone(), prompt.clone()]);
+    for (slot, &cid) in selected.iter().enumerate() {
+        let frame = Frame::new(MsgKind::AggregateBroadcast, round, cid as u32, bc.clone());
+        let n = hub.send_to(slot, &frame, WireFormat::F32)?;
+        comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, n);
+        elapsed[slot] += net.transfer_time_s(n);
+    }
+    Ok((tail, prompt))
 }

@@ -48,6 +48,9 @@ pub struct FedConfig {
     pub eval_every: usize,
     /// client-selection strategy (paper: uniform)
     pub selection: Selection,
+    /// wire precision for uplink payloads (SmashedData, GradBodyOut,
+    /// Upload); downlink and control traffic always travels as f32
+    pub wire: crate::transport::WireFormat,
 }
 
 impl Default for FedConfig {
@@ -65,6 +68,7 @@ impl Default for FedConfig {
             eval_limit: Some(256),
             eval_every: 1,
             selection: Selection::Uniform,
+            wire: crate::transport::WireFormat::F32,
         }
     }
 }

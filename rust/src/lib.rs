@@ -16,7 +16,32 @@
 //!   attention, LayerNorm, EL2N) called from L2.
 //!
 //! Python never runs at runtime: this crate loads the HLO text via PJRT
-//! (`xla` crate) and drives everything from the JSON manifest.
+//! (`xla` crate — gated behind the default-off `pjrt` feature; the offline
+//! build uses a functional host-side stub) and drives everything from the
+//! JSON manifest.
+//!
+//! ## Wire protocol & communication accounting
+//!
+//! Communication cost — the paper's headline metric — is **measured**, not
+//! estimated: every federated message is serialised by [`transport`] into
+//! a versioned binary frame (length prefix; `{version, kind, wire, round,
+//! client}` header; typed payload; CRC32 trailer — see `docs/WIRE.md`) and
+//! moved through a [`transport::Transport`] link. [`comm::ByteMeter`]
+//! records the encoded frame lengths, so the totals behind Table 2 include
+//! real framing overhead, and the shared-rate latency model of §3.5 runs
+//! on measured bytes.
+//!
+//! Uplink payloads (`SmashedData`, `GradBodyOut`, `Upload`) support
+//! pluggable precision ([`transport::WireFormat`]): f32 passthrough, IEEE
+//! f16, or int8 affine quantization with per-tensor scales. Quantization
+//! loss feeds back into training — the server computes on the dequantized
+//! tensors — so `train --wire int8` measures both sides of the
+//! accuracy/bytes trade-off, and `experiment --id wire` tabulates analytic
+//! vs measured vs quantized bytes per message kind.
+//!
+//! In the SFPrompt engine each selected client runs its round on its own
+//! thread against the server's [`transport::Hub`], so Phase-2 split
+//! training is genuinely concurrent (the `ArtifactStore` is `Sync`).
 
 pub mod analysis;
 pub mod comm;
@@ -28,6 +53,7 @@ pub mod metrics;
 pub mod model;
 pub mod partition;
 pub mod runtime;
+pub mod transport;
 pub mod util;
 
 /// Default artifacts directory (relative to the repo root / cwd).

@@ -8,12 +8,15 @@
 
 use anyhow::Result;
 
+use sfprompt::analysis::{fl_crossover_w_bytes, sweep, CostParams};
 use sfprompt::experiments::{self, ExpOptions};
 use sfprompt::federation::baselines::BaselineEngine;
 use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
 use sfprompt::partition::Partition;
 use sfprompt::runtime::ArtifactStore;
+use sfprompt::transport::WireFormat;
 use sfprompt::util::cli::Args;
+use sfprompt::util::csv::CsvWriter;
 
 const USAGE: &str = "\
 sfprompt — split federated prompt fine-tuning coordinator
@@ -24,10 +27,10 @@ USAGE:
                       [--rounds N] [--clients N] [--per-round K] [--epochs U]
                       [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
                       [--noniid] [--alpha F] [--seed N] [--samples-per-client N]
-                      [--no-local-loss]
-  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|all>
+                      [--no-local-loss] [--wire f32|f16|int8]
+  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
-  sfprompt analyze
+  sfprompt analyze    [--out DIR]
 ";
 
 fn main() {
@@ -47,12 +50,7 @@ fn dispatch(args: Args) -> Result<()> {
         Some("inspect") => inspect(&args),
         Some("train") => train(&args),
         Some("experiment") => experiment(&args),
-        Some("analyze") => {
-            let opts = ExpOptions::default();
-            std::fs::create_dir_all(&opts.out_dir)?;
-            experiments::table1::run(&opts)?;
-            experiments::fig2::run(&opts)
-        }
+        Some("analyze") => analyze(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);
@@ -82,8 +80,8 @@ fn inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn fed_from_args(args: &Args) -> FedConfig {
-    FedConfig {
+fn fed_from_args(args: &Args) -> Result<FedConfig> {
+    Ok(FedConfig {
         num_clients: args.get_parse("clients", 50),
         clients_per_round: args.get_parse("per-round", 5),
         local_epochs: args.get_parse("epochs", 10),
@@ -100,7 +98,56 @@ fn fed_from_args(args: &Args) -> FedConfig {
         eval_limit: Some(args.get_parse("eval-limit", 160usize)),
         eval_every: args.get_parse("eval-every", 1usize),
         selection: Selection::Uniform,
+        wire: WireFormat::parse(args.get_or("wire", "f32"))?,
+    })
+}
+
+/// Closed-form cost-model sweep (analysis::sweep) over model scale and
+/// local epochs; prints the grid and writes results/analyze_sweep.csv.
+fn analyze(args: &Args) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let base = CostParams::default();
+    let rows = sweep(&base);
+
+    let mut w = CsvWriter::create(
+        out_dir.join("analyze_sweep.csv"),
+        &[
+            "w_mb", "local_epochs", "fl_comm_mb", "sfl_comm_mb", "sfprompt_comm_mb",
+            "fl_latency_s", "sfl_latency_s", "sfprompt_latency_s",
+        ],
+    )?;
+    println!("closed-form sweep (K={}, |D|={}, γ={}, R={:.1} MB/s):",
+             base.clients, base.d_samples, base.gamma, base.rate / 1e6);
+    println!(
+        "{:>10} {:>4} {:>12} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "|W| MB", "U", "FL MB", "SFL MB", "SFP MB", "FL s", "SFL s", "SFP s"
+    );
+    for r in &rows {
+        println!(
+            "{:>10.1} {:>4} {:>12.1} {:>12.1} {:>12.1} {:>10.1} {:>10.1} {:>10.1}",
+            r.w_mb, r.local_epochs, r.fl.comm_bytes / 1e6, r.sfl.comm_bytes / 1e6,
+            r.sfprompt.comm_bytes / 1e6, r.fl.latency_s, r.sfl.latency_s,
+            r.sfprompt.latency_s
+        );
+        w.row(&[
+            format!("{:.2}", r.w_mb),
+            format!("{}", r.local_epochs),
+            format!("{:.3}", r.fl.comm_bytes / 1e6),
+            format!("{:.3}", r.sfl.comm_bytes / 1e6),
+            format!("{:.3}", r.sfprompt.comm_bytes / 1e6),
+            format!("{:.3}", r.fl.latency_s),
+            format!("{:.3}", r.sfl.latency_s),
+            format!("{:.3}", r.sfprompt.latency_s),
+        ])?;
     }
+    println!(
+        "\nFL-advantage crossover: SFPrompt wins on comm when |W| > {:.1} MB \
+         (2qγ|D|/(α+τ)); wrote {}",
+        fl_crossover_w_bytes(&base) / 1e6,
+        out_dir.join("analyze_sweep.csv").display()
+    );
+    Ok(())
 }
 
 fn train(args: &Args) -> Result<()> {
@@ -113,7 +160,7 @@ fn train(args: &Args) -> Result<()> {
         "sfl_linear" => Method::SflLinear,
         other => anyhow::bail!("unknown method {other:?}"),
     };
-    let fed = fed_from_args(args);
+    let fed = fed_from_args(args)?;
     let store = ArtifactStore::open(&sfprompt::artifacts_root(), config)?;
 
     let mut profile = sfprompt::data::synth::profile(&dataset)
@@ -130,9 +177,10 @@ fn train(args: &Args) -> Result<()> {
     );
 
     println!(
-        "train: config={config} dataset={dataset} method={} rounds={} clients={}x{} U={} γ_retain={}",
+        "train: config={config} dataset={dataset} method={} rounds={} clients={}x{} U={} \
+         γ_retain={} wire={}",
         method.label(), fed.rounds, fed.clients_per_round, fed.num_clients,
-        fed.local_epochs, fed.retain_fraction
+        fed.local_epochs, fed.retain_fraction, fed.wire.label()
     );
     let progress = |rec: &sfprompt::metrics::RoundRecord| {
         println!(

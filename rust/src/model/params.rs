@@ -8,7 +8,7 @@ use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::HostTensor;
 
 /// All tensors of one segment (head / body / tail / prompt), manifest order.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SegmentParams {
     pub segment: String,
     pub tensors: Vec<HostTensor>,

@@ -4,11 +4,15 @@
 //! HLO **text** is the interchange format (see aot.py / DESIGN.md): the
 //! xla_extension 0.5.1 proto parser rejects jax>=0.5's 64-bit instruction
 //! ids, while the text parser reassigns ids and round-trips cleanly.
+//!
+//! The store is `Sync` (interior state behind `Mutex`, executables shared
+//! as `Arc`): the transport layer runs Phase-2 clients on one thread each,
+//! all sharing one store. Locks guard only cache lookups and stat updates;
+//! stage execution itself runs outside any lock.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -18,11 +22,11 @@ pub struct ArtifactStore {
     pub dir: PathBuf,
     pub manifest: Manifest,
     client: xla::PjRtClient,
-    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     /// compile-time per stage, for metrics/EXPERIMENTS.md
-    compile_ms: RefCell<HashMap<String, f64>>,
+    compile_ms: Mutex<HashMap<String, f64>>,
     /// per-stage execution stats: (calls, convert_s, exec_s)
-    exec_stats: RefCell<HashMap<String, (u64, f64, f64)>>,
+    exec_stats: Mutex<HashMap<String, (u64, f64, f64)>>,
 }
 
 /// Aggregated execution statistics for one stage.
@@ -43,9 +47,9 @@ impl ArtifactStore {
             dir,
             manifest,
             client,
-            executables: RefCell::new(HashMap::new()),
-            compile_ms: RefCell::new(HashMap::new()),
-            exec_stats: RefCell::new(HashMap::new()),
+            executables: Mutex::new(HashMap::new()),
+            compile_ms: Mutex::new(HashMap::new()),
+            exec_stats: Mutex::new(HashMap::new()),
         })
     }
 
@@ -58,8 +62,8 @@ impl ArtifactStore {
     }
 
     /// Compile (or fetch cached) the executable for a stage.
-    pub fn executable(&self, stage: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.executables.borrow().get(stage) {
+    pub fn executable(&self, stage: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(stage) {
             return Ok(exe.clone());
         }
         let def = self.manifest.stage(stage)?;
@@ -73,10 +77,13 @@ impl ArtifactStore {
             .compile(&comp)
             .with_context(|| format!("compiling stage {stage}"))?;
         let ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.compile_ms.borrow_mut().insert(stage.to_string(), ms);
-        let exe = Rc::new(exe);
-        self.executables.borrow_mut().insert(stage.to_string(), exe.clone());
-        Ok(exe)
+        self.compile_ms.lock().unwrap().insert(stage.to_string(), ms);
+        let exe = Arc::new(exe);
+        // Two threads may race to compile the same stage; first insert wins
+        // so later callers share one executable.
+        let mut cache = self.executables.lock().unwrap();
+        let entry = cache.entry(stage.to_string()).or_insert(exe);
+        Ok(entry.clone())
     }
 
     /// Pre-compile a set of stages (warm-up before timed runs).
@@ -89,7 +96,7 @@ impl ArtifactStore {
 
     /// Record one execution (called by the Executor).
     pub(crate) fn note_execution(&self, stage: &str, convert_s: f64, exec_s: f64) {
-        let mut stats = self.exec_stats.borrow_mut();
+        let mut stats = self.exec_stats.lock().unwrap();
         let e = stats.entry(stage.to_string()).or_insert((0, 0.0, 0.0));
         e.0 += 1;
         e.1 += convert_s;
@@ -100,7 +107,8 @@ impl ArtifactStore {
     pub fn execution_stats(&self) -> Vec<(String, StageStats)> {
         let mut v: Vec<(String, StageStats)> = self
             .exec_stats
-            .borrow()
+            .lock()
+            .unwrap()
             .iter()
             .map(|(k, &(calls, convert_s, exec_s))| {
                 (k.clone(), StageStats { calls, convert_s, exec_s })
@@ -111,12 +119,12 @@ impl ArtifactStore {
     }
 
     pub fn reset_execution_stats(&self) {
-        self.exec_stats.borrow_mut().clear();
+        self.exec_stats.lock().unwrap().clear();
     }
 
     pub fn compile_times_ms(&self) -> Vec<(String, f64)> {
         let mut v: Vec<(String, f64)> =
-            self.compile_ms.borrow().iter().map(|(k, t)| (k.clone(), *t)).collect();
+            self.compile_ms.lock().unwrap().iter().map(|(k, t)| (k.clone(), *t)).collect();
         v.sort_by(|a, b| a.0.cmp(&b.0));
         v
     }

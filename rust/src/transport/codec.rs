@@ -1,0 +1,478 @@
+//! Versioned binary frame codec for the federated message protocol.
+//!
+//! Frame layout (all integers little-endian; see docs/WIRE.md):
+//!
+//! ```text
+//! [ u32 frame_len ]                     length prefix: bytes that follow
+//! [ "SF" u8 version u8 kind u8 wire ]   magic + protocol version + tags
+//! [ u32 round ] [ u32 client ]          routing / bookkeeping
+//! [ u32 payload_len ]
+//! [ payload … ]
+//! [ u32 crc32 ]                         over header + payload
+//! ```
+//!
+//! Payload encoding: a tag byte (`0` segment list, `1` tensor, `2` empty),
+//! then length-prefixed names and tensors. Each tensor carries its own
+//! element-encoding tag (f32 raw / i32 raw / f16 / int8-affine), so a
+//! decoder never needs out-of-band context. No serde: the offline registry
+//! carries none, so this follows the `util/json.rs` hand-rolled precedent.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::MsgKind;
+use crate::model::SegmentParams;
+use crate::runtime::{HostTensor, TensorData};
+
+use super::crc32::crc32;
+use super::encode::{decode_f32s, encode_f32s, encoded_f32_len, WireFormat};
+
+/// Protocol version stamped into every frame header.
+pub const WIRE_VERSION: u8 = 1;
+
+const MAGIC: [u8; 2] = *b"SF";
+
+/// Header bytes after the length prefix: magic(2) + version(1) + kind(1) +
+/// wire(1) + round(4) + client(4) + payload_len(4).
+pub const HEADER_LEN: usize = 17;
+
+/// Fixed per-frame overhead: length prefix + header + CRC32 trailer.
+pub const FRAME_OVERHEAD: usize = 4 + HEADER_LEN + 4;
+
+/// Per-tensor element encodings (tagged in the payload, one per tensor).
+const ENC_F32: u8 = 0;
+const ENC_I32: u8 = 1;
+const ENC_F16: u8 = 2;
+const ENC_INT8: u8 = 3;
+
+const PAYLOAD_SEGMENTS: u8 = 0;
+const PAYLOAD_TENSOR: u8 = 1;
+const PAYLOAD_EMPTY: u8 = 2;
+
+/// Decode-side sanity cap: refuse frames claiming more elements than this
+/// in a single tensor (256 Mi elements = 1 GiB of f32), so a corrupted
+/// header cannot trigger a huge allocation before the CRC is even checked.
+const MAX_ELEMENTS: usize = 1 << 28;
+const MAX_RANK: usize = 8;
+
+/// What a frame carries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    /// Parameter segments, in protocol order (e.g. `[tail, prompt]`).
+    Segments(Vec<SegmentParams>),
+    /// A single activation/gradient tensor.
+    Tensor(HostTensor),
+    /// Control frames (e.g. `Abort`) carry no data.
+    Empty,
+}
+
+impl Payload {
+    pub fn into_tensor(self) -> Result<HostTensor> {
+        match self {
+            Payload::Tensor(t) => Ok(t),
+            other => bail!("expected tensor payload, got {}", other.label()),
+        }
+    }
+
+    pub fn into_segments(self) -> Result<Vec<SegmentParams>> {
+        match self {
+            Payload::Segments(s) => Ok(s),
+            other => bail!("expected segments payload, got {}", other.label()),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            Payload::Segments(_) => "segments",
+            Payload::Tensor(_) => "tensor",
+            Payload::Empty => "empty",
+        }
+    }
+}
+
+/// One protocol message: header fields + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: MsgKind,
+    pub round: u32,
+    pub client: u32,
+    pub payload: Payload,
+}
+
+impl Frame {
+    pub fn new(kind: MsgKind, round: u32, client: u32, payload: Payload) -> Frame {
+        Frame { kind, round, client, payload }
+    }
+}
+
+// ----------------------------------------------------------------- encode
+
+fn tensor_payload_len(t: &HostTensor, wire: WireFormat) -> usize {
+    let data = match &t.data {
+        TensorData::F32(v) => encoded_f32_len(wire, v.len()),
+        TensorData::I32(v) => 4 * v.len(),
+    };
+    // enc tag + rank + dims + data
+    2 + 4 * t.shape.len() + data
+}
+
+fn encode_tensor(t: &HostTensor, wire: WireFormat, out: &mut Vec<u8>) -> Result<()> {
+    if t.shape.len() > MAX_RANK {
+        bail!("tensor rank {} exceeds wire maximum {MAX_RANK}", t.shape.len());
+    }
+    for &d in &t.shape {
+        if d > u32::MAX as usize {
+            bail!("tensor dim {d} exceeds u32");
+        }
+    }
+    match &t.data {
+        TensorData::F32(v) => {
+            out.push(match wire {
+                WireFormat::F32 => ENC_F32,
+                WireFormat::F16 => ENC_F16,
+                WireFormat::Int8 => ENC_INT8,
+            });
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            encode_f32s(wire, v, out);
+        }
+        TensorData::I32(v) => {
+            out.push(ENC_I32);
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.reserve(v.len() * 4);
+            for &x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn encode_payload(payload: &Payload, wire: WireFormat, out: &mut Vec<u8>) -> Result<()> {
+    match payload {
+        Payload::Segments(segs) => {
+            if segs.len() > u16::MAX as usize {
+                bail!("too many segments ({})", segs.len());
+            }
+            out.push(PAYLOAD_SEGMENTS);
+            out.extend_from_slice(&(segs.len() as u16).to_le_bytes());
+            for sp in segs {
+                let name = sp.segment.as_bytes();
+                if name.len() > u16::MAX as usize {
+                    bail!("segment name too long ({} bytes)", name.len());
+                }
+                if sp.tensors.len() > u16::MAX as usize {
+                    bail!("segment {} has too many tensors", sp.segment);
+                }
+                out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                out.extend_from_slice(name);
+                out.extend_from_slice(&(sp.tensors.len() as u16).to_le_bytes());
+                for t in &sp.tensors {
+                    encode_tensor(t, wire, out)?;
+                }
+            }
+        }
+        Payload::Tensor(t) => {
+            out.push(PAYLOAD_TENSOR);
+            encode_tensor(t, wire, out)?;
+        }
+        Payload::Empty => out.push(PAYLOAD_EMPTY),
+    }
+    Ok(())
+}
+
+/// Exact encoded length of a frame without building it (accounting, tests).
+pub fn encoded_frame_len(frame: &Frame, wire: WireFormat) -> usize {
+    let payload = match &frame.payload {
+        Payload::Segments(segs) => {
+            1 + 2
+                + segs
+                    .iter()
+                    .map(|sp| {
+                        2 + sp.segment.len()
+                            + 2
+                            + sp.tensors.iter().map(|t| tensor_payload_len(t, wire)).sum::<usize>()
+                    })
+                    .sum::<usize>()
+        }
+        Payload::Tensor(t) => 1 + tensor_payload_len(t, wire),
+        Payload::Empty => 1,
+    };
+    FRAME_OVERHEAD + payload
+}
+
+/// Serialise a frame. f32 tensor data is encoded under `wire`; i32 tensors
+/// and all structure are unaffected by the wire format.
+pub fn encode_frame(frame: &Frame, wire: WireFormat) -> Result<Vec<u8>> {
+    let mut buf = Vec::with_capacity(encoded_frame_len(frame, wire));
+    buf.extend_from_slice(&[0u8; 4]); // frame_len backpatched below
+    buf.extend_from_slice(&MAGIC);
+    buf.push(WIRE_VERSION);
+    buf.push(frame.kind.code());
+    buf.push(wire.code());
+    buf.extend_from_slice(&frame.round.to_le_bytes());
+    buf.extend_from_slice(&frame.client.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 4]); // payload_len backpatched below
+
+    let payload_start = buf.len();
+    encode_payload(&frame.payload, wire, &mut buf)?;
+    let payload_len = buf.len() - payload_start;
+    if payload_len > u32::MAX as usize {
+        bail!("payload too large ({payload_len} bytes)");
+    }
+    buf[17..21].copy_from_slice(&(payload_len as u32).to_le_bytes());
+
+    let crc = crc32(&buf[4..]);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    let frame_len = buf.len() - 4;
+    buf[0..4].copy_from_slice(&(frame_len as u32).to_le_bytes());
+    Ok(buf)
+}
+
+// ----------------------------------------------------------------- decode
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("frame truncated at byte {} (need {n} more)", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+fn decode_tensor(r: &mut Reader) -> Result<HostTensor> {
+    let enc = r.u8()?;
+    let rank = r.u8()? as usize;
+    if rank > MAX_RANK {
+        bail!("tensor rank {rank} exceeds wire maximum {MAX_RANK}");
+    }
+    let mut shape = Vec::with_capacity(rank);
+    let mut elements = 1usize;
+    for _ in 0..rank {
+        let d = r.u32()? as usize;
+        elements = elements
+            .checked_mul(d)
+            .ok_or_else(|| anyhow!("tensor shape overflows"))?;
+        shape.push(d);
+    }
+    if elements > MAX_ELEMENTS {
+        bail!("tensor claims {elements} elements (cap {MAX_ELEMENTS})");
+    }
+    match enc {
+        ENC_I32 => {
+            let bytes = r.take(elements * 4)?;
+            let v = bytes
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            Ok(HostTensor::i32(shape, v))
+        }
+        ENC_F32 | ENC_F16 | ENC_INT8 => {
+            let wire = match enc {
+                ENC_F32 => WireFormat::F32,
+                ENC_F16 => WireFormat::F16,
+                _ => WireFormat::Int8,
+            };
+            let rest = &r.buf[r.pos..];
+            let (v, used) = decode_f32s(wire, elements, rest)?;
+            r.pos += used;
+            Ok(HostTensor::f32(shape, v))
+        }
+        other => bail!("unknown tensor encoding tag {other}"),
+    }
+}
+
+fn decode_payload(r: &mut Reader) -> Result<Payload> {
+    match r.u8()? {
+        PAYLOAD_SEGMENTS => {
+            let count = r.u16()? as usize;
+            let mut segs = Vec::with_capacity(count.min(64));
+            for _ in 0..count {
+                let name_len = r.u16()? as usize;
+                let name = std::str::from_utf8(r.take(name_len)?)
+                    .map_err(|_| anyhow!("segment name is not utf-8"))?
+                    .to_string();
+                let n_tensors = r.u16()? as usize;
+                let mut tensors = Vec::with_capacity(n_tensors.min(1024));
+                for _ in 0..n_tensors {
+                    tensors.push(decode_tensor(r)?);
+                }
+                segs.push(SegmentParams { segment: name, tensors });
+            }
+            Ok(Payload::Segments(segs))
+        }
+        PAYLOAD_TENSOR => Ok(Payload::Tensor(decode_tensor(r)?)),
+        PAYLOAD_EMPTY => Ok(Payload::Empty),
+        other => bail!("unknown payload tag {other}"),
+    }
+}
+
+/// Parse and verify one encoded frame (as produced by [`encode_frame`]).
+/// Rejects bad magic, unknown versions, length mismatches, and CRC errors
+/// before touching the payload. Quantized payloads decode back to f32.
+pub fn decode_frame(buf: &[u8]) -> Result<Frame> {
+    if buf.len() < FRAME_OVERHEAD {
+        bail!("frame too short ({} bytes, minimum {FRAME_OVERHEAD})", buf.len());
+    }
+    let frame_len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    if frame_len != buf.len() - 4 {
+        bail!("frame length prefix {frame_len} != {} actual", buf.len() - 4);
+    }
+    if buf[4..6] != MAGIC {
+        bail!("bad frame magic {:02x}{:02x}", buf[4], buf[5]);
+    }
+    if buf[6] != WIRE_VERSION {
+        bail!("unsupported wire version {} (this build speaks {WIRE_VERSION})", buf[6]);
+    }
+    let kind = MsgKind::from_code(buf[7])?;
+    // The header wire tag is informational (each tensor carries its own
+    // encoding tag); validate it all the same so garbage is caught early.
+    let _wire = WireFormat::from_code(buf[8])?;
+    let round = u32::from_le_bytes(buf[9..13].try_into().unwrap());
+    let client = u32::from_le_bytes(buf[13..17].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(buf[17..21].try_into().unwrap()) as usize;
+    if 4 + HEADER_LEN + payload_len + 4 != buf.len() {
+        bail!("payload length {payload_len} inconsistent with frame size {}", buf.len());
+    }
+    let crc_stored =
+        u32::from_le_bytes(buf[buf.len() - 4..].try_into().unwrap());
+    let crc_actual = crc32(&buf[4..buf.len() - 4]);
+    if crc_stored != crc_actual {
+        bail!("frame CRC mismatch (stored {crc_stored:08x}, computed {crc_actual:08x})");
+    }
+
+    let mut r = Reader { buf: &buf[21..buf.len() - 4], pos: 0 };
+    let payload = decode_payload(&mut r)?;
+    if r.pos != r.buf.len() {
+        bail!("{} trailing payload bytes", r.buf.len() - r.pos);
+    }
+    Ok(Frame { kind, round, client, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(name: &str, vals: &[f32]) -> SegmentParams {
+        SegmentParams {
+            segment: name.into(),
+            tensors: vec![HostTensor::f32(vec![vals.len()], vals.to_vec())],
+        }
+    }
+
+    fn sample_frame() -> Frame {
+        Frame::new(
+            MsgKind::Upload,
+            3,
+            12,
+            Payload::Segments(vec![
+                seg("tail", &[1.0, -2.5, 0.125, 9.0]),
+                seg("prompt", &[0.5, 0.25]),
+            ]),
+        )
+    }
+
+    #[test]
+    fn f32_roundtrip_is_identity() {
+        let frame = sample_frame();
+        let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        assert_eq!(bytes.len(), encoded_frame_len(&frame, WireFormat::F32));
+        let back = decode_frame(&bytes).unwrap();
+        assert_eq!(back, frame);
+    }
+
+    #[test]
+    fn tensor_payload_roundtrip_with_i32() {
+        let frame = Frame::new(
+            MsgKind::SmashedData,
+            0,
+            1,
+            Payload::Tensor(HostTensor::i32(vec![2, 2], vec![1, -2, 3, -4])),
+        );
+        let bytes = encode_frame(&frame, WireFormat::Int8).unwrap();
+        // i32 tensors ignore the wire format.
+        let back = decode_frame(&bytes).unwrap();
+        assert_eq!(back, frame);
+    }
+
+    #[test]
+    fn quantized_payloads_shrink_and_stay_close() {
+        let vals: Vec<f32> = (0..512).map(|i| ((i as f32) * 0.017).sin()).collect();
+        let frame =
+            Frame::new(MsgKind::SmashedData, 1, 2, Payload::Tensor(HostTensor::f32(vec![512], vals.clone())));
+        let f32_bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        let f16_bytes = encode_frame(&frame, WireFormat::F16).unwrap();
+        let int8_bytes = encode_frame(&frame, WireFormat::Int8).unwrap();
+        assert!(f16_bytes.len() < f32_bytes.len());
+        assert!(int8_bytes.len() < f16_bytes.len());
+        let back = decode_frame(&int8_bytes).unwrap().payload.into_tensor().unwrap();
+        let max_err = vals
+            .iter()
+            .zip(back.as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err <= 2.0 / 255.0, "max_err {max_err}");
+    }
+
+    #[test]
+    fn rejects_corruption_truncation_and_version_skew() {
+        let frame = sample_frame();
+        let good = encode_frame(&frame, WireFormat::F32).unwrap();
+
+        // Bit flip in the payload -> CRC error.
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        assert!(decode_frame(&bad).is_err());
+
+        // Truncated buffer.
+        assert!(decode_frame(&good[..good.len() - 3]).is_err());
+
+        // Wrong version (re-CRC so only the version check can fire).
+        let mut skew = good.clone();
+        skew[6] = 99;
+        let crc = crc32(&skew[4..skew.len() - 4]);
+        let n = skew.len();
+        skew[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = decode_frame(&skew).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        // Bad magic.
+        let mut magic = good;
+        magic[4] = b'X';
+        assert!(decode_frame(&magic).is_err());
+    }
+
+    #[test]
+    fn empty_payload_frames() {
+        let frame = Frame::new(MsgKind::Abort, 9, 4, Payload::Empty);
+        let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        assert_eq!(bytes.len(), FRAME_OVERHEAD + 1);
+        assert_eq!(decode_frame(&bytes).unwrap(), frame);
+    }
+}

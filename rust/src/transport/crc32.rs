@@ -1,0 +1,55 @@
+//! CRC32 (IEEE 802.3, polynomial 0xEDB88320) — frame integrity checksum.
+//!
+//! Substrate: the offline registry has no `crc32fast`; this is the classic
+//! byte-at-a-time table implementation, table built once on first use.
+
+use std::sync::OnceLock;
+
+static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+
+fn table() -> &'static [u32; 256] {
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, entry) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        t
+    })
+}
+
+/// CRC32 of `bytes` (init 0xFFFFFFFF, final xor 0xFFFFFFFF — the standard
+/// zlib/PNG variant).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard test vector: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // CRC32("a") = 0xE8B7BE43.
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit_flips() {
+        let base = crc32(b"sfprompt wire frame");
+        let mut corrupted = b"sfprompt wire frame".to_vec();
+        corrupted[5] ^= 0x01;
+        assert_ne!(crc32(&corrupted), base);
+    }
+}

@@ -1,0 +1,333 @@
+//! Payload precision layer: pluggable encodings for f32 tensor data.
+//!
+//! Three wire formats, selectable per message (the engines compress the
+//! uplink payloads — `SmashedData`, `GradBodyOut`, `Upload` — and keep
+//! everything else at f32):
+//!
+//! * **f32** — passthrough, 4 bytes/element, bit-exact.
+//! * **f16** — IEEE 754 binary16, 2 bytes/element, round-to-nearest-even;
+//!   relative error ≤ 2⁻¹¹ for values in the normal range.
+//! * **int8** — per-tensor affine quantization, 1 byte/element + an 8-byte
+//!   `{min, scale}` header: `x ≈ min + scale·q`, `q ∈ [0, 255]`,
+//!   `scale = (max − min)/255`; absolute error ≤ scale/2.
+//!
+//! i32 tensors (labels) always pass through raw — they never tolerate loss.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Precision applied to f32 payload data on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireFormat {
+    F32,
+    F16,
+    Int8,
+}
+
+impl WireFormat {
+    pub fn label(self) -> &'static str {
+        match self {
+            WireFormat::F32 => "f32",
+            WireFormat::F16 => "f16",
+            WireFormat::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<WireFormat> {
+        match s {
+            "f32" => Ok(WireFormat::F32),
+            "f16" => Ok(WireFormat::F16),
+            "int8" => Ok(WireFormat::Int8),
+            other => bail!("unknown wire format {other:?} (known: f32 f16 int8)"),
+        }
+    }
+
+    pub fn code(self) -> u8 {
+        match self {
+            WireFormat::F32 => 0,
+            WireFormat::F16 => 1,
+            WireFormat::Int8 => 2,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Result<WireFormat> {
+        match code {
+            0 => Ok(WireFormat::F32),
+            1 => Ok(WireFormat::F16),
+            2 => Ok(WireFormat::Int8),
+            other => bail!("unknown wire format code {other}"),
+        }
+    }
+}
+
+// ------------------------------------------------------------------- f16
+
+/// Convert f32 to IEEE binary16 bits, round-to-nearest-even. Overflow goes
+/// to ±inf, underflow below the smallest subnormal flushes to ±0.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN (keep NaN payload non-zero).
+        return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+    }
+    let e = exp - 127 + 15; // re-biased exponent
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal half (or zero). Value = M · 2^(exp-150) with the
+        // implicit bit; the half subnormal unit is 2^-24, so q = M >> (14-e).
+        if e < -10 {
+            return sign; // underflows even the smallest subnormal
+        }
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let mut h = (m >> shift) as u16;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (h & 1) == 1) {
+            h += 1; // may carry into the exponent field: that is correct
+        }
+        return sign | h;
+    }
+    // Normal half: 10 mantissa bits, round the 13 dropped bits.
+    let mut h = ((e as u16) << 10) | (man >> 13) as u16;
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (h & 1) == 1) {
+        h = h.wrapping_add(1); // carry may bump exponent / reach inf: correct
+    }
+    sign | h
+}
+
+/// Convert IEEE binary16 bits back to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // Subnormal: value = man · 2^-24; normalize into f32.
+            let mut m = man;
+            let mut e32 = 113u32; // exponent once bit 10 is the implicit bit
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | (e32 << 23) | ((m & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+// ------------------------------------------------------------------ int8
+
+/// Per-tensor affine quantization: returns `(min, scale, codes)` with
+/// `x ≈ min + scale·code`. Degenerate tensors (constant, empty, all-NaN)
+/// get `scale = 0` and all-zero codes.
+pub fn int8_quantize(xs: &[f32]) -> (f32, f32, Vec<u8>) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        // f32::min/max skip NaN operands, so NaNs never poison the range.
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        let base = if lo.is_finite() { lo } else { 0.0 };
+        return (base, 0.0, vec![0u8; xs.len()]);
+    }
+    // Range math in f64: hi - lo can overflow f32 to inf for diverged
+    // tensors (e.g. endpoints near ±f32::MAX), which would make every
+    // decoded element NaN. scale itself always fits f32 (≤ 2·MAX/255).
+    let scale = ((hi as f64 - lo as f64) / 255.0) as f32;
+    if scale <= 0.0 || !scale.is_finite() {
+        return (lo, 0.0, vec![0u8; xs.len()]);
+    }
+    let codes = xs
+        .iter()
+        .map(|&x| {
+            let q = (x as f64 - lo as f64) / scale as f64;
+            if q.is_nan() {
+                0
+            } else {
+                q.round().clamp(0.0, 255.0) as u8
+            }
+        })
+        .collect();
+    (lo, scale, codes)
+}
+
+/// Reconstruct f32 values from affine int8 codes (f64 accumulation, so
+/// extreme ranges cannot overflow intermediates; result clamped to f32).
+pub fn int8_dequantize(min: f32, scale: f32, codes: &[u8]) -> Vec<f32> {
+    codes
+        .iter()
+        .map(|&q| {
+            let v = min as f64 + scale as f64 * q as f64;
+            v.clamp(-(f32::MAX as f64), f32::MAX as f64) as f32
+        })
+        .collect()
+}
+
+// ------------------------------------------------- f32 slab encode/decode
+
+/// Append `xs` to `out` under `wire`; returns the per-element tag the codec
+/// stores so the receiver knows how to decode.
+pub fn encode_f32s(wire: WireFormat, xs: &[f32], out: &mut Vec<u8>) {
+    match wire {
+        WireFormat::F32 => {
+            out.reserve(xs.len() * 4);
+            for &x in xs {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        WireFormat::F16 => {
+            out.reserve(xs.len() * 2);
+            for &x in xs {
+                out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+            }
+        }
+        WireFormat::Int8 => {
+            let (min, scale, codes) = int8_quantize(xs);
+            out.reserve(8 + codes.len());
+            out.extend_from_slice(&min.to_le_bytes());
+            out.extend_from_slice(&scale.to_le_bytes());
+            out.extend_from_slice(&codes);
+        }
+    }
+}
+
+/// Number of payload bytes `n` f32 elements occupy under `wire`.
+pub fn encoded_f32_len(wire: WireFormat, n: usize) -> usize {
+    match wire {
+        WireFormat::F32 => 4 * n,
+        WireFormat::F16 => 2 * n,
+        WireFormat::Int8 => 8 + n,
+    }
+}
+
+/// Decode `n` f32 elements from the front of `buf`; returns the values and
+/// the number of bytes consumed.
+pub fn decode_f32s(wire: WireFormat, n: usize, buf: &[u8]) -> Result<(Vec<f32>, usize)> {
+    let need = encoded_f32_len(wire, n);
+    if buf.len() < need {
+        bail!("tensor data truncated: need {need} bytes, have {}", buf.len());
+    }
+    let xs = match wire {
+        WireFormat::F32 => buf[..need]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect(),
+        WireFormat::F16 => buf[..need]
+            .chunks_exact(2)
+            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect(),
+        WireFormat::Int8 => {
+            let min = f32::from_le_bytes(
+                buf[0..4].try_into().map_err(|_| anyhow!("int8 header"))?,
+            );
+            let scale = f32::from_le_bytes(
+                buf[4..8].try_into().map_err(|_| anyhow!("int8 header"))?,
+            );
+            int8_dequantize(min, scale, &buf[8..need])
+        }
+    };
+    Ok((xs, need))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_on_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, 6.103515625e-5] {
+            let rt = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert_eq!(rt.to_bits(), x.to_bits(), "{x}");
+        }
+    }
+
+    #[test]
+    fn f16_handles_extremes() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e9)), f32::NEG_INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-10)), 0.0);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // Smallest half subnormal survives.
+        let tiny = 5.960_464_5e-8f32;
+        let rt = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((rt - tiny).abs() < 1e-9, "{rt}");
+    }
+
+    #[test]
+    fn int8_bounded_error_and_endpoints() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32 - 50.0) * 0.37).collect();
+        let (min, scale, codes) = int8_quantize(&xs);
+        let back = int8_dequantize(min, scale, &codes);
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() <= scale * 0.5001 + 1e-6, "{a} vs {b}");
+        }
+        // Range endpoints are exactly representable.
+        assert_eq!(codes[0], 0);
+        assert_eq!(*codes.last().unwrap(), 255);
+    }
+
+    #[test]
+    fn int8_survives_extreme_ranges() {
+        // hi - lo overflows f32 here; the f64 range math must keep scale
+        // finite and the reconstruction NaN-free.
+        let xs = [-3.0e38f32, 0.0, 3.0e38];
+        let (min, scale, codes) = int8_quantize(&xs);
+        assert!(scale.is_finite() && scale > 0.0, "scale {scale}");
+        assert_eq!((codes[0], codes[2]), (0, 255));
+        let back = int8_dequantize(min, scale, &codes);
+        assert!(back.iter().all(|v| v.is_finite()), "{back:?}");
+        assert!((back[0] - xs[0]).abs() <= scale * 0.502);
+    }
+
+    #[test]
+    fn int8_degenerate_tensors() {
+        let (min, scale, codes) = int8_quantize(&[3.25; 7]);
+        assert_eq!((min, scale), (3.25, 0.0));
+        assert!(codes.iter().all(|&c| c == 0));
+        assert_eq!(int8_dequantize(min, scale, &codes), vec![3.25; 7]);
+        let (_, scale, codes) = int8_quantize(&[]);
+        assert_eq!(scale, 0.0);
+        assert!(codes.is_empty());
+    }
+
+    #[test]
+    fn slab_roundtrip_all_formats() {
+        let xs: Vec<f32> = (0..33).map(|i| (i as f32) * 0.711 - 11.0).collect();
+        for wire in [WireFormat::F32, WireFormat::F16, WireFormat::Int8] {
+            let mut buf = Vec::new();
+            encode_f32s(wire, &xs, &mut buf);
+            assert_eq!(buf.len(), encoded_f32_len(wire, xs.len()));
+            let (back, used) = decode_f32s(wire, xs.len(), &buf).unwrap();
+            assert_eq!(used, buf.len());
+            assert_eq!(back.len(), xs.len());
+            if wire == WireFormat::F32 {
+                assert_eq!(back, xs);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_format_codes_roundtrip() {
+        for w in [WireFormat::F32, WireFormat::F16, WireFormat::Int8] {
+            assert_eq!(WireFormat::from_code(w.code()).unwrap(), w);
+            assert_eq!(WireFormat::parse(w.label()).unwrap(), w);
+        }
+        assert!(WireFormat::from_code(9).is_err());
+        assert!(WireFormat::parse("bf16").is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Links: how encoded frames move between endpoints.
+//!
+//! * [`Transport`] — the one interface every federated message crosses.
+//!   `send` returns the **encoded frame length**, which is what the engines
+//!   feed into `comm::ByteMeter` — communication accounting is measurement,
+//!   not estimation.
+//! * [`ChannelLink`] — mpsc-backed duplex endpoint. [`channel_pair`] builds
+//!   a symmetric in-process link (baselines, tests); [`Hub::new`] builds a
+//!   star topology (one server, N client threads) for concurrent Phase-2
+//!   split training.
+//! * [`LoopbackLink`] — send-to-self queue: every frame still round-trips
+//!   through the full encode → bytes → decode path (codec tests, benches).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::codec::{decode_frame, encode_frame, Frame};
+use super::encode::WireFormat;
+
+/// A duplex frame pipe. Implementations serialise on `send` and parse +
+/// integrity-check on `recv`; both report the on-the-wire byte count.
+pub trait Transport {
+    /// Encode `frame` under `wire` and transmit it; returns encoded bytes.
+    fn send(&mut self, frame: &Frame, wire: WireFormat) -> Result<usize>;
+    /// Block for the next frame; returns it with its encoded byte count.
+    fn recv(&mut self) -> Result<(Frame, usize)>;
+}
+
+/// One endpoint of an in-process link (the wire is `Vec<u8>` messages over
+/// `std::sync::mpsc` — unbounded, so single-threaded send→recv sequences
+/// never deadlock, and threaded endpoints block only on `recv`).
+pub struct ChannelLink {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl ChannelLink {
+    fn new(tx: Sender<Vec<u8>>, rx: Receiver<Vec<u8>>) -> ChannelLink {
+        ChannelLink { tx, rx }
+    }
+}
+
+impl Transport for ChannelLink {
+    fn send(&mut self, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        let bytes = encode_frame(frame, wire)?;
+        let n = bytes.len();
+        self.tx
+            .send(bytes)
+            .map_err(|_| anyhow!("link closed (peer endpoint dropped)"))?;
+        Ok(n)
+    }
+
+    fn recv(&mut self) -> Result<(Frame, usize)> {
+        let bytes = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("link closed (peer endpoint dropped)"))?;
+        let frame = decode_frame(&bytes)?;
+        Ok((frame, bytes.len()))
+    }
+}
+
+/// A symmetric duplex link: two connected endpoints.
+pub fn channel_pair() -> (ChannelLink, ChannelLink) {
+    let (a_tx, b_rx) = channel();
+    let (b_tx, a_rx) = channel();
+    (ChannelLink::new(a_tx, a_rx), ChannelLink::new(b_tx, b_rx))
+}
+
+/// Server side of a star topology: one shared inbound queue (frames carry
+/// the sender's client id) plus a private outbound channel per slot.
+pub struct Hub {
+    rx: Receiver<Vec<u8>>,
+    to_client: Vec<Sender<Vec<u8>>>,
+}
+
+impl Hub {
+    /// Build a hub with `n` client endpoints. Endpoint `i` talks to the
+    /// hub; the hub addresses it as slot `i`.
+    pub fn new(n: usize) -> (Hub, Vec<ChannelLink>) {
+        let (to_server, rx) = channel();
+        let mut to_client = Vec::with_capacity(n);
+        let mut links = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, client_rx) = channel();
+            to_client.push(tx);
+            links.push(ChannelLink::new(to_server.clone(), client_rx));
+        }
+        // `to_server` drops here: once every client endpoint is gone,
+        // `recv_any` reports disconnection instead of blocking forever.
+        (Hub { rx, to_client }, links)
+    }
+
+    pub fn send_to(&self, slot: usize, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        let bytes = encode_frame(frame, wire)?;
+        let n = bytes.len();
+        self.to_client
+            .get(slot)
+            .ok_or_else(|| anyhow!("no client slot {slot}"))?
+            .send(bytes)
+            .map_err(|_| anyhow!("client slot {slot} hung up"))?;
+        Ok(n)
+    }
+
+    /// Block for the next inbound frame from any client.
+    pub fn recv_any(&self) -> Result<(Frame, usize)> {
+        let bytes = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("all client endpoints hung up"))?;
+        let frame = decode_frame(&bytes)?;
+        Ok((frame, bytes.len()))
+    }
+}
+
+/// Send-to-self link: frames queue up and come back on `recv`, having been
+/// fully serialised and reparsed. The test/bench stand-in for a network.
+#[derive(Default)]
+pub struct LoopbackLink {
+    queue: VecDeque<Vec<u8>>,
+}
+
+impl LoopbackLink {
+    pub fn new() -> LoopbackLink {
+        LoopbackLink::default()
+    }
+
+    /// Frames currently in flight.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl Transport for LoopbackLink {
+    fn send(&mut self, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        let bytes = encode_frame(frame, wire)?;
+        let n = bytes.len();
+        self.queue.push_back(bytes);
+        Ok(n)
+    }
+
+    fn recv(&mut self) -> Result<(Frame, usize)> {
+        let bytes = self
+            .queue
+            .pop_front()
+            .ok_or_else(|| anyhow!("loopback link is empty"))?;
+        let frame = decode_frame(&bytes)?;
+        Ok((frame, bytes.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::MsgKind;
+    use crate::runtime::HostTensor;
+    use crate::transport::codec::Payload;
+
+    fn frame(kind: MsgKind, client: u32, vals: &[f32]) -> Frame {
+        Frame::new(kind, 0, client, Payload::Tensor(HostTensor::f32(vec![vals.len()], vals.to_vec())))
+    }
+
+    #[test]
+    fn loopback_roundtrips_in_order() {
+        let mut link = LoopbackLink::new();
+        let a = frame(MsgKind::SmashedData, 1, &[1.0, 2.0]);
+        let b = frame(MsgKind::GradBodyOut, 1, &[3.0]);
+        let na = link.send(&a, WireFormat::F32).unwrap();
+        link.send(&b, WireFormat::F32).unwrap();
+        assert_eq!(link.pending(), 2);
+        let (got_a, n) = link.recv().unwrap();
+        assert_eq!((got_a, n), (a, na));
+        let (got_b, _) = link.recv().unwrap();
+        assert_eq!(got_b, b);
+        assert!(link.recv().is_err());
+    }
+
+    #[test]
+    fn channel_pair_is_duplex() {
+        let (mut server, mut client) = channel_pair();
+        server.send(&frame(MsgKind::BodyOutput, 7, &[0.5]), WireFormat::F32).unwrap();
+        let (got, _) = client.recv().unwrap();
+        assert_eq!(got.kind, MsgKind::BodyOutput);
+        client.send(&frame(MsgKind::SmashedData, 7, &[1.5]), WireFormat::F16).unwrap();
+        let (got, _) = server.recv().unwrap();
+        assert_eq!(got.kind, MsgKind::SmashedData);
+    }
+
+    #[test]
+    fn hub_routes_by_slot_and_detects_hangup() {
+        let (hub, mut links) = Hub::new(2);
+        hub.send_to(0, &frame(MsgKind::ModelDistribution, 0, &[1.0]), WireFormat::F32).unwrap();
+        hub.send_to(1, &frame(MsgKind::ModelDistribution, 1, &[2.0]), WireFormat::F32).unwrap();
+        let (f0, _) = links[0].recv().unwrap();
+        let (f1, _) = links[1].recv().unwrap();
+        assert_eq!(f0.client, 0);
+        assert_eq!(f1.client, 1);
+        links[0].send(&frame(MsgKind::Upload, 0, &[9.0]), WireFormat::F32).unwrap();
+        let (up, _) = hub.recv_any().unwrap();
+        assert_eq!(up.kind, MsgKind::Upload);
+        assert!(hub.send_to(5, &f0, WireFormat::F32).is_err());
+        drop(links);
+        assert!(hub.recv_any().is_err());
+    }
+
+    #[test]
+    fn hub_works_across_threads() {
+        let (hub, links) = Hub::new(3);
+        std::thread::scope(|s| {
+            for (i, mut link) in links.into_iter().enumerate() {
+                s.spawn(move || {
+                    let (f, _) = link.recv().unwrap();
+                    assert_eq!(f.client, i as u32);
+                    link.send(&frame(MsgKind::Upload, i as u32, &[i as f32]), WireFormat::F32)
+                        .unwrap();
+                });
+            }
+            for slot in 0..3 {
+                hub.send_to(slot, &frame(MsgKind::ModelDistribution, slot as u32, &[0.0]), WireFormat::F32)
+                    .unwrap();
+            }
+            let mut seen = Vec::new();
+            for _ in 0..3 {
+                let (f, _) = hub.recv_any().unwrap();
+                seen.push(f.client);
+            }
+            seen.sort_unstable();
+            assert_eq!(seen, vec![0, 1, 2]);
+        });
+    }
+}

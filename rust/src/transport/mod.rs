@@ -1,0 +1,28 @@
+//! Wire-level transport: binary codec, framed messages, channel links.
+//!
+//! The paper's headline metric is communication cost, so this layer makes
+//! it a **measurement**: every federated message is serialised into a
+//! versioned, CRC-checked binary frame and moved through a [`Transport`];
+//! the engines meter the encoded frame lengths instead of trusting the
+//! manifest's analytic estimates. The precision layer ([`WireFormat`])
+//! additionally compresses uplink payloads (f16 / int8-affine), which is
+//! how the accuracy-vs-bytes trade-off of FedPrompt/SplitLoRA-style upload
+//! compression is measured (`sfprompt experiment --id wire`,
+//! `sfprompt train --wire int8`).
+//!
+//! * [`codec`] — frame layout: length prefix, `{version, kind, wire,
+//!   round, client}` header, typed payload, CRC32 trailer (docs/WIRE.md).
+//! * [`encode`] — pluggable element precision: f32 passthrough, IEEE f16,
+//!   int8 affine quantization with per-tensor `{min, scale}`.
+//! * [`link`] — [`ChannelLink`] (mpsc; also the star-topology [`Hub`]
+//!   that lets Phase-2 clients run on real threads) and [`LoopbackLink`].
+//! * [`crc32`] — the checksum substrate.
+
+pub mod codec;
+pub mod crc32;
+pub mod encode;
+pub mod link;
+
+pub use codec::{decode_frame, encode_frame, encoded_frame_len, Frame, Payload, FRAME_OVERHEAD, WIRE_VERSION};
+pub use encode::WireFormat;
+pub use link::{channel_pair, ChannelLink, Hub, LoopbackLink, Transport};

@@ -7,6 +7,7 @@ use sfprompt::data::batch_indices;
 use sfprompt::model::{fedavg, Contribution, SegmentParams};
 use sfprompt::partition::{label_skew, partition, Partition};
 use sfprompt::runtime::HostTensor;
+use sfprompt::transport::{decode_frame, encode_frame, Frame, Payload, WireFormat};
 use sfprompt::util::json::Json;
 use sfprompt::util::rng::Rng;
 
@@ -234,6 +235,160 @@ fn prop_json_roundtrip_random_trees() {
         let text = v.to_string();
         let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
         assert_eq!(v, back, "case {case}");
+    }
+}
+
+// ---------------------------------------------------------------- codec
+
+const KINDS: [MsgKind; 9] = [
+    MsgKind::ModelDistribution,
+    MsgKind::SmashedData,
+    MsgKind::BodyOutput,
+    MsgKind::GradBodyOut,
+    MsgKind::GradSmashed,
+    MsgKind::Upload,
+    MsgKind::AggregateBroadcast,
+    MsgKind::FullModel,
+    MsgKind::Abort,
+];
+
+fn random_tensor(rng: &mut Rng, sigma: f32) -> HostTensor {
+    let rank = rng.below(4);
+    let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(6)).collect();
+    let n: usize = shape.iter().product();
+    if rng.uniform() < 0.25 {
+        HostTensor::i32(shape, (0..n).map(|_| rng.below(2000) as i32 - 1000).collect())
+    } else {
+        HostTensor::f32(shape, (0..n).map(|_| rng.normal_f32(0.0, sigma)).collect())
+    }
+}
+
+fn random_frame(rng: &mut Rng, sigma: f32) -> Frame {
+    let kind = KINDS[rng.below(KINDS.len())];
+    let payload = match rng.below(3) {
+        0 => Payload::Empty,
+        1 => Payload::Tensor(random_tensor(rng, sigma)),
+        _ => {
+            let n_segs = 1 + rng.below(3);
+            Payload::Segments(
+                (0..n_segs)
+                    .map(|i| SegmentParams {
+                        segment: format!("seg{i}"),
+                        tensors: (0..1 + rng.below(3))
+                            .map(|_| random_tensor(rng, sigma))
+                            .collect(),
+                    })
+                    .collect(),
+            )
+        }
+    };
+    Frame::new(kind, rng.below(1 << 20) as u32, rng.below(1 << 10) as u32, payload)
+}
+
+/// Every f32 tensor in a payload, flattened (for error comparisons).
+fn f32_values(p: &Payload) -> Vec<f32> {
+    let from_tensor = |t: &HostTensor| match t.dtype() {
+        sfprompt::runtime::Dtype::F32 => t.as_f32().to_vec(),
+        _ => Vec::new(),
+    };
+    match p {
+        Payload::Empty => Vec::new(),
+        Payload::Tensor(t) => from_tensor(t),
+        Payload::Segments(segs) => {
+            segs.iter().flat_map(|s| s.tensors.iter().flat_map(|t| from_tensor(t))).collect()
+        }
+    }
+}
+
+#[test]
+fn prop_codec_f32_roundtrip_is_identity() {
+    let mut rng = Rng::new(210);
+    for case in 0..CASES {
+        let frame = random_frame(&mut rng, 2.0);
+        let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        let back = decode_frame(&bytes).unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(back, frame, "case {case}");
+    }
+}
+
+#[test]
+fn prop_codec_f16_error_is_bounded() {
+    let mut rng = Rng::new(211);
+    for case in 0..CASES {
+        let frame = random_frame(&mut rng, 10.0);
+        let bytes = encode_frame(&frame, WireFormat::F16).unwrap();
+        let back = decode_frame(&bytes).unwrap();
+        // Structure and i32 data survive exactly; f32 within f16 precision
+        // (relative 2^-11 for normals; absolute slack covers subnormals).
+        assert_eq!(back.kind, frame.kind, "case {case}");
+        for (a, b) in f32_values(&frame.payload).iter().zip(f32_values(&back.payload)) {
+            assert!(
+                (a - b).abs() <= a.abs() / 1024.0 + 1e-3,
+                "case {case}: {a} -> {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_codec_int8_error_is_bounded_per_tensor() {
+    let mut rng = Rng::new(212);
+    for case in 0..CASES {
+        let n = 1 + rng.below(300);
+        let vals: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 5.0)).collect();
+        let frame = Frame::new(
+            MsgKind::SmashedData,
+            0,
+            0,
+            Payload::Tensor(HostTensor::f32(vec![n], vals.clone())),
+        );
+        let bytes = encode_frame(&frame, WireFormat::Int8).unwrap();
+        let back = decode_frame(&bytes).unwrap().payload.into_tensor().unwrap();
+        let (lo, hi) = vals.iter().fold((f32::MAX, f32::MIN), |(l, h), &v| {
+            (l.min(v), h.max(v))
+        });
+        let scale = (hi - lo) / 255.0;
+        for (a, b) in vals.iter().zip(back.as_f32()) {
+            assert!(
+                (a - b).abs() <= scale * 0.502 + 1e-5,
+                "case {case}: {a} -> {b} (scale {scale})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_codec_rejects_any_single_byte_corruption() {
+    // Every byte of a frame is protected: the length prefix by the length
+    // check, everything else by CRC32 — so ANY flip must fail decode.
+    let mut rng = Rng::new(213);
+    for case in 0..CASES {
+        let wire = [WireFormat::F32, WireFormat::F16, WireFormat::Int8][rng.below(3)];
+        let frame = random_frame(&mut rng, 2.0);
+        let good = encode_frame(&frame, wire).unwrap();
+        let mut bad = good.clone();
+        let at = rng.below(bad.len());
+        bad[at] ^= 1 << rng.below(8);
+        assert!(decode_frame(&bad).is_err(), "case {case}: flip at {at} accepted");
+        // Truncation at any point must also fail.
+        let cut = rng.below(good.len());
+        assert!(decode_frame(&good[..cut]).is_err(), "case {case}: truncation at {cut}");
+    }
+}
+
+#[test]
+fn prop_codec_rejects_wrong_version_even_with_valid_crc() {
+    let mut rng = Rng::new(214);
+    for case in 0..CASES / 4 {
+        let frame = random_frame(&mut rng, 2.0);
+        let mut bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        bytes[6] = bytes[6].wrapping_add(1 + rng.below(250) as u8);
+        // Recompute the CRC so only the version check can reject.
+        let crc = sfprompt::transport::crc32::crc32(&bytes[4..bytes.len() - 4]);
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = decode_frame(&bytes).unwrap_err().to_string();
+        assert!(err.contains("version"), "case {case}: {err}");
     }
 }
 
