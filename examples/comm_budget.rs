@@ -1,14 +1,17 @@
 //! Communication-budget comparison: measured bytes for SFPrompt vs FL vs
 //! SFL on the same workload, next to the closed-form model (Table 2 shape).
 //!
+//! Because every method is a `FederatedRun` built by the same
+//! `RunBuilder`, the comparison loop is a `Method` value — no per-engine
+//! wiring.
+//!
 //!     cargo run --release --example comm_budget [-- --rounds N]
 
 use anyhow::Result;
 
 use sfprompt::analysis::{fl, sfl, sfprompt as sfp_model, CostParams};
 use sfprompt::data::{synth, SynthDataset};
-use sfprompt::federation::baselines::BaselineEngine;
-use sfprompt::federation::{FedConfig, Method, Selection, SfPromptEngine};
+use sfprompt::federation::{drive, FedConfig, Method, NullObserver, RunBuilder, Selection};
 use sfprompt::partition::Partition;
 use sfprompt::runtime::ArtifactStore;
 use sfprompt::util::cli::Args;
@@ -42,13 +45,8 @@ fn main() -> Result<()> {
     println!("measured bytes/round on config `small` (K=4, U=4, retain=0.4):");
     let mut measured = Vec::new();
     for method in [Method::Fl, Method::SflFullFinetune, Method::SfPrompt] {
-        let mb = if method == Method::SfPrompt {
-            let mut e = SfPromptEngine::new(&store, fed, &train);
-            e.run(&train, None, |_| {})?.comm_mb_per_round()
-        } else {
-            let mut e = BaselineEngine::new(&store, fed, method, &train);
-            e.run(&train, None, |_| {})?.comm_mb_per_round()
-        };
+        let mut run = RunBuilder::new(method).fed(fed).build(&store, &train, None)?;
+        let mb = drive(run.as_mut(), &mut NullObserver)?.comm_mb_per_round();
         measured.push((method.label(), mb));
         println!("  {:<12} {:>10.3} MB/round", method.label(), mb);
     }

@@ -3,7 +3,8 @@
 //! Trains the `small` split-ViT profile with SFPrompt over a 50-client
 //! federation on the synthetic cifar10-like corpus for enough global rounds
 //! that the selected clients execute several hundred local SGD steps in
-//! total, logging the loss curve and accuracy to results/e2e_loss.csv.
+//! total, logging the loss curve and accuracy to results/e2e_loss.csv via a
+//! custom `RoundObserver` (print + CSV from one event stream).
 //!
 //!     cargo run --release --example e2e_train [-- --rounds N]
 //!
@@ -15,11 +16,37 @@
 use anyhow::Result;
 
 use sfprompt::data::{synth, SynthDataset};
-use sfprompt::federation::{Selection, FedConfig, SfPromptEngine};
+use sfprompt::federation::{drive, FedConfig, Method, RoundObserver, RunBuilder, Selection};
+use sfprompt::metrics::RoundRecord;
 use sfprompt::partition::Partition;
 use sfprompt::runtime::ArtifactStore;
 use sfprompt::util::cli::Args;
 use sfprompt::util::csv::CsvWriter;
+
+/// Prints the per-round line and mirrors it into the loss-curve CSV.
+struct CsvLogger {
+    csv: CsvWriter,
+}
+
+impl RoundObserver for CsvLogger {
+    fn on_round_end(&mut self, rec: &RoundRecord, _clock_s: f64) {
+        println!(
+            "round {:>3}: local_loss={:.4} split_loss={:.4} acc={:.4} comm={:.2}MB wall={:.1}s",
+            rec.round, rec.mean_local_loss, rec.mean_split_loss, rec.eval_accuracy,
+            rec.comm.mb(), rec.wall_s
+        );
+        self.csv
+            .row(&[
+                rec.round.to_string(),
+                format!("{:.5}", rec.mean_local_loss),
+                format!("{:.5}", rec.mean_split_loss),
+                format!("{:.5}", rec.eval_accuracy),
+                format!("{:.4}", rec.comm.mb()),
+                format!("{:.2}", rec.wall_s),
+            ])
+            .expect("write loss-curve row");
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -60,29 +87,16 @@ fn main() -> Result<()> {
         steps_per_round * rounds
     );
 
-    let mut csv = CsvWriter::create(
-        "results/e2e_loss.csv",
-        &["round", "local_loss", "split_loss", "accuracy", "comm_mb", "wall_s"],
-    )?;
+    let mut logger = CsvLogger {
+        csv: CsvWriter::create(
+            "results/e2e_loss.csv",
+            &["round", "local_loss", "split_loss", "accuracy", "comm_mb", "wall_s"],
+        )?,
+    };
 
     let t0 = std::time::Instant::now();
-    let mut engine = SfPromptEngine::new(&store, fed, &train);
-    let hist = engine.run(&train, Some(&eval), |rec| {
-        println!(
-            "round {:>3}: local_loss={:.4} split_loss={:.4} acc={:.4} comm={:.2}MB wall={:.1}s",
-            rec.round, rec.mean_local_loss, rec.mean_split_loss, rec.eval_accuracy,
-            rec.comm.mb(), rec.wall_s
-        );
-        csv.row(&[
-            rec.round.to_string(),
-            format!("{:.5}", rec.mean_local_loss),
-            format!("{:.5}", rec.mean_split_loss),
-            format!("{:.5}", rec.eval_accuracy),
-            format!("{:.4}", rec.comm.mb()),
-            format!("{:.2}", rec.wall_s),
-        ])
-        .unwrap();
-    })?;
+    let mut run = RunBuilder::new(Method::SfPrompt).fed(fed).build(&store, &train, Some(&eval))?;
+    let hist = drive(run.as_mut(), &mut logger)?;
 
     let first = hist.rounds.first().unwrap();
     let last = hist.rounds.last().unwrap();

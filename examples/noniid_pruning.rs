@@ -3,14 +3,15 @@
 //! Splits a cifar100-like corpus over 50 clients with Dirichlet(0.1) label
 //! skew, then compares SFPrompt at several EL2N retain fractions —
 //! demonstrating the Fig-7 claim that deep pruning costs little accuracy
-//! because Phase-1 local-loss updates still see all local data.
+//! because Phase-1 local-loss updates still see all local data. Each
+//! retain fraction is one `RunBuilder` delta on a shared config.
 //!
 //!     cargo run --release --example noniid_pruning [-- --rounds N]
 
 use anyhow::Result;
 
 use sfprompt::data::{synth, SynthDataset};
-use sfprompt::federation::{Selection, FedConfig, SfPromptEngine};
+use sfprompt::federation::{drive, Method, NullObserver, RunBuilder};
 use sfprompt::partition::{label_skew, partition, Partition};
 use sfprompt::runtime::ArtifactStore;
 use sfprompt::util::cli::Args;
@@ -39,23 +40,18 @@ fn main() -> Result<()> {
     println!("label skew (TV distance): dirichlet(0.1)={skew_noniid:.3} iid={skew_iid:.3}");
 
     for retain in [1.0, 0.4, 0.2] {
-        let fed = FedConfig {
-            num_clients: 50,
-            clients_per_round: 5,
-            local_epochs: 5,
-            rounds,
-            lr: 0.08,
-            retain_fraction: retain,
-            local_loss_update: true,
-            partition: Partition::Dirichlet { alpha: 0.1 },
-            seed: 17,
-            eval_limit: Some(160),
-            eval_every: rounds,
-            selection: Selection::Uniform,
-            wire: sfprompt::transport::WireFormat::F32,
-        };
-        let mut engine = SfPromptEngine::new(&store, fed, &train);
-        let hist = engine.run(&train, Some(&eval), |_| {})?;
+        let mut run = RunBuilder::new(Method::SfPrompt)
+            .clients(50, 5)
+            .local_epochs(5)
+            .rounds(rounds)
+            .lr(0.08)
+            .retain_fraction(retain)
+            .partition(Partition::Dirichlet { alpha: 0.1 })
+            .seed(17)
+            .eval_limit(Some(160))
+            .eval_every(rounds)
+            .build(&store, &train, Some(&eval))?;
+        let hist = drive(run.as_mut(), &mut NullObserver)?;
         println!(
             "retain={:.1}: final acc {:.4}, split-pass comm {:.2} MB/round",
             retain,

@@ -1,16 +1,30 @@
-//! Quickstart: run a few SFPrompt global rounds on the `tiny` config.
+//! Quickstart: the unified run API on the `tiny` config.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Exercises the full public API surface: artifact loading, synthetic data,
-//! partitioning, the three-phase engine, and communication accounting.
+//! The flow every driver uses: open artifacts → synthesize data →
+//! configure a `RunBuilder` → `build` a method-agnostic `FederatedRun` →
+//! `drive` it with a `RoundObserver` → read the returned `RunHistory`.
 
 use anyhow::Result;
 
 use sfprompt::data::{synth::DatasetProfile, SynthDataset};
-use sfprompt::federation::{Selection, FedConfig, SfPromptEngine};
-use sfprompt::partition::Partition;
+use sfprompt::federation::{drive, Method, RoundObserver, RunBuilder};
+use sfprompt::metrics::RoundRecord;
 use sfprompt::runtime::ArtifactStore;
+
+/// Observers receive round events; this one just prints a line per round.
+struct Printer;
+
+impl RoundObserver for Printer {
+    fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+        println!(
+            "round {}: local_loss={:.4} split_loss={:.4} acc={:.4} comm={:.3}MB clock={:.1}s",
+            rec.round, rec.mean_local_loss, rec.mean_split_loss, rec.eval_accuracy,
+            rec.comm.mb(), clock_s
+        );
+    }
+}
 
 fn main() -> Result<()> {
     let store = ArtifactStore::open(&sfprompt::artifacts_root(), "tiny")?;
@@ -30,30 +44,19 @@ fn main() -> Result<()> {
     let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 320, 11, 12);
     let eval = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 96, 11, 99);
 
-    let fed = FedConfig {
-        num_clients: 10,
-        clients_per_round: 3,
-        local_epochs: 3,
-        rounds: 5,
-        lr: 0.1,
-        retain_fraction: 0.5,
-        local_loss_update: true,
-        partition: Partition::Iid,
-        seed: 7,
-        eval_limit: Some(96),
-        eval_every: 1,
-        selection: Selection::Uniform,
-        wire: sfprompt::transport::WireFormat::F32,
-    };
+    // RunBuilder is the only way to construct an engine; swapping
+    // `Method::SfPrompt` for `Method::Fl` (etc.) changes nothing else.
+    let mut run = RunBuilder::new(Method::SfPrompt)
+        .clients(10, 3)
+        .local_epochs(3)
+        .rounds(5)
+        .lr(0.1)
+        .retain_fraction(0.5)
+        .seed(7)
+        .eval_limit(Some(96))
+        .build(&store, &train, Some(&eval))?;
 
-    let mut engine = SfPromptEngine::new(&store, fed, &train);
-    let hist = engine.run(&train, Some(&eval), |rec| {
-        println!(
-            "round {}: local_loss={:.4} split_loss={:.4} acc={:.4} comm={:.3}MB",
-            rec.round, rec.mean_local_loss, rec.mean_split_loss, rec.eval_accuracy,
-            rec.comm.mb()
-        );
-    })?;
+    let hist = drive(run.as_mut(), &mut Printer)?;
 
     println!(
         "\nfinal accuracy {:.4} | total comm {:.3} MB | breakdown:",

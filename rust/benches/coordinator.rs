@@ -1,7 +1,8 @@
-//! Coordinator benchmarks — one per paper table/figure family:
+//! Coordinator benchmarks — one per paper table/figure family, all driven
+//! through the unified run API (`RunBuilder` → `drive`):
 //!
 //! * table2/table3: full global round per method (FL / SFL+FF / SFPrompt)
-//! * fig4: SFPrompt round phases broken out (phase1 / phase2 / phase3)
+//! * fig6: SFPrompt without Phase 1 (ablation cost structure)
 //! * fig7: pruning throughput at several retain fractions
 
 #[path = "harness.rs"]
@@ -9,8 +10,7 @@ mod harness;
 
 use harness::Bench;
 use sfprompt::data::{synth, SynthDataset};
-use sfprompt::federation::baselines::BaselineEngine;
-use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
+use sfprompt::federation::{drive, FedConfig, Method, NullObserver, RunBuilder, Selection};
 use sfprompt::partition::Partition;
 use sfprompt::runtime::ArtifactStore;
 
@@ -47,36 +47,33 @@ fn main() {
 
     println!("coordinator benches (tiny config, K=2, U=2, 16 samples/client)");
 
+    let one_round = |f: FedConfig, method: Method| {
+        let mut run = RunBuilder::new(method).fed(f).build(&store, &train, None).unwrap();
+        drive(run.as_mut(), &mut NullObserver).unwrap();
+    };
+
     // --- global round per method (tables 2/3 shape) ---
     for method in [Method::SfPrompt, Method::Fl, Method::SflFullFinetune, Method::SflLinear] {
         let f = fed(1);
-        let r = Bench::new(&format!("round/{}", method.label())).samples(6).run(|| {
-            if method == Method::SfPrompt {
-                let mut e = SfPromptEngine::new(&store, f, &train);
-                e.run(&train, None, |_| {}).unwrap();
-            } else {
-                let mut e = BaselineEngine::new(&store, f, method, &train);
-                e.run(&train, None, |_| {}).unwrap();
-            }
-        });
+        let r = Bench::new(&format!("round/{}", method.label()))
+            .samples(6)
+            .run(|| one_round(f, method));
         harness::throughput(&r, "rounds", 1.0);
     }
 
-    // --- SFPrompt phase breakdown (fig4 cost structure) ---
+    // --- SFPrompt without Phase 1 (fig6 ablation cost structure) ---
     {
         let f = FedConfig { local_loss_update: false, ..fed(1) };
-        Bench::new("round/sfprompt_wo_phase1 (fig6 ablation)").samples(6).run(|| {
-            let mut e = SfPromptEngine::new(&store, f, &train);
-            e.run(&train, None, |_| {}).unwrap();
-        });
+        Bench::new("round/sfprompt_wo_phase1 (fig6 ablation)")
+            .samples(6)
+            .run(|| one_round(f, Method::SfPrompt));
     }
 
     // --- pruning fractions (fig7 cost structure) ---
     for retain in [1.0, 0.4, 0.2] {
         let f = FedConfig { retain_fraction: retain, ..fed(1) };
-        Bench::new(&format!("round/sfprompt_retain_{retain}")).samples(6).run(|| {
-            let mut e = SfPromptEngine::new(&store, f, &train);
-            e.run(&train, None, |_| {}).unwrap();
-        });
+        Bench::new(&format!("round/sfprompt_retain_{retain}"))
+            .samples(6)
+            .run(|| one_round(f, Method::SfPrompt));
     }
 }

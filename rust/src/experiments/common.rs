@@ -1,98 +1,29 @@
 //! Shared helpers for the training-based experiments (fig4-7, table3).
+//!
+//! Experiment cells are [`RunSpec`] values (the same serializable type
+//! `train --spec` consumes); running one goes through the unified run API:
+//! `spec.builder().build(...)` → [`drive`] with a [`ProgressPrinter`] (or
+//! [`NullObserver`] when quiet).
 
 use std::path::Path;
 
 use anyhow::Result;
 
-use crate::data::{synth, SynthDataset};
-use crate::federation::baselines::BaselineEngine;
-use crate::federation::{FedConfig, Method, Selection, SfPromptEngine};
+use crate::federation::{drive, NullObserver, ProgressPrinter, RoundObserver};
 use crate::metrics::RunHistory;
-use crate::partition::Partition;
 use crate::runtime::ArtifactStore;
 
-/// A fully specified training run.
-#[derive(Debug, Clone)]
-pub struct TrainSpec {
-    pub config_name: String,
-    pub dataset: &'static str,
-    pub partition: Partition,
-    pub method: Method,
-    pub fed: FedConfig,
-    pub samples_per_client: usize,
-    pub eval_samples: usize,
-}
+pub use crate::federation::RunSpec;
 
-impl TrainSpec {
-    pub fn new(config_name: &str, dataset: &'static str, method: Method) -> TrainSpec {
-        TrainSpec {
-            config_name: config_name.into(),
-            dataset,
-            partition: Partition::Iid,
-            method,
-            fed: FedConfig {
-                num_clients: 50,
-                clients_per_round: 5,
-                local_epochs: 10,
-                rounds: 10,
-                lr: 0.08,
-                retain_fraction: 0.4,
-                local_loss_update: true,
-                partition: Partition::Iid,
-                seed: 17,
-                eval_limit: Some(160),
-                eval_every: 1,
-                selection: Selection::Uniform,
-                wire: crate::transport::WireFormat::F32,
-            },
-            samples_per_client: 32,
-            eval_samples: 160,
-        }
-    }
-
-    pub fn datasets(&self, cfg: &crate::runtime::ModelConfig) -> (SynthDataset, SynthDataset) {
-        let mut profile = synth::profile(self.dataset).expect("known dataset profile");
-        // The model config's class count wins (e.g. small=10, small_c100=100).
-        profile.num_classes = cfg.num_classes;
-        let n_train = self.fed.num_clients * self.samples_per_client;
-        let train = SynthDataset::generate(
-            profile, cfg.image_size, cfg.channels, n_train,
-            /*seed_protos=*/ 1000 + self.fed.seed, /*seed_samples=*/ 2000 + self.fed.seed,
-        );
-        let eval = SynthDataset::generate(
-            profile, cfg.image_size, cfg.channels, self.eval_samples,
-            1000 + self.fed.seed, 9000 + self.fed.seed,
-        );
-        (train, eval)
-    }
-}
-
-/// Run one spec end-to-end; prints per-round progress lines.
-pub fn run_spec(artifacts: &Path, spec: &TrainSpec, quiet: bool) -> Result<RunHistory> {
-    let store = ArtifactStore::open(artifacts, &spec.config_name)?;
-    let mut fed = spec.fed;
-    fed.partition = spec.partition;
-    let (train, eval) = spec.datasets(&store.manifest.config);
-
-    let progress = |rec: &crate::metrics::RoundRecord| {
-        if !quiet {
-            println!(
-                "  [{:<10}] round {:>2}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB",
-                spec.method.label(),
-                rec.round,
-                rec.mean_split_loss,
-                rec.mean_local_loss,
-                rec.eval_accuracy,
-                rec.comm.mb()
-            );
-        }
-    };
-
-    if spec.method == Method::SfPrompt {
-        let mut engine = SfPromptEngine::new(&store, fed, &train);
-        engine.run(&train, Some(&eval), progress)
+/// Run one spec end-to-end; prints per-round progress lines unless quiet.
+pub fn run_spec(artifacts: &Path, spec: &RunSpec, quiet: bool) -> Result<RunHistory> {
+    let store = ArtifactStore::open(artifacts, &spec.config)?;
+    let (train, eval) = spec.datasets(&store.manifest.config)?;
+    let mut run = spec.builder().build(&store, &train, Some(&eval))?;
+    let mut obs: Box<dyn RoundObserver> = if quiet {
+        Box::new(NullObserver)
     } else {
-        let mut engine = BaselineEngine::new(&store, fed, spec.method, &train);
-        engine.run(&train, Some(&eval), progress)
-    }
+        Box::new(ProgressPrinter::labeled(spec.method.label()))
+    };
+    drive(run.as_mut(), obs.as_mut())
 }

@@ -9,7 +9,7 @@ use crate::federation::Method;
 use crate::partition::Partition;
 use crate::util::csv::CsvWriter;
 
-use super::common::{run_spec, TrainSpec};
+use super::common::{run_spec, RunSpec};
 use super::ExpOptions;
 
 pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
@@ -29,8 +29,8 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     for (config, dataset, part) in cells {
         println!("--- fig4 cell: {dataset} / {} ---", part.label());
         for method in methods {
-            let mut spec = TrainSpec::new(config, dataset, method);
-            spec.partition = part;
+            let mut spec = RunSpec::new(config, dataset, method);
+            spec.fed.partition = part;
             opts.apply(&mut spec);
             let hist = run_spec(artifacts, &spec, false)?;
             for rec in &hist.rounds {

@@ -9,7 +9,7 @@ use crate::federation::Method;
 use crate::runtime::Manifest;
 use crate::util::csv::CsvWriter;
 
-use super::common::{run_spec, TrainSpec};
+use super::common::{run_spec, RunSpec};
 use super::ExpOptions;
 
 pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
@@ -29,7 +29,7 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     for (config, p_len) in sweep {
         let man = Manifest::load(&artifacts.join(config))?;
         let tuned = man.cost.params["tail"] + man.cost.params["prompt"];
-        let mut spec = TrainSpec::new(config, "cifar100", Method::SfPrompt);
+        let mut spec = RunSpec::new(config, "cifar100", Method::SfPrompt);
         opts.apply(&mut spec);
         spec.fed.eval_every = opts.rounds.max(1);
         let hist = run_spec(artifacts, &spec, true)?;

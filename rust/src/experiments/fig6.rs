@@ -8,7 +8,7 @@ use anyhow::Result;
 use crate::federation::Method;
 use crate::util::csv::CsvWriter;
 
-use super::common::{run_spec, TrainSpec};
+use super::common::{run_spec, RunSpec};
 use super::ExpOptions;
 
 pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
@@ -18,9 +18,9 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     )?;
     println!("Fig 6: local-loss-update ablation (cifar100-like, IID)");
     for (variant, local_loss) in [("sfprompt", true), ("sfprompt_wo_localloss", false)] {
-        let mut spec = TrainSpec::new("small_c100", "cifar100", Method::SfPrompt);
+        let mut spec = RunSpec::new("small_c100", "cifar100", Method::SfPrompt);
         spec.fed.local_loss_update = local_loss;
-            opts.apply(&mut spec);
+        opts.apply(&mut spec);
         let hist = run_spec(artifacts, &spec, true)?;
         for rec in &hist.rounds {
             w.row(&[

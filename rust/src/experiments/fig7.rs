@@ -11,7 +11,7 @@ use crate::federation::Method;
 use crate::partition::Partition;
 use crate::util::csv::CsvWriter;
 
-use super::common::{run_spec, TrainSpec};
+use super::common::{run_spec, RunSpec};
 use super::ExpOptions;
 
 pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
@@ -23,8 +23,8 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     println!("Fig 7: pruning-fraction sweep (cifar100-like)");
     for part in [Partition::Iid, Partition::Dirichlet { alpha: 0.1 }] {
         for retain in retains {
-            let mut spec = TrainSpec::new("small_c100", "cifar100", Method::SfPrompt);
-            spec.partition = part;
+            let mut spec = RunSpec::new("small_c100", "cifar100", Method::SfPrompt);
+            spec.fed.partition = part;
             spec.fed.retain_fraction = retain;
             opts.apply(&mut spec);
             spec.fed.eval_every = opts.rounds.max(1);

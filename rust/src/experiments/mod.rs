@@ -38,8 +38,8 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
-    /// Apply the budget knobs to a training spec.
-    pub fn apply(&self, spec: &mut common::TrainSpec) {
+    /// Apply the budget knobs to a run spec.
+    pub fn apply(&self, spec: &mut crate::federation::RunSpec) {
         spec.fed.rounds = self.rounds;
         spec.fed.local_epochs = self.local_epochs;
         spec.fed.seed = self.seed;

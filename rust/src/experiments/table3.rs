@@ -10,7 +10,7 @@ use crate::partition::Partition;
 use crate::runtime::Manifest;
 use crate::util::csv::CsvWriter;
 
-use super::common::{run_spec, TrainSpec};
+use super::common::{run_spec, RunSpec};
 use super::ExpOptions;
 
 /// Tuned-parameter ratio per method (paper's last column).
@@ -49,8 +49,8 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     for method in methods {
         for (config, dataset) in datasets {
             for part in parts {
-                let mut spec = TrainSpec::new(config, dataset, method);
-                spec.partition = part;
+                let mut spec = RunSpec::new(config, dataset, method);
+                spec.fed.partition = part;
                 opts.apply(&mut spec);
                 // Only evaluate at the end: table reports terminal accuracy.
                 spec.fed.eval_every = opts.rounds.max(1);

@@ -14,7 +14,12 @@
 //! Like the SFPrompt engine, every message is serialised through the
 //! `transport` codec over a channel pair (here driven synchronously — the
 //! engine plays both endpoints), so `ByteMeter` records encoded frame
-//! lengths and SFL's uplink payloads honour `FedConfig::wire`.
+//! lengths, SFL's uplink payloads honour `FedConfig::wire`, and latency is
+//! charged through the same driver [`LinkClock`] (§3.5) the SFPrompt
+//! engine uses.
+//!
+//! Constructed only via [`super::RunBuilder`]; driven only through the
+//! [`FederatedRun`] trait.
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -31,16 +36,21 @@ use crate::transport::{channel_pair, Frame, Payload, Transport, WireFormat};
 use crate::util::rng::Rng;
 
 use super::client::Client;
+use super::driver::LinkClock;
+use super::run::FederatedRun;
 use super::{FedConfig, Method};
 
-pub struct BaselineEngine<'a> {
-    pub store: &'a ArtifactStore,
-    pub fed: FedConfig,
-    pub net: NetworkModel,
-    pub method: Method,
-    pub global: ParamSet,
-    pub clients: Vec<Client>,
+pub(crate) struct BaselineEngine<'a> {
+    store: &'a ArtifactStore,
+    fed: FedConfig,
+    net: NetworkModel,
+    method: Method,
+    global: ParamSet,
+    clients: Vec<Client>,
     rng: Rng,
+    train: &'a SynthDataset,
+    eval: Option<&'a SynthDataset>,
+    history: RunHistory,
 }
 
 fn run_stage(
@@ -68,15 +78,17 @@ fn take_segments(payload: Payload, names: &[&str]) -> Result<Vec<SegmentParams>>
 }
 
 impl<'a> BaselineEngine<'a> {
-    pub fn new(
+    pub(crate) fn new(
         store: &'a ArtifactStore,
         fed: FedConfig,
         method: Method,
-        dataset: &SynthDataset,
+        net: NetworkModel,
+        train: &'a SynthDataset,
+        eval: Option<&'a SynthDataset>,
     ) -> Self {
-        assert_ne!(method, Method::SfPrompt, "use SfPromptEngine");
+        assert_ne!(method, Method::SfPrompt, "use the SFPrompt engine for Method::SfPrompt");
         let mut rng = Rng::new(fed.seed);
-        let labels = dataset.labels();
+        let labels = train.labels();
         let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
         let clients = parts
             .into_iter()
@@ -86,39 +98,21 @@ impl<'a> BaselineEngine<'a> {
         let global = init_params(&store.manifest, fed.seed ^ 0xA5A5);
         BaselineEngine {
             store,
-            net: NetworkModel { sharing_clients: fed.clients_per_round, ..Default::default() },
+            net,
             fed,
             method,
             global,
             clients,
             rng,
+            train,
+            eval,
+            history: RunHistory::default(),
         }
     }
 
-    pub fn run(
-        &mut self,
-        dataset: &SynthDataset,
-        eval: Option<&SynthDataset>,
-        mut on_round: impl FnMut(&RoundRecord),
-    ) -> Result<RunHistory> {
-        let mut history = RunHistory::default();
-        for r in 0..self.fed.rounds {
-            let rec = match self.method {
-                Method::Fl => self.round_fl(r, dataset, eval)?,
-                Method::SflFullFinetune | Method::SflLinear => {
-                    self.round_sfl(r, dataset, eval)?
-                }
-                Method::SfPrompt => unreachable!(),
-            };
-            on_round(&rec);
-            history.push(rec);
-        }
-        Ok(history)
-    }
-
-    fn eval_maybe(&self, round: usize, eval: Option<&SynthDataset>) -> Result<f64> {
-        match eval {
-            Some(ds) if round % self.fed.eval_every == 0 || round + 1 == self.fed.rounds => {
+    fn eval_maybe(&self, round: usize) -> Result<f64> {
+        match self.eval {
+            Some(ds) if self.fed.should_eval(round) => {
                 evaluate(self.store, "eval_forward_noprompt", &self.global, ds,
                          self.fed.eval_limit)
             }
@@ -128,14 +122,10 @@ impl<'a> BaselineEngine<'a> {
 
     /// FL: full-model exchange + local full fine-tuning. FL has no split
     /// uplink payloads, so both directions stay at f32.
-    fn round_fl(
-        &mut self,
-        round: usize,
-        dataset: &SynthDataset,
-        eval: Option<&SynthDataset>,
-    ) -> Result<RoundRecord> {
+    fn round_fl(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
         let cfg = self.store.manifest.config.clone();
+        let train = self.train;
         let lr_t = HostTensor::scalar_f32(self.fed.lr);
         let r32 = round as u32;
 
@@ -145,13 +135,12 @@ impl<'a> BaselineEngine<'a> {
             &counts, round, &mut self.rng,
         );
         let mut comm = ByteMeter::default();
+        let mut clock = LinkClock::new(self.net, selected.len());
         let mut losses = Vec::new();
         let mut updates: Vec<(Vec<SegmentParams>, usize)> = Vec::new();
-        let mut latencies = Vec::new();
 
-        for &cid in &selected {
+        for (slot, &cid) in selected.iter().enumerate() {
             let (mut s_end, mut c_end) = channel_pair();
-            let mut link_s = 0.0f64;
 
             // --- Downlink: the full model, over the wire. ---
             let payload = Payload::Segments(vec![
@@ -162,7 +151,7 @@ impl<'a> BaselineEngine<'a> {
             let n = s_end
                 .send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             comm.record(MsgKind::FullModel, Direction::Downlink, n);
-            link_s += self.net.transfer_time_s(n);
+            clock.charge(slot, n);
             let (frame, _) = c_end.recv()?;
             let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
             let mut tail = segs.pop().expect("tail");
@@ -177,7 +166,7 @@ impl<'a> BaselineEngine<'a> {
                 client.rng.shuffle(&mut order);
                 for chunk in batch_indices(&order, cfg.batch) {
                     let batch = make_batch(
-                        &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
+                        &train.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
                     );
                     let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
                     segs.insert("head", &head);
@@ -200,13 +189,12 @@ impl<'a> BaselineEngine<'a> {
             c_end.send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             let (frame, n) = s_end.recv()?;
             comm.record(MsgKind::FullModel, Direction::Uplink, n);
-            link_s += self.net.transfer_time_s(n);
+            clock.charge(slot, n);
             let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
             let tail = segs.pop().expect("tail");
             let body = segs.pop().expect("body");
             let head = segs.pop().expect("head");
 
-            latencies.push(link_s);
             updates.push((vec![head, body, tail], n_k));
         }
 
@@ -221,24 +209,20 @@ impl<'a> BaselineEngine<'a> {
             round,
             mean_local_loss: f64::NAN,
             mean_split_loss: crate::util::stats::mean(&losses),
-            eval_accuracy: self.eval_maybe(round, eval)?,
+            eval_accuracy: self.eval_maybe(round)?,
             comm,
             wall_s: wall0.elapsed().as_secs_f64(),
-            sim_latency_s: latencies.iter().copied().fold(0.0, f64::max),
+            sim_latency_s: clock.round_latency_s(),
         })
     }
 
     /// SFL (+FF or +Linear): split training every batch of every epoch.
     /// Uplink payloads (smashed, cut-layer gradients, the client-model
     /// upload) honour `FedConfig::wire`; downlink stays f32.
-    fn round_sfl(
-        &mut self,
-        round: usize,
-        dataset: &SynthDataset,
-        eval: Option<&SynthDataset>,
-    ) -> Result<RoundRecord> {
+    fn round_sfl(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
         let cfg = self.store.manifest.config.clone();
+        let train = self.train;
         let lr_t = HostTensor::scalar_f32(self.fed.lr);
         let full_ft = self.method == Method::SflFullFinetune;
         let tail_stage = if full_ft { "tail_step_noprompt" } else { "tail_step_linear" };
@@ -251,13 +235,12 @@ impl<'a> BaselineEngine<'a> {
             &counts, round, &mut self.rng,
         );
         let mut comm = ByteMeter::default();
+        let mut clock = LinkClock::new(self.net, selected.len());
         let mut losses = Vec::new();
         let mut updates: Vec<(Vec<SegmentParams>, usize)> = Vec::new();
-        let mut latencies = Vec::new();
 
-        for &cid in &selected {
+        for (slot, &cid) in selected.iter().enumerate() {
             let (mut s_end, mut c_end) = channel_pair();
-            let mut link_s = 0.0f64;
 
             // SFL distributes the client model (head+tail) each round.
             let payload = Payload::Segments(vec![
@@ -269,7 +252,7 @@ impl<'a> BaselineEngine<'a> {
                 WireFormat::F32,
             )?;
             comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-            link_s += self.net.transfer_time_s(n);
+            clock.charge(slot, n);
             let (frame, _) = c_end.recv()?;
             let mut segs = take_segments(frame.payload, &["head", "tail"])?;
             let mut tail = segs.pop().expect("tail");
@@ -283,7 +266,7 @@ impl<'a> BaselineEngine<'a> {
                 client.rng.shuffle(&mut order);
                 for chunk in batch_indices(&order, cfg.batch) {
                     let batch = make_batch(
-                        &dataset.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
+                        &train.examples, &chunk, cfg.batch, cfg.image_size, cfg.channels,
                     );
                     // client: head forward; ship smashed data uplink.
                     let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
@@ -299,7 +282,7 @@ impl<'a> BaselineEngine<'a> {
                     )?;
                     let (frame, n) = s_end.recv()?;
                     comm.record(MsgKind::SmashedData, Direction::Uplink, n);
-                    link_s += self.net.transfer_time_s(n);
+                    clock.charge(slot, n);
                     let server_smashed = frame.payload.into_tensor()?;
 
                     // server: body forward; ship activations downlink.
@@ -316,7 +299,7 @@ impl<'a> BaselineEngine<'a> {
                         WireFormat::F32,
                     )?;
                     comm.record(MsgKind::BodyOutput, Direction::Downlink, n);
-                    link_s += self.net.transfer_time_s(n);
+                    clock.charge(slot, n);
                     let (frame, _) = c_end.recv()?;
                     let body_out = frame.payload.into_tensor()?;
 
@@ -342,7 +325,7 @@ impl<'a> BaselineEngine<'a> {
                         )?;
                         let (frame, n) = s_end.recv()?;
                         comm.record(MsgKind::GradBodyOut, Direction::Uplink, n);
-                        link_s += self.net.transfer_time_s(n);
+                        clock.charge(slot, n);
                         let g_body_out = frame.payload.into_tensor()?;
 
                         // server: body backward + body update.
@@ -365,7 +348,7 @@ impl<'a> BaselineEngine<'a> {
                             WireFormat::F32,
                         )?;
                         comm.record(MsgKind::GradSmashed, Direction::Downlink, n);
-                        link_s += self.net.transfer_time_s(n);
+                        clock.charge(slot, n);
                         let (frame, _) = c_end.recv()?;
                         let g_smashed = frame.payload.into_tensor()?;
 
@@ -387,12 +370,11 @@ impl<'a> BaselineEngine<'a> {
             c_end.send(&Frame::new(MsgKind::Upload, r32, cid as u32, payload), wire)?;
             let (frame, n) = s_end.recv()?;
             comm.record(MsgKind::Upload, Direction::Uplink, n);
-            link_s += self.net.transfer_time_s(n);
+            clock.charge(slot, n);
             let mut segs = take_segments(frame.payload, &["head", "tail"])?;
             let tail = segs.pop().expect("tail");
             let head = segs.pop().expect("head");
 
-            latencies.push(link_s);
             updates.push((vec![head, tail], n_k));
         }
 
@@ -406,10 +388,53 @@ impl<'a> BaselineEngine<'a> {
             round,
             mean_local_loss: f64::NAN,
             mean_split_loss: crate::util::stats::mean(&losses),
-            eval_accuracy: self.eval_maybe(round, eval)?,
+            eval_accuracy: self.eval_maybe(round)?,
             comm,
             wall_s: wall0.elapsed().as_secs_f64(),
-            sim_latency_s: latencies.iter().copied().fold(0.0, f64::max),
+            sim_latency_s: clock.round_latency_s(),
         })
+    }
+}
+
+impl FederatedRun for BaselineEngine<'_> {
+    fn method(&self) -> Method {
+        self.method
+    }
+
+    fn fed(&self) -> &FedConfig {
+        &self.fed
+    }
+
+    fn round(&mut self, r: usize) -> Result<RoundRecord> {
+        if r != self.history.rounds.len() {
+            bail!(
+                "rounds must run in order: expected round {}, got {r}",
+                self.history.rounds.len()
+            );
+        }
+        let rec = match self.method {
+            Method::Fl => self.round_fl(r)?,
+            Method::SflFullFinetune | Method::SflLinear => self.round_sfl(r)?,
+            Method::SfPrompt => unreachable!("constructor rejects Method::SfPrompt"),
+        };
+        self.history.push(rec.clone());
+        Ok(rec)
+    }
+
+    fn history(&self) -> &RunHistory {
+        &self.history
+    }
+
+    fn comm_totals(&self) -> &ByteMeter {
+        &self.history.total_comm
+    }
+
+    fn final_eval(&mut self) -> Result<f64> {
+        match self.eval {
+            Some(ds) => evaluate(
+                self.store, "eval_forward_noprompt", &self.global, ds, self.fed.eval_limit,
+            ),
+            None => Ok(f64::NAN),
+        }
     }
 }

@@ -1,0 +1,176 @@
+//! The round-loop driver: owns the loop any method runs under, streams
+//! progress to a [`RoundObserver`], and is the single source of truth for
+//! simulated-network latency charging ([`LinkClock`], paper §3.5).
+//!
+//! Drivers used to be duplicated — `main.rs`, every `experiments/*.rs`
+//! harness, and the examples each hand-wired the loop and its printing.
+//! Now there is exactly one loop ([`drive`]) over the method-agnostic
+//! [`FederatedRun`] trait, and presentation is an observer:
+//!
+//! * [`NullObserver`] — silent (tests, byte-accounting runs);
+//! * [`ProgressPrinter`] — the standard per-round console line;
+//! * anything else — implement [`RoundObserver`] (e.g. a CSV logger; see
+//!   `examples/e2e_train.rs`).
+
+use anyhow::Result;
+
+use crate::comm::NetworkModel;
+use crate::metrics::{RoundRecord, RunHistory};
+
+use super::run::FederatedRun;
+use super::{FedConfig, Method};
+
+/// Per-round simulated link clocks under the paper's shared-rate model
+/// (§3.5): K selected clients share one rate R, so each effective link
+/// runs at R/K and the round's latency is the **max** over per-client
+/// clocks (clients proceed in parallel, the server waits for the last).
+///
+/// Both engines charge every transmitted frame here, so the latency math
+/// lives in exactly one place.
+pub struct LinkClock {
+    net: NetworkModel,
+    elapsed: Vec<f64>,
+}
+
+impl LinkClock {
+    /// A clock per selected-client slot, all charged against `net`.
+    pub fn new(net: NetworkModel, slots: usize) -> LinkClock {
+        LinkClock { net, elapsed: vec![0.0; slots] }
+    }
+
+    /// Charge `bytes` of transfer time to `slot`'s link; returns the
+    /// transfer time added.
+    pub fn charge(&mut self, slot: usize, bytes: usize) -> f64 {
+        let dt = self.net.transfer_time_s(bytes);
+        self.elapsed[slot] += dt;
+        dt
+    }
+
+    /// Accumulated link time for one slot.
+    pub fn slot_s(&self, slot: usize) -> f64 {
+        self.elapsed[slot]
+    }
+
+    /// Round latency: the slowest client's accumulated link time.
+    pub fn round_latency_s(&self) -> f64 {
+        self.elapsed.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn net(&self) -> &NetworkModel {
+        &self.net
+    }
+}
+
+/// Event stream of one driven run. All methods have empty defaults, so an
+/// observer implements only what it cares about.
+///
+/// Per-`MsgKind` measured bytes for the round are in
+/// `rec.comm.by_kind` at `on_round_end`; `clock_s` is the cumulative
+/// simulated clock (sum of per-round §3.5 latencies) after the round.
+pub trait RoundObserver {
+    fn on_run_start(&mut self, _method: Method, _fed: &FedConfig) {}
+    fn on_round_start(&mut self, _round: usize) {}
+    /// Fired after a round that produced an accuracy point (per
+    /// `eval_every`, and always on the final round when an eval split is
+    /// present).
+    fn on_eval(&mut self, _round: usize, _accuracy: f64) {}
+    fn on_round_end(&mut self, _rec: &RoundRecord, _clock_s: f64) {}
+    fn on_run_end(&mut self, _history: &RunHistory) {}
+}
+
+/// Silent observer.
+pub struct NullObserver;
+
+impl RoundObserver for NullObserver {}
+
+/// The standard per-round console line (what `train` and the experiment
+/// harness print). With a label, rows are prefixed `[label]` in the
+/// compact experiment style; without one, the fuller `train` style is
+/// used (adds the simulated clock and wall time).
+#[derive(Debug, Default)]
+pub struct ProgressPrinter {
+    label: Option<String>,
+}
+
+impl ProgressPrinter {
+    pub fn new() -> ProgressPrinter {
+        ProgressPrinter { label: None }
+    }
+
+    pub fn labeled(label: &str) -> ProgressPrinter {
+        ProgressPrinter { label: Some(label.to_string()) }
+    }
+}
+
+impl RoundObserver for ProgressPrinter {
+    fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+        match &self.label {
+            Some(label) => println!(
+                "  [{:<10}] round {:>2}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB",
+                label,
+                rec.round,
+                rec.mean_split_loss,
+                rec.mean_local_loss,
+                rec.eval_accuracy,
+                rec.comm.mb()
+            ),
+            None => println!(
+                "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB \
+                 sim_lat={:.1}s clock={:.1}s wall={:.1}s",
+                rec.round,
+                rec.mean_split_loss,
+                rec.mean_local_loss,
+                rec.eval_accuracy,
+                rec.comm.mb(),
+                rec.sim_latency_s,
+                clock_s,
+                rec.wall_s
+            ),
+        }
+    }
+}
+
+/// Run every configured round of `run`, streaming events to `obs`;
+/// returns the completed history (also available via `run.history()`).
+pub fn drive(run: &mut dyn FederatedRun, obs: &mut dyn RoundObserver) -> Result<RunHistory> {
+    let rounds = run.fed().rounds;
+    obs.on_run_start(run.method(), run.fed());
+    let mut clock_s = 0.0;
+    for r in 0..rounds {
+        obs.on_round_start(r);
+        let rec = run.round(r)?;
+        clock_s += rec.sim_latency_s;
+        if rec.eval_accuracy.is_finite() {
+            obs.on_eval(r, rec.eval_accuracy);
+        }
+        obs.on_round_end(&rec, clock_s);
+    }
+    let history = run.history().clone();
+    obs.on_run_end(&history);
+    Ok(history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_charges_per_slot_and_reports_max() {
+        // 1000 B/s shared by 4 clients -> 250 B/s effective per link.
+        let net = NetworkModel { rate_bytes_per_s: 1000.0, sharing_clients: 4 };
+        let mut clock = LinkClock::new(net, 3);
+        let dt = clock.charge(0, 500); // 2 s
+        assert!((dt - 2.0).abs() < 1e-9);
+        clock.charge(0, 250); // +1 s -> slot 0 at 3 s
+        clock.charge(2, 1000); // 4 s
+        assert!((clock.slot_s(0) - 3.0).abs() < 1e-9);
+        assert!((clock.slot_s(1) - 0.0).abs() < 1e-12);
+        assert!((clock.round_latency_s() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_clock_reports_zero_latency() {
+        let clock = LinkClock::new(NetworkModel::default(), 0);
+        assert_eq!(clock.round_latency_s(), 0.0);
+    }
+}

@@ -13,8 +13,12 @@
 //! manifest estimates, and uplink payloads honour `FedConfig::wire`
 //! (f32/f16/int8). Each selected client runs on its own thread against the
 //! server [`Hub`], so Phase-2 split training is genuinely concurrent; the
-//! simulated clock still charges the shared-rate model of §3.5, with round
-//! latency = max over per-client link clocks.
+//! simulated clock charges the shared-rate model of §3.5 through the
+//! driver's [`LinkClock`], with round latency = max over per-client link
+//! clocks.
+//!
+//! Constructed only via [`super::RunBuilder`]; driven only through the
+//! [`FederatedRun`] trait.
 
 use std::time::Instant;
 
@@ -30,28 +34,39 @@ use crate::transport::{Frame, Hub, Payload, WireFormat};
 use crate::util::rng::Rng;
 
 use super::client::{client_split_round, Client, ClientRoundOutcome};
+use super::driver::LinkClock;
+use super::run::FederatedRun;
 use super::server::Server;
-use super::FedConfig;
+use super::{FedConfig, Method};
 
-pub struct SfPromptEngine<'a> {
-    pub store: &'a ArtifactStore,
-    pub fed: FedConfig,
-    pub net: NetworkModel,
-    pub global: ParamSet,
-    pub clients: Vec<Client>,
+pub(crate) struct SfPromptEngine<'a> {
+    store: &'a ArtifactStore,
+    fed: FedConfig,
+    net: NetworkModel,
+    global: ParamSet,
+    clients: Vec<Client>,
     rng: Rng,
     /// bytes of the one-time head distribution (setup, not per-round)
-    pub setup_bytes: u64,
+    setup_bytes: u64,
     /// Frozen segments as pre-converted PJRT literals (perf fast path —
     /// head/body never change during an SFPrompt run; see §Perf).
     head_lits: Vec<xla::Literal>,
     body_lits: Vec<xla::Literal>,
+    train: &'a SynthDataset,
+    eval: Option<&'a SynthDataset>,
+    history: RunHistory,
 }
 
 impl<'a> SfPromptEngine<'a> {
-    pub fn new(store: &'a ArtifactStore, fed: FedConfig, dataset: &SynthDataset) -> Self {
+    pub(crate) fn new(
+        store: &'a ArtifactStore,
+        fed: FedConfig,
+        net: NetworkModel,
+        train: &'a SynthDataset,
+        eval: Option<&'a SynthDataset>,
+    ) -> Self {
         let mut rng = Rng::new(fed.seed);
-        let labels = dataset.labels();
+        let labels = train.labels();
         let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
         let clients = parts
             .into_iter()
@@ -66,7 +81,7 @@ impl<'a> SfPromptEngine<'a> {
             .expect("body literals");
         SfPromptEngine {
             store,
-            net: NetworkModel { sharing_clients: fed.clients_per_round, ..Default::default() },
+            net,
             fed,
             global,
             clients,
@@ -75,18 +90,17 @@ impl<'a> SfPromptEngine<'a> {
             setup_bytes: head_bytes * fed.num_clients as u64,
             head_lits,
             body_lits,
+            train,
+            eval,
+            history: RunHistory::default(),
         }
     }
 
     /// Run one global round; returns its metrics record.
-    pub fn run_round(
-        &mut self,
-        round: usize,
-        dataset: &SynthDataset,
-        eval: Option<&SynthDataset>,
-    ) -> Result<RoundRecord> {
+    fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
         let cfg = self.store.manifest.config.clone();
+        let train = self.train;
 
         let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
         let selected = super::selection::select(
@@ -96,9 +110,8 @@ impl<'a> SfPromptEngine<'a> {
         let k = selected.len();
 
         let mut comm = ByteMeter::default();
-        let mut elapsed = vec![0.0f64; k];
+        let mut clock = LinkClock::new(self.net, k);
         let (hub, endpoints) = Hub::new(k);
-        let net = self.net;
 
         // --- Round start: distribute the aggregated (W_t, p). ---
         let dist = Payload::Segments(vec![
@@ -110,7 +123,7 @@ impl<'a> SfPromptEngine<'a> {
                 Frame::new(MsgKind::ModelDistribution, round as u32, cid as u32, dist.clone());
             let n = hub.send_to(slot, &frame, WireFormat::F32)?;
             comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-            elapsed[slot] += net.transfer_time_s(n);
+            clock.charge(slot, n);
         }
 
         // Threads own the selected clients for the round; park stand-ins.
@@ -126,7 +139,7 @@ impl<'a> SfPromptEngine<'a> {
         let store = self.store;
         let head_lits: &[xla::Literal] = &self.head_lits;
         let body_lits: &[xla::Literal] = &self.body_lits;
-        let examples = &dataset.examples;
+        let examples = &train.examples;
         let cfg_ref = &cfg;
         let selected_ref = &selected;
 
@@ -166,8 +179,8 @@ impl<'a> SfPromptEngine<'a> {
 
             // --- Server: route Phase-2 traffic, FedAvg, broadcast. ---
             let agg_result = serve_round(
-                store, body_lits, &net, &hub, selected_ref, round as u32,
-                &n_ks, &mut comm, &mut elapsed,
+                store, body_lits, &hub, selected_ref, round as u32,
+                &n_ks, &mut comm, &mut clock,
             );
             // Dropping the hub unblocks any client still waiting on a recv
             // after a server-side error.
@@ -215,13 +228,8 @@ impl<'a> SfPromptEngine<'a> {
         self.global.set(tail);
         self.global.set(prompt);
 
-        // Simulated round latency: parallel clients → max link clock.
-        let sim_latency_s = elapsed.iter().copied().fold(0.0, f64::max);
-
-        let eval_accuracy = match eval {
-            Some(ds)
-                if round % self.fed.eval_every == 0 || round + 1 == self.fed.rounds =>
-            {
+        let eval_accuracy = match self.eval {
+            Some(ds) if self.fed.should_eval(round) => {
                 evaluate(self.store, "eval_forward", &self.global, ds, self.fed.eval_limit)?
             }
             _ => f64::NAN,
@@ -234,24 +242,52 @@ impl<'a> SfPromptEngine<'a> {
             eval_accuracy,
             comm,
             wall_s: wall0.elapsed().as_secs_f64(),
-            sim_latency_s,
+            // Simulated round latency: parallel clients → max link clock.
+            sim_latency_s: clock.round_latency_s(),
         })
     }
+}
 
-    /// Run the configured number of rounds.
-    pub fn run(
-        &mut self,
-        dataset: &SynthDataset,
-        eval: Option<&SynthDataset>,
-        mut on_round: impl FnMut(&RoundRecord),
-    ) -> Result<RunHistory> {
-        let mut history = RunHistory::default();
-        for r in 0..self.fed.rounds {
-            let rec = self.run_round(r, dataset, eval)?;
-            on_round(&rec);
-            history.push(rec);
+impl FederatedRun for SfPromptEngine<'_> {
+    fn method(&self) -> Method {
+        Method::SfPrompt
+    }
+
+    fn fed(&self) -> &FedConfig {
+        &self.fed
+    }
+
+    fn round(&mut self, r: usize) -> Result<RoundRecord> {
+        if r != self.history.rounds.len() {
+            return Err(anyhow!(
+                "rounds must run in order: expected round {}, got {r}",
+                self.history.rounds.len()
+            ));
         }
-        Ok(history)
+        let rec = self.run_round(r)?;
+        self.history.push(rec.clone());
+        Ok(rec)
+    }
+
+    fn history(&self) -> &RunHistory {
+        &self.history
+    }
+
+    fn comm_totals(&self) -> &ByteMeter {
+        &self.history.total_comm
+    }
+
+    fn setup_bytes(&self) -> u64 {
+        self.setup_bytes
+    }
+
+    fn final_eval(&mut self) -> Result<f64> {
+        match self.eval {
+            Some(ds) => {
+                evaluate(self.store, "eval_forward", &self.global, ds, self.fed.eval_limit)
+            }
+            None => Ok(f64::NAN),
+        }
     }
 }
 
@@ -263,13 +299,12 @@ impl<'a> SfPromptEngine<'a> {
 fn serve_round(
     store: &ArtifactStore,
     body_lits: &[xla::Literal],
-    net: &NetworkModel,
     hub: &Hub,
     selected: &[usize],
     round: u32,
     n_ks: &[usize],
     comm: &mut ByteMeter,
-    elapsed: &mut [f64],
+    clock: &mut LinkClock,
 ) -> Result<(SegmentParams, SegmentParams)> {
     let slot_of = |cid: u32| {
         selected
@@ -286,7 +321,7 @@ fn serve_round(
         let (frame, n) = hub.recv_any()?;
         let slot = slot_of(frame.client)?;
         comm.record(frame.kind, Direction::Uplink, n);
-        elapsed[slot] += net.transfer_time_s(n);
+        clock.charge(slot, n);
         match frame.kind {
             MsgKind::SmashedData => {
                 let smashed = frame.payload.into_tensor()?;
@@ -296,7 +331,7 @@ fn serve_round(
                     Frame::new(MsgKind::BodyOutput, round, frame.client, Payload::Tensor(body_out));
                 let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
                 comm.record(MsgKind::BodyOutput, Direction::Downlink, nb);
-                elapsed[slot] += net.transfer_time_s(nb);
+                clock.charge(slot, nb);
             }
             MsgKind::GradBodyOut => {
                 let g_body_out = frame.payload.into_tensor()?;
@@ -309,7 +344,7 @@ fn serve_round(
                 );
                 let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
                 comm.record(MsgKind::GradSmashed, Direction::Downlink, nb);
-                elapsed[slot] += net.transfer_time_s(nb);
+                clock.charge(slot, nb);
             }
             MsgKind::Upload => {
                 let mut segs = frame.payload.into_segments()?;
@@ -347,7 +382,7 @@ fn serve_round(
         let frame = Frame::new(MsgKind::AggregateBroadcast, round, cid as u32, bc.clone());
         let n = hub.send_to(slot, &frame, WireFormat::F32)?;
         comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, n);
-        elapsed[slot] += net.transfer_time_s(n);
+        clock.charge(slot, n);
     }
     Ok((tail, prompt))
 }

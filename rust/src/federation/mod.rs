@@ -1,5 +1,18 @@
 //! Federated split-training coordinator (L3, the paper's system).
 //!
+//! The public surface is the **unified run API**:
+//!
+//! * [`run`] — [`RunBuilder`] (validated, the only engine constructor)
+//!   and the [`FederatedRun`] trait every engine implements, so drivers
+//!   are method-agnostic.
+//! * [`driver`] — the one round loop ([`drive`]) with its
+//!   [`RoundObserver`] event stream, plus the shared-rate [`LinkClock`]
+//!   (§3.5) both engines charge latency through.
+//! * [`spec`] — [`RunSpec`] (JSON in) / [`RunReport`] (JSON out) for
+//!   headless `train --spec run.json --json` and data-driven experiments.
+//!
+//! Internals:
+//!
 //! * `client` — per-client state + Phase 1 (local-loss update, EL2N
 //!   pruning) and the client half of Phase 2.
 //! * `server` — the server half of Phase 2 (body forward/backward) and
@@ -9,14 +22,21 @@
 //! * `baselines` — FL (full fine-tune), SFL+FF, SFL+Linear on the same
 //!   substrate, for Figures 4/6/7 and Tables 2/3.
 
-pub mod baselines;
+mod baselines;
 pub mod client;
-pub mod engine;
+pub mod driver;
+mod engine;
+pub mod run;
 pub mod selection;
 pub mod server;
+pub mod spec;
 
-pub use engine::SfPromptEngine;
+pub use driver::{drive, LinkClock, NullObserver, ProgressPrinter, RoundObserver};
+pub use run::{FederatedRun, RunBuilder};
 pub use selection::Selection;
+pub use spec::{RunReport, RunSpec};
+
+use anyhow::{bail, Result};
 
 use crate::partition::Partition;
 
@@ -51,6 +71,14 @@ pub struct FedConfig {
     /// wire precision for uplink payloads (SmashedData, GradBodyOut,
     /// Upload); downlink and control traffic always travels as f32
     pub wire: crate::transport::WireFormat,
+}
+
+impl FedConfig {
+    /// Eval-scheduling policy, shared by every engine: evaluate every
+    /// `eval_every` rounds, and always on the final round.
+    pub fn should_eval(&self, round: usize) -> bool {
+        round % self.eval_every == 0 || round + 1 == self.rounds
+    }
 }
 
 impl Default for FedConfig {
@@ -90,5 +118,15 @@ impl Method {
             Method::SflFullFinetune => "sfl_ff",
             Method::SflLinear => "sfl_linear",
         }
+    }
+
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "sfprompt" => Method::SfPrompt,
+            "fl" => Method::Fl,
+            "sfl_ff" => Method::SflFullFinetune,
+            "sfl_linear" => Method::SflLinear,
+            other => bail!("unknown method {other:?} (known: sfprompt fl sfl_ff sfl_linear)"),
+        })
     }
 }

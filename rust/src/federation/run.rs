@@ -1,0 +1,330 @@
+//! The unified run API: [`RunBuilder`] (the only way to construct an
+//! engine) and the [`FederatedRun`] trait (the only way drivers talk to
+//! one).
+//!
+//! The paper evaluates one orchestration loop against three baselines
+//! under identical accounting; this module makes that symmetry a type.
+//! A driver holds a `Box<dyn FederatedRun>` and neither knows nor cares
+//! whether rounds run split training with prompts (SFPrompt), full
+//! FedAvg (FL), or SplitFed (SFL+FF / SFL+Linear) — method variants are
+//! a [`super::Method`] value plus a [`super::FedConfig`] delta, not a new
+//! engine type.
+//!
+//! ```text
+//! RunBuilder::new(method)         configure: FedConfig, wire, net model
+//!     .rounds(10).clients(50, 5)  (validated: see `validate`)
+//!     .build(&store, &train, Some(&eval))?   -> Box<dyn FederatedRun>
+//! driver::drive(run, observer)    round loop + event stream
+//! ```
+
+use anyhow::{bail, Result};
+
+use crate::comm::{ByteMeter, NetworkModel};
+use crate::data::SynthDataset;
+use crate::metrics::{RoundRecord, RunHistory};
+use crate::partition::Partition;
+use crate::runtime::ArtifactStore;
+use crate::transport::WireFormat;
+
+use super::baselines::BaselineEngine;
+use super::engine::SfPromptEngine;
+use super::{FedConfig, Method, Selection};
+
+/// One federated training run, method-agnostic. Implemented by the
+/// SFPrompt engine and the baseline engine; constructed by [`RunBuilder`].
+///
+/// Rounds must be executed in order (`round(0)`, `round(1)`, …); the
+/// [`super::drive`] loop does this and streams events to an observer.
+pub trait FederatedRun {
+    /// Which method this run executes (for reporting).
+    fn method(&self) -> Method;
+
+    /// The validated federated configuration.
+    fn fed(&self) -> &FedConfig;
+
+    /// Execute global round `r` (select clients, run the method's phases
+    /// over the simulated network) and return its metrics record. The
+    /// record is also appended to [`FederatedRun::history`].
+    fn round(&mut self, r: usize) -> Result<RoundRecord>;
+
+    /// All rounds executed so far, with accumulated communication totals.
+    fn history(&self) -> &RunHistory;
+
+    /// Accumulated per-`MsgKind` measured bytes across all rounds so far.
+    fn comm_totals(&self) -> &ByteMeter;
+
+    /// One-time setup traffic outside the round loop (e.g. SFPrompt's
+    /// initial frozen-head distribution). Zero for methods without any.
+    fn setup_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Evaluate the current global model on the eval split (NaN when the
+    /// run was built without one).
+    fn final_eval(&mut self) -> Result<f64>;
+}
+
+/// Validated, consuming builder — the only constructor for engines.
+///
+/// Defaults come from [`FedConfig::default`] (the paper's §4.1 setting)
+/// and the shared-rate [`NetworkModel`] of §3.5 with `K` =
+/// `clients_per_round` clients sharing the link.
+#[derive(Debug, Clone, Copy)]
+pub struct RunBuilder {
+    method: Method,
+    fed: FedConfig,
+    net: Option<NetworkModel>,
+    net_rate: Option<f64>,
+}
+
+impl RunBuilder {
+    pub fn new(method: Method) -> RunBuilder {
+        RunBuilder { method, fed: FedConfig::default(), net: None, net_rate: None }
+    }
+
+    /// Replace the whole federated config at once.
+    pub fn fed(mut self, fed: FedConfig) -> RunBuilder {
+        self.fed = fed;
+        self
+    }
+
+    pub fn rounds(mut self, rounds: usize) -> RunBuilder {
+        self.fed.rounds = rounds;
+        self
+    }
+
+    /// Fleet size and per-round cohort size (`K` of `N`).
+    pub fn clients(mut self, total: usize, per_round: usize) -> RunBuilder {
+        self.fed.num_clients = total;
+        self.fed.clients_per_round = per_round;
+        self
+    }
+
+    pub fn local_epochs(mut self, epochs: usize) -> RunBuilder {
+        self.fed.local_epochs = epochs;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> RunBuilder {
+        self.fed.lr = lr;
+        self
+    }
+
+    pub fn retain_fraction(mut self, retain: f64) -> RunBuilder {
+        self.fed.retain_fraction = retain;
+        self
+    }
+
+    pub fn local_loss_update(mut self, enabled: bool) -> RunBuilder {
+        self.fed.local_loss_update = enabled;
+        self
+    }
+
+    pub fn partition(mut self, partition: Partition) -> RunBuilder {
+        self.fed.partition = partition;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> RunBuilder {
+        self.fed.seed = seed;
+        self
+    }
+
+    pub fn selection(mut self, selection: Selection) -> RunBuilder {
+        self.fed.selection = selection;
+        self
+    }
+
+    pub fn wire(mut self, wire: WireFormat) -> RunBuilder {
+        self.fed.wire = wire;
+        self
+    }
+
+    pub fn eval_limit(mut self, limit: Option<usize>) -> RunBuilder {
+        self.fed.eval_limit = limit;
+        self
+    }
+
+    pub fn eval_every(mut self, every: usize) -> RunBuilder {
+        self.fed.eval_every = every;
+        self
+    }
+
+    /// Override the whole network model (rate and sharing factor).
+    pub fn net(mut self, net: NetworkModel) -> RunBuilder {
+        self.net = Some(net);
+        self
+    }
+
+    /// Override only the shared link rate (bytes/s); the sharing factor
+    /// stays `clients_per_round` per the paper's §3.5 model.
+    pub fn net_rate(mut self, bytes_per_s: f64) -> RunBuilder {
+        self.net_rate = Some(bytes_per_s);
+        self
+    }
+
+    /// The config as currently accumulated (for inspection/reporting).
+    pub fn fed_config(&self) -> &FedConfig {
+        &self.fed
+    }
+
+    /// The network model [`RunBuilder::build`] will charge latency with.
+    pub fn resolved_net(&self) -> NetworkModel {
+        let mut net = self.net.unwrap_or(NetworkModel {
+            sharing_clients: self.fed.clients_per_round,
+            ..Default::default()
+        });
+        if let Some(rate) = self.net_rate {
+            net.rate_bytes_per_s = rate;
+        }
+        net
+    }
+
+    /// Check every invariant the engines rely on. `build` calls this; it
+    /// is public so specs can be checked without artifacts on disk.
+    pub fn validate(&self) -> Result<()> {
+        let f = &self.fed;
+        if f.num_clients == 0 {
+            bail!("num_clients must be at least 1");
+        }
+        if f.clients_per_round == 0 || f.clients_per_round > f.num_clients {
+            bail!(
+                "clients_per_round must be in 1..=num_clients, got {} of {}",
+                f.clients_per_round,
+                f.num_clients
+            );
+        }
+        if f.rounds == 0 {
+            bail!("rounds must be at least 1");
+        }
+        if f.local_epochs == 0 {
+            bail!("local_epochs must be at least 1");
+        }
+        if f.retain_fraction.is_nan() || f.retain_fraction <= 0.0 || f.retain_fraction > 1.0 {
+            bail!("retain_fraction must be in (0, 1], got {}", f.retain_fraction);
+        }
+        if !f.lr.is_finite() || f.lr <= 0.0 {
+            bail!("lr must be positive and finite, got {}", f.lr);
+        }
+        if f.eval_every == 0 {
+            bail!("eval_every must be at least 1");
+        }
+        if let Partition::Dirichlet { alpha } = f.partition {
+            if !alpha.is_finite() || alpha <= 0.0 {
+                bail!("dirichlet alpha must be positive and finite, got {alpha}");
+            }
+        }
+        let net = self.resolved_net();
+        if !net.rate_bytes_per_s.is_finite() || net.rate_bytes_per_s <= 0.0 {
+            bail!("network rate must be positive and finite, got {}", net.rate_bytes_per_s);
+        }
+        if net.sharing_clients == 0 {
+            bail!("network sharing_clients must be at least 1");
+        }
+        Ok(())
+    }
+
+    /// Validate, partition `train` over the fleet, and construct the
+    /// engine for `method`. `eval` enables per-round accuracy points and
+    /// [`FederatedRun::final_eval`].
+    pub fn build<'a>(
+        self,
+        store: &'a ArtifactStore,
+        train: &'a SynthDataset,
+        eval: Option<&'a SynthDataset>,
+    ) -> Result<Box<dyn FederatedRun + 'a>> {
+        self.validate()?;
+        if train.len() < self.fed.num_clients {
+            bail!(
+                "training set has {} samples for {} clients (every client needs at least one)",
+                train.len(),
+                self.fed.num_clients
+            );
+        }
+        let net = self.resolved_net();
+        Ok(match self.method {
+            Method::SfPrompt => {
+                Box::new(SfPromptEngine::new(store, self.fed, net, train, eval))
+            }
+            method => {
+                Box::new(BaselineEngine::new(store, self.fed, method, net, train, eval))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> RunBuilder {
+        RunBuilder::new(Method::SfPrompt)
+    }
+
+    #[test]
+    fn default_builder_validates() {
+        for method in
+            [Method::SfPrompt, Method::Fl, Method::SflFullFinetune, Method::SflLinear]
+        {
+            RunBuilder::new(method).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_oversubscribed_cohort() {
+        assert!(base().clients(4, 5).validate().is_err());
+        assert!(base().clients(5, 0).validate().is_err());
+        assert!(base().clients(0, 0).validate().is_err());
+        assert!(base().clients(5, 5).validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_retain_fraction_outside_unit_interval() {
+        for bad in [0.0, -0.5, 1.0001, f64::NAN, f64::INFINITY] {
+            assert!(base().retain_fraction(bad).validate().is_err(), "{bad}");
+        }
+        assert!(base().retain_fraction(1.0).validate().is_ok());
+        assert!(base().retain_fraction(1e-6).validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_zero_rounds_and_epochs() {
+        assert!(base().rounds(0).validate().is_err());
+        assert!(base().local_epochs(0).validate().is_err());
+        assert!(base().eval_every(0).validate().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lr_alpha_and_net() {
+        assert!(base().lr(0.0).validate().is_err());
+        assert!(base().lr(-1.0).validate().is_err());
+        assert!(base().lr(f32::NAN).validate().is_err());
+        assert!(base()
+            .partition(Partition::Dirichlet { alpha: 0.0 })
+            .validate()
+            .is_err());
+        assert!(base().net_rate(0.0).validate().is_err());
+        assert!(base().net_rate(-3.0).validate().is_err());
+        assert!(base()
+            .net(NetworkModel { rate_bytes_per_s: 1e6, sharing_clients: 0 })
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn net_rate_override_keeps_sharing_factor() {
+        let b = base().clients(40, 8).net_rate(2e6);
+        let net = b.resolved_net();
+        assert_eq!(net.sharing_clients, 8);
+        assert!((net.rate_bytes_per_s - 2e6).abs() < 1e-9);
+        b.validate().unwrap();
+    }
+
+    #[test]
+    fn full_net_override_wins() {
+        let b = base().net(NetworkModel { rate_bytes_per_s: 5e5, sharing_clients: 3 });
+        let net = b.resolved_net();
+        assert_eq!(net.sharing_clients, 3);
+        assert!((net.rate_bytes_per_s - 5e5).abs() < 1e-9);
+    }
+}

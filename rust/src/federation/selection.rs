@@ -18,6 +18,27 @@ pub enum Selection {
     RoundRobin,
 }
 
+impl Selection {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Selection::Uniform => "uniform",
+            Selection::WeightedBySamples => "weighted",
+            Selection::RoundRobin => "round_robin",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Selection> {
+        Ok(match s {
+            "uniform" => Selection::Uniform,
+            "weighted" => Selection::WeightedBySamples,
+            "round_robin" => Selection::RoundRobin,
+            other => anyhow::bail!(
+                "unknown selection strategy {other:?} (known: uniform weighted round_robin)"
+            ),
+        })
+    }
+}
+
 /// Select `k` distinct client ids from `n` clients.
 ///
 /// `sample_counts` is indexed by client id (used by WeightedBySamples);
@@ -105,6 +126,16 @@ mod tests {
             hits0 += sel.contains(&0) as usize;
         }
         assert!(hits9 > 3 * hits0, "rich {hits9} vs poor {hits0}");
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for s in
+            [Selection::Uniform, Selection::WeightedBySamples, Selection::RoundRobin]
+        {
+            assert_eq!(Selection::parse(s.label()).unwrap(), s);
+        }
+        assert!(Selection::parse("lottery").is_err());
     }
 
     #[test]

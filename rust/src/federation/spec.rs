@@ -1,0 +1,474 @@
+//! Serializable run descriptions: [`RunSpec`] (JSON in) and [`RunReport`]
+//! (JSON out), so `sfprompt train --spec run.json --json` works headlessly
+//! and experiment cells are data, not code.
+//!
+//! A spec names everything a run needs — artifact config, synthetic
+//! dataset profile, method, the full [`FedConfig`], dataset sizing, and an
+//! optional link-rate override — and turns into a [`super::RunBuilder`]
+//! plus generated datasets. A report carries the completed
+//! [`RunHistory`] with per-`MsgKind` measured bytes. Non-finite floats
+//! (`NaN` accuracy on eval-free rounds) serialize as `null`, so the
+//! output is always strict JSON.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::{synth, SynthDataset};
+use crate::metrics::RunHistory;
+use crate::partition::Partition;
+use crate::runtime::ModelConfig;
+use crate::transport::WireFormat;
+use crate::util::json::Json;
+
+use super::run::RunBuilder;
+use super::{FedConfig, Method, Selection};
+
+/// A fully specified training run (the unit the experiment harness and
+/// `train --spec` operate on).
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Artifact config name under `artifacts/` (e.g. "tiny", "small").
+    pub config: String,
+    /// Synthetic dataset profile name (cifar10 | cifar100 | svhn | flower102).
+    pub dataset: String,
+    pub method: Method,
+    pub fed: FedConfig,
+    pub samples_per_client: usize,
+    pub eval_samples: usize,
+    /// Optional §3.5 shared-link rate override, bytes/second.
+    pub net_rate_bytes_per_s: Option<f64>,
+}
+
+impl RunSpec {
+    /// A spec with the experiment-harness defaults (paper §4.1 federation,
+    /// lr 0.08, 32 samples/client, 160 eval samples).
+    pub fn new(config: &str, dataset: &str, method: Method) -> RunSpec {
+        RunSpec {
+            config: config.to_string(),
+            dataset: dataset.to_string(),
+            method,
+            // §4.1 defaults, with the harness's lr / eval-budget overrides.
+            fed: FedConfig { lr: 0.08, eval_limit: Some(160), ..FedConfig::default() },
+            samples_per_client: 32,
+            eval_samples: 160,
+            net_rate_bytes_per_s: None,
+        }
+    }
+
+    /// The builder this spec resolves to (validation happens at `build`).
+    pub fn builder(&self) -> RunBuilder {
+        let mut b = RunBuilder::new(self.method).fed(self.fed);
+        if let Some(rate) = self.net_rate_bytes_per_s {
+            b = b.net_rate(rate);
+        }
+        b
+    }
+
+    /// Generate the (train, eval) synthetic datasets for this spec under
+    /// the model config's geometry. Train and eval share class prototypes
+    /// (same proto seed) but draw disjoint samples.
+    pub fn datasets(&self, cfg: &ModelConfig) -> Result<(SynthDataset, SynthDataset)> {
+        if self.samples_per_client == 0 {
+            bail!("samples_per_client must be at least 1");
+        }
+        if self.eval_samples == 0 {
+            bail!("eval_samples must be at least 1 (accuracy over an empty split is meaningless)");
+        }
+        let mut profile = synth::profile(&self.dataset).ok_or_else(|| {
+            anyhow!(
+                "unknown dataset {:?} (known: {})",
+                self.dataset,
+                synth::PROFILES.iter().map(|p| p.name).collect::<Vec<_>>().join(" ")
+            )
+        })?;
+        // The model config's class count wins (e.g. small=10, small_c100=100).
+        profile.num_classes = cfg.num_classes;
+        let n_train = self.fed.num_clients * self.samples_per_client;
+        let train = SynthDataset::generate(
+            profile, cfg.image_size, cfg.channels, n_train,
+            /*seed_protos=*/ 1000 + self.fed.seed, /*seed_samples=*/ 2000 + self.fed.seed,
+        );
+        let eval = SynthDataset::generate(
+            profile, cfg.image_size, cfg.channels, self.eval_samples,
+            1000 + self.fed.seed, 9000 + self.fed.seed,
+        );
+        Ok((train, eval))
+    }
+
+    /// Parse a spec from JSON text. Every key is optional (defaults are
+    /// [`RunSpec::new`] with config "small" / dataset "cifar10" / method
+    /// sfprompt); unknown keys are rejected so typos fail loudly.
+    pub fn parse(text: &str) -> Result<RunSpec> {
+        let v = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        RunSpec::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunSpec> {
+        const KNOWN: [&str; 19] = [
+            "config", "dataset", "method", "rounds", "num_clients", "clients_per_round",
+            "local_epochs", "lr", "retain_fraction", "local_loss_update", "partition",
+            "seed", "eval_limit", "eval_every", "selection", "wire", "samples_per_client",
+            "eval_samples", "net_rate_bytes_per_s",
+        ];
+        let obj = v.as_obj().ok_or_else(|| anyhow!("run spec must be a JSON object"))?;
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("unknown run-spec key {key:?} (known: {})", KNOWN.join(" "));
+            }
+        }
+        let str_field = |key: &str, default: &str| -> Result<String> {
+            match obj.get(key) {
+                None => Ok(default.to_string()),
+                Some(j) => j
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("spec key {key:?} must be a string")),
+            }
+        };
+        let usize_field = |key: &str, default: usize| -> Result<usize> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(j) => j
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("spec key {key:?} must be a non-negative integer")),
+            }
+        };
+        let f64_field = |key: &str, default: f64| -> Result<f64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(j) => {
+                    j.as_f64().ok_or_else(|| anyhow!("spec key {key:?} must be a number"))
+                }
+            }
+        };
+        let bool_field = |key: &str, default: bool| -> Result<bool> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(j) => {
+                    j.as_bool().ok_or_else(|| anyhow!("spec key {key:?} must be a boolean"))
+                }
+            }
+        };
+
+        let config = str_field("config", "small")?;
+        let dataset = str_field("dataset", "cifar10")?;
+        let method = Method::parse(&str_field("method", "sfprompt")?)?;
+        let mut spec = RunSpec::new(&config, &dataset, method);
+        let d = spec.fed; // defaults
+
+        spec.fed.rounds = usize_field("rounds", d.rounds)?;
+        spec.fed.num_clients = usize_field("num_clients", d.num_clients)?;
+        spec.fed.clients_per_round = usize_field("clients_per_round", d.clients_per_round)?;
+        spec.fed.local_epochs = usize_field("local_epochs", d.local_epochs)?;
+        spec.fed.lr = f64_field("lr", d.lr as f64)? as f32;
+        spec.fed.retain_fraction = f64_field("retain_fraction", d.retain_fraction)?;
+        spec.fed.local_loss_update = bool_field("local_loss_update", d.local_loss_update)?;
+        spec.fed.partition = match obj.get("partition") {
+            None => d.partition,
+            Some(j) => partition_from_json(j)?,
+        };
+        spec.fed.seed = match obj.get("seed") {
+            None => d.seed,
+            // Seeds above 2^53 don't survive f64; they travel as strings.
+            Some(Json::Str(s)) => s
+                .parse()
+                .map_err(|_| anyhow!("spec key \"seed\" must be a non-negative integer"))?,
+            Some(j) => j
+                .as_i64()
+                .and_then(|n| u64::try_from(n).ok())
+                .ok_or_else(|| anyhow!("spec key \"seed\" must be a non-negative integer"))?,
+        };
+        spec.fed.eval_limit = match obj.get("eval_limit") {
+            None => d.eval_limit,
+            Some(Json::Null) => None,
+            Some(j) => Some(
+                j.as_usize()
+                    .ok_or_else(|| anyhow!("spec key \"eval_limit\" must be an integer or null"))?,
+            ),
+        };
+        spec.fed.eval_every = usize_field("eval_every", d.eval_every)?;
+        spec.fed.selection = match obj.get("selection") {
+            None => d.selection,
+            Some(j) => Selection::parse(
+                j.as_str()
+                    .ok_or_else(|| anyhow!("spec key \"selection\" must be a string"))?,
+            )?,
+        };
+        spec.fed.wire = match obj.get("wire") {
+            None => d.wire,
+            Some(j) => WireFormat::parse(
+                j.as_str().ok_or_else(|| anyhow!("spec key \"wire\" must be a string"))?,
+            )?,
+        };
+        spec.samples_per_client = usize_field("samples_per_client", spec.samples_per_client)?;
+        spec.eval_samples = usize_field("eval_samples", spec.eval_samples)?;
+        spec.net_rate_bytes_per_s = match obj.get("net_rate_bytes_per_s") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(j.as_f64().ok_or_else(|| {
+                anyhow!("spec key \"net_rate_bytes_per_s\" must be a number or null")
+            })?),
+        };
+        Ok(spec)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let f = &self.fed;
+        let mut o = BTreeMap::new();
+        o.insert("config".to_string(), Json::Str(self.config.clone()));
+        o.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
+        o.insert("method".to_string(), Json::Str(self.method.label().to_string()));
+        o.insert("rounds".to_string(), Json::Num(f.rounds as f64));
+        o.insert("num_clients".to_string(), Json::Num(f.num_clients as f64));
+        o.insert("clients_per_round".to_string(), Json::Num(f.clients_per_round as f64));
+        o.insert("local_epochs".to_string(), Json::Num(f.local_epochs as f64));
+        o.insert("lr".to_string(), Json::Num(f.lr as f64));
+        o.insert("retain_fraction".to_string(), Json::Num(f.retain_fraction));
+        o.insert("local_loss_update".to_string(), Json::Bool(f.local_loss_update));
+        o.insert("partition".to_string(), partition_to_json(f.partition));
+        o.insert(
+            "seed".to_string(),
+            // Seeds above 2^53 are not exact in f64; emit them as strings
+            // so the report always reproduces the run it documents.
+            if f.seed <= (1u64 << 53) {
+                Json::Num(f.seed as f64)
+            } else {
+                Json::Str(f.seed.to_string())
+            },
+        );
+        o.insert(
+            "eval_limit".to_string(),
+            f.eval_limit.map_or(Json::Null, |n| Json::Num(n as f64)),
+        );
+        o.insert("eval_every".to_string(), Json::Num(f.eval_every as f64));
+        o.insert("selection".to_string(), Json::Str(f.selection.label().to_string()));
+        o.insert("wire".to_string(), Json::Str(f.wire.label().to_string()));
+        o.insert("samples_per_client".to_string(), Json::Num(self.samples_per_client as f64));
+        o.insert("eval_samples".to_string(), Json::Num(self.eval_samples as f64));
+        if let Some(rate) = self.net_rate_bytes_per_s {
+            o.insert("net_rate_bytes_per_s".to_string(), Json::Num(rate));
+        }
+        Json::Obj(o)
+    }
+}
+
+fn partition_from_json(v: &Json) -> Result<Partition> {
+    if let Some(s) = v.as_str() {
+        if s == "iid" {
+            return Ok(Partition::Iid);
+        }
+        bail!("unknown partition {s:?} (use \"iid\" or {{\"dirichlet\": alpha}})");
+    }
+    if let Some(obj) = v.as_obj() {
+        // Exactly {"dirichlet": alpha} — extra keys are typos, not knobs.
+        if let (1, Some(alpha)) = (obj.len(), obj.get("dirichlet").and_then(Json::as_f64)) {
+            return Ok(Partition::Dirichlet { alpha });
+        }
+    }
+    bail!("partition must be \"iid\" or {{\"dirichlet\": alpha}}")
+}
+
+fn partition_to_json(p: Partition) -> Json {
+    match p {
+        Partition::Iid => Json::Str("iid".to_string()),
+        Partition::Dirichlet { alpha } => {
+            let mut o = BTreeMap::new();
+            o.insert("dirichlet".to_string(), Json::Num(alpha));
+            Json::Obj(o)
+        }
+    }
+}
+
+/// NaN/inf are not JSON; map them to null.
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// The structured result of a completed run: the spec it ran under, the
+/// per-round records, and the accumulated measured-byte totals broken
+/// down per message kind.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub spec: RunSpec,
+    pub setup_bytes: u64,
+    pub history: RunHistory,
+}
+
+impl RunReport {
+    pub fn new(spec: &RunSpec, setup_bytes: u64, history: RunHistory) -> RunReport {
+        RunReport { spec: spec.clone(), setup_bytes, history }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let h = &self.history;
+        let rounds: Vec<Json> = h
+            .rounds
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("round".to_string(), Json::Num(r.round as f64));
+                o.insert("local_loss".to_string(), num_or_null(r.mean_local_loss));
+                o.insert("split_loss".to_string(), num_or_null(r.mean_split_loss));
+                o.insert("accuracy".to_string(), num_or_null(r.eval_accuracy));
+                o.insert("bytes".to_string(), Json::Num(r.comm.total() as f64));
+                o.insert("messages".to_string(), Json::Num(r.comm.messages as f64));
+                o.insert("sim_latency_s".to_string(), num_or_null(r.sim_latency_s));
+                o.insert("wall_s".to_string(), num_or_null(r.wall_s));
+                Json::Obj(o)
+            })
+            .collect();
+
+        let by_kind: BTreeMap<String, Json> = h
+            .total_comm
+            .by_kind
+            .iter()
+            .map(|(kind, &bytes)| (kind.to_string(), Json::Num(bytes as f64)))
+            .collect();
+        let mut comm = BTreeMap::new();
+        comm.insert("total_bytes".to_string(), Json::Num(h.total_comm.total() as f64));
+        comm.insert("uplink_bytes".to_string(), Json::Num(h.total_comm.uplink as f64));
+        comm.insert("downlink_bytes".to_string(), Json::Num(h.total_comm.downlink as f64));
+        comm.insert("messages".to_string(), Json::Num(h.total_comm.messages as f64));
+        comm.insert("setup_bytes".to_string(), Json::Num(self.setup_bytes as f64));
+        comm.insert("by_kind".to_string(), Json::Obj(by_kind));
+
+        let mut o = BTreeMap::new();
+        o.insert("spec".to_string(), self.spec.to_json());
+        o.insert("rounds".to_string(), Json::Arr(rounds));
+        o.insert("comm".to_string(), Json::Obj(comm));
+        o.insert("final_accuracy".to_string(), num_or_null(h.final_accuracy()));
+        o.insert("best_accuracy".to_string(), num_or_null(h.best_accuracy()));
+        o.insert(
+            "sim_latency_s".to_string(),
+            num_or_null(h.rounds.iter().map(|r| r.sim_latency_s).sum()),
+        );
+        o.insert("wall_s".to_string(), num_or_null(h.rounds.iter().map(|r| r.wall_s).sum()));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{ByteMeter, Direction, MsgKind};
+    use crate::metrics::RoundRecord;
+
+    #[test]
+    fn run_spec_json_roundtrip() {
+        let mut spec = RunSpec::new("small_c100", "cifar100", Method::SflLinear);
+        spec.fed.partition = Partition::Dirichlet { alpha: 0.25 };
+        spec.fed.wire = WireFormat::Int8;
+        spec.fed.selection = Selection::WeightedBySamples;
+        spec.fed.eval_limit = None;
+        spec.fed.rounds = 7;
+        spec.fed.lr = 0.125;
+        spec.fed.local_loss_update = false;
+        spec.samples_per_client = 48;
+        spec.net_rate_bytes_per_s = Some(2.5e6);
+
+        let text = spec.to_json().to_string();
+        let back = RunSpec::parse(&text).unwrap();
+        assert_eq!(back.to_json(), spec.to_json());
+        assert_eq!(back.method, Method::SflLinear);
+        assert_eq!(back.config, "small_c100");
+        assert_eq!(back.fed.rounds, 7);
+        assert_eq!(back.fed.wire, WireFormat::Int8);
+        assert_eq!(back.fed.selection, Selection::WeightedBySamples);
+        assert!(back.fed.eval_limit.is_none());
+        assert!(!back.fed.local_loss_update);
+        assert_eq!(back.fed.partition, Partition::Dirichlet { alpha: 0.25 });
+        assert_eq!(back.net_rate_bytes_per_s, Some(2.5e6));
+    }
+
+    #[test]
+    fn run_spec_defaults_apply_for_missing_keys() {
+        let spec = RunSpec::parse(r#"{"method": "fl", "rounds": 3}"#).unwrap();
+        assert_eq!(spec.method, Method::Fl);
+        assert_eq!(spec.fed.rounds, 3);
+        assert_eq!(spec.config, "small");
+        assert_eq!(spec.dataset, "cifar10");
+        assert_eq!(spec.fed.num_clients, 50);
+        assert_eq!(spec.fed.eval_limit, Some(160));
+        assert!(spec.net_rate_bytes_per_s.is_none());
+        spec.builder().validate().unwrap();
+    }
+
+    #[test]
+    fn run_spec_rejects_malformed_input() {
+        assert!(RunSpec::parse("[1, 2]").is_err());
+        assert!(RunSpec::parse(r#"{"rond": 3}"#).is_err(), "unknown key must fail");
+        assert!(RunSpec::parse(r#"{"method": "sgd"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"partition": "zipf"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"wire": "bf16"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"rounds": "ten"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"rounds": -2}"#).is_err());
+        assert!(RunSpec::parse("{").is_err());
+    }
+
+    #[test]
+    fn run_spec_giant_seeds_roundtrip_exactly() {
+        let mut spec = RunSpec::new("small", "cifar10", Method::SfPrompt);
+        spec.fed.seed = u64::MAX;
+        let back = RunSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.fed.seed, u64::MAX);
+        // Small seeds stay plain JSON numbers.
+        spec.fed.seed = 17;
+        assert!(spec.to_json().to_string().contains("\"seed\":17"));
+        assert!(RunSpec::parse(r#"{"seed": -1}"#).is_err());
+        assert!(RunSpec::parse(r#"{"seed": "not-a-number"}"#).is_err());
+    }
+
+    #[test]
+    fn run_spec_partition_forms() {
+        let iid = RunSpec::parse(r#"{"partition": "iid"}"#).unwrap();
+        assert_eq!(iid.fed.partition, Partition::Iid);
+        let dir = RunSpec::parse(r#"{"partition": {"dirichlet": 0.1}}"#).unwrap();
+        assert_eq!(dir.fed.partition, Partition::Dirichlet { alpha: 0.1 });
+        // Extra keys inside the partition object are typos, not knobs.
+        assert!(RunSpec::parse(r#"{"partition": {"dirichlet": 0.1, "alpha": 0.5}}"#).is_err());
+        assert!(RunSpec::parse(r#"{"partition": {}}"#).is_err());
+    }
+
+    #[test]
+    fn run_report_json_is_strict_and_nan_free() {
+        let mut history = RunHistory::default();
+        for (round, acc) in [(0usize, 0.5f64), (1, f64::NAN)] {
+            let mut comm = ByteMeter::default();
+            comm.record(MsgKind::SmashedData, Direction::Uplink, 100);
+            comm.record(MsgKind::BodyOutput, Direction::Downlink, 60);
+            history.push(RoundRecord {
+                round,
+                mean_local_loss: 1.5,
+                mean_split_loss: 2.0,
+                eval_accuracy: acc,
+                comm,
+                wall_s: 0.25,
+                sim_latency_s: 0.5,
+            });
+        }
+        let spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);
+        let report = RunReport::new(&spec, 123, history);
+        let text = report.to_json().to_string();
+        assert!(!text.contains("NaN"), "{text}");
+
+        let v = Json::parse(&text).unwrap();
+        let rounds = v.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[1].get("accuracy"), Some(&Json::Null));
+        assert_eq!(rounds[0].get("accuracy").unwrap().as_f64(), Some(0.5));
+        let comm = v.get("comm").unwrap();
+        assert_eq!(comm.get("setup_bytes").unwrap().as_usize(), Some(123));
+        assert_eq!(comm.get("total_bytes").unwrap().as_usize(), Some(320));
+        assert_eq!(
+            comm.get("by_kind").unwrap().get("smashed_data").unwrap().as_usize(),
+            Some(200)
+        );
+        assert_eq!(v.get("spec").unwrap().get("method").unwrap().as_str(), Some("sfprompt"));
+        assert_eq!(v.get("final_accuracy"), Some(&Json::Null));
+        assert_eq!(v.get("best_accuracy").unwrap().as_f64(), Some(0.5));
+    }
+}

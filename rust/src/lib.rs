@@ -20,6 +20,30 @@
 //! build uses a functional host-side stub) and drives everything from the
 //! JSON manifest.
 //!
+//! ## The unified run API
+//!
+//! Every run — the paper's method and all three baselines — goes through
+//! one typed pipeline (see `docs/API.md` for the full walkthrough):
+//!
+//! ```text
+//! RunSpec (JSON, optional)                 federation::spec
+//!   └─> RunBuilder::new(method)...         federation::run   (validated;
+//!         .build(&store, &train, eval)?     the ONLY engine constructor)
+//!         └─> Box<dyn FederatedRun>        method-agnostic engine handle
+//!               └─> drive(run, observer)   federation::driver (the ONE
+//!                     └─> RunHistory        round loop + event stream)
+//!                           └─> RunReport  (JSON out, per-kind bytes)
+//! ```
+//!
+//! [`federation::FederatedRun`] exposes `round` / `history` /
+//! `comm_totals` / `final_eval`, so drivers (CLI `train`, the experiment
+//! harness, examples, tests, benches) never name an engine type; method
+//! variants are a [`federation::Method`] value plus a
+//! [`federation::FedConfig`] delta. Progress, eval points, per-`MsgKind`
+//! bytes, and the simulated §3.5 clock stream through
+//! [`federation::RoundObserver`]; `sfprompt train --spec run.json --json`
+//! runs the whole pipeline headlessly.
+//!
 //! ## Wire protocol & communication accounting
 //!
 //! Communication cost — the paper's headline metric — is **measured**, not

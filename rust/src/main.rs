@@ -3,15 +3,17 @@
 //! Subcommands:
 //!   inspect    --config <name>             show a manifest's inventory
 //!   train      --config <name> [...]       run SFPrompt (or a baseline)
+//!              --spec run.json --json      headless: RunSpec in, RunReport out
 //!   experiment --id <fig2|fig4|...|all>    regenerate a paper table/figure
 //!   analyze                                closed-form cost model sweep
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use sfprompt::analysis::{fl_crossover_w_bytes, sweep, CostParams};
 use sfprompt::experiments::{self, ExpOptions};
-use sfprompt::federation::baselines::BaselineEngine;
-use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
+use sfprompt::federation::{
+    drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec,
+};
 use sfprompt::partition::Partition;
 use sfprompt::runtime::ArtifactStore;
 use sfprompt::transport::WireFormat;
@@ -23,14 +25,19 @@ sfprompt — split federated prompt fine-tuning coordinator
 
 USAGE:
   sfprompt inspect    --config <name>
-  sfprompt train      --config <name> [--method sfprompt|fl|sfl_ff|sfl_linear]
+  sfprompt train      [--spec FILE.json] [--json]
+                      [--config <name>] [--method sfprompt|fl|sfl_ff|sfl_linear]
                       [--rounds N] [--clients N] [--per-round K] [--epochs U]
                       [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
                       [--noniid] [--alpha F] [--seed N] [--samples-per-client N]
-                      [--no-local-loss] [--wire f32|f16|int8]
+                      [--no-local-loss] [--wire f32|f16|int8] [--net-rate BYTES_PER_S]
   sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
+
+`train --spec FILE.json` reads a RunSpec (CLI flags are ignored); `--json`
+suppresses progress output and prints a RunReport JSON document with
+per-message-kind measured bytes. See docs/API.md.
 ";
 
 fn main() {
@@ -80,26 +87,39 @@ fn inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn fed_from_args(args: &Args) -> Result<FedConfig> {
-    Ok(FedConfig {
-        num_clients: args.get_parse("clients", 50),
-        clients_per_round: args.get_parse("per-round", 5),
-        local_epochs: args.get_parse("epochs", 10),
-        rounds: args.get_parse("rounds", 10),
-        lr: args.get_parse("lr", 0.08f32),
-        retain_fraction: args.get_parse("retain", 0.4f64),
-        local_loss_update: !args.has_flag("no-local-loss"),
-        partition: if args.has_flag("noniid") {
-            Partition::Dirichlet { alpha: args.get_parse("alpha", 0.1f64) }
-        } else {
-            Partition::Iid
-        },
-        seed: args.get_parse("seed", 17u64),
-        eval_limit: Some(args.get_parse("eval-limit", 160usize)),
-        eval_every: args.get_parse("eval-every", 1usize),
-        selection: Selection::Uniform,
-        wire: WireFormat::parse(args.get_or("wire", "f32"))?,
-    })
+/// Build a RunSpec from CLI flags (the non-`--spec` path). Flags override
+/// the [`RunSpec::new`] defaults field by field — the defaults themselves
+/// live in one place.
+fn spec_from_args(args: &Args) -> Result<RunSpec> {
+    let method = Method::parse(args.get_or("method", "sfprompt"))?;
+    let mut spec = RunSpec::new(
+        args.get_or("config", "small"),
+        args.get_or("dataset", "cifar10"),
+        method,
+    );
+    let f = &mut spec.fed;
+    f.num_clients = args.get_parse("clients", f.num_clients);
+    f.clients_per_round = args.get_parse("per-round", f.clients_per_round);
+    f.local_epochs = args.get_parse("epochs", f.local_epochs);
+    f.rounds = args.get_parse("rounds", f.rounds);
+    f.lr = args.get_parse("lr", f.lr);
+    f.retain_fraction = args.get_parse("retain", f.retain_fraction);
+    f.local_loss_update = !args.has_flag("no-local-loss");
+    if args.has_flag("noniid") {
+        f.partition = Partition::Dirichlet { alpha: args.get_parse("alpha", 0.1f64) };
+    }
+    f.seed = args.get_parse("seed", f.seed);
+    f.eval_limit = Some(args.get_parse("eval-limit", 160usize));
+    f.eval_every = args.get_parse("eval-every", f.eval_every);
+    f.wire = WireFormat::parse(args.get_or("wire", "f32"))?;
+    spec.samples_per_client = args.get_parse("samples-per-client", spec.samples_per_client);
+    if let Some(rate) = args.get("net-rate") {
+        spec.net_rate_bytes_per_s = Some(
+            rate.parse()
+                .map_err(|_| anyhow::anyhow!("--net-rate must be a number, got {rate:?}"))?,
+        );
+    }
+    Ok(spec)
 }
 
 /// Closed-form cost-model sweep (analysis::sweep) over model scale and
@@ -151,51 +171,41 @@ fn analyze(args: &Args) -> Result<()> {
 }
 
 fn train(args: &Args) -> Result<()> {
-    let config = args.get_or("config", "small");
-    let dataset = args.get_or("dataset", "cifar10").to_string();
-    let method = match args.get_or("method", "sfprompt") {
-        "sfprompt" => Method::SfPrompt,
-        "fl" => Method::Fl,
-        "sfl_ff" => Method::SflFullFinetune,
-        "sfl_linear" => Method::SflLinear,
-        other => anyhow::bail!("unknown method {other:?}"),
+    let spec = match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading run spec {path}"))?;
+            RunSpec::parse(&text).with_context(|| format!("parsing run spec {path}"))?
+        }
+        None => spec_from_args(args)?,
     };
-    let fed = fed_from_args(args)?;
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), config)?;
+    let json_out = args.has_flag("json");
 
-    let mut profile = sfprompt::data::synth::profile(&dataset)
-        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?;
-    profile.num_classes = store.manifest.config.num_classes;
-    let spc = args.get_parse("samples-per-client", 32usize);
-    let cfg = &store.manifest.config;
-    let train_ds = sfprompt::data::SynthDataset::generate(
-        profile, cfg.image_size, cfg.channels, fed.num_clients * spc,
-        1000 + fed.seed, 2000 + fed.seed,
-    );
-    let eval_ds = sfprompt::data::SynthDataset::generate(
-        profile, cfg.image_size, cfg.channels, 160, 1000 + fed.seed, 9000 + fed.seed,
-    );
+    let store = ArtifactStore::open(&sfprompt::artifacts_root(), &spec.config)?;
+    let (train_ds, eval_ds) = spec.datasets(&store.manifest.config)?;
+    let mut run = spec.builder().build(&store, &train_ds, Some(&eval_ds))?;
 
-    println!(
-        "train: config={config} dataset={dataset} method={} rounds={} clients={}x{} U={} \
-         γ_retain={} wire={}",
-        method.label(), fed.rounds, fed.clients_per_round, fed.num_clients,
-        fed.local_epochs, fed.retain_fraction, fed.wire.label()
-    );
-    let progress = |rec: &sfprompt::metrics::RoundRecord| {
+    if !json_out {
+        let fed = run.fed();
         println!(
-            "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB sim_lat={:.1}s wall={:.1}s",
-            rec.round, rec.mean_split_loss, rec.mean_local_loss, rec.eval_accuracy,
-            rec.comm.mb(), rec.sim_latency_s, rec.wall_s
+            "train: config={} dataset={} method={} rounds={} clients={}x{} U={} \
+             γ_retain={} wire={}",
+            spec.config, spec.dataset, spec.method.label(), fed.rounds,
+            fed.clients_per_round, fed.num_clients, fed.local_epochs,
+            fed.retain_fraction, fed.wire.label()
         );
-    };
-    let hist = if method == Method::SfPrompt {
-        let mut engine = SfPromptEngine::new(&store, fed, &train_ds);
-        engine.run(&train_ds, Some(&eval_ds), progress)?
+    }
+    let hist = if json_out {
+        drive(run.as_mut(), &mut NullObserver)?
     } else {
-        let mut engine = BaselineEngine::new(&store, fed, method, &train_ds);
-        engine.run(&train_ds, Some(&eval_ds), progress)?
+        drive(run.as_mut(), &mut ProgressPrinter::new())?
     };
+
+    if json_out {
+        let report = RunReport::new(&spec, run.setup_bytes(), hist);
+        println!("{}", report.to_json());
+        return Ok(());
+    }
     println!(
         "done: final acc {:.4}, total comm {:.2} MB ({:.2} MB/round), messages {}",
         hist.final_accuracy(),

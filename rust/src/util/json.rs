@@ -96,13 +96,6 @@ impl Json {
         self.as_obj()?.get(key)
     }
 
-    /// Serialise (compact). Round-trips everything this module parses.
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -138,6 +131,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialisation; `Json::to_string()` (via `ToString`) round-trips
+/// everything this module parses.
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

@@ -1,11 +1,15 @@
-//! End-to-end federation tests on the real `tiny` artifacts: the SFPrompt
-//! engine and all three baselines must run full rounds, account bytes
-//! correctly, and train (loss decreases over rounds).
+//! End-to-end federation tests on the real `tiny` artifacts, driven
+//! entirely through the unified run API (`RunBuilder` → `FederatedRun` →
+//! `drive`): the SFPrompt engine and all three baselines must run full
+//! rounds, account bytes correctly, and train (loss decreases over
+//! rounds). Builder-validation and driver-event tests need no artifacts.
 
 use sfprompt::comm::MsgKind;
 use sfprompt::data::{synth::DatasetProfile, SynthDataset};
-use sfprompt::federation::baselines::BaselineEngine;
-use sfprompt::federation::{Selection, FedConfig, Method, SfPromptEngine};
+use sfprompt::federation::{
+    drive, FedConfig, FederatedRun, Method, NullObserver, RoundObserver, RunBuilder, Selection,
+};
+use sfprompt::metrics::{RoundRecord, RunHistory};
 use sfprompt::partition::Partition;
 use sfprompt::runtime::ArtifactStore;
 use sfprompt::transport::WireFormat;
@@ -49,19 +53,105 @@ fn fed(rounds: usize) -> FedConfig {
     }
 }
 
+fn build<'a>(
+    store: &'a ArtifactStore,
+    f: FedConfig,
+    method: Method,
+    train: &'a SynthDataset,
+    eval: Option<&'a SynthDataset>,
+) -> Box<dyn FederatedRun + 'a> {
+    RunBuilder::new(method).fed(f).build(store, train, eval).unwrap()
+}
+
+#[test]
+fn builder_rejects_invalid_configs_without_artifacts() {
+    let b = || RunBuilder::new(Method::SfPrompt);
+    assert!(b().clients(4, 5).validate().is_err());
+    assert!(b().rounds(0).validate().is_err());
+    assert!(b().retain_fraction(0.0).validate().is_err());
+    assert!(b().retain_fraction(1.5).validate().is_err());
+    assert!(b().lr(-0.1).validate().is_err());
+    assert!(b().net_rate(0.0).validate().is_err());
+    assert!(b().validate().is_ok());
+    assert!(b().fed(fed(3)).validate().is_ok());
+}
+
+#[test]
+fn builder_rejects_dataset_smaller_than_fleet() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 4, 6); // 4 samples, 6 clients
+    let err = RunBuilder::new(Method::SfPrompt).fed(fed(1)).build(&store, &train, None);
+    assert!(err.is_err());
+}
+
 #[test]
 fn sfprompt_runs_and_loss_decreases() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 6);
     let eval = data(&store, 32, 60);
-    let mut engine = SfPromptEngine::new(&store, fed(4), &train);
-    let hist = engine.run(&train, Some(&eval), |_| {}).unwrap();
+    let mut run = build(&store, fed(4), Method::SfPrompt, &train, Some(&eval));
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
     assert_eq!(hist.rounds.len(), 4);
     let first = &hist.rounds[0];
     let last = &hist.rounds[3];
     assert!(last.mean_local_loss < first.mean_local_loss,
             "local loss {} -> {}", first.mean_local_loss, last.mean_local_loss);
     assert!(hist.final_accuracy() >= 0.0 && hist.final_accuracy() <= 1.0);
+    // The trait view matches what the driver returned.
+    assert_eq!(run.method(), Method::SfPrompt);
+    assert_eq!(run.history().rounds.len(), 4);
+    assert_eq!(run.comm_totals().total(), hist.total_comm.total());
+    assert!(run.setup_bytes() > 0, "SFPrompt distributes the frozen head once");
+    let final_acc = run.final_eval().unwrap();
+    assert!((0.0..=1.0).contains(&final_acc));
+}
+
+#[test]
+fn driver_streams_ordered_events() {
+    let Some(store) = open_tiny() else { return };
+    let train = data(&store, 96, 16);
+    let eval = data(&store, 32, 61);
+
+    #[derive(Default)]
+    struct Recorder {
+        run_started: usize,
+        run_ended: usize,
+        starts: Vec<usize>,
+        ends: Vec<usize>,
+        evals: Vec<usize>,
+    }
+    impl RoundObserver for Recorder {
+        fn on_run_start(&mut self, method: Method, f: &FedConfig) {
+            assert_eq!(method, Method::SfPrompt);
+            assert_eq!(f.rounds, 2);
+            self.run_started += 1;
+        }
+        fn on_round_start(&mut self, round: usize) {
+            self.starts.push(round);
+        }
+        fn on_eval(&mut self, round: usize, accuracy: f64) {
+            assert!(accuracy.is_finite());
+            self.evals.push(round);
+        }
+        fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+            assert!(clock_s > 0.0, "frames crossed the simulated link");
+            assert!(rec.comm.total() > 0);
+            self.ends.push(rec.round);
+        }
+        fn on_run_end(&mut self, history: &RunHistory) {
+            assert_eq!(history.rounds.len(), self.ends.len());
+            self.run_ended += 1;
+        }
+    }
+
+    let mut obs = Recorder::default();
+    let mut run = build(&store, fed(2), Method::SfPrompt, &train, Some(&eval));
+    drive(run.as_mut(), &mut obs).unwrap();
+    assert_eq!(obs.run_started, 1);
+    assert_eq!(obs.run_ended, 1);
+    assert_eq!(obs.starts, vec![0, 1]);
+    assert_eq!(obs.ends, vec![0, 1]);
+    assert_eq!(obs.evals, vec![0, 1], "eval_every=1 evaluates each round");
 }
 
 #[test]
@@ -69,8 +159,8 @@ fn sfprompt_comm_accounting_measures_frames() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 7);
     let f = fed(2);
-    let mut engine = SfPromptEngine::new(&store, f, &train);
-    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let mut run = build(&store, f, Method::SfPrompt, &train, None);
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
 
     let mb = &store.manifest.cost.message_bytes;
     let cfg = &store.manifest.config;
@@ -103,8 +193,8 @@ fn int8_wire_cuts_uplink_bytes() {
     let train = data(&store, 96, 7);
     let run_with = |wire: WireFormat| {
         let f = FedConfig { wire, ..fed(2) };
-        let mut engine = SfPromptEngine::new(&store, f, &train);
-        engine.run(&train, None, |_| {}).unwrap()
+        let mut run = build(&store, f, Method::SfPrompt, &train, None);
+        drive(run.as_mut(), &mut NullObserver).unwrap()
     };
     let f32_hist = run_with(WireFormat::F32);
     let int8_hist = run_with(WireFormat::Int8);
@@ -133,8 +223,8 @@ fn pruning_reduces_split_traffic() {
     let mut comm_at = Vec::new();
     for retain in [1.0, 0.25] {
         let f = FedConfig { retain_fraction: retain, ..fed(2) };
-        let mut engine = SfPromptEngine::new(&store, f, &train);
-        let hist = engine.run(&train, None, |_| {}).unwrap();
+        let mut run = build(&store, f, Method::SfPrompt, &train, None);
+        let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
         comm_at.push(hist.total_comm.by_kind["smashed_data"]);
     }
     assert!(comm_at[1] < comm_at[0], "pruning must cut smashed traffic: {comm_at:?}");
@@ -145,8 +235,8 @@ fn ablation_without_local_loss_still_runs() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 9);
     let f = FedConfig { local_loss_update: false, ..fed(2) };
-    let mut engine = SfPromptEngine::new(&store, f, &train);
-    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let mut run = build(&store, f, Method::SfPrompt, &train, None);
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
     assert_eq!(hist.rounds.len(), 2);
     assert!(hist.rounds[0].mean_local_loss.is_nan() || hist.rounds[0].mean_local_loss == 0.0);
 }
@@ -156,8 +246,10 @@ fn fl_baseline_trains_and_costs_full_model_bytes() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 10);
     let f = fed(2);
-    let mut engine = BaselineEngine::new(&store, f, Method::Fl, &train);
-    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let mut run = build(&store, f, Method::Fl, &train, None);
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
+    assert_eq!(run.method(), Method::Fl);
+    assert_eq!(run.setup_bytes(), 0, "FL has no one-time setup traffic");
     let full = store.manifest.cost.message_bytes["full_model"];
     let analytic = (2 * full * f.clients_per_round * f.rounds) as u64;
     let measured = hist.total_comm.total();
@@ -172,9 +264,8 @@ fn fl_baseline_trains_and_costs_full_model_bytes() {
 fn sfl_ff_trains_and_talks_every_epoch() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 11);
-    let f = fed(2);
-    let mut engine = BaselineEngine::new(&store, f, Method::SflFullFinetune, &train);
-    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let mut run = build(&store, fed(2), Method::SflFullFinetune, &train, None);
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
     // 4 crossings per batch per epoch; sanity: smashed bytes scale with U.
     assert!(hist.total_comm.by_kind.contains_key("smashed_data"));
     assert!(hist.total_comm.by_kind.contains_key("grad_smashed"));
@@ -186,8 +277,8 @@ fn sfl_ff_trains_and_talks_every_epoch() {
 fn sfl_linear_never_sends_gradients_downstream() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 12);
-    let mut engine = BaselineEngine::new(&store, fed(2), Method::SflLinear, &train);
-    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let mut run = build(&store, fed(2), Method::SflLinear, &train, None);
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
     // Frozen head/body: activations flow, gradients never cross the cut.
     assert!(hist.total_comm.by_kind.contains_key("smashed_data"));
     assert!(!hist.total_comm.by_kind.contains_key("grad_smashed"));
@@ -201,11 +292,13 @@ fn sfprompt_vs_sfl_comm_ordering_matches_paper() {
     let train = data(&store, 96, 13);
     let f = FedConfig { local_epochs: 4, ..fed(1) };
 
-    let mut sfp = SfPromptEngine::new(&store, f, &train);
-    let sfp_comm = sfp.run(&train, None, |_| {}).unwrap().total_comm.total();
+    let mut sfp = build(&store, f, Method::SfPrompt, &train, None);
+    let sfp_comm =
+        drive(sfp.as_mut(), &mut NullObserver).unwrap().total_comm.total();
 
-    let mut sfl = BaselineEngine::new(&store, f, Method::SflFullFinetune, &train);
-    let sfl_comm = sfl.run(&train, None, |_| {}).unwrap().total_comm.total();
+    let mut sfl = build(&store, f, Method::SflFullFinetune, &train, None);
+    let sfl_comm =
+        drive(sfl.as_mut(), &mut NullObserver).unwrap().total_comm.total();
 
     assert!(
         sfp_comm * 2 < sfl_comm,
@@ -218,8 +311,8 @@ fn deterministic_runs_for_same_seed() {
     let Some(store) = open_tiny() else { return };
     let train = data(&store, 96, 14);
     let run = || {
-        let mut e = SfPromptEngine::new(&store, fed(2), &train);
-        e.run(&train, None, |_| {}).unwrap()
+        let mut r = build(&store, fed(2), Method::SfPrompt, &train, None);
+        drive(r.as_mut(), &mut NullObserver).unwrap()
     };
     let a = run();
     let b = run();
@@ -238,7 +331,7 @@ fn noniid_partition_runs_end_to_end() {
         num_clients: 8,
         ..fed(2)
     };
-    let mut engine = SfPromptEngine::new(&store, f, &train);
-    let hist = engine.run(&train, None, |_| {}).unwrap();
+    let mut run = build(&store, f, Method::SfPrompt, &train, None);
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
     assert_eq!(hist.rounds.len(), 2);
 }
