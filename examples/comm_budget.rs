@@ -10,18 +10,18 @@
 use anyhow::Result;
 
 use sfprompt::analysis::{fl, sfl, sfprompt as sfp_model, CostParams};
+use sfprompt::backend::{Backend, NativeBackend};
 use sfprompt::data::{synth, SynthDataset};
 use sfprompt::federation::{drive, FedConfig, Method, NullObserver, RunBuilder, Selection};
 use sfprompt::partition::Partition;
-use sfprompt::runtime::ArtifactStore;
 use sfprompt::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let rounds: usize = args.get_parse("rounds", 3);
 
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "small")?;
-    let cfg = store.manifest.config.clone();
+    let backend = NativeBackend::for_config("small")?;
+    let cfg = backend.manifest().config.clone();
     let mut profile = synth::profile("cifar10").unwrap();
     profile.num_classes = cfg.num_classes;
     let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 20 * 32, 51, 52);
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     println!("measured bytes/round on config `small` (K=4, U=4, retain=0.4):");
     let mut measured = Vec::new();
     for method in [Method::Fl, Method::SflFullFinetune, Method::SfPrompt] {
-        let mut run = RunBuilder::new(method).fed(fed).build(&store, &train, None)?;
+        let mut run = RunBuilder::new(method).fed(fed).build(&backend, &train, None)?;
         let mb = drive(run.as_mut(), &mut NullObserver)?.comm_mb_per_round();
         measured.push((method.label(), mb));
         println!("  {:<12} {:>10.3} MB/round", method.label(), mb);
@@ -57,7 +57,7 @@ fn main() -> Result<()> {
     }
 
     // Closed-form model at the same parameters, small-model scale.
-    let man = &store.manifest;
+    let man = backend.manifest();
     let p = CostParams {
         w_bytes: man.cost.message_bytes["full_model"] as f64,
         alpha: man.cost.alpha,

@@ -8,18 +8,17 @@
 //!
 //!     cargo run --release --example e2e_train [-- --rounds N]
 //!
-//! This proves all three layers compose: Pallas kernels inside the
-//! jax-lowered HLO stages, executed by the rust coordinator over the
-//! simulated federation, with the paper's three phases and exact byte
-//! accounting.
+//! This proves the whole pipeline composes on the native substrate: the
+//! pure-Rust ViT kernels executed by the coordinator over the simulated
+//! federation, with the paper's three phases and exact byte accounting.
 
 use anyhow::Result;
 
+use sfprompt::backend::{Backend, NativeBackend};
 use sfprompt::data::{synth, SynthDataset};
 use sfprompt::federation::{drive, FedConfig, Method, RoundObserver, RunBuilder, Selection};
 use sfprompt::metrics::RoundRecord;
 use sfprompt::partition::Partition;
-use sfprompt::runtime::ArtifactStore;
 use sfprompt::util::cli::Args;
 use sfprompt::util::csv::CsvWriter;
 
@@ -53,8 +52,8 @@ fn main() -> Result<()> {
     let rounds: usize = args.get_parse("rounds", 12);
     let spc: usize = args.get_parse("samples-per-client", 48);
 
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "small")?;
-    let cfg = store.manifest.config.clone();
+    let backend = NativeBackend::for_config("small")?;
+    let cfg = backend.manifest().config.clone();
     let mut profile = synth::profile("cifar10").unwrap();
     profile.num_classes = cfg.num_classes;
 
@@ -81,7 +80,7 @@ fn main() -> Result<()> {
     let steps_per_round = fed.clients_per_round * fed.local_epochs * batches_per_client;
     println!(
         "e2e: {} params backbone, {} local SGD steps/round x {} rounds = {} total steps",
-        store.manifest.cost.params_total_backbone,
+        backend.manifest().cost.params_total_backbone,
         steps_per_round,
         rounds,
         steps_per_round * rounds
@@ -95,7 +94,7 @@ fn main() -> Result<()> {
     };
 
     let t0 = std::time::Instant::now();
-    let mut run = RunBuilder::new(Method::SfPrompt).fed(fed).build(&store, &train, Some(&eval))?;
+    let mut run = RunBuilder::new(Method::SfPrompt).fed(fed).build(&backend, &train, Some(&eval))?;
     let hist = drive(run.as_mut(), &mut logger)?;
 
     let first = hist.rounds.first().unwrap();
@@ -120,7 +119,7 @@ fn main() -> Result<()> {
     println!("\nper-stage execution stats:");
     let mut total_exec = 0.0;
     let mut total_convert = 0.0;
-    for (name, s) in store.execution_stats() {
+    for (name, s) in backend.execution_stats() {
         println!(
             "  {:<22} calls {:>5}  exec {:>7.2}s  ({:>6.2} ms/call)  convert {:>6.3}s",
             name, s.calls, s.exec_s, s.exec_s * 1e3 / s.calls as f64, s.convert_s

@@ -10,10 +10,10 @@
 
 use anyhow::Result;
 
+use sfprompt::backend::{Backend, NativeBackend};
 use sfprompt::data::{synth, SynthDataset};
 use sfprompt::federation::{drive, Method, NullObserver, RunBuilder};
 use sfprompt::partition::{label_skew, partition, Partition};
-use sfprompt::runtime::ArtifactStore;
 use sfprompt::util::cli::Args;
 use sfprompt::util::rng::Rng;
 
@@ -21,8 +21,8 @@ fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
     let rounds: usize = args.get_parse("rounds", 6);
 
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "small_c100")?;
-    let cfg = store.manifest.config.clone();
+    let backend = NativeBackend::for_config("small_c100")?;
+    let cfg = backend.manifest().config.clone();
     let mut profile = synth::profile("cifar100").unwrap();
     profile.num_classes = cfg.num_classes;
 
@@ -50,7 +50,7 @@ fn main() -> Result<()> {
             .seed(17)
             .eval_limit(Some(160))
             .eval_every(rounds)
-            .build(&store, &train, Some(&eval))?;
+            .build(&backend, &train, Some(&eval))?;
         let hist = drive(run.as_mut(), &mut NullObserver)?;
         println!(
             "retain={:.1}: final acc {:.4}, split-pass comm {:.2} MB/round",

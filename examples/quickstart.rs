@@ -1,17 +1,18 @@
 //! Quickstart: the unified run API on the `tiny` config.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! The flow every driver uses: open artifacts → synthesize data →
-//! configure a `RunBuilder` → `build` a method-agnostic `FederatedRun` →
-//! `drive` it with a `RoundObserver` → read the returned `RunHistory`.
+//! The flow every driver uses: open a compute backend (native: in-memory
+//! manifest, no artifacts) → synthesize data → configure a `RunBuilder` →
+//! `build` a method-agnostic `FederatedRun` → `drive` it with a
+//! `RoundObserver` → read the returned `RunHistory`.
 
 use anyhow::Result;
 
+use sfprompt::backend::{Backend, NativeBackend};
 use sfprompt::data::{synth::DatasetProfile, SynthDataset};
 use sfprompt::federation::{drive, Method, RoundObserver, RunBuilder};
 use sfprompt::metrics::RoundRecord;
-use sfprompt::runtime::ArtifactStore;
 
 /// Observers receive round events; this one just prints a line per round.
 struct Printer;
@@ -27,8 +28,8 @@ impl RoundObserver for Printer {
 }
 
 fn main() -> Result<()> {
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), "tiny")?;
-    let cfg = store.manifest.config.clone();
+    let backend = NativeBackend::for_config("tiny")?;
+    let cfg = backend.manifest().config.clone();
     println!(
         "loaded config `{}`: dim={} depth={}+{}+{} prompt={} batch={}",
         cfg.name, cfg.dim, cfg.depth_head, cfg.depth_body, cfg.depth_tail,
@@ -54,7 +55,7 @@ fn main() -> Result<()> {
         .retain_fraction(0.5)
         .seed(7)
         .eval_limit(Some(96))
-        .build(&store, &train, Some(&eval))?;
+        .build(&backend, &train, Some(&eval))?;
 
     let hist = drive(run.as_mut(), &mut Printer)?;
 

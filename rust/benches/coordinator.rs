@@ -9,10 +9,10 @@
 mod harness;
 
 use harness::Bench;
+use sfprompt::backend::{Backend, NativeBackend};
 use sfprompt::data::{synth, SynthDataset};
 use sfprompt::federation::{drive, FedConfig, Method, NullObserver, RunBuilder, Selection};
 use sfprompt::partition::Partition;
-use sfprompt::runtime::ArtifactStore;
 
 fn fed(rounds: usize) -> FedConfig {
     FedConfig {
@@ -33,14 +33,8 @@ fn fed(rounds: usize) -> FedConfig {
 }
 
 fn main() {
-    let store = match ArtifactStore::open(&sfprompt::artifacts_root(), "tiny") {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("skipping coordinator benches: {e:#} (run `make artifacts`)");
-            return;
-        }
-    };
-    let cfg = store.manifest.config.clone();
+    let backend = NativeBackend::tiny();
+    let cfg = backend.manifest().config.clone();
     let mut profile = synth::profile("cifar10").unwrap();
     profile.num_classes = cfg.num_classes;
     let train = SynthDataset::generate(profile, cfg.image_size, cfg.channels, 10 * 16, 1, 2);
@@ -48,7 +42,7 @@ fn main() {
     println!("coordinator benches (tiny config, K=2, U=2, 16 samples/client)");
 
     let one_round = |f: FedConfig, method: Method| {
-        let mut run = RunBuilder::new(method).fed(f).build(&store, &train, None).unwrap();
+        let mut run = RunBuilder::new(method).fed(f).build(&backend, &train, None).unwrap();
         drive(run.as_mut(), &mut NullObserver).unwrap();
     };
 

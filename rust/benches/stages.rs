@@ -1,5 +1,8 @@
 //! Stage-execution benchmarks (the hot path behind every experiment):
-//! per-stage PJRT execution time on the `tiny` and `small` configs.
+//! per-stage time on the `tiny` and `small` configs, for every substrate
+//! that can execute on this machine — the native kernel engine always,
+//! the PJRT artifact path when artifacts + the `pjrt` feature are
+//! present (probed with one head_forward call; skipped cleanly offline).
 //!
 //! Backs Table 2's computational-burden column with measured per-stage
 //! times, and is the L3 profile used in EXPERIMENTS.md §Perf.
@@ -10,20 +13,14 @@ mod harness;
 use std::collections::BTreeMap;
 
 use harness::Bench;
+use sfprompt::backend::{run_stage_hosts, Backend, NativeBackend, PjrtBackend};
 use sfprompt::data::{make_batch, synth, SynthDataset};
-use sfprompt::model::{init_params, SegmentParams};
-use sfprompt::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+use sfprompt::model::{init_params, ParamSet, SegmentParams};
+use sfprompt::runtime::HostTensor;
 
-fn bench_config(config: &str) {
-    let store = match ArtifactStore::open(&sfprompt::artifacts_root(), config) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("skipping {config}: {e:#} (run `make artifacts` first)");
-            return;
-        }
-    };
-    let cfg = store.manifest.config.clone();
-    let params = init_params(&store.manifest, 7);
+fn bench_backend(backend: &dyn Backend, label: &str) {
+    let cfg = backend.manifest().config.clone();
+    let params = init_params(backend.manifest(), 7);
     let mut profile = synth::profile("cifar10").unwrap();
     profile.num_classes = cfg.num_classes;
     let ds = SynthDataset::generate(profile, cfg.image_size, cfg.channels, cfg.batch, 1, 2);
@@ -31,109 +28,120 @@ fn bench_config(config: &str) {
     let batch = make_batch(&ds.examples, &idx, cfg.batch, cfg.image_size, cfg.channels);
     let lr = HostTensor::scalar_f32(0.05);
 
-    println!("\n== config {config} (dim={} seq={} batch={}) ==", cfg.dim, cfg.seq_len, cfg.batch);
-
+    // A nested fn (not a closure): the returned map borrows from `params`,
+    // which closure lifetime elision cannot express.
     fn seg<'a>(
-        params: &'a sfprompt::model::ParamSet,
+        params: &'a ParamSet,
         names: &[&'static str],
     ) -> BTreeMap<&'static str, &'a SegmentParams> {
-        names.iter().map(|n| (*n, params.get(n).unwrap())).collect()
+        names.iter().map(|&n| (n, params.get(n).unwrap())).collect()
     }
-    let seg = |names: &[&'static str]| seg(&params, names);
 
-    // head_forward
-    {
-        let segs = seg(&["head", "prompt"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+    // Probe: one head_forward decides whether this substrate can execute
+    // here at all (PJRT without artifacts/feature errors cleanly).
+    let probe = {
+        let segs = seg(&params, &["head", "prompt"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("images", &batch.images);
-        store.warm(&["head_forward"]).unwrap();
-        Bench::new(&format!("{config}/head_forward")).run(|| {
-            Executor::run(&store, "head_forward", &segs, &tensors).unwrap();
-        });
-    }
-    // body_forward + body_backward need a smashed tensor
-    let smashed = {
-        let segs = seg(&["head", "prompt"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
-        tensors.insert("images", &batch.images);
-        let out = Executor::run(&store, "head_forward", &segs, &tensors).unwrap();
-        out.tensors.into_iter().find(|(k, _)| k == "smashed").unwrap().1
+        run_stage_hosts(backend, "head_forward", &segs, &tensors)
     };
+    let smashed = match probe {
+        Ok(mut out) => out.tensors.remove("smashed").unwrap(),
+        Err(e) => {
+            eprintln!("skipping {label}: {e:#}");
+            return;
+        }
+    };
+    println!(
+        "\n== {label} (dim={} seq={} batch={}) ==",
+        cfg.dim, cfg.seq_len, cfg.batch
+    );
+
     {
-        let segs = seg(&["body"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
-        tensors.insert("smashed", &smashed);
-        store.warm(&["body_forward"]).unwrap();
-        Bench::new(&format!("{config}/body_forward")).run(|| {
-            Executor::run(&store, "body_forward", &segs, &tensors).unwrap();
+        let segs = seg(&params, &["head", "prompt"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+        tensors.insert("images", &batch.images);
+        backend.warm(&["head_forward"]).unwrap();
+        Bench::new(&format!("{label}/head_forward")).run(|| {
+            run_stage_hosts(backend, "head_forward", &segs, &tensors).unwrap();
         });
     }
     let body_out = {
-        let segs = seg(&["body"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+        let segs = seg(&params, &["body"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("smashed", &smashed);
-        let mut out = Executor::run(&store, "body_forward", &segs, &tensors).unwrap();
-        out.tensors.remove("body_out").unwrap()
+        backend.warm(&["body_forward"]).unwrap();
+        let mut last = None;
+        Bench::new(&format!("{label}/body_forward")).run(|| {
+            last = Some(run_stage_hosts(backend, "body_forward", &segs, &tensors).unwrap());
+        });
+        last.unwrap().tensors.remove("body_out").unwrap()
     };
     {
-        let segs = seg(&["tail"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+        let segs = seg(&params, &["tail"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("body_out", &body_out);
         tensors.insert("labels", &batch.labels);
         tensors.insert("lr", &lr);
-        store.warm(&["tail_step"]).unwrap();
-        Bench::new(&format!("{config}/tail_step")).run(|| {
-            Executor::run(&store, "tail_step", &segs, &tensors).unwrap();
+        backend.warm(&["tail_step"]).unwrap();
+        Bench::new(&format!("{label}/tail_step")).run(|| {
+            run_stage_hosts(backend, "tail_step", &segs, &tensors).unwrap();
         });
     }
     {
-        let segs = seg(&["body"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+        let segs = seg(&params, &["body"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("smashed", &smashed);
         tensors.insert("g_body_out", &body_out); // same shape, fine for timing
-        store.warm(&["body_backward"]).unwrap();
-        Bench::new(&format!("{config}/body_backward")).run(|| {
-            Executor::run(&store, "body_backward", &segs, &tensors).unwrap();
+        backend.warm(&["body_backward"]).unwrap();
+        Bench::new(&format!("{label}/body_backward")).run(|| {
+            run_stage_hosts(backend, "body_backward", &segs, &tensors).unwrap();
         });
     }
     {
-        let segs = seg(&["head", "tail", "prompt"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+        let segs = seg(&params, &["head", "tail", "prompt"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("images", &batch.images);
         tensors.insert("labels", &batch.labels);
         tensors.insert("lr", &lr);
-        store.warm(&["local_step"]).unwrap();
-        let r = Bench::new(&format!("{config}/local_step (phase-1 SGD)")).run(|| {
-            Executor::run(&store, "local_step", &segs, &tensors).unwrap();
+        backend.warm(&["local_step"]).unwrap();
+        let r = Bench::new(&format!("{label}/local_step (phase-1 SGD)")).run(|| {
+            run_stage_hosts(backend, "local_step", &segs, &tensors).unwrap();
         });
         harness::throughput(&r, "samples", cfg.batch as f64);
     }
     {
-        let segs = seg(&["head", "tail", "prompt"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+        let segs = seg(&params, &["head", "tail", "prompt"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("images", &batch.images);
         tensors.insert("labels", &batch.labels);
-        store.warm(&["el2n_scores"]).unwrap();
-        Bench::new(&format!("{config}/el2n_scores (pruning)")).run(|| {
-            Executor::run(&store, "el2n_scores", &segs, &tensors).unwrap();
+        backend.warm(&["el2n_scores"]).unwrap();
+        Bench::new(&format!("{label}/el2n_scores (pruning)")).run(|| {
+            run_stage_hosts(backend, "el2n_scores", &segs, &tensors).unwrap();
         });
     }
     {
-        let segs = seg(&["head", "body", "tail"]);
-        let mut tensors: TensorInputs = BTreeMap::new();
+        let segs = seg(&params, &["head", "body", "tail"]);
+        let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
         tensors.insert("images", &batch.images);
         tensors.insert("labels", &batch.labels);
         tensors.insert("lr", &lr);
-        store.warm(&["full_step"]).unwrap();
-        let r = Bench::new(&format!("{config}/full_step (FL baseline)")).run(|| {
-            Executor::run(&store, "full_step", &segs, &tensors).unwrap();
+        backend.warm(&["full_step"]).unwrap();
+        let r = Bench::new(&format!("{label}/full_step (FL baseline)")).run(|| {
+            run_stage_hosts(backend, "full_step", &segs, &tensors).unwrap();
         });
         harness::throughput(&r, "samples", cfg.batch as f64);
     }
 }
 
 fn main() {
-    println!("stage-execution benches (PJRT CPU, interpret-lowered Pallas)");
-    bench_config("tiny");
-    bench_config("small");
+    println!("stage-execution benches (native kernels; PJRT when available)");
+    for config in ["tiny", "small"] {
+        let native = NativeBackend::for_config(config).unwrap();
+        bench_backend(&native, &format!("native/{config}"));
+        match PjrtBackend::open(&sfprompt::artifacts_root(), config) {
+            Ok(pjrt) => bench_backend(&pjrt, &format!("pjrt/{config}")),
+            Err(e) => eprintln!("skipping pjrt/{config}: {e:#}"),
+        }
+    }
 }

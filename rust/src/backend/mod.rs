@@ -1,0 +1,214 @@
+//! Pluggable compute substrate: the [`Backend`] trait every stage
+//! execution goes through, and its two implementations.
+//!
+//! The federation layer (engines, client/server state machines, metrics)
+//! is *substrate-agnostic*: it names stages from the manifest
+//! (`local_step`, `head_forward`, `tail_step`, …), hands host tensors and
+//! [`PreparedSegment`] handles to [`Backend::run_stage`], and gets
+//! [`StageOutputs`] back. Which machinery actually computes — PJRT
+//! executables compiled from AOT-lowered HLO, or the pure-Rust ViT kernel
+//! engine — is a construction-time choice:
+//!
+//! * [`native`] — hand-written forward + backward kernels for the
+//!   manifest's prompt-augmented split ViT, driven by a **synthesized
+//!   in-memory manifest** ([`native::NativeBackend::for_config`]); no
+//!   artifacts on disk, no Python, no PJRT. This is what `cargo test`
+//!   and the default `train --backend native` exercise.
+//! * [`pjrt`] — the original artifact path: `artifacts/<cfg>/*.hlo.txt`
+//!   compiled and executed via the `xla` bindings (a functional host-side
+//!   stub offline; the real PJRT runtime under the `pjrt` cargo feature).
+//!
+//! [`PreparedSegment`] is the frozen-segment fast path made opaque: the
+//! head/body never change within an SFPrompt run, so engines convert them
+//! once via [`Backend::prepare_segment`] and reuse the handle every call.
+//! What "prepared" means is the backend's business (PJRT literals vs a
+//! host-side copy); no `xla` type crosses this boundary.
+
+// The native kernel engine is written with explicit index loops so the
+// math reads like the reference model; the iterator rewrites this lint
+// wants would obscure the layout arithmetic.
+#[allow(clippy::needless_range_loop)]
+pub mod native;
+pub mod pjrt;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::SegmentParams;
+use crate::runtime::{HostTensor, Manifest};
+
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+/// Structured outputs of a stage execution: updated segments and named
+/// result tensors (loss, activations, gradients, scores, logits).
+#[derive(Debug, Default)]
+pub struct StageOutputs {
+    pub segments: BTreeMap<String, SegmentParams>,
+    pub tensors: BTreeMap<String, HostTensor>,
+}
+
+impl StageOutputs {
+    pub fn tensor(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("stage output missing tensor {name:?}"))
+    }
+
+    pub fn segment(&self, name: &str) -> Result<&SegmentParams> {
+        self.segments
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("stage output missing segment {name:?}"))
+    }
+
+    pub fn take_segment(&mut self, name: &str) -> Result<SegmentParams> {
+        self.segments
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("stage output missing segment {name:?}"))
+    }
+
+    pub fn loss(&self) -> Result<f32> {
+        Ok(self.tensor("loss")?.as_f32()[0])
+    }
+}
+
+/// A segment in backend-ready form, produced by [`Backend::prepare_segment`].
+/// Opaque to callers; each backend stores whatever lets it skip per-call
+/// conversion work for segments that never change (frozen head/body).
+pub struct PreparedSegment {
+    pub(crate) repr: PreparedRepr,
+}
+
+pub(crate) enum PreparedRepr {
+    /// Host-side parameters (the native engine computes on these directly).
+    Host(SegmentParams),
+    /// Pre-converted PJRT literals (the PJRT executor feeds these straight
+    /// into `execute` without re-converting every call).
+    Literals(Vec<xla::Literal>),
+}
+
+/// A segment input to a stage: plain host parameters (converted per call)
+/// or a [`PreparedSegment`] handle (the frozen-segment fast path).
+pub enum SegInput<'a> {
+    Host(&'a SegmentParams),
+    Prepared(&'a PreparedSegment),
+}
+
+/// Named segment inputs to a stage.
+pub type SegmentInputs<'a> = BTreeMap<&'a str, SegInput<'a>>;
+
+/// Named non-segment inputs to a stage (images, labels, gradients, lr).
+pub type TensorInputs<'a> = BTreeMap<&'a str, &'a HostTensor>;
+
+pub use crate::runtime::artifact::StageStats;
+
+/// A compute substrate that can run every stage of a manifest.
+///
+/// Implementations must be `Sync`: the SFPrompt engine runs one client
+/// thread per selected client, all sharing one backend.
+pub trait Backend: Sync {
+    /// Short label for reports ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The manifest driving stage signatures, shapes, and cost numbers.
+    fn manifest(&self) -> &Manifest;
+
+    /// Convert a segment once into backend-ready form. Engines call this
+    /// for frozen segments (head/body) and pass the handle to every
+    /// subsequent [`Backend::run_stage`].
+    fn prepare_segment(&self, params: &SegmentParams) -> Result<PreparedSegment>;
+
+    /// Run `stage` with named segment and tensor inputs, validated against
+    /// the manifest signature; returns the stage's named outputs.
+    fn run_stage(
+        &self,
+        stage: &str,
+        segments: &SegmentInputs,
+        tensors: &TensorInputs,
+    ) -> Result<StageOutputs>;
+
+    /// Prepare a set of stages for execution ahead of timed runs (PJRT
+    /// pre-compiles executables; the native engine has nothing to warm).
+    fn warm(&self, _stages: &[&str]) -> Result<()> {
+        Ok(())
+    }
+
+    /// Per-stage cumulative stats (sorted by total execution time, desc).
+    fn execution_stats(&self) -> Vec<(String, StageStats)> {
+        Vec::new()
+    }
+
+    fn reset_execution_stats(&self) {}
+}
+
+/// Convenience: run a stage where every segment is plain host params.
+pub fn run_stage_hosts(
+    backend: &dyn Backend,
+    stage: &str,
+    segments: &BTreeMap<&str, &SegmentParams>,
+    tensors: &TensorInputs,
+) -> Result<StageOutputs> {
+    let segs: SegmentInputs =
+        segments.iter().map(|(k, v)| (*k, SegInput::Host(*v))).collect();
+    backend.run_stage(stage, &segs, tensors)
+}
+
+/// Which substrate to construct (CLI `--backend`, RunSpec `"backend"`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Pure-Rust ViT kernel engine over a synthesized in-memory manifest.
+    #[default]
+    Native,
+    /// PJRT executables from on-disk `artifacts/<config>/`.
+    Pjrt,
+}
+
+impl BackendChoice {
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendChoice::Native => "native",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        Ok(match s {
+            "native" => BackendChoice::Native,
+            "pjrt" => BackendChoice::Pjrt,
+            other => bail!("unknown backend {other:?} (known: native pjrt)"),
+        })
+    }
+}
+
+/// Construct the chosen backend for a named model config.
+///
+/// * `Native` — synthesizes the manifest in memory; `artifacts_root` is
+///   ignored and nothing is read from disk.
+/// * `Pjrt` — opens `artifacts_root/<config>/manifest.json` and compiles
+///   stages lazily via the `xla` bindings.
+pub fn open_backend(
+    choice: BackendChoice,
+    artifacts_root: &Path,
+    config: &str,
+) -> Result<Box<dyn Backend>> {
+    Ok(match choice {
+        BackendChoice::Native => Box::new(NativeBackend::for_config(config)?),
+        BackendChoice::Pjrt => Box::new(PjrtBackend::open(artifacts_root, config)?),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_parses_and_labels() {
+        assert_eq!(BackendChoice::parse("native").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert!(BackendChoice::parse("cuda").is_err());
+        assert_eq!(BackendChoice::default().label(), "native");
+        assert_eq!(BackendChoice::Pjrt.label(), "pjrt");
+    }
+}

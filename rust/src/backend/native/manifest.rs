@@ -1,0 +1,536 @@
+//! In-memory manifest synthesis: the same model/stage inventory
+//! `python/compile/aot.py` writes to `artifacts/<cfg>/manifest.json`,
+//! constructed directly in Rust so the native backend needs nothing on
+//! disk.
+//!
+//! Mirrors python/compile/{configs.py,vit.py,stages.py,costmodel.py}:
+//! the named config registry, per-segment tensor layouts, the positional
+//! stage signatures, and the analytic cost block (params, α/τ, message
+//! bytes; FLOPs come from [`crate::flops`], which the integration suite
+//! cross-checks against the python cost model).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::CostInfo;
+use crate::runtime::{Dtype, InitSpec, IoSpec, Manifest, ModelConfig, StageDef, TensorDef};
+
+/// Compact named-config descriptor (python/compile/configs.py CONFIGS).
+struct Cfg {
+    name: &'static str,
+    image_size: usize,
+    patch_size: usize,
+    dim: usize,
+    heads: usize,
+    depth: (usize, usize, usize),
+    mlp_ratio: usize,
+    num_classes: usize,
+    prompt_len: usize,
+    batch: usize,
+    /// lower the "baselines" stage family too
+    baselines: bool,
+    analytic_only: bool,
+}
+
+const CHANNELS: usize = 3;
+
+fn registry() -> Vec<Cfg> {
+    let small = |name, num_classes, prompt_len, baselines| Cfg {
+        name,
+        image_size: 32,
+        patch_size: 4,
+        dim: 64,
+        heads: 4,
+        depth: (2, 3, 1),
+        mlp_ratio: 2,
+        num_classes,
+        prompt_len,
+        batch: 16,
+        baselines,
+        analytic_only: false,
+    };
+    vec![
+        Cfg {
+            name: "tiny",
+            image_size: 32,
+            patch_size: 8,
+            dim: 32,
+            heads: 4,
+            depth: (1, 1, 1),
+            mlp_ratio: 2,
+            num_classes: 10,
+            prompt_len: 4,
+            batch: 8,
+            baselines: true,
+            analytic_only: false,
+        },
+        small("small", 10, 8, true),
+        small("small_c100", 100, 8, true),
+        small("small_c100_p1", 100, 1, false),
+        small("small_c100_p2", 100, 2, false),
+        small("small_c100_p16", 100, 16, false),
+        small("small_c100_p32", 100, 32, false),
+        Cfg {
+            name: "vit_base_sim",
+            image_size: 224,
+            patch_size: 16,
+            dim: 768,
+            heads: 12,
+            depth: (0, 12, 0),
+            mlp_ratio: 4,
+            num_classes: 100,
+            prompt_len: 16,
+            batch: 32,
+            baselines: true,
+            analytic_only: true,
+        },
+        Cfg {
+            name: "vit_large_sim",
+            image_size: 224,
+            patch_size: 16,
+            dim: 1024,
+            heads: 16,
+            depth: (0, 24, 0),
+            mlp_ratio: 4,
+            num_classes: 100,
+            prompt_len: 16,
+            batch: 32,
+            baselines: true,
+            analytic_only: true,
+        },
+    ]
+}
+
+/// Names of every synthesizable config, in registry order.
+pub fn config_names() -> Vec<&'static str> {
+    registry().iter().map(|c| c.name).collect()
+}
+
+fn model_config(c: &Cfg) -> ModelConfig {
+    let num_patches = (c.image_size / c.patch_size) * (c.image_size / c.patch_size);
+    ModelConfig {
+        name: c.name.to_string(),
+        image_size: c.image_size,
+        patch_size: c.patch_size,
+        channels: CHANNELS,
+        dim: c.dim,
+        heads: c.heads,
+        depth_head: c.depth.0,
+        depth_body: c.depth.1,
+        depth_tail: c.depth.2,
+        mlp_ratio: c.mlp_ratio,
+        num_classes: c.num_classes,
+        prompt_len: c.prompt_len,
+        batch: c.batch,
+        num_patches,
+        seq_len: 1 + c.prompt_len + num_patches,
+        seq_len_noprompt: 1 + num_patches,
+        patch_dim: c.patch_size * c.patch_size * CHANNELS,
+        analytic_only: c.analytic_only,
+    }
+}
+
+fn tdef(name: &str, shape: Vec<usize>, init: InitSpec) -> TensorDef {
+    TensorDef { name: name.to_string(), shape, dtype: Dtype::F32, init }
+}
+
+fn block_defs(cfg: &ModelConfig, prefix: &str, out: &mut Vec<TensorDef>) {
+    let (d, m) = (cfg.dim, cfg.dim * cfg.mlp_ratio);
+    let w = InitSpec::Normal(0.02);
+    out.push(tdef(&format!("{prefix}.ln1.scale"), vec![d], InitSpec::Ones));
+    out.push(tdef(&format!("{prefix}.ln1.bias"), vec![d], InitSpec::Zeros));
+    out.push(tdef(&format!("{prefix}.attn.qkv.w"), vec![d, 3 * d], w));
+    out.push(tdef(&format!("{prefix}.attn.qkv.b"), vec![3 * d], InitSpec::Zeros));
+    out.push(tdef(&format!("{prefix}.attn.proj.w"), vec![d, d], w));
+    out.push(tdef(&format!("{prefix}.attn.proj.b"), vec![d], InitSpec::Zeros));
+    out.push(tdef(&format!("{prefix}.ln2.scale"), vec![d], InitSpec::Ones));
+    out.push(tdef(&format!("{prefix}.ln2.bias"), vec![d], InitSpec::Zeros));
+    out.push(tdef(&format!("{prefix}.mlp.fc1.w"), vec![d, m], w));
+    out.push(tdef(&format!("{prefix}.mlp.fc1.b"), vec![m], InitSpec::Zeros));
+    out.push(tdef(&format!("{prefix}.mlp.fc2.w"), vec![m, d], w));
+    out.push(tdef(&format!("{prefix}.mlp.fc2.b"), vec![d], InitSpec::Zeros));
+}
+
+fn segments(cfg: &ModelConfig) -> BTreeMap<String, Vec<TensorDef>> {
+    let w = InitSpec::Normal(0.02);
+    let d = cfg.dim;
+
+    let mut head = vec![
+        tdef("embed.w", vec![cfg.patch_dim, d], w),
+        tdef("embed.b", vec![d], InitSpec::Zeros),
+        tdef("cls", vec![1, 1, d], w),
+        tdef("pos", vec![1, 1 + cfg.num_patches, d], w),
+    ];
+    for i in 0..cfg.depth_head {
+        block_defs(cfg, &format!("head.block{i}"), &mut head);
+    }
+
+    let mut body = Vec::new();
+    for i in 0..cfg.depth_body {
+        block_defs(cfg, &format!("body.block{i}"), &mut body);
+    }
+
+    let mut tail = Vec::new();
+    for i in 0..cfg.depth_tail {
+        block_defs(cfg, &format!("tail.block{i}"), &mut tail);
+    }
+    tail.push(tdef("tail.ln.scale", vec![d], InitSpec::Ones));
+    tail.push(tdef("tail.ln.bias", vec![d], InitSpec::Zeros));
+    tail.push(tdef("tail.cls.w", vec![d, cfg.num_classes], w));
+    tail.push(tdef("tail.cls.b", vec![cfg.num_classes], InitSpec::Zeros));
+
+    let prompt = vec![tdef("prompt", vec![cfg.prompt_len, d], w)];
+
+    BTreeMap::from([
+        ("head".to_string(), head),
+        ("body".to_string(), body),
+        ("tail".to_string(), tail),
+        ("prompt".to_string(), prompt),
+    ])
+}
+
+fn seg(name: &str) -> IoSpec {
+    IoSpec::Segment(name.to_string())
+}
+
+fn tensor(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec::Tensor { name: name.to_string(), shape, dtype: Dtype::F32 }
+}
+
+fn tensor_i32(name: &str, shape: Vec<usize>) -> IoSpec {
+    IoSpec::Tensor { name: name.to_string(), shape, dtype: Dtype::I32 }
+}
+
+fn scalar(name: &str) -> IoSpec {
+    IoSpec::Scalar(name.to_string())
+}
+
+fn stages(cfg: &ModelConfig, baselines: bool) -> BTreeMap<String, StageDef> {
+    let b = cfg.batch;
+    let img = vec![b, cfg.image_size, cfg.image_size, cfg.channels];
+    let smashed = vec![b, cfg.seq_len, cfg.dim];
+    let smashed_np = vec![b, cfg.seq_len_noprompt, cfg.dim];
+    let labels = vec![b];
+    let logits = vec![b, cfg.num_classes];
+
+    let mut out = BTreeMap::new();
+    let mut add = |name: &str, family: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| {
+        out.insert(
+            name.to_string(),
+            StageDef {
+                name: name.to_string(),
+                file: format!("native/{name}"),
+                family: family.to_string(),
+                inputs,
+                outputs,
+            },
+        );
+    };
+
+    // ---------------- SFPrompt family ----------------
+    add(
+        "head_forward",
+        "sfprompt",
+        vec![seg("head"), seg("prompt"), tensor("images", img.clone())],
+        vec![tensor("smashed", smashed.clone())],
+    );
+    add(
+        "body_forward",
+        "sfprompt",
+        vec![seg("body"), tensor("smashed", smashed.clone())],
+        vec![tensor("body_out", smashed.clone())],
+    );
+    add(
+        "tail_step",
+        "sfprompt",
+        vec![
+            seg("tail"),
+            tensor("body_out", smashed.clone()),
+            tensor_i32("labels", labels.clone()),
+            scalar("lr"),
+        ],
+        vec![tensor("loss", vec![]), seg("tail"), tensor("g_body_out", smashed.clone())],
+    );
+    add(
+        "body_backward",
+        "sfprompt",
+        vec![
+            seg("body"),
+            tensor("smashed", smashed.clone()),
+            tensor("g_body_out", smashed.clone()),
+        ],
+        vec![tensor("g_smashed", smashed.clone())],
+    );
+    add(
+        "prompt_grad",
+        "sfprompt",
+        vec![
+            seg("head"),
+            seg("prompt"),
+            tensor("images", img.clone()),
+            tensor("g_smashed", smashed.clone()),
+            scalar("lr"),
+        ],
+        vec![seg("prompt")],
+    );
+    add(
+        "local_step",
+        "sfprompt",
+        vec![
+            seg("head"),
+            seg("tail"),
+            seg("prompt"),
+            tensor("images", img.clone()),
+            tensor_i32("labels", labels.clone()),
+            scalar("lr"),
+        ],
+        vec![tensor("loss", vec![]), seg("tail"), seg("prompt")],
+    );
+    add(
+        "el2n_scores",
+        "sfprompt",
+        vec![
+            seg("head"),
+            seg("tail"),
+            seg("prompt"),
+            tensor("images", img.clone()),
+            tensor_i32("labels", labels.clone()),
+        ],
+        vec![tensor("scores", vec![b])],
+    );
+    add(
+        "eval_forward",
+        "sfprompt",
+        vec![
+            seg("head"),
+            seg("body"),
+            seg("tail"),
+            seg("prompt"),
+            tensor("images", img.clone()),
+        ],
+        vec![tensor("logits", logits.clone())],
+    );
+
+    if !baselines {
+        return out;
+    }
+
+    // ---------------- Baseline family ----------------
+    add(
+        "head_forward_noprompt",
+        "baselines",
+        vec![seg("head"), tensor("images", img.clone())],
+        vec![tensor("smashed", smashed_np.clone())],
+    );
+    add(
+        "body_forward_noprompt",
+        "baselines",
+        vec![seg("body"), tensor("smashed", smashed_np.clone())],
+        vec![tensor("body_out", smashed_np.clone())],
+    );
+    add(
+        "tail_step_noprompt",
+        "baselines",
+        vec![
+            seg("tail"),
+            tensor("body_out", smashed_np.clone()),
+            tensor_i32("labels", labels.clone()),
+            scalar("lr"),
+        ],
+        vec![
+            tensor("loss", vec![]),
+            seg("tail"),
+            tensor("g_body_out", smashed_np.clone()),
+        ],
+    );
+    add(
+        "tail_step_linear",
+        "baselines",
+        vec![
+            seg("tail"),
+            tensor("body_out", smashed_np.clone()),
+            tensor_i32("labels", labels.clone()),
+            scalar("lr"),
+        ],
+        vec![
+            tensor("loss", vec![]),
+            seg("tail"),
+            tensor("g_body_out", smashed_np.clone()),
+        ],
+    );
+    add(
+        "body_backward_train",
+        "baselines",
+        vec![
+            seg("body"),
+            tensor("smashed", smashed_np.clone()),
+            tensor("g_body_out", smashed_np.clone()),
+            scalar("lr"),
+        ],
+        vec![seg("body"), tensor("g_smashed", smashed_np.clone())],
+    );
+    add(
+        "head_step",
+        "baselines",
+        vec![
+            seg("head"),
+            tensor("images", img.clone()),
+            tensor("g_smashed", smashed_np.clone()),
+            scalar("lr"),
+        ],
+        vec![seg("head")],
+    );
+    add(
+        "full_step",
+        "baselines",
+        vec![
+            seg("head"),
+            seg("body"),
+            seg("tail"),
+            tensor("images", img.clone()),
+            tensor_i32("labels", labels.clone()),
+            scalar("lr"),
+        ],
+        vec![tensor("loss", vec![]), seg("head"), seg("body"), seg("tail")],
+    );
+    add(
+        "eval_forward_noprompt",
+        "baselines",
+        vec![seg("head"), seg("body"), seg("tail"), tensor("images", img)],
+        vec![tensor("logits", logits)],
+    );
+    out
+}
+
+fn cost(cfg: &ModelConfig, segs: &BTreeMap<String, Vec<TensorDef>>) -> CostInfo {
+    let count = |seg: &str| -> usize {
+        segs[seg].iter().map(|d| d.shape.iter().product::<usize>()).sum()
+    };
+    let params: BTreeMap<String, usize> = ["head", "body", "tail", "prompt"]
+        .iter()
+        .map(|&s| (s.to_string(), count(s)))
+        .collect();
+    let total = params["head"] + params["body"] + params["tail"];
+    const BYTES_F32: usize = 4;
+    let message_bytes = BTreeMap::from([
+        (
+            "smashed_per_batch".to_string(),
+            cfg.batch * cfg.seq_len * cfg.dim * BYTES_F32,
+        ),
+        (
+            "smashed_per_batch_noprompt".to_string(),
+            cfg.batch * cfg.seq_len_noprompt * cfg.dim * BYTES_F32,
+        ),
+        ("head_params".to_string(), params["head"] * BYTES_F32),
+        ("body_params".to_string(), params["body"] * BYTES_F32),
+        ("tail_params".to_string(), params["tail"] * BYTES_F32),
+        ("prompt_params".to_string(), params["prompt"] * BYTES_F32),
+        ("full_model".to_string(), total * BYTES_F32),
+    ]);
+    let flops = |with_prompt: bool| -> BTreeMap<String, u64> {
+        let f = crate::flops::segment_flops(cfg, with_prompt);
+        BTreeMap::from([
+            ("head".to_string(), f.head),
+            ("body".to_string(), f.body),
+            ("tail".to_string(), f.tail),
+        ])
+    };
+    CostInfo {
+        alpha: params["head"] as f64 / total as f64,
+        tau: params["body"] as f64 / total as f64,
+        params_total_backbone: total,
+        params,
+        message_bytes,
+        flops_fwd_per_sample: flops(true),
+        flops_fwd_per_sample_noprompt: flops(false),
+    }
+}
+
+/// Synthesize the manifest for a named config entirely in memory —
+/// byte-for-byte the same inventory aot.py would emit, no disk involved.
+pub fn synth_manifest(name: &str) -> Result<Manifest> {
+    let Some(c) = registry().into_iter().find(|c| c.name == name) else {
+        bail!(
+            "unknown native config {name:?} (known: {})",
+            config_names().join(" ")
+        );
+    };
+    let config = model_config(&c);
+    let segments = segments(&config);
+    let stages = stages(&config, c.baselines);
+    let cost = cost(&config, &segments);
+    Ok(Manifest { config, segments, stages, cost })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_manifest_matches_config_math() {
+        let m = synth_manifest("tiny").unwrap();
+        let c = &m.config;
+        assert_eq!(c.num_patches, 16);
+        assert_eq!(c.seq_len, 21);
+        assert_eq!(c.seq_len_noprompt, 17);
+        assert_eq!(c.patch_dim, 192);
+        assert_eq!(m.segments["head"].len(), 4 + 12);
+        assert_eq!(m.segments["body"].len(), 12);
+        assert_eq!(m.segments["tail"].len(), 12 + 4);
+        assert_eq!(m.segments["prompt"].len(), 1);
+        assert!(m.stages.contains_key("local_step"));
+        assert!(m.stages.contains_key("full_step"));
+        assert_eq!(m.stages.len(), 16);
+        // prompt params = L * D
+        assert_eq!(m.cost.params["prompt"], 4 * 32);
+        assert!(m.cost.alpha > 0.0 && m.cost.tau > 0.0);
+        assert_eq!(
+            m.cost.message_bytes["smashed_per_batch"],
+            8 * 21 * 32 * 4
+        );
+    }
+
+    #[test]
+    fn prompt_sweep_configs_emit_sfprompt_only() {
+        let m = synth_manifest("small_c100_p16").unwrap();
+        assert_eq!(m.config.prompt_len, 16);
+        assert!(m.stages.contains_key("local_step"));
+        assert!(!m.stages.contains_key("full_step"));
+    }
+
+    #[test]
+    fn analytic_profiles_synthesize_for_cost_models() {
+        let m = synth_manifest("vit_base_sim").unwrap();
+        assert!(m.config.analytic_only);
+        // ViT-Base scale: ~85.6M backbone params.
+        assert!(m.cost.params_total_backbone > 80_000_000);
+        assert!(m.cost.params_total_backbone < 95_000_000);
+        // Split after patch embed and before classifier: tiny α, huge τ.
+        assert!(m.cost.alpha < 0.02, "alpha {}", m.cost.alpha);
+        assert!(m.cost.tau > 0.97, "tau {}", m.cost.tau);
+    }
+
+    #[test]
+    fn unknown_config_errors_with_inventory() {
+        let err = synth_manifest("nope").unwrap_err().to_string();
+        assert!(err.contains("tiny"), "{err}");
+    }
+
+    #[test]
+    fn stage_arity_matches_python_inventory() {
+        let m = synth_manifest("tiny").unwrap();
+        let arity = |s: &str| {
+            let def = m.stage(s).unwrap();
+            (def.inputs.len(), def.outputs.len())
+        };
+        assert_eq!(arity("local_step"), (6, 3));
+        assert_eq!(arity("el2n_scores"), (5, 1));
+        assert_eq!(arity("head_forward"), (3, 1));
+        assert_eq!(arity("tail_step"), (4, 3));
+        assert_eq!(arity("prompt_grad"), (5, 1));
+        assert_eq!(arity("eval_forward"), (5, 1));
+        assert_eq!(arity("full_step"), (6, 4));
+        assert_eq!(arity("body_backward_train"), (4, 2));
+    }
+}

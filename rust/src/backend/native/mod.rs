@@ -1,0 +1,425 @@
+//! The pure-Rust ViT kernel engine: a [`crate::backend::Backend`] that
+//! computes every stage with hand-written forward + backward kernels over
+//! a synthesized in-memory manifest — no PJRT, no artifacts, no Python.
+//!
+//! * [`manifest`] — named-config registry + in-memory manifest synthesis
+//!   (mirrors python/compile/configs.py and aot.py's JSON inventory).
+//! * [`math`] — matmul orientations, LayerNorm, tanh-GELU, softmax,
+//!   fused attention, each with its VJP.
+//! * [`vit`] — the split prompt-augmented ViT: segment layouts, block
+//!   forward/backward, head/body/tail passes, cross-entropy, EL2N, SGD.
+//! * [`stages`] — the sixteen protocol stages composed from the above.
+//!
+//! Gradients were validated against `jax.grad` of python/compile/vit.py
+//! (≤5e-7 relative error on every parameter of every stage family) and
+//! are finite-difference-tested in `tests/native_grad.rs`.
+
+pub mod manifest;
+pub mod math;
+pub mod stages;
+pub mod vit;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::SegmentParams;
+use crate::runtime::{IoSpec, Manifest};
+
+use super::{
+    Backend, PreparedRepr, PreparedSegment, SegInput, SegmentInputs, StageOutputs, StageStats,
+    TensorInputs,
+};
+
+pub use manifest::{config_names, synth_manifest};
+
+/// The native compute substrate. `Sync`: per-client threads share one.
+pub struct NativeBackend {
+    manifest: Manifest,
+    /// per-stage (calls, exec seconds)
+    stats: Mutex<HashMap<String, (u64, f64)>>,
+}
+
+impl NativeBackend {
+    /// Backend over an explicit manifest (tests can hand-craft one).
+    pub fn new(manifest: Manifest) -> NativeBackend {
+        NativeBackend { manifest, stats: Mutex::new(HashMap::new()) }
+    }
+
+    /// Backend for a named config, manifest synthesized in memory.
+    pub fn for_config(name: &str) -> Result<NativeBackend> {
+        let manifest = synth_manifest(name)?;
+        if manifest.config.analytic_only {
+            bail!(
+                "config {name:?} is analytic-only (cost model scale); it is \
+                 never executed — pick tiny/small/small_c100"
+            );
+        }
+        Ok(NativeBackend::new(manifest))
+    }
+
+    /// The `tiny` test substrate (what `cargo test` trains on).
+    pub fn tiny() -> NativeBackend {
+        NativeBackend::for_config("tiny").expect("tiny config is always synthesizable")
+    }
+
+    /// Validate inputs against the manifest stage signature and resolve
+    /// segment handles to host params. (`&'a self`: the resolved args
+    /// borrow input names from the manifest's stage definition.)
+    fn resolve<'a>(
+        &'a self,
+        stage: &str,
+        segments: &'a SegmentInputs<'a>,
+        tensors: &'a TensorInputs<'a>,
+    ) -> Result<stages::StageArgs<'a>> {
+        let def = self.manifest.stage(stage)?;
+        let mut args = stages::StageArgs {
+            segments: Default::default(),
+            tensors: Default::default(),
+        };
+        for io in &def.inputs {
+            match io {
+                IoSpec::Segment(seg) => {
+                    let input = segments
+                        .get(seg.as_str())
+                        .ok_or_else(|| anyhow!("stage {stage} needs segment {seg:?}"))?;
+                    let params: &SegmentParams = match input {
+                        SegInput::Host(p) => p,
+                        SegInput::Prepared(prep) => match &prep.repr {
+                            PreparedRepr::Host(p) => p,
+                            PreparedRepr::Literals(_) => bail!(
+                                "segment {seg:?} was prepared for the PJRT backend; \
+                                 prepare it with the backend that runs the stage"
+                            ),
+                        },
+                    };
+                    let defs = self.manifest.segment(seg)?;
+                    if params.tensors.len() != defs.len() {
+                        bail!(
+                            "segment {seg:?} has {} tensors, manifest expects {}",
+                            params.tensors.len(),
+                            defs.len()
+                        );
+                    }
+                    for (t, d) in params.tensors.iter().zip(defs) {
+                        if t.shape != d.shape {
+                            bail!(
+                                "segment {seg:?} tensor {}: shape {:?} != manifest {:?}",
+                                d.name,
+                                t.shape,
+                                d.shape
+                            );
+                        }
+                    }
+                    args.segments.insert(seg.as_str(), params);
+                }
+                IoSpec::Tensor { name, shape, dtype } => {
+                    let t = tensors
+                        .get(name.as_str())
+                        .copied()
+                        .ok_or_else(|| anyhow!("stage {stage} needs tensor {name:?}"))?;
+                    if &t.shape != shape {
+                        bail!("tensor {name:?}: shape {:?} != manifest {:?}", t.shape, shape);
+                    }
+                    if t.dtype() != *dtype {
+                        bail!("tensor {name:?}: dtype mismatch");
+                    }
+                    args.tensors.insert(name.as_str(), t);
+                }
+                IoSpec::Scalar(name) => {
+                    let t = tensors
+                        .get(name.as_str())
+                        .copied()
+                        .ok_or_else(|| anyhow!("stage {stage} needs scalar {name:?}"))?;
+                    if !t.shape.is_empty() {
+                        bail!("scalar {name:?} must be rank-0, got shape {:?}", t.shape);
+                    }
+                    args.tensors.insert(name.as_str(), t);
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn prepare_segment(&self, params: &SegmentParams) -> Result<PreparedSegment> {
+        // Host params ARE the native compute representation; a prepared
+        // segment is just a stable copy the engine can share across
+        // client threads for the whole run.
+        Ok(PreparedSegment { repr: PreparedRepr::Host(params.clone()) })
+    }
+
+    fn run_stage(
+        &self,
+        stage: &str,
+        segments: &SegmentInputs,
+        tensors: &TensorInputs,
+    ) -> Result<StageOutputs> {
+        let args = self.resolve(stage, segments, tensors)?;
+        let t0 = Instant::now();
+        let out = stages::run(&self.manifest.config, stage, &args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(stage.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        Ok(out)
+    }
+
+    fn execution_stats(&self) -> Vec<(String, StageStats)> {
+        let mut v: Vec<(String, StageStats)> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, &(calls, exec_s))| {
+                (k.clone(), StageStats { calls, convert_s: 0.0, exec_s })
+            })
+            .collect();
+        v.sort_by(|a, b| b.1.exec_s.total_cmp(&a.1.exec_s));
+        v
+    }
+
+    fn reset_execution_stats(&self) {
+        self.stats.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeMap;
+
+    use super::*;
+    use crate::backend::run_stage_hosts;
+    use crate::model::init_params;
+    use crate::runtime::HostTensor;
+
+    fn images(cfg: &crate::runtime::ModelConfig, seed: u64) -> HostTensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let n = cfg.batch * cfg.image_size * cfg.image_size * cfg.channels;
+        HostTensor::f32(
+            vec![cfg.batch, cfg.image_size, cfg.image_size, cfg.channels],
+            (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        )
+    }
+
+    fn labels(cfg: &crate::runtime::ModelConfig, seed: u64) -> HostTensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        HostTensor::i32(
+            vec![cfg.batch],
+            (0..cfg.batch).map(|_| rng.below(cfg.num_classes) as i32).collect(),
+        )
+    }
+
+    #[test]
+    fn local_step_decreases_loss_over_iterations() {
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 7);
+        let (imgs, lbls) = (images(&cfg, 1), labels(&cfg, 2));
+        let lr = HostTensor::scalar_f32(0.1);
+        let mut tail = params.get("tail").unwrap().clone();
+        let mut prompt = params.get("prompt").unwrap().clone();
+        let head = params.get("head").unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+            segs.insert("head", head);
+            segs.insert("tail", &tail);
+            segs.insert("prompt", &prompt);
+            let mut tensors: TensorInputs = BTreeMap::new();
+            tensors.insert("images", &imgs);
+            tensors.insert("labels", &lbls);
+            tensors.insert("lr", &lr);
+            let mut out = run_stage_hosts(&be, "local_step", &segs, &tensors).unwrap();
+            losses.push(out.loss().unwrap());
+            tail = out.take_segment("tail").unwrap();
+            prompt = out.take_segment("prompt").unwrap();
+        }
+        assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+        assert!(losses[4] < losses[0], "{losses:?}");
+    }
+
+    #[test]
+    fn split_chain_composes_with_matching_shapes() {
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 7);
+        let (imgs, lbls) = (images(&cfg, 3), labels(&cfg, 4));
+        let lr = HostTensor::scalar_f32(0.05);
+
+        let seg = |names: &[&'static str]| -> BTreeMap<&str, &SegmentParams> {
+            names.iter().map(|&n| (n, params.get(n).unwrap())).collect()
+        };
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("images", &imgs);
+        let out = run_stage_hosts(&be, "head_forward", &seg(&["head", "prompt"]), &t).unwrap();
+        let smashed = out.tensor("smashed").unwrap().clone();
+        assert_eq!(smashed.shape, vec![cfg.batch, cfg.seq_len, cfg.dim]);
+
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("smashed", &smashed);
+        let out = run_stage_hosts(&be, "body_forward", &seg(&["body"]), &t).unwrap();
+        let body_out = out.tensor("body_out").unwrap().clone();
+
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("body_out", &body_out);
+        t.insert("labels", &lbls);
+        t.insert("lr", &lr);
+        let out = run_stage_hosts(&be, "tail_step", &seg(&["tail"]), &t).unwrap();
+        let loss = out.loss().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let g_body_out = out.tensor("g_body_out").unwrap().clone();
+        assert_eq!(g_body_out.shape, smashed.shape);
+        assert!(out.segment("tail").unwrap().max_abs_diff(params.get("tail").unwrap()) > 0.0);
+
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("smashed", &smashed);
+        t.insert("g_body_out", &g_body_out);
+        let out = run_stage_hosts(&be, "body_backward", &seg(&["body"]), &t).unwrap();
+        let g_smashed = out.tensor("g_smashed").unwrap().clone();
+
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("images", &imgs);
+        t.insert("g_smashed", &g_smashed);
+        t.insert("lr", &lr);
+        let out = run_stage_hosts(&be, "prompt_grad", &seg(&["head", "prompt"]), &t).unwrap();
+        assert!(
+            out.segment("prompt").unwrap().max_abs_diff(params.get("prompt").unwrap()) > 0.0
+        );
+    }
+
+    #[test]
+    fn el2n_scores_bounded_for_probability_vectors() {
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 7);
+        let (imgs, lbls) = (images(&cfg, 5), labels(&cfg, 6));
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        for s in ["head", "tail", "prompt"] {
+            segs.insert(s, params.get(s).unwrap());
+        }
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("images", &imgs);
+        t.insert("labels", &lbls);
+        let out = run_stage_hosts(&be, "el2n_scores", &segs, &t).unwrap();
+        let scores = out.tensor("scores").unwrap();
+        assert_eq!(scores.shape, vec![cfg.batch]);
+        // EL2N ∈ [0, √2] for probability vectors.
+        assert!(scores.as_f32().iter().all(|&s| (0.0..=1.5).contains(&s)));
+    }
+
+    #[test]
+    fn validation_rejects_missing_and_misshaped_inputs() {
+        let be = NativeBackend::tiny();
+        let segs: SegmentInputs = BTreeMap::new();
+        let tensors: TensorInputs = BTreeMap::new();
+        assert!(be.run_stage("local_step", &segs, &tensors).is_err());
+        assert!(be.run_stage("no_such_stage", &segs, &tensors).is_err());
+
+        let params = init_params(be.manifest(), 7);
+        let bad = HostTensor::zeros(vec![1, 2, 3]);
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        segs.insert("head", params.get("head").unwrap());
+        segs.insert("prompt", params.get("prompt").unwrap());
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("images", &bad);
+        assert!(run_stage_hosts(&be, "head_forward", &segs, &t).is_err());
+    }
+
+    #[test]
+    fn full_step_trains_every_segment() {
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 11);
+        let (imgs, lbls) = (images(&cfg, 7), labels(&cfg, 8));
+        let lr = HostTensor::scalar_f32(0.05);
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        for s in ["head", "body", "tail"] {
+            segs.insert(s, params.get(s).unwrap());
+        }
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("images", &imgs);
+        t.insert("labels", &lbls);
+        t.insert("lr", &lr);
+        let out = run_stage_hosts(&be, "full_step", &segs, &t).unwrap();
+        assert!(out.loss().unwrap().is_finite());
+        for s in ["head", "body", "tail"] {
+            assert!(
+                out.segment(s).unwrap().max_abs_diff(params.get(s).unwrap()) > 0.0,
+                "{s} did not move"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_tail_step_moves_only_the_classifier() {
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 13);
+        let lbls = labels(&cfg, 9);
+        let mut rng = crate::util::rng::Rng::new(21);
+        let n = cfg.batch * cfg.seq_len_noprompt * cfg.dim;
+        let body_out = HostTensor::f32(
+            vec![cfg.batch, cfg.seq_len_noprompt, cfg.dim],
+            (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+        );
+        let lr = HostTensor::scalar_f32(0.1);
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        segs.insert("tail", params.get("tail").unwrap());
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("body_out", &body_out);
+        t.insert("labels", &lbls);
+        t.insert("lr", &lr);
+        let out = run_stage_hosts(&be, "tail_step_linear", &segs, &t).unwrap();
+        let new_tail = out.segment("tail").unwrap();
+        let old_tail = params.get("tail").unwrap();
+        let nt = old_tail.tensors.len();
+        for (i, (a, b)) in new_tail.tensors.iter().zip(&old_tail.tensors).enumerate() {
+            let moved = a
+                .as_f32()
+                .iter()
+                .zip(b.as_f32())
+                .any(|(x, y)| x != y);
+            if i >= nt - 2 {
+                assert!(moved, "classifier tensor {i} frozen");
+            } else {
+                assert!(!moved, "frozen tensor {i} moved");
+            }
+        }
+        // Gradient still flows to the cut layer through the frozen blocks.
+        assert!(out.tensor("g_body_out").unwrap().l2() > 0.0);
+    }
+
+    #[test]
+    fn execution_stats_accumulate() {
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 7);
+        let imgs = images(&cfg, 1);
+        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
+        segs.insert("head", params.get("head").unwrap());
+        segs.insert("prompt", params.get("prompt").unwrap());
+        let mut t: TensorInputs = BTreeMap::new();
+        t.insert("images", &imgs);
+        run_stage_hosts(&be, "head_forward", &segs, &t).unwrap();
+        run_stage_hosts(&be, "head_forward", &segs, &t).unwrap();
+        let stats = be.execution_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].0, "head_forward");
+        assert_eq!(stats[0].1.calls, 2);
+        be.reset_execution_stats();
+        assert!(be.execution_stats().is_empty());
+    }
+}

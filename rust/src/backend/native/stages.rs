@@ -1,0 +1,240 @@
+//! The sixteen protocol stages (python/compile/stages.py) implemented on
+//! the native ViT kernels: every SFPrompt phase and every baseline step,
+//! each a composition of the forward passes, hand-written VJPs, and exact
+//! SGD from [`super::vit`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::backend::StageOutputs;
+use crate::model::SegmentParams;
+use crate::runtime::{HostTensor, ModelConfig};
+
+use super::vit::{
+    body_bwd, body_fwd, cross_entropy, cross_entropy_bwd, el2n_scores, head_bwd_full,
+    head_bwd_to_tokens, head_fwd, prompt_grad_from_tokens, sgd_update, tail_bwd, tail_fwd,
+};
+
+/// Resolved stage inputs: segments by name plus named host tensors.
+pub struct StageArgs<'a> {
+    pub segments: BTreeMap<&'a str, &'a SegmentParams>,
+    pub tensors: BTreeMap<&'a str, &'a HostTensor>,
+}
+
+impl<'a> StageArgs<'a> {
+    fn seg(&self, name: &str) -> Result<&'a SegmentParams> {
+        self.segments.get(name).copied().ok_or_else(|| anyhow!("missing segment {name:?}"))
+    }
+
+    fn tensor(&self, name: &str) -> Result<&'a HostTensor> {
+        self.tensors.get(name).copied().ok_or_else(|| anyhow!("missing tensor {name:?}"))
+    }
+
+    fn lr(&self) -> Result<f32> {
+        Ok(self.tensor("lr")?.as_f32()[0])
+    }
+}
+
+fn out_tensor(out: &mut StageOutputs, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+    out.tensors.insert(name.to_string(), HostTensor::f32(shape, data));
+}
+
+fn out_loss(out: &mut StageOutputs, loss: f32) {
+    out.tensors.insert("loss".to_string(), HostTensor::f32(vec![], vec![loss]));
+}
+
+fn smashed_shape(cfg: &ModelConfig, with_prompt: bool) -> Vec<usize> {
+    let t = if with_prompt { cfg.seq_len } else { cfg.seq_len_noprompt };
+    vec![cfg.batch, t, cfg.dim]
+}
+
+/// Dispatch one stage by name. Inputs are pre-validated against the
+/// manifest signature by the backend wrapper.
+pub fn run(cfg: &ModelConfig, stage: &str, args: &StageArgs) -> Result<StageOutputs> {
+    match stage {
+        "head_forward" => head_forward(cfg, args, true),
+        "head_forward_noprompt" => head_forward(cfg, args, false),
+        "body_forward" => body_forward(cfg, args, true),
+        "body_forward_noprompt" => body_forward(cfg, args, false),
+        "tail_step" => tail_step(cfg, args, true, true),
+        "tail_step_noprompt" => tail_step(cfg, args, false, true),
+        "tail_step_linear" => tail_step(cfg, args, false, false),
+        "body_backward" => body_backward(cfg, args),
+        "body_backward_train" => body_backward_train(cfg, args),
+        "prompt_grad" => prompt_grad(cfg, args),
+        "head_step" => head_step(cfg, args),
+        "local_step" => local_step(cfg, args),
+        "el2n_scores" => el2n(cfg, args),
+        "full_step" => full_step(cfg, args),
+        "eval_forward" => eval_forward(cfg, args, true),
+        "eval_forward_noprompt" => eval_forward(cfg, args, false),
+        other => Err(anyhow!("native backend has no kernel for stage {other:?}")),
+    }
+}
+
+fn head_forward(cfg: &ModelConfig, args: &StageArgs, with_prompt: bool) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let prompt = if with_prompt { Some(args.seg("prompt")?) } else { None };
+    let (x, _) = head_fwd(cfg, head, prompt, args.tensor("images")?);
+    let mut out = StageOutputs::default();
+    out_tensor(&mut out, "smashed", smashed_shape(cfg, with_prompt), x);
+    Ok(out)
+}
+
+fn body_forward(cfg: &ModelConfig, args: &StageArgs, with_prompt: bool) -> Result<StageOutputs> {
+    let body = args.seg("body")?;
+    let (y, _) = body_fwd(cfg, body, args.tensor("smashed")?.as_f32(), with_prompt);
+    let mut out = StageOutputs::default();
+    out_tensor(&mut out, "body_out", smashed_shape(cfg, with_prompt), y);
+    Ok(out)
+}
+
+/// tail fwd/bwd + SGD; emits loss, the updated tail, and g_body_out.
+/// `train_blocks=false` is the SFL+Linear variant (classifier-only SGD).
+fn tail_step(
+    cfg: &ModelConfig,
+    args: &StageArgs,
+    with_prompt: bool,
+    train_blocks: bool,
+) -> Result<StageOutputs> {
+    let tail = args.seg("tail")?;
+    let x = args.tensor("body_out")?.as_f32();
+    let labels = args.tensor("labels")?.as_i32();
+    let lr = args.lr()?;
+    let (logits, cache) = tail_fwd(cfg, tail, x, with_prompt);
+    let (loss, probs) = cross_entropy(&logits, labels, cfg.num_classes)?;
+    let dlogits = cross_entropy_bwd(&probs, labels, cfg.num_classes);
+    let (dx, grads) = tail_bwd(cfg, tail, &dlogits, &cache, with_prompt, train_blocks);
+    let mut out = StageOutputs::default();
+    out_loss(&mut out, loss);
+    out.segments.insert("tail".to_string(), sgd_update(tail, &grads, lr));
+    out_tensor(&mut out, "g_body_out", smashed_shape(cfg, with_prompt), dx);
+    Ok(out)
+}
+
+/// Frozen body VJP: backprop g_body_out through W_b → g_smashed.
+fn body_backward(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let body = args.seg("body")?;
+    let (_, caches) = body_fwd(cfg, body, args.tensor("smashed")?.as_f32(), true);
+    let (g_smashed, _) =
+        body_bwd(cfg, body, args.tensor("g_body_out")?.as_f32(), &caches, true, false);
+    let mut out = StageOutputs::default();
+    out_tensor(&mut out, "g_smashed", smashed_shape(cfg, true), g_smashed);
+    Ok(out)
+}
+
+/// SFL+FF server step: body VJP with parameter grads + SGD on the body.
+fn body_backward_train(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let body = args.seg("body")?;
+    let lr = args.lr()?;
+    let (_, caches) = body_fwd(cfg, body, args.tensor("smashed")?.as_f32(), false);
+    let (g_smashed, grads) =
+        body_bwd(cfg, body, args.tensor("g_body_out")?.as_f32(), &caches, false, true);
+    let grads = grads.expect("grads requested");
+    let mut out = StageOutputs::default();
+    out.segments.insert("body".to_string(), sgd_update(body, &grads, lr));
+    out_tensor(&mut out, "g_smashed", smashed_shape(cfg, false), g_smashed);
+    Ok(out)
+}
+
+/// Backprop g_smashed through the frozen head into the prompt; SGD on p.
+fn prompt_grad(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let prompt = args.seg("prompt")?;
+    let lr = args.lr()?;
+    let (_, cache) = head_fwd(cfg, head, Some(prompt), args.tensor("images")?);
+    let g_tokens =
+        head_bwd_to_tokens(cfg, head, args.tensor("g_smashed")?.as_f32(), &cache, true);
+    let g_p = prompt_grad_from_tokens(cfg, &g_tokens);
+    let mut out = StageOutputs::default();
+    out.segments.insert("prompt".to_string(), sgd_update(prompt, &[g_p], lr));
+    Ok(out)
+}
+
+/// SFL+FF client step: backprop g_smashed into every head parameter + SGD.
+fn head_step(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let lr = args.lr()?;
+    let (_, cache) = head_fwd(cfg, head, None, args.tensor("images")?);
+    let grads = head_bwd_full(cfg, head, args.tensor("g_smashed")?.as_f32(), &cache);
+    let mut out = StageOutputs::default();
+    out.segments.insert("head".to_string(), sgd_update(head, &grads, lr));
+    Ok(out)
+}
+
+/// Phase 1 local-loss step (paper Eq. 1): W_h→W_t shortcut, SGD on
+/// (W_t, p) with the frozen head.
+fn local_step(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let tail = args.seg("tail")?;
+    let prompt = args.seg("prompt")?;
+    let labels = args.tensor("labels")?.as_i32();
+    let lr = args.lr()?;
+    let (x, head_cache) = head_fwd(cfg, head, Some(prompt), args.tensor("images")?);
+    let (logits, tail_cache) = tail_fwd(cfg, tail, &x, true);
+    let (loss, probs) = cross_entropy(&logits, labels, cfg.num_classes)?;
+    let dlogits = cross_entropy_bwd(&probs, labels, cfg.num_classes);
+    let (dx, tail_grads) = tail_bwd(cfg, tail, &dlogits, &tail_cache, true, true);
+    let g_tokens = head_bwd_to_tokens(cfg, head, &dx, &head_cache, true);
+    let g_p = prompt_grad_from_tokens(cfg, &g_tokens);
+    let mut out = StageOutputs::default();
+    out_loss(&mut out, loss);
+    out.segments.insert("tail".to_string(), sgd_update(tail, &tail_grads, lr));
+    out.segments.insert("prompt".to_string(), sgd_update(prompt, &[g_p], lr));
+    Ok(out)
+}
+
+/// EL2N pruning scores through the W_h→W_t shortcut (paper Eq. 2).
+fn el2n(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let tail = args.seg("tail")?;
+    let prompt = args.seg("prompt")?;
+    let labels = args.tensor("labels")?.as_i32();
+    let (x, _) = head_fwd(cfg, head, Some(prompt), args.tensor("images")?);
+    let (logits, _) = tail_fwd(cfg, tail, &x, true);
+    let scores = el2n_scores(&logits, labels, cfg.num_classes);
+    let mut out = StageOutputs::default();
+    out_tensor(&mut out, "scores", vec![cfg.batch], scores);
+    Ok(out)
+}
+
+/// FL baseline: full-model fwd/bwd (no prompt) + SGD on every segment.
+fn full_step(cfg: &ModelConfig, args: &StageArgs) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let body = args.seg("body")?;
+    let tail = args.seg("tail")?;
+    let labels = args.tensor("labels")?.as_i32();
+    let lr = args.lr()?;
+    let (x, head_cache) = head_fwd(cfg, head, None, args.tensor("images")?);
+    let (y, body_caches) = body_fwd(cfg, body, &x, false);
+    let (logits, tail_cache) = tail_fwd(cfg, tail, &y, false);
+    let (loss, probs) = cross_entropy(&logits, labels, cfg.num_classes)?;
+    let dlogits = cross_entropy_bwd(&probs, labels, cfg.num_classes);
+    let (dy, tail_grads) = tail_bwd(cfg, tail, &dlogits, &tail_cache, false, true);
+    let (dx, body_grads) = body_bwd(cfg, body, &dy, &body_caches, false, true);
+    let head_grads = head_bwd_full(cfg, head, &dx, &head_cache);
+    let mut out = StageOutputs::default();
+    out_loss(&mut out, loss);
+    out.segments.insert("head".to_string(), sgd_update(head, &head_grads, lr));
+    out.segments.insert(
+        "body".to_string(),
+        sgd_update(body, &body_grads.expect("grads requested"), lr),
+    );
+    out.segments.insert("tail".to_string(), sgd_update(tail, &tail_grads, lr));
+    Ok(out)
+}
+
+/// Full-model logits for accuracy evaluation.
+fn eval_forward(cfg: &ModelConfig, args: &StageArgs, with_prompt: bool) -> Result<StageOutputs> {
+    let head = args.seg("head")?;
+    let body = args.seg("body")?;
+    let tail = args.seg("tail")?;
+    let prompt = if with_prompt { Some(args.seg("prompt")?) } else { None };
+    let (x, _) = head_fwd(cfg, head, prompt, args.tensor("images")?);
+    let (y, _) = body_fwd(cfg, body, &x, with_prompt);
+    let (logits, _) = tail_fwd(cfg, tail, &y, with_prompt);
+    let mut out = StageOutputs::default();
+    out_tensor(&mut out, "logits", vec![cfg.batch, cfg.num_classes], logits);
+    Ok(out)
+}

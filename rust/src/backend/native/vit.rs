@@ -1,0 +1,792 @@
+//! The prompt-augmented split ViT in pure Rust: forward passes with
+//! explicit caches and hand-written backward passes for every segment.
+//!
+//! Mirrors python/compile/vit.py exactly (segment tensor order, prompt
+//! insertion after the cls token, pre-LN blocks, cls-token readout); the
+//! gradient formulas were validated against `jax.grad` of that model
+//! before transcription. All activations are `[rows, D]` row-major with
+//! `rows = B * T`.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::SegmentParams;
+use crate::runtime::{HostTensor, ModelConfig};
+
+use super::math::{
+    add_bias, attention_bwd, attention_fwd, col_sums, gelu_bwd, gelu_fwd, layernorm_bwd,
+    layernorm_fwd, matmul, matmul_a_bt, matmul_at_b, LnCache,
+};
+
+/// Tensors per transformer block in the manifest layout
+/// (ln1.{scale,bias}, attn.qkv.{w,b}, attn.proj.{w,b}, ln2.{scale,bias},
+/// mlp.fc1.{w,b}, mlp.fc2.{w,b}).
+pub const BLOCK_TENSORS: usize = 12;
+/// Non-block tensors at the start of the head segment
+/// (embed.w, embed.b, cls, pos).
+pub const HEAD_PREFIX: usize = 4;
+/// Non-block tensors at the end of the tail segment
+/// (tail.ln.{scale,bias}, tail.cls.{w,b}).
+pub const TAIL_SUFFIX: usize = 4;
+
+/// One block's parameters, borrowed from 12 consecutive segment tensors.
+pub struct BlockParams<'a> {
+    pub ln1_s: &'a [f32],
+    pub ln1_b: &'a [f32],
+    pub qkv_w: &'a [f32],
+    pub qkv_b: &'a [f32],
+    pub proj_w: &'a [f32],
+    pub proj_b: &'a [f32],
+    pub ln2_s: &'a [f32],
+    pub ln2_b: &'a [f32],
+    pub fc1_w: &'a [f32],
+    pub fc1_b: &'a [f32],
+    pub fc2_w: &'a [f32],
+    pub fc2_b: &'a [f32],
+}
+
+impl<'a> BlockParams<'a> {
+    /// View block `i` of a segment whose blocks start at tensor `offset`.
+    pub fn at(seg: &'a SegmentParams, offset: usize, i: usize) -> BlockParams<'a> {
+        let t = &seg.tensors[offset + i * BLOCK_TENSORS..offset + (i + 1) * BLOCK_TENSORS];
+        BlockParams {
+            ln1_s: t[0].as_f32(),
+            ln1_b: t[1].as_f32(),
+            qkv_w: t[2].as_f32(),
+            qkv_b: t[3].as_f32(),
+            proj_w: t[4].as_f32(),
+            proj_b: t[5].as_f32(),
+            ln2_s: t[6].as_f32(),
+            ln2_b: t[7].as_f32(),
+            fc1_w: t[8].as_f32(),
+            fc1_b: t[9].as_f32(),
+            fc2_w: t[10].as_f32(),
+            fc2_b: t[11].as_f32(),
+        }
+    }
+}
+
+/// Everything a block's backward pass needs from its forward pass.
+pub struct BlockCache {
+    h1: Vec<f32>,
+    ln1: LnCache,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    probs: Vec<f32>,
+    a_merged: Vec<f32>,
+    ln2: LnCache,
+    h2: Vec<f32>,
+    u: Vec<f32>,
+    g_act: Vec<f32>,
+    t_act: Vec<f32>,
+}
+
+/// Activation geometry of one stage call.
+#[derive(Debug, Clone, Copy)]
+pub struct Dims {
+    pub b: usize,
+    pub t: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub dh: usize,
+    /// MLP hidden width (mlp_ratio * d)
+    pub m: usize,
+}
+
+impl Dims {
+    pub fn of(cfg: &ModelConfig, with_prompt: bool) -> Dims {
+        Dims {
+            b: cfg.batch,
+            t: if with_prompt { cfg.seq_len } else { cfg.seq_len_noprompt },
+            d: cfg.dim,
+            heads: cfg.heads,
+            dh: cfg.dim / cfg.heads,
+            m: cfg.dim * cfg.mlp_ratio,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.b * self.t
+    }
+}
+
+/// `[B*T, 3D]` qkv activations → `q/k/v` each `[B, H, T, Dh]`.
+fn split_heads(qkv: &[f32], dm: &Dims) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b, t, d, h, dh) = (dm.b, dm.t, dm.d, dm.heads, dm.dh);
+    let mut q = vec![0.0f32; b * h * t * dh];
+    let mut k = q.clone();
+    let mut v = q.clone();
+    for bi in 0..b {
+        for ti in 0..t {
+            let row = &qkv[(bi * t + ti) * 3 * d..(bi * t + ti + 1) * 3 * d];
+            for hi in 0..h {
+                let dst = ((bi * h + hi) * t + ti) * dh;
+                q[dst..dst + dh].copy_from_slice(&row[hi * dh..(hi + 1) * dh]);
+                k[dst..dst + dh].copy_from_slice(&row[d + hi * dh..d + (hi + 1) * dh]);
+                v[dst..dst + dh].copy_from_slice(&row[2 * d + hi * dh..2 * d + (hi + 1) * dh]);
+            }
+        }
+    }
+    (q, k, v)
+}
+
+/// `q/k/v`-shaped gradients `[B, H, T, Dh]` → `[B*T, 3D]`.
+fn merge_heads_qkv(dq: &[f32], dk: &[f32], dv: &[f32], dm: &Dims) -> Vec<f32> {
+    let (b, t, d, h, dh) = (dm.b, dm.t, dm.d, dm.heads, dm.dh);
+    let mut out = vec![0.0f32; b * t * 3 * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let row = &mut out[(bi * t + ti) * 3 * d..(bi * t + ti + 1) * 3 * d];
+            for hi in 0..h {
+                let src = ((bi * h + hi) * t + ti) * dh;
+                row[hi * dh..(hi + 1) * dh].copy_from_slice(&dq[src..src + dh]);
+                row[d + hi * dh..d + (hi + 1) * dh].copy_from_slice(&dk[src..src + dh]);
+                row[2 * d + hi * dh..2 * d + (hi + 1) * dh].copy_from_slice(&dv[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// `[B, H, T, Dh]` attention output → `[B*T, D]`.
+fn merge_heads(a: &[f32], dm: &Dims) -> Vec<f32> {
+    let (b, t, d, h, dh) = (dm.b, dm.t, dm.d, dm.heads, dm.dh);
+    let mut out = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let src = ((bi * h + hi) * t + ti) * dh;
+                let dst = (bi * t + ti) * d + hi * dh;
+                out[dst..dst + dh].copy_from_slice(&a[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// `[B*T, D]` gradient → `[B, H, T, Dh]` (inverse of [`merge_heads`]).
+fn split_merged(da: &[f32], dm: &Dims) -> Vec<f32> {
+    let (b, t, d, h, dh) = (dm.b, dm.t, dm.d, dm.heads, dm.dh);
+    let mut out = vec![0.0f32; b * h * t * dh];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..t {
+                let dst = ((bi * h + hi) * t + ti) * dh;
+                let src = (bi * t + ti) * d + hi * dh;
+                out[dst..dst + dh].copy_from_slice(&da[src..src + dh]);
+            }
+        }
+    }
+    out
+}
+
+/// Pre-LN transformer block forward. `x: [B*T, D]`.
+pub fn block_fwd(p: &BlockParams, x: &[f32], dm: &Dims) -> (Vec<f32>, BlockCache) {
+    let rows = dm.rows();
+    let (h1, ln1) = layernorm_fwd(x, p.ln1_s, p.ln1_b);
+    let mut qkv = matmul(&h1, p.qkv_w, rows, dm.d, 3 * dm.d);
+    add_bias(&mut qkv, p.qkv_b);
+    let (q, k, v) = split_heads(&qkv, dm);
+    let (o, probs) = attention_fwd(&q, &k, &v, dm.b * dm.heads, dm.t, dm.dh);
+    let a_merged = merge_heads(&o, dm);
+    let mut x1 = matmul(&a_merged, p.proj_w, rows, dm.d, dm.d);
+    add_bias(&mut x1, p.proj_b);
+    for (o, &xv) in x1.iter_mut().zip(x) {
+        *o += xv;
+    }
+    let (h2, ln2) = layernorm_fwd(&x1, p.ln2_s, p.ln2_b);
+    let mut u = matmul(&h2, p.fc1_w, rows, dm.d, dm.m);
+    add_bias(&mut u, p.fc1_b);
+    let (g_act, t_act) = gelu_fwd(&u);
+    let mut x2 = matmul(&g_act, p.fc2_w, rows, dm.m, dm.d);
+    add_bias(&mut x2, p.fc2_b);
+    for (o, &xv) in x2.iter_mut().zip(&x1) {
+        *o += xv;
+    }
+    let cache =
+        BlockCache { h1, ln1, q, k, v, probs, a_merged, ln2, h2, u, g_act, t_act };
+    (x2, cache)
+}
+
+/// Block VJP. Returns `dx` and, when `want_grads`, the 12 parameter
+/// gradients in manifest tensor order.
+pub fn block_bwd(
+    p: &BlockParams,
+    g: &[f32],
+    c: &BlockCache,
+    dm: &Dims,
+    want_grads: bool,
+) -> (Vec<f32>, Option<Vec<Vec<f32>>>) {
+    let rows = dm.rows();
+    // x2 = x1 + gelu(h2@W1+b1)@W2+b2
+    let du = {
+        let dg_act = matmul_a_bt(g, p.fc2_w, rows, dm.d, dm.m);
+        gelu_bwd(&dg_act, &c.u, &c.t_act)
+    };
+    let dh2 = matmul_a_bt(&du, p.fc1_w, rows, dm.m, dm.d);
+    let (dx1_ln, dln2_s, dln2_b) = layernorm_bwd(&dh2, p.ln2_s, &c.ln2);
+    let mut dx1: Vec<f32> = g.iter().zip(&dx1_ln).map(|(&a, &b)| a + b).collect();
+    // x1 = x + merge(attn(qkv(LN(x))))@Wp+bp
+    let da = matmul_a_bt(&dx1, p.proj_w, rows, dm.d, dm.d);
+    let do_heads = split_merged(&da, dm);
+    let (dq, dk, dv) =
+        attention_bwd(&do_heads, &c.q, &c.k, &c.v, &c.probs, dm.b * dm.heads, dm.t, dm.dh);
+    let dqkv = merge_heads_qkv(&dq, &dk, &dv, dm);
+    let dh1 = matmul_a_bt(&dqkv, p.qkv_w, rows, 3 * dm.d, dm.d);
+    let (dx_ln, dln1_s, dln1_b) = layernorm_bwd(&dh1, p.ln1_s, &c.ln1);
+
+    let grads = want_grads.then(|| {
+        vec![
+            dln1_s,
+            dln1_b,
+            matmul_at_b(&c.h1, &dqkv, rows, dm.d, 3 * dm.d),
+            col_sums(&dqkv, 3 * dm.d),
+            matmul_at_b(&c.a_merged, &dx1, rows, dm.d, dm.d),
+            col_sums(&dx1, dm.d),
+            dln2_s,
+            dln2_b,
+            matmul_at_b(&c.h2, &du, rows, dm.d, dm.m),
+            col_sums(&du, dm.m),
+            matmul_at_b(&c.g_act, g, rows, dm.m, dm.d),
+            col_sums(g, dm.d),
+        ]
+    });
+    for (o, &d) in dx1.iter_mut().zip(&dx_ln) {
+        *o += d;
+    }
+    (dx1, grads)
+}
+
+/// `images [B, S, S, C]` → patch tokens `[B*N, patch_dim]`.
+pub fn patchify(cfg: &ModelConfig, images: &HostTensor) -> Vec<f32> {
+    let (s, ps, ch) = (cfg.image_size, cfg.patch_size, cfg.channels);
+    let n = s / ps;
+    let img = images.as_f32();
+    let b = cfg.batch;
+    let pd = cfg.patch_dim;
+    let mut out = vec![0.0f32; b * n * n * pd];
+    for bi in 0..b {
+        for i in 0..n {
+            for j in 0..n {
+                let patch = (bi * n * n + i * n + j) * pd;
+                for pi in 0..ps {
+                    for pj in 0..ps {
+                        let src = ((bi * s + i * ps + pi) * s + j * ps + pj) * ch;
+                        let dst = patch + (pi * ps + pj) * ch;
+                        out[dst..dst + ch].copy_from_slice(&img[src..src + ch]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Head forward cache: patch tokens + per-block caches.
+pub struct HeadCache {
+    pub patches: Vec<f32>,
+    pub blocks: Vec<BlockCache>,
+}
+
+/// W_h forward with optional soft-prompt injection → smashed `[B*T, D]`.
+pub fn head_fwd(
+    cfg: &ModelConfig,
+    head: &SegmentParams,
+    prompt: Option<&SegmentParams>,
+    images: &HostTensor,
+) -> (Vec<f32>, HeadCache) {
+    let (b, d, n, l) = (cfg.batch, cfg.dim, cfg.num_patches, cfg.prompt_len);
+    let patches = patchify(cfg, images);
+    let embed_w = head.tensors[0].as_f32();
+    let embed_b = head.tensors[1].as_f32();
+    let cls = head.tensors[2].as_f32(); // [1,1,D]
+    let pos = head.tensors[3].as_f32(); // [1,1+N,D]
+    let mut tok = matmul(&patches, embed_w, b * n, cfg.patch_dim, d);
+    add_bias(&mut tok, embed_b);
+
+    let with_prompt = prompt.is_some();
+    let t = if with_prompt { cfg.seq_len } else { cfg.seq_len_noprompt };
+    let dm = Dims::of(cfg, with_prompt);
+    let mut x = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        // cls token + pos[0]
+        for i in 0..d {
+            x[(bi * t) * d + i] = cls[i] + pos[i];
+        }
+        // prompts (inserted after position is added, VPT-style)
+        if let Some(p) = prompt {
+            let pv = p.tensors[0].as_f32(); // [L, D]
+            x[(bi * t + 1) * d..(bi * t + 1 + l) * d].copy_from_slice(pv);
+        }
+        // patch tokens + pos[1 + n_i]
+        let off = if with_prompt { 1 + l } else { 1 };
+        for ni in 0..n {
+            let dst = (bi * t + off + ni) * d;
+            let src = (bi * n + ni) * d;
+            for i in 0..d {
+                x[dst + i] = tok[src + i] + pos[(1 + ni) * d + i];
+            }
+        }
+    }
+
+    let mut blocks = Vec::with_capacity(cfg.depth_head);
+    for bi in 0..cfg.depth_head {
+        let p = BlockParams::at(head, HEAD_PREFIX, bi);
+        let (nx, c) = block_fwd(&p, &x, &dm);
+        x = nx;
+        blocks.push(c);
+    }
+    (x, HeadCache { patches, blocks })
+}
+
+/// Backprop `g` through the head blocks only; returns the gradient at the
+/// block input (the token sequence, `[B*T, D]`).
+pub fn head_bwd_to_tokens(
+    cfg: &ModelConfig,
+    head: &SegmentParams,
+    g: &[f32],
+    cache: &HeadCache,
+    with_prompt: bool,
+) -> Vec<f32> {
+    let dm = Dims::of(cfg, with_prompt);
+    let mut g = g.to_vec();
+    for bi in (0..cfg.depth_head).rev() {
+        let p = BlockParams::at(head, HEAD_PREFIX, bi);
+        let (dx, _) = block_bwd(&p, &g, &cache.blocks[bi], &dm, false);
+        g = dx;
+    }
+    g
+}
+
+/// Gradient w.r.t. the prompt: slice rows 1..1+L out of the token
+/// gradient and sum over the batch. Input is [`head_bwd_to_tokens`] output
+/// for a with-prompt forward.
+pub fn prompt_grad_from_tokens(cfg: &ModelConfig, g_tokens: &[f32]) -> Vec<f32> {
+    let (b, t, d, l) = (cfg.batch, cfg.seq_len, cfg.dim, cfg.prompt_len);
+    let mut g_p = vec![0.0f32; l * d];
+    for bi in 0..b {
+        for li in 0..l {
+            let src = (bi * t + 1 + li) * d;
+            for i in 0..d {
+                g_p[li * d + i] += g_tokens[src + i];
+            }
+        }
+    }
+    g_p
+}
+
+/// Full head backward (no prompt — the SFL head_step path): block param
+/// grads plus embed/cls/pos grads, in head-segment tensor order.
+pub fn head_bwd_full(
+    cfg: &ModelConfig,
+    head: &SegmentParams,
+    g: &[f32],
+    cache: &HeadCache,
+) -> Vec<Vec<f32>> {
+    let dm = Dims::of(cfg, false);
+    let (b, t, d, n) = (cfg.batch, cfg.seq_len_noprompt, cfg.dim, cfg.num_patches);
+    let mut g = g.to_vec();
+    let mut block_grads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.depth_head];
+    for bi in (0..cfg.depth_head).rev() {
+        let p = BlockParams::at(head, HEAD_PREFIX, bi);
+        let (dx, grads) = block_bwd(&p, &g, &cache.blocks[bi], &dm, true);
+        g = dx;
+        block_grads[bi] = grads.expect("grads requested");
+    }
+    // g is now the gradient w.r.t. x0 = concat(cls, tok) + pos.
+    let mut d_pos = vec![0.0f32; (1 + n) * d];
+    let mut d_cls = vec![0.0f32; d];
+    let mut d_tok = vec![0.0f32; b * n * d];
+    for bi in 0..b {
+        for ti in 0..t {
+            let row = &g[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+            for i in 0..d {
+                d_pos[ti * d + i] += row[i];
+            }
+            if ti == 0 {
+                for i in 0..d {
+                    d_cls[i] += row[i];
+                }
+            } else {
+                d_tok[(bi * n + ti - 1) * d..(bi * n + ti) * d].copy_from_slice(row);
+            }
+        }
+    }
+    let d_embed_w = matmul_at_b(&cache.patches, &d_tok, b * n, cfg.patch_dim, d);
+    let d_embed_b = col_sums(&d_tok, d);
+    let mut out = vec![d_embed_w, d_embed_b, d_cls, d_pos];
+    for grads in block_grads {
+        out.extend(grads);
+    }
+    out
+}
+
+/// W_b forward: `x [B*T, D]` through the body blocks.
+pub fn body_fwd(
+    cfg: &ModelConfig,
+    body: &SegmentParams,
+    x: &[f32],
+    with_prompt: bool,
+) -> (Vec<f32>, Vec<BlockCache>) {
+    let dm = Dims::of(cfg, with_prompt);
+    let mut x = x.to_vec();
+    let mut caches = Vec::with_capacity(cfg.depth_body);
+    for bi in 0..cfg.depth_body {
+        let p = BlockParams::at(body, 0, bi);
+        let (nx, c) = block_fwd(&p, &x, &dm);
+        x = nx;
+        caches.push(c);
+    }
+    (x, caches)
+}
+
+/// Body VJP; returns `dx` and (when `want_grads`) the body param grads in
+/// segment tensor order.
+pub fn body_bwd(
+    cfg: &ModelConfig,
+    body: &SegmentParams,
+    g: &[f32],
+    caches: &[BlockCache],
+    with_prompt: bool,
+    want_grads: bool,
+) -> (Vec<f32>, Option<Vec<Vec<f32>>>) {
+    let dm = Dims::of(cfg, with_prompt);
+    let mut g = g.to_vec();
+    let mut block_grads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.depth_body];
+    for bi in (0..cfg.depth_body).rev() {
+        let p = BlockParams::at(body, 0, bi);
+        let (dx, grads) = block_bwd(&p, &g, &caches[bi], &dm, want_grads);
+        g = dx;
+        if let Some(gr) = grads {
+            block_grads[bi] = gr;
+        }
+    }
+    let grads = want_grads.then(|| block_grads.into_iter().flatten().collect());
+    (g, grads)
+}
+
+/// Tail forward cache.
+pub struct TailCache {
+    blocks: Vec<BlockCache>,
+    ln: LnCache,
+    /// post-LN activations `[B*T, D]` (cls rows feed the classifier)
+    h: Vec<f32>,
+}
+
+/// W_t forward: `x [B*T, D]` → logits `[B, C]` (cls-token readout).
+pub fn tail_fwd(
+    cfg: &ModelConfig,
+    tail: &SegmentParams,
+    x: &[f32],
+    with_prompt: bool,
+) -> (Vec<f32>, TailCache) {
+    let dm = Dims::of(cfg, with_prompt);
+    let nt = tail.tensors.len();
+    let mut x = x.to_vec();
+    let mut blocks = Vec::with_capacity(cfg.depth_tail);
+    for bi in 0..cfg.depth_tail {
+        let p = BlockParams::at(tail, 0, bi);
+        let (nx, c) = block_fwd(&p, &x, &dm);
+        x = nx;
+        blocks.push(c);
+    }
+    let ln_s = tail.tensors[nt - 4].as_f32();
+    let ln_b = tail.tensors[nt - 3].as_f32();
+    let cls_w = tail.tensors[nt - 2].as_f32(); // [D, C]
+    let cls_b = tail.tensors[nt - 1].as_f32(); // [C]
+    let (h, ln) = layernorm_fwd(&x, ln_s, ln_b);
+    // cls rows: h[b, 0, :]
+    let (b, t, d, c) = (dm.b, dm.t, dm.d, cfg.num_classes);
+    let mut cls_rows = vec![0.0f32; b * d];
+    for bi in 0..b {
+        cls_rows[bi * d..(bi + 1) * d].copy_from_slice(&h[(bi * t) * d..(bi * t + 1) * d]);
+    }
+    let mut logits = matmul(&cls_rows, cls_w, b, d, c);
+    add_bias(&mut logits, cls_b);
+    (logits, TailCache { blocks, ln, h })
+}
+
+/// Tail VJP from `dlogits [B, C]`: returns `(dx, grads)` with grads in
+/// tail-segment tensor order (blocks, ln scale/bias, classifier w/b).
+/// `train_blocks=false` (SFL+Linear) still backprops through the frozen
+/// blocks for `dx` but emits zero gradients for everything except the
+/// classifier w/b.
+pub fn tail_bwd(
+    cfg: &ModelConfig,
+    tail: &SegmentParams,
+    dlogits: &[f32],
+    cache: &TailCache,
+    with_prompt: bool,
+    train_blocks: bool,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let dm = Dims::of(cfg, with_prompt);
+    let nt = tail.tensors.len();
+    let (b, t, d, c) = (dm.b, dm.t, dm.d, cfg.num_classes);
+    let ln_s = tail.tensors[nt - 4].as_f32();
+    let cls_w = tail.tensors[nt - 2].as_f32();
+
+    let mut cls_rows = vec![0.0f32; b * d];
+    for bi in 0..b {
+        cls_rows[bi * d..(bi + 1) * d]
+            .copy_from_slice(&cache.h[(bi * t) * d..(bi * t + 1) * d]);
+    }
+    let d_cls_w = matmul_at_b(&cls_rows, dlogits, b, d, c);
+    let d_cls_b = col_sums(dlogits, c);
+    let d_cls_rows = matmul_a_bt(dlogits, cls_w, b, c, d);
+    let mut dh = vec![0.0f32; b * t * d];
+    for bi in 0..b {
+        dh[(bi * t) * d..(bi * t + 1) * d].copy_from_slice(&d_cls_rows[bi * d..(bi + 1) * d]);
+    }
+    let (mut dx, d_ln_s, d_ln_b) = layernorm_bwd(&dh, ln_s, &cache.ln);
+    let mut block_grads: Vec<Vec<Vec<f32>>> = vec![Vec::new(); cfg.depth_tail];
+    for bi in (0..cfg.depth_tail).rev() {
+        let p = BlockParams::at(tail, 0, bi);
+        let (ndx, grads) = block_bwd(&p, &dx, &cache.blocks[bi], &dm, train_blocks);
+        dx = ndx;
+        if let Some(gr) = grads {
+            block_grads[bi] = gr;
+        }
+    }
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(nt);
+    for gr in block_grads {
+        if train_blocks {
+            grads.extend(gr);
+        } else {
+            // Frozen (SFL+Linear): empty gradient = "unchanged" to
+            // sgd_update — no zero-filled allocations on the hot path.
+            grads.extend(std::iter::repeat_with(Vec::new).take(BLOCK_TENSORS));
+        }
+    }
+    if train_blocks {
+        grads.push(d_ln_s);
+        grads.push(d_ln_b);
+    } else {
+        grads.push(Vec::new());
+        grads.push(Vec::new());
+    }
+    grads.push(d_cls_w);
+    grads.push(d_cls_b);
+    (dx, grads)
+}
+
+/// Mean softmax cross-entropy. Returns `(loss, probs [B, C])`.
+pub fn cross_entropy(logits: &[f32], labels: &[i32], c: usize) -> Result<(f32, Vec<f32>)> {
+    let b = labels.len();
+    let mut probs = logits.to_vec();
+    super::math::softmax_rows(&mut probs, c);
+    let mut loss = 0.0f64;
+    for (bi, &y) in labels.iter().enumerate() {
+        let y = usize::try_from(y).map_err(|_| anyhow!("negative label {y}"))?;
+        if y >= c {
+            return Err(anyhow!("label {y} out of range (C={c})"));
+        }
+        loss -= (probs[bi * c + y].max(f32::MIN_POSITIVE) as f64).ln();
+    }
+    Ok(((loss / b as f64) as f32, probs))
+}
+
+/// Cross-entropy VJP: `(probs − onehot) / B`.
+pub fn cross_entropy_bwd(probs: &[f32], labels: &[i32], c: usize) -> Vec<f32> {
+    let b = labels.len();
+    let mut d = probs.to_vec();
+    for (bi, &y) in labels.iter().enumerate() {
+        d[bi * c + y as usize] -= 1.0;
+    }
+    for v in d.iter_mut() {
+        *v /= b as f32;
+    }
+    d
+}
+
+/// EL2N scores (Paul et al. 2021): `‖softmax(logits) − onehot(y)‖₂` per row.
+pub fn el2n_scores(logits: &[f32], labels: &[i32], c: usize) -> Vec<f32> {
+    let b = labels.len();
+    let mut probs = logits.to_vec();
+    super::math::softmax_rows(&mut probs, c);
+    let mut out = vec![0.0f32; b];
+    for (bi, &y) in labels.iter().enumerate() {
+        let row = &probs[bi * c..(bi + 1) * c];
+        let mut s = 0.0f32;
+        for (i, &p) in row.iter().enumerate() {
+            let e = p - if i == y as usize { 1.0 } else { 0.0 };
+            s += e * e;
+        }
+        out[bi] = s.sqrt();
+    }
+    out
+}
+
+/// `new = old − lr · grad`, aligned with the segment's tensor order. An
+/// **empty** gradient marks a frozen tensor (copied through unchanged) —
+/// the SFL+Linear path uses this to skip zero-filled updates.
+pub fn sgd_update(seg: &SegmentParams, grads: &[Vec<f32>], lr: f32) -> SegmentParams {
+    debug_assert_eq!(seg.tensors.len(), grads.len());
+    let tensors = seg
+        .tensors
+        .iter()
+        .zip(grads)
+        .map(|(t, g)| {
+            if g.is_empty() {
+                return t.clone();
+            }
+            debug_assert_eq!(t.element_count(), g.len());
+            let data: Vec<f32> =
+                t.as_f32().iter().zip(g).map(|(&w, &gv)| w - lr * gv).collect();
+            HostTensor::f32(t.shape.clone(), data)
+        })
+        .collect();
+    SegmentParams { segment: seg.segment.clone(), tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Golden values generated by the numpy mirror of this module (itself
+    // verified against `jax.grad` of python/compile/vit.py to ~1e-7) on a
+    // B=1, T=3, D=4, H=2, mlp_ratio=2 block whose parameters and inputs
+    // come from the closed-form sin/cos formulas below — any layout or
+    // formula drift in the transcription fails these asserts.
+    const GOLDEN_X2: [f32; 12] = [
+        0.916102, 0.899459, 0.750964, 0.500834, 0.415969, 0.200135, -0.0882651, -0.404402,
+        -0.459433, -0.576064, -0.697317, -0.792351,
+    ];
+    const GOLDEN_DX: [f32; 12] = [
+        0.548736, 0.24518, 0.000543026, -0.145406, -0.387043, -0.487922, -0.458048, -0.366385,
+        -0.126475, 0.0620653, 0.339712, 0.490043,
+    ];
+
+    fn gen(n: usize, scale: f32, off: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.7 + off).sin() * scale).collect()
+    }
+
+    fn golden_segment() -> SegmentParams {
+        let (d, m) = (4usize, 8usize);
+        let t = |shape: Vec<usize>, data: Vec<f32>| HostTensor::f32(shape, data);
+        let ones_plus = |n: usize, off: f32| -> Vec<f32> {
+            gen(n, 0.1, off).into_iter().map(|v| 1.0 + v).collect()
+        };
+        SegmentParams {
+            segment: "blk".into(),
+            tensors: vec![
+                t(vec![d], ones_plus(d, 0.1)),
+                t(vec![d], gen(d, 0.05, 0.2)),
+                t(vec![d, 3 * d], gen(d * 3 * d, 0.2, 0.3)),
+                t(vec![3 * d], gen(3 * d, 0.05, 0.4)),
+                t(vec![d, d], gen(d * d, 0.2, 0.5)),
+                t(vec![d], gen(d, 0.05, 0.6)),
+                t(vec![d], ones_plus(d, 0.7)),
+                t(vec![d], gen(d, 0.05, 0.8)),
+                t(vec![d, m], gen(d * m, 0.2, 0.9)),
+                t(vec![m], gen(m, 0.05, 1.0)),
+                t(vec![m, d], gen(m * d, 0.2, 1.1)),
+                t(vec![d], gen(d, 0.05, 1.2)),
+            ],
+        }
+    }
+
+    #[test]
+    fn block_forward_and_backward_match_golden_values() {
+        let seg = golden_segment();
+        let p = BlockParams::at(&seg, 0, 0);
+        let dm = Dims { b: 1, t: 3, d: 4, heads: 2, dh: 2, m: 8 };
+        let x: Vec<f32> = (0..12).map(|i| (i as f32 * 0.3).cos() * 0.8).collect();
+        let g: Vec<f32> = (0..12).map(|i| (i as f32 * 0.5 + 2.0).sin() * 0.5).collect();
+
+        let (x2, cache) = block_fwd(&p, &x, &dm);
+        for (a, b) in x2.iter().zip(GOLDEN_X2) {
+            assert!((a - b).abs() < 1e-4, "fwd {a} vs {b}");
+        }
+        let (dx, grads) = block_bwd(&p, &g, &cache, &dm, true);
+        for (a, b) in dx.iter().zip(GOLDEN_DX) {
+            assert!((a - b).abs() < 1e-4, "bwd {a} vs {b}");
+        }
+        // Param grads align 1:1 with the segment layout.
+        let grads = grads.unwrap();
+        assert_eq!(grads.len(), BLOCK_TENSORS);
+        for (gr, t) in grads.iter().zip(&seg.tensors) {
+            assert_eq!(gr.len(), t.element_count());
+        }
+    }
+
+    #[test]
+    fn cross_entropy_matches_uniform_reference() {
+        // Uniform logits -> loss = ln(C); gradient rows sum to zero.
+        let c = 5usize;
+        let logits = vec![0.0f32; 2 * c];
+        let labels = [1i32, 3];
+        let (loss, probs) = cross_entropy(&logits, &labels, c).unwrap();
+        assert!((loss - (c as f32).ln()).abs() < 1e-6);
+        let d = cross_entropy_bwd(&probs, &labels, c);
+        for row in d.chunks(c) {
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        // Label column is negative, others positive.
+        assert!(d[1] < 0.0 && d[0] > 0.0);
+        // Out-of-range labels error instead of indexing wild.
+        assert!(cross_entropy(&logits, &[7], c).is_err());
+        assert!(cross_entropy(&logits, &[-1], c).is_err());
+    }
+
+    #[test]
+    fn el2n_is_zero_for_perfect_and_sqrt2_for_confident_wrong() {
+        let c = 3usize;
+        // Row 0: extremely confident correct; row 1: confident wrong.
+        let logits = vec![100.0, 0.0, 0.0, 100.0, 0.0, 0.0];
+        let scores = el2n_scores(&logits, &[0, 1], c);
+        assert!(scores[0] < 1e-3, "{}", scores[0]);
+        assert!((scores[1] - std::f32::consts::SQRT_2).abs() < 1e-3, "{}", scores[1]);
+    }
+
+    #[test]
+    fn patchify_places_pixels_in_patch_major_order() {
+        // 1 image, 4x4, 1-ish channels=3, patch 2 -> 4 patches of dim 12.
+        let cfg = ModelConfig {
+            name: "t".into(),
+            image_size: 4,
+            patch_size: 2,
+            channels: 3,
+            dim: 8,
+            heads: 2,
+            depth_head: 0,
+            depth_body: 0,
+            depth_tail: 0,
+            mlp_ratio: 2,
+            num_classes: 2,
+            prompt_len: 1,
+            batch: 1,
+            num_patches: 4,
+            seq_len: 6,
+            seq_len_noprompt: 5,
+            patch_dim: 12,
+            analytic_only: false,
+        };
+        let n = 4 * 4 * 3;
+        let images = HostTensor::f32(
+            vec![1, 4, 4, 3],
+            (0..n).map(|i| i as f32).collect(),
+        );
+        let p = patchify(&cfg, &images);
+        assert_eq!(p.len(), 4 * 12);
+        // Patch (0,0), pixel (0,0), channel 0 is image[0,0,0,0] = 0.
+        assert_eq!(p[0], 0.0);
+        // Patch (0,1) starts at image column 2: image[0,0,2,0] = 6.
+        assert_eq!(p[12], 6.0);
+        // Patch (1,0), pixel row 0: image[0,2,0,0] = 24.
+        assert_eq!(p[24], 24.0);
+        // Within a patch, second pixel of row 0 is column 1: value 3.
+        assert_eq!(p[3], 3.0);
+    }
+
+    #[test]
+    fn sgd_update_applies_lr_exactly() {
+        let seg = SegmentParams {
+            segment: "s".into(),
+            tensors: vec![HostTensor::f32(vec![3], vec![1.0, 2.0, 3.0])],
+        };
+        let new = sgd_update(&seg, &[vec![10.0, 0.0, -10.0]], 0.1);
+        assert_eq!(new.tensors[0].as_f32(), &[0.0, 2.0, 4.0]);
+        assert_eq!(new.segment, "s");
+    }
+}

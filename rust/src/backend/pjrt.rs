@@ -1,0 +1,241 @@
+//! The PJRT artifact substrate: a [`Backend`] over an
+//! [`ArtifactStore`] that assembles positional inputs per the manifest
+//! signature, runs the compiled PJRT executable, and maps the output
+//! tuple back to named segments / tensors.
+//!
+//! This is the original execution path (`artifacts/<cfg>/*.hlo.txt`
+//! lowered by aot.py). Offline builds link the functional host-side
+//! `xla` stub, so constructing the backend works anywhere but stage
+//! execution errors until the `pjrt` cargo feature (and the real
+//! bindings) are present — see docs/BACKENDS.md.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::SegmentParams;
+use crate::runtime::{ArtifactStore, Dtype, HostTensor, IoSpec, Manifest, StageDef};
+
+use super::{
+    Backend, PreparedRepr, PreparedSegment, SegInput, SegmentInputs, StageOutputs, StageStats,
+    TensorInputs,
+};
+
+/// Convert a segment's tensors to PJRT literals once.
+fn segment_literals(params: &SegmentParams) -> Result<Vec<xla::Literal>> {
+    params.tensors.iter().map(|t| t.to_literal()).collect()
+}
+
+enum InputRef<'a> {
+    Owned(usize),
+    Cached(&'a xla::Literal),
+}
+
+/// Convert one host segment to literals, appending to `owned`/`order`.
+fn push_host_segment(
+    params: &SegmentParams,
+    seg: &str,
+    expected: usize,
+    owned: &mut Vec<xla::Literal>,
+    order: &mut Vec<InputRef<'_>>,
+) -> Result<()> {
+    if params.tensors.len() != expected {
+        bail!(
+            "segment {seg:?} has {} tensors, manifest expects {expected}",
+            params.tensors.len()
+        );
+    }
+    for t in &params.tensors {
+        owned.push(t.to_literal()?);
+        order.push(InputRef::Owned(owned.len() - 1));
+    }
+    Ok(())
+}
+
+/// PJRT-executable substrate over on-disk artifacts.
+pub struct PjrtBackend {
+    store: ArtifactStore,
+}
+
+impl PjrtBackend {
+    /// Open `artifacts_root/<config>` (manifest now; executables lazily).
+    pub fn open(artifacts_root: &Path, config: &str) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { store: ArtifactStore::open(artifacts_root, config)? })
+    }
+
+    pub fn from_store(store: ArtifactStore) -> PjrtBackend {
+        PjrtBackend { store }
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    fn assemble_inputs<'a>(
+        &self,
+        def: &StageDef,
+        segments: &'a SegmentInputs,
+        tensors: &TensorInputs,
+    ) -> Result<(Vec<xla::Literal>, Vec<InputRef<'a>>)> {
+        let manifest = &self.store.manifest;
+        let arity = manifest.stage_input_arity(def);
+        let mut owned = Vec::with_capacity(arity);
+        let mut order = Vec::with_capacity(arity);
+        for io in &def.inputs {
+            match io {
+                IoSpec::Segment(seg) => {
+                    let input = segments
+                        .get(seg.as_str())
+                        .ok_or_else(|| anyhow!("stage {} needs segment {seg:?}", def.name))?;
+                    let expected = manifest.segment(seg)?.len();
+                    match input {
+                        SegInput::Host(params) => {
+                            push_host_segment(params, seg, expected, &mut owned, &mut order)?;
+                        }
+                        SegInput::Prepared(prep) => match &prep.repr {
+                            PreparedRepr::Literals(lits) => {
+                                if lits.len() != expected {
+                                    bail!(
+                                        "segment {seg:?} has {} literals, manifest expects \
+                                         {expected}",
+                                        lits.len()
+                                    );
+                                }
+                                for l in lits {
+                                    order.push(InputRef::Cached(l));
+                                }
+                            }
+                            PreparedRepr::Host(params) => {
+                                push_host_segment(params, seg, expected, &mut owned, &mut order)?;
+                            }
+                        },
+                    }
+                }
+                IoSpec::Tensor { name, shape, .. } => {
+                    let t = tensors
+                        .get(name.as_str())
+                        .ok_or_else(|| anyhow!("stage {} needs tensor {name:?}", def.name))?;
+                    if &t.shape != shape {
+                        bail!("tensor {name:?}: shape {:?} != manifest {:?}", t.shape, shape);
+                    }
+                    owned.push(t.to_literal()?);
+                    order.push(InputRef::Owned(owned.len() - 1));
+                }
+                IoSpec::Scalar(name) => {
+                    let t = tensors
+                        .get(name.as_str())
+                        .ok_or_else(|| anyhow!("stage {} needs scalar {name:?}", def.name))?;
+                    owned.push(t.to_literal()?);
+                    order.push(InputRef::Owned(owned.len() - 1));
+                }
+            }
+        }
+        Ok((owned, order))
+    }
+
+    fn map_outputs(&self, def: &StageDef, outs: Vec<xla::Literal>) -> Result<StageOutputs> {
+        let manifest = &self.store.manifest;
+        let mut result = StageOutputs::default();
+        let mut it = outs.into_iter();
+        let mut next = |name: &str| {
+            it.next().ok_or_else(|| anyhow!("stage {name}: output tuple too short"))
+        };
+        for io in &def.outputs {
+            match io {
+                IoSpec::Segment(seg) => {
+                    let defs = manifest.segment(seg)?;
+                    let mut tensors = Vec::with_capacity(defs.len());
+                    for d in defs {
+                        let lit = next(&def.name)?;
+                        tensors.push(HostTensor::from_literal(&lit, &d.shape, d.dtype)?);
+                    }
+                    result
+                        .segments
+                        .insert(seg.clone(), SegmentParams { segment: seg.clone(), tensors });
+                }
+                IoSpec::Tensor { name, shape, dtype } => {
+                    let lit = next(&def.name)?;
+                    result
+                        .tensors
+                        .insert(name.clone(), HostTensor::from_literal(&lit, shape, *dtype)?);
+                }
+                IoSpec::Scalar(name) => {
+                    let lit = next(&def.name)?;
+                    result.tensors.insert(
+                        name.clone(),
+                        HostTensor::from_literal(&lit, &[], Dtype::F32)?,
+                    );
+                }
+            }
+        }
+        if it.next().is_some() {
+            bail!("stage {}: output tuple longer than manifest", def.name);
+        }
+        Ok(result)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.store.manifest
+    }
+
+    /// Pre-compile executables so timed runs never pay lazy compilation.
+    fn warm(&self, stages: &[&str]) -> Result<()> {
+        self.store.warm(stages)
+    }
+
+    fn prepare_segment(&self, params: &SegmentParams) -> Result<PreparedSegment> {
+        // Frozen-segment fast path: convert to literals once, feed the
+        // cached literals into every execute call.
+        Ok(PreparedSegment { repr: PreparedRepr::Literals(segment_literals(params)?) })
+    }
+
+    fn run_stage(
+        &self,
+        stage: &str,
+        segments: &SegmentInputs,
+        tensors: &TensorInputs,
+    ) -> Result<StageOutputs> {
+        let t0 = std::time::Instant::now();
+        let def = self.store.stage_def(stage)?.clone();
+        let (owned, order) = self.assemble_inputs(&def, segments, tensors)?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(order.len());
+        for item in &order {
+            match item {
+                InputRef::Owned(i) => refs.push(&owned[*i]),
+                InputRef::Cached(lit) => refs.push(lit),
+            }
+        }
+        let convert_s = t0.elapsed().as_secs_f64();
+        let exe = self.store.executable(stage)?;
+        let t1 = std::time::Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(&refs)
+            .with_context(|| format!("executing stage {stage}"))?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("stage {stage} returned no buffers"))?
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        let exec_s = t1.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True: always a (possibly 1-) tuple.
+        let outs = tuple.to_tuple().context("decompose output tuple")?;
+        let out = self.map_outputs(&def, outs);
+        self.store.note_execution(stage, convert_s, exec_s);
+        out
+    }
+
+    fn execution_stats(&self) -> Vec<(String, StageStats)> {
+        self.store.execution_stats()
+    }
+
+    fn reset_execution_stats(&self) {
+        self.store.reset_execution_stats()
+    }
+}

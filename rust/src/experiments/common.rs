@@ -2,8 +2,8 @@
 //!
 //! Experiment cells are [`RunSpec`] values (the same serializable type
 //! `train --spec` consumes); running one goes through the unified run API:
-//! `spec.builder().build(...)` → [`drive`] with a [`ProgressPrinter`] (or
-//! [`NullObserver`] when quiet).
+//! `spec.open_backend(...)` → `spec.builder().build(...)` → [`drive`] with
+//! a [`ProgressPrinter`] (or [`NullObserver`] when quiet).
 
 use std::path::Path;
 
@@ -11,19 +11,26 @@ use anyhow::Result;
 
 use crate::federation::{drive, NullObserver, ProgressPrinter, RoundObserver};
 use crate::metrics::RunHistory;
-use crate::runtime::ArtifactStore;
+use crate::runtime::Manifest;
 
 pub use crate::federation::RunSpec;
 
 /// Run one spec end-to-end; prints per-round progress lines unless quiet.
 pub fn run_spec(artifacts: &Path, spec: &RunSpec, quiet: bool) -> Result<RunHistory> {
-    let store = ArtifactStore::open(artifacts, &spec.config)?;
-    let (train, eval) = spec.datasets(&store.manifest.config)?;
-    let mut run = spec.builder().build(&store, &train, Some(&eval))?;
+    let backend = spec.open_backend(artifacts)?;
+    let (train, eval) = spec.datasets(&backend.manifest().config)?;
+    let mut run = spec.builder().build(backend.as_ref(), &train, Some(&eval))?;
     let mut obs: Box<dyn RoundObserver> = if quiet {
         Box::new(NullObserver)
     } else {
         Box::new(ProgressPrinter::labeled(spec.method.label()))
     };
     drive(run.as_mut(), obs.as_mut())
+}
+
+/// Resolve a config's manifest for cost/analytic lookups: synthesize it
+/// in memory when the config is native-known, else read the artifact dir.
+pub fn manifest_for(artifacts: &Path, config: &str) -> Result<Manifest> {
+    crate::backend::native::synth_manifest(config)
+        .or_else(|_| Manifest::load(&artifacts.join(config)))
 }

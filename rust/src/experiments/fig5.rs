@@ -6,7 +6,6 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::federation::Method;
-use crate::runtime::Manifest;
 use crate::util::csv::CsvWriter;
 
 use super::common::{run_spec, RunSpec};
@@ -27,7 +26,7 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     )?;
     println!("Fig 5: prompt-length sweep (cifar100-like, IID)");
     for (config, p_len) in sweep {
-        let man = Manifest::load(&artifacts.join(config))?;
+        let man = super::common::manifest_for(artifacts, config)?;
         let tuned = man.cost.params["tail"] + man.cost.params["prompt"];
         let mut spec = RunSpec::new(config, "cifar100", Method::SfPrompt);
         opts.apply(&mut spec);

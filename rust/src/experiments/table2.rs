@@ -44,7 +44,7 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
     )?;
 
     for profile in ["vit_base_sim", "vit_large_sim"] {
-        let man = Manifest::load(&artifacts.join(profile))?;
+        let man = super::common::manifest_for(artifacts, profile)?;
         // γ_retain = 0.6, back-solved from the paper's 78.9/131.5 ratio.
         let p = profile_params(&man, 0.6);
         let model_mb = p.w_bytes / 1e6;

@@ -54,9 +54,8 @@ pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
                 opts.apply(&mut spec);
                 // Only evaluate at the end: table reports terminal accuracy.
                 spec.fed.eval_every = opts.rounds.max(1);
-                let store = crate::runtime::ArtifactStore::open(artifacts, config)?;
-                let ratio = tuned_ratio(&store.manifest, method);
-                drop(store);
+                let man = super::common::manifest_for(artifacts, config)?;
+                let ratio = tuned_ratio(&man, method);
                 let hist = run_spec(artifacts, &spec, true)?;
                 let line = format!(
                     "{:<10} {:<10} {:<12} acc={:.4} tuned={:.4}%",

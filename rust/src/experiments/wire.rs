@@ -14,11 +14,11 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::comm::MsgKind;
 use crate::model::init_params;
-use crate::runtime::{HostTensor, Manifest};
+use crate::runtime::HostTensor;
 use crate::transport::{encode_frame, Frame, Payload, WireFormat};
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Rng;
@@ -44,12 +44,7 @@ fn max_abs_err(a: &Payload, b: &Payload) -> f64 {
 }
 
 pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
-    let man = ["small", "tiny"]
-        .iter()
-        .find_map(|c| Manifest::load(&artifacts.join(c)).ok())
-        .ok_or_else(|| {
-            anyhow!("wire experiment needs the `small` or `tiny` artifacts (run `make artifacts`)")
-        })?;
+    let man = super::common::manifest_for(artifacts, "small")?;
     let cfg = man.config.clone();
     let params = init_params(&man, opts.seed);
     let tail = params.get("tail")?.clone();

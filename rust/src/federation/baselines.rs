@@ -16,7 +16,8 @@
 //! engine plays both endpoints), so `ByteMeter` records encoded frame
 //! lengths, SFL's uplink payloads honour `FedConfig::wire`, and latency is
 //! charged through the same driver [`LinkClock`] (§3.5) the SFPrompt
-//! engine uses.
+//! engine uses. All compute runs through the substrate-agnostic
+//! [`Backend`].
 //!
 //! Constructed only via [`super::RunBuilder`]; driven only through the
 //! [`FederatedRun`] trait.
@@ -26,12 +27,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::backend::{run_stage_hosts, Backend, TensorInputs};
 use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel};
 use crate::data::{batch_indices, make_batch, SynthDataset};
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{fedavg_multi, init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
-use crate::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+use crate::runtime::HostTensor;
 use crate::transport::{channel_pair, Frame, Payload, Transport, WireFormat};
 use crate::util::rng::Rng;
 
@@ -41,7 +43,7 @@ use super::run::FederatedRun;
 use super::{FedConfig, Method};
 
 pub(crate) struct BaselineEngine<'a> {
-    store: &'a ArtifactStore,
+    backend: &'a dyn Backend,
     fed: FedConfig,
     net: NetworkModel,
     method: Method,
@@ -51,15 +53,6 @@ pub(crate) struct BaselineEngine<'a> {
     train: &'a SynthDataset,
     eval: Option<&'a SynthDataset>,
     history: RunHistory,
-}
-
-fn run_stage(
-    store: &ArtifactStore,
-    stage: &str,
-    segs: &BTreeMap<&str, &SegmentParams>,
-    tensors: &TensorInputs,
-) -> Result<crate::runtime::StageOutputs> {
-    Executor::run(store, stage, segs, tensors)
 }
 
 /// Pop a segments payload of exactly `names.len()` entries, validating the
@@ -79,7 +72,7 @@ fn take_segments(payload: Payload, names: &[&str]) -> Result<Vec<SegmentParams>>
 
 impl<'a> BaselineEngine<'a> {
     pub(crate) fn new(
-        store: &'a ArtifactStore,
+        backend: &'a dyn Backend,
         fed: FedConfig,
         method: Method,
         net: NetworkModel,
@@ -95,9 +88,9 @@ impl<'a> BaselineEngine<'a> {
             .enumerate()
             .map(|(id, indices)| Client::new(id, indices, rng.fork(100 + id as u64)))
             .collect();
-        let global = init_params(&store.manifest, fed.seed ^ 0xA5A5);
+        let global = init_params(backend.manifest(), fed.seed ^ 0xA5A5);
         BaselineEngine {
-            store,
+            backend,
             net,
             fed,
             method,
@@ -113,7 +106,7 @@ impl<'a> BaselineEngine<'a> {
     fn eval_maybe(&self, round: usize) -> Result<f64> {
         match self.eval {
             Some(ds) if self.fed.should_eval(round) => {
-                evaluate(self.store, "eval_forward_noprompt", &self.global, ds,
+                evaluate(self.backend, "eval_forward_noprompt", &self.global, ds,
                          self.fed.eval_limit)
             }
             _ => Ok(f64::NAN),
@@ -124,7 +117,7 @@ impl<'a> BaselineEngine<'a> {
     /// uplink payloads, so both directions stay at f32.
     fn round_fl(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
-        let cfg = self.store.manifest.config.clone();
+        let cfg = self.backend.manifest().config.clone();
         let train = self.train;
         let lr_t = HostTensor::scalar_f32(self.fed.lr);
         let r32 = round as u32;
@@ -176,7 +169,7 @@ impl<'a> BaselineEngine<'a> {
                     tensors.insert("images", &batch.images);
                     tensors.insert("labels", &batch.labels);
                     tensors.insert("lr", &lr_t);
-                    let mut out = run_stage(self.store, "full_step", &segs, &tensors)?;
+                    let mut out = run_stage_hosts(self.backend, "full_step", &segs, &tensors)?;
                     losses.push(out.loss()? as f64);
                     head = out.take_segment("head")?;
                     body = out.take_segment("body")?;
@@ -221,7 +214,7 @@ impl<'a> BaselineEngine<'a> {
     /// upload) honour `FedConfig::wire`; downlink stays f32.
     fn round_sfl(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
-        let cfg = self.store.manifest.config.clone();
+        let cfg = self.backend.manifest().config.clone();
         let train = self.train;
         let lr_t = HostTensor::scalar_f32(self.fed.lr);
         let full_ft = self.method == Method::SflFullFinetune;
@@ -274,7 +267,7 @@ impl<'a> BaselineEngine<'a> {
                     let mut tensors: TensorInputs = BTreeMap::new();
                     tensors.insert("images", &batch.images);
                     let mut out =
-                        run_stage(self.store, "head_forward_noprompt", &segs, &tensors)?;
+                        run_stage_hosts(self.backend, "head_forward_noprompt", &segs, &tensors)?;
                     let smashed = out.tensors.remove("smashed").expect("smashed");
                     c_end.send(
                         &Frame::new(MsgKind::SmashedData, r32, cid as u32, Payload::Tensor(smashed)),
@@ -292,7 +285,7 @@ impl<'a> BaselineEngine<'a> {
                     let mut tensors: TensorInputs = BTreeMap::new();
                     tensors.insert("smashed", &server_smashed);
                     let mut out =
-                        run_stage(self.store, "body_forward_noprompt", &segs, &tensors)?;
+                        run_stage_hosts(self.backend, "body_forward_noprompt", &segs, &tensors)?;
                     let body_out = out.tensors.remove("body_out").expect("body_out");
                     let n = s_end.send(
                         &Frame::new(MsgKind::BodyOutput, r32, cid as u32, Payload::Tensor(body_out)),
@@ -310,7 +303,7 @@ impl<'a> BaselineEngine<'a> {
                     tensors.insert("body_out", &body_out);
                     tensors.insert("labels", &batch.labels);
                     tensors.insert("lr", &lr_t);
-                    let mut out = run_stage(self.store, tail_stage, &segs, &tensors)?;
+                    let mut out = run_stage_hosts(self.backend, tail_stage, &segs, &tensors)?;
                     losses.push(out.loss()? as f64);
                     tail = out.take_segment("tail")?;
 
@@ -337,7 +330,7 @@ impl<'a> BaselineEngine<'a> {
                         tensors.insert("g_body_out", &g_body_out);
                         tensors.insert("lr", &lr_t);
                         let mut out =
-                            run_stage(self.store, "body_backward_train", &segs, &tensors)?;
+                            run_stage_hosts(self.backend, "body_backward_train", &segs, &tensors)?;
                         let new_body = out.take_segment("body")?;
                         let g_smashed = out.tensors.remove("g_smashed").expect("g_smashed");
                         self.global.set(new_body);
@@ -359,7 +352,7 @@ impl<'a> BaselineEngine<'a> {
                         tensors.insert("images", &batch.images);
                         tensors.insert("g_smashed", &g_smashed);
                         tensors.insert("lr", &lr_t);
-                        let mut out = run_stage(self.store, "head_step", &segs, &tensors)?;
+                        let mut out = run_stage_hosts(self.backend, "head_step", &segs, &tensors)?;
                         head = out.take_segment("head")?;
                     }
                 }
@@ -432,7 +425,7 @@ impl FederatedRun for BaselineEngine<'_> {
     fn final_eval(&mut self) -> Result<f64> {
         match self.eval {
             Some(ds) => evaluate(
-                self.store, "eval_forward_noprompt", &self.global, ds, self.fed.eval_limit,
+                self.backend, "eval_forward_noprompt", &self.global, ds, self.fed.eval_limit,
             ),
             None => Ok(f64::NAN),
         }

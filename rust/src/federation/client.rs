@@ -4,17 +4,21 @@
 //! per-round protocol (model distribution → local phase → split batches →
 //! upload → broadcast) over a [`Transport`], so it can run on its own
 //! thread against the server hub — or against a loopback link in tests.
+//!
+//! All compute goes through the substrate-agnostic [`Backend`]: the
+//! frozen head travels as an opaque [`PreparedSegment`] handle, so this
+//! module neither knows nor cares whether stages run on the native kernel
+//! engine or PJRT executables.
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
+use crate::backend::{Backend, PreparedSegment, SegInput, SegmentInputs, TensorInputs};
 use crate::comm::MsgKind;
 use crate::data::{batch_indices, make_batch, Example};
 use crate::model::SegmentParams;
-use crate::runtime::{
-    ArtifactStore, Executor, HostTensor, ModelConfig, SegInput, SegmentInputs, TensorInputs,
-};
+use crate::runtime::{HostTensor, ModelConfig};
 use crate::transport::{Frame, Payload, Transport};
 use crate::util::rng::Rng;
 
@@ -22,7 +26,7 @@ use super::FedConfig;
 
 /// A client: its local data partition and RNG stream. Model state (tail,
 /// prompt) is delivered fresh each round by the server, per Algorithm 2.
-/// The frozen head is held as pre-converted PJRT literals (perf fast path —
+/// The frozen head is held as a backend-prepared handle (perf fast path —
 /// it never changes after the one-time distribution).
 pub struct Client {
     pub id: usize,
@@ -42,6 +46,19 @@ pub struct LocalUpdate {
     pub batches: usize,
 }
 
+/// Keep the `keep` highest-scoring indices. NaN scores (a diverged model)
+/// sort below every finite score instead of panicking, so pruning
+/// degrades gracefully: finite-scored examples win the retained slots.
+pub fn top_k_by_score(mut scored: Vec<(usize, f32)>, keep: usize) -> Vec<usize> {
+    scored.sort_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+        (false, false) => b.1.total_cmp(&a.1),
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (true, true) => std::cmp::Ordering::Equal,
+    });
+    scored.into_iter().take(keep).map(|(i, _)| i).collect()
+}
+
 impl Client {
     pub fn new(id: usize, indices: Vec<usize>, rng: Rng) -> Client {
         let order = indices.clone();
@@ -57,15 +74,15 @@ impl Client {
     /// local dataset updating only (W_t, p). Zero network traffic.
     pub fn local_loss_update(
         &mut self,
-        store: &ArtifactStore,
+        backend: &dyn Backend,
         examples: &[Example],
-        head_lits: &[xla::Literal],
+        head: &PreparedSegment,
         mut tail: SegmentParams,
         mut prompt: SegmentParams,
         epochs: usize,
         lr: f32,
     ) -> Result<LocalUpdate> {
-        let cfg = store.manifest.config.clone();
+        let cfg = backend.manifest().config.clone();
         let lr_t = HostTensor::scalar_f32(lr);
         let mut losses = Vec::new();
         let mut batches = 0usize;
@@ -75,14 +92,14 @@ impl Client {
                 let batch =
                     make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
                 let mut segs: SegmentInputs = BTreeMap::new();
-                segs.insert("head", SegInput::Literals(head_lits));
+                segs.insert("head", SegInput::Prepared(head));
                 segs.insert("tail", SegInput::Host(&tail));
                 segs.insert("prompt", SegInput::Host(&prompt));
                 let mut tensors: TensorInputs = BTreeMap::new();
                 tensors.insert("images", &batch.images);
                 tensors.insert("labels", &batch.labels);
                 tensors.insert("lr", &lr_t);
-                let mut out = Executor::run_mixed(store, "local_step", &segs, &tensors)?;
+                let mut out = backend.run_stage("local_step", &segs, &tensors)?;
                 losses.push(out.loss()? as f64);
                 tail = out.take_segment("tail")?;
                 prompt = out.take_segment("prompt")?;
@@ -104,27 +121,27 @@ impl Client {
     /// per Paul et al. 2021. Returns retained indices (into the dataset).
     pub fn prune_dataset(
         &mut self,
-        store: &ArtifactStore,
+        backend: &dyn Backend,
         examples: &[Example],
-        head_lits: &[xla::Literal],
+        head: &PreparedSegment,
         tail: &SegmentParams,
         prompt: &SegmentParams,
         retain_fraction: f64,
     ) -> Result<Vec<usize>> {
         assert!((0.0..=1.0).contains(&retain_fraction));
-        let cfg = store.manifest.config.clone();
+        let cfg = backend.manifest().config.clone();
         let mut scored: Vec<(usize, f32)> = Vec::with_capacity(self.indices.len());
         let mut seen = std::collections::BTreeSet::new();
         for chunk in batch_indices(&self.indices, cfg.batch) {
             let batch = make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
             let mut segs: SegmentInputs = BTreeMap::new();
-            segs.insert("head", SegInput::Literals(head_lits));
+            segs.insert("head", SegInput::Prepared(head));
             segs.insert("tail", SegInput::Host(tail));
             segs.insert("prompt", SegInput::Host(prompt));
             let mut tensors: TensorInputs = BTreeMap::new();
             tensors.insert("images", &batch.images);
             tensors.insert("labels", &batch.labels);
-            let out = Executor::run_mixed(store, "el2n_scores", &segs, &tensors)?;
+            let out = backend.run_stage("el2n_scores", &segs, &tensors)?;
             let scores = out.tensor("scores")?.as_f32().to_vec();
             // The tail of the final chunk is padding — dedupe by index.
             for (i, &idx) in chunk.iter().enumerate() {
@@ -134,27 +151,26 @@ impl Client {
             }
         }
         // Keep the HIGHEST EL2N scores (most informative / hardest).
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         let keep = ((self.indices.len() as f64 * retain_fraction).round() as usize)
             .clamp(1, self.indices.len());
-        Ok(scored.into_iter().take(keep).map(|(i, _)| i).collect())
+        Ok(top_k_by_score(scored, keep))
     }
 
     /// Phase 2 client step A — head forward on a pruned batch: produce the
     /// smashed data to ship to the server.
     pub fn head_forward(
         &self,
-        store: &ArtifactStore,
+        backend: &dyn Backend,
         batch_images: &HostTensor,
-        head_lits: &[xla::Literal],
+        head: &PreparedSegment,
         prompt: &SegmentParams,
     ) -> Result<HostTensor> {
         let mut segs: SegmentInputs = BTreeMap::new();
-        segs.insert("head", SegInput::Literals(head_lits));
+        segs.insert("head", SegInput::Prepared(head));
         segs.insert("prompt", SegInput::Host(prompt));
         let mut tensors: TensorInputs = BTreeMap::new();
         tensors.insert("images", batch_images);
-        let mut out = Executor::run_mixed(store, "head_forward", &segs, &tensors)?;
+        let mut out = backend.run_stage("head_forward", &segs, &tensors)?;
         Ok(out.tensors.remove("smashed").expect("smashed"))
     }
 
@@ -162,20 +178,20 @@ impl Client {
     /// (loss, new tail, gradient w.r.t. body output to ship back).
     pub fn tail_step(
         &self,
-        store: &ArtifactStore,
+        backend: &dyn Backend,
         body_out: &HostTensor,
         labels: &HostTensor,
         tail: &SegmentParams,
         lr: f32,
     ) -> Result<(f32, SegmentParams, HostTensor)> {
         let lr_t = HostTensor::scalar_f32(lr);
-        let mut segs: BTreeMap<&str, &SegmentParams> = BTreeMap::new();
-        segs.insert("tail", tail);
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("tail", SegInput::Host(tail));
         let mut tensors: TensorInputs = BTreeMap::new();
         tensors.insert("body_out", body_out);
         tensors.insert("labels", labels);
         tensors.insert("lr", &lr_t);
-        let mut out = Executor::run(store, "tail_step", &segs, &tensors)?;
+        let mut out = backend.run_stage("tail_step", &segs, &tensors)?;
         let loss = out.loss()?;
         let new_tail = out.take_segment("tail")?;
         let g = out.tensors.remove("g_body_out").expect("g_body_out");
@@ -186,22 +202,22 @@ impl Client {
     /// through the frozen head into the prompt; returns the updated prompt.
     pub fn prompt_update(
         &self,
-        store: &ArtifactStore,
+        backend: &dyn Backend,
         batch_images: &HostTensor,
         g_smashed: &HostTensor,
-        head_lits: &[xla::Literal],
+        head: &PreparedSegment,
         prompt: &SegmentParams,
         lr: f32,
     ) -> Result<SegmentParams> {
         let lr_t = HostTensor::scalar_f32(lr);
         let mut segs: SegmentInputs = BTreeMap::new();
-        segs.insert("head", SegInput::Literals(head_lits));
+        segs.insert("head", SegInput::Prepared(head));
         segs.insert("prompt", SegInput::Host(prompt));
         let mut tensors: TensorInputs = BTreeMap::new();
         tensors.insert("images", batch_images);
         tensors.insert("g_smashed", g_smashed);
         tensors.insert("lr", &lr_t);
-        let mut out = Executor::run_mixed(store, "prompt_grad", &segs, &tensors)?;
+        let mut out = backend.run_stage("prompt_grad", &segs, &tensors)?;
         out.take_segment("prompt")
     }
 }
@@ -228,11 +244,12 @@ fn expect_kind(frame: &Frame, want: MsgKind, cid: u32) -> Result<()> {
 /// `AggregateBroadcast`. Uplink payloads are encoded under `fed.wire`, so
 /// quantization loss feeds back into training exactly as it would on a
 /// real link.
+#[allow(clippy::too_many_arguments)]
 pub fn client_split_round(
     client: &mut Client,
-    store: &ArtifactStore,
+    backend: &dyn Backend,
     examples: &[Example],
-    head_lits: &[xla::Literal],
+    head: &PreparedSegment,
     fed: &FedConfig,
     cfg: &ModelConfig,
     round: u32,
@@ -260,7 +277,7 @@ pub fn client_split_round(
     // --- Phase 1a: local-loss update (network-free). ---
     if fed.local_loss_update {
         let upd = client.local_loss_update(
-            store, examples, head_lits, tail, prompt, fed.local_epochs, fed.lr,
+            backend, examples, head, tail, prompt, fed.local_epochs, fed.lr,
         )?;
         local_losses.push(upd.mean_loss);
         tail = upd.tail;
@@ -269,12 +286,12 @@ pub fn client_split_round(
 
     // --- Phase 1b: EL2N pruning. ---
     let pruned =
-        client.prune_dataset(store, examples, head_lits, &tail, &prompt, fed.retain_fraction)?;
+        client.prune_dataset(backend, examples, head, &tail, &prompt, fed.retain_fraction)?;
 
     // --- Phase 2: split training over the pruned set. ---
     for chunk in batch_indices(&pruned, cfg.batch) {
         let batch = make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
-        let smashed = client.head_forward(store, &batch.images, head_lits, &prompt)?;
+        let smashed = client.head_forward(backend, &batch.images, head, &prompt)?;
         link.send(
             &Frame::new(MsgKind::SmashedData, round, cid, Payload::Tensor(smashed)),
             wire,
@@ -285,7 +302,7 @@ pub fn client_split_round(
         let body_out = frame.payload.into_tensor()?;
 
         let (loss, new_tail, g_body_out) =
-            client.tail_step(store, &body_out, &batch.labels, &tail, fed.lr)?;
+            client.tail_step(backend, &body_out, &batch.labels, &tail, fed.lr)?;
         split_losses.push(loss as f64);
         tail = new_tail;
         link.send(
@@ -297,7 +314,7 @@ pub fn client_split_round(
         expect_kind(&frame, MsgKind::GradSmashed, cid)?;
         let g_smashed = frame.payload.into_tensor()?;
         prompt =
-            client.prompt_update(store, &batch.images, &g_smashed, head_lits, &prompt, fed.lr)?;
+            client.prompt_update(backend, &batch.images, &g_smashed, head, &prompt, fed.lr)?;
     }
 
     // --- Phase 3: upload for aggregation, wait for the broadcast. ---
@@ -309,4 +326,27 @@ pub fn client_split_round(
     expect_kind(&frame, MsgKind::AggregateBroadcast, cid)?;
 
     Ok(ClientRoundOutcome { local_losses, split_losses })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::top_k_by_score;
+
+    #[test]
+    fn top_k_keeps_highest_scores() {
+        let scored = vec![(0, 0.1), (1, 0.9), (2, 0.5), (3, 0.7)];
+        assert_eq!(top_k_by_score(scored, 2), vec![1, 3]);
+    }
+
+    #[test]
+    fn top_k_survives_nan_scores() {
+        // Regression: the old `partial_cmp().unwrap()` sort panicked on a
+        // NaN EL2N score (diverged local model). NaN must rank last and
+        // never abort the round.
+        let scored = vec![(0, f32::NAN), (1, 0.9), (2, f32::NAN), (3, 0.7), (4, 0.8)];
+        assert_eq!(top_k_by_score(scored, 3), vec![1, 4, 3]);
+        // All-NaN still returns the requested count instead of panicking.
+        let all_nan = vec![(0, f32::NAN), (1, f32::NAN)];
+        assert_eq!(top_k_by_score(all_nan, 1).len(), 1);
+    }
 }

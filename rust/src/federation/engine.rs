@@ -12,10 +12,10 @@
 //! over a channel link: `ByteMeter` records **encoded frame lengths**, not
 //! manifest estimates, and uplink payloads honour `FedConfig::wire`
 //! (f32/f16/int8). Each selected client runs on its own thread against the
-//! server [`Hub`], so Phase-2 split training is genuinely concurrent; the
-//! simulated clock charges the shared-rate model of §3.5 through the
-//! driver's [`LinkClock`], with round latency = max over per-client link
-//! clocks.
+//! server [`Hub`], so Phase-2 split training is genuinely concurrent (the
+//! [`Backend`] is `Sync`); the simulated clock charges the shared-rate
+//! model of §3.5 through the driver's [`LinkClock`], with round latency =
+//! max over per-client link clocks.
 //!
 //! Constructed only via [`super::RunBuilder`]; driven only through the
 //! [`FederatedRun`] trait.
@@ -24,12 +24,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::backend::{Backend, PreparedSegment};
 use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel};
 use crate::data::SynthDataset;
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
-use crate::runtime::{ArtifactStore, HostTensor};
+use crate::runtime::HostTensor;
 use crate::transport::{Frame, Hub, Payload, WireFormat};
 use crate::util::rng::Rng;
 
@@ -40,7 +41,7 @@ use super::server::Server;
 use super::{FedConfig, Method};
 
 pub(crate) struct SfPromptEngine<'a> {
-    store: &'a ArtifactStore,
+    backend: &'a dyn Backend,
     fed: FedConfig,
     net: NetworkModel,
     global: ParamSet,
@@ -48,10 +49,10 @@ pub(crate) struct SfPromptEngine<'a> {
     rng: Rng,
     /// bytes of the one-time head distribution (setup, not per-round)
     setup_bytes: u64,
-    /// Frozen segments as pre-converted PJRT literals (perf fast path —
+    /// Frozen segments in backend-prepared form (perf fast path —
     /// head/body never change during an SFPrompt run; see §Perf).
-    head_lits: Vec<xla::Literal>,
-    body_lits: Vec<xla::Literal>,
+    head_prep: PreparedSegment,
+    body_prep: PreparedSegment,
     train: &'a SynthDataset,
     eval: Option<&'a SynthDataset>,
     history: RunHistory,
@@ -59,12 +60,12 @@ pub(crate) struct SfPromptEngine<'a> {
 
 impl<'a> SfPromptEngine<'a> {
     pub(crate) fn new(
-        store: &'a ArtifactStore,
+        backend: &'a dyn Backend,
         fed: FedConfig,
         net: NetworkModel,
         train: &'a SynthDataset,
         eval: Option<&'a SynthDataset>,
-    ) -> Self {
+    ) -> Result<Self> {
         let mut rng = Rng::new(fed.seed);
         let labels = train.labels();
         let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
@@ -73,14 +74,13 @@ impl<'a> SfPromptEngine<'a> {
             .enumerate()
             .map(|(id, indices)| Client::new(id, indices, rng.fork(100 + id as u64)))
             .collect();
-        let global = init_params(&store.manifest, fed.seed ^ 0xA5A5);
-        let head_bytes = store.manifest.cost.message_bytes["head_params"] as u64;
-        let head_lits = crate::runtime::segment_literals(global.get("head").unwrap())
-            .expect("head literals");
-        let body_lits = crate::runtime::segment_literals(global.get("body").unwrap())
-            .expect("body literals");
-        SfPromptEngine {
-            store,
+        let manifest = backend.manifest();
+        let global = init_params(manifest, fed.seed ^ 0xA5A5);
+        let head_bytes = manifest.cost.message_bytes["head_params"] as u64;
+        let head_prep = backend.prepare_segment(global.get("head")?)?;
+        let body_prep = backend.prepare_segment(global.get("body")?)?;
+        Ok(SfPromptEngine {
+            backend,
             net,
             fed,
             global,
@@ -88,18 +88,18 @@ impl<'a> SfPromptEngine<'a> {
             rng,
             // One-time: every client receives the frozen head once.
             setup_bytes: head_bytes * fed.num_clients as u64,
-            head_lits,
-            body_lits,
+            head_prep,
+            body_prep,
             train,
             eval,
             history: RunHistory::default(),
-        }
+        })
     }
 
     /// Run one global round; returns its metrics record.
     fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
-        let cfg = self.store.manifest.config.clone();
+        let cfg = self.backend.manifest().config.clone();
         let train = self.train;
 
         let counts: Vec<usize> = self.clients.iter().map(|c| c.num_samples()).collect();
@@ -136,9 +136,9 @@ impl<'a> SfPromptEngine<'a> {
         let n_ks: Vec<usize> = taken.iter().map(|c| c.num_samples()).collect();
 
         let fed = self.fed;
-        let store = self.store;
-        let head_lits: &[xla::Literal] = &self.head_lits;
-        let body_lits: &[xla::Literal] = &self.body_lits;
+        let backend = self.backend;
+        let head_prep = &self.head_prep;
+        let body_prep = &self.body_prep;
         let examples = &train.examples;
         let cfg_ref = &cfg;
         let selected_ref = &selected;
@@ -155,7 +155,7 @@ impl<'a> SfPromptEngine<'a> {
                     // Err path and the panic path send an Abort frame.
                     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         client_split_round(
-                            &mut client, store, examples, head_lits, &fed, cfg_ref,
+                            &mut client, backend, examples, head_prep, &fed, cfg_ref,
                             round as u32, &mut link,
                         )
                     }));
@@ -179,7 +179,7 @@ impl<'a> SfPromptEngine<'a> {
 
             // --- Server: route Phase-2 traffic, FedAvg, broadcast. ---
             let agg_result = serve_round(
-                store, body_lits, &hub, selected_ref, round as u32,
+                backend, body_prep, &hub, selected_ref, round as u32,
                 &n_ks, &mut comm, &mut clock,
             );
             // Dropping the hub unblocks any client still waiting on a recv
@@ -230,7 +230,7 @@ impl<'a> SfPromptEngine<'a> {
 
         let eval_accuracy = match self.eval {
             Some(ds) if self.fed.should_eval(round) => {
-                evaluate(self.store, "eval_forward", &self.global, ds, self.fed.eval_limit)?
+                evaluate(self.backend, "eval_forward", &self.global, ds, self.fed.eval_limit)?
             }
             _ => f64::NAN,
         };
@@ -284,7 +284,7 @@ impl FederatedRun for SfPromptEngine<'_> {
     fn final_eval(&mut self) -> Result<f64> {
         match self.eval {
             Some(ds) => {
-                evaluate(self.store, "eval_forward", &self.global, ds, self.fed.eval_limit)
+                evaluate(self.backend, "eval_forward", &self.global, ds, self.fed.eval_limit)
             }
             None => Ok(f64::NAN),
         }
@@ -297,8 +297,8 @@ impl FederatedRun for SfPromptEngine<'_> {
 /// client's simulated link clock.
 #[allow(clippy::too_many_arguments)]
 fn serve_round(
-    store: &ArtifactStore,
-    body_lits: &[xla::Literal],
+    backend: &dyn Backend,
+    body_prep: &PreparedSegment,
     hub: &Hub,
     selected: &[usize],
     round: u32,
@@ -325,7 +325,7 @@ fn serve_round(
         match frame.kind {
             MsgKind::SmashedData => {
                 let smashed = frame.payload.into_tensor()?;
-                let body_out = Server::body_forward(store, body_lits, &smashed)?;
+                let body_out = Server::body_forward(backend, body_prep, &smashed)?;
                 smashed_cache[slot] = Some(smashed);
                 let reply =
                     Frame::new(MsgKind::BodyOutput, round, frame.client, Payload::Tensor(body_out));
@@ -338,7 +338,8 @@ fn serve_round(
                 let smashed = smashed_cache[slot].as_ref().ok_or_else(|| {
                     anyhow!("client {} sent a gradient before smashed data", frame.client)
                 })?;
-                let g_smashed = Server::body_backward(store, body_lits, smashed, &g_body_out)?;
+                let g_smashed =
+                    Server::body_backward(backend, body_prep, smashed, &g_body_out)?;
                 let reply = Frame::new(
                     MsgKind::GradSmashed, round, frame.client, Payload::Tensor(g_smashed),
                 );

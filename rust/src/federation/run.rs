@@ -13,17 +13,20 @@
 //! ```text
 //! RunBuilder::new(method)         configure: FedConfig, wire, net model
 //!     .rounds(10).clients(50, 5)  (validated: see `validate`)
-//!     .build(&store, &train, Some(&eval))?   -> Box<dyn FederatedRun>
+//!     .build(&backend, &train, Some(&eval))?  -> Box<dyn FederatedRun>
 //! driver::drive(run, observer)    round loop + event stream
 //! ```
+//!
+//! `build` takes any [`Backend`] — the native kernel engine or the PJRT
+//! artifact path — so engines are substrate-agnostic by construction.
 
 use anyhow::{bail, Result};
 
+use crate::backend::Backend;
 use crate::comm::{ByteMeter, NetworkModel};
 use crate::data::SynthDataset;
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::partition::Partition;
-use crate::runtime::ArtifactStore;
 use crate::transport::WireFormat;
 
 use super::baselines::BaselineEngine;
@@ -224,12 +227,32 @@ impl RunBuilder {
         Ok(())
     }
 
+    /// Stages a method's rounds execute — checked at `build` so a config
+    /// lowered without the needed stage family (e.g. the sfprompt-only
+    /// prompt-sweep configs) fails fast, not mid-round.
+    fn required_stages(method: Method) -> &'static [&'static str] {
+        match method {
+            Method::SfPrompt => &[
+                "local_step", "el2n_scores", "head_forward", "body_forward", "tail_step",
+                "body_backward", "prompt_grad",
+            ],
+            Method::Fl => &["full_step"],
+            Method::SflFullFinetune => &[
+                "head_forward_noprompt", "body_forward_noprompt", "tail_step_noprompt",
+                "body_backward_train", "head_step",
+            ],
+            Method::SflLinear => {
+                &["head_forward_noprompt", "body_forward_noprompt", "tail_step_linear"]
+            }
+        }
+    }
+
     /// Validate, partition `train` over the fleet, and construct the
-    /// engine for `method`. `eval` enables per-round accuracy points and
-    /// [`FederatedRun::final_eval`].
+    /// engine for `method` on `backend`. `eval` enables per-round accuracy
+    /// points and [`FederatedRun::final_eval`].
     pub fn build<'a>(
         self,
-        store: &'a ArtifactStore,
+        backend: &'a dyn Backend,
         train: &'a SynthDataset,
         eval: Option<&'a SynthDataset>,
     ) -> Result<Box<dyn FederatedRun + 'a>> {
@@ -241,13 +264,27 @@ impl RunBuilder {
                 self.fed.num_clients
             );
         }
+        let manifest = backend.manifest();
+        let missing: Vec<&str> = Self::required_stages(self.method)
+            .iter()
+            .copied()
+            .filter(|s| !manifest.stages.contains_key(*s))
+            .collect();
+        if !missing.is_empty() {
+            bail!(
+                "config {:?} was lowered without the stages {} needs: missing {}",
+                manifest.config.name,
+                self.method.label(),
+                missing.join(", ")
+            );
+        }
         let net = self.resolved_net();
         Ok(match self.method {
             Method::SfPrompt => {
-                Box::new(SfPromptEngine::new(store, self.fed, net, train, eval))
+                Box::new(SfPromptEngine::new(backend, self.fed, net, train, eval)?)
             }
             method => {
-                Box::new(BaselineEngine::new(store, self.fed, method, net, train, eval))
+                Box::new(BaselineEngine::new(backend, self.fed, method, net, train, eval))
             }
         })
     }

@@ -1,45 +1,47 @@
 //! Server-side split-training operations: body forward/backward (Phase 2)
-//! and parameter aggregation (Phase 3).
+//! and parameter aggregation (Phase 3). The frozen body travels as an
+//! opaque [`PreparedSegment`] handle; no substrate type leaks in.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::backend::{Backend, PreparedSegment, SegInput, SegmentInputs, TensorInputs};
 use crate::model::{fedavg_multi, SegmentParams};
-use crate::runtime::{ArtifactStore, Executor, HostTensor, TensorInputs};
+use crate::runtime::HostTensor;
 
 pub struct Server;
 
 impl Server {
     /// Phase 2 server step A — forward the smashed data through the frozen
-    /// body (held as pre-converted literals; it never changes in SFPrompt).
+    /// body (held as a prepared handle; it never changes in SFPrompt).
     pub fn body_forward(
-        store: &ArtifactStore,
-        body_lits: &[xla::Literal],
+        backend: &dyn Backend,
+        body: &PreparedSegment,
         smashed: &HostTensor,
     ) -> Result<HostTensor> {
-        let mut segs: crate::runtime::SegmentInputs = BTreeMap::new();
-        segs.insert("body", crate::runtime::SegInput::Literals(body_lits));
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("body", SegInput::Prepared(body));
         let mut tensors: TensorInputs = BTreeMap::new();
         tensors.insert("smashed", smashed);
-        let mut out = Executor::run_mixed(store, "body_forward", &segs, &tensors)?;
+        let mut out = backend.run_stage("body_forward", &segs, &tensors)?;
         Ok(out.tensors.remove("body_out").expect("body_out"))
     }
 
     /// Phase 2 server step B — backprop the client's cut-layer gradient
     /// through the frozen body; returns the gradient w.r.t. smashed data.
     pub fn body_backward(
-        store: &ArtifactStore,
-        body_lits: &[xla::Literal],
+        backend: &dyn Backend,
+        body: &PreparedSegment,
         smashed: &HostTensor,
         g_body_out: &HostTensor,
     ) -> Result<HostTensor> {
-        let mut segs: crate::runtime::SegmentInputs = BTreeMap::new();
-        segs.insert("body", crate::runtime::SegInput::Literals(body_lits));
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("body", SegInput::Prepared(body));
         let mut tensors: TensorInputs = BTreeMap::new();
         tensors.insert("smashed", smashed);
         tensors.insert("g_body_out", g_body_out);
-        let mut out = Executor::run_mixed(store, "body_backward", &segs, &tensors)?;
+        let mut out = backend.run_stage("body_backward", &segs, &tensors)?;
         Ok(out.tensors.remove("g_smashed").expect("g_smashed"))
     }
 

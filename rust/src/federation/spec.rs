@@ -11,9 +11,11 @@
 //! output is always strict JSON.
 
 use std::collections::BTreeMap;
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::backend::{open_backend, Backend, BackendChoice};
 use crate::data::{synth, SynthDataset};
 use crate::metrics::RunHistory;
 use crate::partition::Partition;
@@ -28,11 +30,14 @@ use super::{FedConfig, Method, Selection};
 /// `train --spec` operate on).
 #[derive(Debug, Clone)]
 pub struct RunSpec {
-    /// Artifact config name under `artifacts/` (e.g. "tiny", "small").
+    /// Model config name ("tiny", "small", …): a synthesized manifest on
+    /// the native backend, a directory under `artifacts/` on PJRT.
     pub config: String,
     /// Synthetic dataset profile name (cifar10 | cifar100 | svhn | flower102).
     pub dataset: String,
     pub method: Method,
+    /// Compute substrate ("native" default; "pjrt" needs artifacts).
+    pub backend: BackendChoice,
     pub fed: FedConfig,
     pub samples_per_client: usize,
     pub eval_samples: usize,
@@ -48,12 +53,19 @@ impl RunSpec {
             config: config.to_string(),
             dataset: dataset.to_string(),
             method,
+            backend: BackendChoice::default(),
             // §4.1 defaults, with the harness's lr / eval-budget overrides.
             fed: FedConfig { lr: 0.08, eval_limit: Some(160), ..FedConfig::default() },
             samples_per_client: 32,
             eval_samples: 160,
             net_rate_bytes_per_s: None,
         }
+    }
+
+    /// Construct the spec's compute substrate for its config.
+    /// `artifacts_root` is only consulted by the PJRT backend.
+    pub fn open_backend(&self, artifacts_root: &Path) -> Result<Box<dyn Backend>> {
+        open_backend(self.backend, artifacts_root, &self.config)
     }
 
     /// The builder this spec resolves to (validation happens at `build`).
@@ -105,11 +117,11 @@ impl RunSpec {
     }
 
     pub fn from_json(v: &Json) -> Result<RunSpec> {
-        const KNOWN: [&str; 19] = [
-            "config", "dataset", "method", "rounds", "num_clients", "clients_per_round",
-            "local_epochs", "lr", "retain_fraction", "local_loss_update", "partition",
-            "seed", "eval_limit", "eval_every", "selection", "wire", "samples_per_client",
-            "eval_samples", "net_rate_bytes_per_s",
+        const KNOWN: [&str; 20] = [
+            "config", "dataset", "method", "backend", "rounds", "num_clients",
+            "clients_per_round", "local_epochs", "lr", "retain_fraction", "local_loss_update",
+            "partition", "seed", "eval_limit", "eval_every", "selection", "wire",
+            "samples_per_client", "eval_samples", "net_rate_bytes_per_s",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("run spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -155,6 +167,7 @@ impl RunSpec {
         let dataset = str_field("dataset", "cifar10")?;
         let method = Method::parse(&str_field("method", "sfprompt")?)?;
         let mut spec = RunSpec::new(&config, &dataset, method);
+        spec.backend = BackendChoice::parse(&str_field("backend", "native")?)?;
         let d = spec.fed; // defaults
 
         spec.fed.rounds = usize_field("rounds", d.rounds)?;
@@ -218,6 +231,7 @@ impl RunSpec {
         o.insert("config".to_string(), Json::Str(self.config.clone()));
         o.insert("dataset".to_string(), Json::Str(self.dataset.clone()));
         o.insert("method".to_string(), Json::Str(self.method.label().to_string()));
+        o.insert("backend".to_string(), Json::Str(self.backend.label().to_string()));
         o.insert("rounds".to_string(), Json::Num(f.rounds as f64));
         o.insert("num_clients".to_string(), Json::Num(f.num_clients as f64));
         o.insert("clients_per_round".to_string(), Json::Num(f.clients_per_round as f64));
@@ -360,6 +374,7 @@ mod tests {
     #[test]
     fn run_spec_json_roundtrip() {
         let mut spec = RunSpec::new("small_c100", "cifar100", Method::SflLinear);
+        spec.backend = BackendChoice::Pjrt;
         spec.fed.partition = Partition::Dirichlet { alpha: 0.25 };
         spec.fed.wire = WireFormat::Int8;
         spec.fed.selection = Selection::WeightedBySamples;
@@ -374,6 +389,7 @@ mod tests {
         let back = RunSpec::parse(&text).unwrap();
         assert_eq!(back.to_json(), spec.to_json());
         assert_eq!(back.method, Method::SflLinear);
+        assert_eq!(back.backend, BackendChoice::Pjrt);
         assert_eq!(back.config, "small_c100");
         assert_eq!(back.fed.rounds, 7);
         assert_eq!(back.fed.wire, WireFormat::Int8);
@@ -393,6 +409,7 @@ mod tests {
         assert_eq!(spec.dataset, "cifar10");
         assert_eq!(spec.fed.num_clients, 50);
         assert_eq!(spec.fed.eval_limit, Some(160));
+        assert_eq!(spec.backend, BackendChoice::Native, "native is the default substrate");
         assert!(spec.net_rate_bytes_per_s.is_none());
         spec.builder().validate().unwrap();
     }
@@ -402,6 +419,7 @@ mod tests {
         assert!(RunSpec::parse("[1, 2]").is_err());
         assert!(RunSpec::parse(r#"{"rond": 3}"#).is_err(), "unknown key must fail");
         assert!(RunSpec::parse(r#"{"method": "sgd"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"backend": "cuda"}"#).is_err());
         assert!(RunSpec::parse(r#"{"partition": "zipf"}"#).is_err());
         assert!(RunSpec::parse(r#"{"wire": "bf16"}"#).is_err());
         assert!(RunSpec::parse(r#"{"rounds": "ten"}"#).is_err());

@@ -10,15 +10,33 @@
 //!   network with exact byte accounting, analytic cost models, baselines
 //!   (FL, SFL+FF, SFL+Linear), and the experiment harness that regenerates
 //!   every table and figure of the paper.
-//! * **L2 (python/compile, build-time)** — the split ViT + soft prompts in
-//!   JAX, AOT-lowered per protocol message to `artifacts/<cfg>/*.hlo.txt`.
-//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused
-//!   attention, LayerNorm, EL2N) called from L2.
+//! * **L2 (python/compile, build-time, optional)** — the split ViT + soft
+//!   prompts in JAX, AOT-lowered per protocol message to
+//!   `artifacts/<cfg>/*.hlo.txt` for the PJRT backend.
+//! * **L1 (python/compile/kernels, build-time, optional)** — Pallas kernels
+//!   (fused attention, LayerNorm, EL2N) called from L2.
 //!
-//! Python never runs at runtime: this crate loads the HLO text via PJRT
-//! (`xla` crate — gated behind the default-off `pjrt` feature; the offline
-//! build uses a functional host-side stub) and drives everything from the
-//! JSON manifest.
+//! ## The compute substrate ([`backend`])
+//!
+//! Every stage execution goes through the [`backend::Backend`] trait, with
+//! two interchangeable substrates:
+//!
+//! * **native** ([`backend::NativeBackend`], the default) — the
+//!   prompt-augmented split ViT implemented as hand-written pure-Rust
+//!   forward + backward kernels (patch embed, prompt concat, pre-LN
+//!   multi-head attention, tanh-GELU MLP, cross-entropy, EL2N, exact SGD),
+//!   driven by a **synthesized in-memory manifest**. Training runs
+//!   end-to-end with zero artifacts on disk and zero Python — this is
+//!   what `cargo test` and `train --backend native` exercise. Gradients
+//!   are validated against `jax.grad` of the L2 model and by
+//!   finite-difference tests.
+//! * **pjrt** ([`backend::PjrtBackend`]) — the original artifact path:
+//!   HLO text compiled and executed via the `xla` bindings (a functional
+//!   host-side stub offline; real PJRT under the `pjrt` cargo feature).
+//!
+//! Frozen segments (head/body) cross the substrate boundary as opaque
+//! [`backend::PreparedSegment`] handles, so no `xla` type appears in any
+//! federation API.
 //!
 //! ## The unified run API
 //!
@@ -27,8 +45,9 @@
 //!
 //! ```text
 //! RunSpec (JSON, optional)                 federation::spec
+//!   └─> spec.open_backend(root)?           backend (native | pjrt)
 //!   └─> RunBuilder::new(method)...         federation::run   (validated;
-//!         .build(&store, &train, eval)?     the ONLY engine constructor)
+//!         .build(&backend, &train, eval)?   the ONLY engine constructor)
 //!         └─> Box<dyn FederatedRun>        method-agnostic engine handle
 //!               └─> drive(run, observer)   federation::driver (the ONE
 //!                     └─> RunHistory        round loop + event stream)
@@ -65,9 +84,10 @@
 //!
 //! In the SFPrompt engine each selected client runs its round on its own
 //! thread against the server's [`transport::Hub`], so Phase-2 split
-//! training is genuinely concurrent (the `ArtifactStore` is `Sync`).
+//! training is genuinely concurrent (every [`backend::Backend`] is `Sync`).
 
 pub mod analysis;
+pub mod backend;
 pub mod comm;
 pub mod data;
 pub mod experiments;

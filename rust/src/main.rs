@@ -10,12 +10,12 @@
 use anyhow::{Context, Result};
 
 use sfprompt::analysis::{fl_crossover_w_bytes, sweep, CostParams};
+use sfprompt::backend::BackendChoice;
 use sfprompt::experiments::{self, ExpOptions};
 use sfprompt::federation::{
     drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec,
 };
 use sfprompt::partition::Partition;
-use sfprompt::runtime::ArtifactStore;
 use sfprompt::transport::WireFormat;
 use sfprompt::util::cli::Args;
 use sfprompt::util::csv::CsvWriter;
@@ -24,9 +24,10 @@ const USAGE: &str = "\
 sfprompt — split federated prompt fine-tuning coordinator
 
 USAGE:
-  sfprompt inspect    --config <name>
+  sfprompt inspect    --config <name> [--backend native|pjrt]
   sfprompt train      [--spec FILE.json] [--json]
-                      [--config <name>] [--method sfprompt|fl|sfl_ff|sfl_linear]
+                      [--config <name>] [--backend native|pjrt]
+                      [--method sfprompt|fl|sfl_ff|sfl_linear]
                       [--rounds N] [--clients N] [--per-round K] [--epochs U]
                       [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
                       [--noniid] [--alpha F] [--seed N] [--samples-per-client N]
@@ -34,6 +35,11 @@ USAGE:
   sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
+
+`--backend native` (the default) runs every stage on the pure-Rust ViT
+kernel engine with an in-memory manifest — no artifacts, no Python.
+`--backend pjrt` executes the AOT-lowered artifacts under `artifacts/`
+(requires the `pjrt` feature; see docs/BACKENDS.md).
 
 `train --spec FILE.json` reads a RunSpec (CLI flags are ignored); `--json`
 suppresses progress output and prints a RunReport JSON document with
@@ -67,9 +73,17 @@ fn dispatch(args: Args) -> Result<()> {
 
 fn inspect(args: &Args) -> Result<()> {
     let config = args.get_or("config", "tiny");
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), config)?;
-    let man = &store.manifest;
-    println!("config {}:", man.config.name);
+    let choice = BackendChoice::parse(args.get_or("backend", "native"))?;
+    // inspect is read-only: resolve the manifest without constructing an
+    // executing backend, so analytic-only profiles (vit_base_sim, …)
+    // inspect fine on the native path.
+    let man = match choice {
+        BackendChoice::Native => sfprompt::backend::native::synth_manifest(config)?,
+        BackendChoice::Pjrt => sfprompt::runtime::Manifest::load(
+            &sfprompt::artifacts_root().join(config),
+        )?,
+    };
+    println!("config {} [{} backend]:", man.config.name, choice.label());
     println!(
         "  image {}x{}x{}  patch {}  dim {}  heads {}  depth {}+{}+{}  classes {}  prompt {}  batch {}",
         man.config.image_size, man.config.image_size, man.config.channels,
@@ -97,6 +111,7 @@ fn spec_from_args(args: &Args) -> Result<RunSpec> {
         args.get_or("dataset", "cifar10"),
         method,
     );
+    spec.backend = BackendChoice::parse(args.get_or("backend", "native"))?;
     let f = &mut spec.fed;
     f.num_clients = args.get_parse("clients", f.num_clients);
     f.clients_per_round = args.get_parse("per-round", f.clients_per_round);
@@ -181,16 +196,16 @@ fn train(args: &Args) -> Result<()> {
     };
     let json_out = args.has_flag("json");
 
-    let store = ArtifactStore::open(&sfprompt::artifacts_root(), &spec.config)?;
-    let (train_ds, eval_ds) = spec.datasets(&store.manifest.config)?;
-    let mut run = spec.builder().build(&store, &train_ds, Some(&eval_ds))?;
+    let backend = spec.open_backend(&sfprompt::artifacts_root())?;
+    let (train_ds, eval_ds) = spec.datasets(&backend.manifest().config)?;
+    let mut run = spec.builder().build(backend.as_ref(), &train_ds, Some(&eval_ds))?;
 
     if !json_out {
         let fed = run.fed();
         println!(
-            "train: config={} dataset={} method={} rounds={} clients={}x{} U={} \
+            "train: config={} backend={} dataset={} method={} rounds={} clients={}x{} U={} \
              γ_retain={} wire={}",
-            spec.config, spec.dataset, spec.method.label(), fed.rounds,
+            spec.config, backend.name(), spec.dataset, spec.method.label(), fed.rounds,
             fed.clients_per_round, fed.num_clients, fed.local_epochs,
             fed.retain_fraction, fed.wire.label()
         );
@@ -220,7 +235,7 @@ fn train(args: &Args) -> Result<()> {
         println!("\nper-stage execution stats (desc by total exec time):");
         println!("{:<26} {:>8} {:>12} {:>12} {:>10}", "stage", "calls", "exec total s",
                  "mean ms", "convert s");
-        for (name, s) in store.execution_stats() {
+        for (name, s) in backend.execution_stats() {
             println!(
                 "{:<26} {:>8} {:>12.2} {:>12.2} {:>10.3}",
                 name, s.calls, s.exec_s, s.exec_s * 1e3 / s.calls as f64, s.convert_s

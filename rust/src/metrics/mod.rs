@@ -4,10 +4,11 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::backend::{run_stage_hosts, Backend, TensorInputs};
 use crate::comm::ByteMeter;
 use crate::data::{batch_indices, make_batch, SynthDataset};
 use crate::model::ParamSet;
-use crate::runtime::{ArtifactStore, Executor, HostTensor};
+use crate::runtime::HostTensor;
 
 /// Metrics for one global round of any method.
 #[derive(Debug, Clone)]
@@ -60,10 +61,11 @@ pub fn batch_accuracy(logits: &HostTensor, labels: &HostTensor, valid: usize) ->
     let mut correct = 0;
     for (i, &label) in y.iter().enumerate().take(valid) {
         let row = &l[i * c..(i + 1) * c];
+        // total_cmp: a NaN logit (diverged run) must not panic the eval.
         let pred = row
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(j, _)| j as i32)
             .unwrap();
         if pred == label {
@@ -76,16 +78,16 @@ pub fn batch_accuracy(logits: &HostTensor, labels: &HostTensor, valid: usize) ->
 /// Evaluate model accuracy over an eval dataset with the given eval stage
 /// (`eval_forward` with prompt, `eval_forward_noprompt` without).
 pub fn evaluate(
-    store: &ArtifactStore,
+    backend: &dyn Backend,
     stage: &str,
     params: &ParamSet,
     eval: &SynthDataset,
     limit: Option<usize>,
 ) -> Result<f64> {
-    let cfg = &store.manifest.config;
+    let cfg = &backend.manifest().config;
     let n = limit.unwrap_or(eval.len()).min(eval.len());
     let idx: Vec<usize> = (0..n).collect();
-    let needs_prompt = store.stage_def(stage)?.inputs.iter().any(|io| {
+    let needs_prompt = backend.manifest().stage(stage)?.inputs.iter().any(|io| {
         matches!(io, crate::runtime::IoSpec::Segment(s) if s == "prompt")
     });
 
@@ -101,9 +103,9 @@ pub fn evaluate(
         if needs_prompt {
             segs.insert("prompt", params.get("prompt")?);
         }
-        let mut tensors: crate::runtime::TensorInputs = BTreeMap::new();
+        let mut tensors: TensorInputs = BTreeMap::new();
         tensors.insert("images", &batch.images);
-        let out = Executor::run(store, stage, &segs, &tensors)?;
+        let out = run_stage_hosts(backend, stage, &segs, &tensors)?;
         let logits = out.tensor("logits")?;
         let (c, t) = batch_accuracy(logits, &batch.labels, valid);
         correct += c;

@@ -29,11 +29,15 @@ pub struct ArtifactStore {
     exec_stats: Mutex<HashMap<String, (u64, f64, f64)>>,
 }
 
-/// Aggregated execution statistics for one stage.
+/// Aggregated execution statistics for one stage. (Lives in the runtime
+/// leaf so the backend layer depends on runtime, never the reverse;
+/// re-exported as `backend::StageStats`.)
 #[derive(Debug, Clone, Copy)]
 pub struct StageStats {
     pub calls: u64,
+    /// input conversion / assembly time
     pub convert_s: f64,
+    /// kernel / executable time
     pub exec_s: f64,
 }
 
@@ -94,7 +98,7 @@ impl ArtifactStore {
         Ok(())
     }
 
-    /// Record one execution (called by the Executor).
+    /// Record one execution (called by the PJRT backend).
     pub(crate) fn note_execution(&self, stage: &str, convert_s: f64, exec_s: f64) {
         let mut stats = self.exec_stats.lock().unwrap();
         let e = stats.entry(stage.to_string()).or_insert((0, 0.0, 0.0));
@@ -114,7 +118,7 @@ impl ArtifactStore {
                 (k.clone(), StageStats { calls, convert_s, exec_s })
             })
             .collect();
-        v.sort_by(|a, b| b.1.exec_s.partial_cmp(&a.1.exec_s).unwrap());
+        v.sort_by(|a, b| b.1.exec_s.total_cmp(&a.1.exec_s));
         v
     }
 

@@ -1,16 +1,16 @@
-//! Runtime layer: PJRT artifact loading + stage execution.
+//! Runtime layer: manifests (stage signatures / shapes / cost numbers),
+//! host tensors, and the PJRT artifact store.
 //!
-//! `xla` crate (0.1.6) against xla_extension 0.5.1 CPU:
-//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
-//! `client.compile` → `execute`. Python never runs here — artifacts are
-//! produced once by `make artifacts`.
+//! Stage *execution* lives behind [`crate::backend::Backend`]: the
+//! [`crate::backend::native`] kernel engine needs only [`Manifest`] and
+//! [`HostTensor`] from here, while [`crate::backend::PjrtBackend`] drives
+//! [`ArtifactStore`] (lazy `PjRtClient::cpu()` → `HloModuleProto` →
+//! `compile` → `execute`; a functional host-side stub offline).
 
 pub mod artifact;
-pub mod executor;
 pub mod manifest;
 pub mod tensor;
 
 pub use artifact::{ArtifactStore, StageStats};
-pub use executor::{segment_literals, Executor, SegInput, SegmentInputs, StageOutputs, TensorInputs};
 pub use manifest::{InitSpec, IoSpec, Manifest, ModelConfig, StageDef, TensorDef};
 pub use tensor::{Dtype, HostTensor, TensorData};
