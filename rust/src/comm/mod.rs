@@ -87,6 +87,12 @@ pub enum Direction {
 
 /// Link-rate model. The paper normalises up/downlink to a single rate R
 /// shared by K concurrent clients.
+///
+/// This is the **homogeneous** link model: `crate::sim::Fleet` subsumes it
+/// (per-client link rates + an optional shared bottleneck pool) and the
+/// engines charge time through the fleet's `SimClock`; a run without a
+/// fleet spec wraps this model in `Fleet::homogeneous`, reproducing the
+/// same transfer arithmetic bit-for-bit.
 #[derive(Debug, Clone, Copy)]
 pub struct NetworkModel {
     /// Link rate in bytes/second (both directions, per the paper).

@@ -1,0 +1,98 @@
+//! Fleet sweep — accuracy, simulated wall-clock, and dropped-client
+//! counts across device-skew distributions × dropout levels, under
+//! deadline-based rounds.
+//!
+//! Every cell runs the same SFPrompt federation; only the fleet changes.
+//! The deadline starts tight (1 s) with a quorum of half the cohort, so
+//! the quorum retry rule self-calibrates the cut-off per fleet: rounds
+//! wait just long enough for half the clients, and slower stragglers
+//! drop. The table makes the paper's implicit claim measurable — how much
+//! accuracy survives when heterogeneity and churn are real.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::federation::Method;
+use crate::sim::{FleetSpec, RateDist};
+use crate::util::csv::CsvWriter;
+
+use super::common::{run_spec, RunSpec};
+use super::ExpOptions;
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    let devices = ["uniform", "two-tier", "pareto"];
+    let dropouts = [0.0, 0.2, 0.4];
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("fleet.csv"),
+        &[
+            "devices", "dropout_p", "final_acc", "best_acc", "sim_wall_s", "dropped_clients",
+            "comm_mb",
+        ],
+    )?;
+
+    println!("Fleet sweep: device skew x dropout under deadline rounds (tiny config)");
+    println!(
+        "{:<10} {:>9} {:>10} {:>10} {:>12} {:>9} {:>9}",
+        "devices", "dropout", "final acc", "best acc", "sim wall s", "dropped", "comm MB"
+    );
+    for dev in devices {
+        for &dropout_p in &dropouts {
+            let mut spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);
+            opts.apply(&mut spec);
+            // A small federation keeps the 9-cell sweep cheap; the fleet
+            // dynamics, not the model, are the subject here.
+            spec.fed.num_clients = 12;
+            spec.fed.clients_per_round = 4;
+            spec.fed.local_epochs = opts.local_epochs.min(2);
+            spec.samples_per_client = 16;
+            spec.eval_samples = 96;
+            spec.fed.eval_limit = Some(96);
+            spec.fed.eval_every = spec.fed.rounds.max(1);
+
+            let mut fleet = FleetSpec::named(dev)?;
+            // The preset device rates are sized for real ViTs; the tiny
+            // model is ~60 MFLOP per client round, so rescale the same
+            // distribution shapes to rates where a 1 s deadline actually
+            // separates the tiers.
+            fleet.devices = match dev {
+                "uniform" => RateDist::Uniform { min: 1e8, max: 1e9 },
+                "two-tier" => {
+                    RateDist::TwoTier { fast: 1e9, slow: 4e7, slow_fraction: 0.25 }
+                }
+                _ => RateDist::Pareto { scale: 1e9, shape: 1.2 },
+            };
+            fleet.dropout_p = dropout_p;
+            fleet.deadline_s = Some(1.0);
+            fleet.min_quorum = spec.fed.clients_per_round / 2;
+            spec.fleet = Some(fleet);
+
+            let hist = run_spec(artifacts, &spec, true)?;
+            println!(
+                "{:<10} {:>9.1} {:>10.4} {:>10.4} {:>12.1} {:>9} {:>9.2}",
+                dev,
+                dropout_p,
+                hist.final_accuracy(),
+                hist.best_accuracy(),
+                hist.sim_wall_s(),
+                hist.dropped_clients(),
+                hist.total_comm.mb()
+            );
+            w.row(&[
+                dev.into(),
+                format!("{dropout_p:.1}"),
+                format!("{:.4}", hist.final_accuracy()),
+                format!("{:.4}", hist.best_accuracy()),
+                format!("{:.3}", hist.sim_wall_s()),
+                hist.dropped_clients().to_string(),
+                format!("{:.3}", hist.total_comm.mb()),
+            ])?;
+        }
+    }
+    println!(
+        "\ndeadline=1s with quorum=half the cohort: the retry rule extends the deadline \
+         until half finish, so the tail of each device distribution is what drops; wrote {}",
+        opts.out_dir.join("fleet.csv").display()
+    );
+    Ok(())
+}

@@ -2,6 +2,7 @@
 
 pub mod common;
 pub mod fig2;
+pub mod fleet;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
@@ -59,16 +60,18 @@ pub fn run(id: &str, artifacts: &Path, opts: &ExpOptions) -> Result<()> {
         "fig6" => fig6::run(artifacts, opts),
         "fig7" => fig7::run(artifacts, opts),
         "wire" => wire::run(artifacts, opts),
+        "fleet" => fleet::run(artifacts, opts),
         "all" => {
-            for id in
-                ["table1", "fig2", "wire", "table2", "fig4", "fig5", "fig6", "fig7", "table3"]
-            {
+            for id in [
+                "table1", "fig2", "wire", "fleet", "table2", "fig4", "fig5", "fig6", "fig7",
+                "table3",
+            ] {
                 println!("==== experiment {id} ====");
                 run(id, artifacts, opts)?;
             }
             Ok(())
         }
         other => anyhow::bail!("unknown experiment id {other:?} \
-            (known: fig2 fig4 fig5 fig6 fig7 table1 table2 table3 wire all)"),
+            (known: fig2 fig4 fig5 fig6 fig7 fleet table1 table2 table3 wire all)"),
     }
 }

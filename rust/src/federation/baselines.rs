@@ -14,10 +14,16 @@
 //! Like the SFPrompt engine, every message is serialised through the
 //! `transport` codec over a channel pair (here driven synchronously — the
 //! engine plays both endpoints), so `ByteMeter` records encoded frame
-//! lengths, SFL's uplink payloads honour `FedConfig::wire`, and latency is
-//! charged through the same driver [`LinkClock`] (§3.5) the SFPrompt
-//! engine uses. All compute runs through the substrate-agnostic
-//! [`Backend`].
+//! lengths, SFL's uplink payloads honour `FedConfig::wire`, and simulated
+//! time is charged through the same fleet [`SimClock`] the SFPrompt engine
+//! uses: per-client transfer bytes plus analytic client-compute FLOPs,
+//! with availability and deadline/quorum round semantics (offline clients
+//! are skipped outright; deadline-dropped clients' updates are discarded
+//! and the loss means count survivors only). One modelling note for
+//! SFL+FF: the server-side body updates as each client's gradients
+//! arrive, so a later-dropped client's body contribution is not rolled
+//! back — matching a real SplitFed server, which trains online. All
+//! compute runs through the substrate-agnostic [`Backend`].
 //!
 //! Constructed only via [`super::RunBuilder`]; driven only through the
 //! [`FederatedRun`] trait.
@@ -28,24 +34,24 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::backend::{run_stage_hosts, Backend, TensorInputs};
-use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel};
+use crate::comm::{ByteMeter, Direction, MsgKind};
 use crate::data::{batch_indices, make_batch, SynthDataset};
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{fedavg_multi, init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
 use crate::runtime::HostTensor;
+use crate::sim::{Fleet, RoundOutcome, SimClock};
 use crate::transport::{channel_pair, Frame, Payload, Transport, WireFormat};
-use crate::util::rng::Rng;
+use crate::util::rng::{seeds, Rng};
 
 use super::client::Client;
-use super::driver::LinkClock;
 use super::run::FederatedRun;
 use super::{FedConfig, Method};
 
 pub(crate) struct BaselineEngine<'a> {
     backend: &'a dyn Backend,
     fed: FedConfig,
-    net: NetworkModel,
+    fleet: Fleet,
     method: Method,
     global: ParamSet,
     clients: Vec<Client>,
@@ -53,6 +59,35 @@ pub(crate) struct BaselineEngine<'a> {
     train: &'a SynthDataset,
     eval: Option<&'a SynthDataset>,
     history: RunHistory,
+}
+
+/// Deadline epilogue shared by both baseline rounds: resolve the round's
+/// clock, FedAvg the surviving slots' updates into `global` (a
+/// zero-survivor round leaves it untouched), and return the
+/// survivor-filtered losses with the [`RoundOutcome`].
+fn resolve_and_aggregate(
+    global: &mut ParamSet,
+    clock: &SimClock,
+    updates: Vec<(usize, Vec<SegmentParams>, usize)>,
+    slot_losses: Vec<(usize, Vec<f64>)>,
+) -> Result<(Vec<f64>, RoundOutcome)> {
+    let outcome = clock.finish();
+    let per_client: Vec<(Vec<&SegmentParams>, usize)> = updates
+        .iter()
+        .filter(|(slot, _, _)| outcome.is_survivor(*slot))
+        .map(|(_, segs, n)| (segs.iter().collect(), *n))
+        .collect();
+    if !per_client.is_empty() {
+        for seg in fedavg_multi(&per_client)? {
+            global.set(seg);
+        }
+    }
+    let losses = slot_losses
+        .into_iter()
+        .filter(|(slot, _)| outcome.is_survivor(*slot))
+        .flat_map(|(_, l)| l)
+        .collect();
+    Ok((losses, outcome))
 }
 
 /// Pop a segments payload of exactly `names.len()` entries, validating the
@@ -75,23 +110,24 @@ impl<'a> BaselineEngine<'a> {
         backend: &'a dyn Backend,
         fed: FedConfig,
         method: Method,
-        net: NetworkModel,
+        fleet: Fleet,
         train: &'a SynthDataset,
         eval: Option<&'a SynthDataset>,
     ) -> Self {
         assert_ne!(method, Method::SfPrompt, "use the SFPrompt engine for Method::SfPrompt");
         let mut rng = Rng::new(fed.seed);
         let labels = train.labels();
-        let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
+        let parts =
+            partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(seeds::PARTITION_FORK));
         let clients = parts
             .into_iter()
             .enumerate()
-            .map(|(id, indices)| Client::new(id, indices, rng.fork(100 + id as u64)))
+            .map(|(id, indices)| Client::new(id, indices, rng.fork(seeds::client_fork(id))))
             .collect();
-        let global = init_params(backend.manifest(), fed.seed ^ 0xA5A5);
+        let global = init_params(backend.manifest(), seeds::param_init(fed.seed));
         BaselineEngine {
             backend,
-            net,
+            fleet,
             fed,
             method,
             global,
@@ -128,11 +164,15 @@ impl<'a> BaselineEngine<'a> {
             &counts, round, &mut self.rng,
         );
         let mut comm = ByteMeter::default();
-        let mut clock = LinkClock::new(self.net, selected.len());
-        let mut losses = Vec::new();
-        let mut updates: Vec<(Vec<SegmentParams>, usize)> = Vec::new();
+        let mut clock = self.fleet.begin_round(&selected);
+        let mut slot_losses: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut updates: Vec<(usize, Vec<SegmentParams>, usize)> = Vec::new();
 
         for (slot, &cid) in selected.iter().enumerate() {
+            if !clock.online(slot) {
+                continue; // offline at round start: no traffic, no compute
+            }
+            let mut losses = Vec::new();
             let (mut s_end, mut c_end) = channel_pair();
 
             // --- Downlink: the full model, over the wire. ---
@@ -144,7 +184,7 @@ impl<'a> BaselineEngine<'a> {
             let n = s_end
                 .send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             comm.record(MsgKind::FullModel, Direction::Downlink, n);
-            clock.charge(slot, n);
+            clock.charge_transfer(slot, n);
             let (frame, _) = c_end.recv()?;
             let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
             let mut tail = segs.pop().expect("tail");
@@ -182,21 +222,25 @@ impl<'a> BaselineEngine<'a> {
             c_end.send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             let (frame, n) = s_end.recv()?;
             comm.record(MsgKind::FullModel, Direction::Uplink, n);
-            clock.charge(slot, n);
+            clock.charge_transfer(slot, n);
+            clock.charge_compute(
+                slot,
+                crate::flops::fl_client_round_flops(&cfg, n_k, self.fed.local_epochs),
+            );
+            clock.mark_done(slot);
             let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
             let tail = segs.pop().expect("tail");
             let body = segs.pop().expect("body");
             let head = segs.pop().expect("head");
 
-            updates.push((vec![head, body, tail], n_k));
+            updates.push((slot, vec![head, body, tail], n_k));
+            slot_losses.push((slot, losses));
         }
 
-        let per_client: Vec<(Vec<&SegmentParams>, usize)> =
-            updates.iter().map(|(segs, n)| (segs.iter().collect(), *n)).collect();
-        let mut agg = fedavg_multi(&per_client)?;
-        self.global.set(agg.remove(0)); // head
-        self.global.set(agg.remove(0)); // body
-        self.global.set(agg.remove(0)); // tail
+        // --- Deadline resolution + FedAvg over survivors. ---
+        let (losses, outcome) =
+            resolve_and_aggregate(&mut self.global, &clock, updates, slot_losses)?;
+        self.fleet.advance(outcome.latency_s);
 
         Ok(RoundRecord {
             round,
@@ -205,7 +249,8 @@ impl<'a> BaselineEngine<'a> {
             eval_accuracy: self.eval_maybe(round)?,
             comm,
             wall_s: wall0.elapsed().as_secs_f64(),
-            sim_latency_s: clock.round_latency_s(),
+            sim_latency_s: outcome.latency_s,
+            clients: outcome.events,
         })
     }
 
@@ -228,11 +273,15 @@ impl<'a> BaselineEngine<'a> {
             &counts, round, &mut self.rng,
         );
         let mut comm = ByteMeter::default();
-        let mut clock = LinkClock::new(self.net, selected.len());
-        let mut losses = Vec::new();
-        let mut updates: Vec<(Vec<SegmentParams>, usize)> = Vec::new();
+        let mut clock = self.fleet.begin_round(&selected);
+        let mut slot_losses: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut updates: Vec<(usize, Vec<SegmentParams>, usize)> = Vec::new();
 
         for (slot, &cid) in selected.iter().enumerate() {
+            if !clock.online(slot) {
+                continue; // offline at round start: no traffic, no compute
+            }
+            let mut losses = Vec::new();
             let (mut s_end, mut c_end) = channel_pair();
 
             // SFL distributes the client model (head+tail) each round.
@@ -245,7 +294,7 @@ impl<'a> BaselineEngine<'a> {
                 WireFormat::F32,
             )?;
             comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-            clock.charge(slot, n);
+            clock.charge_transfer(slot, n);
             let (frame, _) = c_end.recv()?;
             let mut segs = take_segments(frame.payload, &["head", "tail"])?;
             let mut tail = segs.pop().expect("tail");
@@ -275,7 +324,7 @@ impl<'a> BaselineEngine<'a> {
                     )?;
                     let (frame, n) = s_end.recv()?;
                     comm.record(MsgKind::SmashedData, Direction::Uplink, n);
-                    clock.charge(slot, n);
+                    clock.charge_transfer(slot, n);
                     let server_smashed = frame.payload.into_tensor()?;
 
                     // server: body forward; ship activations downlink.
@@ -292,7 +341,7 @@ impl<'a> BaselineEngine<'a> {
                         WireFormat::F32,
                     )?;
                     comm.record(MsgKind::BodyOutput, Direction::Downlink, n);
-                    clock.charge(slot, n);
+                    clock.charge_transfer(slot, n);
                     let (frame, _) = c_end.recv()?;
                     let body_out = frame.payload.into_tensor()?;
 
@@ -318,7 +367,7 @@ impl<'a> BaselineEngine<'a> {
                         )?;
                         let (frame, n) = s_end.recv()?;
                         comm.record(MsgKind::GradBodyOut, Direction::Uplink, n);
-                        clock.charge(slot, n);
+                        clock.charge_transfer(slot, n);
                         let g_body_out = frame.payload.into_tensor()?;
 
                         // server: body backward + body update.
@@ -341,7 +390,7 @@ impl<'a> BaselineEngine<'a> {
                             WireFormat::F32,
                         )?;
                         comm.record(MsgKind::GradSmashed, Direction::Downlink, n);
-                        clock.charge(slot, n);
+                        clock.charge_transfer(slot, n);
                         let (frame, _) = c_end.recv()?;
                         let g_smashed = frame.payload.into_tensor()?;
 
@@ -363,19 +412,24 @@ impl<'a> BaselineEngine<'a> {
             c_end.send(&Frame::new(MsgKind::Upload, r32, cid as u32, payload), wire)?;
             let (frame, n) = s_end.recv()?;
             comm.record(MsgKind::Upload, Direction::Uplink, n);
-            clock.charge(slot, n);
+            clock.charge_transfer(slot, n);
+            clock.charge_compute(
+                slot,
+                crate::flops::sfl_client_round_flops(&cfg, n_k, self.fed.local_epochs, full_ft),
+            );
+            clock.mark_done(slot);
             let mut segs = take_segments(frame.payload, &["head", "tail"])?;
             let tail = segs.pop().expect("tail");
             let head = segs.pop().expect("head");
 
-            updates.push((vec![head, tail], n_k));
+            updates.push((slot, vec![head, tail], n_k));
+            slot_losses.push((slot, losses));
         }
 
-        let per_client: Vec<(Vec<&SegmentParams>, usize)> =
-            updates.iter().map(|(segs, n)| (segs.iter().collect(), *n)).collect();
-        let mut agg = fedavg_multi(&per_client)?;
-        self.global.set(agg.remove(0)); // head
-        self.global.set(agg.remove(0)); // tail
+        // --- Deadline resolution + FedAvg over survivors. ---
+        let (losses, outcome) =
+            resolve_and_aggregate(&mut self.global, &clock, updates, slot_losses)?;
+        self.fleet.advance(outcome.latency_s);
 
         Ok(RoundRecord {
             round,
@@ -384,7 +438,8 @@ impl<'a> BaselineEngine<'a> {
             eval_accuracy: self.eval_maybe(round)?,
             comm,
             wall_s: wall0.elapsed().as_secs_f64(),
-            sim_latency_s: clock.round_latency_s(),
+            sim_latency_s: outcome.latency_s,
+            clients: outcome.events,
         })
     }
 }

@@ -1,6 +1,9 @@
-//! The round-loop driver: owns the loop any method runs under, streams
-//! progress to a [`RoundObserver`], and is the single source of truth for
-//! simulated-network latency charging ([`LinkClock`], paper §3.5).
+//! The round-loop driver: owns the loop any method runs under and streams
+//! progress to a [`RoundObserver`]. Simulated time is charged through the
+//! fleet simulator's [`crate::sim::SimClock`] (paper §3.5 plus device
+//! compute, availability, and deadlines — see docs/FLEET.md); the
+//! [`LinkClock`] here is the legacy shared-rate reference the homogeneous
+//! fleet is property-tested against bit-for-bit.
 //!
 //! Drivers used to be duplicated — `main.rs`, every `experiments/*.rs`
 //! harness, and the examples each hand-wired the loop and its printing.
@@ -16,6 +19,7 @@ use anyhow::Result;
 
 use crate::comm::NetworkModel;
 use crate::metrics::{RoundRecord, RunHistory};
+use crate::sim::{ClientOutcome, DropReason};
 
 use super::run::FederatedRun;
 use super::{FedConfig, Method};
@@ -25,8 +29,10 @@ use super::{FedConfig, Method};
 /// runs at R/K and the round's latency is the **max** over per-client
 /// clocks (clients proceed in parallel, the server waits for the last).
 ///
-/// Both engines charge every transmitted frame here, so the latency math
-/// lives in exactly one place.
+/// Legacy reference: the engines now charge time through the fleet
+/// simulator's [`crate::sim::SimClock`], whose homogeneous mode must
+/// reproduce this arithmetic bit-for-bit (`tests/proptests.rs` pins the
+/// equivalence).
 pub struct LinkClock {
     net: NetworkModel,
     elapsed: Vec<f64>,
@@ -70,6 +76,14 @@ impl LinkClock {
 pub trait RoundObserver {
     fn on_run_start(&mut self, _method: Method, _fed: &FedConfig) {}
     fn on_round_start(&mut self, _round: usize) {}
+    /// A selected client finished its round work at simulated time
+    /// `finish_s` (within the round) and its update reached aggregation.
+    fn on_client_done(&mut self, _round: usize, _client: usize, _finish_s: f64) {}
+    /// A selected client's contribution was discarded: offline at round
+    /// start, or past the (possibly quorum-extended) deadline. `at_s` is
+    /// the simulated moment the fleet gave up on it.
+    fn on_client_dropped(&mut self, _round: usize, _client: usize, _at_s: f64, _reason: DropReason) {
+    }
     /// Fired after a round that produced an accuracy point (per
     /// `eval_every`, and always on the final round when an eval split is
     /// present).
@@ -114,18 +128,27 @@ impl RoundObserver for ProgressPrinter {
                 rec.eval_accuracy,
                 rec.comm.mb()
             ),
-            None => println!(
-                "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB \
-                 sim_lat={:.1}s clock={:.1}s wall={:.1}s",
-                rec.round,
-                rec.mean_split_loss,
-                rec.mean_local_loss,
-                rec.eval_accuracy,
-                rec.comm.mb(),
-                rec.sim_latency_s,
-                clock_s,
-                rec.wall_s
-            ),
+            None => {
+                let dropped = rec.dropped();
+                let drop_note = if dropped > 0 {
+                    format!(" dropped={}/{}", dropped, rec.clients.len())
+                } else {
+                    String::new()
+                };
+                println!(
+                    "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB \
+                     sim_lat={:.1}s clock={:.1}s wall={:.1}s{}",
+                    rec.round,
+                    rec.mean_split_loss,
+                    rec.mean_local_loss,
+                    rec.eval_accuracy,
+                    rec.comm.mb(),
+                    rec.sim_latency_s,
+                    clock_s,
+                    rec.wall_s,
+                    drop_note
+                )
+            }
         }
     }
 }
@@ -140,6 +163,14 @@ pub fn drive(run: &mut dyn FederatedRun, obs: &mut dyn RoundObserver) -> Result<
         obs.on_round_start(r);
         let rec = run.round(r)?;
         clock_s += rec.sim_latency_s;
+        for ev in &rec.clients {
+            match ev.outcome {
+                ClientOutcome::Done => obs.on_client_done(r, ev.client, ev.at_s),
+                ClientOutcome::Dropped(reason) => {
+                    obs.on_client_dropped(r, ev.client, ev.at_s, reason)
+                }
+            }
+        }
         if rec.eval_accuracy.is_finite() {
             obs.on_eval(r, rec.eval_accuracy);
         }

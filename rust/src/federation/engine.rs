@@ -13,9 +13,18 @@
 //! manifest estimates, and uplink payloads honour `FedConfig::wire`
 //! (f32/f16/int8). Each selected client runs on its own thread against the
 //! server [`Hub`], so Phase-2 split training is genuinely concurrent (the
-//! [`Backend`] is `Sync`); the simulated clock charges the shared-rate
-//! model of §3.5 through the driver's [`LinkClock`], with round latency =
-//! max over per-client link clocks.
+//! [`Backend`] is `Sync`).
+//!
+//! Simulated time is the fleet simulator's: [`Fleet::begin_round`] samples
+//! the cohort's [`SimClock`] (per-client link and device rates,
+//! availability), every frame charges transfer time and every upload
+//! charges the client's analytic compute FLOPs, and the round resolves
+//! with deadline/quorum semantics — the server aggregates only the
+//! survivors and the round's latency comes from the event queue
+//! ([`crate::sim::RoundOutcome`]). Offline clients are dropped before any
+//! traffic; deadline-dropped clients finish their protocol (and their
+//! bytes count) but their update is discarded. With no fleet configured
+//! this reduces to the §3.5 shared-rate model bit-for-bit.
 //!
 //! Constructed only via [`super::RunBuilder`]; driven only through the
 //! [`FederatedRun`] trait.
@@ -25,17 +34,17 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::backend::{Backend, PreparedSegment};
-use crate::comm::{ByteMeter, Direction, MsgKind, NetworkModel};
+use crate::comm::{ByteMeter, Direction, MsgKind};
 use crate::data::SynthDataset;
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
 use crate::runtime::HostTensor;
+use crate::sim::{Fleet, RoundOutcome, SimClock};
 use crate::transport::{Frame, Hub, Payload, WireFormat};
-use crate::util::rng::Rng;
+use crate::util::rng::{seeds, Rng};
 
 use super::client::{client_split_round, Client, ClientRoundOutcome};
-use super::driver::LinkClock;
 use super::run::FederatedRun;
 use super::server::Server;
 use super::{FedConfig, Method};
@@ -43,7 +52,7 @@ use super::{FedConfig, Method};
 pub(crate) struct SfPromptEngine<'a> {
     backend: &'a dyn Backend,
     fed: FedConfig,
-    net: NetworkModel,
+    fleet: Fleet,
     global: ParamSet,
     clients: Vec<Client>,
     rng: Rng,
@@ -62,26 +71,27 @@ impl<'a> SfPromptEngine<'a> {
     pub(crate) fn new(
         backend: &'a dyn Backend,
         fed: FedConfig,
-        net: NetworkModel,
+        fleet: Fleet,
         train: &'a SynthDataset,
         eval: Option<&'a SynthDataset>,
     ) -> Result<Self> {
         let mut rng = Rng::new(fed.seed);
         let labels = train.labels();
-        let parts = partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(1));
+        let parts =
+            partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(seeds::PARTITION_FORK));
         let clients = parts
             .into_iter()
             .enumerate()
-            .map(|(id, indices)| Client::new(id, indices, rng.fork(100 + id as u64)))
+            .map(|(id, indices)| Client::new(id, indices, rng.fork(seeds::client_fork(id))))
             .collect();
         let manifest = backend.manifest();
-        let global = init_params(manifest, fed.seed ^ 0xA5A5);
+        let global = init_params(manifest, seeds::param_init(fed.seed));
         let head_bytes = manifest.cost.message_bytes["head_params"] as u64;
         let head_prep = backend.prepare_segment(global.get("head")?)?;
         let body_prep = backend.prepare_segment(global.get("body")?)?;
         Ok(SfPromptEngine {
             backend,
-            net,
+            fleet,
             fed,
             global,
             clients,
@@ -108,32 +118,43 @@ impl<'a> SfPromptEngine<'a> {
             &counts, round, &mut self.rng,
         );
         let k = selected.len();
+        let n_ks: Vec<usize> = selected.iter().map(|&cid| self.clients[cid].num_samples()).collect();
 
         let mut comm = ByteMeter::default();
-        let mut clock = LinkClock::new(self.net, k);
+        let mut clock = self.fleet.begin_round(&selected);
         let (hub, endpoints) = Hub::new(k);
 
-        // --- Round start: distribute the aggregated (W_t, p). ---
+        // --- Round start: distribute the aggregated (W_t, p) to every
+        // reachable client (offline slots get nothing, not even bytes). ---
         let dist = Payload::Segments(vec![
             self.global.get("tail")?.clone(),
             self.global.get("prompt")?.clone(),
         ]);
         for (slot, &cid) in selected.iter().enumerate() {
+            if !clock.online(slot) {
+                continue;
+            }
             let frame =
                 Frame::new(MsgKind::ModelDistribution, round as u32, cid as u32, dist.clone());
             let n = hub.send_to(slot, &frame, WireFormat::F32)?;
             comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-            clock.charge(slot, n);
+            clock.charge_transfer(slot, n);
         }
 
-        // Threads own the selected clients for the round; park stand-ins.
-        let taken: Vec<Client> = selected
+        // Threads own the online selected clients; park stand-ins.
+        let mut endpoints: Vec<Option<_>> = endpoints.into_iter().map(Some).collect();
+        let taken: Vec<(usize, Client, _)> = selected
             .iter()
-            .map(|&cid| {
-                std::mem::replace(&mut self.clients[cid], Client::new(cid, Vec::new(), Rng::new(0)))
+            .enumerate()
+            .filter(|&(slot, _)| clock.online(slot))
+            .map(|(slot, &cid)| {
+                let client = std::mem::replace(
+                    &mut self.clients[cid],
+                    Client::new(cid, Vec::new(), Rng::new(0)),
+                );
+                (slot, client, endpoints[slot].take().expect("endpoint taken once"))
             })
             .collect();
-        let n_ks: Vec<usize> = taken.iter().map(|c| c.num_samples()).collect();
 
         let fed = self.fed;
         let backend = self.backend;
@@ -144,8 +165,8 @@ impl<'a> SfPromptEngine<'a> {
         let selected_ref = &selected;
 
         let (agg_result, joined) = std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(k);
-            for (client, mut link) in taken.into_iter().zip(endpoints) {
+            let mut handles = Vec::with_capacity(taken.len());
+            for (slot, client, mut link) in taken {
                 handles.push(scope.spawn(move || {
                     let mut client = client;
                     let cid = client.id as u32;
@@ -173,36 +194,33 @@ impl<'a> SfPromptEngine<'a> {
                             Frame::new(MsgKind::Abort, round as u32, cid, Payload::Empty);
                         let _ = link.send(&abort, WireFormat::F32);
                     }
-                    (client, out)
+                    (slot, client, out)
                 }));
             }
 
-            // --- Server: route Phase-2 traffic, FedAvg, broadcast. ---
+            // --- Server: route Phase-2 traffic, resolve the deadline,
+            // FedAvg the survivors, broadcast. ---
             let agg_result = serve_round(
                 backend, body_prep, &hub, selected_ref, round as u32,
-                &n_ks, &mut comm, &mut clock,
+                &n_ks, &fed, &mut comm, &mut clock,
             );
             // Dropping the hub unblocks any client still waiting on a recv
             // after a server-side error.
             drop(hub);
-            let joined: Vec<(Client, Result<ClientRoundOutcome>)> = handles
+            let joined: Vec<(usize, Client, Result<ClientRoundOutcome>)> = handles
                 .into_iter()
                 .map(|h| h.join().expect("client thread panicked"))
                 .collect();
             (agg_result, joined)
         });
 
-        // Restore clients to the fleet and gather per-client losses.
-        let mut local_losses = Vec::new();
-        let mut split_losses = Vec::new();
+        // Restore clients to the fleet and collect per-slot outcomes.
+        let mut results: Vec<(usize, ClientRoundOutcome)> = Vec::new();
         let mut client_err: Option<anyhow::Error> = None;
-        for (slot, (client, out)) in joined.into_iter().enumerate() {
+        for (slot, client, out) in joined {
             self.clients[selected[slot]] = client;
             match out {
-                Ok(o) => {
-                    local_losses.extend(o.local_losses);
-                    split_losses.extend(o.split_losses);
-                }
+                Ok(o) => results.push((slot, o)),
                 Err(e) if client_err.is_none() => {
                     client_err =
                         Some(e.context(format!("client {} in round {round}", selected[slot])));
@@ -210,8 +228,8 @@ impl<'a> SfPromptEngine<'a> {
                 Err(_) => {}
             }
         }
-        let (tail, prompt) = match (agg_result, client_err) {
-            (Ok(pair), None) => pair,
+        let (agg, outcome) = match (agg_result, client_err) {
+            (Ok(v), None) => v,
             (Ok(_), Some(e)) => return Err(e),
             (Err(server_err), Some(client_e)) => {
                 // A deliberate client Abort makes the client error the root
@@ -225,8 +243,21 @@ impl<'a> SfPromptEngine<'a> {
             }
             (Err(server_err), None) => return Err(server_err),
         };
-        self.global.set(tail);
-        self.global.set(prompt);
+        // Only survivors report into the round's loss means — the server
+        // never saw a dropped client's numbers.
+        let mut local_losses = Vec::new();
+        let mut split_losses = Vec::new();
+        for (slot, o) in results {
+            if outcome.is_survivor(slot) {
+                local_losses.extend(o.local_losses);
+                split_losses.extend(o.split_losses);
+            }
+        }
+        if let Some((tail, prompt)) = agg {
+            self.global.set(tail);
+            self.global.set(prompt);
+        }
+        self.fleet.advance(outcome.latency_s);
 
         let eval_accuracy = match self.eval {
             Some(ds) if self.fed.should_eval(round) => {
@@ -242,8 +273,10 @@ impl<'a> SfPromptEngine<'a> {
             eval_accuracy,
             comm,
             wall_s: wall0.elapsed().as_secs_f64(),
-            // Simulated round latency: parallel clients → max link clock.
-            sim_latency_s: clock.round_latency_s(),
+            // Simulated round latency from the event queue: max finisher,
+            // or the effective deadline when stragglers were cut off.
+            sim_latency_s: outcome.latency_s,
+            clients: outcome.events,
         })
     }
 }
@@ -292,9 +325,14 @@ impl FederatedRun for SfPromptEngine<'_> {
 }
 
 /// Server half of one round: route split-training frames from the hub
-/// until every selected client has uploaded, then FedAvg and broadcast.
-/// Records every encoded frame length into `comm` and advances each
-/// client's simulated link clock.
+/// until every online client has uploaded, resolve the deadline policy,
+/// FedAvg the survivors, and broadcast. Records every encoded frame
+/// length into `comm`; charges each client's transfer bytes and — at
+/// upload time, when its batch count is known — its analytic compute
+/// FLOPs into the round's [`SimClock`].
+///
+/// Returns the aggregate (None when every selected client was offline)
+/// and the resolved [`RoundOutcome`].
 #[allow(clippy::too_many_arguments)]
 fn serve_round(
     backend: &dyn Backend,
@@ -303,27 +341,31 @@ fn serve_round(
     selected: &[usize],
     round: u32,
     n_ks: &[usize],
+    fed: &FedConfig,
     comm: &mut ByteMeter,
-    clock: &mut LinkClock,
-) -> Result<(SegmentParams, SegmentParams)> {
+    clock: &mut SimClock,
+) -> Result<(Option<(SegmentParams, SegmentParams)>, RoundOutcome)> {
     let slot_of = |cid: u32| {
         selected
             .iter()
             .position(|&c| c as u32 == cid)
             .ok_or_else(|| anyhow!("frame from unknown client {cid}"))
     };
+    let cfg = &backend.manifest().config;
     let k = selected.len();
     let mut smashed_cache: Vec<Option<HostTensor>> = vec![None; k];
     let mut uploads: Vec<Option<(SegmentParams, SegmentParams)>> = vec![None; k];
-    let mut pending = k;
+    let mut smashed_batches = vec![0usize; k];
+    let mut pending = (0..k).filter(|&slot| clock.online(slot)).count();
 
     while pending > 0 {
         let (frame, n) = hub.recv_any()?;
         let slot = slot_of(frame.client)?;
         comm.record(frame.kind, Direction::Uplink, n);
-        clock.charge(slot, n);
+        clock.charge_transfer(slot, n);
         match frame.kind {
             MsgKind::SmashedData => {
+                smashed_batches[slot] += 1;
                 let smashed = frame.payload.into_tensor()?;
                 let body_out = Server::body_forward(backend, body_prep, &smashed)?;
                 smashed_cache[slot] = Some(smashed);
@@ -331,7 +373,7 @@ fn serve_round(
                     Frame::new(MsgKind::BodyOutput, round, frame.client, Payload::Tensor(body_out));
                 let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
                 comm.record(MsgKind::BodyOutput, Direction::Downlink, nb);
-                clock.charge(slot, nb);
+                clock.charge_transfer(slot, nb);
             }
             MsgKind::GradBodyOut => {
                 let g_body_out = frame.payload.into_tensor()?;
@@ -345,7 +387,7 @@ fn serve_round(
                 );
                 let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
                 comm.record(MsgKind::GradSmashed, Direction::Downlink, nb);
-                clock.charge(slot, nb);
+                clock.charge_transfer(slot, nb);
             }
             MsgKind::Upload => {
                 let mut segs = frame.payload.into_segments()?;
@@ -359,6 +401,19 @@ fn serve_round(
                 let prompt = segs.pop().expect("prompt");
                 let tail = segs.pop().expect("tail");
                 uploads[slot] = Some((tail, prompt));
+                // The client's whole round of device work, charged now
+                // that its Phase-2 batch count is known.
+                clock.charge_compute(
+                    slot,
+                    crate::flops::sfprompt_client_round_flops(
+                        cfg,
+                        n_ks[slot],
+                        smashed_batches[slot],
+                        fed.local_epochs,
+                        fed.local_loss_update,
+                    ),
+                );
+                clock.mark_done(slot);
                 pending -= 1;
             }
             MsgKind::Abort => {
@@ -368,22 +423,39 @@ fn serve_round(
         }
     }
 
-    // --- Phase 3: FedAvg + broadcast over the wire. ---
-    let updates: Vec<(SegmentParams, SegmentParams, usize)> = uploads
-        .into_iter()
-        .zip(n_ks)
-        .map(|(u, &n_k)| {
-            let (tail, prompt) = u.expect("every pending upload was collected");
-            (tail, prompt, n_k)
-        })
-        .collect();
-    let (tail, prompt) = Server::aggregate(&updates)?;
-    let bc = Payload::Segments(vec![tail.clone(), prompt.clone()]);
-    for (slot, &cid) in selected.iter().enumerate() {
-        let frame = Frame::new(MsgKind::AggregateBroadcast, round, cid as u32, bc.clone());
-        let n = hub.send_to(slot, &frame, WireFormat::F32)?;
-        comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, n);
-        clock.charge(slot, n);
-    }
-    Ok((tail, prompt))
+    // Deadline resolution happens on upload marks, before the broadcast:
+    // survivors are the clients whose upload beat the (possibly
+    // quorum-extended) deadline.
+    let survivors = clock.finish().survivors;
+
+    // --- Phase 3: FedAvg over survivors + broadcast over the wire.
+    // Dropped-but-online clients still receive the broadcast (their
+    // threads are waiting on it, exactly like a real device that missed
+    // the cut); only their upload is discarded.
+    let agg = if survivors.is_empty() {
+        None
+    } else {
+        let updates: Vec<(SegmentParams, SegmentParams, usize)> = survivors
+            .iter()
+            .map(|&slot| {
+                let (tail, prompt) = uploads[slot].take().expect("survivor uploaded");
+                (tail, prompt, n_ks[slot])
+            })
+            .collect();
+        let (tail, prompt) = Server::aggregate(&updates)?;
+        let bc = Payload::Segments(vec![tail.clone(), prompt.clone()]);
+        for (slot, &cid) in selected.iter().enumerate() {
+            if !clock.online(slot) {
+                continue;
+            }
+            let frame = Frame::new(MsgKind::AggregateBroadcast, round, cid as u32, bc.clone());
+            let n = hub.send_to(slot, &frame, WireFormat::F32)?;
+            comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, n);
+            clock.charge_transfer(slot, n);
+        }
+        Some((tail, prompt))
+    };
+    // The final resolve includes broadcast transfer time in the latency.
+    let outcome = clock.finish();
+    Ok((agg, outcome))
 }

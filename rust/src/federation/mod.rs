@@ -6,8 +6,12 @@
 //!   and the [`FederatedRun`] trait every engine implements, so drivers
 //!   are method-agnostic.
 //! * [`driver`] — the one round loop ([`drive`]) with its
-//!   [`RoundObserver`] event stream, plus the shared-rate [`LinkClock`]
-//!   (§3.5) both engines charge latency through.
+//!   [`RoundObserver`] event stream (run/round/eval plus per-client
+//!   `on_client_done` / `on_client_dropped` fleet events). Simulated time
+//!   is charged through the fleet simulator ([`crate::sim`]): the
+//!   homogeneous default reproduces the shared-rate [`LinkClock`] (§3.5)
+//!   bit-for-bit, while a `FleetSpec` adds device heterogeneity,
+//!   availability traces, and deadline-based rounds.
 //! * [`spec`] — [`RunSpec`] (JSON in) / [`RunReport`] (JSON out) for
 //!   headless `train --spec run.json --json` and data-driven experiments.
 //!

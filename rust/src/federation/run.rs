@@ -27,6 +27,7 @@ use crate::comm::{ByteMeter, NetworkModel};
 use crate::data::SynthDataset;
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::partition::Partition;
+use crate::sim::{Fleet, FleetSpec};
 use crate::transport::WireFormat;
 
 use super::baselines::BaselineEngine;
@@ -71,18 +72,22 @@ pub trait FederatedRun {
 ///
 /// Defaults come from [`FedConfig::default`] (the paper's §4.1 setting)
 /// and the shared-rate [`NetworkModel`] of §3.5 with `K` =
-/// `clients_per_round` clients sharing the link.
-#[derive(Debug, Clone, Copy)]
+/// `clients_per_round` clients sharing the link. A [`FleetSpec`] replaces
+/// that homogeneous model with heterogeneous devices/links, availability
+/// traces, and deadline-based rounds (docs/FLEET.md); without one, time
+/// accounting is bit-for-bit the legacy shared-rate clock.
+#[derive(Debug, Clone)]
 pub struct RunBuilder {
     method: Method,
     fed: FedConfig,
     net: Option<NetworkModel>,
     net_rate: Option<f64>,
+    fleet: Option<FleetSpec>,
 }
 
 impl RunBuilder {
     pub fn new(method: Method) -> RunBuilder {
-        RunBuilder { method, fed: FedConfig::default(), net: None, net_rate: None }
+        RunBuilder { method, fed: FedConfig::default(), net: None, net_rate: None, fleet: None }
     }
 
     /// Replace the whole federated config at once.
@@ -166,6 +171,33 @@ impl RunBuilder {
         self
     }
 
+    /// Simulate a heterogeneous fleet (devices, links, availability,
+    /// deadlines) instead of the homogeneous shared-rate model. When set,
+    /// `net`/`net_rate` are ignored — the fleet's link model wins.
+    pub fn fleet(mut self, spec: FleetSpec) -> RunBuilder {
+        self.fleet = Some(spec);
+        self
+    }
+
+    /// Deadline-based rounds: aggregate whichever clients finish within
+    /// `deadline_s` (doubling it until `min_quorum` make the cut). Applies
+    /// to the configured fleet, or — when none is set — to the
+    /// compute-free `ideal` fleet carrying this builder's resolved link
+    /// rate as its shared pool, so `net`/`net_rate` overrides survive.
+    pub fn deadline(mut self, deadline_s: f64, min_quorum: usize) -> RunBuilder {
+        let spec = self.fleet.take().unwrap_or_else(|| FleetSpec {
+            shared_pool_bytes_per_s: Some(self.resolved_net().rate_bytes_per_s),
+            ..FleetSpec::named("ideal").expect("ideal preset")
+        });
+        self.fleet = Some(FleetSpec { deadline_s: Some(deadline_s), min_quorum, ..spec });
+        self
+    }
+
+    /// The fleet spec this builder will simulate, if any.
+    pub fn fleet_spec(&self) -> Option<&FleetSpec> {
+        self.fleet.as_ref()
+    }
+
     /// The config as currently accumulated (for inspection/reporting).
     pub fn fed_config(&self) -> &FedConfig {
         &self.fed
@@ -224,7 +256,28 @@ impl RunBuilder {
         if net.sharing_clients == 0 {
             bail!("network sharing_clients must be at least 1");
         }
+        if let Some(fleet) = &self.fleet {
+            fleet.validate()?;
+            if fleet.min_quorum > f.clients_per_round {
+                bail!(
+                    "fleet min_quorum {} exceeds clients_per_round {} (the quorum can never \
+                     be met)",
+                    fleet.min_quorum,
+                    f.clients_per_round
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// The fleet [`RunBuilder::build`] will charge simulated time through:
+    /// the configured heterogeneous spec, or the legacy homogeneous
+    /// shared-rate fleet.
+    pub fn resolved_fleet(&self) -> Fleet {
+        match &self.fleet {
+            Some(spec) => Fleet::from_spec(spec.clone(), self.fed.num_clients, self.fed.seed),
+            None => Fleet::homogeneous(self.resolved_net()),
+        }
     }
 
     /// Stages a method's rounds execute — checked at `build` so a config
@@ -278,13 +331,13 @@ impl RunBuilder {
                 missing.join(", ")
             );
         }
-        let net = self.resolved_net();
+        let fleet = self.resolved_fleet();
         Ok(match self.method {
             Method::SfPrompt => {
-                Box::new(SfPromptEngine::new(backend, self.fed, net, train, eval)?)
+                Box::new(SfPromptEngine::new(backend, self.fed, fleet, train, eval)?)
             }
             method => {
-                Box::new(BaselineEngine::new(backend, self.fed, method, net, train, eval))
+                Box::new(BaselineEngine::new(backend, self.fed, method, fleet, train, eval))
             }
         })
     }
@@ -355,6 +408,33 @@ mod tests {
         assert_eq!(net.sharing_clients, 8);
         assert!((net.rate_bytes_per_s - 2e6).abs() < 1e-9);
         b.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_validation_runs_through_builder() {
+        let mut bad = FleetSpec::named("uniform").unwrap();
+        bad.dropout_p = 2.0;
+        assert!(base().fleet(bad).validate().is_err());
+
+        // Quorum can never exceed the per-round cohort.
+        let mut spec = FleetSpec::named("two-tier").unwrap();
+        spec.deadline_s = Some(10.0);
+        spec.min_quorum = 6;
+        assert!(base().clients(50, 5).fleet(spec.clone()).validate().is_err());
+        spec.min_quorum = 5;
+        assert!(base().clients(50, 5).fleet(spec).validate().is_ok());
+    }
+
+    #[test]
+    fn deadline_defaults_to_ideal_fleet() {
+        let b = base().deadline(12.5, 2);
+        let spec = b.fleet_spec().expect("deadline implies a fleet");
+        assert_eq!(spec.deadline_s, Some(12.5));
+        assert_eq!(spec.min_quorum, 2);
+        b.validate().unwrap();
+        assert!(b.resolved_fleet().is_heterogeneous());
+        // Without a fleet the resolved mode is the legacy homogeneous one.
+        assert!(!base().resolved_fleet().is_heterogeneous());
     }
 
     #[test]

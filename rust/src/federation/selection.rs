@@ -5,6 +5,12 @@
 //! selected, cf. FedAvg) or deterministic round-robin (full coverage, used
 //! by several cross-silo systems). All three are provided and
 //! property-tested; the engines default to `Uniform`.
+//!
+//! Randomized strategies draw from the engine's root RNG (seeded with
+//! `FedConfig::seed` — see the seed-domain map in `util::rng::seeds`), so
+//! selection is independent of fleet availability draws: a client can be
+//! selected and then found offline, which is exactly the dropped-round
+//! accounting the fleet simulator observes.
 
 use crate::util::rng::Rng;
 

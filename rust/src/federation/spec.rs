@@ -20,8 +20,10 @@ use crate::data::{synth, SynthDataset};
 use crate::metrics::RunHistory;
 use crate::partition::Partition;
 use crate::runtime::ModelConfig;
+use crate::sim::FleetSpec;
 use crate::transport::WireFormat;
 use crate::util::json::Json;
+use crate::util::rng::seeds;
 
 use super::run::RunBuilder;
 use super::{FedConfig, Method, Selection};
@@ -43,6 +45,10 @@ pub struct RunSpec {
     pub eval_samples: usize,
     /// Optional §3.5 shared-link rate override, bytes/second.
     pub net_rate_bytes_per_s: Option<f64>,
+    /// Optional heterogeneous fleet (devices, links, availability,
+    /// deadline rounds — docs/FLEET.md). Absent ⇒ the homogeneous
+    /// shared-rate fleet with pre-fleet time accounting, bit-for-bit.
+    pub fleet: Option<FleetSpec>,
 }
 
 impl RunSpec {
@@ -59,6 +65,7 @@ impl RunSpec {
             samples_per_client: 32,
             eval_samples: 160,
             net_rate_bytes_per_s: None,
+            fleet: None,
         }
     }
 
@@ -73,6 +80,9 @@ impl RunSpec {
         let mut b = RunBuilder::new(self.method).fed(self.fed);
         if let Some(rate) = self.net_rate_bytes_per_s {
             b = b.net_rate(rate);
+        }
+        if let Some(fleet) = &self.fleet {
+            b = b.fleet(fleet.clone());
         }
         b
     }
@@ -97,13 +107,14 @@ impl RunSpec {
         // The model config's class count wins (e.g. small=10, small_c100=100).
         profile.num_classes = cfg.num_classes;
         let n_train = self.fed.num_clients * self.samples_per_client;
+        // Seed domains per the documented map in `util::rng::seeds`.
         let train = SynthDataset::generate(
             profile, cfg.image_size, cfg.channels, n_train,
-            /*seed_protos=*/ 1000 + self.fed.seed, /*seed_samples=*/ 2000 + self.fed.seed,
+            seeds::data_protos(self.fed.seed), seeds::data_train(self.fed.seed),
         );
         let eval = SynthDataset::generate(
             profile, cfg.image_size, cfg.channels, self.eval_samples,
-            1000 + self.fed.seed, 9000 + self.fed.seed,
+            seeds::data_protos(self.fed.seed), seeds::data_eval(self.fed.seed),
         );
         Ok((train, eval))
     }
@@ -117,11 +128,11 @@ impl RunSpec {
     }
 
     pub fn from_json(v: &Json) -> Result<RunSpec> {
-        const KNOWN: [&str; 20] = [
+        const KNOWN: [&str; 21] = [
             "config", "dataset", "method", "backend", "rounds", "num_clients",
             "clients_per_round", "local_epochs", "lr", "retain_fraction", "local_loss_update",
             "partition", "seed", "eval_limit", "eval_every", "selection", "wire",
-            "samples_per_client", "eval_samples", "net_rate_bytes_per_s",
+            "samples_per_client", "eval_samples", "net_rate_bytes_per_s", "fleet",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("run spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -222,6 +233,10 @@ impl RunSpec {
                 anyhow!("spec key \"net_rate_bytes_per_s\" must be a number or null")
             })?),
         };
+        spec.fleet = match obj.get("fleet") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(FleetSpec::from_json(j)?),
+        };
         Ok(spec)
     }
 
@@ -261,6 +276,9 @@ impl RunSpec {
         o.insert("eval_samples".to_string(), Json::Num(self.eval_samples as f64));
         if let Some(rate) = self.net_rate_bytes_per_s {
             o.insert("net_rate_bytes_per_s".to_string(), Json::Num(rate));
+        }
+        if let Some(fleet) = &self.fleet {
+            o.insert("fleet".to_string(), fleet.to_json());
         }
         Json::Obj(o)
     }
@@ -332,6 +350,8 @@ impl RunReport {
                 o.insert("messages".to_string(), Json::Num(r.comm.messages as f64));
                 o.insert("sim_latency_s".to_string(), num_or_null(r.sim_latency_s));
                 o.insert("wall_s".to_string(), num_or_null(r.wall_s));
+                o.insert("survivors".to_string(), Json::Num(r.survivors() as f64));
+                o.insert("dropped".to_string(), Json::Num(r.dropped() as f64));
                 Json::Obj(o)
             })
             .collect();
@@ -361,6 +381,7 @@ impl RunReport {
             num_or_null(h.rounds.iter().map(|r| r.sim_latency_s).sum()),
         );
         o.insert("wall_s".to_string(), num_or_null(h.rounds.iter().map(|r| r.wall_s).sum()));
+        o.insert("dropped_clients".to_string(), Json::Num(h.dropped_clients() as f64));
         Json::Obj(o)
     }
 }
@@ -441,6 +462,38 @@ mod tests {
     }
 
     #[test]
+    fn run_spec_fleet_roundtrips_and_rejects_garbage() {
+        // Name form parses to the preset; serialization is the full object.
+        let spec = RunSpec::parse(r#"{"fleet": "two-tier"}"#).unwrap();
+        assert_eq!(spec.fleet, Some(FleetSpec::named("two-tier").unwrap()));
+        let text = spec.to_json().to_string();
+        assert!(text.contains("two_tier"), "{text}");
+        let back = RunSpec::parse(&text).unwrap();
+        assert_eq!(back.fleet, spec.fleet);
+        assert_eq!(back.to_json(), spec.to_json());
+
+        // Object form with deadline knobs.
+        let spec = RunSpec::parse(
+            r#"{"fleet": {"devices": {"pareto": {"scale": 1e10, "shape": 1.5}},
+                          "dropout_p": 0.1, "deadline_s": 30.0, "min_quorum": 2}}"#,
+        )
+        .unwrap();
+        let fleet = spec.fleet.as_ref().unwrap();
+        assert_eq!(fleet.deadline_s, Some(30.0));
+        assert_eq!(fleet.min_quorum, 2);
+        spec.builder().validate().unwrap();
+        assert_eq!(RunSpec::parse(&spec.to_json().to_string()).unwrap().fleet, spec.fleet);
+
+        assert!(RunSpec::parse(r#"{"fleet": "quantum"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"fleet": {"dropout": 0.5}}"#).is_err());
+        assert!(RunSpec::parse(r#"{"fleet": 7}"#).is_err());
+        // No fleet key: no fleet in the spec or its JSON.
+        let plain = RunSpec::parse("{}").unwrap();
+        assert!(plain.fleet.is_none());
+        assert!(!plain.to_json().to_string().contains("fleet"));
+    }
+
+    #[test]
     fn run_spec_partition_forms() {
         let iid = RunSpec::parse(r#"{"partition": "iid"}"#).unwrap();
         assert_eq!(iid.fed.partition, Partition::Iid);
@@ -466,6 +519,7 @@ mod tests {
                 comm,
                 wall_s: 0.25,
                 sim_latency_s: 0.5,
+                clients: Vec::new(),
             });
         }
         let spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);

@@ -56,6 +56,67 @@ pub fn train_step_flops(fwd: u64) -> u64 {
     3 * fwd
 }
 
+/// Padded batches covering `n` samples (the kernels always execute full
+/// batches; the tail batch is padded, so its cost is a whole batch).
+pub fn padded_batches(n: usize, batch: usize) -> u64 {
+    (n.div_ceil(batch.max(1))) as u64
+}
+
+/// Per-client FLOPs of one SFPrompt round, for the fleet simulator's
+/// compute charge. Documented approximation (fwd + ~2x bwd = 3x fwd, full
+/// padded batches):
+///
+/// * Phase 1a (if `local_loss_update`): `local_epochs` train epochs over
+///   the full local set through the W_h→W_t shortcut — head+tail steps;
+/// * Phase 1b: one EL2N scoring pass — head+tail forward only;
+/// * Phase 2: one split-training pass over the pruned set
+///   (`phase2_batches` measured batches) — head fwd, tail step, prompt
+///   backward, together ≈ one head+tail train step.
+pub fn sfprompt_client_round_flops(
+    cfg: &ModelConfig,
+    n_local: usize,
+    phase2_batches: usize,
+    local_epochs: usize,
+    local_loss_update: bool,
+) -> u64 {
+    let per_batch_fwd = segment_flops(cfg, true).client() * cfg.batch as u64;
+    let local_batches = padded_batches(n_local, cfg.batch);
+    let phase1a = if local_loss_update {
+        local_epochs as u64 * local_batches * train_step_flops(per_batch_fwd)
+    } else {
+        0
+    };
+    let phase1b = local_batches * per_batch_fwd;
+    let phase2 = phase2_batches as u64 * train_step_flops(per_batch_fwd);
+    phase1a + phase1b + phase2
+}
+
+/// Per-client FLOPs of one FL (full fine-tune) round: the entire model
+/// trains locally for every epoch.
+pub fn fl_client_round_flops(cfg: &ModelConfig, n_local: usize, local_epochs: usize) -> u64 {
+    let per_batch_fwd = segment_flops(cfg, false).total() * cfg.batch as u64;
+    local_epochs as u64 * padded_batches(n_local, cfg.batch) * train_step_flops(per_batch_fwd)
+}
+
+/// Per-client FLOPs of one SFL round. `full_finetune` trains head + tail
+/// on-device (SFL+FF); otherwise only the classifier tail trains
+/// (SFL+Linear) and the head runs forward-only.
+pub fn sfl_client_round_flops(
+    cfg: &ModelConfig,
+    n_local: usize,
+    local_epochs: usize,
+    full_finetune: bool,
+) -> u64 {
+    let f = segment_flops(cfg, false);
+    let b = cfg.batch as u64;
+    let per_batch = if full_finetune {
+        train_step_flops((f.head + f.tail) * b)
+    } else {
+        f.head * b + train_step_flops(f.tail * b)
+    };
+    local_epochs as u64 * padded_batches(n_local, cfg.batch) * per_batch
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,6 +157,29 @@ mod tests {
     fn prompt_increases_flops() {
         let c = cfg();
         assert!(segment_flops(&c, true).total() > segment_flops(&c, false).total());
+    }
+
+    #[test]
+    fn client_round_flops_track_phases_and_methods() {
+        let c = cfg();
+        assert_eq!(padded_batches(0, 16), 0);
+        assert_eq!(padded_batches(1, 16), 1);
+        assert_eq!(padded_batches(17, 16), 2);
+
+        // Pruning (fewer phase-2 batches) and skipping Phase 1a both cut cost.
+        let full = sfprompt_client_round_flops(&c, 64, 4, 2, true);
+        let pruned = sfprompt_client_round_flops(&c, 64, 2, 2, true);
+        let no_local = sfprompt_client_round_flops(&c, 64, 4, 2, false);
+        assert!(pruned < full);
+        assert!(no_local < full);
+
+        // FL trains the whole model: strictly more client compute than
+        // SFPrompt's head+tail work at the same budget.
+        assert!(fl_client_round_flops(&c, 64, 2) > full);
+        // SFL+FF trains head+tail; SFL+Linear only the tail.
+        assert!(
+            sfl_client_round_flops(&c, 64, 2, true) > sfl_client_round_flops(&c, 64, 2, false)
+        );
     }
 
     #[test]

@@ -85,6 +85,23 @@
 //! In the SFPrompt engine each selected client runs its round on its own
 //! thread against the server's [`transport::Hub`], so Phase-2 split
 //! training is genuinely concurrent (every [`backend::Backend`] is `Sync`).
+//!
+//! ## Fleet simulation ([`sim`])
+//!
+//! The paper's setting — resource-limited, heterogeneous edge devices —
+//! is simulable end to end: a [`sim::FleetSpec`] (the `"fleet"` key of a
+//! `RunSpec`, or `train --fleet <preset|file>`) gives every client a
+//! device rate (FLOP/s) and link rate drawn from named distributions
+//! (`uniform`, `pareto`, `two_tier`), seeded dropout/straggler/diurnal
+//! availability, and optional **deadline-based rounds** (`--deadline-s`,
+//! `--quorum`): the server aggregates whichever clients finish in time,
+//! renormalizing FedAvg over the survivors, and the driver streams
+//! per-client `on_client_done` / `on_client_dropped` events. Each round's
+//! per-client time = analytic compute FLOPs over the device rate +
+//! measured transport bytes over the link, resolved on a discrete-event
+//! [`sim::SimClock`]. Without a fleet, time accounting reduces to the
+//! §3.5 shared-rate model **bit-for-bit** (property-tested). See
+//! docs/FLEET.md; `experiment --id fleet` sweeps device skew × dropout.
 
 pub mod analysis;
 pub mod backend;
@@ -97,6 +114,7 @@ pub mod metrics;
 pub mod model;
 pub mod partition;
 pub mod runtime;
+pub mod sim;
 pub mod transport;
 pub mod util;
 

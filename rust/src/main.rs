@@ -16,6 +16,7 @@ use sfprompt::federation::{
     drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec,
 };
 use sfprompt::partition::Partition;
+use sfprompt::sim::FleetSpec;
 use sfprompt::transport::WireFormat;
 use sfprompt::util::cli::Args;
 use sfprompt::util::csv::CsvWriter;
@@ -32,7 +33,8 @@ USAGE:
                       [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
                       [--noniid] [--alpha F] [--seed N] [--samples-per-client N]
                       [--no-local-loss] [--wire f32|f16|int8] [--net-rate BYTES_PER_S]
-  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|all>
+                      [--fleet <name|FILE.json>] [--deadline-s F] [--quorum N]
+  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
 
@@ -44,6 +46,12 @@ kernel engine with an in-memory manifest — no artifacts, no Python.
 `train --spec FILE.json` reads a RunSpec (CLI flags are ignored); `--json`
 suppresses progress output and prints a RunReport JSON document with
 per-message-kind measured bytes. See docs/API.md.
+
+`--fleet` simulates a heterogeneous fleet — a preset (uniform | two-tier |
+pareto | dropout | diurnal | ideal) or a FleetSpec JSON file — and
+`--deadline-s`/`--quorum` enable deadline-based rounds (the server
+aggregates whoever finishes in time, doubling the deadline until the
+quorum is met). See docs/FLEET.md.
 ";
 
 fn main() {
@@ -134,6 +142,37 @@ fn spec_from_args(args: &Args) -> Result<RunSpec> {
                 .map_err(|_| anyhow::anyhow!("--net-rate must be a number, got {rate:?}"))?,
         );
     }
+    if let Some(fleet) = args.get("fleet") {
+        spec.fleet = Some(FleetSpec::resolve(fleet)?);
+    }
+    if let Some(deadline) = args.get("deadline-s") {
+        let deadline_s: f64 = deadline
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--deadline-s must be a number, got {deadline:?}"))?;
+        // A deadline without a fleet runs the compute-free `ideal` preset,
+        // honouring a `--net-rate` override as its shared pool.
+        let fleet = match spec.fleet.take() {
+            Some(f) => f,
+            None => {
+                let mut f = FleetSpec::named("ideal")?;
+                if let Some(rate) = spec.net_rate_bytes_per_s {
+                    f.shared_pool_bytes_per_s = Some(rate);
+                }
+                f
+            }
+        };
+        spec.fleet = Some(FleetSpec { deadline_s: Some(deadline_s), ..fleet });
+    }
+    if let Some(quorum) = args.get("quorum") {
+        let quorum: usize = quorum
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--quorum must be a positive integer, got {quorum:?}"))?;
+        let fleet = spec
+            .fleet
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("--quorum needs --fleet or --deadline-s"))?;
+        spec.fleet = Some(FleetSpec { min_quorum: quorum, ..fleet });
+    }
     Ok(spec)
 }
 
@@ -222,12 +261,17 @@ fn train(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!(
-        "done: final acc {:.4}, total comm {:.2} MB ({:.2} MB/round), messages {}",
+        "done: final acc {:.4}, total comm {:.2} MB ({:.2} MB/round), messages {}, \
+         sim wall {:.1}s",
         hist.final_accuracy(),
         hist.total_comm.mb(),
         hist.comm_mb_per_round(),
-        hist.total_comm.messages
+        hist.total_comm.messages,
+        hist.sim_wall_s()
     );
+    if hist.dropped_clients() > 0 {
+        println!("  fleet: {} client-round contributions dropped", hist.dropped_clients());
+    }
     for (kind, bytes) in &hist.total_comm.by_kind {
         println!("  {kind:<22} {:.3} MB", *bytes as f64 / 1e6);
     }

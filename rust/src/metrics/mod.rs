@@ -9,6 +9,7 @@ use crate::comm::ByteMeter;
 use crate::data::{batch_indices, make_batch, SynthDataset};
 use crate::model::ParamSet;
 use crate::runtime::HostTensor;
+use crate::sim::ClientEvent;
 
 /// Metrics for one global round of any method.
 #[derive(Debug, Clone)]
@@ -20,6 +21,21 @@ pub struct RoundRecord {
     pub comm: ByteMeter,
     pub wall_s: f64,
     pub sim_latency_s: f64,
+    /// Per-selected-client fleet events (done / dropped with simulated
+    /// times), chronological. The driver replays these to the observer.
+    pub clients: Vec<ClientEvent>,
+}
+
+impl RoundRecord {
+    /// Selected clients whose update the server aggregated this round.
+    pub fn survivors(&self) -> usize {
+        self.clients.iter().filter(|e| !e.is_dropped()).count()
+    }
+
+    /// Selected clients dropped this round (offline or past deadline).
+    pub fn dropped(&self) -> usize {
+        self.clients.iter().filter(|e| e.is_dropped()).count()
+    }
 }
 
 /// Accumulated experiment output.
@@ -49,6 +65,16 @@ impl RunHistory {
         } else {
             self.total_comm.mb() / self.rounds.len() as f64
         }
+    }
+
+    /// Total simulated wall-clock: the sum of per-round §3.5 latencies.
+    pub fn sim_wall_s(&self) -> f64 {
+        self.rounds.iter().map(|r| r.sim_latency_s).sum()
+    }
+
+    /// Selected-client drops (offline or past deadline) across all rounds.
+    pub fn dropped_clients(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped()).sum()
     }
 }
 
@@ -147,6 +173,7 @@ mod tests {
                 comm,
                 wall_s: 0.0,
                 sim_latency_s: 0.0,
+                clients: Vec::new(),
             });
         }
         assert_eq!(h.total_comm.total(), 300);

@@ -1,0 +1,382 @@
+//! The per-round discrete-event clock: every selected client owns a slot
+//! whose simulated time accumulates transfer charges (measured transport
+//! bytes over its link rate) and compute charges (analytic FLOPs over its
+//! device rate), and the round resolves through an event queue ordered by
+//! finish time, with optional deadline/quorum semantics.
+//!
+//! **Legacy parity** is load-bearing: with every slot online, an infinite
+//! device rate, a shared link rate, and no deadline policy, `SimClock`
+//! reproduces the old `LinkClock` arithmetic bit-for-bit — transfer time is
+//! the identical `bytes / rate.max(1e-300)` expression, compute charges add
+//! exactly `+0.0`, and round latency is the same `fold(0.0, f64::max)` over
+//! per-slot elapsed time. A property test in `tests/proptests.rs` pins
+//! this.
+
+use super::fleet::DropReason;
+
+/// Deadline-based round semantics: the server aggregates whichever clients
+/// have finished (uploaded) by `deadline_s`. If fewer than `min_quorum`
+/// made it, the deadline is extended (doubled) until the quorum is met —
+/// the retry rule — so a round can be late but never empty while any
+/// client is online.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlinePolicy {
+    pub deadline_s: f64,
+    pub min_quorum: usize,
+}
+
+/// What happened to one selected client this round, on the simulated
+/// clock. `at_s` is the client's finish time for `Done`, the moment the
+/// fleet gave up on it for `Dropped` (0.0 when it was offline at round
+/// start).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClientEvent {
+    /// Global client id (not the round slot).
+    pub client: usize,
+    pub at_s: f64,
+    pub outcome: ClientOutcome,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ClientOutcome {
+    Done,
+    Dropped(DropReason),
+}
+
+impl ClientEvent {
+    pub fn is_dropped(&self) -> bool {
+        matches!(self.outcome, ClientOutcome::Dropped(_))
+    }
+}
+
+/// The resolved round: chronological per-client events, which slots
+/// survive into aggregation, and the round's simulated latency.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Per-client events in event-queue (chronological) order.
+    pub events: Vec<ClientEvent>,
+    /// Slot indices whose uploads the server aggregates, ascending.
+    pub survivors: Vec<usize>,
+    /// Simulated round latency (the driver's §3.5 clock advances by this).
+    pub latency_s: f64,
+    /// How many times the quorum retry rule doubled the deadline.
+    pub deadline_extensions: usize,
+}
+
+impl RoundOutcome {
+    pub fn is_survivor(&self, slot: usize) -> bool {
+        self.survivors.binary_search(&slot).is_ok()
+    }
+
+    pub fn dropped(&self) -> usize {
+        self.events.iter().filter(|e| e.is_dropped()).count()
+    }
+}
+
+/// One selected client's simulation parameters for the round, sampled by
+/// [`super::Fleet::begin_round`].
+#[derive(Debug, Clone, Copy)]
+pub struct SlotProfile {
+    /// Global client id.
+    pub client: usize,
+    /// Effective link rate, bytes/second (sharing already applied).
+    pub link_bytes_per_s: f64,
+    /// Device compute throughput, FLOP/s. `f64::INFINITY` models the
+    /// legacy compute-free client.
+    pub device_flops_per_s: f64,
+    /// Straggler multiplier on compute time (1.0 = nominal).
+    pub slowdown: f64,
+    /// Whether the client is reachable this round at all.
+    pub online: bool,
+}
+
+struct SlotState {
+    prof: SlotProfile,
+    elapsed_s: f64,
+    /// Elapsed time snapshot at upload completion (deadline decisions are
+    /// made on upload times; post-upload broadcast traffic only stretches
+    /// the round tail).
+    done_mark_s: Option<f64>,
+}
+
+/// Per-round simulated clock over the selected cohort. Engines charge
+/// every transmitted frame and every unit of client compute here; the
+/// round resolves with [`SimClock::finish`].
+pub struct SimClock {
+    slots: Vec<SlotState>,
+    policy: Option<DeadlinePolicy>,
+}
+
+impl SimClock {
+    pub fn new(profiles: Vec<SlotProfile>, policy: Option<DeadlinePolicy>) -> SimClock {
+        let slots = profiles
+            .into_iter()
+            .map(|prof| SlotState { prof, elapsed_s: 0.0, done_mark_s: None })
+            .collect();
+        SimClock { slots, policy }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn online(&self, slot: usize) -> bool {
+        self.slots[slot].prof.online
+    }
+
+    /// Global client id occupying `slot`.
+    pub fn client(&self, slot: usize) -> usize {
+        self.slots[slot].prof.client
+    }
+
+    /// Accumulated simulated time for one slot.
+    pub fn slot_s(&self, slot: usize) -> f64 {
+        self.slots[slot].elapsed_s
+    }
+
+    /// Charge `bytes` of transfer time to `slot`'s link; returns the time
+    /// added. Offline slots never transmit, so the charge is zero.
+    pub fn charge_transfer(&mut self, slot: usize, bytes: usize) -> f64 {
+        let s = &mut self.slots[slot];
+        if !s.prof.online {
+            return 0.0;
+        }
+        // Identical expression to NetworkModel::transfer_time_s — the
+        // legacy-parity contract depends on it.
+        let dt = bytes as f64 / s.prof.link_bytes_per_s.max(1e-300);
+        s.elapsed_s += dt;
+        dt
+    }
+
+    /// Charge `flops` of compute to `slot`'s device (straggler slowdown
+    /// applied); returns the time added. An infinite device rate yields
+    /// exactly `+0.0` (the legacy compute-free client).
+    pub fn charge_compute(&mut self, slot: usize, flops: u64) -> f64 {
+        let s = &mut self.slots[slot];
+        if !s.prof.online {
+            return 0.0;
+        }
+        let dt = (flops as f64 / s.prof.device_flops_per_s.max(1e-300)) * s.prof.slowdown;
+        s.elapsed_s += dt;
+        dt
+    }
+
+    /// Snapshot `slot`'s elapsed time as its upload-completion mark — the
+    /// time the deadline policy judges it by.
+    pub fn mark_done(&mut self, slot: usize) {
+        let s = &mut self.slots[slot];
+        s.done_mark_s = Some(s.elapsed_s);
+    }
+
+    /// Resolve the round: order finishes chronologically, apply the
+    /// deadline/quorum policy to upload marks, and compute the round
+    /// latency. Pure — charging after `finish` is a caller bug.
+    pub fn finish(&self) -> RoundOutcome {
+        let mut events = Vec::with_capacity(self.slots.len());
+        // Offline clients dropped at round start, before any online event.
+        for s in &self.slots {
+            if !s.prof.online {
+                events.push(ClientEvent {
+                    client: s.prof.client,
+                    at_s: 0.0,
+                    outcome: ClientOutcome::Dropped(DropReason::Offline),
+                });
+            }
+        }
+
+        // Event queue: online finishes ascending by upload mark (ties
+        // break by slot index so resolution is deterministic).
+        let mut finishes: Vec<(f64, usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.prof.online)
+            .map(|(i, s)| (s.done_mark_s.unwrap_or(s.elapsed_s), i))
+            .collect();
+        finishes.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+        let (effective_deadline, extensions) = match self.policy {
+            None => (f64::INFINITY, 0),
+            Some(p) => {
+                let quorum = p.min_quorum.min(finishes.len());
+                let mut eff = p.deadline_s;
+                let mut ext = 0usize;
+                while finishes.iter().filter(|(t, _)| *t <= eff).count() < quorum {
+                    eff *= 2.0;
+                    ext += 1;
+                    if ext >= 64 {
+                        eff = f64::INFINITY; // pathological spec; admit all
+                        break;
+                    }
+                }
+                (eff, ext)
+            }
+        };
+
+        let mut survivors = Vec::with_capacity(finishes.len());
+        let mut late = Vec::new();
+        for &(t, slot) in &finishes {
+            if t <= effective_deadline {
+                survivors.push(slot);
+                events.push(ClientEvent {
+                    client: self.slots[slot].prof.client,
+                    at_s: t,
+                    outcome: ClientOutcome::Done,
+                });
+            } else {
+                late.push(slot);
+            }
+        }
+        // Deadline drops all fire at the moment the server gives up.
+        for &slot in &late {
+            events.push(ClientEvent {
+                client: self.slots[slot].prof.client,
+                at_s: effective_deadline,
+                outcome: ClientOutcome::Dropped(DropReason::Deadline),
+            });
+        }
+        survivors.sort_unstable();
+
+        // Round latency. No deadline drops: the slowest online slot's full
+        // elapsed time (exactly the legacy max-over-clocks). With drops:
+        // the server waited out the deadline, plus any survivor whose
+        // post-upload traffic stretched past it.
+        let survivor_max = survivors
+            .iter()
+            .map(|&i| self.slots[i].elapsed_s)
+            .fold(0.0, f64::max);
+        let latency_s = if late.is_empty() {
+            finishes
+                .iter()
+                .map(|&(_, i)| self.slots[i].elapsed_s)
+                .fold(0.0, f64::max)
+        } else {
+            effective_deadline.max(survivor_max)
+        };
+
+        RoundOutcome { events, survivors, latency_s, deadline_extensions: extensions }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn online(client: usize, link: f64, dev: f64) -> SlotProfile {
+        SlotProfile {
+            client,
+            link_bytes_per_s: link,
+            device_flops_per_s: dev,
+            slowdown: 1.0,
+            online: true,
+        }
+    }
+
+    #[test]
+    fn legacy_shape_max_over_slots() {
+        let mut c = SimClock::new(
+            vec![online(0, 250.0, f64::INFINITY), online(1, 250.0, f64::INFINITY)],
+            None,
+        );
+        assert!((c.charge_transfer(0, 500) - 2.0).abs() < 1e-12);
+        assert_eq!(c.charge_compute(0, u64::MAX), 0.0, "infinite device is free");
+        c.charge_transfer(1, 1000); // 4 s
+        c.mark_done(0);
+        c.mark_done(1);
+        let out = c.finish();
+        assert_eq!(out.survivors, vec![0, 1]);
+        assert_eq!(out.dropped(), 0);
+        assert!((out.latency_s - 4.0).abs() < 1e-12);
+        // Chronological: slot 0 (2 s) before slot 1 (4 s).
+        assert_eq!(out.events[0].client, 0);
+        assert_eq!(out.events[1].client, 1);
+    }
+
+    #[test]
+    fn compute_scales_with_device_and_slowdown() {
+        let mut slow = online(0, 1e6, 1e9);
+        slow.slowdown = 4.0;
+        let mut c = SimClock::new(vec![slow, online(1, 1e6, 2e9)], None);
+        let d0 = c.charge_compute(0, 2_000_000_000); // 2 s * 4
+        let d1 = c.charge_compute(1, 2_000_000_000); // 1 s
+        assert!((d0 - 8.0).abs() < 1e-9);
+        assert!((d1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_drops_late_clients_and_latency_is_deadline() {
+        let mut c = SimClock::new(
+            vec![
+                online(7, 100.0, f64::INFINITY),
+                online(8, 10.0, f64::INFINITY),
+            ],
+            Some(DeadlinePolicy { deadline_s: 5.0, min_quorum: 1 }),
+        );
+        c.charge_transfer(0, 100); // 1 s
+        c.charge_transfer(1, 100); // 10 s
+        c.mark_done(0);
+        c.mark_done(1);
+        let out = c.finish();
+        assert_eq!(out.survivors, vec![0]);
+        assert_eq!(out.dropped(), 1);
+        assert!((out.latency_s - 5.0).abs() < 1e-12);
+        let drop = out.events.iter().find(|e| e.is_dropped()).unwrap();
+        assert_eq!(drop.client, 8);
+        assert_eq!(drop.outcome, ClientOutcome::Dropped(DropReason::Deadline));
+        assert!((drop.at_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quorum_retry_extends_deadline() {
+        let mut c = SimClock::new(
+            vec![
+                online(0, 100.0, f64::INFINITY), // 1 s
+                online(1, 25.0, f64::INFINITY),  // 4 s
+                online(2, 10.0, f64::INFINITY),  // 10 s
+            ],
+            Some(DeadlinePolicy { deadline_s: 0.5, min_quorum: 2 }),
+        );
+        for slot in 0..3 {
+            c.charge_transfer(slot, 100);
+            c.mark_done(slot);
+        }
+        let out = c.finish();
+        // 0.5 -> 1 -> 2 -> 4: first deadline admitting two finishers.
+        assert_eq!(out.deadline_extensions, 3);
+        assert_eq!(out.survivors, vec![0, 1]);
+        assert_eq!(out.dropped(), 1);
+        assert!((out.latency_s - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offline_slots_charge_nothing_and_drop_at_zero() {
+        let mut off = online(3, 100.0, 1e9);
+        off.online = false;
+        let mut c = SimClock::new(vec![off, online(4, 100.0, f64::INFINITY)], None);
+        assert_eq!(c.charge_transfer(0, 1000), 0.0);
+        assert_eq!(c.charge_compute(0, 1 << 40), 0.0);
+        c.charge_transfer(1, 200);
+        c.mark_done(1);
+        let out = c.finish();
+        assert_eq!(out.survivors, vec![1]);
+        assert_eq!(out.dropped(), 1);
+        let ev = &out.events[0];
+        assert_eq!(ev.outcome, ClientOutcome::Dropped(DropReason::Offline));
+        assert_eq!(ev.at_s, 0.0);
+        assert_eq!(ev.client, 3);
+    }
+
+    #[test]
+    fn quorum_caps_at_online_count() {
+        // Quorum larger than the online cohort must not loop forever.
+        let mut c = SimClock::new(
+            vec![online(0, 100.0, f64::INFINITY)],
+            Some(DeadlinePolicy { deadline_s: 1.0, min_quorum: 5 }),
+        );
+        c.charge_transfer(0, 50);
+        c.mark_done(0);
+        let out = c.finish();
+        assert_eq!(out.survivors, vec![0]);
+        assert_eq!(out.deadline_extensions, 0);
+    }
+}

@@ -1,0 +1,708 @@
+//! Fleet models: who the clients *are* — device compute rates, link
+//! rates, and availability traces — and how a round's [`SimClock`] is
+//! sampled from them.
+//!
+//! A [`FleetSpec`] is serializable (the `"fleet"` key of a `RunSpec`, see
+//! docs/FLEET.md) and names three axes:
+//!
+//! * **devices** — per-client compute throughput in FLOP/s, drawn once per
+//!   run from a named [`RateDist`] (`uniform`, `pareto`, `two_tier`);
+//! * **links** — per-client link rate in bytes/s from the same
+//!   distribution machinery, plus an optional shared bottleneck pool that
+//!   caps the cohort (subsuming the legacy shared-rate `NetworkModel`);
+//! * **availability** — seeded per-round dropout, straggler slowdown, and
+//!   a diurnal on-fraction curve over the cumulative simulated clock.
+//!
+//! A [`Fleet`] is the runtime object the engines own: `begin_round`
+//! samples the selected cohort's [`SimClock`]; `advance` moves the
+//! fleet's simulated wall-clock forward by the round latency (the diurnal
+//! model reads it). `Fleet::homogeneous` is the legacy mode — always-on,
+//! compute-free clients on the paper's §3.5 shared-rate link — and
+//! reproduces the old `LinkClock` numbers bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::comm::NetworkModel;
+use crate::util::json::Json;
+use crate::util::rng::{seeds, Rng};
+
+use super::clock::{DeadlinePolicy, SimClock, SlotProfile};
+
+/// Why a client's round contribution was discarded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// Unreachable at round start (dropout / diurnal trough).
+    Offline,
+    /// Missed the (possibly quorum-extended) round deadline.
+    Deadline,
+}
+
+impl DropReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            DropReason::Offline => "offline",
+            DropReason::Deadline => "deadline",
+        }
+    }
+}
+
+/// Named distribution a per-client rate (FLOP/s or bytes/s) is drawn from.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateDist {
+    /// Uniform in [min, max].
+    Uniform { min: f64, max: f64 },
+    /// Heavy-tailed slowness: rate = `scale / s` with `s ~ Pareto(shape)`,
+    /// `s >= 1` — most devices run near `scale`, a long tail runs far
+    /// slower (the straggler regime the paper's setting implies).
+    Pareto { scale: f64, shape: f64 },
+    /// A `slow_fraction` of clients at `slow`, the rest at `fast`.
+    TwoTier { fast: f64, slow: f64, slow_fraction: f64 },
+}
+
+impl RateDist {
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            RateDist::Uniform { min, max } => min + (max - min) * rng.uniform(),
+            RateDist::Pareto { scale, shape } => {
+                let s = (1.0 - rng.uniform()).max(f64::MIN_POSITIVE).powf(-1.0 / shape);
+                scale / s
+            }
+            RateDist::TwoTier { fast, slow, slow_fraction } => {
+                if rng.uniform() < slow_fraction {
+                    slow
+                } else {
+                    fast
+                }
+            }
+        }
+    }
+
+    pub fn validate(&self, what: &str) -> Result<()> {
+        let pos = |v: f64, name: &str| -> Result<()> {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{what} {name} must be positive and finite, got {v}");
+            }
+            Ok(())
+        };
+        match *self {
+            RateDist::Uniform { min, max } => {
+                pos(min, "uniform.min")?;
+                pos(max, "uniform.max")?;
+                if min > max {
+                    bail!("{what} uniform.min {min} exceeds uniform.max {max}");
+                }
+            }
+            RateDist::Pareto { scale, shape } => {
+                pos(scale, "pareto.scale")?;
+                pos(shape, "pareto.shape")?;
+            }
+            RateDist::TwoTier { fast, slow, slow_fraction } => {
+                pos(fast, "two_tier.fast")?;
+                pos(slow, "two_tier.slow")?;
+                if !(0.0..=1.0).contains(&slow_fraction) {
+                    bail!("{what} two_tier.slow_fraction must be in [0, 1], got {slow_fraction}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut inner = BTreeMap::new();
+        let name = match *self {
+            RateDist::Uniform { min, max } => {
+                inner.insert("min".to_string(), Json::Num(min));
+                inner.insert("max".to_string(), Json::Num(max));
+                "uniform"
+            }
+            RateDist::Pareto { scale, shape } => {
+                inner.insert("scale".to_string(), Json::Num(scale));
+                inner.insert("shape".to_string(), Json::Num(shape));
+                "pareto"
+            }
+            RateDist::TwoTier { fast, slow, slow_fraction } => {
+                inner.insert("fast".to_string(), Json::Num(fast));
+                inner.insert("slow".to_string(), Json::Num(slow));
+                inner.insert("slow_fraction".to_string(), Json::Num(slow_fraction));
+                "two_tier"
+            }
+        };
+        let mut o = BTreeMap::new();
+        o.insert(name.to_string(), Json::Obj(inner));
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RateDist> {
+        let obj = v
+            .as_obj()
+            .filter(|o| o.len() == 1)
+            .ok_or_else(|| anyhow!("rate distribution must be a one-key object like \
+                 {{\"uniform\": {{\"min\": ..., \"max\": ...}}}}"))?;
+        let (name, body) = obj.iter().next().expect("one key");
+        let params = body
+            .as_obj()
+            .ok_or_else(|| anyhow!("rate distribution {name:?} parameters must be an object"))?;
+        let num = |key: &str| -> Result<f64> {
+            params
+                .get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("rate distribution {name:?} needs numeric key {key:?}"))
+        };
+        let known = |keys: &[&str]| -> Result<()> {
+            for k in params.keys() {
+                if !keys.contains(&k.as_str()) {
+                    bail!("unknown {name:?} key {k:?} (known: {})", keys.join(" "));
+                }
+            }
+            Ok(())
+        };
+        Ok(match name.as_str() {
+            "uniform" => {
+                known(&["min", "max"])?;
+                RateDist::Uniform { min: num("min")?, max: num("max")? }
+            }
+            "pareto" => {
+                known(&["scale", "shape"])?;
+                RateDist::Pareto { scale: num("scale")?, shape: num("shape")? }
+            }
+            "two_tier" => {
+                known(&["fast", "slow", "slow_fraction"])?;
+                RateDist::TwoTier {
+                    fast: num("fast")?,
+                    slow: num("slow")?,
+                    slow_fraction: num("slow_fraction")?,
+                }
+            }
+            other => bail!("unknown rate distribution {other:?} (known: uniform pareto two_tier)"),
+        })
+    }
+}
+
+/// Diurnal availability: the on-fraction follows a raised cosine over the
+/// cumulative simulated clock, from 1.0 at `t = 0` down to
+/// `min_availability` half a period later.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Diurnal {
+    pub period_s: f64,
+    pub min_availability: f64,
+}
+
+impl Diurnal {
+    pub fn availability(&self, t_s: f64) -> f64 {
+        let phase = 0.5 * (1.0 + (2.0 * std::f64::consts::PI * t_s / self.period_s).cos());
+        self.min_availability + (1.0 - self.min_availability) * phase
+    }
+}
+
+/// Serializable description of a heterogeneous fleet (the `"fleet"` key of
+/// a `RunSpec`; see docs/FLEET.md for the JSON format and the preset
+/// catalog).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    /// Per-client device throughput, FLOP/s.
+    pub devices: RateDist,
+    /// Per-client link rate, bytes/s.
+    pub links: RateDist,
+    /// Optional shared bottleneck: the cohort splits this pool evenly and
+    /// each client runs at `min(own_rate, pool / cohort_size)`.
+    pub shared_pool_bytes_per_s: Option<f64>,
+    /// Per-round, per-client probability of being offline at round start.
+    pub dropout_p: f64,
+    /// Per-round, per-client probability of running `straggler_slowdown`x
+    /// slower than its nominal device rate.
+    pub straggler_p: f64,
+    pub straggler_slowdown: f64,
+    /// Availability modulation over simulated time (multiplies 1−dropout).
+    pub diurnal: Option<Diurnal>,
+    /// Round deadline (simulated seconds). None = the server waits for
+    /// every online client (legacy semantics).
+    pub deadline_s: Option<f64>,
+    /// Quorum for the deadline retry rule: fewer finishers than this and
+    /// the deadline doubles until the quorum is met.
+    pub min_quorum: usize,
+}
+
+impl FleetSpec {
+    /// The preset catalog (docs/FLEET.md). `ideal` is compute-free on the
+    /// legacy shared pool — the fleet to use when only deadline semantics
+    /// are wanted.
+    pub const NAMES: [&'static str; 6] =
+        ["uniform", "two-tier", "pareto", "dropout", "diurnal", "ideal"];
+
+    fn base(devices: RateDist) -> FleetSpec {
+        FleetSpec {
+            devices,
+            links: RateDist::Uniform { min: 5e6, max: 25e6 },
+            shared_pool_bytes_per_s: None,
+            dropout_p: 0.0,
+            straggler_p: 0.0,
+            straggler_slowdown: 4.0,
+            diurnal: None,
+            deadline_s: None,
+            min_quorum: 1,
+        }
+    }
+
+    pub fn named(name: &str) -> Result<FleetSpec> {
+        Ok(match name {
+            // Mid-range edge devices, an order of magnitude of spread.
+            "uniform" => FleetSpec::base(RateDist::Uniform { min: 5e9, max: 5e10 }),
+            // Capable majority + a slow tier 25x behind it.
+            "two-tier" => FleetSpec::base(RateDist::TwoTier {
+                fast: 5e10,
+                slow: 2e9,
+                slow_fraction: 0.25,
+            }),
+            // Heavy-tailed slowness: the straggler regime.
+            "pareto" => FleetSpec::base(RateDist::Pareto { scale: 5e10, shape: 1.2 }),
+            "dropout" => FleetSpec {
+                dropout_p: 0.2,
+                ..FleetSpec::base(RateDist::Uniform { min: 5e9, max: 5e10 })
+            },
+            "diurnal" => FleetSpec {
+                diurnal: Some(Diurnal { period_s: 3600.0, min_availability: 0.3 }),
+                ..FleetSpec::base(RateDist::Uniform { min: 5e9, max: 5e10 })
+            },
+            // Compute-free clients on the legacy 100 Mbit/s shared pool:
+            // deadline semantics without device heterogeneity.
+            "ideal" => FleetSpec {
+                links: RateDist::Uniform { min: 1e18, max: 1e18 },
+                shared_pool_bytes_per_s: Some(12.5e6),
+                ..FleetSpec::base(RateDist::Uniform { min: 1e18, max: 1e18 })
+            },
+            other => bail!(
+                "unknown fleet preset {other:?} (known: {})",
+                FleetSpec::NAMES.join(" ")
+            ),
+        })
+    }
+
+    /// Resolve a CLI `--fleet` argument: a preset name, else a JSON file.
+    pub fn resolve(name_or_path: &str) -> Result<FleetSpec> {
+        if FleetSpec::NAMES.contains(&name_or_path) {
+            return FleetSpec::named(name_or_path);
+        }
+        let text = std::fs::read_to_string(name_or_path).map_err(|e| {
+            anyhow!(
+                "--fleet {name_or_path:?} is neither a preset (known: {}) nor a readable \
+                 file: {e}",
+                FleetSpec::NAMES.join(" ")
+            )
+        })?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("parsing fleet file: {e}"))?;
+        FleetSpec::from_json(&v)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.devices.validate("fleet devices")?;
+        self.links.validate("fleet links")?;
+        if let Some(pool) = self.shared_pool_bytes_per_s {
+            if !pool.is_finite() || pool <= 0.0 {
+                bail!("fleet shared_pool_bytes_per_s must be positive and finite, got {pool}");
+            }
+        }
+        for (p, name) in [(self.dropout_p, "dropout_p"), (self.straggler_p, "straggler_p")] {
+            if !(0.0..=1.0).contains(&p) {
+                bail!("fleet {name} must be in [0, 1], got {p}");
+            }
+        }
+        if self.dropout_p >= 1.0 {
+            bail!("fleet dropout_p 1.0 leaves no client ever online");
+        }
+        if !self.straggler_slowdown.is_finite() || self.straggler_slowdown < 1.0 {
+            bail!(
+                "fleet straggler_slowdown must be >= 1, got {}",
+                self.straggler_slowdown
+            );
+        }
+        if let Some(d) = self.diurnal {
+            if !d.period_s.is_finite() || d.period_s <= 0.0 {
+                bail!("fleet diurnal.period_s must be positive and finite, got {}", d.period_s);
+            }
+            if !(0.0..=1.0).contains(&d.min_availability) {
+                bail!(
+                    "fleet diurnal.min_availability must be in [0, 1], got {}",
+                    d.min_availability
+                );
+            }
+        }
+        if let Some(d) = self.deadline_s {
+            if !d.is_finite() || d <= 0.0 {
+                bail!("fleet deadline_s must be positive and finite, got {d}");
+            }
+        }
+        if self.min_quorum == 0 {
+            bail!("fleet min_quorum must be at least 1");
+        }
+        if self.min_quorum > 1 && self.deadline_s.is_none() {
+            bail!(
+                "fleet min_quorum {} has no effect without deadline_s (the quorum only \
+                 governs the deadline retry rule)",
+                self.min_quorum
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("devices".to_string(), self.devices.to_json());
+        o.insert("links".to_string(), self.links.to_json());
+        if let Some(pool) = self.shared_pool_bytes_per_s {
+            o.insert("shared_pool_bytes_per_s".to_string(), Json::Num(pool));
+        }
+        o.insert("dropout_p".to_string(), Json::Num(self.dropout_p));
+        o.insert("straggler_p".to_string(), Json::Num(self.straggler_p));
+        o.insert(
+            "straggler_slowdown".to_string(),
+            Json::Num(self.straggler_slowdown),
+        );
+        if let Some(d) = self.diurnal {
+            let mut di = BTreeMap::new();
+            di.insert("period_s".to_string(), Json::Num(d.period_s));
+            di.insert("min_availability".to_string(), Json::Num(d.min_availability));
+            o.insert("diurnal".to_string(), Json::Obj(di));
+        }
+        if let Some(d) = self.deadline_s {
+            o.insert("deadline_s".to_string(), Json::Num(d));
+        }
+        o.insert("min_quorum".to_string(), Json::Num(self.min_quorum as f64));
+        Json::Obj(o)
+    }
+
+    /// Parse from JSON: either a preset name string or a full object
+    /// (unknown keys rejected; every key optional, defaulting to the
+    /// `uniform` preset's values).
+    pub fn from_json(v: &Json) -> Result<FleetSpec> {
+        if let Some(name) = v.as_str() {
+            return FleetSpec::named(name);
+        }
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow!("fleet must be a preset name or an object"))?;
+        const KNOWN: [&str; 9] = [
+            "devices", "links", "shared_pool_bytes_per_s", "dropout_p", "straggler_p",
+            "straggler_slowdown", "diurnal", "deadline_s", "min_quorum",
+        ];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                bail!("unknown fleet key {key:?} (known: {})", KNOWN.join(" "));
+            }
+        }
+        let mut spec = FleetSpec::named("uniform").expect("preset");
+        if let Some(d) = obj.get("devices") {
+            spec.devices = RateDist::from_json(d)?;
+        }
+        if let Some(l) = obj.get("links") {
+            spec.links = RateDist::from_json(l)?;
+        }
+        let num = |key: &str, default: f64| -> Result<f64> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(j) => j
+                    .as_f64()
+                    .ok_or_else(|| anyhow!("fleet key {key:?} must be a number")),
+            }
+        };
+        spec.shared_pool_bytes_per_s = match obj.get("shared_pool_bytes_per_s") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(j.as_f64().ok_or_else(|| {
+                anyhow!("fleet key \"shared_pool_bytes_per_s\" must be a number or null")
+            })?),
+        };
+        spec.dropout_p = num("dropout_p", spec.dropout_p)?;
+        spec.straggler_p = num("straggler_p", spec.straggler_p)?;
+        spec.straggler_slowdown = num("straggler_slowdown", spec.straggler_slowdown)?;
+        spec.diurnal = match obj.get("diurnal") {
+            None | Some(Json::Null) => None,
+            Some(j) => {
+                let d = j
+                    .as_obj()
+                    .ok_or_else(|| anyhow!("fleet key \"diurnal\" must be an object or null"))?;
+                for key in d.keys() {
+                    if !["period_s", "min_availability"].contains(&key.as_str()) {
+                        bail!("unknown diurnal key {key:?} (known: period_s min_availability)");
+                    }
+                }
+                let get = |key: &str| -> Result<f64> {
+                    d.get(key)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("diurnal needs numeric key {key:?}"))
+                };
+                Some(Diurnal {
+                    period_s: get("period_s")?,
+                    min_availability: get("min_availability")?,
+                })
+            }
+        };
+        spec.deadline_s = match obj.get("deadline_s") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(
+                j.as_f64()
+                    .ok_or_else(|| anyhow!("fleet key \"deadline_s\" must be a number or null"))?,
+            ),
+        };
+        spec.min_quorum = match obj.get("min_quorum") {
+            None => spec.min_quorum,
+            Some(j) => j
+                .as_usize()
+                .ok_or_else(|| anyhow!("fleet key \"min_quorum\" must be a positive integer"))?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+enum FleetInner {
+    /// Legacy: always-on, compute-free clients on the §3.5 shared-rate
+    /// link — bit-for-bit the old `LinkClock` time accounting.
+    Homogeneous { net: NetworkModel },
+    Hetero(Box<HeteroFleet>),
+}
+
+struct HeteroFleet {
+    spec: FleetSpec,
+    /// Per-client-id sampled rates (fixed for the run).
+    device_flops_per_s: Vec<f64>,
+    link_bytes_per_s: Vec<f64>,
+    /// Trace stream: availability + straggler draws, per round.
+    rng: Rng,
+    /// Cumulative simulated clock (drives the diurnal curve).
+    now_s: f64,
+}
+
+/// The runtime fleet an engine owns: per-client profiles plus the seeded
+/// trace stream, advancing on the simulated clock round by round.
+pub struct Fleet {
+    inner: FleetInner,
+}
+
+impl Fleet {
+    /// The legacy homogeneous fleet (no `fleet` key in the spec).
+    pub fn homogeneous(net: NetworkModel) -> Fleet {
+        Fleet { inner: FleetInner::Homogeneous { net } }
+    }
+
+    /// Sample a heterogeneous fleet: per-client device and link rates are
+    /// drawn once from the spec's distributions on the run's documented
+    /// fleet seed domain ([`seeds::fleet`]), so identical (spec, seed)
+    /// pairs reproduce identical fleets and traces.
+    pub fn from_spec(spec: FleetSpec, num_clients: usize, seed: u64) -> Fleet {
+        let mut rng = Rng::new(seeds::fleet(seed));
+        let device_flops_per_s = (0..num_clients).map(|_| spec.devices.sample(&mut rng)).collect();
+        let link_bytes_per_s = (0..num_clients).map(|_| spec.links.sample(&mut rng)).collect();
+        Fleet {
+            inner: FleetInner::Hetero(Box::new(HeteroFleet {
+                spec,
+                device_flops_per_s,
+                link_bytes_per_s,
+                rng,
+                now_s: 0.0,
+            })),
+        }
+    }
+
+    pub fn is_heterogeneous(&self) -> bool {
+        matches!(self.inner, FleetInner::Hetero { .. })
+    }
+
+    /// Cumulative simulated time (0.0 for the legacy fleet).
+    pub fn now_s(&self) -> f64 {
+        match &self.inner {
+            FleetInner::Homogeneous { .. } => 0.0,
+            FleetInner::Hetero(h) => h.now_s,
+        }
+    }
+
+    /// Sampled device rate for one client (infinite in legacy mode).
+    pub fn device_flops_per_s(&self, client: usize) -> f64 {
+        match &self.inner {
+            FleetInner::Homogeneous { .. } => f64::INFINITY,
+            FleetInner::Hetero(h) => h.device_flops_per_s[client],
+        }
+    }
+
+    /// Build the round's clock over the selected cohort: draw availability
+    /// and straggler state per slot, fix effective link rates, and attach
+    /// the deadline policy.
+    pub fn begin_round(&mut self, selected: &[usize]) -> SimClock {
+        match &mut self.inner {
+            FleetInner::Homogeneous { net } => {
+                let profiles = selected
+                    .iter()
+                    .map(|&cid| SlotProfile {
+                        client: cid,
+                        link_bytes_per_s: net.effective_rate(),
+                        device_flops_per_s: f64::INFINITY,
+                        slowdown: 1.0,
+                        online: true,
+                    })
+                    .collect();
+                SimClock::new(profiles, None)
+            }
+            FleetInner::Hetero(h) => {
+                let h = &mut **h;
+                let k = selected.len().max(1);
+                let diurnal = h.spec.diurnal.map_or(1.0, |d| d.availability(h.now_s));
+                let p_online = (1.0 - h.spec.dropout_p) * diurnal;
+                let spec = &h.spec;
+                let rng = &mut h.rng;
+                let (links, devices) = (&h.link_bytes_per_s, &h.device_flops_per_s);
+                let profiles = selected
+                    .iter()
+                    .map(|&cid| {
+                        // Two draws per slot, always, so the trace stream
+                        // is independent of which knobs are enabled.
+                        let online = rng.uniform() < p_online;
+                        let straggles = rng.uniform() < spec.straggler_p;
+                        let mut link = links[cid];
+                        if let Some(pool) = spec.shared_pool_bytes_per_s {
+                            link = link.min(pool / k as f64);
+                        }
+                        SlotProfile {
+                            client: cid,
+                            link_bytes_per_s: link,
+                            device_flops_per_s: devices[cid],
+                            slowdown: if straggles { spec.straggler_slowdown } else { 1.0 },
+                            online,
+                        }
+                    })
+                    .collect();
+                let policy = spec
+                    .deadline_s
+                    .map(|deadline_s| DeadlinePolicy { deadline_s, min_quorum: spec.min_quorum });
+                SimClock::new(profiles, policy)
+            }
+        }
+    }
+
+    /// Advance the fleet's simulated clock by one round's latency.
+    pub fn advance(&mut self, latency_s: f64) {
+        if let FleetInner::Hetero(h) = &mut self.inner {
+            h.now_s += latency_s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate_and_roundtrip_json() {
+        for name in FleetSpec::NAMES {
+            let spec = FleetSpec::named(name).unwrap();
+            spec.validate().unwrap();
+            let back = FleetSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec, "{name}");
+        }
+        assert!(FleetSpec::named("warp").is_err());
+    }
+
+    #[test]
+    fn fleet_json_accepts_name_and_rejects_unknown_keys() {
+        let by_name = FleetSpec::from_json(&Json::Str("two-tier".into())).unwrap();
+        assert_eq!(by_name, FleetSpec::named("two-tier").unwrap());
+        assert!(FleetSpec::from_json(&Json::parse(r#"{"dropout": 0.5}"#).unwrap()).is_err());
+        assert!(FleetSpec::from_json(
+            &Json::parse(r#"{"devices": {"zipf": {"s": 1.0}}}"#).unwrap()
+        )
+        .is_err());
+        let partial =
+            FleetSpec::from_json(&Json::parse(r#"{"dropout_p": 0.3, "deadline_s": 9.5}"#).unwrap())
+                .unwrap();
+        assert!((partial.dropout_p - 0.3).abs() < 1e-12);
+        assert_eq!(partial.deadline_s, Some(9.5));
+        assert_eq!(partial.devices, FleetSpec::named("uniform").unwrap().devices);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut s = FleetSpec::named("uniform").unwrap();
+        s.dropout_p = 1.0;
+        assert!(s.validate().is_err());
+        let mut s = FleetSpec::named("uniform").unwrap();
+        s.straggler_slowdown = 0.5;
+        assert!(s.validate().is_err());
+        let mut s = FleetSpec::named("uniform").unwrap();
+        s.min_quorum = 0;
+        assert!(s.validate().is_err());
+        // A quorum only means something under a deadline.
+        let mut s = FleetSpec::named("uniform").unwrap();
+        s.min_quorum = 2;
+        assert!(s.validate().is_err());
+        s.deadline_s = Some(10.0);
+        assert!(s.validate().is_ok());
+        let mut s = FleetSpec::named("uniform").unwrap();
+        s.deadline_s = Some(-1.0);
+        assert!(s.validate().is_err());
+        let mut s = FleetSpec::named("uniform").unwrap();
+        s.devices = RateDist::Uniform { min: 10.0, max: 1.0 };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_per_seed_and_in_range() {
+        let spec = FleetSpec::named("uniform").unwrap();
+        let a = Fleet::from_spec(spec.clone(), 20, 17);
+        let b = Fleet::from_spec(spec.clone(), 20, 17);
+        let c = Fleet::from_spec(spec, 20, 18);
+        let rates = |f: &Fleet| (0..20).map(|i| f.device_flops_per_s(i)).collect::<Vec<_>>();
+        assert_eq!(rates(&a), rates(&b));
+        assert_ne!(rates(&a), rates(&c));
+        assert!(rates(&a).iter().all(|&r| (5e9..=5e10).contains(&r)));
+    }
+
+    #[test]
+    fn two_tier_sampling_hits_both_tiers() {
+        let spec = FleetSpec::named("two-tier").unwrap();
+        let fleet = Fleet::from_spec(spec, 100, 3);
+        let slow = (0..100).filter(|&i| fleet.device_flops_per_s(i) < 1e10).count();
+        assert!(slow > 5 && slow < 60, "slow tier count {slow}");
+    }
+
+    #[test]
+    fn pareto_rates_never_exceed_scale() {
+        let spec = FleetSpec::named("pareto").unwrap();
+        let fleet = Fleet::from_spec(spec, 200, 5);
+        for i in 0..200 {
+            let r = fleet.device_flops_per_s(i);
+            assert!(r > 0.0 && r <= 5e10 + 1e-6, "client {i} rate {r}");
+        }
+    }
+
+    #[test]
+    fn homogeneous_round_is_always_on_and_compute_free() {
+        let net = NetworkModel { rate_bytes_per_s: 1000.0, sharing_clients: 4 };
+        let mut fleet = Fleet::homogeneous(net);
+        let mut clock = fleet.begin_round(&[3, 9]);
+        assert!(clock.online(0) && clock.online(1));
+        assert_eq!(clock.client(1), 9);
+        assert!((clock.charge_transfer(0, 500) - 2.0).abs() < 1e-12);
+        assert_eq!(clock.charge_compute(0, u64::MAX), 0.0);
+        assert_eq!(fleet.now_s(), 0.0);
+    }
+
+    #[test]
+    fn dropout_trace_is_seeded_and_diurnal_modulates() {
+        let mut spec = FleetSpec::named("dropout").unwrap();
+        spec.dropout_p = 0.5;
+        let selected: Vec<usize> = (0..30).collect();
+        let offline = |fleet: &mut Fleet| {
+            let clock = fleet.begin_round(&selected);
+            (0..30).filter(|&s| !clock.online(s)).count()
+        };
+        let mut a = Fleet::from_spec(spec.clone(), 30, 7);
+        let mut b = Fleet::from_spec(spec.clone(), 30, 7);
+        let (na, nb) = (offline(&mut a), offline(&mut b));
+        assert_eq!(na, nb, "same seed, same trace");
+        assert!(na > 4 && na < 26, "roughly half offline, got {na}");
+
+        // Diurnal trough at half period: availability collapses to min.
+        let d = Diurnal { period_s: 100.0, min_availability: 0.2 };
+        assert!((d.availability(0.0) - 1.0).abs() < 1e-9);
+        assert!((d.availability(50.0) - 0.2).abs() < 1e-9);
+    }
+}

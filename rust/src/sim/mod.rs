@@ -1,0 +1,34 @@
+//! Fleet simulation: heterogeneous devices, stragglers, availability
+//! traces, and deadline-based rounds on a discrete-event clock.
+//!
+//! The paper's setting is resource-limited, heterogeneous edge devices;
+//! this module is what makes that simulable. It supplies the driver's
+//! **time authority**:
+//!
+//! * [`FleetSpec`] — serializable fleet description: device FLOP/s and
+//!   link rates drawn from named [`RateDist`]s (`uniform`, `pareto`,
+//!   `two_tier`), an optional shared bottleneck pool (subsuming the
+//!   legacy shared-rate `NetworkModel`), seeded dropout / straggler /
+//!   diurnal availability, and deadline + quorum round policy.
+//! * [`Fleet`] — the runtime object an engine owns: samples per-client
+//!   rates once per run, draws the per-round availability trace, and
+//!   advances the cumulative simulated clock.
+//! * [`SimClock`] — the per-round discrete-event clock: each selected
+//!   client's slot accumulates transfer time (measured transport bytes
+//!   over its link) and compute time (analytic FLOPs over its device),
+//!   then [`SimClock::finish`] resolves the event queue chronologically,
+//!   applies the [`DeadlinePolicy`], and reports survivors, drops, and
+//!   the round latency as a [`RoundOutcome`].
+//!
+//! With no `fleet` key in a run spec the engines run on
+//! [`Fleet::homogeneous`], which reproduces the pre-fleet `LinkClock`
+//! accounting bit-for-bit. See docs/FLEET.md for the model, the JSON
+//! format, and the scenario catalog.
+
+pub mod clock;
+pub mod fleet;
+
+pub use clock::{
+    ClientEvent, ClientOutcome, DeadlinePolicy, RoundOutcome, SimClock, SlotProfile,
+};
+pub use fleet::{Diurnal, DropReason, Fleet, FleetSpec, RateDist};

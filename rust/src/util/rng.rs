@@ -5,6 +5,58 @@
 //! client selection) runs on this generator so runs are reproducible from a
 //! single seed.
 
+/// The run's seed-domain map: every stochastic subsystem derives its
+/// stream from the one `RunSpec`/`FedConfig` seed through a documented,
+/// fixed derivation, so identical specs reproduce identical runs (see the
+/// determinism regression test in `tests/fleet.rs`).
+///
+/// | domain                | derivation            | consumer                      |
+/// |-----------------------|-----------------------|-------------------------------|
+/// | engine root           | `seed`                | per-round client selection    |
+/// | partition             | `root.fork(1)`        | IID / Dirichlet splits        |
+/// | client `i` stream     | `root.fork(100 + i)`  | epoch shuffles                |
+/// | parameter init        | `seed ^ 0xA5A5`       | `model::init_params`          |
+/// | dataset prototypes    | `seed + 1000`         | synth class prototypes        |
+/// | train samples         | `seed + 2000`         | synth train draws             |
+/// | eval samples          | `seed + 9000`         | synth eval draws              |
+/// | fleet                 | `seed ^ 0xF1EE7`      | device/link sampling + traces |
+pub mod seeds {
+    /// Engine-root fork tag for the data partitioner.
+    pub const PARTITION_FORK: u64 = 1;
+
+    /// Engine-root fork tag for client `id`'s private stream.
+    pub fn client_fork(id: usize) -> u64 {
+        100 + id as u64
+    }
+
+    /// Seed for global parameter initialisation.
+    pub fn param_init(seed: u64) -> u64 {
+        seed ^ 0xA5A5
+    }
+
+    /// Seed for synthetic-dataset class prototypes (shared by train and
+    /// eval so both splits draw from the same classes).
+    pub fn data_protos(seed: u64) -> u64 {
+        seed.wrapping_add(1000)
+    }
+
+    /// Seed for synthetic train-split sample draws.
+    pub fn data_train(seed: u64) -> u64 {
+        seed.wrapping_add(2000)
+    }
+
+    /// Seed for synthetic eval-split sample draws (disjoint from train).
+    pub fn data_eval(seed: u64) -> u64 {
+        seed.wrapping_add(9000)
+    }
+
+    /// Seed for the fleet simulator: device/link rate sampling and the
+    /// per-round availability/straggler trace stream.
+    pub fn fleet(seed: u64) -> u64 {
+        seed ^ 0xF1EE7
+    }
+}
+
 /// SplitMix64 — tiny, fast, passes BigCrush for our purposes; the canonical
 /// seeding sequence from Vigna (2015).
 #[derive(Debug, Clone)]

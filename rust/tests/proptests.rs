@@ -407,3 +407,132 @@ fn prop_forked_streams_are_decorrelated() {
     let cov = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / n as f64;
     assert!(cov.abs() < 0.01, "cov {cov}");
 }
+
+// ---------------------------------------------------------------- sim clock
+
+/// Legacy parity: a homogeneous SimClock (all slots online, infinite
+/// device rate, shared link rate, no deadline) must reproduce the old
+/// LinkClock arithmetic bit-for-bit over arbitrary charge sequences —
+/// per-charge dt, per-slot elapsed, and round latency. Compute charges on
+/// an infinite device must add exactly +0.0.
+#[test]
+fn prop_homogeneous_simclock_matches_linkclock_bit_for_bit() {
+    use sfprompt::comm::NetworkModel;
+    use sfprompt::federation::LinkClock;
+    use sfprompt::sim::{SimClock, SlotProfile};
+
+    let mut rng = Rng::new(411);
+    for case in 0..CASES {
+        let k = 1 + rng.below(8);
+        let net = NetworkModel {
+            rate_bytes_per_s: 100.0 + rng.uniform() * 5e7,
+            sharing_clients: 1 + rng.below(10),
+        };
+        let mut legacy = LinkClock::new(net, k);
+        let profiles: Vec<SlotProfile> = (0..k)
+            .map(|slot| SlotProfile {
+                client: slot,
+                link_bytes_per_s: net.effective_rate(),
+                device_flops_per_s: f64::INFINITY,
+                slowdown: 1.0,
+                online: true,
+            })
+            .collect();
+        let mut sim = SimClock::new(profiles, None);
+
+        for _ in 0..1 + rng.below(40) {
+            let slot = rng.below(k);
+            let bytes = rng.below(1 << 22);
+            let dt_legacy = legacy.charge(slot, bytes);
+            let dt_sim = sim.charge_transfer(slot, bytes);
+            assert_eq!(
+                dt_legacy.to_bits(),
+                dt_sim.to_bits(),
+                "case {case}: dt diverged for {bytes} B on slot {slot}"
+            );
+            // Interleaved compute on an infinite device is exactly free.
+            assert_eq!(sim.charge_compute(slot, rng.next_u64() >> 20), 0.0);
+        }
+        for slot in 0..k {
+            sim.mark_done(slot);
+            assert_eq!(
+                legacy.slot_s(slot).to_bits(),
+                sim.slot_s(slot).to_bits(),
+                "case {case}: slot {slot} elapsed diverged"
+            );
+        }
+        let out = sim.finish();
+        assert_eq!(
+            legacy.round_latency_s().to_bits(),
+            out.latency_s.to_bits(),
+            "case {case}: round latency diverged"
+        );
+        assert_eq!(out.survivors.len(), k, "case {case}: homogeneous fleet never drops");
+        assert_eq!(out.dropped(), 0);
+    }
+}
+
+/// Deadline resolution invariants over random fleets: survivors are
+/// exactly the marks within the effective deadline, at least
+/// min(quorum, online) clients always survive, events cover every slot
+/// once, and the latency is never below any survivor's elapsed time
+/// (and equals the legacy max when nothing dropped).
+#[test]
+fn prop_deadline_resolution_invariants() {
+    use sfprompt::sim::{ClientOutcome, DeadlinePolicy, SimClock, SlotProfile};
+
+    let mut rng = Rng::new(412);
+    for case in 0..CASES {
+        let k = 1 + rng.below(10);
+        let profiles: Vec<SlotProfile> = (0..k)
+            .map(|slot| SlotProfile {
+                client: 100 + slot,
+                link_bytes_per_s: 10.0 + rng.uniform() * 1e4,
+                device_flops_per_s: 1e6 + rng.uniform() * 1e9,
+                slowdown: if rng.uniform() < 0.3 { 4.0 } else { 1.0 },
+                online: rng.uniform() < 0.8,
+            })
+            .collect();
+        let policy = DeadlinePolicy {
+            deadline_s: 0.01 + rng.uniform() * 10.0,
+            min_quorum: 1 + rng.below(k),
+        };
+        let mut clock = SimClock::new(profiles, Some(policy));
+        let online: Vec<usize> = (0..k).filter(|&s| clock.online(s)).collect();
+        for &slot in &online {
+            for _ in 0..rng.below(5) {
+                clock.charge_transfer(slot, rng.below(1 << 20));
+                clock.charge_compute(slot, rng.next_u64() >> 40);
+            }
+            clock.mark_done(slot);
+        }
+        let out = clock.finish();
+
+        assert_eq!(out.events.len(), k, "case {case}: one event per slot");
+        let quorum = policy.min_quorum.min(online.len());
+        assert!(
+            out.survivors.len() >= quorum,
+            "case {case}: quorum {quorum} violated ({} survivors)",
+            out.survivors.len()
+        );
+        assert_eq!(out.survivors.len() + out.dropped(), k, "case {case}");
+        for &slot in &out.survivors {
+            assert!(clock.online(slot), "case {case}: offline survivor");
+            assert!(
+                out.latency_s >= clock.slot_s(slot) - 1e-12,
+                "case {case}: latency below a survivor's elapsed time"
+            );
+        }
+        // Done events are chronological.
+        let done_times: Vec<f64> = out
+            .events
+            .iter()
+            .filter(|e| e.outcome == ClientOutcome::Done)
+            .map(|e| e.at_s)
+            .collect();
+        assert!(
+            done_times.windows(2).all(|w| w[0] <= w[1]),
+            "case {case}: done events out of order"
+        );
+    }
+}
