@@ -40,6 +40,7 @@ fn main() -> Result<()> {
         eval_every: usize::MAX, // no eval — pure comm measurement
         selection: Selection::Uniform,
         wire: sfprompt::transport::WireFormat::F32,
+        compress: sfprompt::compress::Scheme::None,
     };
 
     println!("measured bytes/round on config `small` (K=4, U=4, retain=0.4):");

@@ -74,6 +74,7 @@ fn main() -> Result<()> {
         eval_every: 1,
         selection: Selection::Uniform,
         wire: sfprompt::transport::WireFormat::F32,
+        compress: sfprompt::compress::Scheme::None,
     };
 
     let batches_per_client = (spc + cfg.batch - 1) / cfg.batch;

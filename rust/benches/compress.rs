@@ -1,0 +1,71 @@
+//! Update-compression benchmarks: top-k selection over a realistic update
+//! vector, sparse frame encode/decode, and QSGD quantize+pack throughput.
+//! Needs no artifacts: inputs are synthesised.
+//!
+//!     cargo bench --bench compress
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{throughput, Bench};
+use sfprompt::comm::MsgKind;
+use sfprompt::compress::{CompressedSegment, CompressedTensor, Scheme};
+use sfprompt::transport::{decode_frame, encode_frame, Frame, Payload, WireFormat};
+use sfprompt::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(44);
+    // A ViT-Base-ish tail+prompt update: ~1M coordinates in one tensor.
+    let n = 1 << 20;
+    let update: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+    let mb = (n * 4) as f64 / 1e6;
+
+    for ratio in [0.1, 0.01] {
+        let scheme = Scheme::TopK { ratio };
+        let rep = Bench::new(&format!("compress/topk_select/{ratio}")).run(|| {
+            let mut comp = scheme.compressor(1).unwrap();
+            let repr = comp.compress(&update);
+            std::hint::black_box(&repr);
+        });
+        throughput(&rep, "MB", mb);
+    }
+
+    // Sparse encode/decode at 1% density, through the full frame codec.
+    let repr = Scheme::TopK { ratio: 0.01 }.compressor(1).unwrap().compress(&update);
+    let frame = Frame::new(
+        MsgKind::Upload,
+        0,
+        0,
+        Payload::Compressed(vec![CompressedSegment {
+            segment: "tail".into(),
+            tensors: vec![CompressedTensor { shape: vec![n], repr }],
+        }]),
+    );
+    let encoded = encode_frame(&frame, WireFormat::F32).unwrap();
+    println!(
+        "sparse upload frame: {} B for {mb:.1} MB dense ({:.1}x reduction)",
+        encoded.len(),
+        (n * 4) as f64 / encoded.len() as f64
+    );
+    let rep = Bench::new("compress/sparse_encode/topk:0.01").run(|| {
+        let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        assert_eq!(bytes.len(), encoded.len());
+    });
+    throughput(&rep, "MB", mb);
+    let rep = Bench::new("compress/sparse_decode/topk:0.01").run(|| {
+        let back = decode_frame(&encoded).unwrap();
+        assert_eq!(back.kind, MsgKind::Upload);
+    });
+    throughput(&rep, "MB", mb);
+
+    // QSGD quantize (stochastic rounding) + pack via the codec.
+    for bits in [4u8, 8] {
+        let scheme = Scheme::Quant { bits };
+        let rep = Bench::new(&format!("compress/qsgd_quantize/{bits}bit")).run(|| {
+            let mut comp = scheme.compressor(2).unwrap();
+            let repr = comp.compress(&update);
+            std::hint::black_box(&repr);
+        });
+        throughput(&rep, "MB", mb);
+    }
+}

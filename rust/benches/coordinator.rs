@@ -29,6 +29,7 @@ fn fed(rounds: usize) -> FedConfig {
         eval_every: usize::MAX,
         selection: Selection::Uniform,
         wire: sfprompt::transport::WireFormat::F32,
+        compress: sfprompt::compress::Scheme::None,
     }
 }
 

@@ -135,26 +135,66 @@ impl Default for NetworkModel {
 }
 
 /// Byte meter: every simulated transmission is recorded here.
+///
+/// Two parallel tallies per message kind: **wire** bytes (the encoded
+/// frame length that actually crossed the transport — what latency is
+/// charged on) and **raw** bytes (the dense-f32 frame the same payload
+/// would have occupied). They differ only where a precision or
+/// compression scheme shrank the payload, so `wire / raw` is the measured
+/// compression ratio (1.0 for an uncompressed run).
 #[derive(Debug, Default, Clone)]
 pub struct ByteMeter {
     pub uplink: u64,
     pub downlink: u64,
     pub by_kind: BTreeMap<&'static str, u64>,
+    /// Dense-f32 equivalent of every recorded frame, per kind.
+    pub raw_by_kind: BTreeMap<&'static str, u64>,
     pub messages: u64,
 }
 
 impl ByteMeter {
+    /// Record an uncompressed transmission (raw == wire).
     pub fn record(&mut self, kind: MsgKind, dir: Direction, bytes: usize) {
+        self.record_with_raw(kind, dir, bytes, bytes);
+    }
+
+    /// Record a transmission whose dense-f32 equivalent (`raw_bytes`)
+    /// differs from its on-the-wire length.
+    pub fn record_with_raw(
+        &mut self,
+        kind: MsgKind,
+        dir: Direction,
+        wire_bytes: usize,
+        raw_bytes: usize,
+    ) {
         match dir {
-            Direction::Uplink => self.uplink += bytes as u64,
-            Direction::Downlink => self.downlink += bytes as u64,
+            Direction::Uplink => self.uplink += wire_bytes as u64,
+            Direction::Downlink => self.downlink += wire_bytes as u64,
         }
-        *self.by_kind.entry(kind.label()).or_insert(0) += bytes as u64;
+        *self.by_kind.entry(kind.label()).or_insert(0) += wire_bytes as u64;
+        *self.raw_by_kind.entry(kind.label()).or_insert(0) += raw_bytes as u64;
         self.messages += 1;
     }
 
     pub fn total(&self) -> u64 {
         self.uplink + self.downlink
+    }
+
+    /// Dense-f32 equivalent of all recorded traffic.
+    pub fn raw_total(&self) -> u64 {
+        self.raw_by_kind.values().sum()
+    }
+
+    /// Measured wire bytes over their dense-f32 equivalent: < 1 when
+    /// precision/compression saved traffic, 1.0 for dense runs (and for
+    /// an empty meter).
+    pub fn compression_ratio(&self) -> f64 {
+        let raw = self.raw_total();
+        if raw == 0 {
+            1.0
+        } else {
+            self.total() as f64 / raw as f64
+        }
     }
 
     pub fn merge(&mut self, other: &ByteMeter) {
@@ -163,6 +203,9 @@ impl ByteMeter {
         self.messages += other.messages;
         for (k, v) in &other.by_kind {
             *self.by_kind.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.raw_by_kind {
+            *self.raw_by_kind.entry(k).or_insert(0) += v;
         }
     }
 
@@ -198,6 +241,27 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.total(), 22);
         assert_eq!(a.by_kind["upload"], 15);
+        assert_eq!(a.raw_total(), 22, "plain records carry raw == wire");
+    }
+
+    #[test]
+    fn raw_bytes_drive_the_compression_ratio() {
+        let mut m = ByteMeter::default();
+        assert_eq!(m.compression_ratio(), 1.0, "empty meter is ratio 1");
+        m.record(MsgKind::ModelDistribution, Direction::Downlink, 100);
+        assert_eq!(m.compression_ratio(), 1.0);
+        m.record_with_raw(MsgKind::Upload, Direction::Uplink, 25, 400);
+        assert_eq!(m.total(), 125);
+        assert_eq!(m.raw_total(), 500);
+        assert_eq!(m.by_kind["upload"], 25);
+        assert_eq!(m.raw_by_kind["upload"], 400);
+        assert!((m.compression_ratio() - 0.25).abs() < 1e-12);
+
+        let mut other = ByteMeter::default();
+        other.record_with_raw(MsgKind::Upload, Direction::Uplink, 25, 400);
+        m.merge(&other);
+        assert_eq!(m.raw_by_kind["upload"], 800);
+        assert_eq!(m.by_kind["upload"], 50);
     }
 
     #[test]

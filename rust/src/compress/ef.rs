@@ -1,0 +1,301 @@
+//! Error-feedback update compression: the per-client state the engines
+//! hold, and the server-side inverse.
+//!
+//! [`UpdateCompressor::compress_update`] compresses `updated − reference`
+//! tensor by tensor. For sparsifying schemes the input is first
+//! error-compensated (`delta + residual`), and the coordinates the
+//! compressor drops become the new residual (kept ones are zeroed, never
+//! subtracted — exact even for ±inf), so every coordinate's accumulated
+//! movement is eventually transmitted (EF-SGD / EF21 style).
+//! The conservation law `sent + residual == delta + residual_prev` holds
+//! **exactly** in f32 for top-k/rand-k — kept values travel bit-exact and
+//! dropped ones move to the residual untouched — and is property-tested
+//! in `tests/proptests.rs`.
+//!
+//! [`decompress_update`] reconstructs dense [`SegmentParams`] on the
+//! server: reference + decompressed delta. FedAvg then proceeds on dense
+//! tensors exactly as for uncompressed uploads (survivor renormalization
+//! unchanged).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::model::SegmentParams;
+use crate::runtime::{Dtype, HostTensor};
+
+use super::{CompressedRepr, CompressedSegment, CompressedTensor, Compressor, Scheme};
+
+/// Per-client compressor + error-feedback residual memory. Lives inside a
+/// `federation::Client`, so residuals persist across the rounds a client
+/// is selected in (and idle between selections). A client whose upload is
+/// later deadline-dropped still advanced its residual — exactly like a
+/// real device whose packet made it onto the wire but missed the cut.
+pub struct UpdateCompressor {
+    compressor: Box<dyn Compressor>,
+    /// Residuals keyed `"segment/tensor_index"`, one flat vector each.
+    residuals: BTreeMap<String, Vec<f32>>,
+}
+
+impl UpdateCompressor {
+    /// `seed` must come from `util::rng::seeds::compress_stream` so every
+    /// client draws an independent, reproducible stream. Panics on
+    /// [`Scheme::None`] (the engines skip construction instead).
+    pub fn new(scheme: Scheme, seed: u64) -> UpdateCompressor {
+        let compressor =
+            scheme.compressor(seed).expect("Scheme::None runs without a compressor");
+        UpdateCompressor { compressor, residuals: BTreeMap::new() }
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        self.compressor.scheme()
+    }
+
+    /// The residual currently held for tensor `idx` of `segment` (test and
+    /// diagnostics accessor; `None` until that tensor was compressed once,
+    /// or always for schemes without error feedback).
+    pub fn residual(&self, segment: &str, idx: usize) -> Option<&[f32]> {
+        self.residuals.get(&residual_key(segment, idx)).map(Vec::as_slice)
+    }
+
+    /// Compress the per-tensor update `updated − reference`, with error
+    /// feedback when the scheme calls for it. Segment names, arity, and
+    /// tensor shapes must match between the two sides.
+    pub fn compress_update(
+        &mut self,
+        reference: &[&SegmentParams],
+        updated: &[&SegmentParams],
+    ) -> Result<Vec<CompressedSegment>> {
+        if reference.len() != updated.len() {
+            bail!("update has {} segments, reference {}", updated.len(), reference.len());
+        }
+        let ef = self.compressor.error_feedback();
+        let mut out = Vec::with_capacity(updated.len());
+        for (r, u) in reference.iter().zip(updated) {
+            if r.segment != u.segment {
+                bail!("segment order mismatch: update {:?} vs reference {:?}", u.segment, r.segment);
+            }
+            if r.tensors.len() != u.tensors.len() {
+                bail!(
+                    "segment {:?} arity mismatch: {} vs {}",
+                    u.segment,
+                    u.tensors.len(),
+                    r.tensors.len()
+                );
+            }
+            let mut tensors = Vec::with_capacity(u.tensors.len());
+            for (idx, (rt, ut)) in r.tensors.iter().zip(&u.tensors).enumerate() {
+                let mut input = delta_f32(&u.segment, rt, ut)?;
+                let key = residual_key(&u.segment, idx);
+                if ef {
+                    if let Some(res) = self.residuals.get(&key) {
+                        for (x, e) in input.iter_mut().zip(res) {
+                            *x += e;
+                        }
+                    }
+                }
+                let repr = self.compressor.compress(&input);
+                let tensor = CompressedTensor { shape: ut.shape.clone(), repr };
+                if ef {
+                    // Residual = exactly the dropped coordinates: kept ones
+                    // are zeroed outright rather than subtracted, so a kept
+                    // ±inf cannot leave an `inf − inf = NaN` residual that
+                    // would poison the coordinate for the rest of the run.
+                    match &tensor.repr {
+                        CompressedRepr::Sparse { indices, .. } => {
+                            for &i in indices {
+                                input[i as usize] = 0.0;
+                            }
+                        }
+                        other => bail!(
+                            "error-feedback scheme produced a non-sparse repr {other:?}"
+                        ),
+                    }
+                    self.residuals.insert(key, input);
+                }
+                tensors.push(tensor);
+            }
+            out.push(CompressedSegment { segment: u.segment.clone(), tensors });
+        }
+        Ok(out)
+    }
+}
+
+fn residual_key(segment: &str, idx: usize) -> String {
+    format!("{segment}/{idx}")
+}
+
+/// `updated − reference` as a flat f32 vector, shape- and dtype-checked.
+fn delta_f32(segment: &str, reference: &HostTensor, updated: &HostTensor) -> Result<Vec<f32>> {
+    if reference.shape != updated.shape {
+        bail!(
+            "segment {segment:?} tensor shape mismatch: {:?} vs {:?}",
+            updated.shape,
+            reference.shape
+        );
+    }
+    if reference.dtype() != Dtype::F32 || updated.dtype() != Dtype::F32 {
+        bail!("segment {segment:?} carries non-f32 tensors; only f32 params are compressible");
+    }
+    Ok(updated.as_f32().iter().zip(reference.as_f32()).map(|(u, r)| u - r).collect())
+}
+
+/// Server-side inverse: reconstruct dense segments as
+/// `reference + decompress(delta)`, validating names, arity, and shapes
+/// against the reference the server distributed this round.
+pub fn decompress_update(
+    reference: &[&SegmentParams],
+    compressed: &[CompressedSegment],
+) -> Result<Vec<SegmentParams>> {
+    if reference.len() != compressed.len() {
+        bail!(
+            "compressed upload has {} segments, reference {}",
+            compressed.len(),
+            reference.len()
+        );
+    }
+    let mut out = Vec::with_capacity(compressed.len());
+    for (r, c) in reference.iter().zip(compressed) {
+        if r.segment != c.segment {
+            bail!("segment order mismatch: upload {:?} vs reference {:?}", c.segment, r.segment);
+        }
+        if r.tensors.len() != c.tensors.len() {
+            bail!(
+                "segment {:?} arity mismatch: {} vs {}",
+                c.segment,
+                c.tensors.len(),
+                r.tensors.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(c.tensors.len());
+        for (rt, ct) in r.tensors.iter().zip(&c.tensors) {
+            if rt.shape != ct.shape {
+                bail!(
+                    "segment {:?} tensor shape mismatch: {:?} vs reference {:?}",
+                    c.segment,
+                    ct.shape,
+                    rt.shape
+                );
+            }
+            if rt.dtype() != Dtype::F32 {
+                return Err(anyhow!(
+                    "segment {:?} reference carries non-f32 tensors",
+                    c.segment
+                ));
+            }
+            let delta = ct.decompress()?;
+            let dense: Vec<f32> =
+                rt.as_f32().iter().zip(&delta).map(|(r, d)| r + d).collect();
+            tensors.push(HostTensor::f32(rt.shape.clone(), dense));
+        }
+        out.push(SegmentParams { segment: c.segment.clone(), tensors });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(name: &str, vals: &[f32]) -> SegmentParams {
+        SegmentParams {
+            segment: name.to_string(),
+            tensors: vec![HostTensor::f32(vec![vals.len()], vals.to_vec())],
+        }
+    }
+
+    #[test]
+    fn roundtrip_reconstructs_reference_plus_delta() {
+        let reference = seg("tail", &[1.0, 2.0, 3.0, 4.0]);
+        let updated = seg("tail", &[1.5, 2.0, 3.0, -6.0]);
+        // ratio 0.5 keeps the 2 largest-|delta| coordinates: 3 (−10) and 0 (0.5).
+        let mut comp = UpdateCompressor::new(Scheme::TopK { ratio: 0.5 }, 1);
+        let c = comp.compress_update(&[&reference], &[&updated]).unwrap();
+        let back = decompress_update(&[&reference], &c).unwrap();
+        assert_eq!(back[0].tensors[0].as_f32(), updated.tensors[0].as_f32());
+    }
+
+    #[test]
+    fn dropped_coordinates_arrive_via_error_feedback() {
+        // k=1: only the largest delta ships each round. The small
+        // coordinate's movement accumulates in the residual until it
+        // dominates, then ships in full.
+        let reference = seg("p", &[0.0, 0.0]);
+        let mut comp = UpdateCompressor::new(Scheme::TopK { ratio: 0.4 }, 1);
+        let mut server = seg("p", &[0.0, 0.0]);
+
+        for _ in 0..4 {
+            // Every round the client moves +1.0 on coord 0 and +0.4 on
+            // coord 1, starting from the distributed reference.
+            let updated = seg(
+                "p",
+                &[server.tensors[0].as_f32()[0] + 1.0, server.tensors[0].as_f32()[1] + 0.4],
+            );
+            let c = comp.compress_update(&[&server], &[&updated]).unwrap();
+            server = decompress_update(&[&server], &c).unwrap().pop().unwrap();
+        }
+        let got = server.tensors[0].as_f32();
+        // Coord 0 shipped every round except the one where coord 1's
+        // accumulated 0.4·k residual outgrew 1.0; total mass is conserved
+        // up to the residual still in flight (≤ one round of movement).
+        assert!(got[0] + got[1] >= 4.0 * 1.4 - 1.4 - 1e-6, "{got:?}");
+        assert!(got[1] > 0.0, "small coordinate must eventually ship, got {got:?}");
+    }
+
+    #[test]
+    fn residual_is_exact_complement_of_sent() {
+        let reference = seg("t", &[0.0; 6]);
+        let updated = seg("t", &[0.3, -2.0, 0.7, 0.01, 5.0, -0.2]);
+        let mut comp = UpdateCompressor::new(Scheme::TopK { ratio: 0.34 }, 9);
+        let c = comp.compress_update(&[&reference], &[&updated]).unwrap();
+        let sent = c[0].tensors[0].decompress().unwrap();
+        let res = comp.residual("t", 0).unwrap();
+        for i in 0..6 {
+            assert_eq!(
+                sent[i] + res[i],
+                updated.tensors[0].as_f32()[i],
+                "coordinate {i} not conserved"
+            );
+        }
+    }
+
+    #[test]
+    fn kept_infinite_coordinate_leaves_a_clean_residual() {
+        // Regression: residual used to be computed as `input − sent`,
+        // which turns a kept ±inf into `inf − inf = NaN` and poisons the
+        // coordinate forever. Kept coordinates are zeroed outright now.
+        let reference = seg("t", &[0.0; 3]);
+        let updated = seg("t", &[f32::INFINITY, 0.5, 0.1]);
+        let mut comp = UpdateCompressor::new(Scheme::TopK { ratio: 0.34 }, 1);
+        let c = comp.compress_update(&[&reference], &[&updated]).unwrap();
+        let sent = c[0].tensors[0].decompress().unwrap();
+        assert_eq!(sent[0], f32::INFINITY, "the diverged coordinate ships");
+        let res = comp.residual("t", 0).unwrap();
+        assert_eq!(res, [0.0, 0.5, 0.1], "kept inf leaves a zero residual, not NaN");
+    }
+
+    #[test]
+    fn quant_scheme_runs_without_residual() {
+        let reference = seg("t", &[0.0; 4]);
+        let updated = seg("t", &[1.0, -1.0, 0.5, 0.25]);
+        let mut comp = UpdateCompressor::new(Scheme::Quant { bits: 8 }, 2);
+        let _ = comp.compress_update(&[&reference], &[&updated]).unwrap();
+        assert!(comp.residual("t", 0).is_none());
+    }
+
+    #[test]
+    fn mismatched_uploads_are_rejected() {
+        let reference = seg("tail", &[0.0; 4]);
+        let mut comp = UpdateCompressor::new(Scheme::TopK { ratio: 0.5 }, 1);
+        let renamed = seg("prompt", &[0.0; 4]);
+        assert!(comp.compress_update(&[&reference], &[&renamed]).is_err());
+        let reshaped = seg("tail", &[0.0; 5]);
+        assert!(comp.compress_update(&[&reference], &[&reshaped]).is_err());
+        assert!(comp.compress_update(&[&reference], &[]).is_err());
+
+        let good = comp.compress_update(&[&reference], &[&seg("tail", &[1.0; 4])]).unwrap();
+        assert!(decompress_update(&[&renamed], &good).is_err(), "name check on decompress");
+        assert!(decompress_update(&[&reshaped], &good).is_err(), "shape check on decompress");
+        assert!(decompress_update(&[], &good).is_err());
+    }
+}

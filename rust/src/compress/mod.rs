@@ -1,0 +1,542 @@
+//! Update-compression subsystem: sparsification + low-bit quantization.
+//!
+//! SFPrompt's headline claim is communication efficiency, and since the
+//! transport subsystem landed every byte has been a **measurement** on a
+//! real codec. This module adds the standard federated-compression ladder
+//! on top of scalar wire precision (`--wire f32|f16|int8`): Phase-3
+//! upload payloads are compressed client-side before `Transport::send`
+//! and decompressed server-side before FedAvg, and the sparse frames they
+//! travel in are metered by the same `ByteMeter` as everything else
+//! (docs/COMPRESS.md).
+//!
+//! * [`Scheme`] — `none`, `topk:R` / `randk:R` (sparsification, keep a
+//!   `R` fraction of coordinates per tensor), `quant:B` (QSGD-style
+//!   stochastic quantization to `B`-bit symmetric levels).
+//! * [`Compressor`] — one per-client compressor instance per run; rand-k
+//!   coordinate draws and QSGD stochastic rounding consume a documented
+//!   per-client RNG stream (`util::rng::seeds::compress_stream`).
+//! * [`UpdateCompressor`] — the error-feedback wrapper the engines hold
+//!   per client: compresses `updated − reference` per tensor and carries
+//!   the dropped mass in a residual that is re-added next round.
+//!
+//! Compression operates on the **update** (client parameters minus the
+//! reference the server distributed at round start), not on raw parameter
+//! values: the server adds the decompressed delta back onto its own copy
+//! of the reference, so sparsifying coordinates zeroes *movement*, never
+//! weights. Error feedback (Stich et al. 2018; Karimireddy et al. 2019)
+//! is what preserves convergence at aggressive ratios: a coordinate
+//! dropped this round is accumulated and eventually sent.
+
+mod ef;
+
+pub use ef::{decompress_update, UpdateCompressor};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Which update-compression scheme a run applies to Phase-3 uploads.
+///
+/// String forms (CLI `--compress`, the `"compress"` RunSpec key):
+/// `none`, `topk:0.01`, `randk:0.05`, `quant:4`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Scheme {
+    /// Dense uploads (the default; byte-identical to pre-compression runs).
+    #[default]
+    None,
+    /// Keep the `ratio` fraction of largest-magnitude coordinates per
+    /// tensor (at least one), exact values; error feedback carries the rest.
+    TopK { ratio: f64 },
+    /// Keep a uniformly random `ratio` fraction of coordinates per tensor
+    /// (at least one), exact values; error feedback carries the rest.
+    RandK { ratio: f64 },
+    /// QSGD-style stochastic quantization to symmetric `bits`-bit levels
+    /// (2..=8); unbiased, so it runs without error feedback.
+    Quant { bits: u8 },
+}
+
+impl Scheme {
+    pub fn label(self) -> String {
+        match self {
+            Scheme::None => "none".to_string(),
+            Scheme::TopK { ratio } => format!("topk:{ratio}"),
+            Scheme::RandK { ratio } => format!("randk:{ratio}"),
+            Scheme::Quant { bits } => format!("quant:{bits}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Scheme> {
+        if s == "none" {
+            return Ok(Scheme::None);
+        }
+        let (name, arg) = s.split_once(':').ok_or_else(|| {
+            anyhow!("unknown compress scheme {s:?} (known: none topk:R randk:R quant:B)")
+        })?;
+        let ratio = || -> Result<f64> {
+            arg.parse()
+                .map_err(|_| anyhow!("compress ratio must be a number, got {arg:?}"))
+        };
+        let scheme = match name {
+            "topk" => Scheme::TopK { ratio: ratio()? },
+            "randk" => Scheme::RandK { ratio: ratio()? },
+            "quant" => Scheme::Quant {
+                bits: arg
+                    .parse()
+                    .map_err(|_| anyhow!("quant bits must be an integer, got {arg:?}"))?,
+            },
+            other => {
+                bail!("unknown compress scheme {other:?} (known: none topk:R randk:R quant:B)")
+            }
+        };
+        scheme.validate()?;
+        Ok(scheme)
+    }
+
+    /// Check the scheme's parameters (builder validation calls this, so a
+    /// hand-constructed `Scheme` fails as loudly as a parsed one).
+    pub fn validate(self) -> Result<()> {
+        match self {
+            Scheme::None => Ok(()),
+            Scheme::TopK { ratio } | Scheme::RandK { ratio } => {
+                if !ratio.is_finite() || ratio <= 0.0 || ratio > 1.0 {
+                    bail!("compress ratio must be in (0, 1], got {ratio}");
+                }
+                Ok(())
+            }
+            Scheme::Quant { bits } => {
+                if !(2..=8).contains(&bits) {
+                    bail!("quant bits must be in 2..=8, got {bits}");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn is_none(self) -> bool {
+        self == Scheme::None
+    }
+
+    /// Build this scheme's per-client compressor; `None` for
+    /// [`Scheme::None`]. `seed` is the client's compress stream
+    /// (`seeds::compress_stream`), consumed by rand-k draws and QSGD
+    /// stochastic rounding.
+    pub fn compressor(self, seed: u64) -> Option<Box<dyn Compressor>> {
+        match self {
+            Scheme::None => None,
+            Scheme::TopK { ratio } => Some(Box::new(TopK { ratio })),
+            Scheme::RandK { ratio } => Some(Box::new(RandK { ratio, rng: Rng::new(seed) })),
+            Scheme::Quant { bits } => Some(Box::new(Qsgd { bits, rng: Rng::new(seed) })),
+        }
+    }
+}
+
+/// Compressed form of one flat f32 vector (the logical representation;
+/// the transport codec owns the byte layout, including the choice between
+/// varint and bitmap index encodings and the dense fallback).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressedRepr {
+    /// Sorted, duplicate-free coordinates with exact f32 values.
+    Sparse { indices: Vec<u32>, values: Vec<f32> },
+    /// QSGD codes, one per element, in `[0, 2L]` for `L = 2^(bits−1) − 1`;
+    /// value `≈ (code − L) · scale / L`.
+    Qsgd { bits: u8, scale: f32, codes: Vec<u8> },
+    /// Dense values (decoded form of a fallback-encoded tensor).
+    Dense(Vec<f32>),
+}
+
+/// A compressed update tensor: original shape + compressed payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedTensor {
+    pub shape: Vec<usize>,
+    pub repr: CompressedRepr,
+}
+
+/// All compressed tensors of one segment, mirroring
+/// [`crate::model::SegmentParams`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedSegment {
+    pub segment: String,
+    pub tensors: Vec<CompressedTensor>,
+}
+
+impl CompressedTensor {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Reconstruct the dense update vector, validating the representation
+    /// against the declared shape (decoded frames are untrusted input).
+    pub fn decompress(&self) -> Result<Vec<f32>> {
+        let n = self.element_count();
+        match &self.repr {
+            CompressedRepr::Dense(values) => {
+                if values.len() != n {
+                    bail!("dense repr carries {} values for {n} elements", values.len());
+                }
+                Ok(values.clone())
+            }
+            CompressedRepr::Sparse { indices, values } => {
+                if indices.len() != values.len() {
+                    bail!("sparse repr: {} indices vs {} values", indices.len(), values.len());
+                }
+                let mut out = vec![0.0f32; n];
+                let mut prev: Option<u32> = None;
+                for (&i, &v) in indices.iter().zip(values) {
+                    if (i as usize) >= n {
+                        bail!("sparse index {i} out of range for {n} elements");
+                    }
+                    if let Some(p) = prev {
+                        if i <= p {
+                            bail!("sparse indices not strictly increasing ({p} then {i})");
+                        }
+                    }
+                    prev = Some(i);
+                    out[i as usize] = v;
+                }
+                Ok(out)
+            }
+            CompressedRepr::Qsgd { bits, scale, codes } => {
+                if codes.len() != n {
+                    bail!("qsgd repr carries {} codes for {n} elements", codes.len());
+                }
+                qsgd_dequantize(*bits, *scale, codes)
+            }
+        }
+    }
+}
+
+/// One client's compression function. Implementations hold whatever state
+/// the scheme needs (rand-k / QSGD hold a seeded RNG); error-feedback
+/// residual memory lives one level up, in [`UpdateCompressor`].
+pub trait Compressor: Send {
+    fn scheme(&self) -> Scheme;
+
+    /// Whether dropped mass should be carried as an error-feedback
+    /// residual. True for the sparsifiers (they drop coordinates
+    /// deterministically or at random); false for QSGD, which is unbiased.
+    fn error_feedback(&self) -> bool;
+
+    /// Compress one flat (already error-compensated) f32 vector.
+    fn compress(&mut self, input: &[f32]) -> CompressedRepr;
+}
+
+/// Coordinates kept for an `n`-element tensor at `ratio` (at least one).
+fn sparse_k(ratio: f64, n: usize) -> usize {
+    (((n as f64) * ratio).round() as usize).clamp(1, n)
+}
+
+struct TopK {
+    ratio: f64,
+}
+
+impl Compressor for TopK {
+    fn scheme(&self) -> Scheme {
+        Scheme::TopK { ratio: self.ratio }
+    }
+
+    fn error_feedback(&self) -> bool {
+        true
+    }
+
+    fn compress(&mut self, input: &[f32]) -> CompressedRepr {
+        if input.is_empty() {
+            return CompressedRepr::Sparse { indices: Vec::new(), values: Vec::new() };
+        }
+        let k = sparse_k(self.ratio, input.len());
+        let mut idx: Vec<u32> = (0..input.len() as u32).collect();
+        // Magnitude descending; total_cmp ranks NaN above +inf, so a NaN
+        // coordinate (diverged update) is SENT rather than silently parked
+        // in the residual forever. Ties break by index for determinism.
+        idx.sort_unstable_by(|&a, &b| {
+            let (xa, xb) = (input[a as usize].abs(), input[b as usize].abs());
+            xb.total_cmp(&xa).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+        let values = idx.iter().map(|&i| input[i as usize]).collect();
+        CompressedRepr::Sparse { indices: idx, values }
+    }
+}
+
+struct RandK {
+    ratio: f64,
+    rng: Rng,
+}
+
+impl Compressor for RandK {
+    fn scheme(&self) -> Scheme {
+        Scheme::RandK { ratio: self.ratio }
+    }
+
+    fn error_feedback(&self) -> bool {
+        true
+    }
+
+    fn compress(&mut self, input: &[f32]) -> CompressedRepr {
+        if input.is_empty() {
+            return CompressedRepr::Sparse { indices: Vec::new(), values: Vec::new() };
+        }
+        let k = sparse_k(self.ratio, input.len());
+        let mut idx: Vec<u32> =
+            self.rng.choose(input.len(), k).into_iter().map(|i| i as u32).collect();
+        idx.sort_unstable();
+        let values = idx.iter().map(|&i| input[i as usize]).collect();
+        CompressedRepr::Sparse { indices: idx, values }
+    }
+}
+
+struct Qsgd {
+    bits: u8,
+    rng: Rng,
+}
+
+impl Compressor for Qsgd {
+    fn scheme(&self) -> Scheme {
+        Scheme::Quant { bits: self.bits }
+    }
+
+    fn error_feedback(&self) -> bool {
+        false
+    }
+
+    fn compress(&mut self, input: &[f32]) -> CompressedRepr {
+        let levels = qsgd_levels(self.bits);
+        // Symmetric max-magnitude scale over the finite coordinates; a
+        // degenerate tensor (all zero / non-finite) emits scale 0, which
+        // dequantizes to an all-zero update.
+        let mut scale = 0.0f32;
+        for &x in input {
+            if x.is_finite() {
+                scale = scale.max(x.abs());
+            }
+        }
+        if scale == 0.0 {
+            return CompressedRepr::Qsgd {
+                bits: self.bits,
+                scale: 0.0,
+                codes: vec![levels; input.len()],
+            };
+        }
+        let codes = input
+            .iter()
+            .map(|&x| {
+                if !x.is_finite() {
+                    return levels; // NaN/inf coordinate -> zero update
+                }
+                let y = (x as f64 / scale as f64) * levels as f64; // in [-L, L]
+                let floor = y.floor();
+                // Stochastic rounding: unbiased between the two levels.
+                let up = self.rng.uniform() < y - floor;
+                let q = floor as i64 + i64::from(up);
+                (q.clamp(-i64::from(levels), i64::from(levels)) + i64::from(levels)) as u8
+            })
+            .collect();
+        CompressedRepr::Qsgd { bits: self.bits, scale, codes }
+    }
+}
+
+/// Level count `L = 2^(bits−1) − 1` of a symmetric `bits`-bit grid.
+pub fn qsgd_levels(bits: u8) -> u8 {
+    debug_assert!((2..=8).contains(&bits));
+    ((1u16 << (bits - 1)) - 1) as u8
+}
+
+/// Reconstruct f32 values from QSGD codes: `(code − L) · scale / L`.
+/// Validates bits and code range (frame decoding feeds untrusted input).
+pub fn qsgd_dequantize(bits: u8, scale: f32, codes: &[u8]) -> Result<Vec<f32>> {
+    if !(2..=8).contains(&bits) {
+        bail!("qsgd bits must be in 2..=8, got {bits}");
+    }
+    if !scale.is_finite() || scale < 0.0 {
+        bail!("qsgd scale must be finite and non-negative, got {scale}");
+    }
+    let levels = qsgd_levels(bits);
+    let mut out = Vec::with_capacity(codes.len());
+    for &c in codes {
+        if c > 2 * levels {
+            bail!("qsgd code {c} exceeds level range 0..={}", 2 * levels);
+        }
+        out.push((i32::from(c) - i32::from(levels)) as f32 * scale / f32::from(levels));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_labels_roundtrip_through_parse() {
+        for s in [
+            Scheme::None,
+            Scheme::TopK { ratio: 0.01 },
+            Scheme::RandK { ratio: 0.05 },
+            Scheme::Quant { bits: 4 },
+        ] {
+            assert_eq!(Scheme::parse(&s.label()).unwrap(), s, "{}", s.label());
+        }
+    }
+
+    #[test]
+    fn scheme_rejects_garbage() {
+        for bad in [
+            "topk", "topk:", "topk:0", "topk:1.5", "topk:-0.1", "topk:NaN", "randk:0",
+            "quant:1", "quant:9", "quant:4.5", "gzip:2", "",
+        ] {
+            assert!(Scheme::parse(bad).is_err(), "{bad:?} should be rejected");
+        }
+        assert!(Scheme::parse("topk:1").is_ok(), "ratio 1 keeps everything but is legal");
+    }
+
+    #[test]
+    fn topk_keeps_largest_magnitudes_sorted() {
+        let mut c = Scheme::TopK { ratio: 0.5 }.compressor(0).unwrap();
+        let repr = c.compress(&[0.1, -9.0, 0.2, 5.0, -0.3, 0.0]);
+        match repr {
+            CompressedRepr::Sparse { indices, values } => {
+                assert_eq!(indices, vec![1, 3, 4]);
+                assert_eq!(values, vec![-9.0, 5.0, -0.3]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_always_keeps_at_least_one() {
+        let mut c = Scheme::TopK { ratio: 0.001 }.compressor(0).unwrap();
+        match c.compress(&[0.0, 0.0, 7.0]) {
+            CompressedRepr::Sparse { indices, values } => {
+                assert_eq!(indices, vec![2]);
+                assert_eq!(values, vec![7.0]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn topk_sends_nan_instead_of_hiding_it() {
+        let mut c = Scheme::TopK { ratio: 0.25 }.compressor(0).unwrap();
+        match c.compress(&[1.0, f32::NAN, 2.0, 3.0]) {
+            CompressedRepr::Sparse { indices, values } => {
+                assert_eq!(indices, vec![1]);
+                assert!(values[0].is_nan());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn randk_is_deterministic_per_seed_and_covers_k() {
+        let xs: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let sel = |seed| match Scheme::RandK { ratio: 0.1 }.compressor(seed).unwrap().compress(&xs)
+        {
+            CompressedRepr::Sparse { indices, values } => (indices, values),
+            other => panic!("{other:?}"),
+        };
+        let (i1, v1) = sel(7);
+        let (i2, _) = sel(7);
+        let (i3, _) = sel(8);
+        assert_eq!(i1, i2, "same seed, same coordinates");
+        assert_ne!(i1, i3, "different seed, different coordinates");
+        assert_eq!(i1.len(), 10);
+        assert!(i1.windows(2).all(|w| w[0] < w[1]), "sorted unique");
+        for (i, v) in i1.iter().zip(&v1) {
+            assert_eq!(*v, xs[*i as usize], "values are exact");
+        }
+    }
+
+    #[test]
+    fn qsgd_error_is_bounded_by_one_level() {
+        let xs: Vec<f32> = (0..257).map(|i| ((i as f32) * 0.11).sin() * 3.0).collect();
+        for bits in [2u8, 4, 8] {
+            let mut c = Scheme::Quant { bits }.compressor(3).unwrap();
+            let repr = c.compress(&xs);
+            let t = CompressedTensor { shape: vec![xs.len()], repr };
+            let back = t.decompress().unwrap();
+            let step = 3.0 / f32::from(qsgd_levels(bits));
+            for (a, b) in xs.iter().zip(&back) {
+                assert!((a - b).abs() <= step + 1e-5, "bits {bits}: {a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_is_roughly_unbiased() {
+        // Stochastic rounding: with bits=2 (levels −1/0/1) and scale
+        // pinned to 1.0 by a sentinel coordinate, x = 0.3 sits strictly
+        // between levels, so every draw rounds up or down — the mean
+        // reconstruction over many coordinates must approach 0.3.
+        let x = 0.3f32;
+        let mut xs = vec![x; 4000];
+        xs[0] = 1.0; // pins scale = max|x| = 1.0
+        let mut c = Scheme::Quant { bits: 2 }.compressor(11).unwrap();
+        let t = CompressedTensor { shape: vec![xs.len()], repr: c.compress(&xs) };
+        let back = t.decompress().unwrap();
+        // Every reconstruction lands on a level, never in between.
+        assert!(back[1..].iter().all(|&v| v == 0.0 || v == 1.0), "levels only");
+        let mean: f64 =
+            back[1..].iter().map(|&v| v as f64).sum::<f64>() / (back.len() - 1) as f64;
+        assert!((mean - x as f64).abs() < 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn qsgd_degenerate_and_nonfinite_inputs() {
+        let mut c = Scheme::Quant { bits: 4 }.compressor(0).unwrap();
+        let t = CompressedTensor { shape: vec![3], repr: c.compress(&[0.0, 0.0, 0.0]) };
+        assert_eq!(t.decompress().unwrap(), vec![0.0; 3]);
+        let t = CompressedTensor {
+            shape: vec![3],
+            repr: c.compress(&[f32::NAN, 1.0, f32::INFINITY]),
+        };
+        let back = t.decompress().unwrap();
+        assert_eq!(back[0], 0.0, "NaN coordinate becomes a zero update");
+        assert_eq!(back[2], 0.0, "inf coordinate becomes a zero update");
+        assert!((back[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn decompress_rejects_malformed_reprs() {
+        let t = |repr| CompressedTensor { shape: vec![4], repr };
+        assert!(t(CompressedRepr::Dense(vec![1.0; 3])).decompress().is_err());
+        assert!(t(CompressedRepr::Sparse { indices: vec![4], values: vec![1.0] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Sparse { indices: vec![1, 1], values: vec![1.0, 2.0] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Sparse { indices: vec![2, 1], values: vec![1.0, 2.0] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Sparse { indices: vec![1], values: vec![] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Qsgd { bits: 4, scale: 1.0, codes: vec![0; 3] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Qsgd { bits: 4, scale: 1.0, codes: vec![15; 4] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Qsgd { bits: 9, scale: 1.0, codes: vec![0; 4] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Qsgd { bits: 4, scale: -1.0, codes: vec![0; 4] })
+            .decompress()
+            .is_err());
+        // An inf scale would dequantize to ±inf and 0·inf = NaN.
+        assert!(t(CompressedRepr::Qsgd { bits: 4, scale: f32::INFINITY, codes: vec![0; 4] })
+            .decompress()
+            .is_err());
+        assert!(t(CompressedRepr::Qsgd { bits: 4, scale: f32::NAN, codes: vec![0; 4] })
+            .decompress()
+            .is_err());
+    }
+
+    #[test]
+    fn sparse_decompress_scatters_exactly() {
+        let t = CompressedTensor {
+            shape: vec![2, 3],
+            repr: CompressedRepr::Sparse { indices: vec![0, 4], values: vec![-1.5, 2.25] },
+        };
+        assert_eq!(t.decompress().unwrap(), vec![-1.5, 0.0, 0.0, 0.0, 2.25, 0.0]);
+    }
+}

@@ -1,0 +1,139 @@
+//! Compression sweep — accuracy vs **measured** uploaded bytes across
+//! scheme × ratio, plus the fleet interaction.
+//!
+//! Every cell runs the same SFPrompt federation; only `fed.compress`
+//! changes. Upload bytes come from `ByteMeter` (`by_kind["upload"]` wire
+//! vs `raw_by_kind["upload"]` dense-f32), so the reduction column is what
+//! actually crossed the codec, not an analytic estimate. The error-
+//! feedback tolerance these cells are judged against is documented in
+//! docs/COMPRESS.md.
+//!
+//! Because fleet round time is charged from measured transport bytes,
+//! compression composes with the deadline simulator for free — fewer
+//! upload bytes means clients finish earlier and fewer get dropped — so a
+//! second mini-table runs dense vs `topk:0.01` on a two-tier deadline
+//! fleet and reports simulated wall-clock and drops side by side.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::compress::Scheme;
+use crate::federation::Method;
+use crate::metrics::RunHistory;
+use crate::sim::{FleetSpec, RateDist};
+use crate::util::csv::CsvWriter;
+
+use super::common::{run_spec, RunSpec};
+use super::ExpOptions;
+
+/// The sweep's federation: small enough that 8 cells stay cheap, big
+/// enough that upload traffic dominates a visible share of the round.
+fn base_spec(opts: &ExpOptions) -> RunSpec {
+    let mut spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);
+    opts.apply(&mut spec);
+    spec.fed.num_clients = 12;
+    spec.fed.clients_per_round = 4;
+    spec.fed.local_epochs = opts.local_epochs.min(2);
+    spec.samples_per_client = 16;
+    spec.eval_samples = 96;
+    spec.fed.eval_limit = Some(96);
+    // Accuracy is only needed at the end of each cell.
+    spec.fed.eval_every = spec.fed.rounds.max(1);
+    spec
+}
+
+fn upload_bytes(hist: &RunHistory) -> (u64, u64) {
+    let wire = hist.total_comm.by_kind.get("upload").copied().unwrap_or(0);
+    let raw = hist.total_comm.raw_by_kind.get("upload").copied().unwrap_or(0);
+    (wire, raw)
+}
+
+pub fn run(artifacts: &Path, opts: &ExpOptions) -> Result<()> {
+    let schemes = [
+        "none", "quant:8", "quant:4", "randk:0.1", "randk:0.05", "topk:0.1", "topk:0.05",
+        "topk:0.01",
+    ];
+    let mut w = CsvWriter::create(
+        opts.out_dir.join("compress.csv"),
+        &[
+            "scheme", "final_acc", "best_acc", "upload_wire_kb", "upload_raw_kb",
+            "upload_reduction_x", "total_mb", "sim_wall_s",
+        ],
+    )?;
+
+    println!("Compression sweep: accuracy vs measured uploaded bytes (tiny config)");
+    println!(
+        "{:<10} {:>10} {:>10} {:>12} {:>12} {:>8} {:>9} {:>10}",
+        "scheme", "final acc", "best acc", "upload KB", "raw KB", "x", "total MB", "sim wall s"
+    );
+    let mut dense_acc = f64::NAN;
+    for name in schemes {
+        let mut spec = base_spec(opts);
+        spec.fed.compress = Scheme::parse(name)?;
+        let hist = run_spec(artifacts, &spec, true)?;
+        let (wire, raw) = upload_bytes(&hist);
+        let reduction = raw as f64 / wire.max(1) as f64;
+        if name == "none" {
+            dense_acc = hist.final_accuracy();
+        }
+        println!(
+            "{:<10} {:>10.4} {:>10.4} {:>12.2} {:>12.2} {:>8.1} {:>9.2} {:>10.1}",
+            name,
+            hist.final_accuracy(),
+            hist.best_accuracy(),
+            wire as f64 / 1e3,
+            raw as f64 / 1e3,
+            reduction,
+            hist.total_comm.mb(),
+            hist.sim_wall_s()
+        );
+        w.row(&[
+            name.into(),
+            format!("{:.4}", hist.final_accuracy()),
+            format!("{:.4}", hist.best_accuracy()),
+            format!("{:.3}", wire as f64 / 1e3),
+            format!("{:.3}", raw as f64 / 1e3),
+            format!("{reduction:.2}"),
+            format!("{:.3}", hist.total_comm.mb()),
+            format!("{:.3}", hist.sim_wall_s()),
+        ])?;
+    }
+    println!(
+        "\nerror-feedback sparsification should track the dense final accuracy \
+         ({dense_acc:.4}) within the docs/COMPRESS.md tolerance while cutting upload \
+         bytes by the x column; wrote {}",
+        opts.out_dir.join("compress.csv").display()
+    );
+
+    // --- Fleet interaction: fewer measured bytes -> faster simulated
+    // clients -> fewer deadline drops, with zero extra wiring. ---
+    println!("\nDeadline-fleet interaction (two-tier links, deadline 1s, quorum 2):");
+    println!(
+        "{:<10} {:>10} {:>12} {:>9} {:>9}",
+        "scheme", "final acc", "sim wall s", "dropped", "comm MB"
+    );
+    for name in ["none", "topk:0.01"] {
+        let mut spec = base_spec(opts);
+        spec.fed.compress = Scheme::parse(name)?;
+        let mut fleet = FleetSpec::named("two-tier")?;
+        fleet.devices = RateDist::TwoTier { fast: 1e9, slow: 4e7, slow_fraction: 0.25 };
+        fleet.deadline_s = Some(1.0);
+        fleet.min_quorum = spec.fed.clients_per_round / 2;
+        spec.fleet = Some(fleet);
+        let hist = run_spec(artifacts, &spec, true)?;
+        println!(
+            "{:<10} {:>10.4} {:>12.1} {:>9} {:>9.2}",
+            name,
+            hist.final_accuracy(),
+            hist.sim_wall_s(),
+            hist.dropped_clients(),
+            hist.total_comm.mb()
+        );
+    }
+    println!(
+        "compression shortens upload transfers, so straggling clients beat the same \
+         deadline more often (drops should not increase under topk:0.01)"
+    );
+    Ok(())
+}

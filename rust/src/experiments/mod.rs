@@ -1,6 +1,7 @@
 //! Experiment harness: one module per paper table/figure.
 
 pub mod common;
+pub mod compress;
 pub mod fig2;
 pub mod fleet;
 pub mod fig4;
@@ -61,10 +62,11 @@ pub fn run(id: &str, artifacts: &Path, opts: &ExpOptions) -> Result<()> {
         "fig7" => fig7::run(artifacts, opts),
         "wire" => wire::run(artifacts, opts),
         "fleet" => fleet::run(artifacts, opts),
+        "compress" => compress::run(artifacts, opts),
         "all" => {
             for id in [
-                "table1", "fig2", "wire", "fleet", "table2", "fig4", "fig5", "fig6", "fig7",
-                "table3",
+                "table1", "fig2", "wire", "fleet", "compress", "table2", "fig4", "fig5",
+                "fig6", "fig7", "table3",
             ] {
                 println!("==== experiment {id} ====");
                 run(id, artifacts, opts)?;
@@ -72,6 +74,6 @@ pub fn run(id: &str, artifacts: &Path, opts: &ExpOptions) -> Result<()> {
             Ok(())
         }
         other => anyhow::bail!("unknown experiment id {other:?} \
-            (known: fig2 fig4 fig5 fig6 fig7 fleet table1 table2 table3 wire all)"),
+            (known: compress fig2 fig4 fig5 fig6 fig7 fleet table1 table2 table3 wire all)"),
     }
 }

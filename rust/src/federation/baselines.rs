@@ -35,13 +35,17 @@ use anyhow::{bail, Result};
 
 use crate::backend::{run_stage_hosts, Backend, TensorInputs};
 use crate::comm::{ByteMeter, Direction, MsgKind};
+use crate::compress::{decompress_update, UpdateCompressor};
 use crate::data::{batch_indices, make_batch, SynthDataset};
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{fedavg_multi, init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
 use crate::runtime::HostTensor;
 use crate::sim::{Fleet, RoundOutcome, SimClock};
-use crate::transport::{channel_pair, Frame, Payload, Transport, WireFormat};
+use crate::transport::{
+    channel_pair, dense_segments_wire_len, encoded_frame_len, Frame, Payload, Transport,
+    WireFormat,
+};
 use crate::util::rng::{seeds, Rng};
 
 use super::client::Client;
@@ -119,11 +123,19 @@ impl<'a> BaselineEngine<'a> {
         let labels = train.labels();
         let parts =
             partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(seeds::PARTITION_FORK));
-        let clients = parts
+        let mut clients: Vec<Client> = parts
             .into_iter()
             .enumerate()
             .map(|(id, indices)| Client::new(id, indices, rng.fork(seeds::client_fork(id))))
             .collect();
+        if !fed.compress.is_none() {
+            for c in &mut clients {
+                c.compress = Some(UpdateCompressor::new(
+                    fed.compress,
+                    seeds::compress_stream(fed.seed, c.id),
+                ));
+            }
+        }
         let global = init_params(backend.manifest(), seeds::param_init(fed.seed));
         BaselineEngine {
             backend,
@@ -168,6 +180,15 @@ impl<'a> BaselineEngine<'a> {
         let mut slot_losses: Vec<(usize, Vec<f64>)> = Vec::new();
         let mut updates: Vec<(usize, Vec<SegmentParams>, usize)> = Vec::new();
 
+        // The model every client receives this round — also the update
+        // compression reference (FL's global only changes at aggregation,
+        // after this loop).
+        let dist_segs = vec![
+            self.global.get("head")?.clone(),
+            self.global.get("body")?.clone(),
+            self.global.get("tail")?.clone(),
+        ];
+
         for (slot, &cid) in selected.iter().enumerate() {
             if !clock.online(slot) {
                 continue; // offline at round start: no traffic, no compute
@@ -176,11 +197,7 @@ impl<'a> BaselineEngine<'a> {
             let (mut s_end, mut c_end) = channel_pair();
 
             // --- Downlink: the full model, over the wire. ---
-            let payload = Payload::Segments(vec![
-                self.global.get("head")?.clone(),
-                self.global.get("body")?.clone(),
-                self.global.get("tail")?.clone(),
-            ]);
+            let payload = Payload::Segments(dist_segs.clone());
             let n = s_end
                 .send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             comm.record(MsgKind::FullModel, Direction::Downlink, n);
@@ -217,23 +234,38 @@ impl<'a> BaselineEngine<'a> {
                 }
             }
 
-            // --- Uplink: the updated full model. ---
-            let payload = Payload::Segments(vec![head, body, tail]);
+            // --- Uplink: the updated full model (delta-compressed against
+            // the distributed reference when configured). ---
+            let payload = match self.clients[cid].compress.as_mut() {
+                Some(comp) => Payload::Compressed(comp.compress_update(
+                    &dist_segs.iter().collect::<Vec<_>>(),
+                    &[&head, &body, &tail],
+                )?),
+                None => Payload::Segments(vec![head, body, tail]),
+            };
             c_end.send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             let (frame, n) = s_end.recv()?;
-            comm.record(MsgKind::FullModel, Direction::Uplink, n);
+            let segs = match frame.payload {
+                Payload::Compressed(csegs) => {
+                    let refs: Vec<&SegmentParams> = dist_segs.iter().collect();
+                    decompress_update(&refs, &csegs)?
+                }
+                payload => take_segments(payload, &["head", "body", "tail"])?,
+            };
+            comm.record_with_raw(
+                MsgKind::FullModel,
+                Direction::Uplink,
+                n,
+                dense_segments_wire_len(&segs.iter().collect::<Vec<_>>()),
+            );
             clock.charge_transfer(slot, n);
             clock.charge_compute(
                 slot,
                 crate::flops::fl_client_round_flops(&cfg, n_k, self.fed.local_epochs),
             );
             clock.mark_done(slot);
-            let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
-            let tail = segs.pop().expect("tail");
-            let body = segs.pop().expect("body");
-            let head = segs.pop().expect("head");
 
-            updates.push((slot, vec![head, body, tail], n_k));
+            updates.push((slot, segs, n_k));
             slot_losses.push((slot, losses));
         }
 
@@ -277,6 +309,12 @@ impl<'a> BaselineEngine<'a> {
         let mut slot_losses: Vec<(usize, Vec<f64>)> = Vec::new();
         let mut updates: Vec<(usize, Vec<SegmentParams>, usize)> = Vec::new();
 
+        // The client model distributed this round — also the update
+        // compression reference (head/tail only change at aggregation;
+        // the server-side body trains online but never travels here).
+        let dist_segs =
+            vec![self.global.get("head")?.clone(), self.global.get("tail")?.clone()];
+
         for (slot, &cid) in selected.iter().enumerate() {
             if !clock.online(slot) {
                 continue; // offline at round start: no traffic, no compute
@@ -285,10 +323,7 @@ impl<'a> BaselineEngine<'a> {
             let (mut s_end, mut c_end) = channel_pair();
 
             // SFL distributes the client model (head+tail) each round.
-            let payload = Payload::Segments(vec![
-                self.global.get("head")?.clone(),
-                self.global.get("tail")?.clone(),
-            ]);
+            let payload = Payload::Segments(dist_segs.clone());
             let n = s_end.send(
                 &Frame::new(MsgKind::ModelDistribution, r32, cid as u32, payload),
                 WireFormat::F32,
@@ -323,7 +358,12 @@ impl<'a> BaselineEngine<'a> {
                         wire,
                     )?;
                     let (frame, n) = s_end.recv()?;
-                    comm.record(MsgKind::SmashedData, Direction::Uplink, n);
+                    comm.record_with_raw(
+                        MsgKind::SmashedData,
+                        Direction::Uplink,
+                        n,
+                        encoded_frame_len(&frame, WireFormat::F32),
+                    );
                     clock.charge_transfer(slot, n);
                     let server_smashed = frame.payload.into_tensor()?;
 
@@ -366,7 +406,12 @@ impl<'a> BaselineEngine<'a> {
                             wire,
                         )?;
                         let (frame, n) = s_end.recv()?;
-                        comm.record(MsgKind::GradBodyOut, Direction::Uplink, n);
+                        comm.record_with_raw(
+                            MsgKind::GradBodyOut,
+                            Direction::Uplink,
+                            n,
+                            encoded_frame_len(&frame, WireFormat::F32),
+                        );
                         clock.charge_transfer(slot, n);
                         let g_body_out = frame.payload.into_tensor()?;
 
@@ -407,22 +452,39 @@ impl<'a> BaselineEngine<'a> {
                 }
             }
 
-            // --- Uplink: the client model, for aggregation. ---
-            let payload = Payload::Segments(vec![head, tail]);
+            // --- Uplink: the client model, for aggregation
+            // (delta-compressed against the distributed reference when
+            // configured). ---
+            let payload = match self.clients[cid].compress.as_mut() {
+                Some(comp) => Payload::Compressed(comp.compress_update(
+                    &dist_segs.iter().collect::<Vec<_>>(),
+                    &[&head, &tail],
+                )?),
+                None => Payload::Segments(vec![head, tail]),
+            };
             c_end.send(&Frame::new(MsgKind::Upload, r32, cid as u32, payload), wire)?;
             let (frame, n) = s_end.recv()?;
-            comm.record(MsgKind::Upload, Direction::Uplink, n);
+            let segs = match frame.payload {
+                Payload::Compressed(csegs) => {
+                    let refs: Vec<&SegmentParams> = dist_segs.iter().collect();
+                    decompress_update(&refs, &csegs)?
+                }
+                payload => take_segments(payload, &["head", "tail"])?,
+            };
+            comm.record_with_raw(
+                MsgKind::Upload,
+                Direction::Uplink,
+                n,
+                dense_segments_wire_len(&segs.iter().collect::<Vec<_>>()),
+            );
             clock.charge_transfer(slot, n);
             clock.charge_compute(
                 slot,
                 crate::flops::sfl_client_round_flops(&cfg, n_k, self.fed.local_epochs, full_ft),
             );
             clock.mark_done(slot);
-            let mut segs = take_segments(frame.payload, &["head", "tail"])?;
-            let tail = segs.pop().expect("tail");
-            let head = segs.pop().expect("head");
 
-            updates.push((slot, vec![head, tail], n_k));
+            updates.push((slot, segs, n_k));
             slot_losses.push((slot, losses));
         }
 

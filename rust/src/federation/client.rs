@@ -16,6 +16,7 @@ use anyhow::{bail, Result};
 
 use crate::backend::{Backend, PreparedSegment, SegInput, SegmentInputs, TensorInputs};
 use crate::comm::MsgKind;
+use crate::compress::UpdateCompressor;
 use crate::data::{batch_indices, make_batch, Example};
 use crate::model::SegmentParams;
 use crate::runtime::{HostTensor, ModelConfig};
@@ -32,6 +33,10 @@ pub struct Client {
     pub id: usize,
     pub indices: Vec<usize>,
     pub rng: Rng,
+    /// Update compressor + error-feedback residuals for Phase-3 uploads;
+    /// `None` under `Scheme::None`. Engine-installed at construction, so
+    /// residuals persist across every round this client is selected in.
+    pub compress: Option<UpdateCompressor>,
     /// scratch for per-epoch shuffles (avoids an allocation per epoch)
     order: Vec<usize>,
 }
@@ -62,7 +67,7 @@ pub fn top_k_by_score(mut scored: Vec<(usize, f32)>, keep: usize) -> Vec<usize> 
 impl Client {
     pub fn new(id: usize, indices: Vec<usize>, rng: Rng) -> Client {
         let order = indices.clone();
-        Client { id, indices, rng, order }
+        Client { id, indices, rng, compress: None, order }
     }
 
     pub fn num_samples(&self) -> usize {
@@ -270,6 +275,9 @@ pub fn client_split_round(
     }
     let mut prompt = segs.pop().expect("prompt");
     let mut tail = segs.pop().expect("tail");
+    // Update compression works on the delta against this round's
+    // distributed reference; only clone it when a compressor is installed.
+    let reference = client.compress.is_some().then(|| (tail.clone(), prompt.clone()));
 
     let mut local_losses = Vec::new();
     let mut split_losses = Vec::new();
@@ -317,11 +325,17 @@ pub fn client_split_round(
             client.prompt_update(backend, &batch.images, &g_smashed, head, &prompt, fed.lr)?;
     }
 
-    // --- Phase 3: upload for aggregation, wait for the broadcast. ---
-    link.send(
-        &Frame::new(MsgKind::Upload, round, cid, Payload::Segments(vec![tail, prompt])),
-        wire,
-    )?;
+    // --- Phase 3: upload for aggregation, wait for the broadcast.
+    // With compression configured, what crosses the wire is the
+    // error-compensated (tail, prompt) delta against the round's
+    // reference; the server reconstructs before FedAvg. ---
+    let upload = match (client.compress.as_mut(), &reference) {
+        (Some(comp), Some((ref_tail, ref_prompt))) => Payload::Compressed(
+            comp.compress_update(&[ref_tail, ref_prompt], &[&tail, &prompt])?,
+        ),
+        _ => Payload::Segments(vec![tail, prompt]),
+    };
+    link.send(&Frame::new(MsgKind::Upload, round, cid, upload), wire)?;
     let (frame, _) = link.recv()?;
     expect_kind(&frame, MsgKind::AggregateBroadcast, cid)?;
 

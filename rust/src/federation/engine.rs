@@ -35,13 +35,16 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::{Backend, PreparedSegment};
 use crate::comm::{ByteMeter, Direction, MsgKind};
+use crate::compress::{decompress_update, UpdateCompressor};
 use crate::data::SynthDataset;
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
 use crate::runtime::HostTensor;
 use crate::sim::{Fleet, RoundOutcome, SimClock};
-use crate::transport::{Frame, Hub, Payload, WireFormat};
+use crate::transport::{
+    dense_segments_wire_len, encoded_frame_len, Frame, Hub, Payload, WireFormat,
+};
 use crate::util::rng::{seeds, Rng};
 
 use super::client::{client_split_round, Client, ClientRoundOutcome};
@@ -79,11 +82,19 @@ impl<'a> SfPromptEngine<'a> {
         let labels = train.labels();
         let parts =
             partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(seeds::PARTITION_FORK));
-        let clients = parts
+        let mut clients: Vec<Client> = parts
             .into_iter()
             .enumerate()
             .map(|(id, indices)| Client::new(id, indices, rng.fork(seeds::client_fork(id))))
             .collect();
+        if !fed.compress.is_none() {
+            for c in &mut clients {
+                c.compress = Some(UpdateCompressor::new(
+                    fed.compress,
+                    seeds::compress_stream(fed.seed, c.id),
+                ));
+            }
+        }
         let manifest = backend.manifest();
         let global = init_params(manifest, seeds::param_init(fed.seed));
         let head_bytes = manifest.cost.message_bytes["head_params"] as u64;
@@ -125,11 +136,12 @@ impl<'a> SfPromptEngine<'a> {
         let (hub, endpoints) = Hub::new(k);
 
         // --- Round start: distribute the aggregated (W_t, p) to every
-        // reachable client (offline slots get nothing, not even bytes). ---
-        let dist = Payload::Segments(vec![
-            self.global.get("tail")?.clone(),
-            self.global.get("prompt")?.clone(),
-        ]);
+        // reachable client (offline slots get nothing, not even bytes).
+        // The same pair doubles as the compression reference: compressed
+        // uploads are deltas against exactly what was distributed. ---
+        let dist_ref =
+            [self.global.get("tail")?.clone(), self.global.get("prompt")?.clone()];
+        let dist = Payload::Segments(dist_ref.to_vec());
         for (slot, &cid) in selected.iter().enumerate() {
             if !clock.online(slot) {
                 continue;
@@ -202,7 +214,7 @@ impl<'a> SfPromptEngine<'a> {
             // FedAvg the survivors, broadcast. ---
             let agg_result = serve_round(
                 backend, body_prep, &hub, selected_ref, round as u32,
-                &n_ks, &fed, &mut comm, &mut clock,
+                &n_ks, &fed, &dist_ref, &mut comm, &mut clock,
             );
             // Dropping the hub unblocks any client still waiting on a recv
             // after a server-side error.
@@ -327,9 +339,12 @@ impl FederatedRun for SfPromptEngine<'_> {
 /// Server half of one round: route split-training frames from the hub
 /// until every online client has uploaded, resolve the deadline policy,
 /// FedAvg the survivors, and broadcast. Records every encoded frame
-/// length into `comm`; charges each client's transfer bytes and — at
-/// upload time, when its batch count is known — its analytic compute
-/// FLOPs into the round's [`SimClock`].
+/// length into `comm` — uplink frames alongside their dense-f32
+/// equivalent, so the meter's raw-vs-wire split reflects `--wire` and
+/// `--compress` savings — and charges each client's transfer bytes and,
+/// at upload time, its analytic compute FLOPs into the round's
+/// [`SimClock`]. Compressed uploads are reconstructed against `dist_ref`
+/// (the `[tail, prompt]` pair distributed at round start) before FedAvg.
 ///
 /// Returns the aggregate (None when every selected client was offline)
 /// and the resolved [`RoundOutcome`].
@@ -342,6 +357,7 @@ fn serve_round(
     round: u32,
     n_ks: &[usize],
     fed: &FedConfig,
+    dist_ref: &[SegmentParams; 2],
     comm: &mut ByteMeter,
     clock: &mut SimClock,
 ) -> Result<(Option<(SegmentParams, SegmentParams)>, RoundOutcome)> {
@@ -361,7 +377,17 @@ fn serve_round(
     while pending > 0 {
         let (frame, n) = hub.recv_any()?;
         let slot = slot_of(frame.client)?;
-        comm.record(frame.kind, Direction::Uplink, n);
+        // Compressed uploads record their raw equivalent only after
+        // reconstruction (below); every other uplink frame is dense
+        // already, so its f32 re-measure is the raw side directly.
+        if !matches!(frame.payload, Payload::Compressed(_)) {
+            comm.record_with_raw(
+                frame.kind,
+                Direction::Uplink,
+                n,
+                encoded_frame_len(&frame, WireFormat::F32),
+            );
+        }
         clock.charge_transfer(slot, n);
         match frame.kind {
             MsgKind::SmashedData => {
@@ -390,7 +416,22 @@ fn serve_round(
                 clock.charge_transfer(slot, nb);
             }
             MsgKind::Upload => {
-                let mut segs = frame.payload.into_segments()?;
+                let mut segs = match frame.payload {
+                    Payload::Compressed(csegs) => {
+                        let refs: Vec<&SegmentParams> = dist_ref.iter().collect();
+                        let segs = decompress_update(&refs, &csegs).map_err(|e| {
+                            e.context(format!("client {}: compressed upload", frame.client))
+                        })?;
+                        comm.record_with_raw(
+                            MsgKind::Upload,
+                            Direction::Uplink,
+                            n,
+                            dense_segments_wire_len(&segs.iter().collect::<Vec<_>>()),
+                        );
+                        segs
+                    }
+                    payload => payload.into_segments()?,
+                };
                 if segs.len() != 2 {
                     return Err(anyhow!(
                         "client {}: malformed upload ({} segments)",

@@ -75,6 +75,11 @@ pub struct FedConfig {
     /// wire precision for uplink payloads (SmashedData, GradBodyOut,
     /// Upload); downlink and control traffic always travels as f32
     pub wire: crate::transport::WireFormat,
+    /// update compression for Phase-3 uploads (`Upload`, and FL's uplink
+    /// `FullModel`): none | topk | randk | quant, applied to the
+    /// client-minus-reference delta with per-client error feedback for
+    /// the sparsifiers (docs/COMPRESS.md)
+    pub compress: crate::compress::Scheme,
 }
 
 impl FedConfig {
@@ -101,6 +106,7 @@ impl Default for FedConfig {
             eval_every: 1,
             selection: Selection::Uniform,
             wire: crate::transport::WireFormat::F32,
+            compress: crate::compress::Scheme::None,
         }
     }
 }

@@ -148,6 +148,14 @@ impl RunBuilder {
         self
     }
 
+    /// Update-compression scheme for Phase-3 uploads (docs/COMPRESS.md):
+    /// `Scheme::None` (default), top-k / rand-k sparsification with error
+    /// feedback, or QSGD-style stochastic quantization.
+    pub fn compress(mut self, scheme: crate::compress::Scheme) -> RunBuilder {
+        self.fed.compress = scheme;
+        self
+    }
+
     pub fn eval_limit(mut self, limit: Option<usize>) -> RunBuilder {
         self.fed.eval_limit = limit;
         self
@@ -244,6 +252,7 @@ impl RunBuilder {
         if f.eval_every == 0 {
             bail!("eval_every must be at least 1");
         }
+        f.compress.validate()?;
         if let Partition::Dirichlet { alpha } = f.partition {
             if !alpha.is_finite() || alpha <= 0.0 {
                 bail!("dirichlet alpha must be positive and finite, got {alpha}");
@@ -382,6 +391,22 @@ mod tests {
         assert!(base().rounds(0).validate().is_err());
         assert!(base().local_epochs(0).validate().is_err());
         assert!(base().eval_every(0).validate().is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_compress_schemes() {
+        use crate::compress::Scheme;
+        for bad in [
+            Scheme::TopK { ratio: 0.0 },
+            Scheme::TopK { ratio: 1.5 },
+            Scheme::RandK { ratio: f64::NAN },
+            Scheme::Quant { bits: 1 },
+            Scheme::Quant { bits: 9 },
+        ] {
+            assert!(base().compress(bad).validate().is_err(), "{bad:?}");
+        }
+        assert!(base().compress(Scheme::TopK { ratio: 0.01 }).validate().is_ok());
+        assert!(base().compress(Scheme::None).validate().is_ok());
     }
 
     #[test]

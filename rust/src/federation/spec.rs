@@ -16,6 +16,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::backend::{open_backend, Backend, BackendChoice};
+use crate::compress::Scheme;
 use crate::data::{synth, SynthDataset};
 use crate::metrics::RunHistory;
 use crate::partition::Partition;
@@ -128,10 +129,10 @@ impl RunSpec {
     }
 
     pub fn from_json(v: &Json) -> Result<RunSpec> {
-        const KNOWN: [&str; 21] = [
+        const KNOWN: [&str; 22] = [
             "config", "dataset", "method", "backend", "rounds", "num_clients",
             "clients_per_round", "local_epochs", "lr", "retain_fraction", "local_loss_update",
-            "partition", "seed", "eval_limit", "eval_every", "selection", "wire",
+            "partition", "seed", "eval_limit", "eval_every", "selection", "wire", "compress",
             "samples_per_client", "eval_samples", "net_rate_bytes_per_s", "fleet",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("run spec must be a JSON object"))?;
@@ -225,6 +226,12 @@ impl RunSpec {
                 j.as_str().ok_or_else(|| anyhow!("spec key \"wire\" must be a string"))?,
             )?,
         };
+        spec.fed.compress = match obj.get("compress") {
+            None => d.compress,
+            Some(j) => Scheme::parse(
+                j.as_str().ok_or_else(|| anyhow!("spec key \"compress\" must be a string"))?,
+            )?,
+        };
         spec.samples_per_client = usize_field("samples_per_client", spec.samples_per_client)?;
         spec.eval_samples = usize_field("eval_samples", spec.eval_samples)?;
         spec.net_rate_bytes_per_s = match obj.get("net_rate_bytes_per_s") {
@@ -272,6 +279,9 @@ impl RunSpec {
         o.insert("eval_every".to_string(), Json::Num(f.eval_every as f64));
         o.insert("selection".to_string(), Json::Str(f.selection.label().to_string()));
         o.insert("wire".to_string(), Json::Str(f.wire.label().to_string()));
+        if !f.compress.is_none() {
+            o.insert("compress".to_string(), Json::Str(f.compress.label()));
+        }
         o.insert("samples_per_client".to_string(), Json::Num(self.samples_per_client as f64));
         o.insert("eval_samples".to_string(), Json::Num(self.eval_samples as f64));
         if let Some(rate) = self.net_rate_bytes_per_s {
@@ -347,6 +357,11 @@ impl RunReport {
                 o.insert("split_loss".to_string(), num_or_null(r.mean_split_loss));
                 o.insert("accuracy".to_string(), num_or_null(r.eval_accuracy));
                 o.insert("bytes".to_string(), Json::Num(r.comm.total() as f64));
+                o.insert("raw_bytes".to_string(), Json::Num(r.comm.raw_total() as f64));
+                o.insert(
+                    "compression_ratio".to_string(),
+                    num_or_null(r.comm.compression_ratio()),
+                );
                 o.insert("messages".to_string(), Json::Num(r.comm.messages as f64));
                 o.insert("sim_latency_s".to_string(), num_or_null(r.sim_latency_s));
                 o.insert("wall_s".to_string(), num_or_null(r.wall_s));
@@ -362,13 +377,25 @@ impl RunReport {
             .iter()
             .map(|(kind, &bytes)| (kind.to_string(), Json::Num(bytes as f64)))
             .collect();
+        let by_kind_raw: BTreeMap<String, Json> = h
+            .total_comm
+            .raw_by_kind
+            .iter()
+            .map(|(kind, &bytes)| (kind.to_string(), Json::Num(bytes as f64)))
+            .collect();
         let mut comm = BTreeMap::new();
         comm.insert("total_bytes".to_string(), Json::Num(h.total_comm.total() as f64));
+        comm.insert("raw_bytes".to_string(), Json::Num(h.total_comm.raw_total() as f64));
+        comm.insert(
+            "compression_ratio".to_string(),
+            num_or_null(h.total_comm.compression_ratio()),
+        );
         comm.insert("uplink_bytes".to_string(), Json::Num(h.total_comm.uplink as f64));
         comm.insert("downlink_bytes".to_string(), Json::Num(h.total_comm.downlink as f64));
         comm.insert("messages".to_string(), Json::Num(h.total_comm.messages as f64));
         comm.insert("setup_bytes".to_string(), Json::Num(self.setup_bytes as f64));
         comm.insert("by_kind".to_string(), Json::Obj(by_kind));
+        comm.insert("by_kind_raw".to_string(), Json::Obj(by_kind_raw));
 
         let mut o = BTreeMap::new();
         o.insert("spec".to_string(), self.spec.to_json());
@@ -398,6 +425,7 @@ mod tests {
         spec.backend = BackendChoice::Pjrt;
         spec.fed.partition = Partition::Dirichlet { alpha: 0.25 };
         spec.fed.wire = WireFormat::Int8;
+        spec.fed.compress = Scheme::TopK { ratio: 0.01 };
         spec.fed.selection = Selection::WeightedBySamples;
         spec.fed.eval_limit = None;
         spec.fed.rounds = 7;
@@ -414,6 +442,7 @@ mod tests {
         assert_eq!(back.config, "small_c100");
         assert_eq!(back.fed.rounds, 7);
         assert_eq!(back.fed.wire, WireFormat::Int8);
+        assert_eq!(back.fed.compress, Scheme::TopK { ratio: 0.01 });
         assert_eq!(back.fed.selection, Selection::WeightedBySamples);
         assert!(back.fed.eval_limit.is_none());
         assert!(!back.fed.local_loss_update);
@@ -432,7 +461,16 @@ mod tests {
         assert_eq!(spec.fed.eval_limit, Some(160));
         assert_eq!(spec.backend, BackendChoice::Native, "native is the default substrate");
         assert!(spec.net_rate_bytes_per_s.is_none());
+        assert_eq!(spec.fed.compress, Scheme::None, "compression defaults off");
+        assert!(
+            !spec.to_json().to_string().contains("compress"),
+            "scheme none stays out of the JSON"
+        );
         spec.builder().validate().unwrap();
+
+        let compressed = RunSpec::parse(r#"{"compress": "randk:0.05"}"#).unwrap();
+        assert_eq!(compressed.fed.compress, Scheme::RandK { ratio: 0.05 });
+        assert!(compressed.to_json().to_string().contains("\"compress\":\"randk:0.05\""));
     }
 
     #[test]
@@ -443,6 +481,10 @@ mod tests {
         assert!(RunSpec::parse(r#"{"backend": "cuda"}"#).is_err());
         assert!(RunSpec::parse(r#"{"partition": "zipf"}"#).is_err());
         assert!(RunSpec::parse(r#"{"wire": "bf16"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"compress": "topk"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"compress": "topk:0"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"compress": "quant:9"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"compress": 4}"#).is_err());
         assert!(RunSpec::parse(r#"{"rounds": "ten"}"#).is_err());
         assert!(RunSpec::parse(r#"{"rounds": -2}"#).is_err());
         assert!(RunSpec::parse("{").is_err());
@@ -535,6 +577,18 @@ mod tests {
         let comm = v.get("comm").unwrap();
         assert_eq!(comm.get("setup_bytes").unwrap().as_usize(), Some(123));
         assert_eq!(comm.get("total_bytes").unwrap().as_usize(), Some(320));
+        assert_eq!(
+            comm.get("raw_bytes").unwrap().as_usize(),
+            Some(320),
+            "plain records carry raw == wire"
+        );
+        assert_eq!(comm.get("compression_ratio").unwrap().as_f64(), Some(1.0));
+        assert_eq!(
+            comm.get("by_kind_raw").unwrap().get("smashed_data").unwrap().as_usize(),
+            Some(200)
+        );
+        assert_eq!(rounds[0].get("raw_bytes").unwrap().as_usize(), Some(160));
+        assert_eq!(rounds[0].get("compression_ratio").unwrap().as_f64(), Some(1.0));
         assert_eq!(
             comm.get("by_kind").unwrap().get("smashed_data").unwrap().as_usize(),
             Some(200)

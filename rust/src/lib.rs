@@ -82,6 +82,25 @@
 //! accuracy/bytes trade-off, and `experiment --id wire` tabulates analytic
 //! vs measured vs quantized bytes per message kind.
 //!
+//! ## Update compression ([`compress`])
+//!
+//! On top of scalar precision, Phase-3 uploads can be **compressed as
+//! updates** ([`compress::Scheme`]; `train --compress
+//! topk:0.01|randk:0.05|quant:4`, `RunBuilder::compress`, the
+//! `"compress"` RunSpec key): top-k / rand-k sparsification with
+//! per-client **error-feedback residuals** (dropped coordinates
+//! accumulate and ship later, preserving convergence) or QSGD-style
+//! stochastic quantization. Clients compress the delta against the
+//! round's distributed reference before `Transport::send`; the wire
+//! carries sparse frames (varint or bitmap coordinates, packed codes,
+//! dense fallback — never larger than dense, property-tested); the server
+//! decompresses before FedAvg. [`comm::ByteMeter`] meters both the wire
+//! frames and their dense-f32 equivalent, so reports carry per-kind
+//! raw-vs-wire bytes and a measured compression ratio, and the fleet
+//! simulator's round time shrinks with the real byte savings.
+//! `experiment --id compress` sweeps scheme × ratio into an
+//! accuracy-vs-uploaded-bytes table (docs/COMPRESS.md).
+//!
 //! In the SFPrompt engine each selected client runs its round on its own
 //! thread against the server's [`transport::Hub`], so Phase-2 split
 //! training is genuinely concurrent (every [`backend::Backend`] is `Sync`).
@@ -106,6 +125,7 @@
 pub mod analysis;
 pub mod backend;
 pub mod comm;
+pub mod compress;
 pub mod data;
 pub mod experiments;
 pub mod federation;

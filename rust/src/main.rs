@@ -11,6 +11,7 @@ use anyhow::{Context, Result};
 
 use sfprompt::analysis::{fl_crossover_w_bytes, sweep, CostParams};
 use sfprompt::backend::BackendChoice;
+use sfprompt::compress::Scheme;
 use sfprompt::experiments::{self, ExpOptions};
 use sfprompt::federation::{
     drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec,
@@ -32,9 +33,10 @@ USAGE:
                       [--rounds N] [--clients N] [--per-round K] [--epochs U]
                       [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
                       [--noniid] [--alpha F] [--seed N] [--samples-per-client N]
-                      [--no-local-loss] [--wire f32|f16|int8] [--net-rate BYTES_PER_S]
+                      [--no-local-loss] [--wire f32|f16|int8]
+                      [--compress none|topk:R|randk:R|quant:B] [--net-rate BYTES_PER_S]
                       [--fleet <name|FILE.json>] [--deadline-s F] [--quorum N]
-  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|all>
+  sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|compress|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
 
@@ -52,6 +54,11 @@ pareto | dropout | diurnal | ideal) or a FleetSpec JSON file — and
 `--deadline-s`/`--quorum` enable deadline-based rounds (the server
 aggregates whoever finishes in time, doubling the deadline until the
 quorum is met). See docs/FLEET.md.
+
+`--compress` sparsifies or quantizes Phase-3 uploads (top-k / rand-k keep
+a fraction R of coordinates with per-client error feedback; quant:B is
+B-bit stochastic quantization); measured raw-vs-wire bytes and the
+compression ratio land in the report. See docs/COMPRESS.md.
 ";
 
 fn main() {
@@ -135,6 +142,7 @@ fn spec_from_args(args: &Args) -> Result<RunSpec> {
     f.eval_limit = Some(args.get_parse("eval-limit", 160usize));
     f.eval_every = args.get_parse("eval-every", f.eval_every);
     f.wire = WireFormat::parse(args.get_or("wire", "f32"))?;
+    f.compress = Scheme::parse(args.get_or("compress", "none"))?;
     spec.samples_per_client = args.get_parse("samples-per-client", spec.samples_per_client);
     if let Some(rate) = args.get("net-rate") {
         spec.net_rate_bytes_per_s = Some(
@@ -243,10 +251,10 @@ fn train(args: &Args) -> Result<()> {
         let fed = run.fed();
         println!(
             "train: config={} backend={} dataset={} method={} rounds={} clients={}x{} U={} \
-             γ_retain={} wire={}",
+             γ_retain={} wire={} compress={}",
             spec.config, backend.name(), spec.dataset, spec.method.label(), fed.rounds,
             fed.clients_per_round, fed.num_clients, fed.local_epochs,
-            fed.retain_fraction, fed.wire.label()
+            fed.retain_fraction, fed.wire.label(), fed.compress.label()
         );
     }
     let hist = if json_out {
@@ -274,6 +282,14 @@ fn train(args: &Args) -> Result<()> {
     }
     for (kind, bytes) in &hist.total_comm.by_kind {
         println!("  {kind:<22} {:.3} MB", *bytes as f64 / 1e6);
+    }
+    if hist.total_comm.raw_total() > hist.total_comm.total() {
+        println!(
+            "  compression: {:.3} MB dense-f32 -> {:.3} MB wire (ratio {:.4})",
+            hist.total_comm.raw_total() as f64 / 1e6,
+            hist.total_comm.mb(),
+            hist.total_comm.compression_ratio()
+        );
     }
     if args.has_flag("stats") {
         println!("\nper-stage execution stats (desc by total exec time):");

@@ -11,23 +11,30 @@
 //! [ u32 crc32 ]                         over header + payload
 //! ```
 //!
-//! Payload encoding: a tag byte (`0` segment list, `1` tensor, `2` empty),
-//! then length-prefixed names and tensors. Each tensor carries its own
-//! element-encoding tag (f32 raw / i32 raw / f16 / int8-affine), so a
-//! decoder never needs out-of-band context. No serde: the offline registry
-//! carries none, so this follows the `util/json.rs` hand-rolled precedent.
+//! Payload encoding: a tag byte (`0` segment list, `1` tensor, `2` empty,
+//! `3` compressed segment list), then length-prefixed names and tensors.
+//! Each tensor carries its own element-encoding tag (f32 raw / i32 raw /
+//! f16 / int8-affine), so a decoder never needs out-of-band context.
+//! Compressed tensors (docs/COMPRESS.md) carry a per-tensor layout tag:
+//! sparse coordinates as varint index deltas or a dense bitmap (whichever
+//! is smaller), packed QSGD codes, or a dense fallback when no sparse
+//! layout would save bytes — so a compressed frame is never larger than
+//! its dense equivalent. No serde: the offline registry carries none, so
+//! this follows the `util/json.rs` hand-rolled precedent.
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::comm::MsgKind;
+use crate::compress::{qsgd_levels, CompressedRepr, CompressedSegment, CompressedTensor};
 use crate::model::SegmentParams;
 use crate::runtime::{HostTensor, TensorData};
 
 use super::crc32::crc32;
 use super::encode::{decode_f32s, encode_f32s, encoded_f32_len, WireFormat};
 
-/// Protocol version stamped into every frame header.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version stamped into every frame header. v2 added the
+/// compressed payload (tag 3) for sparse/quantized uploads.
+pub const WIRE_VERSION: u8 = 2;
 
 const MAGIC: [u8; 2] = *b"SF";
 
@@ -47,6 +54,15 @@ const ENC_INT8: u8 = 3;
 const PAYLOAD_SEGMENTS: u8 = 0;
 const PAYLOAD_TENSOR: u8 = 1;
 const PAYLOAD_EMPTY: u8 = 2;
+const PAYLOAD_COMPRESSED: u8 = 3;
+
+/// Per-compressed-tensor layouts (docs/COMPRESS.md). The encoder picks
+/// whichever is smallest for the tensor at hand, so compressed frames
+/// never exceed their dense-f32 equivalent.
+const LAYOUT_DENSE: u8 = 0;
+const LAYOUT_SPARSE_VARINT: u8 = 1;
+const LAYOUT_SPARSE_BITMAP: u8 = 2;
+const LAYOUT_QSGD: u8 = 3;
 
 /// Decode-side sanity cap: refuse frames claiming more elements than this
 /// in a single tensor (256 Mi elements = 1 GiB of f32), so a corrupted
@@ -63,6 +79,9 @@ pub enum Payload {
     Tensor(HostTensor),
     /// Control frames (e.g. `Abort`) carry no data.
     Empty,
+    /// Compressed update segments (sparse / quantized Phase-3 uploads;
+    /// the server decompresses against its reference before FedAvg).
+    Compressed(Vec<CompressedSegment>),
 }
 
 impl Payload {
@@ -80,11 +99,19 @@ impl Payload {
         }
     }
 
+    pub fn into_compressed(self) -> Result<Vec<CompressedSegment>> {
+        match self {
+            Payload::Compressed(s) => Ok(s),
+            other => bail!("expected compressed payload, got {}", other.label()),
+        }
+    }
+
     fn label(&self) -> &'static str {
         match self {
             Payload::Segments(_) => "segments",
             Payload::Tensor(_) => "tensor",
             Payload::Empty => "empty",
+            Payload::Compressed(_) => "compressed",
         }
     }
 }
@@ -152,6 +179,273 @@ fn encode_tensor(t: &HostTensor, wire: WireFormat, out: &mut Vec<u8>) -> Result<
     Ok(())
 }
 
+// ------------------------------------------------- compressed tensors
+
+/// LEB128 length of one u32.
+fn varint_len(mut v: u32) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u32) {
+    while v >= 0x80 {
+        out.push((v & 0x7F) as u8 | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Byte cost of the sparse index stream as varint deltas: the first index
+/// raw, then successive gaps (always ≥ 1 for sorted unique indices).
+fn varint_indices_len(indices: &[u32]) -> usize {
+    let mut len = 0;
+    let mut prev = 0u32;
+    for (i, &idx) in indices.iter().enumerate() {
+        len += varint_len(if i == 0 { idx } else { idx - prev });
+        prev = idx;
+    }
+    len
+}
+
+/// The layout the encoder picks for a compressed tensor, with its exact
+/// data length (everything after the `layout, rank, dims` header). Shared
+/// by [`encoded_frame_len`] and the encoder so lengths never drift.
+fn compressed_layout(t: &CompressedTensor) -> Result<(u8, usize)> {
+    let n = t.element_count();
+    let dense = 4 * n;
+    match &t.repr {
+        CompressedRepr::Dense(values) => {
+            if values.len() != n {
+                bail!("dense repr carries {} values for {n} elements", values.len());
+            }
+            Ok((LAYOUT_DENSE, dense))
+        }
+        CompressedRepr::Sparse { indices, values } => {
+            if indices.len() != values.len() {
+                bail!("sparse repr: {} indices vs {} values", indices.len(), values.len());
+            }
+            let mut prev: Option<u32> = None;
+            for &i in indices {
+                if (i as usize) >= n {
+                    bail!("sparse index {i} out of range for {n} elements");
+                }
+                if prev.is_some_and(|p| i <= p) {
+                    bail!("sparse indices must be strictly increasing");
+                }
+                prev = Some(i);
+            }
+            let nnz = indices.len();
+            let varint = 4 + varint_indices_len(indices) + 4 * nnz;
+            let bitmap = n.div_ceil(8) + 4 * nnz;
+            // Smallest wins; ties prefer the index list (cheaper to scan).
+            if varint <= bitmap && varint <= dense {
+                Ok((LAYOUT_SPARSE_VARINT, varint))
+            } else if bitmap <= dense {
+                Ok((LAYOUT_SPARSE_BITMAP, bitmap))
+            } else {
+                Ok((LAYOUT_DENSE, dense))
+            }
+        }
+        CompressedRepr::Qsgd { bits, scale, codes } => {
+            if !(2..=8).contains(bits) {
+                bail!("qsgd bits must be in 2..=8, got {bits}");
+            }
+            if !scale.is_finite() || *scale < 0.0 {
+                bail!("qsgd scale must be finite and non-negative, got {scale}");
+            }
+            if codes.len() != n {
+                bail!("qsgd repr carries {} codes for {n} elements", codes.len());
+            }
+            let packed = 5 + (n * *bits as usize).div_ceil(8);
+            // Tiny tensors where the scale header dominates fall back to
+            // dense *dequantized* values — identical reconstruction,
+            // never more bytes than dense.
+            if packed <= dense {
+                Ok((LAYOUT_QSGD, packed))
+            } else {
+                Ok((LAYOUT_DENSE, dense))
+            }
+        }
+    }
+}
+
+/// Exact encoded size of one compressed tensor (header + data).
+fn compressed_tensor_len(t: &CompressedTensor) -> Result<usize> {
+    Ok(2 + 4 * t.shape.len() + compressed_layout(t)?.1)
+}
+
+fn encode_compressed_tensor(t: &CompressedTensor, out: &mut Vec<u8>) -> Result<()> {
+    if t.shape.len() > MAX_RANK {
+        bail!("tensor rank {} exceeds wire maximum {MAX_RANK}", t.shape.len());
+    }
+    for &d in &t.shape {
+        if d > u32::MAX as usize {
+            bail!("tensor dim {d} exceeds u32");
+        }
+    }
+    let (layout, _) = compressed_layout(t)?;
+    out.push(layout);
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    let n = t.element_count();
+    match (layout, &t.repr) {
+        (LAYOUT_DENSE, _) => {
+            // Dense fallback: materialise the reconstruction (for Dense
+            // reprs this is the values themselves).
+            for x in t.decompress()? {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        (LAYOUT_SPARSE_VARINT, CompressedRepr::Sparse { indices, values }) => {
+            out.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+            let mut prev = 0u32;
+            for (i, &idx) in indices.iter().enumerate() {
+                push_varint(out, if i == 0 { idx } else { idx - prev });
+                prev = idx;
+            }
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        (LAYOUT_SPARSE_BITMAP, CompressedRepr::Sparse { indices, values }) => {
+            let mut bitmap = vec![0u8; n.div_ceil(8)];
+            for &i in indices {
+                bitmap[i as usize / 8] |= 1 << (i % 8);
+            }
+            out.extend_from_slice(&bitmap);
+            for &v in values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        (LAYOUT_QSGD, CompressedRepr::Qsgd { bits, scale, codes }) => {
+            out.push(*bits);
+            out.extend_from_slice(&scale.to_le_bytes());
+            let mut packed = vec![0u8; (n * *bits as usize).div_ceil(8)];
+            for (i, &c) in codes.iter().enumerate() {
+                let bit = i * *bits as usize;
+                let word = (c as u16) << (bit % 8);
+                packed[bit / 8] |= word as u8;
+                if bit % 8 + *bits as usize > 8 {
+                    packed[bit / 8 + 1] |= (word >> 8) as u8;
+                }
+            }
+            out.extend_from_slice(&packed);
+        }
+        _ => unreachable!("compressed_layout pairs layouts with reprs"),
+    }
+    Ok(())
+}
+
+fn decode_compressed_tensor(r: &mut Reader) -> Result<CompressedTensor> {
+    let layout = r.u8()?;
+    let (shape, n) = read_shape(r)?;
+    let repr = match layout {
+        LAYOUT_DENSE => CompressedRepr::Dense(read_f32s(r, n)?),
+        LAYOUT_SPARSE_VARINT => {
+            let nnz = r.u32()? as usize;
+            if nnz > n {
+                bail!("sparse tensor claims {nnz} nonzeros in {n} elements");
+            }
+            let mut indices = Vec::with_capacity(nnz);
+            let mut prev = 0u32;
+            for i in 0..nnz {
+                let v = r.varint()?;
+                let idx = if i == 0 {
+                    v
+                } else {
+                    if v == 0 {
+                        bail!("sparse index gap of zero (duplicate coordinate)");
+                    }
+                    prev.checked_add(v)
+                        .ok_or_else(|| anyhow!("sparse index overflows u32"))?
+                };
+                if (idx as usize) >= n {
+                    bail!("sparse index {idx} out of range for {n} elements");
+                }
+                indices.push(idx);
+                prev = idx;
+            }
+            let values = read_f32s(r, nnz)?;
+            CompressedRepr::Sparse { indices, values }
+        }
+        LAYOUT_SPARSE_BITMAP => {
+            let bitmap = r.take(n.div_ceil(8))?;
+            let mut indices = Vec::new();
+            for (byte_i, &b) in bitmap.iter().enumerate() {
+                for bit in 0..8 {
+                    if b & (1 << bit) != 0 {
+                        let idx = byte_i * 8 + bit;
+                        if idx >= n {
+                            bail!("sparse bitmap sets bit {idx} beyond {n} elements");
+                        }
+                        indices.push(idx as u32);
+                    }
+                }
+            }
+            let values = read_f32s(r, indices.len())?;
+            CompressedRepr::Sparse { indices, values }
+        }
+        LAYOUT_QSGD => {
+            let bits = r.u8()?;
+            if !(2..=8).contains(&bits) {
+                bail!("qsgd bits must be in 2..=8, got {bits}");
+            }
+            let scale = f32::from_le_bytes(r.take(4)?.try_into().expect("4 bytes"));
+            // The encoder only ever emits finite scales; an inf here would
+            // dequantize to ±inf values and `0·inf = NaN` — reject it like
+            // any other malformed untrusted input.
+            if !scale.is_finite() || scale < 0.0 {
+                bail!("qsgd scale must be finite and non-negative, got {scale}");
+            }
+            let packed = r.take((n * bits as usize).div_ceil(8))?;
+            let max_code = 2 * qsgd_levels(bits);
+            let mut codes = Vec::with_capacity(n);
+            for i in 0..n {
+                let bit = i * bits as usize;
+                let mut word = packed[bit / 8] as u16 >> (bit % 8);
+                if bit % 8 + bits as usize > 8 {
+                    word |= (packed[bit / 8 + 1] as u16) << (8 - bit % 8);
+                }
+                let code = (word & ((1 << bits) - 1)) as u8;
+                if code > max_code {
+                    bail!("qsgd code {code} exceeds level range 0..={max_code}");
+                }
+                codes.push(code);
+            }
+            CompressedRepr::Qsgd { bits, scale, codes }
+        }
+        other => bail!("unknown compressed-tensor layout {other}"),
+    };
+    Ok(CompressedTensor { shape, repr })
+}
+
+/// Exact frame length `segs` would occupy sent densely at f32 — the "raw"
+/// numerator of the compression accounting in `ByteMeter` (no frame is
+/// built).
+pub fn dense_segments_wire_len(segs: &[&SegmentParams]) -> usize {
+    FRAME_OVERHEAD
+        + 1
+        + 2
+        + segs
+            .iter()
+            .map(|sp| {
+                2 + sp.segment.len()
+                    + 2
+                    + sp
+                        .tensors
+                        .iter()
+                        .map(|t| tensor_payload_len(t, WireFormat::F32))
+                        .sum::<usize>()
+            })
+            .sum::<usize>()
+}
+
 fn encode_payload(payload: &Payload, wire: WireFormat, out: &mut Vec<u8>) -> Result<()> {
     match payload {
         Payload::Segments(segs) => {
@@ -181,11 +475,35 @@ fn encode_payload(payload: &Payload, wire: WireFormat, out: &mut Vec<u8>) -> Res
             encode_tensor(t, wire, out)?;
         }
         Payload::Empty => out.push(PAYLOAD_EMPTY),
+        Payload::Compressed(segs) => {
+            if segs.len() > u16::MAX as usize {
+                bail!("too many segments ({})", segs.len());
+            }
+            out.push(PAYLOAD_COMPRESSED);
+            out.extend_from_slice(&(segs.len() as u16).to_le_bytes());
+            for sp in segs {
+                let name = sp.segment.as_bytes();
+                if name.len() > u16::MAX as usize {
+                    bail!("segment name too long ({} bytes)", name.len());
+                }
+                if sp.tensors.len() > u16::MAX as usize {
+                    bail!("segment {} has too many tensors", sp.segment);
+                }
+                out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+                out.extend_from_slice(name);
+                out.extend_from_slice(&(sp.tensors.len() as u16).to_le_bytes());
+                for t in &sp.tensors {
+                    encode_compressed_tensor(t, out)?;
+                }
+            }
+        }
     }
     Ok(())
 }
 
-/// Exact encoded length of a frame without building it (accounting, tests).
+/// Exact encoded length of a frame without building it (accounting,
+/// tests). For malformed compressed payloads — which [`encode_frame`]
+/// would reject — the compressed tensors contribute zero.
 pub fn encoded_frame_len(frame: &Frame, wire: WireFormat) -> usize {
     let payload = match &frame.payload {
         Payload::Segments(segs) => {
@@ -201,6 +519,21 @@ pub fn encoded_frame_len(frame: &Frame, wire: WireFormat) -> usize {
         }
         Payload::Tensor(t) => 1 + tensor_payload_len(t, wire),
         Payload::Empty => 1,
+        Payload::Compressed(segs) => {
+            1 + 2
+                + segs
+                    .iter()
+                    .map(|sp| {
+                        2 + sp.segment.len()
+                            + 2
+                            + sp
+                                .tensors
+                                .iter()
+                                .map(|t| compressed_tensor_len(t).unwrap_or(0))
+                                .sum::<usize>()
+                    })
+                    .sum::<usize>()
+        }
     };
     FRAME_OVERHEAD + payload
 }
@@ -263,10 +596,23 @@ impl<'a> Reader<'a> {
         let b = self.take(4)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
+
+    /// LEB128 u32 (at most 5 bytes; the fifth may carry 4 bits).
+    fn varint(&mut self) -> Result<u32> {
+        let mut v = 0u64;
+        for shift in (0..35).step_by(7) {
+            let b = self.u8()?;
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                return u32::try_from(v).map_err(|_| anyhow!("varint exceeds u32"));
+            }
+        }
+        bail!("varint longer than 5 bytes")
+    }
 }
 
-fn decode_tensor(r: &mut Reader) -> Result<HostTensor> {
-    let enc = r.u8()?;
+/// Read `rank, dims` with the same overflow/size guards as dense tensors.
+fn read_shape(r: &mut Reader) -> Result<(Vec<usize>, usize)> {
     let rank = r.u8()? as usize;
     if rank > MAX_RANK {
         bail!("tensor rank {rank} exceeds wire maximum {MAX_RANK}");
@@ -283,6 +629,20 @@ fn decode_tensor(r: &mut Reader) -> Result<HostTensor> {
     if elements > MAX_ELEMENTS {
         bail!("tensor claims {elements} elements (cap {MAX_ELEMENTS})");
     }
+    Ok((shape, elements))
+}
+
+fn read_f32s(r: &mut Reader, n: usize) -> Result<Vec<f32>> {
+    let bytes = r.take(n * 4)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn decode_tensor(r: &mut Reader) -> Result<HostTensor> {
+    let enc = r.u8()?;
+    let (shape, elements) = read_shape(r)?;
     match enc {
         ENC_I32 => {
             let bytes = r.take(elements * 4)?;
@@ -328,6 +688,23 @@ fn decode_payload(r: &mut Reader) -> Result<Payload> {
         }
         PAYLOAD_TENSOR => Ok(Payload::Tensor(decode_tensor(r)?)),
         PAYLOAD_EMPTY => Ok(Payload::Empty),
+        PAYLOAD_COMPRESSED => {
+            let count = r.u16()? as usize;
+            let mut segs = Vec::with_capacity(count.min(64));
+            for _ in 0..count {
+                let name_len = r.u16()? as usize;
+                let name = std::str::from_utf8(r.take(name_len)?)
+                    .map_err(|_| anyhow!("segment name is not utf-8"))?
+                    .to_string();
+                let n_tensors = r.u16()? as usize;
+                let mut tensors = Vec::with_capacity(n_tensors.min(1024));
+                for _ in 0..n_tensors {
+                    tensors.push(decode_compressed_tensor(r)?);
+                }
+                segs.push(CompressedSegment { segment: name, tensors });
+            }
+            Ok(Payload::Compressed(segs))
+        }
         other => bail!("unknown payload tag {other}"),
     }
 }
@@ -474,5 +851,172 @@ mod tests {
         let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
         assert_eq!(bytes.len(), FRAME_OVERHEAD + 1);
         assert_eq!(decode_frame(&bytes).unwrap(), frame);
+    }
+
+    // Regression (transport::encode): a constant tensor has max == min, so
+    // the affine int8 quantizer's scale denominator is zero. The guard must
+    // emit scale = 0 with the constant as the base, and the full frame
+    // round-trip must reproduce the constant BIT-exactly — not NaN, not a
+    // divided-by-zero artifact.
+    #[test]
+    fn int8_constant_tensor_frame_roundtrips_exactly() {
+        for c in [3.25f32, -7.5, 0.0, f32::MIN_POSITIVE, 1e30] {
+            let t = HostTensor::f32(vec![2, 3], vec![c; 6]);
+            let frame = Frame::new(MsgKind::SmashedData, 0, 1, Payload::Tensor(t));
+            let bytes = encode_frame(&frame, WireFormat::Int8).unwrap();
+            let back = decode_frame(&bytes).unwrap().payload.into_tensor().unwrap();
+            for v in back.as_f32() {
+                assert_eq!(v.to_bits(), c.to_bits(), "constant {c} did not survive int8");
+            }
+        }
+        // Single-element tensors are constant by definition.
+        let t = HostTensor::f32(vec![1], vec![-0.625]);
+        let frame = Frame::new(MsgKind::GradBodyOut, 1, 2, Payload::Tensor(t));
+        let back = decode_frame(&encode_frame(&frame, WireFormat::Int8).unwrap()).unwrap();
+        assert_eq!(back.payload.into_tensor().unwrap().as_f32(), &[-0.625]);
+    }
+
+    fn sparse(shape: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> CompressedTensor {
+        CompressedTensor { shape, repr: CompressedRepr::Sparse { indices, values } }
+    }
+
+    fn compressed_frame(tensors: Vec<CompressedTensor>) -> Frame {
+        Frame::new(
+            MsgKind::Upload,
+            2,
+            5,
+            Payload::Compressed(vec![CompressedSegment { segment: "tail".into(), tensors }]),
+        )
+    }
+
+    #[test]
+    fn compressed_sparse_roundtrip_is_identity() {
+        // Low density -> the varint layout is chosen and decodes back to
+        // the identical Sparse repr (indices sorted, values bit-exact,
+        // including a NaN).
+        let frame = compressed_frame(vec![sparse(
+            vec![4, 8],
+            vec![0, 3, 17, 31],
+            vec![1.5, -2.25, f32::NAN, 1e-20],
+        )]);
+        let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        assert_eq!(bytes.len(), encoded_frame_len(&frame, WireFormat::F32));
+        let back = decode_frame(&bytes).unwrap();
+        let segs = back.payload.into_compressed().unwrap();
+        match &segs[0].tensors[0].repr {
+            CompressedRepr::Sparse { indices, values } => {
+                assert_eq!(indices, &[0, 3, 17, 31]);
+                assert_eq!(values[0].to_bits(), 1.5f32.to_bits());
+                assert!(values[2].is_nan());
+                assert_eq!(values[3].to_bits(), 1e-20f32.to_bits());
+            }
+            other => panic!("expected sparse back, got {other:?}"),
+        }
+        assert_eq!(back.kind, MsgKind::Upload);
+        assert_eq!((back.round, back.client), (2, 5));
+    }
+
+    #[test]
+    fn compressed_layouts_pick_the_smallest_encoding() {
+        // Very sparse -> varint; half-dense wide-spread -> bitmap beats
+        // per-index varints; fully dense -> dense fallback, and in every
+        // case the compressed tensor is no larger than its dense form.
+        let dense_len = |n: usize| 2 + 4 + 4 * n; // enc+rank+dim+f32 data
+        let cases = [
+            (vec![1024usize], vec![5u32, 900], LAYOUT_SPARSE_VARINT),
+            (
+                vec![256],
+                (0..128u32).map(|i| 2 * i).collect::<Vec<_>>(),
+                LAYOUT_SPARSE_BITMAP,
+            ),
+            (vec![8], (0..8u32).collect(), LAYOUT_DENSE),
+        ];
+        for (shape, indices, expect_layout) in cases {
+            let n: usize = shape.iter().product();
+            let values: Vec<f32> = indices.iter().map(|&i| i as f32 * 0.5 - 3.0).collect();
+            let t = sparse(shape, indices, values);
+            let (layout, _) = compressed_layout(&t).unwrap();
+            assert_eq!(layout, expect_layout, "n={n}");
+            assert!(
+                compressed_tensor_len(&t).unwrap() <= dense_len(n),
+                "compressed exceeds dense for n={n}"
+            );
+            // Whatever the layout, reconstruction is preserved.
+            let frame = compressed_frame(vec![t.clone()]);
+            let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+            assert_eq!(bytes.len(), encoded_frame_len(&frame, WireFormat::F32));
+            let back = decode_frame(&bytes).unwrap().payload.into_compressed().unwrap();
+            assert_eq!(back[0].tensors[0].decompress().unwrap(), t.decompress().unwrap());
+        }
+    }
+
+    #[test]
+    fn compressed_qsgd_roundtrip_and_packing() {
+        for bits in [2u8, 3, 4, 7, 8] {
+            let levels = crate::compress::qsgd_levels(bits);
+            let n = 13;
+            let codes: Vec<u8> = (0..n).map(|i| (i % (2 * levels as usize + 1)) as u8).collect();
+            let t = CompressedTensor {
+                shape: vec![n],
+                repr: CompressedRepr::Qsgd { bits, scale: 1.75, codes: codes.clone() },
+            };
+            let frame = compressed_frame(vec![t.clone()]);
+            let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+            assert_eq!(bytes.len(), encoded_frame_len(&frame, WireFormat::F32));
+            let back = decode_frame(&bytes).unwrap().payload.into_compressed().unwrap();
+            match &back[0].tensors[0].repr {
+                CompressedRepr::Qsgd { bits: b, scale, codes: c } => {
+                    assert_eq!((*b, *scale), (bits, 1.75));
+                    assert_eq!(c, &codes, "bits {bits}: packing mangled codes");
+                }
+                other => panic!("bits {bits}: {other:?}"),
+            }
+        }
+        // A 1-element qsgd tensor falls back to dense (5 B header > 4 B).
+        let t = CompressedTensor {
+            shape: vec![1],
+            repr: CompressedRepr::Qsgd { bits: 8, scale: 2.0, codes: vec![255] },
+        };
+        assert_eq!(compressed_layout(&t).unwrap().0, LAYOUT_DENSE);
+        let frame = compressed_frame(vec![t.clone()]);
+        let back = decode_frame(&encode_frame(&frame, WireFormat::F32).unwrap())
+            .unwrap()
+            .payload
+            .into_compressed()
+            .unwrap();
+        assert_eq!(back[0].tensors[0].decompress().unwrap(), t.decompress().unwrap());
+    }
+
+    #[test]
+    fn compressed_encoder_rejects_malformed_reprs() {
+        // Out-of-range index.
+        let bad = compressed_frame(vec![sparse(vec![4], vec![4], vec![1.0])]);
+        assert!(encode_frame(&bad, WireFormat::F32).is_err());
+        // Unsorted / duplicate indices.
+        let bad = compressed_frame(vec![sparse(vec![4], vec![2, 1], vec![1.0, 2.0])]);
+        assert!(encode_frame(&bad, WireFormat::F32).is_err());
+        let bad = compressed_frame(vec![sparse(vec![4], vec![1, 1], vec![1.0, 2.0])]);
+        assert!(encode_frame(&bad, WireFormat::F32).is_err());
+        // Arity mismatch between indices and values.
+        let bad = compressed_frame(vec![sparse(vec![4], vec![1], vec![1.0, 2.0])]);
+        assert!(encode_frame(&bad, WireFormat::F32).is_err());
+        // Bad qsgd bits.
+        let bad = compressed_frame(vec![CompressedTensor {
+            shape: vec![4],
+            repr: CompressedRepr::Qsgd { bits: 9, scale: 1.0, codes: vec![0; 4] },
+        }]);
+        assert!(encode_frame(&bad, WireFormat::F32).is_err());
+    }
+
+    #[test]
+    fn compressed_frames_reject_corruption_like_any_other() {
+        let frame =
+            compressed_frame(vec![sparse(vec![64], vec![3, 9, 60], vec![1.0, -2.0, 0.5])]);
+        let good = encode_frame(&frame, WireFormat::F32).unwrap();
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(decode_frame(&bad).is_err());
+        assert!(decode_frame(&good[..good.len() - 2]).is_err());
     }
 }

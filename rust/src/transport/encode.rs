@@ -141,6 +141,11 @@ pub fn int8_quantize(xs: &[f32]) -> (f32, f32, Vec<u8>) {
         lo = lo.min(x);
         hi = hi.max(x);
     }
+    // Constant tensors have hi == lo: the affine scale denominator would
+    // be zero, so guard the divide and emit `{min: lo, scale: 0}` with
+    // all-zero codes — dequantization then returns `lo + 0·q`, i.e. the
+    // constant BIT-exactly (regression: `int8_degenerate_tensors` here,
+    // `int8_constant_tensor_frame_roundtrips_exactly` at the frame level).
     if !lo.is_finite() || !hi.is_finite() || hi <= lo {
         let base = if lo.is_finite() { lo } else { 0.0 };
         return (base, 0.0, vec![0u8; xs.len()]);

@@ -12,6 +12,10 @@
 //!
 //! * [`codec`] — frame layout: length prefix, `{version, kind, wire,
 //!   round, client}` header, typed payload, CRC32 trailer (docs/WIRE.md).
+//!   Since wire v2 a frame can also carry a **compressed** payload —
+//!   sparse (varint-delta or bitmap coordinates) or packed-QSGD update
+//!   segments from the `compress` subsystem, with a dense fallback so a
+//!   compressed frame never exceeds its dense equivalent (docs/COMPRESS.md).
 //! * [`encode`] — pluggable element precision: f32 passthrough, IEEE f16,
 //!   int8 affine quantization with per-tensor `{min, scale}`.
 //! * [`link`] — [`ChannelLink`] (mpsc; also the star-topology [`Hub`]
@@ -23,6 +27,9 @@ pub mod crc32;
 pub mod encode;
 pub mod link;
 
-pub use codec::{decode_frame, encode_frame, encoded_frame_len, Frame, Payload, FRAME_OVERHEAD, WIRE_VERSION};
+pub use codec::{
+    decode_frame, dense_segments_wire_len, encode_frame, encoded_frame_len, Frame, Payload,
+    FRAME_OVERHEAD, WIRE_VERSION,
+};
 pub use encode::WireFormat;
 pub use link::{channel_pair, ChannelLink, Hub, LoopbackLink, Transport};

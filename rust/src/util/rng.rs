@@ -20,6 +20,7 @@
 /// | train samples         | `seed + 2000`         | synth train draws             |
 /// | eval samples          | `seed + 9000`         | synth eval draws              |
 /// | fleet                 | `seed ^ 0xF1EE7`      | device/link sampling + traces |
+/// | compress, client `i`  | `(seed ^ 0xC0B5) + i·φ64` | rand-k draws, QSGD rounding |
 pub mod seeds {
     /// Engine-root fork tag for the data partitioner.
     pub const PARTITION_FORK: u64 = 1;
@@ -54,6 +55,15 @@ pub mod seeds {
     /// per-round availability/straggler trace stream.
     pub fn fleet(seed: u64) -> u64 {
         seed ^ 0xF1EE7
+    }
+
+    /// Seed for client `client`'s update-compressor stream (rand-k
+    /// coordinate draws, QSGD stochastic rounding). A pure derivation —
+    /// not an engine-root fork — so enabling compression leaves every
+    /// other documented stream untouched.
+    pub fn compress_stream(seed: u64, client: usize) -> u64 {
+        (seed ^ 0xC0B5)
+            .wrapping_add((client as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 }
 

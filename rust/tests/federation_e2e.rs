@@ -40,6 +40,7 @@ fn fed(rounds: usize) -> FedConfig {
         eval_every: 1,
         selection: Selection::Uniform,
         wire: WireFormat::F32,
+        compress: sfprompt::compress::Scheme::None,
     }
 }
 

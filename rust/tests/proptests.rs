@@ -3,6 +3,9 @@
 //! driver with explicit failure reporting; 200+ random cases per property).
 
 use sfprompt::comm::{ByteMeter, Direction, MsgKind};
+use sfprompt::compress::{
+    CompressedRepr, CompressedSegment, CompressedTensor, Scheme, UpdateCompressor,
+};
 use sfprompt::data::batch_indices;
 use sfprompt::model::{fedavg, Contribution, SegmentParams};
 use sfprompt::partition::{label_skew, partition, Partition};
@@ -389,6 +392,148 @@ fn prop_codec_rejects_wrong_version_even_with_valid_crc() {
         bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
         let err = decode_frame(&bytes).unwrap_err().to_string();
         assert!(err.contains("version"), "case {case}: {err}");
+    }
+}
+
+// ---------------------------------------------------------------- compress
+
+/// Sparse wire frames round-trip exactly: whatever index layout the codec
+/// picked (varint deltas or bitmap), the decoded tensor reconstructs the
+/// identical dense vector, values bit-exact at f32, and any sparse repr
+/// that comes back has sorted, duplicate-free indices.
+#[test]
+fn prop_sparse_frame_roundtrip_is_exact() {
+    let mut rng = Rng::new(301);
+    for case in 0..CASES {
+        let n = 1 + rng.below(500);
+        // Densities from ~empty to full exercise varint, bitmap, and the
+        // dense fallback.
+        let nnz = rng.below(n + 1);
+        let mut coords: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut coords);
+        let mut indices: Vec<u32> = coords[..nnz].iter().map(|&i| i as u32).collect();
+        indices.sort_unstable();
+        let values: Vec<f32> =
+            (0..nnz).map(|_| rng.normal_f32(0.0, 3.0) * 1e-4_f32.powi(rng.below(3) as i32)).collect();
+        let tensor = CompressedTensor {
+            shape: vec![n],
+            repr: CompressedRepr::Sparse { indices: indices.clone(), values: values.clone() },
+        };
+        let frame = Frame::new(
+            MsgKind::Upload,
+            case as u32,
+            7,
+            Payload::Compressed(vec![CompressedSegment {
+                segment: "tail".into(),
+                tensors: vec![tensor.clone()],
+            }]),
+        );
+        let bytes = encode_frame(&frame, WireFormat::F32).unwrap();
+        let back = decode_frame(&bytes)
+            .unwrap_or_else(|e| panic!("case {case}: {e:#}"))
+            .payload
+            .into_compressed()
+            .unwrap();
+        let got = &back[0].tensors[0];
+        let want_dense = tensor.decompress().unwrap();
+        let got_dense = got.decompress().unwrap();
+        assert_eq!(got_dense.len(), want_dense.len(), "case {case}");
+        for (a, b) in want_dense.iter().zip(&got_dense) {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case}: {a} != {b}");
+        }
+        if let CompressedRepr::Sparse { indices: gi, values: gv } = &got.repr {
+            assert!(gi.windows(2).all(|w| w[0] < w[1]), "case {case}: unsorted/dup indices");
+            assert_eq!(gi, &indices, "case {case}");
+            for (a, b) in values.iter().zip(gv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "case {case}");
+            }
+        }
+    }
+}
+
+/// The codec's layout choice guarantees a compressed frame never exceeds
+/// the dense-f32 frame carrying the same tensors — for every scheme, at
+/// every density.
+#[test]
+fn prop_compressed_wire_never_exceeds_dense() {
+    let mut rng = Rng::new(302);
+    for case in 0..CASES {
+        let n = 1 + rng.below(800);
+        let values: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let seg = SegmentParams {
+            segment: "s".into(),
+            tensors: vec![HostTensor::f32(vec![n], values.clone())],
+        };
+        let dense_frame =
+            Frame::new(MsgKind::Upload, 0, 0, Payload::Segments(vec![seg.clone()]));
+        let dense_len = encode_frame(&dense_frame, WireFormat::F32).unwrap().len();
+
+        let schemes = [
+            Scheme::TopK { ratio: 0.01 + rng.uniform() * 0.99 },
+            Scheme::RandK { ratio: 0.01 + rng.uniform() * 0.99 },
+            Scheme::Quant { bits: 2 + rng.below(7) as u8 },
+        ];
+        for scheme in schemes {
+            let mut comp = scheme.compressor(case as u64).unwrap();
+            let repr = comp.compress(&values);
+            let frame = Frame::new(
+                MsgKind::Upload,
+                0,
+                0,
+                Payload::Compressed(vec![CompressedSegment {
+                    segment: "s".into(),
+                    tensors: vec![CompressedTensor { shape: vec![n], repr }],
+                }]),
+            );
+            let len = encode_frame(&frame, WireFormat::F32).unwrap().len();
+            assert!(
+                len <= dense_len,
+                "case {case}: {} frame is {len} B > dense {dense_len} B (n={n})",
+                scheme.label()
+            );
+        }
+    }
+}
+
+/// Error-feedback conservation: every round, `sent + residual` equals
+/// `update + residual_prev` coordinate for coordinate, exactly in f32 —
+/// sparsification moves mass between the wire and the residual, it never
+/// creates or destroys any.
+#[test]
+fn prop_error_feedback_conserves_update_mass() {
+    let mut rng = Rng::new(303);
+    for case in 0..CASES / 2 {
+        let n = 1 + rng.below(60);
+        let scheme = if rng.uniform() < 0.5 {
+            Scheme::TopK { ratio: 0.05 + rng.uniform() * 0.5 }
+        } else {
+            Scheme::RandK { ratio: 0.05 + rng.uniform() * 0.5 }
+        };
+        let mut comp = UpdateCompressor::new(scheme, case as u64);
+        let reference = SegmentParams {
+            segment: "p".into(),
+            tensors: vec![HostTensor::f32(vec![n], vec![0.0; n])],
+        };
+        for round in 0..4 {
+            let update: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 2.0)).collect();
+            let updated = SegmentParams {
+                segment: "p".into(),
+                tensors: vec![HostTensor::f32(vec![n], update.clone())],
+            };
+            let prev: Vec<f32> =
+                comp.residual("p", 0).map(<[f32]>::to_vec).unwrap_or_else(|| vec![0.0; n]);
+            let compressed = comp.compress_update(&[&reference], &[&updated]).unwrap();
+            let sent = compressed[0].tensors[0].decompress().unwrap();
+            let res = comp.residual("p", 0).expect("sparsifiers keep a residual");
+            for i in 0..n {
+                // Exact f32 equality (== so that a ±0.0 split still
+                // passes): kept values travel bit-exact, dropped values
+                // move to the residual untouched.
+                let lhs = sent[i] + res[i];
+                let rhs = update[i] + prev[i];
+                assert!(lhs == rhs, "case {case} round {round} coord {i}: {lhs} != {rhs}");
+            }
+        }
     }
 }
 
