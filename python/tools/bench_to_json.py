@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Normalize a bench harness's raw JSONL feed into a BENCH_*.json snapshot.
+
+The Rust bench harness (rust/benches/harness.rs) appends one JSON object
+per finished benchmark to $SFPROMPT_BENCH_JSON. This folds those lines
+into a single stable snapshot document: sorted results plus the machine
+context needed to compare two snapshots honestly. Driven by
+scripts/bench_snapshot; usable standalone:
+
+    python3 python/tools/bench_to_json.py --target stages \
+        --raw /tmp/raw.jsonl --out BENCH_stages.json
+"""
+
+import argparse
+import json
+import platform
+import sys
+
+
+def load_raw(path: str) -> list:
+    rows = []
+    with open(path, "r", encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                row = json.loads(line)
+            except json.JSONDecodeError as e:
+                sys.exit(f"{path}:{lineno}: bad JSON line: {e}")
+            for key in ("name", "mean_ms", "p50_ms", "p95_ms", "samples"):
+                if key not in row:
+                    sys.exit(f"{path}:{lineno}: missing key {key!r}: {row}")
+            rows.append(row)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--target", required=True, help="bench target name")
+    ap.add_argument("--raw", required=True, help="raw JSONL feed from the harness")
+    ap.add_argument("--out", required=True, help="snapshot path to write")
+    args = ap.parse_args()
+
+    rows = load_raw(args.raw)
+    rows.sort(key=lambda r: r["name"])
+    snapshot = {
+        "format": "sfprompt-bench-snapshot",
+        "version": 1,
+        "target": args.target,
+        "machine": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "cpu_count": __import__("os").cpu_count(),
+        },
+        "results": rows,
+    }
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"{args.out}: {len(rows)} benchmarks")
+
+
+if __name__ == "__main__":
+    main()

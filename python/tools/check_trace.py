@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Validate an sfprompt telemetry trace (and optionally its metrics file).
+
+Checks, failing loudly (exit 1) on the first violation:
+  * the first line is a `meta` header with format "sfprompt-trace";
+  * every subsequent line is a strict-JSON span object with the required
+    keys and `t1_s >= t0_s`;
+  * no span is flagged `"open": true` (an unclosed span is an
+    instrumentation bug — `Tracer::finish` surfaces rather than hides it);
+  * every `parent` id resolves to a span in the file;
+  * every `client` span's parent is a `round` span, every `round` span's
+    parent is the `run` span (the documented taxonomy, docs/TELEMETRY.md);
+  * with --metrics: the metrics JSON has per-stage latency histograms
+    (`stage_s/...` with count/p50/p95) and an achieved-GFLOP/s table.
+
+Used by the CI telemetry smoke step:
+
+    python3 python/tools/check_trace.py trace.jsonl --metrics metrics.json
+"""
+
+import argparse
+import json
+import sys
+
+REQUIRED_SPAN_KEYS = ("id", "parent", "cat", "name", "tid", "t0_s", "t1_s")
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"check_trace: FAIL: {msg}")
+
+
+def check_trace(path: str) -> dict:
+    with open(path, "r", encoding="utf-8") as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        fail(f"{path}: empty trace")
+
+    meta = json.loads(lines[0])
+    if meta.get("ev") != "meta" or meta.get("format") != "sfprompt-trace":
+        fail(f"{path}: first line is not an sfprompt-trace meta header: {meta}")
+
+    spans = {}
+    for lineno, line in enumerate(lines[1:], 2):
+        try:
+            s = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"{path}:{lineno}: not valid JSON: {e}")
+        if s.get("ev") != "span":
+            fail(f"{path}:{lineno}: unexpected event {s.get('ev')!r}")
+        for key in REQUIRED_SPAN_KEYS:
+            if key not in s:
+                fail(f"{path}:{lineno}: span missing key {key!r}: {s}")
+        if s.get("open") is True:
+            fail(f"{path}:{lineno}: span #{s['id']} {s['cat']}/{s['name']} never closed")
+        if s["t1_s"] < s["t0_s"]:
+            fail(f"{path}:{lineno}: span #{s['id']} ends before it starts")
+        spans[s["id"]] = s
+
+    by_cat = {}
+    for s in spans.values():
+        by_cat.setdefault(s["cat"], []).append(s)
+        pid = s["parent"]
+        if pid is not None:
+            if pid not in spans:
+                fail(f"{path}: span #{s['id']} has dangling parent {pid}")
+            p = spans[pid]
+            if not (p["t0_s"] <= s["t0_s"] and s["t1_s"] <= p["t1_s"]):
+                fail(
+                    f"{path}: child #{s['id']} {s['name']} escapes "
+                    f"parent #{pid} {p['name']}"
+                )
+
+    # Taxonomy: client -> round -> run.
+    for s in by_cat.get("round", []):
+        if s["parent"] is None or spans[s["parent"]]["cat"] != "run":
+            fail(f"{path}: round span #{s['id']} is not parented to a run span")
+    for s in by_cat.get("client", []):
+        if s["parent"] is None or spans[s["parent"]]["cat"] != "round":
+            fail(f"{path}: client span #{s['id']} is not parented to a round span")
+
+    counts = {cat: len(v) for cat, v in sorted(by_cat.items())}
+    print(f"check_trace: {path}: OK — {len(spans)} spans {counts}")
+    return by_cat
+
+
+def check_metrics(path: str) -> None:
+    with open(path, "r", encoding="utf-8") as f:
+        m = json.load(f)
+    hists = m.get("histograms", {})
+    stage_hists = {k: v for k, v in hists.items() if k.startswith("stage_s/")}
+    if not stage_hists:
+        fail(f"{path}: no per-stage latency histograms (stage_s/...)")
+    for name, h in stage_hists.items():
+        for key in ("count", "p50_s", "p95_s"):
+            if key not in h:
+                fail(f"{path}: histogram {name} missing {key!r}")
+        if h["count"] <= 0:
+            fail(f"{path}: histogram {name} recorded nothing")
+    if not m.get("achieved_gflops"):
+        fail(f"{path}: no achieved-GFLOP/s table")
+    if not m.get("hottest_stages"):
+        fail(f"{path}: no hottest-stage summary")
+    print(
+        f"check_trace: {path}: OK — {len(stage_hists)} stage histograms, "
+        f"{len(m['achieved_gflops'])} GFLOP/s entries"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="trace JSONL file from train --trace")
+    ap.add_argument("--metrics", help="metrics JSON file from train --metrics")
+    ap.add_argument(
+        "--expect-rounds", type=int,
+        help="require exactly this many round spans",
+    )
+    args = ap.parse_args()
+
+    by_cat = check_trace(args.trace)
+    for cat in ("run", "round", "client", "phase", "stage"):
+        if not by_cat.get(cat):
+            fail(f"{args.trace}: no {cat!r} spans recorded")
+    if args.expect_rounds is not None:
+        got = len(by_cat.get("round", []))
+        if got != args.expect_rounds:
+            fail(f"{args.trace}: expected {args.expect_rounds} round spans, got {got}")
+    if args.metrics:
+        check_metrics(args.metrics)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,8 +4,14 @@
 //! throughput annotation.
 //!
 //! Used by all `cargo bench` targets via `#[path = "harness.rs"] mod ...`.
+//!
+//! Set `SFPROMPT_BENCH_JSON=path` to additionally append one JSON line per
+//! finished benchmark to `path` — the machine-readable feed
+//! `scripts/bench_snapshot` normalizes into `BENCH_*.json` snapshots.
 
 use std::time::Instant;
+
+use sfprompt::util::json::Json;
 
 pub struct Bench {
     pub name: String,
@@ -66,8 +72,27 @@ impl Bench {
             report.name, report.mean_ms, report.std_ms, report.p50_ms, report.p95_ms,
             report.samples
         );
+        if let Ok(path) = std::env::var("SFPROMPT_BENCH_JSON") {
+            if let Err(e) = append_json_line(&path, &report) {
+                eprintln!("warning: SFPROMPT_BENCH_JSON={path}: {e}");
+            }
+        }
         report
     }
+}
+
+/// One JSON line per report, appended (benches in one target share a file).
+fn append_json_line(path: &str, r: &BenchReport) -> std::io::Result<()> {
+    use std::io::Write;
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(r.name.clone()));
+    o.insert("mean_ms".to_string(), Json::Num(r.mean_ms));
+    o.insert("std_ms".to_string(), Json::Num(r.std_ms));
+    o.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+    o.insert("p95_ms".to_string(), Json::Num(r.p95_ms));
+    o.insert("samples".to_string(), Json::Num(r.samples as f64));
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    writeln!(f, "{}", Json::Obj(o))
 }
 
 /// Print a derived-throughput line under a report.

@@ -1,0 +1,118 @@
+//! Telemetry overhead guard.
+//!
+//! Two claims back docs/TELEMETRY.md's "free when off" statement, and this
+//! bench enforces the first as a hard assertion (it aborts the bench run
+//! if violated, so CI-style bench invocations catch regressions):
+//!
+//! 1. **Zero allocations on the disabled path.** A counting global
+//!    allocator wraps `System`; a tight loop of `telemetry::active()`
+//!    calls with no sink installed must not allocate at all.
+//! 2. **Negligible stage-loop overhead.** The same native stage loop is
+//!    timed with telemetry disabled and enabled, so the cost of spans +
+//!    histogram observations on the hot path is a printed measurement,
+//!    not folklore.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use harness::Bench;
+use sfprompt::backend::{run_stage_hosts, Backend, NativeBackend};
+use sfprompt::data::{make_batch, synth, SynthDataset};
+use sfprompt::model::init_params;
+use sfprompt::runtime::HostTensor;
+use sfprompt::telemetry::{self, Telemetry};
+
+/// Counts allocation events (alloc + realloc) while `COUNTING` is set;
+/// delegates everything to `System`.
+struct CountingAlloc;
+
+static COUNTING: AtomicBool = AtomicBool::new(false);
+static ALLOC_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn assert_disabled_path_is_allocation_free() {
+    assert!(telemetry::active().is_none(), "bench must start with no sink installed");
+    const CALLS: u64 = 1_000_000;
+    COUNTING.store(true, Ordering::SeqCst);
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for _ in 0..CALLS {
+        // The hook prologue every hot path runs when telemetry is off.
+        if telemetry::active().is_some() {
+            unreachable!("no sink installed");
+        }
+    }
+    let delta = ALLOC_EVENTS.load(Ordering::SeqCst) - before;
+    COUNTING.store(false, Ordering::SeqCst);
+    assert_eq!(
+        delta, 0,
+        "disabled telemetry::active() allocated {delta} times in {CALLS} calls"
+    );
+    println!("disabled path: 0 allocations across {CALLS} active() calls");
+}
+
+fn stage_loop(backend: &dyn Backend, iters: usize) {
+    let cfg = backend.manifest().config.clone();
+    let params = init_params(backend.manifest(), 7);
+    let mut profile = synth::profile("cifar10").unwrap();
+    profile.num_classes = cfg.num_classes;
+    let ds = SynthDataset::generate(profile, cfg.image_size, cfg.channels, cfg.batch, 1, 2);
+    let idx: Vec<usize> = (0..cfg.batch).collect();
+    let batch = make_batch(&ds.examples, &idx, cfg.batch, cfg.image_size, cfg.channels);
+    let mut segs: BTreeMap<&str, &sfprompt::model::SegmentParams> = BTreeMap::new();
+    segs.insert("head", params.get("head").unwrap());
+    segs.insert("prompt", params.get("prompt").unwrap());
+    let mut tensors: BTreeMap<&str, &HostTensor> = BTreeMap::new();
+    tensors.insert("images", &batch.images);
+    for _ in 0..iters {
+        run_stage_hosts(backend, "head_forward", &segs, &tensors).unwrap();
+    }
+}
+
+fn main() {
+    println!("telemetry overhead benches");
+    assert_disabled_path_is_allocation_free();
+
+    let backend = NativeBackend::for_config("tiny").unwrap();
+    backend.warm(&["head_forward"]).unwrap();
+
+    Bench::new("stage_loop/telemetry_off (10x head_forward)").run(|| {
+        stage_loop(&backend, 10);
+    });
+
+    let sink = Arc::new(Telemetry::new());
+    telemetry::install(sink.clone());
+    Bench::new("stage_loop/telemetry_on  (10x head_forward)").run(|| {
+        stage_loop(&backend, 10);
+    });
+    telemetry::uninstall();
+    sink.tracer.finish();
+    println!(
+        "enabled run recorded {} stage observations",
+        sink.metrics.histogram_count("stage_s/head_forward")
+    );
+}

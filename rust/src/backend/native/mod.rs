@@ -167,9 +167,20 @@ impl Backend for NativeBackend {
         tensors: &TensorInputs,
     ) -> Result<StageOutputs> {
         let args = self.resolve(stage, segments, tensors)?;
+        // `active()` is one relaxed atomic load when telemetry is off —
+        // the hot loop stays allocation-free (benches/telemetry.rs).
+        let telemetry = crate::telemetry::active();
+        let span = telemetry.as_ref().map(|t| t.span("stage", stage));
         let t0 = Instant::now();
         let out = stages::run(&self.manifest.config, stage, &args)?;
         let dt = t0.elapsed().as_secs_f64();
+        drop(span);
+        if let Some(t) = &telemetry {
+            t.metrics.observe(&format!("stage_s/{stage}"), dt);
+            if let Some(fl) = crate::flops::stage_flops(&self.manifest.config, stage) {
+                t.metrics.counter_add(&format!("stage_flops/{stage}"), fl);
+            }
+        }
         let mut stats = self.stats.lock().unwrap();
         let e = stats.entry(stage.to_string()).or_insert((0, 0.0));
         e.0 += 1;

@@ -69,6 +69,8 @@ impl UpdateCompressor {
         if reference.len() != updated.len() {
             bail!("update has {} segments, reference {}", updated.len(), reference.len());
         }
+        let telemetry = crate::telemetry::active();
+        let t0 = telemetry.as_ref().map(|_| std::time::Instant::now());
         let ef = self.compressor.error_feedback();
         let mut out = Vec::with_capacity(updated.len());
         for (r, u) in reference.iter().zip(updated) {
@@ -117,6 +119,26 @@ impl UpdateCompressor {
             }
             out.push(CompressedSegment { segment: u.segment.clone(), tensors });
         }
+        if let (Some(t), Some(t0)) = (&telemetry, t0) {
+            t.metrics.observe("compress_s", t0.elapsed().as_secs_f64());
+            // Coordinates actually shipped vs dense — the logical (pre-wire)
+            // keep ratio; the wire-level byte ratio lives in ByteMeter.
+            let mut kept = 0usize;
+            let mut total = 0usize;
+            for seg in &out {
+                for tensor in &seg.tensors {
+                    let n: usize = tensor.shape.iter().product();
+                    total += n;
+                    kept += match &tensor.repr {
+                        CompressedRepr::Sparse { indices, .. } => indices.len(),
+                        _ => n,
+                    };
+                }
+            }
+            if total > 0 {
+                t.metrics.gauge_set("compress_keep_ratio", kept as f64 / total as f64);
+            }
+        }
         Ok(out)
     }
 }
@@ -154,6 +176,8 @@ pub fn decompress_update(
             reference.len()
         );
     }
+    let telemetry = crate::telemetry::active();
+    let t0 = telemetry.as_ref().map(|_| std::time::Instant::now());
     let mut out = Vec::with_capacity(compressed.len());
     for (r, c) in reference.iter().zip(compressed) {
         if r.segment != c.segment {
@@ -189,6 +213,9 @@ pub fn decompress_update(
             tensors.push(HostTensor::f32(rt.shape.clone(), dense));
         }
         out.push(SegmentParams { segment: c.segment.clone(), tensors });
+    }
+    if let (Some(t), Some(t0)) = (&telemetry, t0) {
+        t.metrics.observe("decompress_s", t0.elapsed().as_secs_f64());
     }
     Ok(out)
 }

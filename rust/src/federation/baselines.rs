@@ -82,8 +82,15 @@ fn resolve_and_aggregate(
         .map(|(_, segs, n)| (segs.iter().collect(), *n))
         .collect();
     if !per_client.is_empty() {
+        let telemetry = crate::telemetry::active();
+        let agg_span = telemetry.as_ref().map(|t| t.span("phase", "aggregate"));
+        let agg_t0 = Instant::now();
         for seg in fedavg_multi(&per_client)? {
             global.set(seg);
+        }
+        drop(agg_span);
+        if let Some(t) = &telemetry {
+            t.metrics.observe("aggregate_s", agg_t0.elapsed().as_secs_f64());
         }
     }
     let losses = slot_losses
@@ -193,6 +200,11 @@ impl<'a> BaselineEngine<'a> {
             if !clock.online(slot) {
                 continue; // offline at round start: no traffic, no compute
             }
+            // Baseline clients run inline on the driver thread, so the
+            // observer's round span is on this thread's stack and implicit
+            // parenting nests client spans correctly.
+            let _client_span =
+                crate::telemetry::active().map(|t| t.span("client", &format!("client:{cid}")));
             let mut losses = Vec::new();
             let (mut s_end, mut c_end) = channel_pair();
 
@@ -319,6 +331,8 @@ impl<'a> BaselineEngine<'a> {
             if !clock.online(slot) {
                 continue; // offline at round start: no traffic, no compute
             }
+            let _client_span =
+                crate::telemetry::active().map(|t| t.span("client", &format!("client:{cid}")));
             let mut losses = Vec::new();
             let (mut s_end, mut c_end) = channel_pair();
 

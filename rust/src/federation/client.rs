@@ -282,21 +282,37 @@ pub fn client_split_round(
     let mut local_losses = Vec::new();
     let mut split_losses = Vec::new();
 
+    let telemetry = crate::telemetry::active();
+
     // --- Phase 1a: local-loss update (network-free). ---
     if fed.local_loss_update {
+        let span = telemetry.as_ref().map(|t| t.span("phase", "phase1_local"));
         let upd = client.local_loss_update(
             backend, examples, head, tail, prompt, fed.local_epochs, fed.lr,
         )?;
+        if let Some(mut s) = span {
+            s.attr("batches", upd.batches as f64);
+        }
         local_losses.push(upd.mean_loss);
         tail = upd.tail;
         prompt = upd.prompt;
     }
 
     // --- Phase 1b: EL2N pruning. ---
+    let prune_span = telemetry.as_ref().map(|t| t.span("phase", "phase1_prune"));
+    let prune_t0 = std::time::Instant::now();
     let pruned =
         client.prune_dataset(backend, examples, head, &tail, &prompt, fed.retain_fraction)?;
+    if let Some(t) = &telemetry {
+        t.metrics.observe("el2n_prune_s", prune_t0.elapsed().as_secs_f64());
+    }
+    if let Some(mut s) = prune_span {
+        s.attr("retained", pruned.len() as f64);
+        s.attr("local_n", client.num_samples() as f64);
+    }
 
     // --- Phase 2: split training over the pruned set. ---
+    let split_span = telemetry.as_ref().map(|t| t.span("phase", "phase2_split"));
     for chunk in batch_indices(&pruned, cfg.batch) {
         let batch = make_batch(examples, &chunk, cfg.batch, cfg.image_size, cfg.channels);
         let smashed = client.head_forward(backend, &batch.images, head, &prompt)?;
@@ -324,11 +340,15 @@ pub fn client_split_round(
         prompt =
             client.prompt_update(backend, &batch.images, &g_smashed, head, &prompt, fed.lr)?;
     }
+    drop(split_span);
 
     // --- Phase 3: upload for aggregation, wait for the broadcast.
     // With compression configured, what crosses the wire is the
     // error-compensated (tail, prompt) delta against the round's
     // reference; the server reconstructs before FedAvg. ---
+    // The span covers compression, the upload, and the blocking wait for
+    // the broadcast — the client's view of server-side round resolution.
+    let _upload_span = telemetry.as_ref().map(|t| t.span("phase", "phase3_upload"));
     let upload = match (client.compress.as_mut(), &reference) {
         (Some(comp), Some((ref_tail, ref_prompt))) => Payload::Compressed(
             comp.compress_update(&[ref_tail, ref_prompt], &[&tail, &prompt])?,

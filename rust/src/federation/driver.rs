@@ -97,6 +97,42 @@ pub struct NullObserver;
 
 impl RoundObserver for NullObserver {}
 
+/// Fan one event stream out to two observers (left first, then right).
+/// Lets `train` keep its console `ProgressPrinter` while a
+/// [`crate::telemetry::TelemetryObserver`] records the same run.
+pub struct Tee<'a>(pub &'a mut dyn RoundObserver, pub &'a mut dyn RoundObserver);
+
+impl RoundObserver for Tee<'_> {
+    fn on_run_start(&mut self, method: Method, fed: &FedConfig) {
+        self.0.on_run_start(method, fed);
+        self.1.on_run_start(method, fed);
+    }
+    fn on_round_start(&mut self, round: usize) {
+        self.0.on_round_start(round);
+        self.1.on_round_start(round);
+    }
+    fn on_client_done(&mut self, round: usize, client: usize, finish_s: f64) {
+        self.0.on_client_done(round, client, finish_s);
+        self.1.on_client_done(round, client, finish_s);
+    }
+    fn on_client_dropped(&mut self, round: usize, client: usize, at_s: f64, reason: DropReason) {
+        self.0.on_client_dropped(round, client, at_s, reason);
+        self.1.on_client_dropped(round, client, at_s, reason);
+    }
+    fn on_eval(&mut self, round: usize, accuracy: f64) {
+        self.0.on_eval(round, accuracy);
+        self.1.on_eval(round, accuracy);
+    }
+    fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+        self.0.on_round_end(rec, clock_s);
+        self.1.on_round_end(rec, clock_s);
+    }
+    fn on_run_end(&mut self, history: &RunHistory) {
+        self.0.on_run_end(history);
+        self.1.on_run_end(history);
+    }
+}
+
 /// The standard per-round console line (what `train` and the experiment
 /// harness print). With a label, rows are prefixed `[label]` in the
 /// compact experiment style; without one, the fuller `train` style is
@@ -135,14 +171,22 @@ impl RoundObserver for ProgressPrinter {
                 } else {
                     String::new()
                 };
+                // Only worth a column when compression actually shrank
+                // something (ratio 1.0 means every payload went dense).
+                let ratio = rec.comm.compression_ratio();
+                let ratio_note =
+                    if ratio < 1.0 { format!(" ratio={ratio:.3}") } else { String::new() };
                 println!(
-                    "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB \
-                     sim_lat={:.1}s clock={:.1}s wall={:.1}s{}",
+                    "round {:>3}: split_loss={:.4} local_loss={:.4} acc={:.4} comm={:.2}MB{} \
+                     surv={}/{} sim_lat={:.1}s clock={:.1}s wall={:.1}s{}",
                     rec.round,
                     rec.mean_split_loss,
                     rec.mean_local_loss,
                     rec.eval_accuracy,
                     rec.comm.mb(),
+                    ratio_note,
+                    rec.survivors(),
+                    rec.clients.len(),
                     rec.sim_latency_s,
                     clock_s,
                     rec.wall_s,
@@ -156,6 +200,7 @@ impl RoundObserver for ProgressPrinter {
 /// Run every configured round of `run`, streaming events to `obs`;
 /// returns the completed history (also available via `run.history()`).
 pub fn drive(run: &mut dyn FederatedRun, obs: &mut dyn RoundObserver) -> Result<RunHistory> {
+    let run_t0 = std::time::Instant::now();
     let rounds = run.fed().rounds;
     obs.on_run_start(run.method(), run.fed());
     let mut clock_s = 0.0;
@@ -176,7 +221,8 @@ pub fn drive(run: &mut dyn FederatedRun, obs: &mut dyn RoundObserver) -> Result<
         }
         obs.on_round_end(&rec, clock_s);
     }
-    let history = run.history().clone();
+    let mut history = run.history().clone();
+    history.run_wall_s = run_t0.elapsed().as_secs_f64();
     obs.on_run_end(&history);
     Ok(history)
 }

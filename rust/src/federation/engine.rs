@@ -120,6 +120,10 @@ impl<'a> SfPromptEngine<'a> {
     /// Run one global round; returns its metrics record.
     fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
         let wall0 = Instant::now();
+        // The TelemetryObserver's round span is open on this (driver)
+        // thread; capture its id so client-thread spans can nest under it.
+        let telemetry = crate::telemetry::active();
+        let round_parent = telemetry.as_ref().and_then(|t| t.current_span_id());
         let cfg = self.backend.manifest().config.clone();
         let train = self.train;
 
@@ -142,6 +146,7 @@ impl<'a> SfPromptEngine<'a> {
         let dist_ref =
             [self.global.get("tail")?.clone(), self.global.get("prompt")?.clone()];
         let dist = Payload::Segments(dist_ref.to_vec());
+        let dist_span = telemetry.as_ref().map(|t| t.span("phase", "distribute"));
         for (slot, &cid) in selected.iter().enumerate() {
             if !clock.online(slot) {
                 continue;
@@ -152,6 +157,7 @@ impl<'a> SfPromptEngine<'a> {
             comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
             clock.charge_transfer(slot, n);
         }
+        drop(dist_span);
 
         // Threads own the online selected clients; park stand-ins.
         let mut endpoints: Vec<Option<_>> = endpoints.into_iter().map(Some).collect();
@@ -179,9 +185,15 @@ impl<'a> SfPromptEngine<'a> {
         let (agg_result, joined) = std::thread::scope(|scope| {
             let mut handles = Vec::with_capacity(taken.len());
             for (slot, client, mut link) in taken {
+                let telem = telemetry.clone();
                 handles.push(scope.spawn(move || {
                     let mut client = client;
                     let cid = client.id as u32;
+                    // Explicit parent: this thread's spans (phases, backend
+                    // stages) nest under the driver thread's round span.
+                    let _client_span = telem
+                        .as_ref()
+                        .map(|t| t.span_under("client", &format!("client:{cid}"), round_parent));
                     // A thread that dies without telling the server would
                     // leave serve_round blocked forever (the other clients
                     // keep the hub's inbound channel alive) — so both the
@@ -212,10 +224,12 @@ impl<'a> SfPromptEngine<'a> {
 
             // --- Server: route Phase-2 traffic, resolve the deadline,
             // FedAvg the survivors, broadcast. ---
+            let serve_span = telemetry.as_ref().map(|t| t.span("phase", "serve"));
             let agg_result = serve_round(
                 backend, body_prep, &hub, selected_ref, round as u32,
                 &n_ks, &fed, &dist_ref, &mut comm, &mut clock,
             );
+            drop(serve_span);
             // Dropping the hub unblocks any client still waiting on a recv
             // after a server-side error.
             drop(hub);
@@ -273,6 +287,7 @@ impl<'a> SfPromptEngine<'a> {
 
         let eval_accuracy = match self.eval {
             Some(ds) if self.fed.should_eval(round) => {
+                let _eval_span = telemetry.as_ref().map(|t| t.span("phase", "eval"));
                 evaluate(self.backend, "eval_forward", &self.global, ds, self.fed.eval_limit)?
             }
             _ => f64::NAN,
@@ -483,7 +498,14 @@ fn serve_round(
                 (tail, prompt, n_ks[slot])
             })
             .collect();
+        let agg_telemetry = crate::telemetry::active();
+        let agg_span = agg_telemetry.as_ref().map(|t| t.span("phase", "aggregate"));
+        let agg_t0 = Instant::now();
         let (tail, prompt) = Server::aggregate(&updates)?;
+        drop(agg_span);
+        if let Some(t) = &agg_telemetry {
+            t.metrics.observe("aggregate_s", agg_t0.elapsed().as_secs_f64());
+        }
         let bc = Payload::Segments(vec![tail.clone(), prompt.clone()]);
         for (slot, &cid) in selected.iter().enumerate() {
             if !clock.online(slot) {

@@ -35,7 +35,7 @@ pub mod selection;
 pub mod server;
 pub mod spec;
 
-pub use driver::{drive, LinkClock, NullObserver, ProgressPrinter, RoundObserver};
+pub use driver::{drive, LinkClock, NullObserver, ProgressPrinter, RoundObserver, Tee};
 pub use run::{FederatedRun, RunBuilder};
 pub use selection::Selection;
 pub use spec::{RunReport, RunSpec};

@@ -338,11 +338,22 @@ pub struct RunReport {
     pub spec: RunSpec,
     pub setup_bytes: u64,
     pub history: RunHistory,
+    /// Optional metrics summary from an installed [`crate::telemetry`]
+    /// sink (counters, latency histograms, hottest stages), emitted under
+    /// a `"telemetry"` key.
+    pub telemetry: Option<Json>,
 }
 
 impl RunReport {
     pub fn new(spec: &RunSpec, setup_bytes: u64, history: RunHistory) -> RunReport {
-        RunReport { spec: spec.clone(), setup_bytes, history }
+        RunReport { spec: spec.clone(), setup_bytes, history, telemetry: None }
+    }
+
+    /// Attach a telemetry metrics block (normally
+    /// [`crate::telemetry::MetricsRegistry::to_json`]) to the report.
+    pub fn with_telemetry(mut self, telemetry: Json) -> RunReport {
+        self.telemetry = Some(telemetry);
+        self
     }
 
     pub fn to_json(&self) -> Json {
@@ -407,8 +418,20 @@ impl RunReport {
             "sim_latency_s".to_string(),
             num_or_null(h.rounds.iter().map(|r| r.sim_latency_s).sum()),
         );
-        o.insert("wall_s".to_string(), num_or_null(h.rounds.iter().map(|r| r.wall_s).sum()));
+        o.insert("sim_wall_s".to_string(), num_or_null(h.sim_wall_s()));
+        // Real measured wall-clock: the drive()-stamped whole-run figure
+        // when available, otherwise the sum of per-round timings (histories
+        // assembled without the driver, e.g. in tests).
+        let wall_s = if h.run_wall_s > 0.0 {
+            h.run_wall_s
+        } else {
+            h.rounds.iter().map(|r| r.wall_s).sum()
+        };
+        o.insert("wall_s".to_string(), num_or_null(wall_s));
         o.insert("dropped_clients".to_string(), Json::Num(h.dropped_clients() as f64));
+        if let Some(t) = &self.telemetry {
+            o.insert("telemetry".to_string(), t.clone());
+        }
         Json::Obj(o)
     }
 }

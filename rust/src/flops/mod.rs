@@ -62,6 +62,43 @@ pub fn padded_batches(n: usize, batch: usize) -> u64 {
     (n.div_ceil(batch.max(1))) as u64
 }
 
+/// Analytic FLOPs of **one call** of a backend stage (full padded batch),
+/// the denominator behind telemetry's achieved-GFLOP/s metric. Same
+/// conventions as the rest of this module: backward ≈ 2x forward, a train
+/// step = 3x forward. `None` for unknown stage names.
+///
+/// Stage-level approximations (each maps a manifest stage onto segment
+/// forwards): a `*_step` stage trains the segments it updates (3x their
+/// forward); `body_backward*` is the backward half only (2x forward);
+/// `prompt_grad` re-runs the head forward and backpropagates to the
+/// prompt (≈ 2x head forward); `tail_step_linear` trains only the
+/// classifier, so it is dominated by the tail forward; `el2n_scores` is a
+/// head+tail forward pass.
+pub fn stage_flops(cfg: &ModelConfig, stage: &str) -> Option<u64> {
+    let b = cfg.batch as u64;
+    let p = segment_flops(cfg, true);
+    let np = segment_flops(cfg, false);
+    Some(match stage {
+        "head_forward" => p.head * b,
+        "body_forward" => p.body * b,
+        "tail_step" => train_step_flops(p.tail) * b,
+        "body_backward" => 2 * p.body * b,
+        "prompt_grad" => 2 * p.head * b,
+        "local_step" => train_step_flops(p.client()) * b,
+        "el2n_scores" => p.client() * b,
+        "eval_forward" => p.total() * b,
+        "head_forward_noprompt" => np.head * b,
+        "body_forward_noprompt" => np.body * b,
+        "tail_step_noprompt" => train_step_flops(np.tail) * b,
+        "tail_step_linear" => np.tail * b,
+        "body_backward_train" => train_step_flops(np.body) * b,
+        "head_step" => 2 * np.head * b,
+        "full_step" => train_step_flops(np.total()) * b,
+        "eval_forward_noprompt" => np.total() * b,
+        _ => return None,
+    })
+}
+
 /// Per-client FLOPs of one SFPrompt round, for the fleet simulator's
 /// compute charge. Documented approximation (fwd + ~2x bwd = 3x fwd, full
 /// padded batches):
@@ -179,6 +216,44 @@ mod tests {
         // SFL+FF trains head+tail; SFL+Linear only the tail.
         assert!(
             sfl_client_round_flops(&c, 64, 2, true) > sfl_client_round_flops(&c, 64, 2, false)
+        );
+    }
+
+    #[test]
+    fn stage_flops_covers_every_manifest_stage() {
+        let c = cfg();
+        let stages = [
+            "head_forward",
+            "body_forward",
+            "tail_step",
+            "body_backward",
+            "prompt_grad",
+            "local_step",
+            "el2n_scores",
+            "eval_forward",
+            "head_forward_noprompt",
+            "body_forward_noprompt",
+            "tail_step_noprompt",
+            "tail_step_linear",
+            "body_backward_train",
+            "head_step",
+            "full_step",
+            "eval_forward_noprompt",
+        ];
+        for s in stages {
+            let f = stage_flops(&c, s).unwrap_or_else(|| panic!("no flops for stage {s}"));
+            assert!(f > 0, "stage {s} has zero flops");
+        }
+        assert_eq!(stage_flops(&c, "not_a_stage"), None);
+        // Consistency with the segment model: prompted head forward costs
+        // more than the promptless one; a train step is 3x its forward.
+        assert!(
+            stage_flops(&c, "head_forward").unwrap()
+                > stage_flops(&c, "head_forward_noprompt").unwrap()
+        );
+        assert_eq!(
+            stage_flops(&c, "tail_step_noprompt").unwrap(),
+            3 * segment_flops(&c, false).tail * c.batch as u64
         );
     }
 

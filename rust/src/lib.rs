@@ -121,6 +121,21 @@
 //! [`sim::SimClock`]. Without a fleet, time accounting reduces to the
 //! §3.5 shared-rate model **bit-for-bit** (property-tested). See
 //! docs/FLEET.md; `experiment --id fleet` sweeps device skew × dropout.
+//!
+//! ## Telemetry ([`telemetry`])
+//!
+//! Where does the time actually go? A zero-dependency tracing + metrics
+//! layer answers with data instead of assertions: hierarchical spans
+//! (run → round → client → phase → backend stage) stamped with wall *and*
+//! sim-clock time, exported as JSON Lines or Chrome trace-event JSON
+//! (opens in Perfetto), plus a registry of counters/gauges/histograms —
+//! per-stage latency and achieved GFLOP/s (against the [`flops`] analytic
+//! counts), frame encode/decode time, bytes per message kind,
+//! compress/decompress time, FedAvg and EL2N timing. Off by default and
+//! free when off (one atomic load per hook, zero allocations —
+//! bench-guarded); `train --trace run.jsonl --metrics run.json` turns it
+//! on, and `report --trace run.jsonl` pretty-prints a saved trace. See
+//! docs/TELEMETRY.md.
 
 pub mod analysis;
 pub mod backend;
@@ -135,6 +150,7 @@ pub mod model;
 pub mod partition;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod transport;
 pub mod util;
 

@@ -4,23 +4,30 @@
 //!   inspect    --config <name>             show a manifest's inventory
 //!   train      --config <name> [...]       run SFPrompt (or a baseline)
 //!              --spec run.json --json      headless: RunSpec in, RunReport out
+//!              --trace t.jsonl --metrics m.json   record telemetry
+//!   report     --trace t.jsonl             pretty-print a saved trace
 //!   experiment --id <fig2|fig4|...|all>    regenerate a paper table/figure
 //!   analyze                                closed-form cost model sweep
 
-use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use sfprompt::analysis::{fl_crossover_w_bytes, sweep, CostParams};
 use sfprompt::backend::BackendChoice;
 use sfprompt::compress::Scheme;
 use sfprompt::experiments::{self, ExpOptions};
 use sfprompt::federation::{
-    drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec,
+    drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec, Tee,
 };
 use sfprompt::partition::Partition;
 use sfprompt::sim::FleetSpec;
+use sfprompt::telemetry::{self, SpanRecord, Telemetry, TelemetryObserver};
 use sfprompt::transport::WireFormat;
 use sfprompt::util::cli::Args;
 use sfprompt::util::csv::CsvWriter;
+use sfprompt::util::json::Json;
 
 const USAGE: &str = "\
 sfprompt — split federated prompt fine-tuning coordinator
@@ -36,6 +43,8 @@ USAGE:
                       [--no-local-loss] [--wire f32|f16|int8]
                       [--compress none|topk:R|randk:R|quant:B] [--net-rate BYTES_PER_S]
                       [--fleet <name|FILE.json>] [--deadline-s F] [--quorum N]
+                      [--trace FILE.jsonl] [--metrics FILE.json]
+  sfprompt report     --trace FILE.jsonl [--chrome OUT.json] [--top N]
   sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|compress|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
@@ -59,6 +68,12 @@ quorum is met). See docs/FLEET.md.
 a fraction R of coordinates with per-client error feedback; quant:B is
 B-bit stochastic quantization); measured raw-vs-wire bytes and the
 compression ratio land in the report. See docs/COMPRESS.md.
+
+`--trace` records hierarchical spans (run -> round -> phase -> client ->
+stage) to JSON Lines; `--metrics` writes counters/gauges/latency
+histograms (stage times, achieved GFLOP/s, bytes per message kind) as
+JSON. `report` pretty-prints a saved trace and `--chrome` re-exports it
+as Chrome trace-event JSON for Perfetto. See docs/TELEMETRY.md.
 ";
 
 fn main() {
@@ -77,6 +92,7 @@ fn dispatch(args: Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("inspect") => inspect(&args),
         Some("train") => train(&args),
+        Some("report") => report(&args),
         Some("experiment") => experiment(&args),
         Some("analyze") => analyze(&args),
         _ => {
@@ -257,14 +273,55 @@ fn train(args: &Args) -> Result<()> {
             fed.retain_fraction, fed.wire.label(), fed.compress.label()
         );
     }
-    let hist = if json_out {
-        drive(run.as_mut(), &mut NullObserver)?
-    } else {
-        drive(run.as_mut(), &mut ProgressPrinter::new())?
+    // --trace / --metrics install a process-global telemetry sink for the
+    // duration of the drive; a TelemetryObserver maps driver events onto
+    // run/round spans while the pipeline hooks fill in the rest.
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
+    let telemetry = (trace_path.is_some() || metrics_path.is_some()).then(|| {
+        let t = Arc::new(Telemetry::new());
+        telemetry::install(t.clone());
+        t
+    });
+
+    let driven = match &telemetry {
+        Some(t) => {
+            let mut tobs = TelemetryObserver::new(t.clone());
+            if json_out {
+                drive(run.as_mut(), &mut tobs)
+            } else {
+                let mut printer = ProgressPrinter::new();
+                drive(run.as_mut(), &mut Tee(&mut printer, &mut tobs))
+            }
+        }
+        None if json_out => drive(run.as_mut(), &mut NullObserver),
+        None => drive(run.as_mut(), &mut ProgressPrinter::new()),
     };
+    if telemetry.is_some() {
+        telemetry::uninstall();
+    }
+    let hist = driven?;
+
+    if let Some(t) = &telemetry {
+        let dangling = t.tracer.finish();
+        if dangling > 0 {
+            eprintln!("warning: {dangling} telemetry spans never closed (flagged open:true)");
+        }
+        if let Some(path) = trace_path {
+            std::fs::write(path, t.tracer.to_jsonl())
+                .with_context(|| format!("writing trace {path}"))?;
+        }
+        if let Some(path) = metrics_path {
+            std::fs::write(path, format!("{}\n", t.metrics.to_json()))
+                .with_context(|| format!("writing metrics {path}"))?;
+        }
+    }
 
     if json_out {
-        let report = RunReport::new(&spec, run.setup_bytes(), hist);
+        let mut report = RunReport::new(&spec, run.setup_bytes(), hist);
+        if let Some(t) = &telemetry {
+            report = report.with_telemetry(t.metrics.to_json());
+        }
         println!("{}", report.to_json());
         return Ok(());
     }
@@ -291,6 +348,15 @@ fn train(args: &Args) -> Result<()> {
             hist.total_comm.compression_ratio()
         );
     }
+    if let Some(t) = &telemetry {
+        print_hottest_stages(&t.metrics.hottest_stages(5));
+        if let Some(path) = trace_path {
+            println!("  trace   -> {path}");
+        }
+        if let Some(path) = metrics_path {
+            println!("  metrics -> {path}");
+        }
+    }
     if args.has_flag("stats") {
         println!("\nper-stage execution stats (desc by total exec time):");
         println!("{:<26} {:>8} {:>12} {:>12} {:>10}", "stage", "calls", "exec total s",
@@ -301,6 +367,184 @@ fn train(args: &Args) -> Result<()> {
                 name, s.calls, s.exec_s, s.exec_s * 1e3 / s.calls as f64, s.convert_s
             );
         }
+    }
+    Ok(())
+}
+
+/// Console rendering of `MetricsRegistry::hottest_stages` (a JSON array).
+fn print_hottest_stages(rows: &Json) {
+    let Some(rows) = rows.as_arr() else { return };
+    if rows.is_empty() {
+        return;
+    }
+    println!("\nhottest backend stages (by total time):");
+    println!(
+        "{:<26} {:>8} {:>10} {:>9} {:>9} {:>9} {:>10}",
+        "stage", "calls", "total s", "mean ms", "p50 ms", "p95 ms", "GFLOP/s"
+    );
+    for r in rows {
+        let f = |k: &str| r.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        let gflops = r
+            .get("achieved_gflops")
+            .and_then(Json::as_f64)
+            .map_or("-".to_string(), |g| format!("{g:.2}"));
+        println!(
+            "{:<26} {:>8} {:>10.3} {:>9.3} {:>9.3} {:>9.3} {:>10}",
+            r.get("stage").and_then(Json::as_str).unwrap_or("?"),
+            f("calls") as u64,
+            f("total_s"),
+            f("mean_ms"),
+            f("p50_ms"),
+            f("p95_ms"),
+            gflops
+        );
+    }
+}
+
+/// Rebuild `SpanRecord`s from a trace JSONL file (the inverse of
+/// `Tracer::to_jsonl`). Returns the records in file order.
+fn parse_trace(text: &str) -> Result<Vec<SpanRecord>> {
+    // Span categories are &'static str on the in-memory record; a one-shot
+    // CLI parse interns each distinct cat once.
+    let mut interned: BTreeMap<String, &'static str> = BTreeMap::new();
+    let mut intern = |s: &str| -> &'static str {
+        *interned
+            .entry(s.to_string())
+            .or_insert_with(|| Box::leak(s.to_string().into_boxed_str()))
+    };
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow!("trace line {}: {e}", lineno + 1))?;
+        match v.get("ev").and_then(Json::as_str) {
+            Some("meta") => {
+                let fmt = v.get("format").and_then(Json::as_str);
+                if fmt != Some("sfprompt-trace") {
+                    bail!("not an sfprompt trace (format {fmt:?})");
+                }
+            }
+            Some("span") => {
+                let num = |k: &str| -> Result<f64> {
+                    v.get(k)
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow!("trace line {}: missing {k:?}", lineno + 1))
+                };
+                let attrs = match v.get("attrs").and_then(Json::as_obj) {
+                    Some(obj) => obj
+                        .iter()
+                        .filter_map(|(k, j)| j.as_f64().map(|n| (k.clone(), n)))
+                        .collect(),
+                    None => Vec::new(),
+                };
+                out.push(SpanRecord {
+                    id: num("id")? as u64,
+                    parent: v.get("parent").and_then(Json::as_f64).map(|p| p as u64),
+                    cat: intern(v.get("cat").and_then(Json::as_str).unwrap_or("?")),
+                    name: v
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .unwrap_or("?")
+                        .to_string(),
+                    tid: num("tid")? as u64,
+                    start_s: num("t0_s")?,
+                    end_s: num("t1_s")?,
+                    sim_s: v.get("sim_s").and_then(Json::as_f64),
+                    attrs,
+                    open: v.get("open").and_then(Json::as_bool) == Some(true),
+                });
+            }
+            other => bail!("trace line {}: unknown event {other:?}", lineno + 1),
+        }
+    }
+    Ok(out)
+}
+
+/// `report --trace FILE.jsonl [--chrome OUT.json] [--top N]`: pretty-print
+/// a saved trace — span census, round timeline, hottest stage spans — and
+/// optionally re-export it as Chrome trace-event JSON.
+fn report(args: &Args) -> Result<()> {
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow!("report needs --trace FILE.jsonl"))?;
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let records = parse_trace(&text)?;
+    if records.is_empty() {
+        bail!("trace {path} contains no spans");
+    }
+    let top_n: usize = args.get_parse("top", 10usize);
+
+    // Census per category.
+    let mut by_cat: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+    for r in &records {
+        let e = by_cat.entry(r.cat).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += r.end_s - r.start_s;
+    }
+    println!("trace {path}: {} spans", records.len());
+    for (cat, (n, total)) in &by_cat {
+        println!("  {cat:<8} {n:>6} spans  {total:>9.3}s total");
+    }
+
+    // Round timeline (run/round spans in start order).
+    let rounds: Vec<&SpanRecord> = records.iter().filter(|r| r.cat == "round").collect();
+    if !rounds.is_empty() {
+        println!("\nround timeline:");
+        for r in &rounds {
+            let children = records.iter().filter(|c| c.parent == Some(r.id)).count();
+            let sim = r.sim_s.map_or(String::new(), |s| format!("  sim_clock={s:.1}s"));
+            println!(
+                "  {:<10} wall {:>8.3}s..{:>8.3}s ({:>7.3}s)  {} child spans{}",
+                r.name,
+                r.start_s,
+                r.end_s,
+                r.end_s - r.start_s,
+                children,
+                sim
+            );
+        }
+    }
+
+    // Hottest stage spans, aggregated by name.
+    let mut stages: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+    for r in records.iter().filter(|r| r.cat == "stage") {
+        let e = stages.entry(r.name.as_str()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += r.end_s - r.start_s;
+    }
+    if !stages.is_empty() {
+        let mut rows: Vec<(&str, usize, f64)> =
+            stages.into_iter().map(|(k, (n, s))| (k, n, s)).collect();
+        rows.sort_by(|a, b| b.2.total_cmp(&a.2));
+        println!("\nhottest stages (top {top_n} by total time):");
+        println!("{:<26} {:>8} {:>10} {:>9}", "stage", "calls", "total s", "mean ms");
+        for (name, calls, total) in rows.iter().take(top_n) {
+            println!(
+                "{:<26} {:>8} {:>10.3} {:>9.3}",
+                name,
+                calls,
+                total,
+                total * 1e3 / *calls as f64
+            );
+        }
+    }
+
+    let open: Vec<&SpanRecord> = records.iter().filter(|r| r.open).collect();
+    if !open.is_empty() {
+        println!("\nWARNING: {} spans never closed (instrumentation bug):", open.len());
+        for r in &open {
+            println!("  #{} {}/{} on tid {}", r.id, r.cat, r.name, r.tid);
+        }
+    }
+
+    if let Some(out) = args.get("chrome") {
+        let doc = sfprompt::telemetry::chrome_trace_from_records(&records);
+        std::fs::write(out, format!("{doc}\n"))
+            .with_context(|| format!("writing chrome trace {out}"))?;
+        println!("\nchrome trace -> {out} (open in Perfetto or chrome://tracing)");
     }
     Ok(())
 }

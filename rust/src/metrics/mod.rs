@@ -43,6 +43,11 @@ impl RoundRecord {
 pub struct RunHistory {
     pub rounds: Vec<RoundRecord>,
     pub total_comm: ByteMeter,
+    /// Real (measured) wall-clock of the whole driven run, stamped by
+    /// [`crate::federation::drive`]. Zero for histories built elsewhere
+    /// (e.g. hand-assembled in tests); distinct from [`Self::sim_wall_s`],
+    /// which is simulated time.
+    pub run_wall_s: f64,
 }
 
 impl RunHistory {

@@ -166,6 +166,9 @@ impl SimClock {
     pub fn mark_done(&mut self, slot: usize) {
         let s = &mut self.slots[slot];
         s.done_mark_s = Some(s.elapsed_s);
+        if let Some(t) = crate::telemetry::active() {
+            t.metrics.observe("sim_done_mark_s", s.elapsed_s);
+        }
     }
 
     /// Resolve the round: order finishes chronologically, apply the
@@ -254,6 +257,13 @@ impl SimClock {
             effective_deadline.max(survivor_max)
         };
 
+        if let Some(t) = crate::telemetry::active() {
+            // Gauges (last write wins): `finish` may run twice per round
+            // (mid-round survivor resolution + final), so monotone
+            // counters here would double-count.
+            t.metrics.gauge_set("sim_round_latency_s", latency_s);
+            t.metrics.gauge_set("sim_deadline_extensions", extensions as f64);
+        }
         RoundOutcome { events, survivors, latency_s, deadline_extensions: extensions }
     }
 }

@@ -1,0 +1,372 @@
+//! Counters, gauges, and fixed-bucket latency histograms (substrate).
+//!
+//! The [`MetricsRegistry`] is a mutex-guarded map of named instruments:
+//!
+//! * **counters** — monotone `u64` sums (bytes per message kind, frame
+//!   counts, accumulated analytic FLOPs per stage);
+//! * **gauges** — last-written `f64` values (compression keep-ratio,
+//!   final accuracy);
+//! * **histograms** — fixed logarithmic buckets over seconds, recording
+//!   count/sum/min/max plus per-bucket counts, with p50/p95 estimated by
+//!   linear interpolation inside the winning bucket.
+//!
+//! Bucket bounds are powers of two from ~1 µs to ~128 s — wide enough for
+//! a sub-millisecond tiny-config stage and an hours-long real run alike,
+//! and fixed so snapshots from different runs are comparable bin-by-bin.
+//!
+//! Achieved GFLOP/s is **derived, not sampled**: each stage call adds its
+//! analytic FLOP count ([`crate::flops::stage_flops`]) to a counter and its
+//! wall time to a histogram; [`MetricsRegistry::to_json`] divides the sums.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// Histogram bucket upper bounds in seconds: 2^-20 .. 2^7 (≈1 µs .. 128 s),
+/// one doubling per bucket, plus an implicit overflow bucket at the end.
+const BUCKET_POW_LO: i32 = -20;
+const BUCKET_POW_HI: i32 = 7;
+const NUM_BUCKETS: usize = (BUCKET_POW_HI - BUCKET_POW_LO + 1) as usize + 1;
+
+fn bucket_bound(i: usize) -> f64 {
+    (2.0f64).powi(BUCKET_POW_LO + i as i32)
+}
+
+fn bucket_index(v: f64) -> usize {
+    for i in 0..NUM_BUCKETS - 1 {
+        if v <= bucket_bound(i) {
+            return i;
+        }
+    }
+    NUM_BUCKETS - 1
+}
+
+/// Fixed-bucket histogram over non-negative seconds.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; NUM_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        let v = v.max(0.0);
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate: walk buckets to the one containing the target
+    /// rank, then interpolate linearly between its bounds. Exact min/max
+    /// clamp the ends, so p0/p100 are true observed extremes.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * self.count as f64;
+        let mut seen = 0u64;
+        for i in 0..NUM_BUCKETS {
+            let c = self.counts[i];
+            if c == 0 {
+                continue;
+            }
+            if (seen + c) as f64 >= target {
+                let lo = if i == 0 { 0.0 } else { bucket_bound(i - 1) };
+                let hi = if i == NUM_BUCKETS - 1 {
+                    self.max
+                } else {
+                    bucket_bound(i)
+                };
+                let frac = ((target - seen as f64) / c as f64).clamp(0.0, 1.0);
+                return (lo + frac * (hi - lo)).clamp(self.min, self.max);
+            }
+            seen += c;
+        }
+        self.max
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), Json::Num(self.count as f64));
+        o.insert("sum_s".into(), Json::Num(self.sum));
+        o.insert("mean_s".into(), Json::Num(self.mean()));
+        o.insert(
+            "min_s".into(),
+            Json::Num(if self.count == 0 { 0.0 } else { self.min }),
+        );
+        o.insert(
+            "max_s".into(),
+            Json::Num(if self.count == 0 { 0.0 } else { self.max }),
+        );
+        o.insert("p50_s".into(), Json::Num(self.quantile(0.50)));
+        o.insert("p95_s".into(), Json::Num(self.quantile(0.95)));
+        // Sparse bucket table: [upper_bound_s, count] for occupied buckets.
+        let buckets: Vec<Json> = (0..NUM_BUCKETS)
+            .filter(|&i| self.counts[i] > 0)
+            .map(|i| {
+                let bound = if i == NUM_BUCKETS - 1 {
+                    f64::INFINITY
+                } else {
+                    bucket_bound(i)
+                };
+                let bound_json = if bound.is_finite() {
+                    Json::Num(bound)
+                } else {
+                    Json::Str("inf".into())
+                };
+                Json::Arr(vec![bound_json, Json::Num(self.counts[i] as f64)])
+            })
+            .collect();
+        o.insert("buckets".into(), Json::Arr(buckets));
+        Json::Obj(o)
+    }
+}
+
+#[derive(Default)]
+struct Instruments {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+/// Named-instrument registry. All methods lock briefly; callers only reach
+/// here when telemetry is enabled.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Instruments>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    pub fn counter_add(&self, name: &str, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one observation (seconds) into a histogram.
+    pub fn observe(&self, name: &str, v_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.hists.entry(name.to_string()).or_default().observe(v_s);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    pub fn histogram_count(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .hists
+            .get(name)
+            .map_or(0, |h| h.count())
+    }
+
+    /// Top-`n` hottest stage histograms (`stage_s/<name>`) by total time,
+    /// each with achieved GFLOP/s when a matching `stage_flops/<name>`
+    /// counter exists.
+    pub fn hottest_stages(&self, n: usize) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut stages: Vec<(&String, &Histogram)> = g
+            .hists
+            .iter()
+            .filter(|(k, _)| k.starts_with("stage_s/"))
+            .collect();
+        stages.sort_by(|a, b| b.1.sum().total_cmp(&a.1.sum()));
+        let rows: Vec<Json> = stages
+            .iter()
+            .take(n)
+            .map(|(key, h)| {
+                let stage = key.trim_start_matches("stage_s/");
+                let mut o = BTreeMap::new();
+                o.insert("stage".into(), Json::Str(stage.into()));
+                o.insert("calls".into(), Json::Num(h.count() as f64));
+                o.insert("total_s".into(), Json::Num(h.sum()));
+                o.insert("mean_ms".into(), Json::Num(h.mean() * 1e3));
+                o.insert("p50_ms".into(), Json::Num(h.quantile(0.50) * 1e3));
+                o.insert("p95_ms".into(), Json::Num(h.quantile(0.95) * 1e3));
+                let flops_key = format!("stage_flops/{stage}");
+                if let Some(&fl) = g.counters.get(&flops_key) {
+                    if h.sum() > 0.0 {
+                        o.insert(
+                            "achieved_gflops".into(),
+                            Json::Num(fl as f64 / h.sum() / 1e9),
+                        );
+                    }
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// Full registry snapshot: counters, gauges, every histogram, the
+    /// derived per-stage achieved-GFLOP/s table, and the hottest-stage
+    /// summary. This is both the `--metrics FILE` payload and the
+    /// `"telemetry"` block of the run report.
+    pub fn to_json(&self) -> Json {
+        let hottest = self.hottest_stages(10);
+        let g = self.inner.lock().unwrap();
+        let counters: BTreeMap<String, Json> = g
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = g
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v)))
+            .collect();
+        let hists: BTreeMap<String, Json> = g
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        let mut gflops = BTreeMap::new();
+        for (key, h) in g.hists.iter().filter(|(k, _)| k.starts_with("stage_s/")) {
+            let stage = key.trim_start_matches("stage_s/");
+            if let Some(&fl) = g.counters.get(&format!("stage_flops/{stage}")) {
+                if h.sum() > 0.0 {
+                    gflops.insert(stage.to_string(), Json::Num(fl as f64 / h.sum() / 1e9));
+                }
+            }
+        }
+        let mut o = BTreeMap::new();
+        o.insert("counters".into(), Json::Obj(counters));
+        o.insert("gauges".into(), Json::Obj(gauges));
+        o.insert("histograms".into(), Json::Obj(hists));
+        o.insert("achieved_gflops".into(), Json::Obj(gflops));
+        o.insert("hottest_stages".into(), hottest);
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = MetricsRegistry::new();
+        m.counter_add("wire_bytes/Upload", 100);
+        m.counter_add("wire_bytes/Upload", 28);
+        m.gauge_set("compress_keep_ratio", 0.1);
+        m.gauge_set("compress_keep_ratio", 0.2);
+        assert_eq!(m.counter("wire_bytes/Upload"), 128);
+        let j = m.to_json();
+        assert_eq!(
+            j.get("gauges")
+                .and_then(|g| g.get("compress_keep_ratio"))
+                .and_then(Json::as_f64),
+            Some(0.2)
+        );
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_observations() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.observe(i as f64 * 1e-3); // 1ms .. 100ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        let p50 = h.quantile(0.50);
+        let p95 = h.quantile(0.95);
+        assert!(p50 >= 0.001 && p50 <= 0.1, "p50={p50}");
+        assert!(p95 >= p50 && p95 <= 0.1, "p95={p95}");
+        assert_eq!(h.quantile(1.0), 0.1);
+    }
+
+    #[test]
+    fn histogram_handles_extremes() {
+        let mut h = Histogram::default();
+        h.observe(0.0); // below the lowest bound → bucket 0
+        h.observe(1e9); // beyond the highest bound → overflow bucket
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(1.0), 1e9);
+        let j = h.to_json();
+        let buckets = j.get("buckets").and_then(Json::as_arr).unwrap();
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[1].as_arr().unwrap()[0].as_str(), Some("inf"));
+    }
+
+    #[test]
+    fn achieved_gflops_is_flops_over_time() {
+        let m = MetricsRegistry::new();
+        m.observe("stage_s/head_forward", 0.5);
+        m.observe("stage_s/head_forward", 0.5);
+        m.counter_add("stage_flops/head_forward", 2_000_000_000);
+        let j = m.to_json();
+        let g = j
+            .get("achieved_gflops")
+            .and_then(|o| o.get("head_forward"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((g - 2.0).abs() < 1e-9, "gflops={g}");
+        let hot = m.hottest_stages(5);
+        let row = &hot.as_arr().unwrap()[0];
+        assert_eq!(row.get("stage").and_then(Json::as_str), Some("head_forward"));
+        assert_eq!(row.get("calls").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn hottest_stages_sorted_by_total_time() {
+        let m = MetricsRegistry::new();
+        m.observe("stage_s/a", 0.001);
+        m.observe("stage_s/b", 1.0);
+        m.observe("stage_s/c", 0.01);
+        m.observe("other_hist", 99.0); // non-stage histograms excluded
+        let hot = m.hottest_stages(2);
+        let rows = hot.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("stage").and_then(Json::as_str), Some("b"));
+        assert_eq!(rows[1].get("stage").and_then(Json::as_str), Some("c"));
+    }
+}

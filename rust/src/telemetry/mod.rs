@@ -1,0 +1,212 @@
+//! Telemetry: hierarchical tracing spans + a metrics registry for the
+//! whole training pipeline.
+//!
+//! SFPrompt's claims are *resource* claims, so the repro measures where
+//! wall-clock time and compute actually go instead of asserting it. One
+//! [`Telemetry`] bundle per run holds:
+//!
+//! * [`Tracer`] — hierarchical spans (run → round → phase → client →
+//!   backend stage), stamped with wall-clock **and** sim-clock time,
+//!   serialised as JSON Lines or Chrome trace-event JSON (Perfetto);
+//! * [`MetricsRegistry`] — counters/gauges/fixed-bucket histograms: stage
+//!   latency and achieved GFLOP/s (vs the `flops/` analytic counts), frame
+//!   encode/decode time, bytes per message kind, compress/decompress time,
+//!   FedAvg aggregation time, EL2N pruning time, fleet events.
+//!
+//! ## Enabling
+//!
+//! Telemetry is **off by default and free when off**: every hook starts
+//! with [`active`], whose disabled path is a single relaxed atomic load —
+//! no locks, no allocation (`benches/telemetry.rs` guards this). The CLI
+//! enables it for `train --trace FILE --metrics FILE`; programmatic runs
+//! call [`install`] / [`uninstall`] around [`crate::federation::drive`]
+//! with a [`TelemetryObserver`] in the observer chain:
+//!
+//! ```ignore
+//! let telemetry = Arc::new(Telemetry::new());
+//! telemetry::install(telemetry.clone());
+//! let mut obs = TelemetryObserver::new(telemetry.clone());
+//! drive(run.as_mut(), &mut obs)?;
+//! telemetry::uninstall();
+//! telemetry.tracer.finish();
+//! std::fs::write("trace.jsonl", telemetry.tracer.to_jsonl())?;
+//! ```
+//!
+//! The sink is process-global because the hot hooks (a backend stage, a
+//! codec frame, a compression pass) sit far below any function that could
+//! reasonably thread an `Arc` parameter. Span *structure* still composes:
+//! nesting is per-thread and spans carry the tracer instance's id, so two
+//! concurrently live `Telemetry` values (e.g. parallel tests) never mix
+//! stacks. See `docs/TELEMETRY.md` for the span taxonomy, metric names,
+//! and file schemas.
+
+mod metrics;
+mod observer;
+mod tracer;
+
+pub use metrics::{Histogram, MetricsRegistry};
+pub use observer::TelemetryObserver;
+pub use tracer::{chrome_trace_from_records, SpanRecord, Tracer};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One run's worth of telemetry: a tracer and a metrics registry that
+/// instrumentation sites reach through [`active`].
+#[derive(Default)]
+pub struct Telemetry {
+    pub tracer: Tracer,
+    pub metrics: MetricsRegistry,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { tracer: Tracer::new(), metrics: MetricsRegistry::new() }
+    }
+
+    /// Open a span with implicit (thread-local) parenting. The returned
+    /// guard closes the span on drop.
+    pub fn span(self: &Arc<Self>, cat: &'static str, name: &str) -> SpanGuard {
+        let id = self.tracer.open(cat, name, None);
+        SpanGuard { telemetry: self.clone(), id, sim_s: None, attrs: Vec::new() }
+    }
+
+    /// Open a span under an explicit parent (or as a root when `None`) —
+    /// the cross-thread nesting path: capture [`Self::current_span_id`] on
+    /// the spawning thread, pass it into the spawned closure.
+    pub fn span_under(
+        self: &Arc<Self>,
+        cat: &'static str,
+        name: &str,
+        parent: Option<u64>,
+    ) -> SpanGuard {
+        let id = self.tracer.open(cat, name, Some(parent));
+        SpanGuard { telemetry: self.clone(), id, sim_s: None, attrs: Vec::new() }
+    }
+
+    /// Innermost span open on the current thread (for explicit parenting).
+    pub fn current_span_id(&self) -> Option<u64> {
+        self.tracer.current_span_id()
+    }
+}
+
+/// RAII span handle: closes its span (recording attributes and the
+/// optional sim-clock stamp) when dropped.
+pub struct SpanGuard {
+    telemetry: Arc<Telemetry>,
+    id: u64,
+    sim_s: Option<f64>,
+    attrs: Vec<(String, f64)>,
+}
+
+impl SpanGuard {
+    /// Span id — pass to [`Telemetry::span_under`] on another thread.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a numeric attribute (recorded at close).
+    pub fn attr(&mut self, key: &str, v: f64) {
+        self.attrs.push((key.to_string(), v));
+    }
+
+    /// Stamp the simulated fleet clock onto this span.
+    pub fn set_sim_s(&mut self, sim_s: f64) {
+        self.sim_s = Some(sim_s);
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.telemetry
+            .tracer
+            .close(self.id, self.sim_s, std::mem::take(&mut self.attrs));
+    }
+}
+
+/// Fast-path flag: instrumentation sites pay one relaxed load when
+/// telemetry is off.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<Option<Arc<Telemetry>>> = Mutex::new(None);
+
+/// Install `telemetry` as the process-global sink the pipeline hooks
+/// report into. Replaces any previous sink.
+pub fn install(telemetry: Arc<Telemetry>) {
+    *GLOBAL.lock().unwrap() = Some(telemetry);
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Remove and return the global sink; hooks go back to the free disabled
+/// path immediately.
+pub fn uninstall() -> Option<Arc<Telemetry>> {
+    ENABLED.store(false, Ordering::SeqCst);
+    GLOBAL.lock().unwrap().take()
+}
+
+/// The global sink, if one is installed. Disabled path: one relaxed
+/// atomic load, no lock, no allocation — safe to call in the tightest
+/// loops.
+#[inline]
+pub fn active() -> Option<Arc<Telemetry>> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    GLOBAL.lock().unwrap().clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn install_uninstall_roundtrip() {
+        // Serialise against any other test touching the global sink.
+        static GATE: Mutex<()> = Mutex::new(());
+        let _gate = GATE.lock().unwrap();
+        let prior = uninstall(); // isolate from concurrent installs
+        assert!(active().is_none());
+        let t = Arc::new(Telemetry::new());
+        install(t.clone());
+        let got = active().expect("installed sink visible");
+        assert!(Arc::ptr_eq(&got, &t));
+        let back = uninstall().expect("uninstall returns the sink");
+        assert!(Arc::ptr_eq(&back, &t));
+        assert!(active().is_none());
+        if let Some(p) = prior {
+            install(p);
+        }
+    }
+
+    #[test]
+    fn span_guard_records_attrs_on_drop() {
+        let t = Arc::new(Telemetry::new());
+        {
+            let mut span = t.span("phase", "phase1_local");
+            span.attr("batches", 4.0);
+            span.set_sim_s(1.25);
+        }
+        assert_eq!(t.tracer.finish(), 0);
+        let recs = t.tracer.records();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].name, "phase1_local");
+        assert_eq!(recs[0].sim_s, Some(1.25));
+        assert_eq!(recs[0].attrs, vec![("batches".to_string(), 4.0)]);
+    }
+
+    #[test]
+    fn two_telemetry_instances_do_not_mix_stacks() {
+        let a = Arc::new(Telemetry::new());
+        let b = Arc::new(Telemetry::new());
+        let sa = a.span("run", "run:a");
+        let _sb = b.span("run", "run:b");
+        // b's open span must not become a's implicit parent.
+        let child = a.span("round", "round:0");
+        drop(child);
+        drop(sa);
+        a.tracer.finish();
+        let recs = a.tracer.records();
+        let round = recs.iter().find(|r| r.cat == "round").unwrap();
+        let run = recs.iter().find(|r| r.cat == "run").unwrap();
+        assert_eq!(round.parent, Some(run.id));
+    }
+}

@@ -1,0 +1,141 @@
+//! Bridge from the driver's [`RoundObserver`] event stream into spans and
+//! metrics — run/round structure is observed here, not re-plumbed through
+//! the engines.
+//!
+//! The observer runs on the driver thread, so the run and round spans it
+//! opens sit on that thread's implicit span stack: the engine's own
+//! server-side spans (serve, aggregate) nest under the round span for
+//! free, and the engine captures [`crate::telemetry::Telemetry::
+//! current_span_id`] before spawning client threads to parent their spans
+//! explicitly.
+//!
+//! Compose with a console printer via [`crate::federation::Tee`] when both
+//! telemetry and progress output are wanted.
+
+use std::sync::Arc;
+
+use crate::federation::{FedConfig, Method, RoundObserver};
+use crate::metrics::{RoundRecord, RunHistory};
+use crate::sim::DropReason;
+
+use super::{SpanGuard, Telemetry};
+
+/// Records the run → round span skeleton plus fleet/eval metrics from
+/// driver events.
+pub struct TelemetryObserver {
+    telemetry: Arc<Telemetry>,
+    run_span: Option<SpanGuard>,
+    round_span: Option<SpanGuard>,
+}
+
+impl TelemetryObserver {
+    pub fn new(telemetry: Arc<Telemetry>) -> TelemetryObserver {
+        TelemetryObserver { telemetry, run_span: None, round_span: None }
+    }
+}
+
+impl RoundObserver for TelemetryObserver {
+    fn on_run_start(&mut self, method: Method, fed: &FedConfig) {
+        let mut span = self
+            .telemetry
+            .span("run", &format!("run:{}", method.label()));
+        span.attr("clients", fed.num_clients as f64);
+        span.attr("per_round", fed.clients_per_round as f64);
+        span.attr("rounds", fed.rounds as f64);
+        self.run_span = Some(span);
+    }
+
+    fn on_round_start(&mut self, round: usize) {
+        // Implicit parent: the run span is open on this (driver) thread.
+        self.round_span = Some(self.telemetry.span("round", &format!("round:{round}")));
+    }
+
+    fn on_client_done(&mut self, _round: usize, _client: usize, finish_s: f64) {
+        self.telemetry.metrics.counter_add("clients_done", 1);
+        self.telemetry.metrics.observe("sim_client_finish_s", finish_s);
+    }
+
+    fn on_client_dropped(&mut self, _round: usize, _client: usize, _at_s: f64, reason: DropReason) {
+        self.telemetry.metrics.counter_add("clients_dropped", 1);
+        self.telemetry
+            .metrics
+            .counter_add(&format!("clients_dropped/{reason:?}"), 1);
+    }
+
+    fn on_eval(&mut self, _round: usize, accuracy: f64) {
+        self.telemetry.metrics.counter_add("evals", 1);
+        self.telemetry.metrics.gauge_set("eval_accuracy", accuracy);
+    }
+
+    fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+        self.telemetry.metrics.observe("round_wall_s", rec.wall_s);
+        self.telemetry.metrics.observe("round_sim_s", rec.sim_latency_s);
+        self.telemetry
+            .metrics
+            .counter_add("round_bytes", rec.comm.total() as u64);
+        if let Some(mut span) = self.round_span.take() {
+            span.attr("bytes", rec.comm.total() as f64);
+            span.attr("survivors", rec.survivors() as f64);
+            span.attr("dropped", rec.dropped() as f64);
+            if rec.eval_accuracy.is_finite() {
+                span.attr("accuracy", rec.eval_accuracy);
+            }
+            // Cumulative simulated clock after this round (§3.5 latencies).
+            span.set_sim_s(clock_s);
+        } // drop closes the span
+    }
+
+    fn on_run_end(&mut self, history: &RunHistory) {
+        if let Some(mut span) = self.run_span.take() {
+            span.attr("final_accuracy", history.final_accuracy());
+            span.attr("total_bytes", history.total_comm.total() as f64);
+            span.set_sim_s(history.sim_wall_s());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ByteMeter;
+
+    fn record(round: usize) -> RoundRecord {
+        RoundRecord {
+            round,
+            mean_local_loss: 1.0,
+            mean_split_loss: 1.0,
+            eval_accuracy: 0.5,
+            comm: ByteMeter::default(),
+            wall_s: 0.01,
+            sim_latency_s: 2.0,
+            clients: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn observer_builds_run_round_skeleton() {
+        let t = Arc::new(Telemetry::new());
+        let mut obs = TelemetryObserver::new(t.clone());
+        let fed = FedConfig::default();
+        obs.on_run_start(Method::SfPrompt, &fed);
+        for r in 0..2 {
+            obs.on_round_start(r);
+            obs.on_client_done(r, 3, 1.5);
+            obs.on_eval(r, 0.5);
+            obs.on_round_end(&record(r), 2.0 * (r + 1) as f64);
+        }
+        obs.on_run_end(&RunHistory::default());
+        assert_eq!(t.tracer.finish(), 0);
+        let recs = t.tracer.records();
+        let run: Vec<_> = recs.iter().filter(|r| r.cat == "run").collect();
+        let rounds: Vec<_> = recs.iter().filter(|r| r.cat == "round").collect();
+        assert_eq!(run.len(), 1);
+        assert_eq!(rounds.len(), 2);
+        for r in &rounds {
+            assert_eq!(r.parent, Some(run[0].id));
+            assert!(r.sim_s.is_some());
+        }
+        assert_eq!(t.metrics.counter("clients_done"), 2);
+        assert_eq!(t.metrics.histogram_count("round_wall_s"), 2);
+    }
+}

@@ -1,0 +1,388 @@
+//! Hierarchical wall-clock spans (substrate).
+//!
+//! A [`Tracer`] records **spans** — named intervals with a parent — into an
+//! in-memory buffer. Nesting is implicit: each thread keeps a stack of open
+//! spans per tracer, so a span opened while another is open on the same
+//! thread becomes its child. Cross-thread nesting (a client thread's spans
+//! under the driver thread's round span) uses an explicit parent id captured
+//! before the thread is spawned.
+//!
+//! Spans carry two clocks: wall time (seconds since the tracer's epoch,
+//! monotone per thread by construction) and, where the caller provides it,
+//! the simulated fleet clock (`sim_s`). Finished traces serialise as JSON
+//! Lines ([`Tracer::to_jsonl`]) or Chrome trace-event JSON
+//! ([`Tracer::to_chrome_trace`], loadable in Perfetto / chrome://tracing).
+//!
+//! The tracer is `Sync`: opens/closes take a mutex, but only when telemetry
+//! is enabled — the disabled path never reaches this module (see
+//! [`crate::telemetry::active`]).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Process-unique tracer ids, so thread-local span stacks never confuse two
+/// tracers living at once (e.g. concurrent tests).
+static NEXT_TRACER_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Small, stable per-thread ids (std's `ThreadId` has no stable integer).
+static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_ID: u64 = NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed);
+    /// Stack of (tracer id, span id) — the implicit-parent mechanism.
+    static SPAN_STACK: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+fn current_thread_id() -> u64 {
+    THREAD_ID.with(|t| *t)
+}
+
+/// One finished (or force-closed) span.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub parent: Option<u64>,
+    /// Taxonomy level: "run", "round", "phase", "client", "stage", ...
+    pub cat: &'static str,
+    pub name: String,
+    /// Stable small id of the thread the span ran on.
+    pub tid: u64,
+    /// Wall-clock start/end, seconds since the tracer epoch.
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Simulated fleet-clock stamp, when the caller provided one.
+    pub sim_s: Option<f64>,
+    /// Numeric attributes (bytes, counts, accuracies...).
+    pub attrs: Vec<(String, f64)>,
+    /// True only for spans still open when [`Tracer::finish`] ran — a bug
+    /// in the instrumentation, surfaced rather than hidden.
+    pub open: bool,
+}
+
+struct OpenSpan {
+    parent: Option<u64>,
+    cat: &'static str,
+    name: String,
+    tid: u64,
+    start_s: f64,
+}
+
+#[derive(Default)]
+struct TraceState {
+    closed: Vec<SpanRecord>,
+    open: BTreeMap<u64, OpenSpan>,
+}
+
+/// Span recorder. Cheap to create; owned by [`crate::telemetry::Telemetry`].
+pub struct Tracer {
+    tracer_id: u64,
+    epoch: Instant,
+    next_span_id: AtomicU64,
+    state: Mutex<TraceState>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            tracer_id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+            epoch: Instant::now(),
+            next_span_id: AtomicU64::new(1),
+            state: Mutex::new(TraceState::default()),
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Id of the innermost span open on *this thread* for this tracer —
+    /// capture it before spawning a thread to parent that thread's spans.
+    pub fn current_span_id(&self) -> Option<u64> {
+        SPAN_STACK.with(|s| {
+            s.borrow()
+                .iter()
+                .rev()
+                .find(|(t, _)| *t == self.tracer_id)
+                .map(|(_, id)| *id)
+        })
+    }
+
+    /// Open a span. `parent` of `None` means "use the implicit thread-local
+    /// parent"; `Some(explicit)` pins it (cross-thread nesting). The span is
+    /// pushed on this thread's stack either way, so spans opened after it on
+    /// this thread nest inside it.
+    pub(crate) fn open(&self, cat: &'static str, name: &str, parent: Option<Option<u64>>) -> u64 {
+        let parent = parent.unwrap_or_else(|| self.current_span_id());
+        let id = self.next_span_id.fetch_add(1, Ordering::Relaxed);
+        let span = OpenSpan {
+            parent,
+            cat,
+            name: name.to_string(),
+            tid: current_thread_id(),
+            start_s: self.now_s(),
+        };
+        self.state.lock().unwrap().open.insert(id, span);
+        SPAN_STACK.with(|s| s.borrow_mut().push((self.tracer_id, id)));
+        id
+    }
+
+    /// Close a span by id, attaching its final clocks and attributes.
+    pub(crate) fn close(&self, id: u64, sim_s: Option<f64>, attrs: Vec<(String, f64)>) {
+        let end_s = self.now_s();
+        SPAN_STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            // Usually the top entry; tolerate out-of-LIFO guard drops.
+            if let Some(pos) = stack.iter().rposition(|e| *e == (self.tracer_id, id)) {
+                stack.remove(pos);
+            }
+        });
+        let mut st = self.state.lock().unwrap();
+        if let Some(span) = st.open.remove(&id) {
+            st.closed.push(SpanRecord {
+                id,
+                parent: span.parent,
+                cat: span.cat,
+                name: span.name,
+                tid: span.tid,
+                start_s: span.start_s,
+                end_s,
+                sim_s,
+                attrs,
+                open: false,
+            });
+        }
+    }
+
+    /// Seal the trace: force-close anything still open (flagged
+    /// `open: true` in the output — downstream checkers treat that as a
+    /// failure) and return how many spans were left dangling.
+    pub fn finish(&self) -> usize {
+        let end_s = self.now_s();
+        let mut st = self.state.lock().unwrap();
+        let dangling: Vec<u64> = st.open.keys().copied().collect();
+        for id in &dangling {
+            if let Some(span) = st.open.remove(id) {
+                st.closed.push(SpanRecord {
+                    id: *id,
+                    parent: span.parent,
+                    cat: span.cat,
+                    name: span.name,
+                    tid: span.tid,
+                    start_s: span.start_s,
+                    end_s,
+                    sim_s: None,
+                    attrs: Vec::new(),
+                    open: true,
+                });
+            }
+        }
+        dangling.len()
+    }
+
+    /// Snapshot of all closed spans, ordered by start time.
+    pub fn records(&self) -> Vec<SpanRecord> {
+        let st = self.state.lock().unwrap();
+        let mut out = st.closed.clone();
+        out.sort_by(|a, b| a.start_s.total_cmp(&b.start_s).then(a.id.cmp(&b.id)));
+        out
+    }
+
+    /// Number of spans still open (0 after a clean run + `finish`).
+    pub fn open_count(&self) -> usize {
+        self.state.lock().unwrap().open.len()
+    }
+
+    fn span_json(r: &SpanRecord) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("ev".into(), Json::Str("span".into()));
+        o.insert("id".into(), Json::Num(r.id as f64));
+        o.insert(
+            "parent".into(),
+            r.parent.map_or(Json::Null, |p| Json::Num(p as f64)),
+        );
+        o.insert("cat".into(), Json::Str(r.cat.into()));
+        o.insert("name".into(), Json::Str(r.name.clone()));
+        o.insert("tid".into(), Json::Num(r.tid as f64));
+        o.insert("t0_s".into(), Json::Num(r.start_s));
+        o.insert("t1_s".into(), Json::Num(r.end_s));
+        if let Some(s) = r.sim_s {
+            o.insert("sim_s".into(), Json::Num(s));
+        }
+        if r.open {
+            o.insert("open".into(), Json::Bool(true));
+        }
+        if !r.attrs.is_empty() {
+            let attrs: BTreeMap<String, Json> = r
+                .attrs
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect();
+            o.insert("attrs".into(), Json::Obj(attrs));
+        }
+        Json::Obj(o)
+    }
+
+    /// JSON Lines serialisation: a `meta` header line, then one span per
+    /// line in start order. See `docs/TELEMETRY.md` for the schema.
+    pub fn to_jsonl(&self) -> String {
+        let mut meta = BTreeMap::new();
+        meta.insert("ev".into(), Json::Str("meta".into()));
+        meta.insert("format".into(), Json::Str("sfprompt-trace".into()));
+        meta.insert("version".into(), Json::Num(1.0));
+        let mut out = Json::Obj(meta).to_string();
+        out.push('\n');
+        for r in self.records() {
+            out.push_str(&Self::span_json(&r).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON (complete "X" events, microsecond clocks) —
+    /// opens directly in Perfetto or chrome://tracing.
+    pub fn to_chrome_trace(&self) -> Json {
+        chrome_trace_from_records(&self.records())
+    }
+}
+
+/// Build a Chrome trace-event document from span records. Shared by the
+/// live tracer and the `report` subcommand's JSONL re-export path.
+pub fn chrome_trace_from_records(records: &[SpanRecord]) -> Json {
+    let events: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut e = BTreeMap::new();
+            e.insert("name".into(), Json::Str(r.name.clone()));
+            e.insert("cat".into(), Json::Str(r.cat.into()));
+            e.insert("ph".into(), Json::Str("X".into()));
+            e.insert("ts".into(), Json::Num(r.start_s * 1e6));
+            e.insert("dur".into(), Json::Num((r.end_s - r.start_s) * 1e6));
+            e.insert("pid".into(), Json::Num(1.0));
+            e.insert("tid".into(), Json::Num(r.tid as f64));
+            let mut args = BTreeMap::new();
+            if let Some(s) = r.sim_s {
+                args.insert("sim_s".into(), Json::Num(s));
+            }
+            for (k, v) in &r.attrs {
+                args.insert(k.clone(), Json::Num(*v));
+            }
+            if !args.is_empty() {
+                e.insert("args".into(), Json::Obj(args));
+            }
+            Json::Obj(e)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".into(), Json::Arr(events));
+    doc.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+    Json::Obj(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn implicit_nesting_and_close() {
+        let t = Tracer::new();
+        let outer = t.open("round", "round:0", None);
+        let inner = t.open("stage", "head_forward", None);
+        assert_eq!(t.current_span_id(), Some(inner));
+        t.close(inner, None, Vec::new());
+        assert_eq!(t.current_span_id(), Some(outer));
+        t.close(outer, Some(3.5), vec![("bytes".into(), 128.0)]);
+        assert_eq!(t.finish(), 0);
+        let recs = t.records();
+        assert_eq!(recs.len(), 2);
+        let outer_rec = recs.iter().find(|r| r.id == outer).unwrap();
+        let inner_rec = recs.iter().find(|r| r.id == inner).unwrap();
+        assert_eq!(inner_rec.parent, Some(outer));
+        assert_eq!(outer_rec.parent, None);
+        assert_eq!(outer_rec.sim_s, Some(3.5));
+        assert!(inner_rec.start_s >= outer_rec.start_s);
+        assert!(inner_rec.end_s <= outer_rec.end_s);
+        assert!(!outer_rec.open && !inner_rec.open);
+    }
+
+    #[test]
+    fn explicit_parent_crosses_threads() {
+        let t = std::sync::Arc::new(Tracer::new());
+        let round = t.open("round", "round:0", None);
+        let t2 = t.clone();
+        let child_ids = std::thread::spawn(move || {
+            let client = t2.open("client", "client:7", Some(Some(round)));
+            let stage = t2.open("stage", "tail_step", None);
+            t2.close(stage, None, Vec::new());
+            t2.close(client, None, Vec::new());
+            (client, stage)
+        })
+        .join()
+        .unwrap();
+        t.close(round, None, Vec::new());
+        assert_eq!(t.finish(), 0);
+        let recs = t.records();
+        let client = recs.iter().find(|r| r.id == child_ids.0).unwrap();
+        let stage = recs.iter().find(|r| r.id == child_ids.1).unwrap();
+        let round_rec = recs.iter().find(|r| r.id == round).unwrap();
+        assert_eq!(client.parent, Some(round));
+        assert_eq!(stage.parent, Some(client.id));
+        assert_ne!(client.tid, round_rec.tid);
+    }
+
+    #[test]
+    fn finish_flags_unclosed_spans() {
+        let t = Tracer::new();
+        let id = t.open("phase", "leaked", None);
+        assert_eq!(t.finish(), 1);
+        let recs = t.records();
+        assert!(recs.iter().any(|r| r.id == id && r.open));
+        // Clear this thread's stale stack entry so later tests are clean.
+        SPAN_STACK.with(|s| s.borrow_mut().retain(|e| e.1 != id));
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_parser() {
+        let t = Tracer::new();
+        let a = t.open("run", "run:sfprompt", None);
+        t.close(a, Some(1.0), vec![("final_accuracy".into(), 0.5)]);
+        t.finish();
+        let text = t.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.get("ev").and_then(Json::as_str), Some("meta"));
+        assert_eq!(
+            meta.get("format").and_then(Json::as_str),
+            Some("sfprompt-trace")
+        );
+        let span = Json::parse(lines[1]).unwrap();
+        assert_eq!(span.get("cat").and_then(Json::as_str), Some("run"));
+        assert_eq!(span.get("parent"), Some(&Json::Null));
+        assert!(span.get("t1_s").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(span.get("open"), None);
+    }
+
+    #[test]
+    fn chrome_trace_has_complete_events() {
+        let t = Tracer::new();
+        let a = t.open("stage", "body_forward", None);
+        t.close(a, None, Vec::new());
+        t.finish();
+        let doc = t.to_chrome_trace();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("X"));
+        assert!(events[0].get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+    }
+}

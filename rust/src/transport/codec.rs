@@ -541,6 +541,8 @@ pub fn encoded_frame_len(frame: &Frame, wire: WireFormat) -> usize {
 /// Serialise a frame. f32 tensor data is encoded under `wire`; i32 tensors
 /// and all structure are unaffected by the wire format.
 pub fn encode_frame(frame: &Frame, wire: WireFormat) -> Result<Vec<u8>> {
+    let telemetry = crate::telemetry::active();
+    let t0 = telemetry.as_ref().map(|_| std::time::Instant::now());
     let mut buf = Vec::with_capacity(encoded_frame_len(frame, wire));
     buf.extend_from_slice(&[0u8; 4]); // frame_len backpatched below
     buf.extend_from_slice(&MAGIC);
@@ -563,6 +565,12 @@ pub fn encode_frame(frame: &Frame, wire: WireFormat) -> Result<Vec<u8>> {
     buf.extend_from_slice(&crc.to_le_bytes());
     let frame_len = buf.len() - 4;
     buf[0..4].copy_from_slice(&(frame_len as u32).to_le_bytes());
+    if let (Some(t), Some(t0)) = (&telemetry, t0) {
+        t.metrics.observe("codec_encode_s", t0.elapsed().as_secs_f64());
+        let kind = frame.kind.label();
+        t.metrics.counter_add(&format!("wire_bytes/{kind}"), buf.len() as u64);
+        t.metrics.counter_add(&format!("frames/{kind}"), 1);
+    }
     Ok(buf)
 }
 
@@ -713,6 +721,8 @@ fn decode_payload(r: &mut Reader) -> Result<Payload> {
 /// Rejects bad magic, unknown versions, length mismatches, and CRC errors
 /// before touching the payload. Quantized payloads decode back to f32.
 pub fn decode_frame(buf: &[u8]) -> Result<Frame> {
+    let telemetry = crate::telemetry::active();
+    let t0 = telemetry.as_ref().map(|_| std::time::Instant::now());
     if buf.len() < FRAME_OVERHEAD {
         bail!("frame too short ({} bytes, minimum {FRAME_OVERHEAD})", buf.len());
     }
@@ -747,6 +757,9 @@ pub fn decode_frame(buf: &[u8]) -> Result<Frame> {
     let payload = decode_payload(&mut r)?;
     if r.pos != r.buf.len() {
         bail!("{} trailing payload bytes", r.buf.len() - r.pos);
+    }
+    if let (Some(t), Some(t0)) = (&telemetry, t0) {
+        t.metrics.observe("codec_decode_s", t0.elapsed().as_secs_f64());
     }
     Ok(Frame { kind, round, client, payload })
 }

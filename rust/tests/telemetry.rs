@@ -1,0 +1,301 @@
+//! Telemetry integration tests: a real 2-round SFPrompt run recorded
+//! end-to-end (span skeleton, JSONL, Chrome export, metrics), a baseline
+//! run's span coverage, and span-tree invariants checked over both real
+//! traces and randomized synthetic ones.
+//!
+//! The telemetry sink is process-global, so every test that installs one
+//! holds `GATE` for its duration; assertions are presence-based (≥) where
+//! concurrent instrumentation could add spans.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use sfprompt::backend::NativeBackend;
+use sfprompt::data::{synth::DatasetProfile, SynthDataset};
+use sfprompt::federation::{drive, FedConfig, Method, RunBuilder, Selection};
+use sfprompt::partition::Partition;
+use sfprompt::telemetry::{self, SpanRecord, Telemetry, TelemetryObserver};
+use sfprompt::transport::WireFormat;
+use sfprompt::util::json::Json;
+
+/// Serialises tests that install the global sink.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn data(backend: &NativeBackend, n: usize, seed: u64) -> SynthDataset {
+    let cfg = &backend.manifest().config;
+    let profile = DatasetProfile {
+        name: "t",
+        num_classes: cfg.num_classes,
+        noise: 0.35,
+        class_overlap: 0.1,
+    };
+    SynthDataset::generate(profile, cfg.image_size, cfg.channels, n, 5, seed)
+}
+
+fn fed(rounds: usize) -> FedConfig {
+    FedConfig {
+        num_clients: 6,
+        clients_per_round: 2,
+        local_epochs: 1,
+        rounds,
+        lr: 0.1,
+        retain_fraction: 0.5,
+        local_loss_update: true,
+        partition: Partition::Iid,
+        seed: 9,
+        eval_limit: Some(16),
+        eval_every: 1,
+        selection: Selection::Uniform,
+        wire: WireFormat::F32,
+        compress: sfprompt::compress::Scheme::None,
+    }
+}
+
+/// Drive one run with a fresh installed sink; returns its sealed records
+/// and the telemetry bundle (for metrics assertions).
+fn record_run(method: Method, rounds: usize) -> (Vec<SpanRecord>, Arc<Telemetry>) {
+    let backend = NativeBackend::tiny();
+    let train = data(&backend, 96, 6);
+    let eval = data(&backend, 32, 60);
+    let sink = Arc::new(Telemetry::new());
+    telemetry::install(sink.clone());
+    let result = (|| {
+        let mut run =
+            RunBuilder::new(method).fed(fed(rounds)).build(&backend, &train, Some(&eval))?;
+        let mut obs = TelemetryObserver::new(sink.clone());
+        drive(run.as_mut(), &mut obs)
+    })();
+    telemetry::uninstall();
+    result.unwrap();
+    assert_eq!(sink.tracer.finish(), 0, "every span must close on a clean run");
+    (sink.tracer.records(), sink)
+}
+
+/// Span-tree invariants every sealed trace must satisfy:
+/// 1. no span is flagged open;
+/// 2. every parent id resolves, and the child's interval nests inside it;
+/// 3. spans on one thread are properly nested (no partial overlap);
+/// 4. end >= start everywhere.
+fn assert_tree_invariants(records: &[SpanRecord]) {
+    use std::collections::BTreeMap;
+    let by_id: BTreeMap<u64, &SpanRecord> = records.iter().map(|r| (r.id, r)).collect();
+    for r in records {
+        assert!(!r.open, "span {}/{} left open", r.cat, r.name);
+        assert!(r.end_s >= r.start_s, "span {} ends before it starts", r.name);
+        if let Some(pid) = r.parent {
+            let p = by_id
+                .get(&pid)
+                .unwrap_or_else(|| panic!("span {} has dangling parent {pid}", r.name));
+            assert!(
+                p.start_s <= r.start_s && r.end_s <= p.end_s,
+                "child {}/{} [{}, {}] escapes parent {}/{} [{}, {}]",
+                r.cat, r.name, r.start_s, r.end_s, p.cat, p.name, p.start_s, p.end_s
+            );
+        }
+    }
+    // Same-thread spans: sorted by start, each pair either nests or is
+    // disjoint — partial overlap would mean the implicit stack broke.
+    let mut by_tid: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+    for r in records {
+        by_tid.entry(r.tid).or_default().push(r);
+    }
+    for (tid, mut spans) in by_tid {
+        spans.sort_by(|a, b| a.start_s.total_cmp(&b.start_s).then(a.id.cmp(&b.id)));
+        for w in spans.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            assert!(
+                b.start_s >= a.end_s || b.end_s <= a.end_s,
+                "tid {tid}: spans {} and {} partially overlap",
+                a.name, b.name
+            );
+        }
+    }
+}
+
+#[test]
+fn sfprompt_e2e_trace_has_the_full_span_skeleton() {
+    let _g = gate();
+    let (records, sink) = record_run(Method::SfPrompt, 2);
+    assert_tree_invariants(&records);
+
+    // run → round skeleton: exactly one run span, one round span per round.
+    let runs: Vec<_> = records.iter().filter(|r| r.cat == "run").collect();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].name, "run:sfprompt");
+    assert!(runs[0].sim_s.is_some(), "run span carries the final sim clock");
+    let rounds: Vec<_> = records.iter().filter(|r| r.cat == "round").collect();
+    assert_eq!(rounds.len(), 2);
+    for (i, r) in rounds.iter().enumerate() {
+        assert_eq!(r.name, format!("round:{i}"));
+        assert_eq!(r.parent, Some(runs[0].id), "round must nest in the run span");
+        assert!(r.sim_s.is_some(), "round spans carry the cumulative sim clock");
+    }
+
+    // clients_per_round=2 over 2 rounds → 4 client spans, each under a
+    // round span, each on a worker thread (the engine spawns per client).
+    let clients: Vec<_> = records.iter().filter(|r| r.cat == "client").collect();
+    assert_eq!(clients.len(), 4);
+    let round_ids: Vec<u64> = rounds.iter().map(|r| r.id).collect();
+    for c in &clients {
+        assert!(round_ids.contains(&c.parent.expect("client span parented")));
+    }
+
+    // Phase spans: driver-side distribute/serve/aggregate/eval per round,
+    // plus the per-client phase1/phase2/phase3 chain.
+    let phase_names: Vec<&str> = records
+        .iter()
+        .filter(|r| r.cat == "phase")
+        .map(|r| r.name.as_str())
+        .collect();
+    for want in [
+        "distribute", "serve", "aggregate", "eval",
+        "phase1_local", "phase1_prune", "phase2_split", "phase3_upload",
+    ] {
+        assert!(
+            phase_names.iter().filter(|&&n| n == want).count() >= 2,
+            "expected ≥2 {want:?} phase spans (one per round/client), got {phase_names:?}"
+        );
+    }
+
+    // Backend stage spans exist and sit under client phases.
+    let stages: Vec<_> = records.iter().filter(|r| r.cat == "stage").collect();
+    assert!(!stages.is_empty());
+    for s in &stages {
+        assert!(s.parent.is_some(), "stage {} must not be a root", s.name);
+    }
+    assert!(stages.iter().any(|s| s.name == "local_step"));
+    assert!(stages.iter().any(|s| s.name == "el2n_scores"));
+    assert!(stages.iter().any(|s| s.name == "tail_step"));
+    assert!(stages.iter().any(|s| s.name == "eval_forward"));
+
+    // Metrics side: stage histograms with matching analytic-FLOP counters,
+    // codec + fedavg + pruning timings, and wire bytes per message kind.
+    let m = &sink.metrics;
+    assert!(m.histogram_count("stage_s/local_step") > 0);
+    assert!(m.counter("stage_flops/local_step") > 0);
+    assert!(m.histogram_count("codec_encode_s") > 0);
+    assert!(m.histogram_count("codec_decode_s") > 0);
+    assert!(m.histogram_count("aggregate_s") >= 2, "one FedAvg per round");
+    assert!(m.histogram_count("el2n_prune_s") >= 4, "one pruning pass per client-round");
+    assert!(m.counter("wire_bytes/smashed_data") > 0);
+    assert!(m.counter("frames/upload") >= 4);
+    assert_eq!(m.counter("clients_done"), 4);
+
+    // The metrics JSON block surfaces the hottest-stage summary with p50/p95.
+    let j = m.to_json();
+    let hottest = j.get("hottest_stages").and_then(Json::as_arr).unwrap();
+    assert!(!hottest.is_empty());
+    assert!(hottest[0].get("p95_ms").and_then(Json::as_f64).is_some());
+    assert!(
+        j.get("achieved_gflops").and_then(Json::as_obj).map_or(0, |o| o.len()) > 0,
+        "achieved GFLOP/s derived from flops counters"
+    );
+}
+
+#[test]
+fn trace_serialises_to_valid_jsonl_and_chrome_json() {
+    let _g = gate();
+    let backend = NativeBackend::tiny();
+    let train = data(&backend, 96, 7);
+    let sink = Arc::new(Telemetry::new());
+    telemetry::install(sink.clone());
+    let result = (|| {
+        let mut run = RunBuilder::new(Method::SfPrompt).fed(fed(2)).build(&backend, &train, None)?;
+        let mut obs = TelemetryObserver::new(sink.clone());
+        drive(run.as_mut(), &mut obs)
+    })();
+    telemetry::uninstall();
+    result.unwrap();
+    sink.tracer.finish();
+
+    // JSONL: meta header first, then one strict-JSON span object per line.
+    let text = sink.tracer.to_jsonl();
+    let mut lines = text.lines();
+    let meta = Json::parse(lines.next().unwrap()).unwrap();
+    assert_eq!(meta.get("format").and_then(Json::as_str), Some("sfprompt-trace"));
+    let mut span_lines = 0usize;
+    for line in lines {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e}"));
+        assert_eq!(v.get("ev").and_then(Json::as_str), Some("span"));
+        assert!(v.get("t1_s").and_then(Json::as_f64) >= v.get("t0_s").and_then(Json::as_f64));
+        assert_eq!(v.get("open"), None, "no span may be flagged open");
+        span_lines += 1;
+    }
+    assert_eq!(span_lines, sink.tracer.records().len());
+
+    // Chrome trace-event export: complete events, µs clocks.
+    let doc = sink.tracer.to_chrome_trace();
+    let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert_eq!(events.len(), span_lines);
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("dur").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert!(e.get("tid").and_then(Json::as_f64).is_some());
+    }
+}
+
+#[test]
+fn baseline_runs_are_traced_too() {
+    let _g = gate();
+    let (records, sink) = record_run(Method::SflLinear, 2);
+    assert_tree_invariants(&records);
+    let clients: Vec<_> = records.iter().filter(|r| r.cat == "client").collect();
+    assert_eq!(clients.len(), 4, "2 rounds × 2 selected clients, inline on the driver");
+    let round_ids: Vec<u64> = records.iter().filter(|r| r.cat == "round").map(|r| r.id).collect();
+    for c in &clients {
+        assert!(round_ids.contains(&c.parent.unwrap()), "baseline clients nest in rounds");
+    }
+    assert!(
+        records.iter().any(|r| r.cat == "phase" && r.name == "aggregate"),
+        "baseline FedAvg emits an aggregate span"
+    );
+    assert!(sink.metrics.histogram_count("aggregate_s") >= 2);
+    assert!(sink.metrics.histogram_count("stage_s/head_forward_noprompt") > 0);
+}
+
+#[test]
+fn randomized_span_trees_uphold_invariants() {
+    // Property-style: random open/close interleavings across threads, with
+    // explicit cross-thread parents, still yield a well-formed tree.
+    use sfprompt::util::rng::Rng;
+    let sink = Arc::new(Telemetry::new());
+    for trial in 0..10u64 {
+        let root = sink.span("run", &format!("trial:{trial}"));
+        let root_id = root.id();
+        let mut handles = Vec::new();
+        for w in 0..3u64 {
+            let s = sink.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(trial * 31 + w);
+                let worker = s.span_under("client", &format!("worker:{w}"), Some(root_id));
+                let mut open: Vec<sfprompt::telemetry::SpanGuard> = Vec::new();
+                for i in 0..40 {
+                    // Biased walk: open deeper or pop back out at random.
+                    if open.len() < 5 && rng.next_u64() % 3 != 0 {
+                        open.push(s.span("stage", &format!("op:{i}")));
+                    } else {
+                        open.pop();
+                    }
+                }
+                // Innermost-first: Vec drops front-to-back, which would
+                // close parents before their children.
+                while let Some(g) = open.pop() {
+                    drop(g);
+                }
+                drop(worker);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        drop(root);
+    }
+    assert_eq!(sink.tracer.finish(), 0);
+    let records = sink.tracer.records();
+    assert_tree_invariants(&records);
+    assert_eq!(records.iter().filter(|r| r.cat == "run").count(), 10);
+    assert_eq!(records.iter().filter(|r| r.cat == "client").count(), 30);
+}
