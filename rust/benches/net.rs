@@ -1,0 +1,106 @@
+//! Networked-transport benchmarks: frame echo throughput and control
+//! round-trip latency over a real localhost TCP socket pair, at the two
+//! payload shapes that dominate federation traffic. The echo peer is a
+//! thread, so numbers include both directions of the socket stack.
+//!
+//!     cargo bench --bench net
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+use harness::{throughput, Bench};
+use sfprompt::comm::MsgKind;
+use sfprompt::model::SegmentParams;
+use sfprompt::net::{ConnectOptions, Control, NetMsg, TcpLink};
+use sfprompt::runtime::HostTensor;
+use sfprompt::transport::{encode_frame, Frame, Payload, Transport, WireFormat};
+use sfprompt::util::rng::Rng;
+
+fn activation_frame(rng: &mut Rng) -> Frame {
+    // ViT-Base-ish smashed batch: 8 x 197 x 768 f32.
+    let n = 8 * 197 * 768;
+    let t = HostTensor::f32(vec![8, 197, 768], (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect());
+    Frame::new(MsgKind::SmashedData, 0, 0, Payload::Tensor(t))
+}
+
+fn upload_frame(rng: &mut Rng) -> Frame {
+    // A tail+prompt-style upload: a dozen mixed-size tensors.
+    let segs = ["tail", "prompt"]
+        .iter()
+        .map(|name| SegmentParams {
+            segment: name.to_string(),
+            tensors: (0..6)
+                .map(|i| {
+                    let n = 1 << (8 + i);
+                    HostTensor::f32(vec![n], (0..n).map(|_| rng.normal_f32(0.0, 0.2)).collect())
+                })
+                .collect(),
+        })
+        .collect();
+    Frame::new(MsgKind::Upload, 0, 0, Payload::Segments(segs))
+}
+
+fn main() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind localhost");
+    let addr = listener.local_addr().unwrap().to_string();
+    let echo = thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut link = TcpLink::from_stream(stream, Duration::from_secs(60)).unwrap();
+        loop {
+            match link.recv_msg(false) {
+                // Echo data frames back as f32 regardless of the inbound
+                // precision (decode already dequantized the payload).
+                Ok(Some(NetMsg::Frame(frame, _))) => {
+                    link.send(&frame, WireFormat::F32).unwrap();
+                }
+                Ok(Some(NetMsg::Control(Control::Shutdown { .. }))) | Ok(None) => break,
+                Ok(Some(NetMsg::Control(c))) => link.send_control(&c).map(|_| ()).unwrap(),
+                Err(_) => break,
+            }
+        }
+    });
+
+    let opts = ConnectOptions {
+        retries: 50,
+        backoff: Duration::from_millis(20),
+        io_timeout: Duration::from_secs(60),
+    };
+    let mut link = TcpLink::connect(&addr, &opts).expect("connect to echo peer");
+
+    let mut rng = Rng::new(99);
+    let frames = [("activation", activation_frame(&mut rng)), ("upload", upload_frame(&mut rng))];
+    for (label, frame) in &frames {
+        for wire in [WireFormat::F32, WireFormat::F16] {
+            let mb = encode_frame(frame, wire).unwrap().len() as f64 / 1e6;
+            let rep = Bench::new(&format!("net/echo/{label}/{}", wire.label())).run(|| {
+                link.send(frame, wire).unwrap();
+                let (back, _) = link.recv().unwrap();
+                assert_eq!(back.kind, frame.kind);
+            });
+            throughput(&rep, "MB one-way", mb);
+        }
+    }
+
+    // Control-plane round trip: the per-round report latency floor.
+    let report = Control::RoundReport {
+        round: 1,
+        client: 2,
+        local_losses: vec![0.5; 8],
+        split_losses: vec![0.25; 8],
+    };
+    Bench::new("net/echo/control/round_report").samples(50).run(|| {
+        link.send_control(&report).unwrap();
+        match link.recv_msg(false).unwrap() {
+            Some(NetMsg::Control(Control::RoundReport { .. })) => {}
+            other => panic!("echo peer answered {other:?}"),
+        }
+    });
+
+    link.send_control(&Control::Shutdown { reason: "bench done".into() }).unwrap();
+    drop(link);
+    echo.join().unwrap();
+}

@@ -19,11 +19,42 @@ use crate::comm::MsgKind;
 use crate::compress::UpdateCompressor;
 use crate::data::{batch_indices, make_batch, Example};
 use crate::model::SegmentParams;
+use crate::partition::partition;
 use crate::runtime::{HostTensor, ModelConfig};
 use crate::transport::{Frame, Payload, Transport};
-use crate::util::rng::Rng;
+use crate::util::rng::{seeds, Rng};
 
 use super::FedConfig;
+
+/// Build the full client fleet for a run: partition `labels` and fork
+/// each client's RNG stream, in the **one canonical order** every replica
+/// of the run must follow (`Rng::fork` mutates the parent, so fork order
+/// is part of the run's identity). Returns the fleet and the post-fork
+/// parent RNG (whose next draws are the selection stream).
+///
+/// Both the in-process engine and a remote `net::client` process call
+/// this, which is what makes a networked run bit-identical to the same
+/// spec run locally: process boundaries change *where* a client computes,
+/// never *what* it draws.
+pub(crate) fn build_clients(fed: &FedConfig, labels: &[i32]) -> (Vec<Client>, Rng) {
+    let mut rng = Rng::new(fed.seed);
+    let parts =
+        partition(labels, fed.num_clients, fed.partition, &mut rng.fork(seeds::PARTITION_FORK));
+    let mut clients: Vec<Client> = parts
+        .into_iter()
+        .enumerate()
+        .map(|(id, indices)| Client::new(id, indices, rng.fork(seeds::client_fork(id))))
+        .collect();
+    if !fed.compress.is_none() {
+        for c in &mut clients {
+            c.compress = Some(UpdateCompressor::new(
+                fed.compress,
+                seeds::compress_stream(fed.seed, c.id),
+            ));
+        }
+    }
+    (clients, rng)
+}
 
 /// A client: its local data partition and RNG stream. Model state (tail,
 /// prompt) is delivered fresh each round by the server, per Algorithm 2.

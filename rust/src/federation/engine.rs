@@ -35,19 +35,18 @@ use anyhow::{anyhow, Result};
 
 use crate::backend::{Backend, PreparedSegment};
 use crate::comm::{ByteMeter, Direction, MsgKind};
-use crate::compress::{decompress_update, UpdateCompressor};
+use crate::compress::decompress_update;
 use crate::data::SynthDataset;
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet, SegmentParams};
-use crate::partition::partition;
 use crate::runtime::HostTensor;
 use crate::sim::{Fleet, RoundOutcome, SimClock};
 use crate::transport::{
-    dense_segments_wire_len, encoded_frame_len, Frame, Hub, Payload, WireFormat,
+    dense_segments_wire_len, encoded_frame_len, Frame, FrameHub, Hub, Payload, WireFormat,
 };
 use crate::util::rng::{seeds, Rng};
 
-use super::client::{client_split_round, Client, ClientRoundOutcome};
+use super::client::{build_clients, client_split_round, Client, ClientRoundOutcome};
 use super::run::FederatedRun;
 use super::server::Server;
 use super::{FedConfig, Method};
@@ -78,23 +77,8 @@ impl<'a> SfPromptEngine<'a> {
         train: &'a SynthDataset,
         eval: Option<&'a SynthDataset>,
     ) -> Result<Self> {
-        let mut rng = Rng::new(fed.seed);
         let labels = train.labels();
-        let parts =
-            partition(&labels, fed.num_clients, fed.partition, &mut rng.fork(seeds::PARTITION_FORK));
-        let mut clients: Vec<Client> = parts
-            .into_iter()
-            .enumerate()
-            .map(|(id, indices)| Client::new(id, indices, rng.fork(seeds::client_fork(id))))
-            .collect();
-        if !fed.compress.is_none() {
-            for c in &mut clients {
-                c.compress = Some(UpdateCompressor::new(
-                    fed.compress,
-                    seeds::compress_stream(fed.seed, c.id),
-                ));
-            }
-        }
+        let (clients, rng) = build_clients(&fed, &labels);
         let manifest = backend.manifest();
         let global = init_params(manifest, seeds::param_init(fed.seed));
         let head_bytes = manifest.cost.message_bytes["head_params"] as u64;
@@ -145,19 +129,7 @@ impl<'a> SfPromptEngine<'a> {
         // uploads are deltas against exactly what was distributed. ---
         let dist_ref =
             [self.global.get("tail")?.clone(), self.global.get("prompt")?.clone()];
-        let dist = Payload::Segments(dist_ref.to_vec());
-        let dist_span = telemetry.as_ref().map(|t| t.span("phase", "distribute"));
-        for (slot, &cid) in selected.iter().enumerate() {
-            if !clock.online(slot) {
-                continue;
-            }
-            let frame =
-                Frame::new(MsgKind::ModelDistribution, round as u32, cid as u32, dist.clone());
-            let n = hub.send_to(slot, &frame, WireFormat::F32)?;
-            comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-            clock.charge_transfer(slot, n);
-        }
-        drop(dist_span);
+        distribute_model(&hub, &selected, round as u32, &dist_ref, &mut comm, &mut clock)?;
 
         // Threads own the online selected clients; park stand-ins.
         let mut endpoints: Vec<Option<_>> = endpoints.into_iter().map(Some).collect();
@@ -351,6 +323,34 @@ impl FederatedRun for SfPromptEngine<'_> {
     }
 }
 
+/// Round start: send the aggregated `[tail, prompt]` pair to every
+/// reachable selected client (offline slots get nothing, not even bytes),
+/// metering each encoded frame and charging its transfer time. Shared by
+/// the in-process engine and the networked serve loop — the `FrameHub`
+/// decides whether "send" means an mpsc push or a socket write.
+pub(crate) fn distribute_model(
+    hub: &dyn FrameHub,
+    selected: &[usize],
+    round: u32,
+    dist_ref: &[SegmentParams; 2],
+    comm: &mut ByteMeter,
+    clock: &mut SimClock,
+) -> Result<()> {
+    let telemetry = crate::telemetry::active();
+    let _dist_span = telemetry.as_ref().map(|t| t.span("phase", "distribute"));
+    let dist = Payload::Segments(dist_ref.to_vec());
+    for (slot, &cid) in selected.iter().enumerate() {
+        if !clock.online(slot) {
+            continue;
+        }
+        let frame = Frame::new(MsgKind::ModelDistribution, round, cid as u32, dist.clone());
+        let n = hub.send_to(slot, &frame, WireFormat::F32)?;
+        comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
+        clock.charge_transfer(slot, n);
+    }
+    Ok(())
+}
+
 /// Server half of one round: route split-training frames from the hub
 /// until every online client has uploaded, resolve the deadline policy,
 /// FedAvg the survivors, and broadcast. Records every encoded frame
@@ -364,10 +364,10 @@ impl FederatedRun for SfPromptEngine<'_> {
 /// Returns the aggregate (None when every selected client was offline)
 /// and the resolved [`RoundOutcome`].
 #[allow(clippy::too_many_arguments)]
-fn serve_round(
+pub(crate) fn serve_round(
     backend: &dyn Backend,
     body_prep: &PreparedSegment,
-    hub: &Hub,
+    hub: &dyn FrameHub,
     selected: &[usize],
     round: u32,
     n_ks: &[usize],

@@ -29,7 +29,7 @@
 mod baselines;
 pub mod client;
 pub mod driver;
-mod engine;
+pub(crate) mod engine;
 pub mod run;
 pub mod selection;
 pub mod server;

@@ -136,6 +136,25 @@
 //! bench-guarded); `train --trace run.jsonl --metrics run.json` turns it
 //! on, and `report --trace run.jsonl` pretty-prints a saved trace. See
 //! docs/TELEMETRY.md.
+//!
+//! ## Networked coordinator ([`net`])
+//!
+//! The same federation runs over **real TCP sockets**: `sfprompt serve
+//! --listen ADDR --processes N` runs the coordinator as a long-lived
+//! server process and `sfprompt client --connect HOST:PORT` runs client
+//! processes that compute their share of the fleet. The socket carries the
+//! exact codec-v2 frame bytes (the frame's length prefix doubles as the
+//! socket framing, so [`comm::ByteMeter`] and the `net_tx_bytes` /
+//! `net_rx_bytes` telemetry counters meter **measured socket bytes**),
+//! plus a strict-JSON control plane for the versioned handshake, loss
+//! reporting (bit-exact hex floats), and shutdown. Client state is
+//! rebuilt deterministically from the `Welcome`-delivered [`RunSpec`]
+//! (same partition, same RNG fork order), so the networked `RunReport` is
+//! **byte-identical** to the in-process one (modulo wall-clock) —
+//! integration-tested over localhost. Observers can subscribe to a
+//! line-delimited JSON round-event stream (`serve --events FILE`, or a
+//! socket that sends one `observe` handshake). Zero new dependencies:
+//! threaded blocking `std::net`. See docs/NET.md.
 
 pub mod analysis;
 pub mod backend;
@@ -147,6 +166,7 @@ pub mod federation;
 pub mod flops;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod partition;
 pub mod runtime;
 pub mod sim;

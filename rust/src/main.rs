@@ -5,6 +5,8 @@
 //!   train      --config <name> [...]       run SFPrompt (or a baseline)
 //!              --spec run.json --json      headless: RunSpec in, RunReport out
 //!              --trace t.jsonl --metrics m.json   record telemetry
+//!   serve      --listen ADDR --processes N run the coordinator over TCP
+//!   client     --connect HOST:PORT         run a networked client process
 //!   report     --trace t.jsonl             pretty-print a saved trace
 //!   experiment --id <fig2|fig4|...|all>    regenerate a paper table/figure
 //!   analyze                                closed-form cost model sweep
@@ -21,6 +23,7 @@ use sfprompt::experiments::{self, ExpOptions};
 use sfprompt::federation::{
     drive, Method, NullObserver, ProgressPrinter, RunReport, RunSpec, Tee,
 };
+use sfprompt::net;
 use sfprompt::partition::Partition;
 use sfprompt::sim::FleetSpec;
 use sfprompt::telemetry::{self, SpanRecord, Telemetry, TelemetryObserver};
@@ -44,6 +47,12 @@ USAGE:
                       [--compress none|topk:R|randk:R|quant:B] [--net-rate BYTES_PER_S]
                       [--fleet <name|FILE.json>] [--deadline-s F] [--quorum N]
                       [--trace FILE.jsonl] [--metrics FILE.json]
+  sfprompt serve      --listen HOST:PORT --processes N
+                      [--spec FILE.json | train flags] [--run-id ID]
+                      [--events FILE.jsonl] [--io-timeout-s F] [--quiet] [--json]
+                      [--trace FILE.jsonl] [--metrics FILE.json]
+  sfprompt client     --connect HOST:PORT [--name STR] [--run-id ID]
+                      [--retries N] [--backoff-ms N] [--io-timeout-s F] [--quiet]
   sfprompt report     --trace FILE.jsonl [--chrome OUT.json] [--top N]
   sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|compress|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
@@ -74,6 +83,13 @@ stage) to JSON Lines; `--metrics` writes counters/gauges/latency
 histograms (stage times, achieved GFLOP/s, bytes per message kind) as
 JSON. `report` pretty-prints a saved trace and `--chrome` re-exports it
 as Chrome trace-event JSON for Perfetto. See docs/TELEMETRY.md.
+
+`serve` runs the same federation over real TCP: it listens, admits
+--processes client processes (`sfprompt client --connect ...`), and drives
+the rounds with client compute happening remotely — the RunReport is
+byte-identical to the in-process `train` run of the same spec (modulo
+wall-clock). `--events` streams round events as JSON lines (observers can
+also subscribe over a socket). See docs/NET.md.
 ";
 
 fn main() {
@@ -92,6 +108,8 @@ fn dispatch(args: Args) -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("inspect") => inspect(&args),
         Some("train") => train(&args),
+        Some("serve") => serve_cmd(&args),
+        Some("client") => client_cmd(&args),
         Some("report") => report(&args),
         Some("experiment") => experiment(&args),
         Some("analyze") => analyze(&args),
@@ -248,15 +266,21 @@ fn analyze(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn train(args: &Args) -> Result<()> {
-    let spec = match args.get("spec") {
+/// The run spec a `train`/`serve` invocation describes: `--spec FILE.json`
+/// wins; otherwise the CLI flags are assembled into one.
+fn resolve_spec(args: &Args) -> Result<RunSpec> {
+    match args.get("spec") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading run spec {path}"))?;
-            RunSpec::parse(&text).with_context(|| format!("parsing run spec {path}"))?
+            RunSpec::parse(&text).with_context(|| format!("parsing run spec {path}"))
         }
-        None => spec_from_args(args)?,
-    };
+        None => spec_from_args(args),
+    }
+}
+
+fn train(args: &Args) -> Result<()> {
+    let spec = resolve_spec(args)?;
     let json_out = args.has_flag("json");
 
     let backend = spec.open_backend(&sfprompt::artifacts_root())?;
@@ -368,6 +392,143 @@ fn train(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `serve --listen HOST:PORT --processes N`: run the coordinator as a TCP
+/// server. Same spec resolution and telemetry plumbing as `train`; the
+/// client compute happens in remote `sfprompt client` processes.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let spec = resolve_spec(args)?;
+    let json_out = args.has_flag("json");
+
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let listener = std::net::TcpListener::bind(listen)
+        .with_context(|| format!("binding {listen}"))?;
+
+    let events = match args.get("events") {
+        Some(path) => net::EventSink::new(Some(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating event stream file {path}"))?,
+        )),
+        None => net::EventSink::new(None),
+    };
+    // Default run id is derived from the seed so server and clients agree
+    // without coordination (clients can also skip the check with "").
+    let default_run_id = format!("run-{}", spec.fed.seed);
+    let opts = net::ServeOptions {
+        processes: args.get_parse("processes", 1usize),
+        run_id: args.get_or("run-id", &default_run_id).to_string(),
+        io_timeout: std::time::Duration::from_secs_f64(
+            args.get_parse("io-timeout-s", 60.0f64),
+        ),
+        events,
+        quiet: args.has_flag("quiet") || json_out,
+    };
+    if !json_out && !opts.quiet {
+        let f = &spec.fed;
+        println!(
+            "serve: listening on {} for {} client process(es); config={} dataset={} \
+             method={} rounds={} clients={}x{} run-id={}",
+            listener.local_addr().map_or_else(|_| listen.to_string(), |a| a.to_string()),
+            opts.processes, spec.config, spec.dataset, spec.method.label(), f.rounds,
+            f.clients_per_round, f.num_clients, opts.run_id
+        );
+    }
+
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
+    let telemetry = (trace_path.is_some() || metrics_path.is_some()).then(|| {
+        let t = Arc::new(Telemetry::new());
+        telemetry::install(t.clone());
+        t
+    });
+
+    let root = sfprompt::artifacts_root();
+    let served = match &telemetry {
+        Some(t) => {
+            let mut tobs = TelemetryObserver::new(t.clone());
+            if json_out {
+                net::serve(listener, &spec, &root, &opts, &mut tobs)
+            } else {
+                let mut printer = ProgressPrinter::new();
+                net::serve(listener, &spec, &root, &opts, &mut Tee(&mut printer, &mut tobs))
+            }
+        }
+        None if json_out => net::serve(listener, &spec, &root, &opts, &mut NullObserver),
+        None => net::serve(listener, &spec, &root, &opts, &mut ProgressPrinter::new()),
+    };
+    if telemetry.is_some() {
+        telemetry::uninstall();
+    }
+    let report = served?;
+
+    if let Some(t) = &telemetry {
+        let dangling = t.tracer.finish();
+        if dangling > 0 {
+            eprintln!("warning: {dangling} telemetry spans never closed (flagged open:true)");
+        }
+        if let Some(path) = trace_path {
+            std::fs::write(path, t.tracer.to_jsonl())
+                .with_context(|| format!("writing trace {path}"))?;
+        }
+        if let Some(path) = metrics_path {
+            std::fs::write(path, format!("{}\n", t.metrics.to_json()))
+                .with_context(|| format!("writing metrics {path}"))?;
+        }
+    }
+
+    if json_out {
+        let report = match &telemetry {
+            Some(t) => report.with_telemetry(t.metrics.to_json()),
+            None => report,
+        };
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    let hist = &report.history;
+    println!(
+        "done: final acc {:.4}, total comm {:.2} MB ({:.2} MB/round), messages {}, \
+         sim wall {:.1}s",
+        hist.final_accuracy(),
+        hist.total_comm.mb(),
+        hist.comm_mb_per_round(),
+        hist.total_comm.messages,
+        hist.sim_wall_s()
+    );
+    for (kind, bytes) in &hist.total_comm.by_kind {
+        println!("  {kind:<22} {:.3} MB", *bytes as f64 / 1e6);
+    }
+    Ok(())
+}
+
+/// `client --connect HOST:PORT`: run one networked client process. The
+/// server's `Welcome` carries the full RunSpec, so no other run flags are
+/// needed — everything else here tunes the connection itself.
+fn client_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("client needs --connect HOST:PORT"))?;
+    let opts = net::ClientOptions {
+        connect: net::ConnectOptions {
+            retries: args.get_parse("retries", 30u32),
+            backoff: std::time::Duration::from_millis(args.get_parse("backoff-ms", 100u64)),
+            io_timeout: std::time::Duration::from_secs_f64(
+                args.get_parse("io-timeout-s", 60.0f64),
+            ),
+        },
+        name: args.get_or("name", "client").to_string(),
+        run_id: args.get_or("run-id", "").to_string(),
+        quiet: args.has_flag("quiet"),
+    };
+    let summary = net::run_client(addr, &sfprompt::artifacts_root(), &opts)?;
+    println!(
+        "client: process {}/{} served clients {:?} for {} client-round(s); run complete",
+        summary.process + 1,
+        summary.processes,
+        summary.client_ids,
+        summary.rounds_participated
+    );
     Ok(())
 }
 

@@ -1,0 +1,322 @@
+//! The networked client process: connect, handshake, compute rounds.
+//!
+//! [`run_client`] dials a [`super::serve`] coordinator, performs the typed
+//! handshake (protocol + codec versions, optional run id), and receives a
+//! `Welcome` carrying the full [`RunSpec`] plus the logical client ids
+//! this process owns. It then rebuilds **exactly** the state the
+//! in-process engine would give those clients — same dataset generation,
+//! same partition, same per-client RNG forks via [`build_clients`] — and
+//! runs [`client_split_round`] for each owned client whenever the server
+//! distributes a model to it. Process boundaries change *where* a client
+//! computes, never *what* it draws, which is what makes the networked run
+//! bit-identical to the local one.
+//!
+//! Threading: the process main thread demultiplexes the single socket
+//! (frames are routed to per-client worker threads by `frame.client`;
+//! control messages end the run), workers share the write half behind a
+//! mutex — sends are whole frames, so interleaving is frame-atomic. After
+//! each completed round a worker reports its loss vectors back with a
+//! `RoundReport` control message (bit-exact hex floats).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::backend::{Backend, PreparedSegment};
+use crate::comm::MsgKind;
+use crate::data::Example;
+use crate::federation::client::{build_clients, client_split_round, Client};
+use crate::federation::{FedConfig, Method};
+use crate::model::init_params;
+use crate::runtime::ModelConfig;
+use crate::transport::{Frame, Payload, Transport, WireFormat, WIRE_VERSION};
+use crate::util::rng::seeds;
+
+use super::control::{Control, SHUTDOWN_COMPLETE};
+use super::tcp::{ConnectOptions, TcpLink};
+use super::wire::{NetMsg, NET_PROTO_VERSION};
+
+/// Client-process configuration.
+pub struct ClientOptions {
+    pub connect: ConnectOptions,
+    /// Display name sent in the Hello (shows up in server logs).
+    pub name: String,
+    /// Run id to insist on (empty = join whatever the server is serving).
+    pub run_id: String,
+    pub quiet: bool,
+}
+
+impl Default for ClientOptions {
+    fn default() -> ClientOptions {
+        ClientOptions {
+            connect: ConnectOptions::default(),
+            name: "client".to_string(),
+            run_id: String::new(),
+            quiet: false,
+        }
+    }
+}
+
+/// What one client process did, for reporting after a clean run.
+#[derive(Debug)]
+pub struct ClientSummary {
+    /// This process's slot in the cohort (0-based).
+    pub process: usize,
+    pub processes: usize,
+    /// Logical clients this process computed for.
+    pub client_ids: Vec<usize>,
+    /// Total round participations completed across owned clients.
+    pub rounds_participated: usize,
+}
+
+/// Frames routed to one worker, or the end-of-run signal.
+enum WorkerMsg {
+    Frame(Frame, usize),
+    Shutdown,
+}
+
+/// The [`Transport`] a worker's [`client_split_round`] drives: receives
+/// come from the demultiplexer's per-client queue (seeded with the round's
+/// opening `ModelDistribution`), sends go to the shared socket write half
+/// (whole frames under the lock, so concurrent workers interleave at frame
+/// granularity only).
+struct WorkerLink<'a> {
+    pending: Option<(Frame, usize)>,
+    rx: &'a Receiver<WorkerMsg>,
+    writer: &'a Mutex<TcpLink>,
+}
+
+impl Transport for WorkerLink<'_> {
+    fn send(&mut self, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        self.writer.lock().expect("writer lock poisoned").send(frame, wire)
+    }
+
+    fn recv(&mut self) -> Result<(Frame, usize)> {
+        if let Some(pending) = self.pending.take() {
+            return Ok(pending);
+        }
+        match self.rx.recv() {
+            Ok(WorkerMsg::Frame(f, n)) => Ok((f, n)),
+            Ok(WorkerMsg::Shutdown) => Err(anyhow!("server shut the run down mid-round")),
+            Err(_) => Err(anyhow!("connection demultiplexer exited mid-round")),
+        }
+    }
+}
+
+/// Worker-thread body: run every round the server assigns to this client.
+/// Returns the number of rounds completed.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    mut client: Client,
+    rx: Receiver<WorkerMsg>,
+    writer: &Mutex<TcpLink>,
+    backend: &dyn Backend,
+    examples: &[Example],
+    head: &PreparedSegment,
+    fed: &FedConfig,
+    cfg: &ModelConfig,
+    quiet: bool,
+) -> Result<usize> {
+    let cid = client.id as u32;
+    let mut rounds = 0usize;
+    loop {
+        let (frame, n) = match rx.recv() {
+            Ok(WorkerMsg::Frame(f, n)) => (f, n),
+            Ok(WorkerMsg::Shutdown) | Err(_) => return Ok(rounds),
+        };
+        if frame.kind != MsgKind::ModelDistribution {
+            bail!(
+                "client {cid}: a round must open with a model distribution, got {:?}",
+                frame.kind
+            );
+        }
+        let round = frame.round;
+        let mut link = WorkerLink { pending: Some((frame, n)), rx: &rx, writer };
+        match client_split_round(
+            &mut client, backend, examples, head, fed, cfg, round, &mut link,
+        ) {
+            Ok(out) => {
+                let report = Control::RoundReport {
+                    round,
+                    client: cid,
+                    local_losses: out.local_losses,
+                    split_losses: out.split_losses,
+                };
+                writer.lock().expect("writer lock poisoned").send_control(&report)?;
+                rounds += 1;
+                if !quiet {
+                    eprintln!("client {cid}: completed round {round}");
+                }
+            }
+            Err(e) => {
+                // Tell the server before dying, or serve_round would wait
+                // for an upload that never comes (mirrors the in-process
+                // engine's abort-on-error client threads).
+                let abort = Frame::new(MsgKind::Abort, round, cid, Payload::Empty);
+                let _ = writer.lock().expect("writer lock poisoned").send(&abort, WireFormat::F32);
+                return Err(e.context(format!("client {cid} in round {round}")));
+            }
+        }
+    }
+}
+
+/// Dial the coordinator at `addr`, handshake, and compute every round the
+/// server assigns to this process's clients until the server shuts the run
+/// down. `artifacts_root` is consulted only by the PJRT backend.
+pub fn run_client(
+    addr: &str,
+    artifacts_root: &Path,
+    opts: &ClientOptions,
+) -> Result<ClientSummary> {
+    let mut link = TcpLink::connect(addr, &opts.connect)?;
+    link.send_control(&Control::Hello {
+        proto: NET_PROTO_VERSION,
+        wire: WIRE_VERSION,
+        name: opts.name.clone(),
+        run_id: opts.run_id.clone(),
+    })?;
+    let (process, processes, client_ids, spec) = match link.recv_msg(false)? {
+        Some(NetMsg::Control(Control::Welcome {
+            proto,
+            wire,
+            run_id: _,
+            process,
+            processes,
+            client_ids,
+            spec,
+        })) => {
+            if proto != NET_PROTO_VERSION {
+                bail!("server speaks net protocol v{proto}, this client v{NET_PROTO_VERSION}");
+            }
+            if wire != WIRE_VERSION {
+                bail!("server speaks codec wire v{wire}, this client v{WIRE_VERSION}");
+            }
+            (process, processes, client_ids, spec)
+        }
+        Some(NetMsg::Control(Control::Reject { reason })) => {
+            bail!("server rejected the handshake: {reason}")
+        }
+        Some(NetMsg::Control(other)) => {
+            bail!("expected welcome, got control message {:?}", other.kind())
+        }
+        Some(NetMsg::Frame(frame, _)) => {
+            bail!("expected welcome, got a {:?} frame", frame.kind)
+        }
+        None => bail!("server went quiet during the handshake"),
+    };
+    if spec.method != Method::SfPrompt {
+        bail!("server is running method {:?}, which has no networked client", spec.method.label());
+    }
+    if client_ids.is_empty() {
+        bail!("server assigned no clients to this process");
+    }
+    if let Some(&bad) = client_ids.iter().find(|&&cid| cid >= spec.fed.num_clients) {
+        bail!("server assigned client {bad} outside the fleet of {}", spec.fed.num_clients);
+    }
+    if !opts.quiet {
+        eprintln!(
+            "client: admitted as process {}/{processes}, computing for clients {client_ids:?}",
+            process + 1
+        );
+    }
+
+    let backend = spec.open_backend(artifacts_root)?;
+    let backend: &dyn Backend = backend.as_ref();
+    let manifest = backend.manifest();
+    for stage in ["local_step", "el2n_scores", "head_forward", "tail_step", "prompt_grad"] {
+        if !manifest.stages.contains_key(stage) {
+            bail!("config {:?} was lowered without stage {stage:?}", manifest.config.name);
+        }
+    }
+    let cfg = manifest.config.clone();
+    let (train, _eval) = spec.datasets(&cfg)?;
+    let labels = train.labels();
+    // Rebuild the WHOLE fleet in canonical order (partition + RNG forks
+    // must match the server and every sibling process), keep our share.
+    let (clients, _selection_rng) = build_clients(&spec.fed, &labels);
+    let owned: Vec<Client> =
+        clients.into_iter().filter(|c| client_ids.contains(&c.id)).collect();
+    let global = init_params(manifest, seeds::param_init(spec.fed.seed));
+    let head_prep = backend.prepare_segment(global.get("head")?)?;
+    let fed = spec.fed;
+    let examples = &train.examples;
+
+    let writer = Mutex::new(link.try_clone().context("splitting the socket")?);
+
+    let (reason, rounds) = std::thread::scope(|scope| {
+        let mut senders: BTreeMap<u32, Sender<WorkerMsg>> = BTreeMap::new();
+        let mut handles = Vec::with_capacity(owned.len());
+        for client in owned {
+            let (tx, rx) = channel();
+            senders.insert(client.id as u32, tx);
+            let writer = &writer;
+            let head = &head_prep;
+            let fed = &fed;
+            let cfg = &cfg;
+            let quiet = opts.quiet;
+            handles.push(scope.spawn(move || {
+                worker_loop(client, rx, writer, backend, examples, head, fed, cfg, quiet)
+            }));
+        }
+
+        // --- Demultiplexer: the socket's read half, on this thread. ---
+        let demux: Result<String> = loop {
+            match link.recv_msg(true) {
+                Ok(None) => continue, // idle between rounds
+                Ok(Some(NetMsg::Frame(frame, n))) => match senders.get(&frame.client) {
+                    Some(tx) => {
+                        if tx.send(WorkerMsg::Frame(frame, n)).is_err() {
+                            break Err(anyhow!("a worker exited with its round unfinished"));
+                        }
+                    }
+                    None => {
+                        break Err(anyhow!(
+                            "server sent a frame for client {}, which this process does not own",
+                            frame.client
+                        ))
+                    }
+                },
+                Ok(Some(NetMsg::Control(Control::Shutdown { reason }))) => break Ok(reason),
+                Ok(Some(NetMsg::Control(Control::Reject { reason }))) => {
+                    break Err(anyhow!("server rejected this process mid-run: {reason}"))
+                }
+                Ok(Some(NetMsg::Control(other))) => {
+                    break Err(anyhow!("unexpected control message {:?}", other.kind()))
+                }
+                Err(e) => break Err(e.context("connection to server lost")),
+            }
+        };
+        for tx in senders.values() {
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
+        drop(senders);
+
+        let mut rounds = 0usize;
+        let mut worker_err: Option<anyhow::Error> = None;
+        for h in handles {
+            match h.join().expect("worker thread panicked") {
+                Ok(n) => rounds += n,
+                Err(e) if worker_err.is_none() => worker_err = Some(e),
+                Err(_) => {}
+            }
+        }
+        match (demux, worker_err) {
+            // A local compute failure is the root cause — the connection
+            // noise that follows it (server tearing the run down) is not.
+            (_, Some(e)) => Err(e),
+            (Err(e), None) => Err(e),
+            (Ok(reason), None) => Ok((reason, rounds)),
+        }
+    })?;
+
+    if reason != SHUTDOWN_COMPLETE {
+        bail!("server ended the run: {reason}");
+    }
+    if !opts.quiet {
+        eprintln!("client: run complete ({rounds} round participations)");
+    }
+    Ok(ClientSummary { process, processes, client_ids, rounds_participated: rounds })
+}

@@ -1,0 +1,324 @@
+//! Control-plane messages: the typed handshake and round bookkeeping that
+//! ride the socket alongside codec data frames.
+//!
+//! Strict, unknown-rejecting JSON in the same style as
+//! [`crate::federation::RunSpec`] — a typo'd or stale peer fails loudly at
+//! the first message, not three rounds in. Every message is an object with
+//! a `"kind"` discriminator; keys outside each kind's documented set are
+//! errors.
+//!
+//! Floats that must survive the trip **bit-exactly** (the per-round loss
+//! vectors feeding the report's means, NaN included) travel as 16-hex-digit
+//! bit-pattern strings (`f64::to_bits`), not JSON numbers — JSON has no
+//! NaN and no bit-pattern guarantee; the hex form has both.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::federation::RunSpec;
+use crate::util::json::Json;
+
+/// The shutdown reason a clean run ends with; anything else means the
+/// server tore the run down on an error and clients should exit nonzero.
+pub const SHUTDOWN_COMPLETE: &str = "run complete";
+
+/// A control-plane message (`"NC"` envelope — see [`super::wire`]).
+#[derive(Debug, Clone)]
+pub enum Control {
+    /// Client → server, first message on a connection: identify and pin
+    /// both protocol layers. An empty `run_id` means "whatever run you are
+    /// serving".
+    Hello { proto: u8, wire: u8, name: String, run_id: String },
+    /// Server → client, handshake accept: the process's slice of the
+    /// federation plus the full [`RunSpec`], from which the client
+    /// regenerates its datasets and RNG streams deterministically.
+    Welcome {
+        proto: u8,
+        wire: u8,
+        run_id: String,
+        /// This connection's process index in `0..processes`.
+        process: usize,
+        /// Total client processes the server admits for the run.
+        processes: usize,
+        /// Logical client ids this process owns (`cid % processes == process`).
+        client_ids: Vec<usize>,
+        spec: RunSpec,
+    },
+    /// Server → peer, handshake refuse (version mismatch, wrong run id,
+    /// run already full); the server closes the connection after sending.
+    Reject { reason: String },
+    /// Peer → server, first message: subscribe to the line-delimited JSON
+    /// round-event stream instead of joining as a client.
+    Observe { proto: u8 },
+    /// Client → server after finishing a logical client's round: the
+    /// per-epoch loss vectors the in-process engine would have returned
+    /// from its client thread. Bit-exact via hex bit patterns.
+    RoundReport { round: u32, client: u32, local_losses: Vec<f64>, split_losses: Vec<f64> },
+    /// Server → client: the run is over (or aborting); drain and exit.
+    Shutdown { reason: String },
+}
+
+fn hex_losses(vals: &[f64]) -> Json {
+    Json::Arr(vals.iter().map(|v| Json::Str(format!("{:016x}", v.to_bits()))).collect())
+}
+
+fn losses_from(v: &Json, key: &str) -> Result<Vec<f64>> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("control {key:?} must be an array of hex bit-pattern strings"))?
+        .iter()
+        .map(|j| {
+            let s = j.as_str().ok_or_else(|| anyhow!("control {key:?} entries must be strings"))?;
+            let bits = u64::from_str_radix(s, 16)
+                .map_err(|_| anyhow!("control {key:?} entry {s:?} is not a 64-bit hex pattern"))?;
+            Ok(f64::from_bits(bits))
+        })
+        .collect()
+}
+
+fn check_keys(obj: &BTreeMap<String, Json>, kind: &str, known: &[&str]) -> Result<()> {
+    for key in obj.keys() {
+        if key != "kind" && !known.contains(&key.as_str()) {
+            bail!(
+                "unknown key {key:?} in control message {kind:?} (known: kind {})",
+                known.join(" ")
+            );
+        }
+    }
+    Ok(())
+}
+
+fn u8_field(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<u8> {
+    obj.get(key)
+        .and_then(Json::as_usize)
+        .and_then(|n| u8::try_from(n).ok())
+        .ok_or_else(|| anyhow!("control {kind:?} needs integer key {key:?} in 0..=255"))
+}
+
+fn u32_field(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<u32> {
+    obj.get(key)
+        .and_then(Json::as_i64)
+        .and_then(|n| u32::try_from(n).ok())
+        .ok_or_else(|| anyhow!("control {kind:?} needs non-negative integer key {key:?}"))
+}
+
+fn str_field(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<String> {
+    obj.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("control {kind:?} needs string key {key:?}"))
+}
+
+impl Control {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Control::Hello { .. } => "hello",
+            Control::Welcome { .. } => "welcome",
+            Control::Reject { .. } => "reject",
+            Control::Observe { .. } => "observe",
+            Control::RoundReport { .. } => "round_report",
+            Control::Shutdown { .. } => "shutdown",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".to_string(), Json::Str(self.kind().to_string()));
+        match self {
+            Control::Hello { proto, wire, name, run_id } => {
+                o.insert("proto".to_string(), Json::Num(*proto as f64));
+                o.insert("wire".to_string(), Json::Num(*wire as f64));
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("run_id".to_string(), Json::Str(run_id.clone()));
+            }
+            Control::Welcome { proto, wire, run_id, process, processes, client_ids, spec } => {
+                o.insert("proto".to_string(), Json::Num(*proto as f64));
+                o.insert("wire".to_string(), Json::Num(*wire as f64));
+                o.insert("run_id".to_string(), Json::Str(run_id.clone()));
+                o.insert("process".to_string(), Json::Num(*process as f64));
+                o.insert("processes".to_string(), Json::Num(*processes as f64));
+                o.insert(
+                    "client_ids".to_string(),
+                    Json::Arr(client_ids.iter().map(|&c| Json::Num(c as f64)).collect()),
+                );
+                o.insert("spec".to_string(), spec.to_json());
+            }
+            Control::Reject { reason } => {
+                o.insert("reason".to_string(), Json::Str(reason.clone()));
+            }
+            Control::Observe { proto } => {
+                o.insert("proto".to_string(), Json::Num(*proto as f64));
+            }
+            Control::RoundReport { round, client, local_losses, split_losses } => {
+                o.insert("round".to_string(), Json::Num(*round as f64));
+                o.insert("client".to_string(), Json::Num(*client as f64));
+                o.insert("local_losses".to_string(), hex_losses(local_losses));
+                o.insert("split_losses".to_string(), hex_losses(split_losses));
+            }
+            Control::Shutdown { reason } => {
+                o.insert("reason".to_string(), Json::Str(reason.clone()));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Control> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("control message must be a JSON object"))?;
+        let kind = obj
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("control message needs a string \"kind\""))?;
+        match kind {
+            "hello" => {
+                check_keys(obj, kind, &["proto", "wire", "name", "run_id"])?;
+                Ok(Control::Hello {
+                    proto: u8_field(obj, kind, "proto")?,
+                    wire: u8_field(obj, kind, "wire")?,
+                    name: str_field(obj, kind, "name")?,
+                    run_id: str_field(obj, kind, "run_id")?,
+                })
+            }
+            "welcome" => {
+                check_keys(
+                    obj,
+                    kind,
+                    &["proto", "wire", "run_id", "process", "processes", "client_ids", "spec"],
+                )?;
+                let client_ids = obj
+                    .get("client_ids")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("control \"welcome\" needs array \"client_ids\""))?
+                    .iter()
+                    .map(|j| {
+                        j.as_usize()
+                            .ok_or_else(|| anyhow!("\"client_ids\" entries must be integers"))
+                    })
+                    .collect::<Result<Vec<usize>>>()?;
+                let spec = RunSpec::from_json(
+                    obj.get("spec").ok_or_else(|| anyhow!("control \"welcome\" needs \"spec\""))?,
+                )?;
+                Ok(Control::Welcome {
+                    proto: u8_field(obj, kind, "proto")?,
+                    wire: u8_field(obj, kind, "wire")?,
+                    run_id: str_field(obj, kind, "run_id")?,
+                    process: obj
+                        .get("process")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("control \"welcome\" needs integer \"process\""))?,
+                    processes: obj.get("processes").and_then(Json::as_usize).ok_or_else(|| {
+                        anyhow!("control \"welcome\" needs integer \"processes\"")
+                    })?,
+                    client_ids,
+                    spec,
+                })
+            }
+            "reject" => {
+                check_keys(obj, kind, &["reason"])?;
+                Ok(Control::Reject { reason: str_field(obj, kind, "reason")? })
+            }
+            "observe" => {
+                check_keys(obj, kind, &["proto"])?;
+                Ok(Control::Observe { proto: u8_field(obj, kind, "proto")? })
+            }
+            "round_report" => {
+                check_keys(obj, kind, &["round", "client", "local_losses", "split_losses"])?;
+                Ok(Control::RoundReport {
+                    round: u32_field(obj, kind, "round")?,
+                    client: u32_field(obj, kind, "client")?,
+                    local_losses: losses_from(v, "local_losses")?,
+                    split_losses: losses_from(v, "split_losses")?,
+                })
+            }
+            "shutdown" => {
+                check_keys(obj, kind, &["reason"])?;
+                Ok(Control::Shutdown { reason: str_field(obj, kind, "reason")? })
+            }
+            other => bail!(
+                "unknown control kind {other:?} (known: hello welcome reject observe \
+                 round_report shutdown)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::Method;
+
+    fn roundtrip(c: &Control) -> Control {
+        Control::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn losses_roundtrip_bit_exactly_including_nan() {
+        let c = Control::RoundReport {
+            round: 4,
+            client: 9,
+            local_losses: vec![1.5, f64::NAN, f64::INFINITY, -0.0, 3.141592653589793],
+            split_losses: vec![f64::MIN_POSITIVE, -f64::NAN],
+        };
+        match roundtrip(&c) {
+            Control::RoundReport { round, client, local_losses, split_losses } => {
+                assert_eq!((round, client), (4, 9));
+                let (orig_l, orig_s) = match &c {
+                    Control::RoundReport { local_losses, split_losses, .. } => {
+                        (local_losses, split_losses)
+                    }
+                    _ => unreachable!(),
+                };
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+                assert_eq!(bits(&local_losses), bits(orig_l));
+                assert_eq!(bits(&split_losses), bits(orig_s));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn welcome_carries_a_full_spec() {
+        let spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);
+        let c = Control::Welcome {
+            proto: 1,
+            wire: 2,
+            run_id: "run-17".into(),
+            process: 1,
+            processes: 2,
+            client_ids: vec![1, 3, 5],
+            spec: spec.clone(),
+        };
+        match roundtrip(&c) {
+            Control::Welcome { client_ids, spec: got, process, processes, .. } => {
+                assert_eq!(client_ids, vec![1, 3, 5]);
+                assert_eq!((process, processes), (1, 2));
+                assert_eq!(got.to_json(), spec.to_json());
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_keys_and_kinds_are_rejected() {
+        let good = Control::Hello { proto: 1, wire: 2, name: "x".into(), run_id: String::new() };
+        let mut o = match good.to_json() {
+            Json::Obj(o) => o,
+            _ => unreachable!(),
+        };
+        o.insert("client_name".to_string(), Json::Str("typo".into()));
+        let err = Control::from_json(&Json::Obj(o)).unwrap_err().to_string();
+        assert!(err.contains("client_name"), "{err}");
+
+        let err = Control::from_json(&Json::parse(r#"{"kind": "bye"}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown control kind"), "{err}");
+
+        assert!(Control::from_json(&Json::parse("[]").unwrap()).is_err());
+        assert!(Control::from_json(&Json::parse(r#"{"proto": 1}"#).unwrap()).is_err());
+        // Bad hex in a loss vector fails loudly.
+        let bad = r#"{"kind":"round_report","round":0,"client":0,
+                      "local_losses":["zzzz"],"split_losses":[]}"#;
+        assert!(Control::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Line-delimited JSON event stream for observers.
+//!
+//! The serve loop turns its [`RoundObserver`] callbacks into one strict
+//! JSON object per line (format `"sfprompt-events"` v1) and fans each
+//! line out to an optional file (`serve --events FILE`) and to every
+//! connected observer socket (a peer whose first message was
+//! `Control::Observe`). A dashboard can therefore `nc HOST PORT`, send
+//! one observe handshake, and tail the run live; dead observer sockets
+//! are dropped on the first failed write, never failing the run.
+//!
+//! Line schema (every line has `"event"`):
+//!
+//! | event            | extra keys                                           |
+//! |------------------|------------------------------------------------------|
+//! | `run_start`      | `format`, `version`, `method`, `rounds`, `clients`, `per_round` |
+//! | `round_start`    | `round`                                              |
+//! | `client_done`    | `round`, `client`, `finish_s`                        |
+//! | `client_dropped` | `round`, `client`, `at_s`, `reason`                  |
+//! | `eval`           | `round`, `accuracy`                                  |
+//! | `round_end`      | `round`, `local_loss`, `split_loss`, `accuracy` (null off eval rounds), `bytes`, `survivors`, `dropped`, `sim_latency_s`, `clock_s` |
+//! | `run_end`        | `rounds`, `final_accuracy`, `total_bytes`            |
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+
+use crate::federation::{FedConfig, Method, RoundObserver};
+use crate::metrics::{RoundRecord, RunHistory};
+use crate::sim::DropReason;
+use crate::util::json::Json;
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Where event lines go: an optional file plus any number of observer
+/// sockets (shared with the acceptor thread, which appends mid-run).
+#[derive(Clone, Default)]
+pub struct EventSink {
+    file: Arc<Mutex<Option<File>>>,
+    observers: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl EventSink {
+    pub fn new(file: Option<File>) -> EventSink {
+        EventSink { file: Arc::new(Mutex::new(file)), observers: Arc::default() }
+    }
+
+    /// Register a subscribed observer socket.
+    pub fn subscribe(&self, stream: TcpStream) {
+        self.observers.lock().expect("observer list poisoned").push(stream);
+    }
+
+    pub fn has_outputs(&self) -> bool {
+        self.file.lock().expect("event file poisoned").is_some()
+            || !self.observers.lock().expect("observer list poisoned").is_empty()
+    }
+
+    /// Write one event line everywhere. Observer sockets that error are
+    /// dropped, and a failing file is disabled after one stderr report —
+    /// an observer must never bring the federation down.
+    pub fn emit(&self, line: &Json) {
+        let text = format!("{line}\n");
+        let mut file = self.file.lock().expect("event file poisoned");
+        if let Some(f) = file.as_mut() {
+            if let Err(e) = f.write_all(text.as_bytes()).and_then(|()| f.flush()) {
+                eprintln!("serve: event file write failed ({e}); disabling file events");
+                *file = None;
+            }
+        }
+        drop(file);
+        let mut socks = self.observers.lock().expect("observer list poisoned");
+        socks.retain_mut(|s| s.write_all(text.as_bytes()).is_ok());
+    }
+}
+
+/// [`RoundObserver`] that serialises every callback into the sink.
+pub struct EventStreamObserver {
+    sink: EventSink,
+    clock_s: f64,
+}
+
+impl EventStreamObserver {
+    pub fn new(sink: EventSink) -> EventStreamObserver {
+        EventStreamObserver { sink, clock_s: 0.0 }
+    }
+
+    fn line(&self, event: &str, fields: Vec<(&str, Json)>) {
+        let mut o = BTreeMap::new();
+        o.insert("event".to_string(), Json::Str(event.to_string()));
+        for (k, v) in fields {
+            o.insert(k.to_string(), v);
+        }
+        self.sink.emit(&Json::Obj(o));
+    }
+}
+
+impl RoundObserver for EventStreamObserver {
+    fn on_run_start(&mut self, method: Method, fed: &FedConfig) {
+        self.line(
+            "run_start",
+            vec![
+                ("format", Json::Str("sfprompt-events".to_string())),
+                ("version", Json::Num(1.0)),
+                ("method", Json::Str(method.label().to_string())),
+                ("rounds", Json::Num(fed.rounds as f64)),
+                ("clients", Json::Num(fed.num_clients as f64)),
+                ("per_round", Json::Num(fed.clients_per_round as f64)),
+            ],
+        );
+    }
+
+    fn on_round_start(&mut self, round: usize) {
+        self.line("round_start", vec![("round", Json::Num(round as f64))]);
+    }
+
+    fn on_client_done(&mut self, round: usize, client: usize, finish_s: f64) {
+        self.line(
+            "client_done",
+            vec![
+                ("round", Json::Num(round as f64)),
+                ("client", Json::Num(client as f64)),
+                ("finish_s", num_or_null(finish_s)),
+            ],
+        );
+    }
+
+    fn on_client_dropped(&mut self, round: usize, client: usize, at_s: f64, reason: DropReason) {
+        self.line(
+            "client_dropped",
+            vec![
+                ("round", Json::Num(round as f64)),
+                ("client", Json::Num(client as f64)),
+                ("at_s", num_or_null(at_s)),
+                ("reason", Json::Str(reason.label().to_string())),
+            ],
+        );
+    }
+
+    fn on_eval(&mut self, round: usize, accuracy: f64) {
+        self.line(
+            "eval",
+            vec![("round", Json::Num(round as f64)), ("accuracy", num_or_null(accuracy))],
+        );
+    }
+
+    fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+        self.clock_s = clock_s;
+        self.line(
+            "round_end",
+            vec![
+                ("round", Json::Num(rec.round as f64)),
+                ("local_loss", num_or_null(rec.mean_local_loss)),
+                ("split_loss", num_or_null(rec.mean_split_loss)),
+                ("accuracy", num_or_null(rec.eval_accuracy)),
+                ("bytes", Json::Num(rec.comm.total() as f64)),
+                ("survivors", Json::Num(rec.survivors() as f64)),
+                ("dropped", Json::Num(rec.dropped() as f64)),
+                ("sim_latency_s", num_or_null(rec.sim_latency_s)),
+                ("clock_s", num_or_null(clock_s)),
+            ],
+        );
+    }
+
+    fn on_run_end(&mut self, history: &RunHistory) {
+        self.line(
+            "run_end",
+            vec![
+                ("rounds", Json::Num(history.rounds.len() as f64)),
+                ("final_accuracy", num_or_null(history.final_accuracy())),
+                ("total_bytes", Json::Num(history.total_comm.total() as f64)),
+            ],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+    use std::net::TcpListener;
+
+    #[test]
+    fn events_reach_file_and_socket_as_json_lines() {
+        let dir = std::env::temp_dir().join("sfprompt_events_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let sink = EventSink::new(Some(File::create(&path).unwrap()));
+
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            buf
+        });
+        sink.subscribe(TcpStream::connect(addr).unwrap());
+
+        let mut obs = EventStreamObserver::new(sink.clone());
+        obs.on_run_start(Method::SfPrompt, &FedConfig::default());
+        obs.on_round_start(0);
+        obs.on_eval(0, 0.5);
+        drop(obs);
+        // Close the observer socket so read_to_string terminates.
+        sink.observers.lock().unwrap().clear();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").unwrap().as_str(), Some("run_start"));
+        assert_eq!(first.get("format").unwrap().as_str(), Some("sfprompt-events"));
+        for line in &lines {
+            Json::parse(line).unwrap();
+        }
+        assert_eq!(reader.join().unwrap(), text, "socket observers see the same stream");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn dead_observer_socket_is_dropped_not_fatal() {
+        let sink = EventSink::new(None);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(client); // peer goes away immediately
+        sink.subscribe(server_side);
+        let mut obs = EventStreamObserver::new(sink.clone());
+        // First write may land in the send buffer; keep emitting until the
+        // broken pipe surfaces and the socket is culled.
+        for round in 0..100 {
+            obs.on_round_start(round);
+            if !sink.has_outputs() {
+                break;
+            }
+        }
+        assert!(!sink.has_outputs(), "dead observer must eventually be culled");
+    }
+}

@@ -1,0 +1,43 @@
+//! Networked federation: the in-process run served over real TCP sockets.
+//!
+//! Everything below reuses the existing machinery — codec-v2 frames
+//! ([`crate::transport`]), the shared round engine
+//! (`federation::engine::{distribute_model, serve_round}` over
+//! [`crate::transport::FrameHub`]), canonical client construction
+//! ([`crate::federation::client`]), and the [`crate::federation::drive`]
+//! loop — so a networked run is the same run, byte for byte, with sockets
+//! where the mpsc channels were. Zero external dependencies: threaded
+//! blocking `std::net`, no async runtime.
+//!
+//! * [`wire`] — length-prefixed message envelope shared by data frames
+//!   and control messages; typed [`wire::NetError`]s for every way a
+//!   socket can lie (truncation, oversize, garbage, stall, version skew).
+//! * [`control`] — strict unknown-rejecting JSON control plane: Hello /
+//!   Welcome (carrying the full `RunSpec`) / Reject / Observe /
+//!   RoundReport (bit-exact hex floats) / Shutdown.
+//! * [`tcp`] — [`tcp::TcpLink`], the socket-backed
+//!   [`crate::transport::Transport`] with timeouts, connect retry with
+//!   backoff, and telemetry byte counters.
+//! * [`serve`] — the coordinator: admit N client processes, drive rounds
+//!   through the shared engine code, tear down cleanly on any exit.
+//! * [`client`] — the client process: handshake, deterministic state
+//!   rebuild, per-owned-client workers over one demultiplexed socket.
+//! * [`events`] — line-delimited JSON round events to a file and to
+//!   `Observe`-subscribed sockets (`docs/NET.md` has the schema).
+//!
+//! CLI: `sfprompt serve --listen ADDR --processes N …` and
+//! `sfprompt client --connect HOST:PORT …`; see `docs/NET.md`.
+
+pub mod client;
+pub mod control;
+pub mod events;
+pub mod serve;
+pub mod tcp;
+pub mod wire;
+
+pub use client::{run_client, ClientOptions, ClientSummary};
+pub use control::{Control, SHUTDOWN_COMPLETE};
+pub use events::{EventSink, EventStreamObserver};
+pub use serve::{owned_clients, serve, ServeOptions};
+pub use tcp::{ConnectOptions, TcpLink};
+pub use wire::{NetError, NetMsg, MAX_MSG_LEN, NET_PROTO_VERSION};

@@ -1,0 +1,635 @@
+//! The networked coordinator: one long-lived server process drives the
+//! SFPrompt federation over real TCP sockets.
+//!
+//! [`serve`] listens, admits `processes` client processes (each owning the
+//! logical clients `cid % processes == p`), then runs the standard
+//! [`drive`] round loop against a [`RemoteEngine`] — the same
+//! `distribute_model` / `serve_round` code the in-process engine uses,
+//! pointed at a socket-backed [`FrameHub`] instead of the mpsc `Hub`.
+//! Because every data frame on the wire is byte-for-byte the in-process
+//! `encode_frame` output and every RNG stream is derived from the spec's
+//! seed in the canonical order ([`build_clients`]), the resulting
+//! [`RunReport`] is **byte-identical** to the same spec run in one process
+//! (modulo wall-clock timings) — `tests/net.rs` pins this.
+//!
+//! Threading model (all `std`, no async):
+//!
+//! * admission happens inline on the accept loop;
+//! * one **reader thread** per client process funnels inbound messages
+//!   into a shared mpsc channel (frames and round reports alike);
+//! * writes go through per-process `Mutex<TcpLink>` write halves;
+//! * a background **acceptor** admits event-stream observers mid-run and
+//!   politely rejects latecomer clients;
+//! * the driver thread runs the round loop exactly like the in-process
+//!   path.
+//!
+//! Failure surface: a client that disconnects or aborts mid-run fails the
+//! round with a typed, attributed error; on any exit (success or error)
+//! the server sends a `Shutdown` control to every client and tears the
+//! sockets down so nothing hangs.
+
+use std::cell::RefCell;
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{Backend, PreparedSegment};
+use crate::comm::ByteMeter;
+use crate::data::SynthDataset;
+use crate::federation::client::build_clients;
+use crate::federation::engine::{distribute_model, serve_round};
+use crate::federation::{
+    drive, FedConfig, FederatedRun, Method, RoundObserver, RunReport, RunSpec, Tee,
+};
+use crate::metrics::{evaluate, RoundRecord, RunHistory};
+use crate::model::{init_params, ParamSet};
+use crate::sim::Fleet;
+use crate::transport::{Frame, FrameHub, Transport, WireFormat, WIRE_VERSION};
+use crate::util::rng::{seeds, Rng};
+
+use super::control::{Control, SHUTDOWN_COMPLETE};
+use super::events::{EventSink, EventStreamObserver};
+use super::tcp::TcpLink;
+use super::wire::{NetError, NetMsg, NET_PROTO_VERSION};
+
+/// Server-side configuration for one served run.
+pub struct ServeOptions {
+    /// Client processes to admit before the round loop starts
+    /// (1..=num_clients; logical clients are dealt round-robin).
+    pub processes: usize,
+    /// Identifier clients must echo in their Hello (empty client-side
+    /// run_id matches anything).
+    pub run_id: String,
+    /// Per-connection read/write timeout.
+    pub io_timeout: Duration,
+    /// Event-line fan-out (file and/or subscribed observer sockets).
+    pub events: EventSink,
+    /// Suppress per-connection stderr chatter.
+    pub quiet: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            processes: 1,
+            run_id: String::new(),
+            io_timeout: Duration::from_secs(60),
+            events: EventSink::default(),
+            quiet: false,
+        }
+    }
+}
+
+/// The logical clients process `p` of `n` owns.
+pub fn owned_clients(num_clients: usize, processes: usize, p: usize) -> Vec<usize> {
+    (0..num_clients).filter(|cid| cid % processes == p).collect()
+}
+
+/// Inbound traffic from the reader threads: data frames for the round
+/// router, round reports for the loss bookkeeping.
+enum HubMsg {
+    Frame(Frame, usize),
+    Report { round: u32, client: u32, local_losses: Vec<f64>, split_losses: Vec<f64> },
+}
+
+/// Run-lifetime socket state shared by every round.
+struct NetRuntime {
+    /// Write halves, indexed by process.
+    writers: Vec<Mutex<TcpLink>>,
+    /// Shared inbound queue fed by the reader threads.
+    rx: Receiver<Result<HubMsg>>,
+    processes: usize,
+    /// Reports that arrived while the router was waiting for frames
+    /// (defensive; the lock-step protocol makes this rare).
+    stash: RefCell<Vec<HubMsg>>,
+}
+
+impl NetRuntime {
+    fn next_msg(&self) -> Result<HubMsg> {
+        match self.rx.recv() {
+            Ok(Ok(msg)) => Ok(msg),
+            Ok(Err(e)) => Err(e),
+            Err(_) => Err(anyhow!("all client connections closed")),
+        }
+    }
+}
+
+/// One round's [`FrameHub`] view of the socket fabric: slot-addressed
+/// sends resolve through `selected` to the owning process's write half.
+struct RoundHub<'a> {
+    net: &'a NetRuntime,
+    selected: &'a [usize],
+}
+
+impl FrameHub for RoundHub<'_> {
+    fn send_to(&self, slot: usize, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        let cid =
+            *self.selected.get(slot).ok_or_else(|| anyhow!("no selected slot {slot}"))?;
+        let process = cid % self.net.processes;
+        let mut link = self.net.writers[process].lock().expect("writer lock poisoned");
+        link.send(frame, wire)
+    }
+
+    fn recv_any(&self) -> Result<(Frame, usize)> {
+        loop {
+            match self.net.next_msg()? {
+                HubMsg::Frame(frame, n) => return Ok((frame, n)),
+                report => self.net.stash.borrow_mut().push(report),
+            }
+        }
+    }
+}
+
+/// [`FederatedRun`] over remote clients: the server half of every round
+/// (selection, distribution, Phase-2 routing, FedAvg, broadcast, eval)
+/// with client compute happening in the connected processes.
+struct RemoteEngine<'a> {
+    backend: &'a dyn Backend,
+    fed: FedConfig,
+    fleet: Fleet,
+    global: ParamSet,
+    /// Per-client sample counts (drives selection and FedAvg weights).
+    counts: Vec<usize>,
+    rng: Rng,
+    setup_bytes: u64,
+    body_prep: PreparedSegment,
+    eval: Option<&'a SynthDataset>,
+    history: RunHistory,
+    net: &'a NetRuntime,
+}
+
+impl RemoteEngine<'_> {
+    fn run_round(&mut self, round: usize) -> Result<RoundRecord> {
+        let wall0 = Instant::now();
+        let telemetry = crate::telemetry::active();
+
+        let selected = crate::federation::selection::select(
+            self.fed.selection, self.fed.num_clients, self.fed.clients_per_round,
+            &self.counts, round, &mut self.rng,
+        );
+        let k = selected.len();
+        let n_ks: Vec<usize> = selected.iter().map(|&cid| self.counts[cid]).collect();
+
+        let mut comm = ByteMeter::default();
+        let mut clock = self.fleet.begin_round(&selected);
+        let online: Vec<bool> = (0..k).map(|slot| clock.online(slot)).collect();
+        let hub = RoundHub { net: self.net, selected: &selected };
+
+        let dist_ref =
+            [self.global.get("tail")?.clone(), self.global.get("prompt")?.clone()];
+        distribute_model(&hub, &selected, round as u32, &dist_ref, &mut comm, &mut clock)?;
+
+        let serve_span = telemetry.as_ref().map(|t| t.span("phase", "serve"));
+        let (agg, outcome) = serve_round(
+            self.backend, &self.body_prep, &hub, &selected, round as u32,
+            &n_ks, &self.fed, &dist_ref, &mut comm, &mut clock,
+        )?;
+        drop(serve_span);
+
+        // Zero survivors with online clients means no broadcast was sent:
+        // those clients are blocked waiting for one and will never report.
+        // The in-process engine fails this round too (its hub closes under
+        // the waiting clients); fail it here before deadlocking on reports.
+        if agg.is_none() && online.iter().any(|&o| o) {
+            bail!(
+                "round {round} resolved with zero survivors; \
+                 online clients cannot be released"
+            );
+        }
+
+        // Every online client (dropped-but-online included — it completed
+        // the protocol, its update was merely discarded) reports its loss
+        // vectors after the broadcast. Collect them all, then keep the
+        // survivors' in ascending slot order — the exact order the
+        // in-process engine's thread joins produce.
+        let mut reports: Vec<Option<(Vec<f64>, Vec<f64>)>> = (0..k).map(|_| None).collect();
+        let mut missing = online.iter().filter(|&&o| o).count();
+        let place = |msg: HubMsg, reports: &mut Vec<Option<(Vec<f64>, Vec<f64>)>>| {
+            match msg {
+                HubMsg::Report { round: r, client, local_losses, split_losses } => {
+                    if r != round as u32 {
+                        bail!("round report for round {r} during round {round}");
+                    }
+                    let slot = selected
+                        .iter()
+                        .position(|&c| c as u32 == client)
+                        .ok_or_else(|| anyhow!("round report from unselected client {client}"))?;
+                    if reports[slot].replace((local_losses, split_losses)).is_some() {
+                        bail!("duplicate round report from client {client}");
+                    }
+                    Ok(true)
+                }
+                HubMsg::Frame(frame, _) => {
+                    Err(anyhow!("unexpected {:?} frame between rounds", frame.kind))
+                }
+            }
+        };
+        for msg in self.net.stash.take() {
+            if place(msg, &mut reports)? {
+                missing -= 1;
+            }
+        }
+        while missing > 0 {
+            let msg = self.net.next_msg()?;
+            if place(msg, &mut reports)? {
+                missing -= 1;
+            }
+        }
+        let mut local_losses = Vec::new();
+        let mut split_losses = Vec::new();
+        for (slot, report) in reports.into_iter().enumerate() {
+            if !outcome.is_survivor(slot) {
+                continue;
+            }
+            let (local, split) =
+                report.ok_or_else(|| anyhow!("survivor slot {slot} never reported"))?;
+            local_losses.extend(local);
+            split_losses.extend(split);
+        }
+
+        if let Some((tail, prompt)) = agg {
+            self.global.set(tail);
+            self.global.set(prompt);
+        }
+        self.fleet.advance(outcome.latency_s);
+
+        let eval_accuracy = match self.eval {
+            Some(ds) if self.fed.should_eval(round) => {
+                let _eval_span = telemetry.as_ref().map(|t| t.span("phase", "eval"));
+                evaluate(self.backend, "eval_forward", &self.global, ds, self.fed.eval_limit)?
+            }
+            _ => f64::NAN,
+        };
+
+        Ok(RoundRecord {
+            round,
+            mean_local_loss: crate::util::stats::mean(&local_losses),
+            mean_split_loss: crate::util::stats::mean(&split_losses),
+            eval_accuracy,
+            comm,
+            wall_s: wall0.elapsed().as_secs_f64(),
+            sim_latency_s: outcome.latency_s,
+            clients: outcome.events,
+        })
+    }
+}
+
+impl FederatedRun for RemoteEngine<'_> {
+    fn method(&self) -> Method {
+        Method::SfPrompt
+    }
+
+    fn fed(&self) -> &FedConfig {
+        &self.fed
+    }
+
+    fn round(&mut self, r: usize) -> Result<RoundRecord> {
+        if r != self.history.rounds.len() {
+            return Err(anyhow!(
+                "rounds must run in order: expected round {}, got {r}",
+                self.history.rounds.len()
+            ));
+        }
+        let rec = self.run_round(r)?;
+        self.history.push(rec.clone());
+        Ok(rec)
+    }
+
+    fn history(&self) -> &RunHistory {
+        &self.history
+    }
+
+    fn comm_totals(&self) -> &ByteMeter {
+        &self.history.total_comm
+    }
+
+    fn setup_bytes(&self) -> u64 {
+        self.setup_bytes
+    }
+
+    fn final_eval(&mut self) -> Result<f64> {
+        match self.eval {
+            Some(ds) => {
+                evaluate(self.backend, "eval_forward", &self.global, ds, self.fed.eval_limit)
+            }
+            None => Ok(f64::NAN),
+        }
+    }
+}
+
+/// Answer one fresh connection's first message during admission. Returns
+/// the admitted client link, if this connection became one.
+fn admit_connection(
+    stream: TcpStream,
+    spec: &RunSpec,
+    opts: &ServeOptions,
+    admitted: usize,
+    accepting_clients: bool,
+) -> Option<TcpLink> {
+    let mut link = match TcpLink::from_stream(stream, opts.io_timeout) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("serve: rejected connection (socket setup: {e})");
+            return None;
+        }
+    };
+    let peer = link.peer();
+    let reject = |link: &mut TcpLink, reason: String| {
+        if !opts.quiet {
+            eprintln!("serve: rejected {peer}: {reason}");
+        }
+        let _ = link.send_control(&Control::Reject { reason });
+        link.shutdown();
+    };
+    match link.recv_msg(false) {
+        Ok(Some(NetMsg::Control(Control::Hello { proto, wire, name, run_id }))) => {
+            if !accepting_clients {
+                reject(&mut link, "run already in progress (connect as an observer)".into());
+                return None;
+            }
+            if proto != NET_PROTO_VERSION {
+                reject(
+                    &mut link,
+                    format!(
+                        "net protocol version mismatch: you speak v{proto}, this server v{}",
+                        NET_PROTO_VERSION
+                    ),
+                );
+                return None;
+            }
+            if wire != WIRE_VERSION {
+                reject(
+                    &mut link,
+                    format!(
+                        "codec wire version mismatch: you speak v{wire}, this server v{}",
+                        WIRE_VERSION
+                    ),
+                );
+                return None;
+            }
+            if !run_id.is_empty() && run_id != opts.run_id {
+                reject(
+                    &mut link,
+                    format!("run id mismatch: you asked for {run_id:?}, serving {:?}", opts.run_id),
+                );
+                return None;
+            }
+            let client_ids = owned_clients(spec.fed.num_clients, opts.processes, admitted);
+            let welcome = Control::Welcome {
+                proto: NET_PROTO_VERSION,
+                wire: WIRE_VERSION,
+                run_id: opts.run_id.clone(),
+                process: admitted,
+                processes: opts.processes,
+                client_ids,
+                spec: spec.clone(),
+            };
+            match link.send_control(&welcome) {
+                Ok(_) => {
+                    if !opts.quiet {
+                        eprintln!(
+                            "serve: admitted {peer} ({name:?}) as process {}/{}",
+                            admitted + 1,
+                            opts.processes
+                        );
+                    }
+                    Some(link)
+                }
+                Err(e) => {
+                    eprintln!("serve: welcome to {peer} failed ({e}); slot stays open");
+                    None
+                }
+            }
+        }
+        Ok(Some(NetMsg::Control(Control::Observe { proto }))) => {
+            if proto != NET_PROTO_VERSION {
+                reject(&mut link, format!("observer protocol v{proto} != v{NET_PROTO_VERSION}"));
+                return None;
+            }
+            if !opts.quiet {
+                eprintln!("serve: observer {peer} subscribed to the event stream");
+            }
+            opts.events.subscribe(link.into_stream());
+            None
+        }
+        Ok(Some(NetMsg::Control(other))) => {
+            reject(&mut link, format!("expected hello or observe, got {:?}", other.kind()));
+            None
+        }
+        Ok(Some(NetMsg::Frame(frame, _))) => {
+            reject(&mut link, format!("expected a handshake, got a {:?} frame", frame.kind));
+            None
+        }
+        Ok(None) => None,
+        Err(e) => {
+            // Garbage, truncation, or a version-mismatched envelope: say
+            // why, try to tell the peer, move on. The run never dies to a
+            // bad joiner.
+            reject(&mut link, format!("handshake failed: {e}"));
+            None
+        }
+    }
+}
+
+/// Reader-thread body: funnel one client process's inbound messages into
+/// the shared hub channel until the socket closes or the run stops.
+fn reader_loop(mut link: TcpLink, tx: Sender<Result<HubMsg>>, process: usize, stop: &AtomicBool) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match link.recv_msg(true) {
+            Ok(None) => continue, // idle poll; re-check the stop flag
+            Ok(Some(NetMsg::Frame(frame, n))) => {
+                if tx.send(Ok(HubMsg::Frame(frame, n))).is_err() {
+                    return;
+                }
+            }
+            Ok(Some(NetMsg::Control(Control::RoundReport {
+                round,
+                client,
+                local_losses,
+                split_losses,
+            }))) => {
+                if tx
+                    .send(Ok(HubMsg::Report { round, client, local_losses, split_losses }))
+                    .is_err()
+                {
+                    return;
+                }
+            }
+            Ok(Some(NetMsg::Control(other))) => {
+                let _ = tx.send(Err(anyhow!(
+                    "client process {process} sent unexpected control {:?}",
+                    other.kind()
+                )));
+                return;
+            }
+            Err(e) => {
+                if stop.load(Ordering::Relaxed) {
+                    return; // shutdown tore the socket down under us
+                }
+                let closed =
+                    matches!(e.downcast_ref::<NetError>(), Some(NetError::Closed));
+                let _ = tx.send(Err(if closed {
+                    anyhow!("client process {process} disconnected mid-run")
+                } else {
+                    e.context(format!("client process {process}"))
+                }));
+                return;
+            }
+        }
+    }
+}
+
+/// Background acceptor after admission: observers may subscribe mid-run;
+/// latecomer clients get a polite reject.
+fn acceptor_loop(listener: TcpListener, spec: &RunSpec, opts: &ServeOptions, stop: &AtomicBool) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                // `accepting_clients: false`: the cohort is sealed.
+                let _ = admit_connection(stream, spec, opts, usize::MAX, false);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve one federated run over TCP: admit `opts.processes` client
+/// processes, drive every round through the shared engine code paths, and
+/// return the completed [`RunReport`] — byte-identical (modulo wall-clock
+/// fields) to `spec` run in-process.
+pub fn serve(
+    listener: TcpListener,
+    spec: &RunSpec,
+    artifacts_root: &Path,
+    opts: &ServeOptions,
+    obs: &mut dyn RoundObserver,
+) -> Result<RunReport> {
+    if spec.method != Method::SfPrompt {
+        bail!(
+            "serve supports the sfprompt method only (got {:?}); the baselines' wire \
+             protocols are in-process for now",
+            spec.method.label()
+        );
+    }
+    spec.builder().validate()?;
+    if opts.processes == 0 || opts.processes > spec.fed.num_clients {
+        bail!(
+            "processes must be in 1..={} (one process owns at least one logical client), got {}",
+            spec.fed.num_clients,
+            opts.processes
+        );
+    }
+
+    let backend = spec.open_backend(artifacts_root)?;
+    let backend: &dyn Backend = backend.as_ref();
+    let manifest = backend.manifest();
+    for stage in ["body_forward", "body_backward", "eval_forward"] {
+        if !manifest.stages.contains_key(stage) {
+            bail!("config {:?} was lowered without stage {stage:?}", manifest.config.name);
+        }
+    }
+    let (train, eval) = spec.datasets(&manifest.config)?;
+    if train.len() < spec.fed.num_clients {
+        bail!(
+            "training set has {} samples for {} clients (every client needs at least one)",
+            train.len(),
+            spec.fed.num_clients
+        );
+    }
+    let labels = train.labels();
+    let (clients, rng) = build_clients(&spec.fed, &labels);
+    let counts: Vec<usize> = clients.iter().map(|c| c.num_samples()).collect();
+    drop(clients); // the server only routes; client compute lives remotely
+
+    let global = init_params(manifest, seeds::param_init(spec.fed.seed));
+    let head_bytes = manifest.cost.message_bytes["head_params"] as u64;
+    let body_prep = backend.prepare_segment(global.get("body")?)?;
+    let fleet = spec.builder().resolved_fleet();
+
+    // --- Admission: blocking accepts until the cohort is full. ---
+    if !opts.quiet {
+        eprintln!(
+            "serve: listening on {}, waiting for {} client process(es)",
+            listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into()),
+            opts.processes
+        );
+    }
+    let mut admitted_links = Vec::with_capacity(opts.processes);
+    while admitted_links.len() < opts.processes {
+        let (stream, _) = listener.accept()?;
+        if let Some(link) =
+            admit_connection(stream, spec, opts, admitted_links.len(), true)
+        {
+            admitted_links.push(link);
+        }
+    }
+
+    // --- Reader/writer split per process, shared inbound channel. ---
+    let (tx, rx) = channel();
+    let mut readers = Vec::with_capacity(opts.processes);
+    let mut writers = Vec::with_capacity(opts.processes);
+    for link in admitted_links {
+        readers.push(link.try_clone()?);
+        writers.push(Mutex::new(link));
+    }
+    let net = NetRuntime { writers, rx, processes: opts.processes, stash: RefCell::new(Vec::new()) };
+    let stop = AtomicBool::new(false);
+
+    let history = std::thread::scope(|scope| {
+        for (process, reader) in readers.into_iter().enumerate() {
+            let tx = tx.clone();
+            let stop = &stop;
+            scope.spawn(move || reader_loop(reader, tx, process, stop));
+        }
+        drop(tx); // readers hold the only senders now
+        scope.spawn(|| acceptor_loop(listener, spec, opts, &stop));
+
+        let mut engine = RemoteEngine {
+            backend,
+            fed: spec.fed,
+            fleet,
+            global,
+            counts,
+            rng,
+            setup_bytes: head_bytes * spec.fed.num_clients as u64,
+            body_prep,
+            eval: Some(&eval),
+            history: RunHistory::default(),
+            net: &net,
+        };
+        let mut event_obs = EventStreamObserver::new(opts.events.clone());
+        let mut tee = Tee(obs, &mut event_obs);
+        let result = drive(&mut engine, &mut tee);
+
+        // --- Teardown, success or not: tell every client, drop the
+        // sockets (wakes blocked readers with EOF), stop the acceptor. ---
+        let reason = match &result {
+            Ok(_) => SHUTDOWN_COMPLETE.to_string(),
+            Err(e) => format!("run failed: {e}"),
+        };
+        stop.store(true, Ordering::Relaxed);
+        for writer in &net.writers {
+            let mut link = writer.lock().expect("writer lock poisoned");
+            let _ = link.send_control(&Control::Shutdown { reason: reason.clone() });
+            link.shutdown();
+        }
+        result
+    })?;
+
+    Ok(RunReport::new(spec, head_bytes * spec.fed.num_clients as u64, history))
+}

@@ -1,0 +1,311 @@
+//! `TcpLink`: the socket-backed [`Transport`].
+//!
+//! One `TcpLink` wraps one `TcpStream` with the framing from
+//! [`super::wire`]: `send` writes the exact `encode_frame` byte string
+//! (whose leading length prefix doubles as the socket framing, so the
+//! metered byte count **is** the socket byte count), `recv` reassembles
+//! and CRC-checks the next inbound frame. Control messages share the same
+//! stream via [`TcpLink::send_control`] / [`TcpLink::recv_msg`].
+//!
+//! Policy lives here too:
+//! * **Timeouts** — every link gets `SO_RCVTIMEO`/`SO_SNDTIMEO`
+//!   ([`ConnectOptions::io_timeout`]); a stalled peer surfaces
+//!   [`NetError::TimedOut`] instead of hanging the round forever.
+//! * **Connect retry** — [`TcpLink::connect`] retries with doubling
+//!   backoff (capped) so `client` processes can start before (or race)
+//!   the server without a shell-script sleep dance.
+//! * **Nagle off** — the protocol is lock-step request/response per
+//!   Phase-2 batch; coalescing 17-byte gradient headers costs RTTs.
+//!
+//! When telemetry is installed, real socket byte counts accumulate under
+//! `net_tx_bytes` / `net_rx_bytes` (data frames) and `net_control_bytes`
+//! (handshake/report overhead — deliberately *not* in `ByteMeter`, which
+//! meters the paper's federated payload traffic only).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::transport::{encode_frame, Frame, Transport, WireFormat};
+
+use super::control::Control;
+use super::wire::{control_bytes, read_message, write_error, NetError, NetMsg};
+
+/// Client-side connection policy.
+#[derive(Debug, Clone)]
+pub struct ConnectOptions {
+    /// Connection attempts before giving up (≥ 1).
+    pub retries: u32,
+    /// Backoff before the second attempt; doubles each retry, capped at 2 s.
+    pub backoff: Duration,
+    /// Read/write timeout applied to the established stream.
+    pub io_timeout: Duration,
+}
+
+impl Default for ConnectOptions {
+    fn default() -> ConnectOptions {
+        // ~30 attempts over ~1 min: enough for a CI script that backgrounds
+        // the server and launches clients immediately.
+        ConnectOptions {
+            retries: 30,
+            backoff: Duration::from_millis(100),
+            io_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+const BACKOFF_CAP: Duration = Duration::from_secs(2);
+
+/// One framed, timeout-guarded TCP connection.
+pub struct TcpLink {
+    stream: TcpStream,
+    peer: SocketAddr,
+}
+
+impl TcpLink {
+    /// Wrap an accepted/connected stream: disable Nagle, arm timeouts.
+    pub fn from_stream(stream: TcpStream, io_timeout: Duration) -> Result<TcpLink> {
+        let peer = stream.peer_addr().context("peer address")?;
+        stream.set_nodelay(true).context("TCP_NODELAY")?;
+        let t = (io_timeout > Duration::ZERO).then_some(io_timeout);
+        stream.set_read_timeout(t).context("SO_RCVTIMEO")?;
+        stream.set_write_timeout(t).context("SO_SNDTIMEO")?;
+        Ok(TcpLink { stream, peer })
+    }
+
+    /// Dial `addr`, retrying with doubling backoff per
+    /// [`ConnectOptions`]. Fails with the last connect error once the
+    /// attempt budget is spent.
+    pub fn connect(addr: &str, opts: &ConnectOptions) -> Result<TcpLink> {
+        let targets: Vec<SocketAddr> =
+            addr.to_socket_addrs().with_context(|| format!("resolving {addr:?}"))?.collect();
+        if targets.is_empty() {
+            return Err(anyhow!("{addr:?} resolved to no addresses"));
+        }
+        let mut delay = opts.backoff;
+        let mut last_err = None;
+        for attempt in 0..opts.retries.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(BACKOFF_CAP);
+            }
+            match TcpStream::connect(&targets[..]) {
+                Ok(stream) => return TcpLink::from_stream(stream, opts.io_timeout),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(anyhow!(
+            "could not connect to {addr} after {} attempts: {}",
+            opts.retries.max(1),
+            last_err.expect("at least one attempt ran")
+        ))
+    }
+
+    pub fn peer(&self) -> SocketAddr {
+        self.peer
+    }
+
+    /// A second handle on the same socket (reader/writer split).
+    pub fn try_clone(&self) -> Result<TcpLink> {
+        Ok(TcpLink { stream: self.stream.try_clone().context("cloning socket")?, peer: self.peer })
+    }
+
+    /// Tear the connection down (both directions, best effort). Queued
+    /// outbound data still drains to the peer before the FIN; a reader
+    /// blocked on this socket wakes with a clean EOF.
+    pub fn shutdown(&self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+
+    /// Unwrap back to the raw stream (observer sockets hand their write
+    /// half to the event sink).
+    pub fn into_stream(self) -> TcpStream {
+        self.stream
+    }
+
+    /// Write one control message; returns its wire byte count.
+    pub fn send_control(&mut self, c: &Control) -> Result<usize> {
+        let bytes = control_bytes(c);
+        self.stream.write_all(&bytes).map_err(write_error)?;
+        if let Some(t) = crate::telemetry::active() {
+            t.metrics.counter_add("net_control_bytes", bytes.len() as u64);
+        }
+        Ok(bytes.len())
+    }
+
+    /// Read the next message (frame or control). With `idle_ok`, a read
+    /// timeout **between** messages returns `Ok(None)` so callers can poll
+    /// a stop flag; a timeout mid-message is still an error.
+    pub fn recv_msg(&mut self, idle_ok: bool) -> Result<Option<NetMsg>> {
+        let msg = read_message(&mut self.stream, idle_ok)?;
+        if let Some(t) = crate::telemetry::active() {
+            match &msg {
+                Some(NetMsg::Frame(_, n)) => t.metrics.counter_add("net_rx_bytes", *n as u64),
+                Some(NetMsg::Control(_, n)) => {
+                    t.metrics.counter_add("net_control_bytes", *n as u64)
+                }
+                None => {}
+            }
+        }
+        Ok(msg)
+    }
+}
+
+impl Transport for TcpLink {
+    fn send(&mut self, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        let bytes = encode_frame(frame, wire)?;
+        self.stream.write_all(&bytes).map_err(write_error)?;
+        if let Some(t) = crate::telemetry::active() {
+            t.metrics.counter_add("net_tx_bytes", bytes.len() as u64);
+        }
+        Ok(bytes.len())
+    }
+
+    fn recv(&mut self) -> Result<(Frame, usize)> {
+        match self.recv_msg(false)? {
+            Some(NetMsg::Frame(frame, n)) => Ok((frame, n)),
+            Some(NetMsg::Control(c, _)) => match c {
+                Control::Shutdown { reason } => {
+                    Err(anyhow!("server shut the run down mid-round: {reason}"))
+                }
+                other => Err(anyhow!(
+                    "expected a data frame, got control message {:?}",
+                    other.kind()
+                )),
+            },
+            None => Err(anyhow::Error::new(NetError::TimedOut)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::MsgKind;
+    use crate::runtime::HostTensor;
+    use crate::transport::Payload;
+    use std::net::TcpListener;
+
+    fn frame(vals: &[f32]) -> Frame {
+        Frame::new(
+            MsgKind::Upload,
+            1,
+            2,
+            Payload::Tensor(HostTensor::f32(vec![vals.len()], vals.to_vec())),
+        )
+    }
+
+    #[test]
+    fn localhost_roundtrip_counts_socket_bytes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut link = TcpLink::from_stream(stream, Duration::from_secs(5)).unwrap();
+            let (f, n) = link.recv().unwrap();
+            link.send(&f, WireFormat::F32).unwrap();
+            n
+        });
+        let mut client = TcpLink::connect(&addr, &ConnectOptions::default()).unwrap();
+        let f = frame(&[1.0, 2.0, 3.0]);
+        let sent = client.send(&f, WireFormat::F32).unwrap();
+        let (echoed, got) = client.recv().unwrap();
+        assert_eq!(echoed, f);
+        assert_eq!(sent, got, "send and recv must meter the same byte count");
+        assert_eq!(sent, encode_frame(&f, WireFormat::F32).unwrap().len());
+        assert_eq!(server.join().unwrap(), sent);
+    }
+
+    #[test]
+    fn control_and_frames_share_the_stream() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut link = TcpLink::from_stream(stream, Duration::from_secs(5)).unwrap();
+            let mut kinds = Vec::new();
+            for _ in 0..2 {
+                match link.recv_msg(false).unwrap().unwrap() {
+                    NetMsg::Control(c, _) => kinds.push(c.kind().to_string()),
+                    NetMsg::Frame(f, _) => kinds.push(f.kind.label().to_string()),
+                }
+            }
+            kinds
+        });
+        let mut client = TcpLink::connect(&addr, &ConnectOptions::default()).unwrap();
+        client
+            .send_control(&Control::Hello {
+                proto: super::super::wire::NET_PROTO_VERSION,
+                wire: crate::transport::WIRE_VERSION,
+                name: "t".into(),
+                run_id: String::new(),
+            })
+            .unwrap();
+        client.send(&frame(&[4.0]), WireFormat::F32).unwrap();
+        assert_eq!(server.join().unwrap(), vec!["hello", "upload"]);
+    }
+
+    #[test]
+    fn connect_retries_until_listener_appears() {
+        // Reserve a port, drop the listener, rebind it after a delay: the
+        // client's backoff loop must ride out the gap.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(250));
+            let listener = TcpListener::bind(addr).unwrap();
+            let _ = listener.accept();
+        });
+        let opts = ConnectOptions {
+            retries: 40,
+            backoff: Duration::from_millis(50),
+            io_timeout: Duration::from_secs(5),
+        };
+        // NOTE: another process could steal the port between drop and
+        // rebind; vanishingly unlikely for an ephemeral port in CI.
+        TcpLink::connect(&addr.to_string(), &opts).unwrap();
+        late.join().unwrap();
+    }
+
+    #[test]
+    fn connect_failure_reports_attempts() {
+        // A port from the reserved range nothing listens on, one attempt.
+        let opts = ConnectOptions {
+            retries: 1,
+            backoff: Duration::from_millis(1),
+            io_timeout: Duration::from_secs(1),
+        };
+        let err = TcpLink::connect("127.0.0.1:1", &opts).unwrap_err().to_string();
+        assert!(err.contains("after 1 attempts"), "{err}");
+    }
+
+    #[test]
+    fn idle_timeout_is_none_mid_message_is_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let hold = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            // Quiet period, then half a length prefix, then stall.
+            std::thread::sleep(Duration::from_millis(300));
+            stream.write_all(&[9, 0]).unwrap();
+            std::thread::sleep(Duration::from_millis(600));
+        });
+        let opts = ConnectOptions { io_timeout: Duration::from_millis(150), ..Default::default() };
+        let mut link = TcpLink::connect(&addr, &opts).unwrap();
+        assert!(link.recv_msg(true).unwrap().is_none(), "idle timeout must be quiet-ok");
+        // Eventually the peer sends 2 of 4 prefix bytes and stalls: that
+        // mid-message timeout is a hard error even with idle_ok.
+        let err = loop {
+            match link.recv_msg(true) {
+                Ok(None) => continue,
+                Ok(Some(m)) => panic!("unexpected message {m:?}"),
+                Err(e) => break e,
+            }
+        };
+        assert_eq!(err.downcast_ref::<NetError>(), Some(&NetError::TimedOut));
+        hold.join().unwrap();
+    }
+}

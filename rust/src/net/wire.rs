@@ -1,0 +1,359 @@
+//! Socket framing: how codec frames and control messages share one TCP
+//! byte stream.
+//!
+//! Every message on the wire is `[u32 len_le][body …]` where `len` counts
+//! the body bytes and the body's first two bytes are a magic tag:
+//!
+//! * `"SF"` — a **codec-v2 federated frame**, byte-for-byte the output of
+//!   [`crate::transport::encode_frame`] (whose own leading `u32 frame_len`
+//!   *is* this length prefix — zero added framing overhead, so the socket
+//!   byte count of a data frame equals its in-process encoded length and
+//!   `ByteMeter` totals are identical across media).
+//! * `"NC"` — a **net control message**: one version byte
+//!   ([`NET_PROTO_VERSION`]) then a strict JSON body (handshake, round
+//!   reports, shutdown — see [`super::control`]).
+//!
+//! Reads are robust against the realities of a stream socket: partial
+//! reads are reassembled, a length prefix beyond [`MAX_MSG_LEN`] is
+//! rejected *before* any allocation, EOF mid-message surfaces
+//! [`NetError::Truncated`] (never a panic), and a read stalled past the
+//! socket's `SO_RCVTIMEO` surfaces [`NetError::TimedOut`]. All of these
+//! arrive as typed [`NetError`]s inside `anyhow::Error`, so callers can
+//! `downcast_ref::<NetError>()` to branch on the failure mode.
+
+use std::io::Read;
+
+use anyhow::{bail, Result};
+
+use crate::transport::{decode_frame, Frame};
+use crate::util::json::Json;
+
+use super::control::Control;
+
+/// Version of the *net* layer protocol (envelope + control-message
+/// schema). Independent of the codec's `WIRE_VERSION`, which every data
+/// frame still carries and which the handshake pins separately.
+pub const NET_PROTO_VERSION: u8 = 1;
+
+/// Magic tag opening every control-message body.
+pub(crate) const CONTROL_MAGIC: [u8; 2] = *b"NC";
+
+/// Largest message body this endpoint will buffer. Matches the codec's
+/// decode-side sanity cap (`MAX_ELEMENTS` = 1 GiB of f32 per tensor) plus
+/// header slack: anything larger is a corrupted or hostile length prefix,
+/// refused before a single byte of it is allocated.
+pub const MAX_MSG_LEN: usize = (1 << 30) + (1 << 16);
+
+/// Read-side chunk size: bodies are buffered incrementally in chunks of
+/// this, so even an accepted length prefix only ever allocates as fast as
+/// bytes actually arrive.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Typed failure modes of the socket edge. Wrapped in `anyhow::Error`;
+/// callers branch with `err.downcast_ref::<NetError>()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NetError {
+    /// Clean EOF on a message boundary (peer closed the connection).
+    Closed,
+    /// EOF in the middle of a message: `got` of `want` body bytes arrived.
+    Truncated { got: usize, want: usize },
+    /// Length prefix beyond [`MAX_MSG_LEN`]; rejected without allocating.
+    Oversized { len: u64, cap: usize },
+    /// A read or write stalled past the connection's configured timeout.
+    TimedOut,
+    /// Envelope net-protocol version mismatch on a control message.
+    Version { got: u8, want: u8 },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Closed => write!(f, "connection closed by peer"),
+            NetError::Truncated { got, want } => {
+                write!(f, "connection closed mid-message ({got} of {want} body bytes)")
+            }
+            NetError::Oversized { len, cap } => {
+                write!(f, "message length prefix {len} exceeds the {cap}-byte cap")
+            }
+            NetError::TimedOut => write!(f, "socket read/write timed out"),
+            NetError::Version { got, want } => {
+                write!(f, "net-protocol version mismatch: peer speaks v{got}, this end v{want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// One parsed inbound message, with its total on-the-wire byte count
+/// (length prefix included).
+#[derive(Debug)]
+pub enum NetMsg {
+    /// A federated data frame (already CRC-checked and decoded).
+    Frame(Frame, usize),
+    /// A control message (handshake / report / shutdown).
+    Control(Control, usize),
+}
+
+/// How a `fill` attempt can resolve when `idle_ok` permits returning
+/// without data.
+enum Fill {
+    Done,
+    /// Timeout fired before the first byte — the peer is merely quiet.
+    Idle,
+}
+
+/// Read exactly `buf.len()` bytes. `idle_ok` + `started` control how
+/// timeouts and EOF map onto [`NetError`]: before the first byte of a
+/// message (`!started`), a timeout can be reported as `Idle` and EOF is a
+/// clean [`NetError::Closed`]; once any byte of the message has been
+/// consumed, both become hard errors (`TimedOut` / `Truncated`).
+fn fill(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    idle_ok: bool,
+    started: bool,
+    msg_want: usize,
+    msg_got: usize,
+) -> Result<Fill> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if !started && filled == 0 {
+                    bail!(NetError::Closed);
+                }
+                bail!(NetError::Truncated { got: msg_got + filled, want: msg_want });
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if !started && filled == 0 && idle_ok {
+                    return Ok(Fill::Idle);
+                }
+                bail!(NetError::TimedOut);
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Fill::Done)
+}
+
+/// Read one length-prefixed message and dispatch on its magic. Returns
+/// `None` only when `idle_ok` is set and the socket timed out before the
+/// first byte of a message (the peer is alive but quiet — callers poll a
+/// stop flag and retry). All other shortfalls are typed [`NetError`]s.
+pub fn read_message<R: Read>(r: &mut R, idle_ok: bool) -> Result<Option<NetMsg>> {
+    let mut prefix = [0u8; 4];
+    match fill(r, &mut prefix, idle_ok, false, 4, 0)? {
+        Fill::Idle => return Ok(None),
+        Fill::Done => {}
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_MSG_LEN {
+        bail!(NetError::Oversized { len: len as u64, cap: MAX_MSG_LEN });
+    }
+    if len < 3 {
+        bail!("runt message ({len} body bytes; minimum is magic + one byte)");
+    }
+    // Body arrives in bounded chunks: allocation tracks received bytes,
+    // never the claimed length.
+    let mut body = Vec::with_capacity(len.min(READ_CHUNK));
+    let mut chunk = [0u8; READ_CHUNK];
+    while body.len() < len {
+        let take = (len - body.len()).min(READ_CHUNK);
+        fill(r, &mut chunk[..take], false, true, len, body.len())?;
+        body.extend_from_slice(&chunk[..take]);
+    }
+    let total = 4 + len;
+    match [body[0], body[1]] {
+        m if m == *b"SF" => {
+            // A codec frame's encoded form starts with its own length
+            // prefix; reassemble the exact encode_frame output and let the
+            // codec do all validation (version, CRC, payload caps).
+            let mut full = Vec::with_capacity(total);
+            full.extend_from_slice(&prefix);
+            full.extend_from_slice(&body);
+            let frame = decode_frame(&full)?;
+            Ok(Some(NetMsg::Frame(frame, total)))
+        }
+        m if m == CONTROL_MAGIC => {
+            if body[2] != NET_PROTO_VERSION {
+                bail!(NetError::Version { got: body[2], want: NET_PROTO_VERSION });
+            }
+            let text = std::str::from_utf8(&body[3..])
+                .map_err(|_| anyhow::anyhow!("control message body is not UTF-8"))?;
+            let v = Json::parse(text).map_err(|e| anyhow::anyhow!("control message: {e}"))?;
+            Ok(Some(NetMsg::Control(Control::from_json(&v)?, total)))
+        }
+        m => bail!(
+            "unrecognized message magic {:?} (expected \"SF\" data frame or \"NC\" control)",
+            String::from_utf8_lossy(&m)
+        ),
+    }
+}
+
+/// Serialize a control message into its on-the-wire form:
+/// `[u32 len]["NC"][NET_PROTO_VERSION][strict JSON]`.
+pub fn control_bytes(c: &Control) -> Vec<u8> {
+    let json = c.to_json().to_string();
+    let body_len = 3 + json.len();
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&CONTROL_MAGIC);
+    out.push(NET_PROTO_VERSION);
+    out.extend_from_slice(json.as_bytes());
+    out
+}
+
+/// Map write-side io errors onto the same typed vocabulary as reads.
+pub(crate) fn write_error(e: std::io::Error) -> anyhow::Error {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            anyhow::Error::new(NetError::TimedOut)
+        }
+        std::io::ErrorKind::BrokenPipe | std::io::ErrorKind::ConnectionReset => {
+            anyhow::Error::new(NetError::Closed)
+        }
+        _ => e.into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::MsgKind;
+    use crate::runtime::HostTensor;
+    use crate::transport::{encode_frame, Payload, WireFormat};
+
+    /// A reader that yields the stream in caller-chosen chunk sizes, to
+    /// model TCP segmentation without a socket.
+    pub(crate) struct ChunkedReader {
+        data: Vec<u8>,
+        pos: usize,
+        chunks: Vec<usize>,
+        next: usize,
+    }
+
+    impl ChunkedReader {
+        pub(crate) fn new(data: Vec<u8>, chunks: Vec<usize>) -> ChunkedReader {
+            ChunkedReader { data, pos: 0, chunks, next: 0 }
+        }
+    }
+
+    impl Read for ChunkedReader {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.data.len() {
+                return Ok(0);
+            }
+            let want = *self.chunks.get(self.next).unwrap_or(&usize::MAX);
+            self.next += 1;
+            let n = want.min(buf.len()).min(self.data.len() - self.pos).max(1);
+            buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    fn sample_frame() -> Frame {
+        Frame::new(
+            MsgKind::SmashedData,
+            3,
+            7,
+            Payload::Tensor(HostTensor::f32(vec![4], vec![1.0, -2.0, 3.5, 0.25])),
+        )
+    }
+
+    #[test]
+    fn frame_reassembles_from_single_byte_chunks() {
+        let bytes = encode_frame(&sample_frame(), WireFormat::F32).unwrap();
+        let n = bytes.len();
+        let mut r = ChunkedReader::new(bytes, vec![1; n]);
+        match read_message(&mut r, false).unwrap().unwrap() {
+            NetMsg::Frame(f, got_n) => {
+                assert_eq!(f, sample_frame());
+                assert_eq!(got_n, n, "wire count must equal the encoded frame length");
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_prefix_is_rejected_before_allocation() {
+        let mut data = u32::MAX.to_le_bytes().to_vec();
+        data.extend_from_slice(b"SF");
+        let mut r = ChunkedReader::new(data, vec![]);
+        let err = read_message(&mut r, false).unwrap_err();
+        match err.downcast_ref::<NetError>() {
+            Some(NetError::Oversized { len, cap }) => {
+                assert_eq!(*len, u32::MAX as u64);
+                assert_eq!(*cap, MAX_MSG_LEN);
+            }
+            other => panic!("expected Oversized, got {other:?} ({err})"),
+        }
+    }
+
+    #[test]
+    fn midstream_eof_is_truncated_not_panic() {
+        let mut bytes = encode_frame(&sample_frame(), WireFormat::F32).unwrap();
+        bytes.truncate(bytes.len() / 2);
+        let mut r = ChunkedReader::new(bytes, vec![]);
+        let err = read_message(&mut r, false).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<NetError>(), Some(NetError::Truncated { .. })),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        let mut r = ChunkedReader::new(Vec::new(), vec![]);
+        let err = read_message(&mut r, false).unwrap_err();
+        assert_eq!(err.downcast_ref::<NetError>(), Some(&NetError::Closed));
+    }
+
+    #[test]
+    fn control_version_mismatch_is_typed() {
+        let c = Control::Shutdown { reason: "done".into() };
+        let mut bytes = control_bytes(&c);
+        bytes[6] = 42; // envelope version byte (after 4-byte len + "NC")
+        let mut r = ChunkedReader::new(bytes, vec![]);
+        let err = read_message(&mut r, false).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<NetError>(),
+            Some(&NetError::Version { got: 42, want: NET_PROTO_VERSION })
+        );
+    }
+
+    #[test]
+    fn garbage_magic_is_refused() {
+        let mut data = 8u32.to_le_bytes().to_vec();
+        data.extend_from_slice(b"XXjunk12");
+        let mut r = ChunkedReader::new(data, vec![]);
+        let err = read_message(&mut r, false).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn control_roundtrips_through_the_envelope() {
+        let c = Control::Hello {
+            proto: NET_PROTO_VERSION,
+            wire: crate::transport::WIRE_VERSION,
+            name: "dev-board-4".into(),
+            run_id: "run-17".into(),
+        };
+        let bytes = control_bytes(&c);
+        let n = bytes.len();
+        let mut r = ChunkedReader::new(bytes, vec![3; n]);
+        match read_message(&mut r, false).unwrap().unwrap() {
+            NetMsg::Control(got, got_n) => {
+                assert_eq!(got.to_json(), c.to_json());
+                assert_eq!(got_n, n);
+            }
+            other => panic!("expected control, got {other:?}"),
+        }
+    }
+}

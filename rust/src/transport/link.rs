@@ -28,6 +28,20 @@ pub trait Transport {
     fn recv(&mut self) -> Result<(Frame, usize)>;
 }
 
+/// Server side of a star topology, abstracted over the medium: a
+/// slot-addressed outbound channel per selected client plus one shared
+/// inbound queue. The in-process [`Hub`] (mpsc) and the networked
+/// `net::serve` round hub (TCP sockets) both implement it, so the
+/// SFPrompt serve loop is written once and neither knows nor cares
+/// whether its clients are threads or processes.
+pub trait FrameHub {
+    /// Encode `frame` under `wire` and deliver it to `slot`; returns the
+    /// encoded byte count (what `ByteMeter` records).
+    fn send_to(&self, slot: usize, frame: &Frame, wire: WireFormat) -> Result<usize>;
+    /// Block for the next inbound frame from any client.
+    fn recv_any(&self) -> Result<(Frame, usize)>;
+}
+
 /// One endpoint of an in-process link (the wire is `Vec<u8>` messages over
 /// `std::sync::mpsc` — unbounded, so single-threaded send→recv sequences
 /// never deadlock, and threaded endpoints block only on `recv`).
@@ -112,6 +126,16 @@ impl Hub {
             .map_err(|_| anyhow!("all client endpoints hung up"))?;
         let frame = decode_frame(&bytes)?;
         Ok((frame, bytes.len()))
+    }
+}
+
+impl FrameHub for Hub {
+    fn send_to(&self, slot: usize, frame: &Frame, wire: WireFormat) -> Result<usize> {
+        Hub::send_to(self, slot, frame, wire)
+    }
+
+    fn recv_any(&self) -> Result<(Frame, usize)> {
+        Hub::recv_any(self)
     }
 }
 

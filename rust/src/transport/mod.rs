@@ -32,4 +32,4 @@ pub use codec::{
     FRAME_OVERHEAD, WIRE_VERSION,
 };
 pub use encode::WireFormat;
-pub use link::{channel_pair, ChannelLink, Hub, LoopbackLink, Transport};
+pub use link::{channel_pair, ChannelLink, FrameHub, Hub, LoopbackLink, Transport};

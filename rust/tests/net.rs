@@ -1,0 +1,337 @@
+//! Networked-coordinator integration tests over real localhost TCP.
+//!
+//! The acceptance bar: a federated run served over sockets must produce a
+//! `RunReport` **byte-identical** (modulo wall-clock fields) to the same
+//! seeded spec driven in-process, with `ByteMeter` counting measured
+//! socket bytes. Plus the failure surface: refused handshakes (wire
+//! version, run id), garbage joiners, and the observer event stream.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use sfprompt::backend::{Backend, NativeBackend};
+use sfprompt::compress::Scheme;
+use sfprompt::federation::{drive, Method, NullObserver, RunReport, RunSpec};
+use sfprompt::net::{
+    self, ClientOptions, ClientSummary, ConnectOptions, Control, ServeOptions, TcpLink,
+    NET_PROTO_VERSION,
+};
+use sfprompt::transport::WireFormat;
+use sfprompt::util::json::Json;
+
+fn tiny_spec() -> RunSpec {
+    let mut spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);
+    spec.fed.rounds = 2;
+    spec.fed.num_clients = 6;
+    spec.fed.clients_per_round = 3;
+    spec.fed.local_epochs = 1;
+    spec.samples_per_client = 8;
+    spec.eval_samples = 32;
+    spec.fed.eval_limit = Some(32);
+    spec
+}
+
+fn in_process_report(spec: &RunSpec) -> RunReport {
+    let backend = NativeBackend::for_config(&spec.config).unwrap();
+    let (train, eval) = spec.datasets(&backend.manifest().config).unwrap();
+    let mut run = spec.builder().build(&backend, &train, Some(&eval)).unwrap();
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
+    RunReport::new(spec, run.setup_bytes(), hist)
+}
+
+/// Strip real-wall-time fields so reports compare exactly.
+fn strip_wall(v: &Json) -> Json {
+    match v {
+        Json::Obj(o) => Json::Obj(
+            o.iter()
+                .filter(|(k, _)| k.as_str() != "wall_s")
+                .map(|(k, x)| (k.clone(), strip_wall(x)))
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(strip_wall).collect()),
+        other => other.clone(),
+    }
+}
+
+fn test_connect() -> ConnectOptions {
+    ConnectOptions {
+        retries: 50,
+        backoff: Duration::from_millis(20),
+        io_timeout: Duration::from_secs(30),
+    }
+}
+
+fn test_serve_opts(processes: usize) -> ServeOptions {
+    ServeOptions {
+        processes,
+        run_id: "test-run".into(),
+        io_timeout: Duration::from_secs(30),
+        quiet: true,
+        ..ServeOptions::default()
+    }
+}
+
+/// Serve `spec` on an ephemeral localhost port with `processes` client
+/// threads standing in for client processes; return the server's report
+/// and every client's summary.
+fn tcp_run(spec: &RunSpec, processes: usize) -> (RunReport, Vec<ClientSummary>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let artifacts = sfprompt::artifacts_root();
+    thread::scope(|s| {
+        let server = s.spawn(|| {
+            net::serve(listener, spec, &artifacts, &test_serve_opts(processes), &mut NullObserver)
+        });
+        let clients: Vec<_> = (0..processes)
+            .map(|p| {
+                let addr = addr.clone();
+                let artifacts = artifacts.clone();
+                s.spawn(move || {
+                    let opts = ClientOptions {
+                        connect: test_connect(),
+                        name: format!("test-client-{p}"),
+                        run_id: "test-run".into(),
+                        quiet: true,
+                    };
+                    net::run_client(&addr, &artifacts, &opts)
+                })
+            })
+            .collect();
+        let report = server.join().unwrap().expect("serve failed");
+        let summaries = clients
+            .into_iter()
+            .map(|c| c.join().unwrap().expect("client failed"))
+            .collect();
+        (report, summaries)
+    })
+}
+
+#[test]
+fn tcp_loopback_report_is_byte_identical_to_in_process() {
+    let spec = tiny_spec();
+    let local = strip_wall(&in_process_report(&spec).to_json());
+    let (report, summaries) = tcp_run(&spec, 2);
+    let networked = strip_wall(&report.to_json());
+    assert_eq!(
+        networked.to_string(),
+        local.to_string(),
+        "networked RunReport must match the in-process run byte for byte"
+    );
+
+    // Cohort accounting: 2 processes split the 6 logical clients 3/3, and
+    // every selected client-round was computed by exactly one of them.
+    assert_eq!(summaries.len(), 2);
+    let mut all_ids: Vec<usize> =
+        summaries.iter().flat_map(|s| s.client_ids.iter().copied()).collect();
+    all_ids.sort_unstable();
+    assert_eq!(all_ids, (0..spec.fed.num_clients).collect::<Vec<_>>());
+    let total_participations: usize = summaries.iter().map(|s| s.rounds_participated).sum();
+    assert_eq!(total_participations, spec.fed.rounds * spec.fed.clients_per_round);
+
+    // The socket carried real traffic and the meter measured it: encoded
+    // frames for distribution + phase-2 + upload are far beyond 1 KB even
+    // on the tiny config.
+    assert!(report.history.total_comm.total() > 1024);
+}
+
+#[test]
+fn tcp_loopback_matches_in_process_with_compression_and_f16() {
+    // Error-feedback residuals live client-side; sparse wire frames cross
+    // the socket. Both must survive the process split bit-for-bit.
+    let mut spec = tiny_spec();
+    spec.fed.compress = Scheme::TopK { ratio: 0.25 };
+    spec.fed.wire = WireFormat::F16;
+    let local = strip_wall(&in_process_report(&spec).to_json());
+    let (report, _) = tcp_run(&spec, 3);
+    assert_eq!(strip_wall(&report.to_json()).to_string(), local.to_string());
+    let comm = &report.history.total_comm;
+    assert!(
+        comm.raw_total() > comm.total(),
+        "compression must show in the measured socket bytes"
+    );
+}
+
+#[test]
+fn wire_version_mismatch_is_refused_and_the_run_survives() {
+    let spec = tiny_spec();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let artifacts = sfprompt::artifacts_root();
+    thread::scope(|s| {
+        let server = s.spawn(|| {
+            net::serve(listener, &spec, &artifacts, &test_serve_opts(1), &mut NullObserver)
+        });
+
+        // A peer speaking a future codec version gets a typed refusal.
+        let mut bad = TcpLink::connect(&addr, &test_connect()).unwrap();
+        bad.send_control(&Control::Hello {
+            proto: NET_PROTO_VERSION,
+            wire: 99,
+            name: "time-traveller".into(),
+            run_id: String::new(),
+        })
+        .unwrap();
+        match bad.recv_msg(false).unwrap() {
+            Some(net::NetMsg::Control(Control::Reject { reason })) => {
+                assert!(reason.contains("wire version"), "unexpected reason: {reason}");
+            }
+            other => panic!("expected Reject, got {other:?}"),
+        }
+        drop(bad);
+
+        // The cohort slot stays open: a conforming client completes the run.
+        let good = s.spawn(|| {
+            let opts = ClientOptions {
+                connect: test_connect(),
+                name: "conformist".into(),
+                run_id: String::new(), // empty = join whatever is served
+                quiet: true,
+            };
+            net::run_client(&addr, &artifacts, &opts)
+        });
+        server.join().unwrap().expect("serve must survive a refused handshake");
+        good.join().unwrap().expect("good client must complete");
+    });
+}
+
+#[test]
+fn run_id_mismatch_is_refused_with_the_reason() {
+    let spec = tiny_spec();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let artifacts = sfprompt::artifacts_root();
+    thread::scope(|s| {
+        let server = s.spawn(|| {
+            net::serve(listener, &spec, &artifacts, &test_serve_opts(1), &mut NullObserver)
+        });
+
+        let wrong = ClientOptions {
+            connect: test_connect(),
+            name: "lost".into(),
+            run_id: "some-other-run".into(),
+            quiet: true,
+        };
+        let err = format!("{:#}", net::run_client(&addr, &artifacts, &wrong).unwrap_err());
+        assert!(err.contains("run id mismatch"), "unexpected error: {err}");
+
+        let good = s.spawn(|| {
+            let opts = ClientOptions {
+                connect: test_connect(),
+                name: "found".into(),
+                run_id: "test-run".into(),
+                quiet: true,
+            };
+            net::run_client(&addr, &artifacts, &opts)
+        });
+        server.join().unwrap().expect("serve must survive a refused client");
+        good.join().unwrap().expect("good client must complete");
+    });
+}
+
+#[test]
+fn garbage_joiner_is_rejected_without_killing_the_run() {
+    let spec = tiny_spec();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let artifacts = sfprompt::artifacts_root();
+    thread::scope(|s| {
+        let server = s.spawn(|| {
+            net::serve(listener, &spec, &artifacts, &test_serve_opts(1), &mut NullObserver)
+        });
+
+        // A complete envelope whose magic is neither "SF" nor "NC".
+        let mut garbage = TcpStream::connect(addr).unwrap();
+        let mut msg = 8u32.to_le_bytes().to_vec();
+        msg.extend_from_slice(b"XXjunk12");
+        garbage.write_all(&msg).unwrap();
+        // Server answers with a Reject and closes; we only need it to move on.
+        drop(garbage);
+
+        let good = s.spawn(|| {
+            let opts = ClientOptions {
+                connect: test_connect(),
+                name: "real".into(),
+                run_id: "test-run".into(),
+                quiet: true,
+            };
+            net::run_client(&addr.to_string(), &artifacts, &opts)
+        });
+        server.join().unwrap().expect("serve must survive a garbage joiner");
+        good.join().unwrap().expect("good client must complete");
+    });
+}
+
+#[test]
+fn observer_socket_streams_the_run_as_json_lines() {
+    let spec = tiny_spec();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let artifacts = sfprompt::artifacts_root();
+    thread::scope(|s| {
+        let server = s.spawn(|| {
+            net::serve(listener, &spec, &artifacts, &test_serve_opts(1), &mut NullObserver)
+        });
+
+        // Subscribe an observer BEFORE the client joins: its socket is
+        // accepted (and subscribed) first, so it sees the stream from
+        // run_start. After the Observe handshake the socket is read-only.
+        let mut obs_link = TcpLink::connect(&addr, &test_connect()).unwrap();
+        obs_link.send_control(&Control::Observe { proto: NET_PROTO_VERSION }).unwrap();
+        let obs_stream = obs_link.into_stream();
+        obs_stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+        let client = s.spawn(|| {
+            let opts = ClientOptions {
+                connect: test_connect(),
+                name: "worker".into(),
+                run_id: "test-run".into(),
+                quiet: true,
+            };
+            net::run_client(&addr, &artifacts, &opts)
+        });
+
+        // Server drops the sink when the run ends, closing the socket, so
+        // reading to EOF collects the complete stream.
+        let mut lines = Vec::new();
+        for line in BufReader::new(obs_stream).lines() {
+            let Ok(line) = line else { break };
+            lines.push(Json::parse(&line).expect("every event line is strict JSON"));
+        }
+        server.join().unwrap().expect("serve failed");
+        client.join().unwrap().expect("client failed");
+
+        let events: Vec<&str> =
+            lines.iter().map(|l| l.get("event").unwrap().as_str().unwrap()).collect();
+        assert_eq!(events.first(), Some(&"run_start"), "stream: {events:?}");
+        assert_eq!(events.last(), Some(&"run_end"), "stream: {events:?}");
+        let count = |kind: &str| events.iter().filter(|e| **e == kind).count();
+        assert_eq!(count("round_start"), spec.fed.rounds, "stream: {events:?}");
+        assert_eq!(count("round_end"), spec.fed.rounds, "stream: {events:?}");
+        assert_eq!(
+            lines[0].get("format").unwrap().as_str(),
+            Some("sfprompt-events"),
+            "run_start announces the stream format"
+        );
+    });
+}
+
+#[test]
+fn serve_rejects_baseline_methods_up_front() {
+    let mut spec = tiny_spec();
+    spec.method = Method::Fl;
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let err = format!(
+        "{:#}",
+        net::serve(
+            listener,
+            &spec,
+            &sfprompt::artifacts_root(),
+            &test_serve_opts(1),
+            &mut NullObserver,
+        )
+        .unwrap_err()
+    );
+    assert!(err.contains("sfprompt method only"), "unexpected error: {err}");
+}

@@ -681,3 +681,159 @@ fn prop_deadline_resolution_invariants() {
         );
     }
 }
+
+// ---------------------------------------------------------------- net envelope
+
+/// A reader that delivers a byte stream in arbitrary caller-chosen chunk
+/// sizes — TCP segmentation without a socket.
+struct Segmented {
+    data: Vec<u8>,
+    pos: usize,
+    sizes: Vec<usize>,
+    next: usize,
+}
+
+impl std::io::Read for Segmented {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let want = *self.sizes.get(self.next).unwrap_or(&usize::MAX);
+        self.next += 1;
+        let n = want.min(buf.len()).min(self.data.len() - self.pos).max(1);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn prop_net_stream_reassembles_any_message_mix_under_any_segmentation() {
+    // Any interleaving of codec data frames and control messages on one
+    // byte stream, delivered in adversarial chunk sizes, must come back
+    // exactly — same messages, same order, same wire byte counts.
+    use sfprompt::net::wire::{control_bytes, read_message};
+    use sfprompt::net::{Control, NetMsg, NET_PROTO_VERSION};
+    use sfprompt::transport::WIRE_VERSION;
+
+    enum Expect {
+        Frame(Frame, usize),
+        Control(String, usize),
+    }
+
+    let mut rng = Rng::new(109);
+    for case in 0..CASES / 4 {
+        let n_msgs = 1 + rng.below(6);
+        let mut stream = Vec::new();
+        let mut expect = Vec::new();
+        for _ in 0..n_msgs {
+            if rng.uniform() < 0.5 {
+                let frame = random_frame(&mut rng, 2.0);
+                let wire = [WireFormat::F32, WireFormat::F16][rng.below(2)];
+                let bytes = encode_frame(&frame, wire).unwrap();
+                // The codec may transform the payload (f16, int8), so the
+                // expectation is the decode of the exact encoded bytes.
+                let decoded = decode_frame(&bytes).unwrap();
+                expect.push(Expect::Frame(decoded, bytes.len()));
+                stream.extend_from_slice(&bytes);
+            } else {
+                let c = match rng.below(4) {
+                    0 => Control::Hello {
+                        proto: NET_PROTO_VERSION,
+                        wire: WIRE_VERSION,
+                        name: format!("peer-{}", rng.below(100)),
+                        run_id: format!("run-{}", rng.below(10)),
+                    },
+                    1 => Control::Reject { reason: "no".repeat(rng.below(40)) },
+                    2 => Control::RoundReport {
+                        round: rng.below(1 << 16) as u32,
+                        client: rng.below(1 << 10) as u32,
+                        local_losses: (0..rng.below(5))
+                            .map(|_| f64::from_bits(rng.next_u64()))
+                            .collect(),
+                        split_losses: (0..rng.below(5))
+                            .map(|_| f64::from_bits(rng.next_u64()))
+                            .collect(),
+                    },
+                    _ => Control::Shutdown { reason: "bye".into() },
+                };
+                let bytes = control_bytes(&c);
+                expect.push(Expect::Control(c.to_json().to_string(), bytes.len()));
+                stream.extend_from_slice(&bytes);
+            }
+        }
+        // Adversarial segmentation: many tiny chunks, then whatever is left.
+        let sizes: Vec<usize> = (0..rng.below(200)).map(|_| 1 + rng.below(7)).collect();
+        let mut r = Segmented { data: stream, pos: 0, sizes, next: 0 };
+        for (i, want) in expect.iter().enumerate() {
+            let got = read_message(&mut r, false)
+                .unwrap_or_else(|e| panic!("case {case} msg {i}: {e}"))
+                .expect("idle_ok=false never yields None");
+            match (got, want) {
+                (NetMsg::Frame(f, n), Expect::Frame(wf, wn)) => {
+                    assert_eq!(&f, wf, "case {case} msg {i}: frame mismatch");
+                    assert_eq!(n, *wn, "case {case} msg {i}: frame byte count");
+                }
+                (NetMsg::Control(c, n), Expect::Control(wj, wn)) => {
+                    assert_eq!(c.to_json().to_string(), *wj, "case {case} msg {i}");
+                    assert_eq!(n, *wn, "case {case} msg {i}: control byte count");
+                }
+                (got, _) => panic!("case {case} msg {i}: kind flipped ({got:?})"),
+            }
+        }
+        // Stream fully consumed: one more read is a clean Closed.
+        assert!(read_message(&mut r, false).is_err(), "case {case}: trailing bytes");
+    }
+}
+
+#[test]
+fn prop_round_report_losses_roundtrip_bit_exact_through_the_envelope() {
+    // Loss vectors ride the control plane as hex bit patterns; every f64 —
+    // NaNs with payloads, infinities, subnormals, -0.0 — must survive the
+    // envelope bit-for-bit (the loopback report equality depends on it).
+    use sfprompt::net::wire::{control_bytes, read_message};
+    use sfprompt::net::{Control, NetMsg};
+
+    let mut rng = Rng::new(110);
+    for case in 0..CASES {
+        let weird = [
+            0.0f64.to_bits(),
+            (-0.0f64).to_bits(),
+            f64::NAN.to_bits(),
+            f64::NAN.to_bits() | 0xdead,
+            f64::INFINITY.to_bits(),
+            f64::NEG_INFINITY.to_bits(),
+            f64::MIN_POSITIVE.to_bits(),
+            1u64, // smallest subnormal
+        ];
+        let gen_bits = |rng: &mut Rng| {
+            if rng.uniform() < 0.3 {
+                weird[rng.below(weird.len())]
+            } else {
+                rng.next_u64()
+            }
+        };
+        let local: Vec<u64> = (0..1 + rng.below(8)).map(|_| gen_bits(&mut rng)).collect();
+        let split: Vec<u64> = (0..1 + rng.below(8)).map(|_| gen_bits(&mut rng)).collect();
+        let c = Control::RoundReport {
+            round: case as u32,
+            client: rng.below(1 << 20) as u32,
+            local_losses: local.iter().map(|&b| f64::from_bits(b)).collect(),
+            split_losses: split.iter().map(|&b| f64::from_bits(b)).collect(),
+        };
+        let bytes = control_bytes(&c);
+        let mut r = Segmented { data: bytes, pos: 0, sizes: vec![3; 4096], next: 0 };
+        match read_message(&mut r, false).unwrap().unwrap() {
+            NetMsg::Control(
+                Control::RoundReport { local_losses, split_losses, .. },
+                _,
+            ) => {
+                let got_local: Vec<u64> = local_losses.iter().map(|v| v.to_bits()).collect();
+                let got_split: Vec<u64> = split_losses.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got_local, local, "case {case}: local loss bits drifted");
+                assert_eq!(got_split, split, "case {case}: split loss bits drifted");
+            }
+            other => panic!("case {case}: expected a round report, got {other:?}"),
+        }
+    }
+}
