@@ -5,7 +5,10 @@
 //! present (probed with one head_forward call; skipped cleanly offline).
 //!
 //! Backs Table 2's computational-burden column with measured per-stage
-//! times, and is the L3 profile used in EXPERIMENTS.md §Perf.
+//! times, and is the L3 profile used in EXPERIMENTS.md §Perf. Also emits
+//! `kernel/*` rows comparing the blocked GEMM against the scalar
+//! reference (`math::reference`) across pool thread counts — the speedup
+//! story recorded in BENCH_stages.json (docs/PERF.md).
 
 #[path = "harness.rs"]
 mod harness;
@@ -13,10 +16,46 @@ mod harness;
 use std::collections::BTreeMap;
 
 use harness::Bench;
+use sfprompt::backend::native::{math, pool};
 use sfprompt::backend::{run_stage_hosts, Backend, NativeBackend, PjrtBackend};
 use sfprompt::data::{make_batch, synth, SynthDataset};
 use sfprompt::model::{init_params, ParamSet, SegmentParams};
 use sfprompt::runtime::HostTensor;
+use sfprompt::util::rng::Rng;
+
+/// Blocked-vs-scalar GEMM comparison at ViT-typical shapes, plus a thread
+/// sweep over the pooled blocked kernel. These are the microkernels behind
+/// every stage time below; the `scalar` rows are the pre-blocking baseline
+/// (`math::reference`), kept as the speedup denominator in BENCH_stages.
+fn bench_kernels() {
+    println!("\n== kernels: blocked vs scalar reference ==");
+    // (label, m, k, n): token-rows × dim GEMMs as the attention/MLP
+    // projections see them on the `small` config, plus the skinny
+    // classifier head.
+    let shapes: [(&str, usize, usize, usize); 3] = [
+        ("qkv 256x128x384", 256, 128, 384),
+        ("mlp 256x128x512", 256, 128, 512),
+        ("logits 64x128x10", 64, 128, 10),
+    ];
+    let mut rng = Rng::new(3);
+    let mut sink = 0.0f32;
+    for (label, m, k, n) in shapes {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        pool::set_threads(1);
+        Bench::new(&format!("kernel/scalar/{label}")).run(|| {
+            sink += math::reference::matmul(&a, &b, m, k, n)[0];
+        });
+        for threads in [1usize, 2, 4] {
+            pool::set_threads(threads);
+            Bench::new(&format!("kernel/blocked-{threads}t/{label}")).run(|| {
+                sink += math::matmul(&a, &b, m, k, n)[0];
+            });
+        }
+        pool::set_threads(0);
+    }
+    assert!(sink.is_finite());
+}
 
 fn bench_backend(backend: &dyn Backend, label: &str) {
     let cfg = backend.manifest().config.clone();
@@ -136,6 +175,7 @@ fn bench_backend(backend: &dyn Backend, label: &str) {
 
 fn main() {
     println!("stage-execution benches (native kernels; PJRT when available)");
+    bench_kernels();
     for config in ["tiny", "small"] {
         let native = NativeBackend::for_config(config).unwrap();
         bench_backend(&native, &format!("native/{config}"));

@@ -85,6 +85,27 @@ fn main() {
         });
     }
 
+    // Kernel-pool dispatch overhead: the same trivial row fill inline
+    // (threads=1 short-circuits to the calling thread) vs spawned across
+    // scoped workers — the fixed cost every parallel kernel call pays.
+    {
+        use sfprompt::backend::native::pool;
+        let mut out = vec![0.0f32; 64 * 1024];
+        for threads in [1usize, 4] {
+            pool::set_threads(threads);
+            Bench::new(&format!("pool/dispatch 64k rows {threads}t")).run(|| {
+                pool::run_rows1(64 * 1024, 1, &mut out, |row0, nrows, chunk| {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v = (row0 + i) as f32 * 0.5;
+                    }
+                    let _ = nrows;
+                });
+            });
+        }
+        pool::set_threads(0);
+        std::hint::black_box(&out);
+    }
+
     // RNG throughput.
     {
         let r = Bench::new("rng/normal 1M draws").run(|| {

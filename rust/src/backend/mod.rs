@@ -84,9 +84,70 @@ pub struct PreparedSegment {
 pub(crate) enum PreparedRepr {
     /// Host-side parameters (the native engine computes on these directly).
     Host(SegmentParams),
+    /// Host-side parameters with f32 tensors stored as f16 bit patterns —
+    /// half the resident bytes for the frozen majority of the model,
+    /// decoded back to f32 on every use (kernels always compute in f32).
+    HostF16(F16Segment),
     /// Pre-converted PJRT literals (the PJRT executor feeds these straight
     /// into `execute` without re-converting every call).
     Literals(Vec<xla::Literal>),
+}
+
+/// A segment's tensors with f32 payloads packed to f16 (i32 kept raw).
+pub(crate) struct F16Segment {
+    pub(crate) segment: String,
+    pub(crate) tensors: Vec<F16Tensor>,
+}
+
+pub(crate) enum F16Tensor {
+    F16 { shape: Vec<usize>, bits: Vec<u16> },
+    Raw(HostTensor),
+}
+
+impl F16Segment {
+    pub(crate) fn encode(params: &SegmentParams) -> F16Segment {
+        use crate::runtime::tensor::Dtype;
+        use crate::transport::encode::f32_to_f16_bits;
+        let tensors = params
+            .tensors
+            .iter()
+            .map(|t| match t.dtype() {
+                Dtype::F32 => F16Tensor::F16 {
+                    shape: t.shape.clone(),
+                    bits: t.as_f32().iter().map(|&x| f32_to_f16_bits(x)).collect(),
+                },
+                Dtype::I32 => F16Tensor::Raw(t.clone()),
+            })
+            .collect();
+        F16Segment { segment: params.segment.clone(), tensors }
+    }
+
+    pub(crate) fn decode(&self) -> SegmentParams {
+        use crate::transport::encode::f16_bits_to_f32;
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|t| match t {
+                F16Tensor::F16 { shape, bits } => HostTensor::f32(
+                    shape.clone(),
+                    bits.iter().map(|&h| f16_bits_to_f32(h)).collect(),
+                ),
+                F16Tensor::Raw(raw) => raw.clone(),
+            })
+            .collect();
+        SegmentParams { segment: self.segment.clone(), tensors }
+    }
+
+    /// Resident payload bytes (2 per f16 element, 4 per raw element).
+    pub(crate) fn size_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .map(|t| match t {
+                F16Tensor::F16 { bits, .. } => bits.len() * 2,
+                F16Tensor::Raw(raw) => raw.size_bytes(),
+            })
+            .sum()
+    }
 }
 
 /// A segment input to a stage: plain host parameters (converted per call)
@@ -129,6 +190,23 @@ pub trait Backend: Sync {
         tensors: &TensorInputs,
     ) -> Result<StageOutputs>;
 
+    /// Run `stage` once per tensor-input set, sharing the segment inputs.
+    ///
+    /// Outputs are index-aligned with `tensor_sets` and must be
+    /// bit-identical to running each set alone through [`Backend::run_stage`].
+    /// The default runs the sets sequentially; a backend may override it to
+    /// fuse shape-compatible sets into one batched kernel invocation (the
+    /// native engine coalesces Phase-2 `body_forward`/`body_backward` this
+    /// way — see `NativeBackend`).
+    fn run_stage_batch(
+        &self,
+        stage: &str,
+        segments: &SegmentInputs,
+        tensor_sets: &[TensorInputs],
+    ) -> Result<Vec<StageOutputs>> {
+        tensor_sets.iter().map(|t| self.run_stage(stage, segments, t)).collect()
+    }
+
     /// Prepare a set of stages for execution ahead of timed runs (PJRT
     /// pre-compiles executables; the native engine has nothing to warm).
     fn warm(&self, _stages: &[&str]) -> Result<()> {
@@ -161,6 +239,10 @@ pub enum BackendChoice {
     /// Pure-Rust ViT kernel engine over a synthesized in-memory manifest.
     #[default]
     Native,
+    /// [`BackendChoice::Native`] with frozen prepared segments packed to
+    /// f16 (decode-on-use — halves resident bytes for the untrained
+    /// majority of the model; frozen weights round through f16 once).
+    NativeF16,
     /// PJRT executables from on-disk `artifacts/<config>/`.
     Pjrt,
 }
@@ -169,6 +251,7 @@ impl BackendChoice {
     pub fn label(self) -> &'static str {
         match self {
             BackendChoice::Native => "native",
+            BackendChoice::NativeF16 => "native_f16",
             BackendChoice::Pjrt => "pjrt",
         }
     }
@@ -176,8 +259,9 @@ impl BackendChoice {
     pub fn parse(s: &str) -> Result<BackendChoice> {
         Ok(match s {
             "native" => BackendChoice::Native,
+            "native_f16" => BackendChoice::NativeF16,
             "pjrt" => BackendChoice::Pjrt,
-            other => bail!("unknown backend {other:?} (known: native pjrt)"),
+            other => bail!("unknown backend {other:?} (known: native native_f16 pjrt)"),
         })
     }
 }
@@ -195,6 +279,9 @@ pub fn open_backend(
 ) -> Result<Box<dyn Backend>> {
     Ok(match choice {
         BackendChoice::Native => Box::new(NativeBackend::for_config(config)?),
+        BackendChoice::NativeF16 => {
+            Box::new(NativeBackend::for_config(config)?.with_frozen_f16(true))
+        }
         BackendChoice::Pjrt => Box::new(PjrtBackend::open(artifacts_root, config)?),
     })
 }
@@ -204,11 +291,63 @@ mod tests {
     use super::*;
 
     #[test]
+    fn f16_segments_halve_f32_bytes_and_roundtrip_representable_values() {
+        let params = SegmentParams {
+            segment: "head".into(),
+            tensors: vec![
+                // Values exactly representable in f16 must survive the trip.
+                HostTensor::f32(vec![2, 2], vec![0.0, 1.0, -0.5, 0.25]),
+                HostTensor::i32(vec![3], vec![1, -2, 3]),
+            ],
+        };
+        let packed = F16Segment::encode(&params);
+        assert_eq!(packed.size_bytes(), 4 * 2 + 3 * 4);
+        assert_eq!(params.size_bytes(), 4 * 4 + 3 * 4);
+        let back = packed.decode();
+        assert_eq!(back, params);
+    }
+
+    #[test]
+    fn default_run_stage_batch_matches_sequential_run_stage() {
+        use crate::model::init_params;
+        let be = NativeBackend::tiny();
+        let cfg = be.manifest().config.clone();
+        let params = init_params(be.manifest(), 7);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n = cfg.batch * cfg.seq_len * cfg.dim;
+        let mk = |rng: &mut crate::util::rng::Rng| {
+            HostTensor::f32(
+                vec![cfg.batch, cfg.seq_len, cfg.dim],
+                (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+            )
+        };
+        let (s0, s1) = (mk(&mut rng), mk(&mut rng));
+        let body = params.get("body").unwrap();
+        let segs: SegmentInputs = [("body", SegInput::Host(body))].into_iter().collect();
+        let sets: Vec<TensorInputs> = [&s0, &s1]
+            .iter()
+            .map(|s| [("smashed", &**s)].into_iter().collect())
+            .collect();
+        let batched = be.run_stage_batch("body_forward", &segs, &sets).unwrap();
+        assert_eq!(batched.len(), 2);
+        for (set, out) in sets.iter().zip(&batched) {
+            let solo = be.run_stage("body_forward", &segs, set).unwrap();
+            assert_eq!(
+                solo.tensor("body_out").unwrap(),
+                out.tensor("body_out").unwrap(),
+                "batched output must be bit-identical to the solo run"
+            );
+        }
+    }
+
+    #[test]
     fn backend_choice_parses_and_labels() {
         assert_eq!(BackendChoice::parse("native").unwrap(), BackendChoice::Native);
+        assert_eq!(BackendChoice::parse("native_f16").unwrap(), BackendChoice::NativeF16);
         assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
         assert!(BackendChoice::parse("cuda").is_err());
         assert_eq!(BackendChoice::default().label(), "native");
+        assert_eq!(BackendChoice::NativeF16.label(), "native_f16");
         assert_eq!(BackendChoice::Pjrt.label(), "pjrt");
     }
 }

@@ -8,6 +8,20 @@
 //! `[R, D]` flattens `[B, T, D]` with `R = B*T`; LayerNorm eps matches the
 //! Pallas kernel (1e-6); GELU is the tanh approximation (`jax.nn.gelu`
 //! default).
+//!
+//! ## Blocking and parallelism (docs/PERF.md)
+//!
+//! The matmuls are cache-blocked (packed/transposed-B operand, `TILE_J`
+//! column tiles, a 4-wide dot-product microkernel) and every row-wise
+//! kernel is partitioned over [`pool`] workers. The contract throughout:
+//! **the f32 reduction order per output element is exactly the naive
+//! reference order** ([`reference`] keeps those loops as the oracle), so
+//! blocked + parallel results are byte-identical to the scalar kernels at
+//! any thread count. Blocking tiles outputs, never the k-reduction;
+//! parallelism partitions outputs, never a reduction axis (row reductions
+//! like [`col_sums`] and the LayerNorm parameter grads stay sequential).
+
+use super::pool;
 
 /// LayerNorm epsilon (python/compile/kernels/layernorm.py).
 pub const LN_EPS: f32 = 1e-6;
@@ -15,68 +29,182 @@ pub const LN_EPS: f32 = 1e-6;
 const GELU_C: f32 = 0.797_884_6; // sqrt(2/pi)
 const GELU_A: f32 = 0.044_715;
 
-/// `out[m,n] = a[m,k] @ b[k,n]`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+/// Packed-B columns per cache tile: a tile is `TILE_J * k` floats of the
+/// packed operand, sized to stay L1/L2-resident while every row of `a`
+/// streams over it.
+const TILE_J: usize = 64;
+
+/// The original naive triple-nested kernels, kept verbatim as the
+/// bit-exactness oracle for the parity tests and the scalar baseline for
+/// the blocked-vs-scalar benches. Not used on the hot path.
+pub mod reference {
+    /// `out[m,n] = a[m,k] @ b[k,n]`.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
+        out
     }
+
+    /// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (weight gradients: x·dy).
+    pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        let mut out = vec![0.0f32; k * n];
+        for r in 0..m {
+            let arow = &a[r * k..(r + 1) * k];
+            let brow = &b[r * n..(r + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                let orow = &mut out[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (input gradients: dy·Wᵀ; scores).
+    pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * k];
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            for j in 0..k {
+                let brow = &b[j * n..(j + 1) * n];
+                out[i * k + j] = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+            }
+        }
+        out
+    }
+}
+
+/// `bt[j*rows + p] = b[p*cols + j]` — pack `b [rows, cols]` transposed so
+/// every dot product reads both operands with unit stride.
+fn transpose(b: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut bt = vec![0.0f32; rows * cols];
+    for p in 0..rows {
+        let brow = &b[p * cols..(p + 1) * cols];
+        for (j, &v) in brow.iter().enumerate() {
+            bt[j * rows + p] = v;
+        }
+    }
+    bt
+}
+
+/// Shared blocked inner loop: `out[m, nn]` of dot products between rows of
+/// `a [m, kk]` and rows of `bt [nn, kk]`. Row-parallel over `m`, column
+/// tiles of `TILE_J` packed rows, and a 4-wide microkernel (four output
+/// accumulators share one pass over `arow`). Each output element is one
+/// sequential k-ascending accumulation — bit-identical to the reference.
+fn matmul_packed(a: &[f32], bt: &[f32], m: usize, kk: usize, nn: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * kk);
+    debug_assert_eq!(bt.len(), nn * kk);
+    let mut out = vec![0.0f32; m * nn];
+    pool::run_rows1(m, nn, &mut out, |i0, rows, chunk| {
+        for j0 in (0..nn).step_by(TILE_J) {
+            let jb = TILE_J.min(nn - j0);
+            for i in 0..rows {
+                let arow = &a[(i0 + i) * kk..(i0 + i + 1) * kk];
+                let orow = &mut chunk[i * nn..(i + 1) * nn];
+                let mut j = j0;
+                while j + 4 <= j0 + jb {
+                    let b0 = &bt[j * kk..(j + 1) * kk];
+                    let b1 = &bt[(j + 1) * kk..(j + 2) * kk];
+                    let b2 = &bt[(j + 2) * kk..(j + 3) * kk];
+                    let b3 = &bt[(j + 3) * kk..(j + 4) * kk];
+                    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                    for ((((&av, &v0), &v1), &v2), &v3) in
+                        arow.iter().zip(b0).zip(b1).zip(b2).zip(b3)
+                    {
+                        s0 += av * v0;
+                        s1 += av * v1;
+                        s2 += av * v2;
+                        s3 += av * v3;
+                    }
+                    orow[j] = s0;
+                    orow[j + 1] = s1;
+                    orow[j + 2] = s2;
+                    orow[j + 3] = s3;
+                    j += 4;
+                }
+                while j < j0 + jb {
+                    let brow = &bt[j * kk..(j + 1) * kk];
+                    orow[j] = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
+                    j += 1;
+                }
+            }
+        }
+    });
     out
 }
 
-/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (weight gradients: x·dy).
+/// `out[m,n] = a[m,k] @ b[k,n]`. Packs `b` transposed once, then runs the
+/// blocked row-parallel inner loop.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let bt = transpose(b, k, n);
+    matmul_packed(a, &bt, m, k, n)
+}
+
+/// `out[k,n] = a[m,k]ᵀ @ b[m,n]` (weight gradients: x·dy). Parallel over
+/// the `k` **output** rows; the m-reduction stays a single ascending loop
+/// per element, exactly the reference order.
 pub fn matmul_at_b(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
     let mut out = vec![0.0f32; k * n];
-    for r in 0..m {
-        let arow = &a[r * k..(r + 1) * k];
-        let brow = &b[r * n..(r + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            let orow = &mut out[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    pool::run_rows1(k, n, &mut out, |p0, prows, chunk| {
+        for r in 0..m {
+            let arow = &a[r * k + p0..r * k + p0 + prows];
+            let brow = &b[r * n..(r + 1) * n];
+            for (pi, &av) in arow.iter().enumerate() {
+                let orow = &mut chunk[pi * n..(pi + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
-    }
+    });
     out
 }
 
-/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (input gradients: dy·Wᵀ; attention scores).
+/// `out[m,k] = a[m,n] @ b[k,n]ᵀ` (input gradients: dy·Wᵀ; attention
+/// scores). `b` is already in packed (row-per-output) layout, so this is
+/// the blocked inner loop directly.
 pub fn matmul_a_bt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for j in 0..k {
-            let brow = &b[j * n..(j + 1) * n];
-            out[i * k + j] = arow.iter().zip(brow).map(|(&x, &y)| x * y).sum();
-        }
-    }
-    out
+    matmul_packed(a, b, m, n, k)
 }
 
-/// `x[r, :] += bias` for every row.
+/// `x[r, :] += bias` for every row (row-parallel; elementwise).
 pub fn add_bias(x: &mut [f32], bias: &[f32]) {
     let n = bias.len();
-    for row in x.chunks_mut(n) {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v += b;
+    let rows = x.len() / n;
+    pool::run_rows1(rows, n, x, |_r0, nr, chunk| {
+        for row in chunk.chunks_mut(n).take(nr) {
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
         }
-    }
+    });
 }
 
-/// Column sums: `out[n] = Σ_r g[r, n]` (bias gradients).
+/// Column sums: `out[n] = Σ_r g[r, n]` (bias gradients). A row reduction —
+/// kept sequential so the accumulation order matches the reference.
 pub fn col_sums(g: &[f32], n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; n];
     for row in g.chunks(n) {
@@ -95,29 +223,37 @@ pub struct LnCache {
     pub inv: Vec<f32>,
 }
 
-/// LayerNorm over the last axis: `y = xhat * scale + bias`.
+/// LayerNorm over the last axis: `y = xhat * scale + bias` (row-parallel;
+/// the mean/var reductions are within-row and keep their order).
 pub fn layernorm_fwd(x: &[f32], scale: &[f32], bias: &[f32]) -> (Vec<f32>, LnCache) {
     let d = scale.len();
     let rows = x.len() / d;
     let mut y = vec![0.0f32; x.len()];
     let mut xhat = vec![0.0f32; x.len()];
     let mut inv = vec![0.0f32; rows];
-    for r in 0..rows {
-        let xr = &x[r * d..(r + 1) * d];
-        let mean = xr.iter().sum::<f32>() / d as f32;
-        let var = xr.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
-        let iv = 1.0 / (var + LN_EPS).sqrt();
-        inv[r] = iv;
-        for i in 0..d {
-            let xh = (xr[i] - mean) * iv;
-            xhat[r * d + i] = xh;
-            y[r * d + i] = xh * scale[i] + bias[i];
+    pool::run_rows(rows, vec![&mut y, &mut xhat, &mut inv], &[d, d, 1], |r0, nr, bufs| {
+        let (yc, rest) = bufs.split_first_mut().unwrap();
+        let (xc, rest) = rest.split_first_mut().unwrap();
+        let ic = &mut rest[0];
+        for ri in 0..nr {
+            let xr = &x[(r0 + ri) * d..(r0 + ri + 1) * d];
+            let mean = xr.iter().sum::<f32>() / d as f32;
+            let var = xr.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            let iv = 1.0 / (var + LN_EPS).sqrt();
+            ic[ri] = iv;
+            for i in 0..d {
+                let xh = (xr[i] - mean) * iv;
+                xc[ri * d + i] = xh;
+                yc[ri * d + i] = xh * scale[i] + bias[i];
+            }
         }
-    }
+    });
     (y, LnCache { xhat, inv })
 }
 
-/// LayerNorm VJP. Returns `(dx, dscale, dbias)`.
+/// LayerNorm VJP. Returns `(dx, dscale, dbias)`. `dx` is row-parallel;
+/// the parameter gradients reduce **over** rows, so that pass stays
+/// sequential (row-ascending, the reference order).
 pub fn layernorm_bwd(
     g: &[f32],
     scale: &[f32],
@@ -126,74 +262,97 @@ pub fn layernorm_bwd(
     let d = scale.len();
     let rows = g.len() / d;
     let mut dx = vec![0.0f32; g.len()];
+    pool::run_rows1(rows, d, &mut dx, |r0, nr, chunk| {
+        for ri in 0..nr {
+            let r = r0 + ri;
+            let gr = &g[r * d..(r + 1) * d];
+            let xh = &cache.xhat[r * d..(r + 1) * d];
+            let iv = cache.inv[r];
+            let mut m1 = 0.0f32; // mean of dxhat
+            let mut m2 = 0.0f32; // mean of dxhat * xhat
+            for i in 0..d {
+                let dxh = gr[i] * scale[i];
+                m1 += dxh;
+                m2 += dxh * xh[i];
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            let out = &mut chunk[ri * d..(ri + 1) * d];
+            for i in 0..d {
+                let dxh = gr[i] * scale[i];
+                out[i] = iv * (dxh - m1 - xh[i] * m2);
+            }
+        }
+    });
     let mut dscale = vec![0.0f32; d];
     let mut dbias = vec![0.0f32; d];
     for r in 0..rows {
         let gr = &g[r * d..(r + 1) * d];
         let xh = &cache.xhat[r * d..(r + 1) * d];
-        let iv = cache.inv[r];
-        let mut m1 = 0.0f32; // mean of dxhat
-        let mut m2 = 0.0f32; // mean of dxhat * xhat
         for i in 0..d {
-            let dxh = gr[i] * scale[i];
-            m1 += dxh;
-            m2 += dxh * xh[i];
             dscale[i] += gr[i] * xh[i];
             dbias[i] += gr[i];
-        }
-        m1 /= d as f32;
-        m2 /= d as f32;
-        for i in 0..d {
-            let dxh = gr[i] * scale[i];
-            dx[r * d + i] = iv * (dxh - m1 - xh[i] * m2);
         }
     }
     (dx, dscale, dbias)
 }
 
 /// tanh-GELU forward; returns `(gelu(x), tanh(inner))` — the tanh values
-/// are the only cache the backward needs besides `x` itself.
+/// are the only cache the backward needs besides `x` itself. Elementwise,
+/// partitioned over the pool.
 pub fn gelu_fwd(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
     let mut y = vec![0.0f32; x.len()];
     let mut t = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let v = x[i];
-        let th = (GELU_C * (v + GELU_A * v * v * v)).tanh();
-        t[i] = th;
-        y[i] = 0.5 * v * (1.0 + th);
-    }
+    pool::run_rows(x.len(), vec![&mut y, &mut t], &[1, 1], |i0, n, bufs| {
+        let (yc, rest) = bufs.split_first_mut().unwrap();
+        let tc = &mut rest[0];
+        for i in 0..n {
+            let v = x[i0 + i];
+            let th = (GELU_C * (v + GELU_A * v * v * v)).tanh();
+            tc[i] = th;
+            yc[i] = 0.5 * v * (1.0 + th);
+        }
+    });
     (y, t)
 }
 
-/// tanh-GELU VJP: `g * gelu'(x)`.
+/// tanh-GELU VJP: `g * gelu'(x)` (elementwise, partitioned).
 pub fn gelu_bwd(g: &[f32], x: &[f32], t: &[f32]) -> Vec<f32> {
     let mut dx = vec![0.0f32; x.len()];
-    for i in 0..x.len() {
-        let (v, th) = (x[i], t[i]);
-        let di = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-        dx[i] = g[i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * di);
-    }
+    pool::run_rows1(x.len(), 1, &mut dx, |i0, n, chunk| {
+        for i in 0..n {
+            let (v, th) = (x[i0 + i], t[i0 + i]);
+            let di = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+            chunk[i] = g[i0 + i] * (0.5 * (1.0 + th) + 0.5 * v * (1.0 - th * th) * di);
+        }
+    });
     dx
 }
 
-/// Numerically stable row softmax over `[rows, n]`, in place.
+/// Numerically stable row softmax over `[rows, n]`, in place
+/// (row-parallel; the max/sum reductions are within-row).
 pub fn softmax_rows(x: &mut [f32], n: usize) {
-    for row in x.chunks_mut(n) {
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for v in row.iter_mut() {
-            *v = (*v - m).exp();
-            sum += *v;
+    let rows = x.len() / n.max(1);
+    pool::run_rows1(rows, n, x, |_r0, nr, chunk| {
+        for row in chunk.chunks_mut(n).take(nr) {
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
         }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
-    }
+    });
 }
 
 /// Scaled-dot-product attention forward over `[B, H, T, Dh]` tensors.
 /// Returns the output (same shape) and the softmax probabilities
-/// `[B, H, T, T]` the backward re-uses.
+/// `[B, H, T, T]` the backward re-uses. Parallel over the `B*H` tiles;
+/// the per-tile matmuls run inline on the owning worker (pool nesting
+/// collapses to serial), so each tile is computed exactly as before.
 pub fn attention_fwd(
     q: &[f32],
     k: &[f32],
@@ -205,23 +364,29 @@ pub fn attention_fwd(
     let scale = 1.0 / (dh as f32).sqrt();
     let mut out = vec![0.0f32; bh * t * dh];
     let mut probs = vec![0.0f32; bh * t * t];
-    for i in 0..bh {
-        let qt = &q[i * t * dh..(i + 1) * t * dh];
-        let kt = &k[i * t * dh..(i + 1) * t * dh];
-        let vt = &v[i * t * dh..(i + 1) * t * dh];
-        let mut s = matmul_a_bt(qt, kt, t, dh, t);
-        for x in s.iter_mut() {
-            *x *= scale;
+    pool::run_rows(bh, vec![&mut out, &mut probs], &[t * dh, t * t], |i0, n, bufs| {
+        let (oc, rest) = bufs.split_first_mut().unwrap();
+        let pc = &mut rest[0];
+        for ii in 0..n {
+            let i = i0 + ii;
+            let qt = &q[i * t * dh..(i + 1) * t * dh];
+            let kt = &k[i * t * dh..(i + 1) * t * dh];
+            let vt = &v[i * t * dh..(i + 1) * t * dh];
+            let mut s = matmul_a_bt(qt, kt, t, dh, t);
+            for x in s.iter_mut() {
+                *x *= scale;
+            }
+            softmax_rows(&mut s, t);
+            let o = matmul(&s, vt, t, t, dh);
+            oc[ii * t * dh..(ii + 1) * t * dh].copy_from_slice(&o);
+            pc[ii * t * t..(ii + 1) * t * t].copy_from_slice(&s);
         }
-        softmax_rows(&mut s, t);
-        let o = matmul(&s, vt, t, t, dh);
-        out[i * t * dh..(i + 1) * t * dh].copy_from_slice(&o);
-        probs[i * t * t..(i + 1) * t * t].copy_from_slice(&s);
-    }
+    });
     (out, probs)
 }
 
-/// Attention VJP. Returns `(dq, dk, dv)`, each `[B, H, T, Dh]`.
+/// Attention VJP. Returns `(dq, dk, dv)`, each `[B, H, T, Dh]` (parallel
+/// over the `B*H` tiles, like the forward).
 #[allow(clippy::too_many_arguments)]
 pub fn attention_bwd(
     g: &[f32],
@@ -237,34 +402,42 @@ pub fn attention_bwd(
     let mut dq = vec![0.0f32; bh * t * dh];
     let mut dk = vec![0.0f32; bh * t * dh];
     let mut dv = vec![0.0f32; bh * t * dh];
-    for i in 0..bh {
-        let span = i * t * dh..(i + 1) * t * dh;
-        let (gt, qt, kt, vt) = (&g[span.clone()], &q[span.clone()], &k[span.clone()], &v[span.clone()]);
-        let p = &probs[i * t * t..(i + 1) * t * t];
-        // dv = Pᵀ @ g
-        dv[span.clone()].copy_from_slice(&matmul_at_b(p, gt, t, t, dh));
-        // dP = g @ vᵀ ; dS = P ⊙ (dP − rowsum(dP ⊙ P))
-        let mut ds = matmul_a_bt(gt, vt, t, dh, t);
-        for r in 0..t {
-            let row = &mut ds[r * t..(r + 1) * t];
-            let pr = &p[r * t..(r + 1) * t];
-            let dot: f32 = row.iter().zip(pr).map(|(&a, &b)| a * b).sum();
-            for (x, &pv) in row.iter_mut().zip(pr) {
-                *x = pv * (*x - dot);
+    let w = t * dh;
+    pool::run_rows(bh, vec![&mut dq, &mut dk, &mut dv], &[w, w, w], |i0, n, bufs| {
+        let (dqc, rest) = bufs.split_first_mut().unwrap();
+        let (dkc, rest) = rest.split_first_mut().unwrap();
+        let dvc = &mut rest[0];
+        for ii in 0..n {
+            let i = i0 + ii;
+            let span = i * w..(i + 1) * w;
+            let (gt, qt, kt, vt) =
+                (&g[span.clone()], &q[span.clone()], &k[span.clone()], &v[span]);
+            let p = &probs[i * t * t..(i + 1) * t * t];
+            // dv = Pᵀ @ g
+            dvc[ii * w..(ii + 1) * w].copy_from_slice(&matmul_at_b(p, gt, t, t, dh));
+            // dP = g @ vᵀ ; dS = P ⊙ (dP − rowsum(dP ⊙ P))
+            let mut ds = matmul_a_bt(gt, vt, t, dh, t);
+            for r in 0..t {
+                let row = &mut ds[r * t..(r + 1) * t];
+                let pr = &p[r * t..(r + 1) * t];
+                let dot: f32 = row.iter().zip(pr).map(|(&a, &b)| a * b).sum();
+                for (x, &pv) in row.iter_mut().zip(pr) {
+                    *x = pv * (*x - dot);
+                }
             }
+            // dq = dS @ k · scale ; dk = dSᵀ @ q · scale
+            let mut dqi = matmul(&ds, kt, t, t, dh);
+            let mut dki = matmul_at_b(&ds, qt, t, t, dh);
+            for x in dqi.iter_mut() {
+                *x *= scale;
+            }
+            for x in dki.iter_mut() {
+                *x *= scale;
+            }
+            dqc[ii * w..(ii + 1) * w].copy_from_slice(&dqi);
+            dkc[ii * w..(ii + 1) * w].copy_from_slice(&dki);
         }
-        // dq = dS @ k · scale ; dk = dSᵀ @ q · scale
-        let mut dqi = matmul(&ds, kt, t, t, dh);
-        let mut dki = matmul_at_b(&ds, qt, t, t, dh);
-        for x in dqi.iter_mut() {
-            *x *= scale;
-        }
-        for x in dki.iter_mut() {
-            *x *= scale;
-        }
-        dq[span.clone()].copy_from_slice(&dqi);
-        dk[span].copy_from_slice(&dki);
-    }
+    });
     (dq, dk, dv)
 }
 
@@ -285,6 +458,102 @@ mod tests {
         // c@bᵀ: c [2,2] (n=2), b [3,2] -> out [2,3]
         let cbt = matmul_a_bt(&c, &b, 2, 2, 3);
         assert_eq!(cbt[0], 58.0 * 7.0 + 64.0 * 8.0);
+    }
+
+    fn gen(n: usize, off: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.37 + off).sin() * 1.3).collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} != {y}");
+        }
+    }
+
+    /// The blocked + parallel matmuls are bit-identical to the naive
+    /// reference — including awkward shapes that exercise the tile
+    /// remainder (< TILE_J columns) and the < 4-wide microkernel tail —
+    /// at several thread counts.
+    #[test]
+    fn blocked_matmuls_match_reference_bit_for_bit() {
+        let shapes = [(1, 1, 1), (3, 5, 7), (17, 64, 65), (33, 48, 130), (5, 1, 9)];
+        for threads in [1usize, 2, 5] {
+            pool::set_threads(threads);
+            for &(m, k, n) in &shapes {
+                let a = gen(m * k, 0.1);
+                let b = gen(k * n, 0.7);
+                assert_bits_eq(
+                    &matmul(&a, &b, m, k, n),
+                    &reference::matmul(&a, &b, m, k, n),
+                    "matmul",
+                );
+                let g = gen(m * n, 1.9);
+                assert_bits_eq(
+                    &matmul_at_b(&a, &g, m, k, n),
+                    &reference::matmul_at_b(&a, &g, m, k, n),
+                    "matmul_at_b",
+                );
+                let bt = gen(n * k, 2.3);
+                assert_bits_eq(
+                    &matmul_a_bt(&a, &bt, m, k, n),
+                    &reference::matmul_a_bt(&a, &bt, m, k, n),
+                    "matmul_a_bt",
+                );
+            }
+        }
+        pool::set_threads(0);
+    }
+
+    /// Row-parallel LayerNorm / GELU / softmax / attention outputs do not
+    /// depend on the thread count (same bytes at 1, 2, and 7 workers).
+    #[test]
+    fn rowwise_kernels_are_thread_count_invariant() {
+        let (rows, d) = (13, 24);
+        let x = gen(rows * d, 0.2);
+        let scale: Vec<f32> = gen(d, 0.4).iter().map(|v| 1.0 + v * 0.1).collect();
+        let bias = gen(d, 0.6);
+        let g = gen(rows * d, 0.8);
+        let (bh, t, dh) = (6, 5, 4);
+        let q = gen(bh * t * dh, 1.0);
+        let k = gen(bh * t * dh, 1.2);
+        let v = gen(bh * t * dh, 1.4);
+
+        pool::set_threads(1);
+        let (y1, c1) = layernorm_fwd(&x, &scale, &bias);
+        let (dx1, ds1, db1) = layernorm_bwd(&g, &scale, &c1);
+        let (gy1, gt1) = gelu_fwd(&x);
+        let gdx1 = gelu_bwd(&g, &x, &gt1);
+        let mut sm1 = x.clone();
+        softmax_rows(&mut sm1, d);
+        let (o1, p1) = attention_fwd(&q, &k, &v, bh, t, dh);
+        let (dq1, dk1, dv1) = attention_bwd(&q, &q, &k, &v, &p1, bh, t, dh);
+        for threads in [2usize, 7] {
+            pool::set_threads(threads);
+            let (y, c) = layernorm_fwd(&x, &scale, &bias);
+            let (dx, ds, db) = layernorm_bwd(&g, &scale, &c);
+            assert_bits_eq(&y, &y1, "ln y");
+            assert_bits_eq(&c.xhat, &c1.xhat, "ln xhat");
+            assert_bits_eq(&c.inv, &c1.inv, "ln inv");
+            assert_bits_eq(&dx, &dx1, "ln dx");
+            assert_bits_eq(&ds, &ds1, "ln dscale");
+            assert_bits_eq(&db, &db1, "ln dbias");
+            let (gy, gt) = gelu_fwd(&x);
+            assert_bits_eq(&gy, &gy1, "gelu y");
+            assert_bits_eq(&gt, &gt1, "gelu t");
+            assert_bits_eq(&gelu_bwd(&g, &x, &gt), &gdx1, "gelu dx");
+            let mut sm = x.clone();
+            softmax_rows(&mut sm, d);
+            assert_bits_eq(&sm, &sm1, "softmax");
+            let (o, p) = attention_fwd(&q, &k, &v, bh, t, dh);
+            assert_bits_eq(&o, &o1, "attn out");
+            assert_bits_eq(&p, &p1, "attn probs");
+            let (dq, dk, dv) = attention_bwd(&q, &q, &k, &v, &p, bh, t, dh);
+            assert_bits_eq(&dq, &dq1, "attn dq");
+            assert_bits_eq(&dk, &dk1, "attn dk");
+            assert_bits_eq(&dv, &dv1, "attn dv");
+        }
+        pool::set_threads(0);
     }
 
     #[test]

@@ -4,8 +4,13 @@
 //!
 //! * [`manifest`] — named-config registry + in-memory manifest synthesis
 //!   (mirrors python/compile/configs.py and aot.py's JSON inventory).
-//! * [`math`] — matmul orientations, LayerNorm, tanh-GELU, softmax,
-//!   fused attention, each with its VJP.
+//! * [`math`] — matmul orientations (cache-blocked with a packed-B
+//!   microkernel), LayerNorm, tanh-GELU, softmax, fused attention, each
+//!   with its VJP; all row-parallel through [`pool`] with the per-element
+//!   reduction order pinned, so results are bit-identical to the scalar
+//!   reference (`math::reference`) at every thread count.
+//! * [`pool`] — the deterministic scoped thread pool the kernels
+//!   partition rows over (`--threads`, docs/PERF.md).
 //! * [`vit`] — the split prompt-augmented ViT: segment layouts, block
 //!   forward/backward, head/body/tail passes, cross-entropy, EL2N, SGD.
 //! * [`stages`] — the sixteen protocol stages composed from the above.
@@ -16,21 +21,22 @@
 
 pub mod manifest;
 pub mod math;
+pub mod pool;
 pub mod stages;
 pub mod vit;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::model::SegmentParams;
-use crate::runtime::{IoSpec, Manifest};
+use crate::runtime::{Dtype, HostTensor, IoSpec, Manifest};
 
 use super::{
-    Backend, PreparedRepr, PreparedSegment, SegInput, SegmentInputs, StageOutputs, StageStats,
-    TensorInputs,
+    Backend, F16Segment, PreparedRepr, PreparedSegment, SegInput, SegmentInputs, StageOutputs,
+    StageStats, TensorInputs,
 };
 
 pub use manifest::{config_names, synth_manifest};
@@ -38,6 +44,9 @@ pub use manifest::{config_names, synth_manifest};
 /// The native compute substrate. `Sync`: per-client threads share one.
 pub struct NativeBackend {
     manifest: Manifest,
+    /// Pack frozen segments to f16 in [`Backend::prepare_segment`]
+    /// (decode-on-use; halves resident bytes, `--backend native_f16`).
+    frozen_f16: bool,
     /// per-stage (calls, exec seconds)
     stats: Mutex<HashMap<String, (u64, f64)>>,
 }
@@ -45,7 +54,15 @@ pub struct NativeBackend {
 impl NativeBackend {
     /// Backend over an explicit manifest (tests can hand-craft one).
     pub fn new(manifest: Manifest) -> NativeBackend {
-        NativeBackend { manifest, stats: Mutex::new(HashMap::new()) }
+        NativeBackend { manifest, frozen_f16: false, stats: Mutex::new(HashMap::new()) }
+    }
+
+    /// Store prepared (frozen) segments as f16, decoded to f32 on use.
+    /// Kernels still compute in f32; only the resident copy is halved, so
+    /// results match a run whose frozen weights were rounded through f16.
+    pub fn with_frozen_f16(mut self, on: bool) -> NativeBackend {
+        self.frozen_f16 = on;
+        self
     }
 
     /// Backend for a named config, manifest synthesized in memory.
@@ -89,6 +106,12 @@ impl NativeBackend {
                         SegInput::Host(p) => p,
                         SegInput::Prepared(prep) => match &prep.repr {
                             PreparedRepr::Host(p) => p,
+                            // run_stage/run_stage_batch substitute decoded
+                            // host params before resolving (decode-on-use).
+                            PreparedRepr::HostF16(_) => bail!(
+                                "segment {seg:?} is f16-packed and was not decoded \
+                                 before resolve (native backend bug)"
+                            ),
                             PreparedRepr::Literals(_) => bail!(
                                 "segment {seg:?} was prepared for the PJRT backend; \
                                  prepare it with the backend that runs the stage"
@@ -142,6 +165,75 @@ impl NativeBackend {
         }
         Ok(args)
     }
+
+    /// Execute resolved args: the timed + instrumented core shared by
+    /// [`Backend::run_stage`] and the fused batch path. Busy time = stage
+    /// wall time + pool-worker time spawned during the stage, so the
+    /// achieved-GFLOP/s metric divides by thread-seconds instead of
+    /// double-counting overlapped wall time across client threads.
+    fn exec(&self, stage: &str, args: &stages::StageArgs) -> Result<StageOutputs> {
+        // `active()` is one relaxed atomic load when telemetry is off —
+        // the hot loop stays allocation-free (benches/telemetry.rs).
+        let telemetry = crate::telemetry::active();
+        let span = telemetry.as_ref().map(|t| t.span("stage", stage));
+        let busy0 = pool::spawned_busy_ns();
+        let t0 = Instant::now();
+        let out = stages::run(&self.manifest.config, stage, args)?;
+        let dt = t0.elapsed().as_secs_f64();
+        drop(span);
+        if let Some(t) = &telemetry {
+            let busy = dt + (pool::spawned_busy_ns() - busy0) as f64 / 1e9;
+            t.metrics.observe(&format!("stage_s/{stage}"), dt);
+            t.metrics.counter_add(&format!("stage_busy_us/{stage}"), (busy * 1e6) as u64);
+            if let Some(fl) = crate::flops::stage_flops(&self.manifest.config, stage) {
+                t.metrics.counter_add(&format!("stage_flops/{stage}"), fl);
+            }
+        }
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(stage.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        Ok(out)
+    }
+}
+
+/// Decode any f16-packed prepared segments to owned host params. The
+/// caller keeps the returned storage alive and substitutes it via
+/// [`substitute_decoded`]; empty when no input is f16-packed (the common
+/// case — zero extra work).
+fn decode_f16<'a>(segments: &SegmentInputs<'a>) -> Vec<(&'a str, SegmentParams)> {
+    segments
+        .iter()
+        .filter_map(|(&k, v)| match v {
+            SegInput::Prepared(p) => match &p.repr {
+                PreparedRepr::HostF16(f16) => Some((k, f16.decode())),
+                _ => None,
+            },
+            _ => None,
+        })
+        .collect()
+}
+
+/// Rebuild the segment-input map with decoded params shadowing their
+/// f16-packed originals.
+fn substitute_decoded<'a>(
+    segments: &SegmentInputs<'a>,
+    decoded: &'a [(&'a str, SegmentParams)],
+) -> SegmentInputs<'a> {
+    let mut out: SegmentInputs<'a> = segments
+        .iter()
+        .map(|(&k, v)| {
+            let v = match v {
+                SegInput::Host(p) => SegInput::Host(*p),
+                SegInput::Prepared(p) => SegInput::Prepared(*p),
+            };
+            (k, v)
+        })
+        .collect();
+    for (k, p) in decoded {
+        out.insert(k, SegInput::Host(p));
+    }
+    out
 }
 
 impl Backend for NativeBackend {
@@ -156,8 +248,14 @@ impl Backend for NativeBackend {
     fn prepare_segment(&self, params: &SegmentParams) -> Result<PreparedSegment> {
         // Host params ARE the native compute representation; a prepared
         // segment is just a stable copy the engine can share across
-        // client threads for the whole run.
-        Ok(PreparedSegment { repr: PreparedRepr::Host(params.clone()) })
+        // client threads for the whole run — optionally packed to f16.
+        Ok(PreparedSegment {
+            repr: if self.frozen_f16 {
+                PreparedRepr::HostF16(F16Segment::encode(params))
+            } else {
+                PreparedRepr::Host(params.clone())
+            },
+        })
     }
 
     fn run_stage(
@@ -166,26 +264,116 @@ impl Backend for NativeBackend {
         segments: &SegmentInputs,
         tensors: &TensorInputs,
     ) -> Result<StageOutputs> {
-        let args = self.resolve(stage, segments, tensors)?;
-        // `active()` is one relaxed atomic load when telemetry is off —
-        // the hot loop stays allocation-free (benches/telemetry.rs).
+        let decoded = decode_f16(segments);
+        if decoded.is_empty() {
+            let args = self.resolve(stage, segments, tensors)?;
+            return self.exec(stage, &args);
+        }
+        let local = substitute_decoded(segments, &decoded);
+        let args = self.resolve(stage, &local, tensors)?;
+        self.exec(stage, &args)
+    }
+
+    /// Fused multi-client batching: coalesce shape-matched Phase-2
+    /// `body_forward` / `body_backward` calls into ONE kernel invocation
+    /// over the concatenated batch. Those stages are strictly per-row over
+    /// the batch axis (attention runs per batch×head tile, LayerNorm/MLP
+    /// per token row; no cross-example reduction, no segment outputs), so
+    /// every example goes through the exact same per-row kernel code and
+    /// the split outputs are bit-identical to solo runs.
+    fn run_stage_batch(
+        &self,
+        stage: &str,
+        segments: &SegmentInputs,
+        tensor_sets: &[TensorInputs],
+    ) -> Result<Vec<StageOutputs>> {
+        let fusable = matches!(stage, "body_forward" | "body_backward");
+        if tensor_sets.len() < 2 || !fusable {
+            return tensor_sets.iter().map(|t| self.run_stage(stage, segments, t)).collect();
+        }
+        let n = tensor_sets.len();
+        let decoded = decode_f16(segments);
+        let local = substitute_decoded(segments, &decoded);
+        // Validate every client's set individually against the manifest
+        // signature — the fused tensors below bypass per-call resolve.
+        for t in tensor_sets {
+            self.resolve(stage, &local, t)?;
+        }
+        // Concatenate each named input along axis 0 (resolve pinned every
+        // set to the same manifest shapes, so the sets are congruent).
+        let mut fused: BTreeMap<&str, HostTensor> = BTreeMap::new();
+        for (&name, &t0) in tensor_sets[0].iter() {
+            ensure!(
+                t0.dtype() == Dtype::F32 && !t0.shape.is_empty(),
+                "fused stage {stage}: input {name:?} is not a batched f32 tensor"
+            );
+            let mut data = Vec::with_capacity(t0.as_f32().len() * n);
+            for set in tensor_sets {
+                data.extend_from_slice(set.get(name).unwrap().as_f32());
+            }
+            let mut shape = t0.shape.clone();
+            shape[0] *= n;
+            fused.insert(name, HostTensor::f32(shape, data));
+        }
+        // Resolve set 0 for the segment handles, then swap in the fused
+        // tensors and run once on a batch-scaled config clone: every
+        // native kernel reads the batch dimension from the config.
+        let mut args = self.resolve(stage, &local, &tensor_sets[0])?;
+        args.tensors.clear();
+        for (&name, t) in fused.iter() {
+            args.tensors.insert(name, t);
+        }
+        let mut cfg = self.manifest.config.clone();
+        cfg.batch *= n;
+
         let telemetry = crate::telemetry::active();
-        let span = telemetry.as_ref().map(|t| t.span("stage", stage));
+        let span = telemetry.as_ref().map(|t| {
+            let mut s = t.span("stage", stage);
+            s.attr("fused_clients", n as f64);
+            s
+        });
+        let busy0 = pool::spawned_busy_ns();
         let t0 = Instant::now();
-        let out = stages::run(&self.manifest.config, stage, &args)?;
+        let out = stages::run(&cfg, stage, &args)?;
         let dt = t0.elapsed().as_secs_f64();
         drop(span);
         if let Some(t) = &telemetry {
+            let busy = dt + (pool::spawned_busy_ns() - busy0) as f64 / 1e9;
             t.metrics.observe(&format!("stage_s/{stage}"), dt);
+            t.metrics.counter_add(&format!("stage_busy_us/{stage}"), (busy * 1e6) as u64);
+            t.metrics.counter_add(&format!("stage_fused_clients/{stage}"), n as u64);
             if let Some(fl) = crate::flops::stage_flops(&self.manifest.config, stage) {
-                t.metrics.counter_add(&format!("stage_flops/{stage}"), fl);
+                t.metrics.counter_add(&format!("stage_flops/{stage}"), fl * n as u64);
             }
         }
-        let mut stats = self.stats.lock().unwrap();
-        let e = stats.entry(stage.to_string()).or_insert((0, 0.0));
-        e.0 += 1;
-        e.1 += dt;
-        Ok(out)
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let e = stats.entry(stage.to_string()).or_insert((0, 0.0));
+            e.0 += n as u64;
+            e.1 += dt;
+        }
+        // Split every output tensor back per client along axis 0 (the
+        // body stages emit exactly one tensor and no segments).
+        debug_assert!(out.segments.is_empty(), "fused stage {stage} emitted segments");
+        let mut results: Vec<StageOutputs> = (0..n).map(|_| StageOutputs::default()).collect();
+        for (name, t) in out.tensors {
+            ensure!(
+                !t.shape.is_empty() && t.shape[0] % n == 0,
+                "fused output {name:?} not splittable over {n} clients"
+            );
+            let rows = t.shape[0] / n;
+            let stride: usize = rows * t.shape[1..].iter().product::<usize>();
+            let data = t.as_f32();
+            let mut shape = t.shape.clone();
+            shape[0] = rows;
+            for (i, r) in results.iter_mut().enumerate() {
+                r.tensors.insert(
+                    name.clone(),
+                    HostTensor::f32(shape.clone(), data[i * stride..(i + 1) * stride].to_vec()),
+                );
+            }
+        }
+        Ok(results)
     }
 
     fn execution_stats(&self) -> Vec<(String, StageStats)> {

@@ -1,0 +1,215 @@
+//! Deterministic scoped parallelism for the native kernels.
+//!
+//! A hand-rolled pool (the offline registry has no rayon): work is split
+//! into **contiguous, disjoint row chunks**, the first chunk runs on the
+//! calling thread, and the rest run on `std::thread::scope` workers. Every
+//! output element is written by exactly one worker and every kernel keeps
+//! its per-element reduction order unchanged, so **any** thread count —
+//! including 1 — produces byte-identical results through the exact same
+//! kernel code path (`threads=1` simply runs the single chunk inline;
+//! there is no separate serial implementation).
+//!
+//! Nested calls run inline: a kernel invoked from inside a pool worker
+//! (e.g. the per-tile matmuls inside the parallel attention loop) sees
+//! `IN_POOL` set and executes its chunk serially instead of spawning, so
+//! parallelism never oversubscribes.
+//!
+//! The pool also keeps a per-thread tally of **spawned-worker busy time**
+//! ([`spawned_busy_ns`]): each scoped worker reports how long its chunk
+//! ran, and the total is credited to the calling thread. The native
+//! backend reads the delta around a stage call to report thread-seconds
+//! (busy time) instead of double-counting overlapped wall time in the
+//! achieved-GFLOP/s metric.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Configured worker count; 0 = auto (`available_parallelism`).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+    static SPAWNED_BUSY_NS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Set the worker count for all subsequent kernel invocations (process
+/// global — the CLI applies `--threads` here once at startup). `0` resets
+/// to auto. Safe to change at any time: outputs are thread-count
+/// invariant by construction.
+pub fn set_threads(n: usize) {
+    THREADS.store(n, Ordering::Relaxed);
+}
+
+/// The resolved worker count: the configured value, or
+/// `available_parallelism()` when unset.
+pub fn threads() -> usize {
+    match THREADS.load(Ordering::Relaxed) {
+        0 => std::thread::available_parallelism().map_or(1, |n| n.get()),
+        n => n,
+    }
+}
+
+/// Monotonic per-thread counter (ns) of time spent in pool workers this
+/// thread spawned. Read a delta around a stage call to convert overlapped
+/// worker wall time into attributed busy time.
+pub fn spawned_busy_ns() -> u64 {
+    SPAWNED_BUSY_NS.with(Cell::get)
+}
+
+/// Partition `rows` rows across the pool and run `f` once per chunk.
+///
+/// `bufs` are output buffers sliced per chunk: buffer `i` holds
+/// `rows * widths[i]` elements, and each chunk receives the sub-slices
+/// covering its rows. `f(row0, nrows, chunks)` must fill its chunk from
+/// inputs it captures; chunks are disjoint, so the split is race-free by
+/// construction (no unsafe).
+pub fn run_rows<F>(rows: usize, mut bufs: Vec<&mut [f32]>, widths: &[usize], f: F)
+where
+    F: Fn(usize, usize, &mut [&mut [f32]]) + Sync,
+{
+    debug_assert_eq!(bufs.len(), widths.len());
+    for (b, &w) in bufs.iter().zip(widths) {
+        debug_assert_eq!(b.len(), rows * w);
+    }
+    let nested = IN_POOL.with(Cell::get);
+    let nt = if nested { 1 } else { threads().min(rows.max(1)) };
+    if nt <= 1 {
+        f(0, rows, &mut bufs);
+        return;
+    }
+    let chunk = rows.div_ceil(nt);
+    let fref = &f;
+    let mut spawned_ns = 0u64;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(nt - 1);
+        let mut first: Option<(usize, usize, Vec<&mut [f32]>)> = None;
+        let mut row0 = 0usize;
+        while row0 < rows {
+            let n = chunk.min(rows - row0);
+            let mut mine = Vec::with_capacity(bufs.len());
+            for (b, &w) in bufs.iter_mut().zip(widths) {
+                let (head, tail) = std::mem::take(b).split_at_mut(n * w);
+                mine.push(head);
+                *b = tail;
+            }
+            if first.is_none() {
+                // The first chunk runs on the calling thread, below.
+                first = Some((row0, n, mine));
+            } else {
+                handles.push(s.spawn(move || {
+                    let mut mine = mine;
+                    IN_POOL.with(|c| c.set(true));
+                    let t0 = Instant::now();
+                    fref(row0, n, &mut mine);
+                    t0.elapsed().as_nanos() as u64
+                }));
+            }
+            row0 += n;
+        }
+        let (r0, n, mut mine) = first.expect("rows > 0 when nt > 1");
+        let prev = IN_POOL.with(|c| c.replace(true));
+        f(r0, n, &mut mine);
+        IN_POOL.with(|c| c.set(prev));
+        for h in handles {
+            spawned_ns += h.join().expect("kernel worker panicked");
+        }
+    });
+    SPAWNED_BUSY_NS.with(|c| c.set(c.get() + spawned_ns));
+}
+
+/// [`run_rows`] for the common single-output-buffer case.
+pub fn run_rows1<F>(rows: usize, width: usize, out: &mut [f32], f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    run_rows(rows, vec![out], &[width], |r0, n, bufs| f(r0, n, &mut *bufs[0]));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_every_row_exactly_once() {
+        for rows in [0usize, 1, 2, 7, 64, 101] {
+            let mut out = vec![0.0f32; rows * 3];
+            run_rows1(rows, 3, &mut out, |r0, n, chunk| {
+                for i in 0..n * 3 {
+                    chunk[i] += (r0 * 3 + i) as f32 + 1.0;
+                }
+            });
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i as f32 + 1.0, "row element {i} written wrong");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_buffer_chunks_stay_aligned() {
+        let rows = 37;
+        let mut a = vec![0.0f32; rows * 2];
+        let mut b = vec![0.0f32; rows];
+        run_rows(rows, vec![&mut a, &mut b], &[2, 1], |r0, n, bufs| {
+            let (ac, rest) = bufs.split_first_mut().unwrap();
+            let bc = &mut rest[0];
+            for i in 0..n {
+                ac[i * 2] = (r0 + i) as f32;
+                ac[i * 2 + 1] = -((r0 + i) as f32);
+                bc[i] = (r0 + i) as f32 * 10.0;
+            }
+        });
+        for r in 0..rows {
+            assert_eq!(a[r * 2], r as f32);
+            assert_eq!(a[r * 2 + 1], -(r as f32));
+            assert_eq!(b[r], r as f32 * 10.0);
+        }
+    }
+
+    #[test]
+    fn nested_calls_run_inline_without_spawning() {
+        // An inner run_rows inside a pool worker must not deadlock or
+        // mis-partition; results stay correct either way.
+        let rows = 16;
+        let mut out = vec![0.0f32; rows];
+        run_rows1(rows, 1, &mut out, |r0, n, chunk| {
+            let mut inner = vec![0.0f32; 4];
+            run_rows1(4, 1, &mut inner, |i0, m, c| {
+                for i in 0..m {
+                    c[i] = (i0 + i) as f32;
+                }
+            });
+            let s: f32 = inner.iter().sum(); // 0+1+2+3
+            for i in 0..n {
+                chunk[i] = (r0 + i) as f32 + s;
+            }
+        });
+        for (r, &v) in out.iter().enumerate() {
+            assert_eq!(v, r as f32 + 6.0);
+        }
+    }
+
+    #[test]
+    fn busy_counter_is_monotonic_and_credits_the_caller() {
+        let before = spawned_busy_ns();
+        let mut out = vec![0.0f32; 1024];
+        run_rows1(1024, 1, &mut out, |r0, n, chunk| {
+            for i in 0..n {
+                chunk[i] = ((r0 + i) as f32).sqrt();
+            }
+        });
+        assert!(spawned_busy_ns() >= before, "busy counter must never decrease");
+    }
+
+    #[test]
+    fn threads_resolves_configured_and_auto() {
+        // Can't pin the global (other tests share it) — just check the
+        // resolution rule through a save/restore.
+        let prev = THREADS.load(Ordering::Relaxed);
+        set_threads(3);
+        assert_eq!(threads(), 3);
+        set_threads(0);
+        assert!(threads() >= 1);
+        set_threads(prev);
+    }
+}

@@ -13,7 +13,11 @@
 //! manifest estimates, and uplink payloads honour `FedConfig::wire`
 //! (f32/f16/int8). Each selected client runs on its own thread against the
 //! server [`Hub`], so Phase-2 split training is genuinely concurrent (the
-//! [`Backend`] is `Sync`).
+//! [`Backend`] is `Sync`), and the serve loop drains the hub
+//! opportunistically so same-kind body-stage frames from concurrent
+//! clients fuse into one batched kernel invocation
+//! ([`Backend::run_stage_batch`] — bit-identical to solo calls, so
+//! reports don't depend on arrival timing).
 //!
 //! Simulated time is the fleet simulator's: [`Fleet::begin_round`] samples
 //! the cohort's [`SimClock`] (per-client link and device rates,
@@ -389,8 +393,23 @@ pub(crate) fn serve_round(
     let mut smashed_batches = vec![0usize; k];
     let mut pending = (0..k).filter(|&slot| clock.online(slot)).count();
 
+    // Service turns: block for one frame, then opportunistically drain
+    // whatever else is already queued. Same-kind body-stage frames in a
+    // turn fuse into ONE batched kernel invocation
+    // ([`Backend::run_stage_batch`]) — concurrent clients tend to arrive
+    // together, so Phase-2 body work coalesces while bookkeeping (bytes,
+    // transfer time, replies) stays strictly per client. Hubs that can't
+    // peek (`try_recv_any` default) degrade to one frame per turn, which
+    // is the old behavior exactly.
+    let mut queue: std::collections::VecDeque<(Frame, usize)> = Default::default();
     while pending > 0 {
-        let (frame, n) = hub.recv_any()?;
+        if queue.is_empty() {
+            queue.push_back(hub.recv_any()?);
+            while let Some(fr) = hub.try_recv_any()? {
+                queue.push_back(fr);
+            }
+        }
+        let (frame, n) = queue.pop_front().expect("queue refilled above");
         let slot = slot_of(frame.client)?;
         // Compressed uploads record their raw equivalent only after
         // reconstruction (below); every other uplink frame is dense
@@ -406,29 +425,86 @@ pub(crate) fn serve_round(
         clock.charge_transfer(slot, n);
         match frame.kind {
             MsgKind::SmashedData => {
-                smashed_batches[slot] += 1;
-                let smashed = frame.payload.into_tensor()?;
-                let body_out = Server::body_forward(backend, body_prep, &smashed)?;
-                smashed_cache[slot] = Some(smashed);
-                let reply =
-                    Frame::new(MsgKind::BodyOutput, round, frame.client, Payload::Tensor(body_out));
-                let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
-                comm.record(MsgKind::BodyOutput, Direction::Downlink, nb);
-                clock.charge_transfer(slot, nb);
+                // Pull every other SmashedData frame from this turn's
+                // drain into the same fused forward.
+                let mut cids = vec![frame.client];
+                let mut slots = vec![slot];
+                let mut inputs = vec![frame.payload.into_tensor()?];
+                let mut i = 0;
+                while i < queue.len() {
+                    if queue[i].0.kind != MsgKind::SmashedData {
+                        i += 1;
+                        continue;
+                    }
+                    let (f2, n2) = queue.remove(i).expect("index checked");
+                    let s2 = slot_of(f2.client)?;
+                    comm.record_with_raw(
+                        f2.kind,
+                        Direction::Uplink,
+                        n2,
+                        encoded_frame_len(&f2, WireFormat::F32),
+                    );
+                    clock.charge_transfer(s2, n2);
+                    cids.push(f2.client);
+                    slots.push(s2);
+                    inputs.push(f2.payload.into_tensor()?);
+                }
+                let refs: Vec<&HostTensor> = inputs.iter().collect();
+                let body_outs = Server::body_forward_batch(backend, body_prep, &refs)?;
+                for ((&s, &cid), (smashed, body_out)) in
+                    slots.iter().zip(&cids).zip(inputs.into_iter().zip(body_outs))
+                {
+                    smashed_batches[s] += 1;
+                    smashed_cache[s] = Some(smashed);
+                    let reply =
+                        Frame::new(MsgKind::BodyOutput, round, cid, Payload::Tensor(body_out));
+                    let nb = hub.send_to(s, &reply, WireFormat::F32)?;
+                    comm.record(MsgKind::BodyOutput, Direction::Downlink, nb);
+                    clock.charge_transfer(s, nb);
+                }
             }
             MsgKind::GradBodyOut => {
-                let g_body_out = frame.payload.into_tensor()?;
-                let smashed = smashed_cache[slot].as_ref().ok_or_else(|| {
-                    anyhow!("client {} sent a gradient before smashed data", frame.client)
-                })?;
-                let g_smashed =
-                    Server::body_backward(backend, body_prep, smashed, &g_body_out)?;
-                let reply = Frame::new(
-                    MsgKind::GradSmashed, round, frame.client, Payload::Tensor(g_smashed),
-                );
-                let nb = hub.send_to(slot, &reply, WireFormat::F32)?;
-                comm.record(MsgKind::GradSmashed, Direction::Downlink, nb);
-                clock.charge_transfer(slot, nb);
+                let mut cids = vec![frame.client];
+                let mut slots = vec![slot];
+                let mut grads = vec![frame.payload.into_tensor()?];
+                let mut i = 0;
+                while i < queue.len() {
+                    if queue[i].0.kind != MsgKind::GradBodyOut {
+                        i += 1;
+                        continue;
+                    }
+                    let (f2, n2) = queue.remove(i).expect("index checked");
+                    let s2 = slot_of(f2.client)?;
+                    comm.record_with_raw(
+                        f2.kind,
+                        Direction::Uplink,
+                        n2,
+                        encoded_frame_len(&f2, WireFormat::F32),
+                    );
+                    clock.charge_transfer(s2, n2);
+                    cids.push(f2.client);
+                    slots.push(s2);
+                    grads.push(f2.payload.into_tensor()?);
+                }
+                let pairs: Vec<(&HostTensor, &HostTensor)> = slots
+                    .iter()
+                    .zip(&cids)
+                    .zip(&grads)
+                    .map(|((&s, &cid), g)| {
+                        let smashed = smashed_cache[s].as_ref().ok_or_else(|| {
+                            anyhow!("client {cid} sent a gradient before smashed data")
+                        })?;
+                        Ok((smashed, g))
+                    })
+                    .collect::<Result<_>>()?;
+                let g_smasheds = Server::body_backward_batch(backend, body_prep, &pairs)?;
+                for ((&s, &cid), g_smashed) in slots.iter().zip(&cids).zip(g_smasheds) {
+                    let reply =
+                        Frame::new(MsgKind::GradSmashed, round, cid, Payload::Tensor(g_smashed));
+                    let nb = hub.send_to(s, &reply, WireFormat::F32)?;
+                    comm.record(MsgKind::GradSmashed, Direction::Downlink, nb);
+                    clock.charge_transfer(s, nb);
+                }
             }
             MsgKind::Upload => {
                 let mut segs = match frame.payload {

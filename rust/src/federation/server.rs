@@ -28,6 +28,31 @@ impl Server {
         Ok(out.tensors.remove("body_out").expect("body_out"))
     }
 
+    /// [`Server::body_forward`] for several clients at once: one
+    /// [`Backend::run_stage_batch`] call, which the native backend fuses
+    /// into a single kernel invocation over the concatenated batch.
+    /// Outputs are index-aligned and bit-identical to solo calls.
+    pub fn body_forward_batch(
+        backend: &dyn Backend,
+        body: &PreparedSegment,
+        smashed: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("body", SegInput::Prepared(body));
+        let sets: Vec<TensorInputs> = smashed
+            .iter()
+            .map(|s| {
+                let mut t: TensorInputs = BTreeMap::new();
+                t.insert("smashed", *s);
+                t
+            })
+            .collect();
+        let outs = backend.run_stage_batch("body_forward", &segs, &sets)?;
+        outs.into_iter()
+            .map(|mut o| Ok(o.tensors.remove("body_out").expect("body_out")))
+            .collect()
+    }
+
     /// Phase 2 server step B — backprop the client's cut-layer gradient
     /// through the frozen body; returns the gradient w.r.t. smashed data.
     pub fn body_backward(
@@ -43,6 +68,30 @@ impl Server {
         tensors.insert("g_body_out", g_body_out);
         let mut out = backend.run_stage("body_backward", &segs, &tensors)?;
         Ok(out.tensors.remove("g_smashed").expect("g_smashed"))
+    }
+
+    /// [`Server::body_backward`] for several clients at once (see
+    /// [`Server::body_forward_batch`]).
+    pub fn body_backward_batch(
+        backend: &dyn Backend,
+        body: &PreparedSegment,
+        pairs: &[(&HostTensor, &HostTensor)],
+    ) -> Result<Vec<HostTensor>> {
+        let mut segs: SegmentInputs = BTreeMap::new();
+        segs.insert("body", SegInput::Prepared(body));
+        let sets: Vec<TensorInputs> = pairs
+            .iter()
+            .map(|(smashed, g_body_out)| {
+                let mut t: TensorInputs = BTreeMap::new();
+                t.insert("smashed", *smashed);
+                t.insert("g_body_out", *g_body_out);
+                t
+            })
+            .collect();
+        let outs = backend.run_stage_batch("body_backward", &segs, &sets)?;
+        outs.into_iter()
+            .map(|mut o| Ok(o.tensors.remove("g_smashed").expect("g_smashed")))
+            .collect()
     }
 
     /// Phase 3 — sample-count-weighted FedAvg of (tail, prompt) pairs

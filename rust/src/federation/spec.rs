@@ -50,6 +50,11 @@ pub struct RunSpec {
     /// deadline rounds — docs/FLEET.md). Absent ⇒ the homogeneous
     /// shared-rate fleet with pre-fleet time accounting, bit-for-bit.
     pub fleet: Option<FleetSpec>,
+    /// Optional native-kernel worker count (CLI `--threads`). Absent ⇒
+    /// `std::thread::available_parallelism()`. Any value yields
+    /// byte-identical reports (docs/PERF.md determinism contract), so
+    /// this knob is pure throughput and stays out of the JSON when unset.
+    pub threads: Option<usize>,
 }
 
 impl RunSpec {
@@ -67,12 +72,15 @@ impl RunSpec {
             eval_samples: 160,
             net_rate_bytes_per_s: None,
             fleet: None,
+            threads: None,
         }
     }
 
-    /// Construct the spec's compute substrate for its config.
+    /// Construct the spec's compute substrate for its config, applying
+    /// the spec's kernel thread count (process-global; `None` ⇒ auto).
     /// `artifacts_root` is only consulted by the PJRT backend.
     pub fn open_backend(&self, artifacts_root: &Path) -> Result<Box<dyn Backend>> {
+        crate::backend::native::pool::set_threads(self.threads.unwrap_or(0));
         open_backend(self.backend, artifacts_root, &self.config)
     }
 
@@ -129,11 +137,11 @@ impl RunSpec {
     }
 
     pub fn from_json(v: &Json) -> Result<RunSpec> {
-        const KNOWN: [&str; 22] = [
+        const KNOWN: [&str; 23] = [
             "config", "dataset", "method", "backend", "rounds", "num_clients",
             "clients_per_round", "local_epochs", "lr", "retain_fraction", "local_loss_update",
             "partition", "seed", "eval_limit", "eval_every", "selection", "wire", "compress",
-            "samples_per_client", "eval_samples", "net_rate_bytes_per_s", "fleet",
+            "samples_per_client", "eval_samples", "net_rate_bytes_per_s", "fleet", "threads",
         ];
         let obj = v.as_obj().ok_or_else(|| anyhow!("run spec must be a JSON object"))?;
         for key in obj.keys() {
@@ -244,6 +252,13 @@ impl RunSpec {
             None | Some(Json::Null) => None,
             Some(j) => Some(FleetSpec::from_json(j)?),
         };
+        spec.threads = match obj.get("threads") {
+            None | Some(Json::Null) => None,
+            Some(j) => match j.as_usize() {
+                Some(n) if n >= 1 => Some(n),
+                _ => bail!("spec key \"threads\" must be a positive integer or null"),
+            },
+        };
         Ok(spec)
     }
 
@@ -289,6 +304,9 @@ impl RunSpec {
         }
         if let Some(fleet) = &self.fleet {
             o.insert("fleet".to_string(), fleet.to_json());
+        }
+        if let Some(threads) = self.threads {
+            o.insert("threads".to_string(), Json::Num(threads as f64));
         }
         Json::Obj(o)
     }
@@ -556,6 +574,24 @@ mod tests {
         let plain = RunSpec::parse("{}").unwrap();
         assert!(plain.fleet.is_none());
         assert!(!plain.to_json().to_string().contains("fleet"));
+    }
+
+    #[test]
+    fn run_spec_threads_roundtrips_and_stays_out_when_unset() {
+        let plain = RunSpec::parse("{}").unwrap();
+        assert!(plain.threads.is_none());
+        assert!(!plain.to_json().to_string().contains("threads"));
+
+        let spec = RunSpec::parse(r#"{"threads": 4}"#).unwrap();
+        assert_eq!(spec.threads, Some(4));
+        let back = RunSpec::parse(&spec.to_json().to_string()).unwrap();
+        assert_eq!(back.threads, Some(4));
+        assert_eq!(back.to_json(), spec.to_json());
+
+        assert_eq!(RunSpec::parse(r#"{"threads": null}"#).unwrap().threads, None);
+        assert!(RunSpec::parse(r#"{"threads": 0}"#).is_err());
+        assert!(RunSpec::parse(r#"{"threads": "many"}"#).is_err());
+        assert!(RunSpec::parse(r#"{"threads": -3}"#).is_err());
     }
 
     #[test]

@@ -36,7 +36,26 @@
 //!
 //! Frozen segments (head/body) cross the substrate boundary as opaque
 //! [`backend::PreparedSegment`] handles, so no `xla` type appears in any
-//! federation API.
+//! federation API. `--backend native_f16` stores those frozen segments
+//! as f16 bits (half the resident bytes, decode-on-use; trainables stay
+//! f32).
+//!
+//! ## Performance ([`backend::native::pool`], docs/PERF.md)
+//!
+//! The native kernels are cache-blocked (packed-B GEMM microkernel) and
+//! parallel on a hand-rolled scoped thread pool (`--threads N`, the
+//! `"threads"` RunSpec key, auto by default) — with results
+//! **bit-identical to the scalar kernels at every thread count**:
+//! blocking tiles outputs and threads partition rows, never a reduction,
+//! so no f32 accumulation order changes. The pre-blocking kernels
+//! survive as `backend::native::math::reference`, the bit-exact oracle.
+//! Backends can fuse one stage across many clients'
+//! inputs ([`backend::Backend::run_stage_batch`]); the serve loop drains
+//! queued same-kind frames into such batches, and telemetry derives
+//! GFLOP/s from per-thread **busy** time so parallelism never inflates
+//! it. Speedups are recorded, not asserted: `scripts/bench_snapshot
+//! stages` writes blocked-vs-scalar and thread-sweep rows to
+//! `BENCH_stages.json`.
 //!
 //! ## The unified run API
 //!
@@ -45,7 +64,7 @@
 //!
 //! ```text
 //! RunSpec (JSON, optional)                 federation::spec
-//!   └─> spec.open_backend(root)?           backend (native | pjrt)
+//!   └─> spec.open_backend(root)?           backend (native | native_f16 | pjrt)
 //!   └─> RunBuilder::new(method)...         federation::run   (validated;
 //!         .build(&backend, &train, eval)?   the ONLY engine constructor)
 //!         └─> Box<dyn FederatedRun>        method-agnostic engine handle

@@ -38,7 +38,7 @@ sfprompt — split federated prompt fine-tuning coordinator
 USAGE:
   sfprompt inspect    --config <name> [--backend native|pjrt]
   sfprompt train      [--spec FILE.json] [--json]
-                      [--config <name>] [--backend native|pjrt]
+                      [--config <name>] [--backend native|native_f16|pjrt]
                       [--method sfprompt|fl|sfl_ff|sfl_linear]
                       [--rounds N] [--clients N] [--per-round K] [--epochs U]
                       [--lr F] [--retain F] [--dataset cifar10|cifar100|svhn|flower102]
@@ -46,7 +46,7 @@ USAGE:
                       [--no-local-loss] [--wire f32|f16|int8]
                       [--compress none|topk:R|randk:R|quant:B] [--net-rate BYTES_PER_S]
                       [--fleet <name|FILE.json>] [--deadline-s F] [--quorum N]
-                      [--trace FILE.jsonl] [--metrics FILE.json]
+                      [--threads N] [--trace FILE.jsonl] [--metrics FILE.json]
   sfprompt serve      --listen HOST:PORT --processes N
                       [--spec FILE.json | train flags] [--run-id ID]
                       [--events FILE.jsonl] [--io-timeout-s F] [--quiet] [--json]
@@ -60,8 +60,14 @@ USAGE:
 
 `--backend native` (the default) runs every stage on the pure-Rust ViT
 kernel engine with an in-memory manifest — no artifacts, no Python.
-`--backend pjrt` executes the AOT-lowered artifacts under `artifacts/`
-(requires the `pjrt` feature; see docs/BACKENDS.md).
+`--backend native_f16` additionally stores frozen head/body weights as
+f16 (half the resident bytes, decode-on-use). `--backend pjrt` executes
+the AOT-lowered artifacts under `artifacts/` (requires the `pjrt` cargo
+feature; see docs/BACKENDS.md).
+
+`--threads N` sets the native kernel worker count (default: all cores).
+Any value produces a byte-identical RunReport — the kernels partition
+rows deterministically and never split a reduction (docs/PERF.md).
 
 `train --spec FILE.json` reads a RunSpec (CLI flags are ignored); `--json`
 suppresses progress output and prints a RunReport JSON document with
@@ -183,6 +189,15 @@ fn spec_from_args(args: &Args) -> Result<RunSpec> {
             rate.parse()
                 .map_err(|_| anyhow::anyhow!("--net-rate must be a number, got {rate:?}"))?,
         );
+    }
+    if let Some(threads) = args.get("threads") {
+        let n: usize = threads
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--threads must be a positive integer, got {threads:?}"))?;
+        if n == 0 {
+            bail!("--threads must be at least 1 (omit the flag for auto)");
+        }
+        spec.threads = Some(n);
     }
     if let Some(fleet) = args.get("fleet") {
         spec.fleet = Some(FleetSpec::resolve(fleet)?);

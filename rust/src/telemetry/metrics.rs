@@ -15,8 +15,11 @@
 //! and fixed so snapshots from different runs are comparable bin-by-bin.
 //!
 //! Achieved GFLOP/s is **derived, not sampled**: each stage call adds its
-//! analytic FLOP count ([`crate::flops::stage_flops`]) to a counter and its
-//! wall time to a histogram; [`MetricsRegistry::to_json`] divides the sums.
+//! analytic FLOP count ([`crate::flops::stage_flops`]) to a counter, its
+//! wall time to a histogram, and its busy time (wall + spawned pool-worker
+//! thread-seconds) to a `stage_busy_us/<stage>` counter;
+//! [`MetricsRegistry::to_json`] divides FLOPs by busy time, so parallel
+//! kernels and concurrent client threads don't distort the figure.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -163,6 +166,24 @@ struct Instruments {
     hists: BTreeMap<String, Histogram>,
 }
 
+/// Achieved GFLOP/s for one stage: analytic FLOPs over **busy** time.
+/// Prefers the `stage_busy_us/<stage>` counter — stage wall time plus the
+/// pool-worker thread-seconds spawned during the stage, summed across all
+/// calling threads — so parallel kernels don't hide their worker time and
+/// the figure stays per-thread-second comparable at any `--threads`.
+/// Falls back to the wall-time histogram sum for snapshots recorded
+/// before busy accounting existed.
+fn achieved_gflops(ins: &Instruments, stage: &str, h: &Histogram) -> Option<f64> {
+    let fl = *ins.counters.get(&format!("stage_flops/{stage}"))? as f64;
+    let busy_us = ins.counters.get(&format!("stage_busy_us/{stage}")).copied().unwrap_or(0);
+    let denom_s = if busy_us > 0 { busy_us as f64 / 1e6 } else { h.sum() };
+    if denom_s > 0.0 {
+        Some(fl / denom_s / 1e9)
+    } else {
+        None
+    }
+}
+
 /// Named-instrument registry. All methods lock briefly; callers only reach
 /// here when telemetry is enabled.
 #[derive(Default)]
@@ -232,14 +253,8 @@ impl MetricsRegistry {
                 o.insert("mean_ms".into(), Json::Num(h.mean() * 1e3));
                 o.insert("p50_ms".into(), Json::Num(h.quantile(0.50) * 1e3));
                 o.insert("p95_ms".into(), Json::Num(h.quantile(0.95) * 1e3));
-                let flops_key = format!("stage_flops/{stage}");
-                if let Some(&fl) = g.counters.get(&flops_key) {
-                    if h.sum() > 0.0 {
-                        o.insert(
-                            "achieved_gflops".into(),
-                            Json::Num(fl as f64 / h.sum() / 1e9),
-                        );
-                    }
+                if let Some(gf) = achieved_gflops(&g, stage, h) {
+                    o.insert("achieved_gflops".into(), Json::Num(gf));
                 }
                 Json::Obj(o)
             })
@@ -272,10 +287,8 @@ impl MetricsRegistry {
         let mut gflops = BTreeMap::new();
         for (key, h) in g.hists.iter().filter(|(k, _)| k.starts_with("stage_s/")) {
             let stage = key.trim_start_matches("stage_s/");
-            if let Some(&fl) = g.counters.get(&format!("stage_flops/{stage}")) {
-                if h.sum() > 0.0 {
-                    gflops.insert(stage.to_string(), Json::Num(fl as f64 / h.sum() / 1e9));
-                }
+            if let Some(gf) = achieved_gflops(&g, stage, h) {
+                gflops.insert(stage.to_string(), Json::Num(gf));
             }
         }
         let mut o = BTreeMap::new();
@@ -354,6 +367,27 @@ mod tests {
         let row = &hot.as_arr().unwrap()[0];
         assert_eq!(row.get("stage").and_then(Json::as_str), Some("head_forward"));
         assert_eq!(row.get("calls").and_then(Json::as_f64), Some(2.0));
+    }
+
+    #[test]
+    fn achieved_gflops_prefers_busy_time_over_wall_time() {
+        let m = MetricsRegistry::new();
+        // Two 0.5s-wall calls that spawned pool workers: 2.0 thread-seconds
+        // of busy time. The divisor must be busy time, not wall time.
+        m.observe("stage_s/body_forward", 0.5);
+        m.observe("stage_s/body_forward", 0.5);
+        m.counter_add("stage_busy_us/body_forward", 2_000_000);
+        m.counter_add("stage_flops/body_forward", 4_000_000_000);
+        let j = m.to_json();
+        let g = j
+            .get("achieved_gflops")
+            .and_then(|o| o.get("body_forward"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((g - 2.0).abs() < 1e-9, "gflops={g} (expected 4e9 / 2.0s busy / 1e9)");
+        let hot = m.hottest_stages(1);
+        let row = &hot.as_arr().unwrap()[0];
+        assert_eq!(row.get("achieved_gflops").and_then(Json::as_f64), Some(g));
     }
 
     #[test]

@@ -40,6 +40,14 @@ pub trait FrameHub {
     fn send_to(&self, slot: usize, frame: &Frame, wire: WireFormat) -> Result<usize>;
     /// Block for the next inbound frame from any client.
     fn recv_any(&self) -> Result<(Frame, usize)>;
+    /// Non-blocking drain: the next inbound frame if one is already
+    /// queued, `None` otherwise. The serve loop uses this to coalesce
+    /// same-kind frames into fused batched stage calls; the default says
+    /// "nothing queued", which keeps hubs that can't peek (e.g. the TCP
+    /// round hub) on the one-frame-at-a-time path.
+    fn try_recv_any(&self) -> Result<Option<(Frame, usize)>> {
+        Ok(None)
+    }
 }
 
 /// One endpoint of an in-process link (the wire is `Vec<u8>` messages over
@@ -127,6 +135,19 @@ impl Hub {
         let frame = decode_frame(&bytes)?;
         Ok((frame, bytes.len()))
     }
+
+    /// Non-blocking variant of [`Hub::recv_any`].
+    pub fn try_recv_any(&self) -> Result<Option<(Frame, usize)>> {
+        use std::sync::mpsc::TryRecvError;
+        match self.rx.try_recv() {
+            Ok(bytes) => {
+                let frame = decode_frame(&bytes)?;
+                Ok(Some((frame, bytes.len())))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(anyhow!("all client endpoints hung up")),
+        }
+    }
 }
 
 impl FrameHub for Hub {
@@ -136,6 +157,10 @@ impl FrameHub for Hub {
 
     fn recv_any(&self) -> Result<(Frame, usize)> {
         Hub::recv_any(self)
+    }
+
+    fn try_recv_any(&self) -> Result<Option<(Frame, usize)>> {
+        Hub::try_recv_any(self)
     }
 }
 
@@ -227,6 +252,32 @@ mod tests {
         assert!(hub.send_to(5, &f0, WireFormat::F32).is_err());
         drop(links);
         assert!(hub.recv_any().is_err());
+    }
+
+    #[test]
+    fn hub_try_recv_drains_without_blocking() {
+        let (hub, mut links) = Hub::new(1);
+        assert!(hub.try_recv_any().unwrap().is_none());
+        links[0].send(&frame(MsgKind::Upload, 0, &[1.0]), WireFormat::F32).unwrap();
+        let (f, _) = hub.try_recv_any().unwrap().unwrap();
+        assert_eq!(f.kind, MsgKind::Upload);
+        assert!(hub.try_recv_any().unwrap().is_none());
+        drop(links);
+        assert!(hub.try_recv_any().is_err());
+    }
+
+    #[test]
+    fn frame_hub_default_try_recv_says_nothing_queued() {
+        struct NoPeek;
+        impl FrameHub for NoPeek {
+            fn send_to(&self, _: usize, _: &Frame, _: WireFormat) -> Result<usize> {
+                Ok(0)
+            }
+            fn recv_any(&self) -> Result<(Frame, usize)> {
+                Err(anyhow!("empty"))
+            }
+        }
+        assert!(NoPeek.try_recv_any().unwrap().is_none());
     }
 
     #[test]

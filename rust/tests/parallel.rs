@@ -1,0 +1,255 @@
+//! Determinism-under-parallelism integration tests.
+//!
+//! The native backend's contract is that the blocked, pooled kernels are
+//! **bit-identical** to a single-threaded run at every thread count: the
+//! pool partitions output rows, never a reduction axis, so each output
+//! element sees the same f32 accumulation order no matter how many workers
+//! share the loop. (Blocked-vs-scalar-reference bit-identity is covered by
+//! the in-module tests in `backend::native::math`; this file checks the
+//! same property end-to-end through the public stage API and whole
+//! federated runs.)
+//!
+//! The pool's thread count is process-global, so every test here holds
+//! `GATE` while it reconfigures the pool and restores auto (0) before
+//! releasing it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+use sfprompt::backend::native::pool;
+use sfprompt::backend::{run_stage_hosts, Backend, NativeBackend, TensorInputs};
+use sfprompt::federation::{drive, Method, NullObserver, RunReport, RunSpec};
+use sfprompt::model::{init_params, ParamSet, SegmentParams};
+use sfprompt::runtime::{Dtype, HostTensor};
+use sfprompt::util::json::Json;
+use sfprompt::util::rng::Rng;
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the pool to auto sizing when dropped, even on assert panic.
+struct PoolReset;
+
+impl Drop for PoolReset {
+    fn drop(&mut self) {
+        pool::set_threads(0);
+    }
+}
+
+fn randn(shape: Vec<usize>, sigma: f32, rng: &mut Rng) -> HostTensor {
+    let n = shape.iter().product();
+    HostTensor::f32(shape, (0..n).map(|_| rng.normal_f32(0.0, sigma)).collect())
+}
+
+fn bits(t: &HostTensor) -> Vec<u64> {
+    match t.dtype() {
+        Dtype::F32 => t.as_f32().iter().map(|v| v.to_bits() as u64).collect(),
+        Dtype::I32 => t.as_i32().iter().map(|&v| v as u64).collect(),
+    }
+}
+
+fn segment_bits(s: &SegmentParams) -> Vec<Vec<u64>> {
+    s.tensors.iter().map(bits).collect()
+}
+
+/// Run every SFPrompt-family stage (forward and VJP) once and flatten all
+/// outputs — tensors, updated segments, losses — into one comparable blob.
+fn all_stage_outputs(backend: &NativeBackend) -> Vec<(String, Vec<Vec<u64>>)> {
+    let cfg = backend.manifest().config.clone();
+    let params = init_params(backend.manifest(), 7);
+    let mut rng = Rng::new(41);
+    let images =
+        randn(vec![cfg.batch, cfg.image_size, cfg.image_size, cfg.channels], 1.0, &mut rng);
+    let smashed = randn(vec![cfg.batch, cfg.seq_len, cfg.dim], 1.0, &mut rng);
+    let g_up = randn(vec![cfg.batch, cfg.seq_len, cfg.dim], 0.5, &mut rng);
+    let labels = HostTensor::i32(
+        vec![cfg.batch],
+        (0..cfg.batch).map(|_| rng.below(cfg.num_classes) as i32).collect(),
+    );
+    let lr = HostTensor::scalar_f32(0.1);
+
+    // A nested fn (not a closure): the returned map borrows from `params`,
+    // which closure lifetime elision cannot express.
+    fn seg<'a>(
+        params: &'a ParamSet,
+        names: &[&'static str],
+    ) -> BTreeMap<&'static str, &'a SegmentParams> {
+        names.iter().map(|&n| (n, params.get(n).unwrap())).collect()
+    }
+    // (stage, segments, tensor inputs, tensor outputs, segment outputs)
+    let cases: Vec<(&str, Vec<&str>, Vec<(&str, &HostTensor)>, Vec<&str>, Vec<&str>)> = vec![
+        ("head_forward", vec!["head", "prompt"], vec![("images", &images)], vec!["smashed"], vec![]),
+        ("body_forward", vec!["body"], vec![("smashed", &smashed)], vec!["body_out"], vec![]),
+        (
+            "tail_step",
+            vec!["tail"],
+            vec![("body_out", &smashed), ("labels", &labels), ("lr", &lr)],
+            vec!["loss", "g_body_out"],
+            vec!["tail"],
+        ),
+        (
+            "body_backward",
+            vec!["body"],
+            vec![("smashed", &smashed), ("g_body_out", &g_up)],
+            vec!["g_smashed"],
+            vec![],
+        ),
+        (
+            "prompt_grad",
+            vec!["head", "prompt"],
+            vec![("images", &images), ("g_smashed", &g_up), ("lr", &lr)],
+            vec![],
+            vec!["prompt"],
+        ),
+        (
+            "local_step",
+            vec!["head", "tail", "prompt"],
+            vec![("images", &images), ("labels", &labels), ("lr", &lr)],
+            vec!["loss"],
+            vec!["tail", "prompt"],
+        ),
+        (
+            "el2n_scores",
+            vec!["head", "tail", "prompt"],
+            vec![("images", &images), ("labels", &labels)],
+            vec!["scores"],
+            vec![],
+        ),
+        (
+            "eval_forward",
+            vec!["head", "body", "tail", "prompt"],
+            vec![("images", &images)],
+            vec!["logits"],
+            vec![],
+        ),
+    ];
+
+    let mut flat = Vec::new();
+    for (stage, seg_names, tensors, t_outs, s_outs) in cases {
+        let segs = seg(&params, &seg_names);
+        let t: TensorInputs = tensors.into_iter().collect();
+        let out = run_stage_hosts(backend, stage, &segs, &t).unwrap();
+        for name in t_outs {
+            flat.push((format!("{stage}/{name}"), vec![bits(out.tensor(name).unwrap())]));
+        }
+        for name in s_outs {
+            flat.push((format!("{stage}/seg:{name}"), segment_bits(out.segment(name).unwrap())));
+        }
+    }
+    flat
+}
+
+#[test]
+fn every_stage_is_bit_identical_at_any_thread_count() {
+    let _g = gate();
+    let _reset = PoolReset;
+    let backend = NativeBackend::tiny();
+
+    pool::set_threads(1);
+    let baseline = all_stage_outputs(&backend);
+    for threads in [2usize, 3, 4, 8] {
+        pool::set_threads(threads);
+        let got = all_stage_outputs(&backend);
+        assert_eq!(baseline.len(), got.len());
+        for ((name, want), (name2, have)) in baseline.iter().zip(&got) {
+            assert_eq!(name, name2);
+            assert_eq!(
+                want, have,
+                "{name}: output bytes changed between 1 and {threads} threads"
+            );
+        }
+    }
+}
+
+fn tiny_spec(method: Method, seed: u64) -> RunSpec {
+    let mut spec = RunSpec::new("tiny", "cifar10", method);
+    spec.fed.rounds = 1;
+    spec.fed.num_clients = 4;
+    spec.fed.clients_per_round = 2;
+    spec.fed.local_epochs = 1;
+    spec.fed.seed = seed;
+    spec.samples_per_client = 8;
+    spec.eval_samples = 16;
+    spec.fed.eval_limit = Some(16);
+    spec
+}
+
+fn report_for(spec: &RunSpec) -> RunReport {
+    let backend = NativeBackend::for_config(&spec.config).unwrap();
+    let (train, eval) = spec.datasets(&backend.manifest().config).unwrap();
+    let mut run = spec.builder().build(&backend, &train, Some(&eval)).unwrap();
+    let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
+    RunReport::new(spec, run.setup_bytes(), hist)
+}
+
+/// Strip real-wall-time fields and the thread-count spec key (the knobs a
+/// thread sweep legitimately varies) so the rest can be compared exactly.
+fn strip_nondeterministic(v: &Json) -> Json {
+    match v {
+        Json::Obj(o) => Json::Obj(
+            o.iter()
+                .filter(|(k, _)| k.as_str() != "wall_s" && k.as_str() != "threads")
+                .map(|(k, x)| (k.clone(), strip_nondeterministic(x)))
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(strip_nondeterministic).collect()),
+        other => other.clone(),
+    }
+}
+
+#[test]
+fn random_runs_reproduce_byte_identical_reports_for_threads_1_through_8() {
+    // Property-style: seeded random spec draws, each driven at every thread
+    // count in 1..=8; the RunReport JSON (modulo wall time) must not move
+    // by a single byte. Full runs are expensive, so the case count is small
+    // — the per-kernel sweep above covers the fine-grained space.
+    let _g = gate();
+    let _reset = PoolReset;
+    let mut rng = Rng::new(2024);
+    for method in [Method::SfPrompt, Method::SflLinear] {
+        let spec = tiny_spec(method, rng.next_u64() % 1_000);
+        pool::set_threads(1);
+        let baseline = strip_nondeterministic(&report_for(&spec).to_json()).to_string();
+        for threads in 2..=8usize {
+            pool::set_threads(threads);
+            let got = strip_nondeterministic(&report_for(&spec).to_json()).to_string();
+            assert_eq!(
+                baseline, got,
+                "{method:?} report differs between 1 and {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn spec_threads_key_reaches_the_pool_and_keeps_reports_equal() {
+    // The `"threads"` RunSpec key (and thus `--threads`) must configure the
+    // pool via open_backend and leave every report byte untouched.
+    let _g = gate();
+    let _reset = PoolReset;
+    let root = Path::new(".");
+
+    let report_with = |threads: Option<usize>| -> String {
+        let mut spec = tiny_spec(Method::SfPrompt, 5);
+        spec.threads = threads;
+        let backend = spec.open_backend(root).unwrap();
+        if let Some(n) = threads {
+            assert_eq!(pool::threads(), n, "open_backend must apply the spec's thread count");
+        }
+        let (train, eval) = spec.datasets(&backend.manifest().config).unwrap();
+        let mut run = spec.builder().build(backend.as_ref(), &train, Some(&eval)).unwrap();
+        let hist = drive(run.as_mut(), &mut NullObserver).unwrap();
+        let report = RunReport::new(&spec, run.setup_bytes(), hist);
+        strip_nondeterministic(&report.to_json()).to_string()
+    };
+
+    let one = report_with(Some(1));
+    let four = report_with(Some(4));
+    let auto = report_with(None);
+    assert_eq!(one, four, "--threads 1 vs --threads 4 reports must match");
+    assert_eq!(one, auto, "auto thread sizing must not change report bytes");
+}

@@ -196,6 +196,43 @@ fn sfprompt_e2e_trace_has_the_full_span_skeleton() {
 }
 
 #[test]
+fn parallel_run_keeps_the_trace_skeleton_and_busy_counters() {
+    let _g = gate();
+    // Force the kernel pool wide, then record the same run the skeleton test
+    // uses. Pool workers never emit spans of their own — each stage span
+    // lives on the calling client thread and absorbs the workers' busy time
+    // into the `stage_busy_us/*` counters — so the tree invariants must hold
+    // unchanged at any thread count.
+    sfprompt::backend::native::pool::set_threads(4);
+    let outcome = std::panic::catch_unwind(|| record_run(Method::SfPrompt, 2));
+    sfprompt::backend::native::pool::set_threads(0);
+    let (records, sink) = outcome.unwrap();
+    assert_tree_invariants(&records);
+
+    let stages: Vec<_> = records.iter().filter(|r| r.cat == "stage").collect();
+    assert!(!stages.is_empty());
+    let ids: std::collections::BTreeSet<u64> = records.iter().map(|r| r.id).collect();
+    for s in &stages {
+        let pid = s.parent.expect("stage spans are parented even when the pool is wide");
+        assert!(ids.contains(&pid), "stage {} has a dangling parent", s.name);
+    }
+
+    // Busy-time accounting: every stage histogram has a matching busy
+    // counter, and busy time can only exceed wall time (it adds the spawned
+    // workers' thread-seconds on top).
+    let m = &sink.metrics;
+    for stage in ["local_step", "el2n_scores", "tail_step", "eval_forward"] {
+        assert!(m.histogram_count(&format!("stage_s/{stage}")) > 0, "missing stage_s/{stage}");
+        assert!(m.counter(&format!("stage_busy_us/{stage}")) > 0, "missing stage_busy_us/{stage}");
+    }
+    let j = m.to_json();
+    assert!(
+        j.get("achieved_gflops").and_then(Json::as_obj).map_or(0, |o| o.len()) > 0,
+        "GFLOP/s still derived (from busy time) under parallel kernels"
+    );
+}
+
+#[test]
 fn trace_serialises_to_valid_jsonl_and_chrome_json() {
     let _g = gate();
     let backend = NativeBackend::tiny();
