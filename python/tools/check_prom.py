@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""Validate sfprompt's Prometheus text exposition (`serve --prom ADDR`).
+
+Reads the scrape body from a file (or stdin with `-`) and checks, failing
+loudly (exit 1) on the first violation:
+  * every non-comment line matches the sample grammar
+    `name{label="value",...} number` (text format 0.0.4);
+  * every sample's metric name has a preceding `# TYPE` declaration of
+    counter / gauge / histogram, and every declared family has samples;
+  * counter and `_count`/`_bucket` values are finite and non-negative;
+  * each histogram exposes `_bucket` samples with cumulative,
+    monotonically non-decreasing counts over increasing `le` bounds,
+    ending at `le="+Inf"`, plus `_sum` and `_count` samples where
+    `_count` equals the `+Inf` bucket.
+
+With --require NAME (repeatable), the named family must be present — the
+CI networked smoke uses this to pin the socket byte counters.
+
+    python3 python/tools/check_prom.py metrics.txt --require sfprompt_net_rx_bytes
+"""
+
+import argparse
+import math
+import re
+import sys
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>[^\s]+)\s*$"
+)
+LABEL_RE = re.compile(r'^[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\]|\\.)*"$')
+TYPES = ("counter", "gauge", "histogram")
+
+
+def fail(msg: str) -> None:
+    sys.exit(f"check_prom: FAIL: {msg}")
+
+
+def parse_labels(raw: str, lineno: int) -> dict:
+    labels = {}
+    for part in filter(None, raw.split(",")):
+        if not LABEL_RE.match(part):
+            fail(f"line {lineno}: bad label pair {part!r}")
+        key, value = part.split("=", 1)
+        labels[key] = value[1:-1]
+    return labels
+
+
+def parse_value(raw: str, lineno: int) -> float:
+    if raw == "+Inf":
+        return math.inf
+    if raw == "-Inf":
+        return -math.inf
+    try:
+        return float(raw)
+    except ValueError:
+        fail(f"line {lineno}: unparseable sample value {raw!r}")
+
+
+def base_family(name: str, declared: dict) -> str:
+    """Map a histogram series name back to its declared family."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        stem = name[: -len(suffix)] if name.endswith(suffix) else None
+        if stem and declared.get(stem) == "histogram":
+            return stem
+    return name
+
+
+def check(text: str, require: list) -> None:
+    declared = {}  # family -> type
+    samples = []  # (family, name, labels, value, lineno)
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in TYPES:
+                fail(f"line {lineno}: malformed TYPE declaration {line!r}")
+            declared[parts[2]] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # HELP or free comment
+        m = SAMPLE_RE.match(line)
+        if not m:
+            fail(f"line {lineno}: not a valid sample line {line!r}")
+        labels = parse_labels(m.group("labels") or "", lineno)
+        value = parse_value(m.group("value"), lineno)
+        family = base_family(m.group("name"), declared)
+        if family not in declared:
+            fail(f"line {lineno}: sample {m.group('name')!r} has no TYPE declaration")
+        samples.append((family, m.group("name"), labels, value, lineno))
+
+    if not samples:
+        fail("no samples in the exposition")
+    seen = {family for family, *_ in samples}
+    for family in declared:
+        if family not in seen:
+            fail(f"family {family} declared but has no samples")
+    for name in require:
+        if name not in declared:
+            fail(f"required family {name} is missing")
+
+    for family, name, labels, value, lineno in samples:
+        kind = declared[family]
+        if kind == "counter" or name.endswith(("_count", "_bucket")):
+            if not (value >= 0.0) or value == math.inf:
+                fail(f"line {lineno}: {name} must be finite and >= 0, got {value}")
+
+    # Histogram shape: per (family, non-le labels) series, buckets are
+    # cumulative over increasing le and end at +Inf == _count.
+    hists = {}
+    for family, name, labels, value, lineno in samples:
+        if declared[family] != "histogram":
+            continue
+        key = (family, tuple(sorted((k, v) for k, v in labels.items() if k != "le")))
+        h = hists.setdefault(key, {"buckets": [], "sum": None, "count": None})
+        if name == family + "_bucket":
+            if "le" not in labels:
+                fail(f"line {lineno}: {name} sample without an le label")
+            bound = parse_value(labels["le"], lineno)
+            h["buckets"].append((bound, value, lineno))
+        elif name == family + "_sum":
+            h["sum"] = value
+        elif name == family + "_count":
+            h["count"] = value
+        else:
+            fail(f"line {lineno}: unexpected histogram series {name!r}")
+    for (family, labels), h in hists.items():
+        where = f"histogram {family}{dict(labels)}"
+        if not h["buckets"]:
+            fail(f"{where}: no _bucket samples")
+        if h["sum"] is None or h["count"] is None:
+            fail(f"{where}: missing _sum or _count")
+        bounds = [b for b, _, _ in h["buckets"]]
+        if bounds != sorted(bounds) or len(set(bounds)) != len(bounds):
+            fail(f"{where}: le bounds are not strictly increasing: {bounds}")
+        if bounds[-1] != math.inf:
+            fail(f"{where}: bucket series does not end at le=\"+Inf\"")
+        counts = [c for _, c, _ in h["buckets"]]
+        if any(lo > hi for lo, hi in zip(counts, counts[1:])):
+            fail(f"{where}: bucket counts are not cumulative: {counts}")
+        if counts[-1] != h["count"]:
+            fail(f"{where}: +Inf bucket {counts[-1]} != _count {h['count']}")
+
+    kinds = {}
+    for family, kind in declared.items():
+        kinds[kind] = kinds.get(kind, 0) + 1
+    print(
+        f"check_prom: OK — {len(samples)} samples across {len(declared)} "
+        f"families {dict(sorted(kinds.items()))}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", help="scrape body file, or - for stdin")
+    ap.add_argument(
+        "--require", action="append", default=[],
+        help="metric family that must be present (repeatable)",
+    )
+    args = ap.parse_args()
+    if args.path == "-":
+        text = sys.stdin.read()
+    else:
+        with open(args.path, "r", encoding="utf-8") as f:
+            text = f.read()
+    check(text, args.require)
+
+
+if __name__ == "__main__":
+    main()

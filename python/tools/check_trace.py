@@ -11,11 +11,16 @@ Checks, failing loudly (exit 1) on the first violation:
   * every `client` span's parent is a `round` span, every `round` span's
     parent is the `run` span (the documented taxonomy, docs/TELEMETRY.md);
   * with --metrics: the metrics JSON has per-stage latency histograms
-    (`stage_s/...` with count/p50/p95) and an achieved-GFLOP/s table.
+    (`stage_s/...` with count/p50/p95) and an achieved-GFLOP/s table;
+  * with --events: a round-event JSONL stream (`serve --events FILE` or an
+    observer-socket capture) where every line names a known event kind —
+    including the live-ops kinds `heartbeat`, `health_anomaly`, and
+    `health_straggler` (docs/OPS.md) — and carries that kind's keys.
 
-Used by the CI telemetry smoke step:
+Used by the CI telemetry and networked smoke steps:
 
     python3 python/tools/check_trace.py trace.jsonl --metrics metrics.json
+    python3 python/tools/check_trace.py --events events.jsonl
 """
 
 import argparse
@@ -23,6 +28,24 @@ import json
 import sys
 
 REQUIRED_SPAN_KEYS = ("id", "parent", "cat", "name", "tid", "t0_s", "t1_s")
+
+# Event kind -> keys every line of that kind must carry (docs/NET.md and
+# docs/OPS.md; the rust source of truth is net/events.rs).
+EVENT_SCHEMAS = {
+    "run_start": ("format", "version", "method", "rounds", "clients", "per_round"),
+    "round_start": ("round",),
+    "client_done": ("round", "client", "finish_s"),
+    "client_dropped": ("round", "client", "at_s", "reason"),
+    "eval": ("round", "accuracy"),
+    "round_end": (
+        "round", "local_loss", "split_loss", "accuracy", "bytes",
+        "survivors", "dropped", "sim_latency_s", "clock_s",
+    ),
+    "run_end": ("rounds", "final_accuracy", "total_bytes"),
+    "health_anomaly": ("round", "kind", "value", "threshold"),
+    "health_straggler": ("round", "client", "ewma_s", "median_s"),
+    "heartbeat": ("seq",),
+}
 
 
 def fail(msg: str) -> None:
@@ -106,26 +129,68 @@ def check_metrics(path: str) -> None:
     )
 
 
+def check_events(path: str) -> None:
+    with open(path, "r", encoding="utf-8") as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        fail(f"{path}: empty event stream")
+
+    counts = {}
+    for lineno, line in enumerate(lines, 1):
+        try:
+            e = json.loads(line)
+        except json.JSONDecodeError as exc:
+            fail(f"{path}:{lineno}: not valid JSON: {exc}")
+        kind = e.get("event")
+        if kind not in EVENT_SCHEMAS:
+            fail(f"{path}:{lineno}: unknown event kind {kind!r}")
+        for key in EVENT_SCHEMAS[kind]:
+            if key not in e:
+                fail(f"{path}:{lineno}: {kind} event missing key {key!r}: {e}")
+        counts[kind] = counts.get(kind, 0) + 1
+
+    first = json.loads(lines[0])
+    if first.get("event") != "run_start":
+        fail(f"{path}: stream does not open with run_start")
+    if first.get("format") != "sfprompt-events":
+        fail(f"{path}: run_start announces format {first.get('format')!r}")
+    if counts.get("round_start", 0) != counts.get("round_end", 0):
+        fail(
+            f"{path}: {counts.get('round_start', 0)} round_start vs "
+            f"{counts.get('round_end', 0)} round_end"
+        )
+    print(f"check_trace: {path}: OK — {len(lines)} event lines {dict(sorted(counts.items()))}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("trace", help="trace JSONL file from train --trace")
+    ap.add_argument("trace", nargs="?", help="trace JSONL file from train --trace")
     ap.add_argument("--metrics", help="metrics JSON file from train --metrics")
     ap.add_argument(
         "--expect-rounds", type=int,
         help="require exactly this many round spans",
     )
+    ap.add_argument(
+        "--events",
+        help="round-event JSONL file (serve --events or an observer capture)",
+    )
     args = ap.parse_args()
+    if not args.trace and not args.events:
+        ap.error("nothing to check: give a trace file and/or --events")
 
-    by_cat = check_trace(args.trace)
-    for cat in ("run", "round", "client", "phase", "stage"):
-        if not by_cat.get(cat):
-            fail(f"{args.trace}: no {cat!r} spans recorded")
-    if args.expect_rounds is not None:
-        got = len(by_cat.get("round", []))
-        if got != args.expect_rounds:
-            fail(f"{args.trace}: expected {args.expect_rounds} round spans, got {got}")
+    if args.trace:
+        by_cat = check_trace(args.trace)
+        for cat in ("run", "round", "client", "phase", "stage"):
+            if not by_cat.get(cat):
+                fail(f"{args.trace}: no {cat!r} spans recorded")
+        if args.expect_rounds is not None:
+            got = len(by_cat.get("round", []))
+            if got != args.expect_rounds:
+                fail(f"{args.trace}: expected {args.expect_rounds} round spans, got {got}")
     if args.metrics:
         check_metrics(args.metrics)
+    if args.events:
+        check_events(args.events)
 
 
 if __name__ == "__main__":

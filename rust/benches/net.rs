@@ -57,8 +57,8 @@ fn main() {
                 Ok(Some(NetMsg::Frame(frame, _))) => {
                     link.send(&frame, WireFormat::F32).unwrap();
                 }
-                Ok(Some(NetMsg::Control(Control::Shutdown { .. }))) | Ok(None) => break,
-                Ok(Some(NetMsg::Control(c))) => link.send_control(&c).map(|_| ()).unwrap(),
+                Ok(Some(NetMsg::Control(Control::Shutdown { .. }, _))) | Ok(None) => break,
+                Ok(Some(NetMsg::Control(c, _))) => link.send_control(&c).map(|_| ()).unwrap(),
                 Err(_) => break,
             }
         }
@@ -95,7 +95,7 @@ fn main() {
     Bench::new("net/echo/control/round_report").samples(50).run(|| {
         link.send_control(&report).unwrap();
         match link.recv_msg(false).unwrap() {
-            Some(NetMsg::Control(Control::RoundReport { .. })) => {}
+            Some(NetMsg::Control(Control::RoundReport { .. }, _)) => {}
             other => panic!("echo peer answered {other:?}"),
         }
     });

@@ -1,13 +1,18 @@
 //! Telemetry overhead guard.
 //!
-//! Two claims back docs/TELEMETRY.md's "free when off" statement, and this
-//! bench enforces the first as a hard assertion (it aborts the bench run
-//! if violated, so CI-style bench invocations catch regressions):
+//! Three claims back docs/TELEMETRY.md's "free when off" statement, and
+//! this bench enforces the first two as hard assertions (it aborts the
+//! bench run if violated, so CI-style bench invocations catch
+//! regressions):
 //!
 //! 1. **Zero allocations on the disabled path.** A counting global
 //!    allocator wraps `System`; a tight loop of `telemetry::active()`
 //!    calls with no sink installed must not allocate at all.
-//! 2. **Negligible stage-loop overhead.** The same native stage loop is
+//! 2. **Zero allocations on the flight-recorder record path.** The
+//!    always-on post-mortem ring (docs/OPS.md) writes into pre-allocated
+//!    fixed-size slots; a tight `record()` loop spanning many ring wraps
+//!    must not allocate either.
+//! 3. **Negligible stage-loop overhead.** The same native stage loop is
 //!    timed with telemetry disabled and enabled, so the cost of spans +
 //!    histogram observations on the hot path is a printed measurement,
 //!    not folklore.
@@ -25,7 +30,7 @@ use sfprompt::backend::{run_stage_hosts, Backend, NativeBackend};
 use sfprompt::data::{make_batch, synth, SynthDataset};
 use sfprompt::model::init_params;
 use sfprompt::runtime::HostTensor;
-use sfprompt::telemetry::{self, Telemetry};
+use sfprompt::telemetry::{self, FlightRecorder, Telemetry};
 
 /// Counts allocation events (alloc + realloc) while `COUNTING` is set;
 /// delegates everything to `System`.
@@ -75,6 +80,25 @@ fn assert_disabled_path_is_allocation_free() {
     println!("disabled path: 0 allocations across {CALLS} active() calls");
 }
 
+fn assert_flight_record_is_allocation_free() {
+    let ring = FlightRecorder::with_capacity(1024);
+    const CALLS: u64 = 1_000_000;
+    COUNTING.store(true, Ordering::SeqCst);
+    let before = ALLOC_EVENTS.load(Ordering::SeqCst);
+    for i in 0..CALLS {
+        // ~977 full ring wraps: steady-state overwrite, not just fill.
+        ring.record("bench", "flight-alloc-guard-entry", i as f64, 1.0, 2.0);
+    }
+    let delta = ALLOC_EVENTS.load(Ordering::SeqCst) - before;
+    COUNTING.store(false, Ordering::SeqCst);
+    assert_eq!(
+        delta, 0,
+        "FlightRecorder::record allocated {delta} times in {CALLS} calls"
+    );
+    assert_eq!(ring.recorded(), CALLS, "every record() call must land");
+    println!("flight ring:   0 allocations across {CALLS} record() calls");
+}
+
 fn stage_loop(backend: &dyn Backend, iters: usize) {
     let cfg = backend.manifest().config.clone();
     let params = init_params(backend.manifest(), 7);
@@ -96,6 +120,7 @@ fn stage_loop(backend: &dyn Backend, iters: usize) {
 fn main() {
     println!("telemetry overhead benches");
     assert_disabled_path_is_allocation_free();
+    assert_flight_record_is_allocation_free();
 
     let backend = NativeBackend::for_config("tiny").unwrap();
     backend.warm(&["head_forward"]).unwrap();

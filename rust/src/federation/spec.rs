@@ -360,17 +360,30 @@ pub struct RunReport {
     /// sink (counters, latency histograms, hottest stages), emitted under
     /// a `"telemetry"` key.
     pub telemetry: Option<Json>,
+    /// Optional per-client health + anomaly rollup from a serving
+    /// coordinator's [`crate::telemetry::HealthRegistry`], emitted under a
+    /// `"health"` key. Like `wall_s`, this block is not part of the
+    /// deterministic report contract: comparisons (`sfprompt diff`, the CI
+    /// equality check) canonicalize it away.
+    pub health: Option<Json>,
 }
 
 impl RunReport {
     pub fn new(spec: &RunSpec, setup_bytes: u64, history: RunHistory) -> RunReport {
-        RunReport { spec: spec.clone(), setup_bytes, history, telemetry: None }
+        RunReport { spec: spec.clone(), setup_bytes, history, telemetry: None, health: None }
     }
 
     /// Attach a telemetry metrics block (normally
     /// [`crate::telemetry::MetricsRegistry::to_json`]) to the report.
     pub fn with_telemetry(mut self, telemetry: Json) -> RunReport {
         self.telemetry = Some(telemetry);
+        self
+    }
+
+    /// Attach a health block (normally
+    /// [`crate::telemetry::HealthRegistry::to_json`]) to the report.
+    pub fn with_health(mut self, health: Json) -> RunReport {
+        self.health = Some(health);
         self
     }
 
@@ -449,6 +462,9 @@ impl RunReport {
         o.insert("dropped_clients".to_string(), Json::Num(h.dropped_clients() as f64));
         if let Some(t) = &self.telemetry {
             o.insert("telemetry".to_string(), t.clone());
+        }
+        if let Some(hh) = &self.health {
+            o.insert("health".to_string(), hh.clone());
         }
         Json::Obj(o)
     }

@@ -174,6 +174,22 @@
 //! line-delimited JSON round-event stream (`serve --events FILE`, or a
 //! socket that sends one `observe` handshake). Zero new dependencies:
 //! threaded blocking `std::net`. See docs/NET.md.
+//!
+//! ## Live operations (docs/OPS.md)
+//!
+//! A serving coordinator is observable while it runs and debuggable when
+//! it dies: a [`telemetry::HealthRegistry`] tracks per-client liveness,
+//! straggler EWMAs, and run-level anomalies (non-finite/exploding loss,
+//! stalled accuracy, zero-survivor streaks); any peer can ask for a
+//! point-in-time snapshot with one `status` control message (`sfprompt
+//! top --connect HOST:PORT` is the polling console); `serve --prom ADDR`
+//! exposes the live metrics registry as Prometheus text over a minimal
+//! HTTP/1.0 responder; an always-on, alloc-free
+//! [`telemetry::FlightRecorder`] ring keeps the last ~1k events/span
+//! closures and dumps post-mortem JSONL (`--postmortem FILE`, rendered
+//! by `report --health`) when a run aborts or an anomaly fires; and
+//! `sfprompt diff A B` canonically compares two reports or bench
+//! snapshots with non-zero exit on regression — the CI gate.
 
 pub mod analysis;
 pub mod backend;

@@ -7,7 +7,10 @@
 //!              --trace t.jsonl --metrics m.json   record telemetry
 //!   serve      --listen ADDR --processes N run the coordinator over TCP
 //!   client     --connect HOST:PORT         run a networked client process
+//!   top        --connect HOST:PORT         live status console for a server
+//!   diff       A.json B.json               compare reports/bench snapshots
 //!   report     --trace t.jsonl             pretty-print a saved trace
+//!              --health e.jsonl            anomaly timeline from event/flight logs
 //!   experiment --id <fig2|fig4|...|all>    regenerate a paper table/figure
 //!   analyze                                closed-form cost model sweep
 
@@ -51,9 +54,13 @@ USAGE:
                       [--spec FILE.json | train flags] [--run-id ID]
                       [--events FILE.jsonl] [--io-timeout-s F] [--quiet] [--json]
                       [--trace FILE.jsonl] [--metrics FILE.json]
+                      [--prom HOST:PORT] [--postmortem FILE.jsonl]
   sfprompt client     --connect HOST:PORT [--name STR] [--run-id ID]
                       [--retries N] [--backoff-ms N] [--io-timeout-s F] [--quiet]
+  sfprompt top        --connect HOST:PORT [--interval-s F] [--once] [--json]
+  sfprompt diff       A.json B.json [--tolerance F] [--print-canon]
   sfprompt report     --trace FILE.jsonl [--chrome OUT.json] [--top N]
+  sfprompt report     --health FILE.jsonl
   sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|compress|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
@@ -96,6 +103,21 @@ the rounds with client compute happening remotely — the RunReport is
 byte-identical to the in-process `train` run of the same spec (modulo
 wall-clock). `--events` streams round events as JSON lines (observers can
 also subscribe over a socket). See docs/NET.md.
+
+Live operations (docs/OPS.md): a serving coordinator answers one-shot
+`status` probes at any point in the run — `top --connect HOST:PORT` polls
+them into a console table (`--once` prints a single snapshot, `--json`
+the raw body). `serve --prom ADDR` exposes the live metrics registry as
+Prometheus text at GET /metrics; `serve --postmortem FILE` dumps the
+always-on flight recorder (a bounded ring of recent health/span entries)
+the moment the run fails or an anomaly fires, and `report --health FILE`
+renders the anomaly timeline from an event stream or flight dump.
+
+`diff A B` compares two RunReports or BENCH_*.json snapshots field by
+field after canonicalizing wall-clock-dependent blocks away (wall_s,
+health, telemetry, machine, note); perf-pattern fields (mean_ms, p95_ms,
+...) compare within --tolerance (default 0.10 relative). Exit codes:
+0 match, 1 regression/divergence, 2 usage or unreadable input.
 ";
 
 fn main() {
@@ -116,6 +138,8 @@ fn dispatch(args: Args) -> Result<()> {
         Some("train") => train(&args),
         Some("serve") => serve_cmd(&args),
         Some("client") => client_cmd(&args),
+        Some("top") => top_cmd(&args),
+        Some("diff") => diff_cmd(&args),
         Some("report") => report(&args),
         Some("experiment") => experiment(&args),
         Some("analyze") => analyze(&args),
@@ -438,7 +462,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
             args.get_parse("io-timeout-s", 60.0f64),
         ),
         events,
+        postmortem: args.get("postmortem").map(std::path::PathBuf::from),
         quiet: args.has_flag("quiet") || json_out,
+        ..net::ServeOptions::default()
     };
     if !json_out && !opts.quiet {
         let f = &spec.fed;
@@ -451,13 +477,28 @@ fn serve_cmd(args: &Args) -> Result<()> {
         );
     }
 
+    // --prom forces telemetry on: a scraper needs a live registry even
+    // when no trace/metrics file was requested.
     let trace_path = args.get("trace");
     let metrics_path = args.get("metrics");
-    let telemetry = (trace_path.is_some() || metrics_path.is_some()).then(|| {
-        let t = Arc::new(Telemetry::new());
-        telemetry::install(t.clone());
-        t
-    });
+    let prom_addr = args.get("prom");
+    let telemetry = (trace_path.is_some() || metrics_path.is_some() || prom_addr.is_some())
+        .then(|| {
+            let t = Arc::new(Telemetry::new());
+            t.attach_flight(opts.flight.clone());
+            telemetry::install(t.clone());
+            t
+        });
+    let _prom = match (prom_addr, &telemetry) {
+        (Some(addr), Some(t)) => {
+            let handle = net::spawn_metrics_server(addr, t.clone())?;
+            if !opts.quiet {
+                eprintln!("serve: Prometheus exporter on http://{}/metrics", handle.addr());
+            }
+            Some(handle)
+        }
+        _ => None,
+    };
 
     let root = sfprompt::artifacts_root();
     let served = match &telemetry {
@@ -514,6 +555,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
     for (kind, bytes) in &hist.total_comm.by_kind {
         println!("  {kind:<22} {:.3} MB", *bytes as f64 / 1e6);
     }
+    let anomalies = opts.health.anomalies();
+    if !anomalies.is_empty() {
+        println!(
+            "  health: {} anomaly(ies) fired during the run — see the report's \
+             \"health\" block or `report --health`",
+            anomalies.len()
+        );
+    }
     Ok(())
 }
 
@@ -545,6 +594,271 @@ fn client_cmd(args: &Args) -> Result<()> {
         summary.rounds_participated
     );
     Ok(())
+}
+
+/// One `status` request/reply against a serving coordinator. The control
+/// plane answers one snapshot per connection, so every poll reconnects.
+fn fetch_status(addr: &str) -> Result<Json> {
+    let connect = net::ConnectOptions {
+        retries: 3,
+        backoff: std::time::Duration::from_millis(100),
+        io_timeout: std::time::Duration::from_secs(10),
+    };
+    let mut link = net::TcpLink::connect(addr, &connect)?;
+    link.send_control(&net::Control::Status { proto: net::NET_PROTO_VERSION })?;
+    match link.recv_msg(false)? {
+        Some(net::NetMsg::Control(net::Control::StatusReply { body }, _)) => Ok(body),
+        Some(net::NetMsg::Control(net::Control::Reject { reason }, _)) => {
+            bail!("server rejected the status probe: {reason}")
+        }
+        Some(net::NetMsg::Control(other, _)) => {
+            bail!("unexpected control {:?} in reply to status", other.kind())
+        }
+        Some(net::NetMsg::Frame(frame, _)) => {
+            bail!("unexpected {:?} frame in reply to status", frame.kind)
+        }
+        None => bail!("server closed the connection without a status reply"),
+    }
+}
+
+/// Render one status snapshot as a console block (`docs/OPS.md` schema).
+fn render_status(body: &Json) {
+    let s = |k: &str| body.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+    let f = |k: &str| body.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "run {} [{}]  method={} config={}  round {}/{}  clients={} procs={}  \
+         uptime {:.1}s  sim clock {:.1}s",
+        s("run_id"), s("state"), s("method"), s("config"),
+        f("round") as u64, f("rounds_total") as u64,
+        f("num_clients") as u64, f("processes") as u64,
+        f("uptime_s"), f("sim_s")
+    );
+    if let Some(bytes) = body.get("bytes") {
+        let bf = |k: &str| bytes.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "bytes: {:.3} MB wire / {:.3} MB raw (ratio {:.4})   flight entries {}",
+            bf("total") / 1e6, bf("raw") / 1e6, bf("compression_ratio"),
+            f("flight_recorded") as u64
+        );
+    }
+    if let Some(last) = body.get("last") {
+        let lf = |k: &str| {
+            last.get(k)
+                .and_then(Json::as_f64)
+                .map_or("-".to_string(), |v| format!("{v:.4}"))
+        };
+        println!(
+            "last round: local_loss={} split_loss={} accuracy={}",
+            lf("local_loss"), lf("split_loss"), lf("accuracy")
+        );
+    }
+    if let Some(clients) = body.get("clients").and_then(Json::as_obj) {
+        if !clients.is_empty() {
+            println!(
+                "{:>6} {:>6} {:>7} {:>10} {:>12} {:>10} {:>9} {:>9}",
+                "client", "done", "dropped", "ewma_s", "bytes_rx", "in_flight",
+                "seen_s", "straggler"
+            );
+            for (id, c) in clients {
+                let cf = |k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+                let age = cf("last_seen_age_s");
+                println!(
+                    "{id:>6} {:>6} {:>7} {:>10.3} {:>12} {:>10} {:>9} {:>9}",
+                    cf("rounds_done") as u64,
+                    cf("rounds_dropped") as u64,
+                    cf("latency_ewma_s"),
+                    cf("bytes_rx") as u64,
+                    cf("in_flight_bytes") as u64,
+                    if age < 0.0 { "never".to_string() } else { format!("{age:.1}") },
+                    if c.get("straggler").and_then(Json::as_bool) == Some(true) {
+                        "YES"
+                    } else {
+                        "-"
+                    }
+                );
+            }
+        }
+    }
+    if let Some(anomalies) = body.get("anomalies").and_then(Json::as_arr) {
+        for a in anomalies {
+            println!(
+                "ANOMALY round {}: {} (value {:?}, threshold {:?})",
+                a.get("round").and_then(Json::as_f64).unwrap_or(-1.0) as i64,
+                a.get("kind").and_then(Json::as_str).unwrap_or("?"),
+                a.get("value").and_then(Json::as_f64),
+                a.get("threshold").and_then(Json::as_f64)
+            );
+        }
+    }
+    if let Some(hottest) = body.get("hottest").and_then(Json::as_arr) {
+        if !hottest.is_empty() {
+            println!("hottest spans:");
+            for h in hottest {
+                println!(
+                    "  {:<8} {:<24} {:>9.3}s x{}",
+                    h.get("cat").and_then(Json::as_str).unwrap_or("?"),
+                    h.get("name").and_then(Json::as_str).unwrap_or("?"),
+                    h.get("total_s").and_then(Json::as_f64).unwrap_or(0.0),
+                    h.get("count").and_then(Json::as_f64).unwrap_or(0.0) as u64
+                );
+            }
+        }
+    }
+}
+
+/// `top --connect HOST:PORT`: poll the coordinator's `status` endpoint and
+/// render a live console table (one-shot with `--once`, raw with `--json`).
+fn top_cmd(args: &Args) -> Result<()> {
+    let addr = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("top needs --connect HOST:PORT"))?;
+    let interval_s: f64 = args.get_parse("interval-s", 1.0f64);
+    let once = args.has_flag("once");
+    let raw = args.has_flag("json");
+    loop {
+        let body = fetch_status(addr)?;
+        if raw {
+            println!("{body}");
+        } else {
+            if !once {
+                // ANSI clear + home: repaint in place like `top`.
+                print!("\x1b[2J\x1b[H");
+            }
+            render_status(&body);
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval_s.max(0.1)));
+    }
+}
+
+/// Recursively drop the fields two honest runs are allowed to disagree on:
+/// wall-clock blocks (`wall_s`, `health`, `telemetry`), machine context,
+/// and prose notes. Everything that remains is part of the deterministic
+/// contract.
+fn diff_canon(v: &Json) -> Json {
+    const DROP: [&str; 5] = ["wall_s", "health", "telemetry", "machine", "note"];
+    match v {
+        Json::Obj(o) => Json::Obj(
+            o.iter()
+                .filter(|(k, _)| !DROP.contains(&k.as_str()))
+                .map(|(k, x)| (k.clone(), diff_canon(x)))
+                .collect(),
+        ),
+        Json::Arr(a) => Json::Arr(a.iter().map(diff_canon).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Fields that measure real time/throughput: compared within a relative
+/// tolerance instead of exactly (bench timings wobble run to run).
+fn is_perf_key(key: &str) -> bool {
+    key.ends_with("_ms")
+        || key.ends_with("_us")
+        || key.ends_with("_ns")
+        || key.ends_with("ns_per_op")
+        || key.contains("elapsed")
+        || key.contains("wall")
+        || key.contains("gflops")
+        || key.ends_with("bytes_per_s")
+        || key.ends_with("mb_per_s")
+}
+
+/// Structural comparison of two canonicalized documents. Appends one line
+/// per divergence (path, both values) to `out`.
+fn diff_walk(a: &Json, b: &Json, path: &str, tolerance: f64, out: &mut Vec<String>) {
+    match (a, b) {
+        (Json::Obj(ao), Json::Obj(bo)) => {
+            let keys: std::collections::BTreeSet<&String> =
+                ao.keys().chain(bo.keys()).collect();
+            for k in keys {
+                let p = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match (ao.get(k), bo.get(k)) {
+                    (Some(x), Some(y)) => diff_walk(x, y, &p, tolerance, out),
+                    (Some(_), None) => out.push(format!("{p}: only in A")),
+                    (None, Some(_)) => out.push(format!("{p}: only in B")),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(aa), Json::Arr(ba)) => {
+            if aa.len() != ba.len() {
+                out.push(format!("{path}: array length {} vs {}", aa.len(), ba.len()));
+                return;
+            }
+            for (i, (x, y)) in aa.iter().zip(ba).enumerate() {
+                diff_walk(x, y, &format!("{path}[{i}]"), tolerance, out);
+            }
+        }
+        (Json::Num(x), Json::Num(y)) => {
+            let key = path.rsplit('.').next().unwrap_or(path);
+            if is_perf_key(key) {
+                let scale = x.abs().max(y.abs());
+                if scale > 0.0 && (x - y).abs() / scale > tolerance {
+                    out.push(format!(
+                        "{path}: {x} vs {y} (relative {:.4} > tolerance {tolerance})",
+                        (x - y).abs() / scale
+                    ));
+                }
+            } else if x != y && !(x.is_nan() && y.is_nan()) {
+                out.push(format!("{path}: {x} vs {y}"));
+            }
+        }
+        _ => {
+            if a != b {
+                out.push(format!("{path}: {a} vs {b}"));
+            }
+        }
+    }
+}
+
+/// `diff A.json B.json`: regression gate over two RunReports or bench
+/// snapshots. Exit 0 = canonically identical, 1 = divergence past the
+/// gates, 2 = usage/IO trouble.
+fn diff_cmd(args: &Args) -> Result<()> {
+    let (a_path, b_path) = match (args.positional.get(1), args.positional.get(2)) {
+        (Some(a), Some(b)) => (a.clone(), b.clone()),
+        _ => {
+            eprintln!("usage: sfprompt diff A.json B.json [--tolerance F] [--print-canon]");
+            std::process::exit(2);
+        }
+    };
+    let load = |path: &str| -> Json {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("diff: cannot read {path}: {e}");
+                std::process::exit(2);
+            }
+        };
+        match Json::parse(&text) {
+            Ok(v) => diff_canon(&v),
+            Err(e) => {
+                eprintln!("diff: {path} is not valid JSON: {e}");
+                std::process::exit(2);
+            }
+        }
+    };
+    let a = load(&a_path);
+    if args.has_flag("print-canon") {
+        // Emit A's canonical form (for committing golden references).
+        println!("{a}");
+        return Ok(());
+    }
+    let b = load(&b_path);
+    let tolerance: f64 = args.get_parse("tolerance", 0.10f64);
+    let mut diffs = Vec::new();
+    diff_walk(&a, &b, "", tolerance, &mut diffs);
+    if diffs.is_empty() {
+        println!("diff: {a_path} == {b_path} (canonicalized, tolerance {tolerance})");
+        return Ok(());
+    }
+    eprintln!("diff: {} divergence(s) between {a_path} and {b_path}:", diffs.len());
+    for d in &diffs {
+        eprintln!("  {d}");
+    }
+    std::process::exit(1);
 }
 
 /// Console rendering of `MetricsRegistry::hottest_stages` (a JSON array).
@@ -638,13 +952,98 @@ fn parse_trace(text: &str) -> Result<Vec<SpanRecord>> {
     Ok(out)
 }
 
+/// `report --health FILE.jsonl`: anomaly timeline from a live-ops log —
+/// either a serve `--events` stream (lines keyed `"event"`) or a flight
+/// recorder post-mortem dump (lines keyed `"ev"`); auto-detected.
+fn report_health(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading health log {path}"))?;
+    let mut rows: Vec<(f64, String)> = Vec::new();
+    let mut kind = "unknown";
+    let mut total_lines = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| anyhow!("{path} line {}: {e}", lineno + 1))?;
+        total_lines += 1;
+        if let Some(event) = v.get("event").and_then(Json::as_str) {
+            // serve --events stream.
+            kind = "event stream";
+            let round = v.get("round").and_then(Json::as_f64).unwrap_or(-1.0);
+            match event {
+                "health_anomaly" => rows.push((round, format!(
+                    "round {:>4}  ANOMALY {}  value={:?} threshold={:?}",
+                    round as i64,
+                    v.get("kind").and_then(Json::as_str).unwrap_or("?"),
+                    v.get("value").and_then(Json::as_f64),
+                    v.get("threshold").and_then(Json::as_f64)
+                ))),
+                "health_straggler" => rows.push((round, format!(
+                    "round {:>4}  straggler client {}  ewma={:.3}s median={:.3}s",
+                    round as i64,
+                    v.get("client").and_then(Json::as_f64).unwrap_or(-1.0) as i64,
+                    v.get("ewma_s").and_then(Json::as_f64).unwrap_or(0.0),
+                    v.get("median_s").and_then(Json::as_f64).unwrap_or(0.0)
+                ))),
+                "client_dropped" => rows.push((round, format!(
+                    "round {:>4}  client {} dropped ({})",
+                    round as i64,
+                    v.get("client").and_then(Json::as_f64).unwrap_or(-1.0) as i64,
+                    v.get("reason").and_then(Json::as_str).unwrap_or("?")
+                ))),
+                _ => {}
+            }
+        } else if let Some(ev) = v.get("ev").and_then(Json::as_str) {
+            // Flight recorder dump.
+            match ev {
+                "meta" => {
+                    kind = "flight dump";
+                    let fmt = v.get("format").and_then(Json::as_str);
+                    if fmt != Some("sfprompt-flight") {
+                        bail!("{path}: not a flight dump (format {fmt:?})");
+                    }
+                }
+                "flight" => {
+                    if v.get("kind").and_then(Json::as_str) == Some("anomaly") {
+                        let t = v.get("t_s").and_then(Json::as_f64).unwrap_or(0.0);
+                        rows.push((t, format!(
+                            "t={t:>8.3}s  ANOMALY {}  round={} value={:?} threshold={:?}",
+                            v.get("name").and_then(Json::as_str).unwrap_or("?"),
+                            v.get("v0").and_then(Json::as_f64).unwrap_or(-1.0) as i64,
+                            v.get("v1").and_then(Json::as_f64),
+                            v.get("v2").and_then(Json::as_f64)
+                        )));
+                    }
+                }
+                other => bail!("{path} line {}: unknown ev {other:?}", lineno + 1),
+            }
+        } else {
+            bail!("{path} line {}: neither an event line nor a flight entry", lineno + 1);
+        }
+    }
+    println!("health log {path}: {kind}, {total_lines} lines");
+    if rows.is_empty() {
+        println!("  no anomalies, stragglers, or drops recorded — healthy run");
+        return Ok(());
+    }
+    rows.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (_, row) in &rows {
+        println!("  {row}");
+    }
+    Ok(())
+}
+
 /// `report --trace FILE.jsonl [--chrome OUT.json] [--top N]`: pretty-print
 /// a saved trace — span census, round timeline, hottest stage spans — and
 /// optionally re-export it as Chrome trace-event JSON.
 fn report(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("health") {
+        return report_health(path);
+    }
     let path = args
         .get("trace")
-        .ok_or_else(|| anyhow!("report needs --trace FILE.jsonl"))?;
+        .ok_or_else(|| anyhow!("report needs --trace FILE.jsonl (or --health FILE.jsonl)"))?;
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
     let records = parse_trace(&text)?;

@@ -187,7 +187,7 @@ pub fn run_client(
             processes,
             client_ids,
             spec,
-        })) => {
+        }, _)) => {
             if proto != NET_PROTO_VERSION {
                 bail!("server speaks net protocol v{proto}, this client v{NET_PROTO_VERSION}");
             }
@@ -196,10 +196,10 @@ pub fn run_client(
             }
             (process, processes, client_ids, spec)
         }
-        Some(NetMsg::Control(Control::Reject { reason })) => {
+        Some(NetMsg::Control(Control::Reject { reason }, _)) => {
             bail!("server rejected the handshake: {reason}")
         }
-        Some(NetMsg::Control(other)) => {
+        Some(NetMsg::Control(other, _)) => {
             bail!("expected welcome, got control message {:?}", other.kind())
         }
         Some(NetMsg::Frame(frame, _)) => {
@@ -279,11 +279,11 @@ pub fn run_client(
                         ))
                     }
                 },
-                Ok(Some(NetMsg::Control(Control::Shutdown { reason }))) => break Ok(reason),
-                Ok(Some(NetMsg::Control(Control::Reject { reason }))) => {
+                Ok(Some(NetMsg::Control(Control::Shutdown { reason }, _))) => break Ok(reason),
+                Ok(Some(NetMsg::Control(Control::Reject { reason }, _))) => {
                     break Err(anyhow!("server rejected this process mid-run: {reason}"))
                 }
-                Ok(Some(NetMsg::Control(other))) => {
+                Ok(Some(NetMsg::Control(other, _))) => {
                     break Err(anyhow!("unexpected control message {:?}", other.kind()))
                 }
                 Err(e) => break Err(e.context("connection to server lost")),

@@ -51,6 +51,16 @@ pub enum Control {
     /// Peer → server, first message: subscribe to the line-delimited JSON
     /// round-event stream instead of joining as a client.
     Observe { proto: u8 },
+    /// Peer → server, first message: ask for a point-in-time server
+    /// snapshot instead of joining. Version-gated like `observe`; the
+    /// server answers with one [`Control::StatusReply`] and closes, so a
+    /// poller (`sfprompt top`) reconnects per sample.
+    Status { proto: u8 },
+    /// Server → peer: the snapshot. `body` is a JSON object (run/round
+    /// progress, per-client health table, byte totals, hottest stages —
+    /// schema in `docs/OPS.md`); it is carried opaquely so the snapshot
+    /// can grow without a control-protocol bump.
+    StatusReply { body: Json },
     /// Client → server after finishing a logical client's round: the
     /// per-epoch loss vectors the in-process engine would have returned
     /// from its client thread. Bit-exact via hex bit patterns.
@@ -117,6 +127,8 @@ impl Control {
             Control::Welcome { .. } => "welcome",
             Control::Reject { .. } => "reject",
             Control::Observe { .. } => "observe",
+            Control::Status { .. } => "status",
+            Control::StatusReply { .. } => "status_reply",
             Control::RoundReport { .. } => "round_report",
             Control::Shutdown { .. } => "shutdown",
         }
@@ -149,6 +161,12 @@ impl Control {
             }
             Control::Observe { proto } => {
                 o.insert("proto".to_string(), Json::Num(*proto as f64));
+            }
+            Control::Status { proto } => {
+                o.insert("proto".to_string(), Json::Num(*proto as f64));
+            }
+            Control::StatusReply { body } => {
+                o.insert("body".to_string(), body.clone());
             }
             Control::RoundReport { round, client, local_losses, split_losses } => {
                 o.insert("round".to_string(), Json::Num(*round as f64));
@@ -221,6 +239,19 @@ impl Control {
                 check_keys(obj, kind, &["proto"])?;
                 Ok(Control::Observe { proto: u8_field(obj, kind, "proto")? })
             }
+            "status" => {
+                check_keys(obj, kind, &["proto"])?;
+                Ok(Control::Status { proto: u8_field(obj, kind, "proto")? })
+            }
+            "status_reply" => {
+                check_keys(obj, kind, &["body"])?;
+                let body = obj
+                    .get("body")
+                    .filter(|b| b.as_obj().is_some())
+                    .cloned()
+                    .ok_or_else(|| anyhow!("control \"status_reply\" needs object \"body\""))?;
+                Ok(Control::StatusReply { body })
+            }
             "round_report" => {
                 check_keys(obj, kind, &["round", "client", "local_losses", "split_losses"])?;
                 Ok(Control::RoundReport {
@@ -236,7 +267,7 @@ impl Control {
             }
             other => bail!(
                 "unknown control kind {other:?} (known: hello welcome reject observe \
-                 round_report shutdown)"
+                 status status_reply round_report shutdown)"
             ),
         }
     }
@@ -296,6 +327,27 @@ mod tests {
             }
             other => panic!("wrong kind: {other:?}"),
         }
+    }
+
+    #[test]
+    fn status_and_reply_roundtrip_with_strict_keys() {
+        match roundtrip(&Control::Status { proto: 1 }) {
+            Control::Status { proto } => assert_eq!(proto, 1),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        let body = Json::parse(r#"{"round": 3, "state": "running"}"#).unwrap();
+        match roundtrip(&Control::StatusReply { body: body.clone() }) {
+            Control::StatusReply { body: got } => assert_eq!(got, body),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Unknown keys on a status request are rejected, like every kind.
+        let err = Control::from_json(&Json::parse(r#"{"kind":"status","proto":1,"verbose":true}"#).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("verbose"), "{err}");
+        // A reply body must be an object.
+        assert!(Control::from_json(&Json::parse(r#"{"kind":"status_reply","body":7}"#).unwrap())
+            .is_err());
     }
 
     #[test]

@@ -5,8 +5,14 @@
 //! line out to an optional file (`serve --events FILE`) and to every
 //! connected observer socket (a peer whose first message was
 //! `Control::Observe`). A dashboard can therefore `nc HOST PORT`, send
-//! one observe handshake, and tail the run live; dead observer sockets
-//! are dropped on the first failed write, never failing the run.
+//! one observe handshake, and tail the run live. Dead observer sockets
+//! never fail the run: a socket is culled when a write errors **or times
+//! out** — [`EventSink::subscribe`] arms a bounded write timeout, and
+//! between rounds the serve acceptor calls [`EventSink::tick`], which
+//! sends a socket-only `heartbeat` line after
+//! [`DEFAULT_HEARTBEAT`] of silence. A half-open peer (gone without a
+//! FIN, send buffer slowly filling) therefore gets culled within one
+//! heartbeat + timeout instead of holding a stale entry all run.
 //!
 //! Line schema (every line has `"event"`):
 //!
@@ -19,17 +25,30 @@
 //! | `eval`           | `round`, `accuracy`                                  |
 //! | `round_end`      | `round`, `local_loss`, `split_loss`, `accuracy` (null off eval rounds), `bytes`, `survivors`, `dropped`, `sim_latency_s`, `clock_s` |
 //! | `run_end`        | `rounds`, `final_accuracy`, `total_bytes`            |
+//! | `health_anomaly` | `round`, `kind`, `value`, `threshold` ([`HealthObserver`]) |
+//! | `health_straggler` | `round`, `client`, `ewma_s`, `median_s`            |
+//! | `heartbeat`      | `seq` (socket-only; never written to the file)       |
 
 use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::Write;
 use std::net::TcpStream;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::federation::{FedConfig, Method, RoundObserver};
 use crate::metrics::{RoundRecord, RunHistory};
 use crate::sim::DropReason;
+use crate::telemetry::{FlightRecorder, HealthRegistry};
 use crate::util::json::Json;
+
+/// Socket-silence threshold before [`EventSink::tick`] sends a heartbeat.
+pub const DEFAULT_HEARTBEAT: Duration = Duration::from_secs(10);
+
+/// Write timeout armed on every subscribed observer socket, so a stalled
+/// peer times out instead of blocking the emitting thread.
+const OBSERVER_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 fn num_or_null(v: f64) -> Json {
     if v.is_finite() {
@@ -39,21 +58,52 @@ fn num_or_null(v: f64) -> Json {
     }
 }
 
+#[derive(Default)]
+struct HbState {
+    /// Last time anything was written to the sockets; `None` until the
+    /// first [`EventSink::tick`] arms the clock, so short runs and unit
+    /// tests never see a spurious heartbeat.
+    last: Option<Instant>,
+    seq: u64,
+}
+
 /// Where event lines go: an optional file plus any number of observer
 /// sockets (shared with the acceptor thread, which appends mid-run).
-#[derive(Clone, Default)]
+#[derive(Clone)]
 pub struct EventSink {
     file: Arc<Mutex<Option<File>>>,
     observers: Arc<Mutex<Vec<TcpStream>>>,
+    hb: Arc<Mutex<HbState>>,
+    heartbeat: Duration,
+}
+
+impl Default for EventSink {
+    fn default() -> EventSink {
+        EventSink::new(None)
+    }
 }
 
 impl EventSink {
     pub fn new(file: Option<File>) -> EventSink {
-        EventSink { file: Arc::new(Mutex::new(file)), observers: Arc::default() }
+        EventSink {
+            file: Arc::new(Mutex::new(file)),
+            observers: Arc::default(),
+            hb: Arc::default(),
+            heartbeat: DEFAULT_HEARTBEAT,
+        }
     }
 
-    /// Register a subscribed observer socket.
+    /// Override the heartbeat interval (tests use a few milliseconds).
+    pub fn with_heartbeat(mut self, interval: Duration) -> EventSink {
+        self.heartbeat = interval;
+        self
+    }
+
+    /// Register a subscribed observer socket. A write timeout is armed so
+    /// a half-open peer whose send buffer fills causes a timed-out write
+    /// (and gets culled) instead of blocking the serve loop forever.
     pub fn subscribe(&self, stream: TcpStream) {
+        stream.set_write_timeout(Some(OBSERVER_WRITE_TIMEOUT)).ok();
         self.observers.lock().expect("observer list poisoned").push(stream);
     }
 
@@ -75,8 +125,47 @@ impl EventSink {
             }
         }
         drop(file);
+        self.write_sockets(&text);
+    }
+
+    /// Periodic liveness check, called by the serve acceptor between
+    /// admissions. When the sockets have been silent longer than the
+    /// heartbeat interval, a `{"event":"heartbeat","seq":N}` line is sent
+    /// to the sockets only (the file keeps its `run_start`..`run_end`
+    /// bracket), which both lets observers detect a wedged server and —
+    /// via the write timeout — culls peers that vanished without a FIN.
+    pub fn tick(&self) {
+        let due = {
+            let mut hb = self.hb.lock().expect("heartbeat state poisoned");
+            match hb.last {
+                None => {
+                    hb.last = Some(Instant::now());
+                    return; // first tick only arms the clock
+                }
+                Some(last) if last.elapsed() < self.heartbeat => return,
+                Some(_) => {
+                    hb.seq += 1;
+                    hb.seq
+                }
+            }
+        };
+        if self.observers.lock().expect("observer list poisoned").is_empty() {
+            // Still refresh the clock so a later subscriber is not greeted
+            // by an instant heartbeat burst.
+            self.hb.lock().expect("heartbeat state poisoned").last = Some(Instant::now());
+            return;
+        }
+        let mut o = BTreeMap::new();
+        o.insert("event".to_string(), Json::Str("heartbeat".to_string()));
+        o.insert("seq".to_string(), Json::Num(due as f64));
+        self.write_sockets(&format!("{}\n", Json::Obj(o)));
+    }
+
+    fn write_sockets(&self, text: &str) {
         let mut socks = self.observers.lock().expect("observer list poisoned");
         socks.retain_mut(|s| s.write_all(text.as_bytes()).is_ok());
+        drop(socks);
+        self.hb.lock().expect("heartbeat state poisoned").last = Some(Instant::now());
     }
 }
 
@@ -180,6 +269,174 @@ impl RoundObserver for EventStreamObserver {
     }
 }
 
+/// [`RoundObserver`] that drives the serve-side [`HealthRegistry`], mirrors
+/// the round stream into the [`FlightRecorder`], and emits typed
+/// `health_anomaly` / `health_straggler` event lines. When a post-mortem
+/// path is set, the flight ring is dumped the moment an anomaly fires, so
+/// the evidence survives even if the process dies right after.
+pub struct HealthObserver {
+    registry: Arc<HealthRegistry>,
+    flight: Arc<FlightRecorder>,
+    sink: EventSink,
+    postmortem: Option<PathBuf>,
+    quiet: bool,
+}
+
+impl HealthObserver {
+    pub fn new(
+        registry: Arc<HealthRegistry>,
+        flight: Arc<FlightRecorder>,
+        sink: EventSink,
+    ) -> HealthObserver {
+        HealthObserver { registry, flight, sink, postmortem: None, quiet: false }
+    }
+
+    pub fn with_postmortem(mut self, path: Option<PathBuf>) -> HealthObserver {
+        self.postmortem = path;
+        self
+    }
+
+    pub fn quiet(mut self, quiet: bool) -> HealthObserver {
+        self.quiet = quiet;
+        self
+    }
+
+    fn line(&self, event: &str, fields: Vec<(&str, Json)>) {
+        let mut o = BTreeMap::new();
+        o.insert("event".to_string(), Json::Str(event.to_string()));
+        for (k, v) in fields {
+            o.insert(k.to_string(), v);
+        }
+        self.sink.emit(&Json::Obj(o));
+    }
+
+    fn anomaly_fired(&self, a: &crate::telemetry::Anomaly) {
+        self.flight
+            .record("anomaly", a.kind.label(), a.round as f64, a.value, a.threshold);
+        self.line(
+            "health_anomaly",
+            vec![
+                ("round", Json::Num(a.round as f64)),
+                ("kind", Json::Str(a.kind.label().to_string())),
+                ("value", num_or_null(a.value)),
+                ("threshold", num_or_null(a.threshold)),
+            ],
+        );
+        if !self.quiet {
+            eprintln!(
+                "serve: health anomaly at round {}: {} (value {}, threshold {})",
+                a.round,
+                a.kind.label(),
+                a.value,
+                a.threshold
+            );
+        }
+        self.dump_postmortem("anomaly");
+    }
+
+    /// Dump the flight ring to the configured post-mortem path (best
+    /// effort; a failing dump is reported, never fatal).
+    pub fn dump_postmortem(&self, why: &str) {
+        if let Some(path) = &self.postmortem {
+            match self.flight.dump_to(path) {
+                Ok(()) if !self.quiet => {
+                    eprintln!("serve: post-mortem ({why}) written to {}", path.display());
+                }
+                Ok(()) => {}
+                Err(e) => eprintln!("serve: post-mortem dump failed: {e}"),
+            }
+        }
+    }
+}
+
+impl RoundObserver for HealthObserver {
+    fn on_run_start(&mut self, method: Method, fed: &FedConfig) {
+        self.registry.begin_run(method.label(), fed.rounds, fed.num_clients);
+        self.flight.record(
+            "health",
+            "run_start",
+            fed.rounds as f64,
+            fed.num_clients as f64,
+            fed.clients_per_round as f64,
+        );
+    }
+
+    fn on_round_start(&mut self, round: usize) {
+        self.flight.record("health", "round_start", round as f64, 0.0, 0.0);
+    }
+
+    fn on_client_done(&mut self, round: usize, client: usize, finish_s: f64) {
+        self.registry.client_done(round, client, finish_s);
+        self.flight
+            .record("health", "client_done", round as f64, client as f64, finish_s);
+    }
+
+    fn on_client_dropped(&mut self, round: usize, client: usize, at_s: f64, reason: DropReason) {
+        self.registry.client_dropped(round, client);
+        self.flight
+            .record("health", reason.label(), round as f64, client as f64, at_s);
+    }
+
+    fn on_eval(&mut self, round: usize, accuracy: f64) {
+        self.flight.record("health", "eval", round as f64, accuracy, 0.0);
+        if let Some(a) = self.registry.eval(round, accuracy) {
+            self.anomaly_fired(&a);
+        }
+    }
+
+    fn on_round_end(&mut self, rec: &RoundRecord, clock_s: f64) {
+        let rh = self.registry.round_end(
+            rec.round,
+            rec.mean_local_loss,
+            rec.mean_split_loss,
+            rec.survivors(),
+            rec.comm.total(),
+            rec.comm.raw_total(),
+            clock_s,
+        );
+        self.flight.record(
+            "health",
+            "round_end",
+            rec.round as f64,
+            rec.comm.total() as f64,
+            clock_s,
+        );
+        for a in &rh.anomalies {
+            self.anomaly_fired(a);
+        }
+        for s in &rh.new_stragglers {
+            self.flight
+                .record("anomaly", "straggler", s.round as f64, s.client as f64, s.ewma_s);
+            self.line(
+                "health_straggler",
+                vec![
+                    ("round", Json::Num(s.round as f64)),
+                    ("client", Json::Num(s.client as f64)),
+                    ("ewma_s", num_or_null(s.ewma_s)),
+                    ("median_s", num_or_null(s.median_s)),
+                ],
+            );
+            if !self.quiet {
+                eprintln!(
+                    "serve: client {} flagged straggler at round {} (ewma {:.3}s vs median {:.3}s)",
+                    s.client, s.round, s.ewma_s, s.median_s
+                );
+            }
+        }
+    }
+
+    fn on_run_end(&mut self, history: &RunHistory) {
+        self.registry.end_run(false);
+        self.flight.record(
+            "health",
+            "run_end",
+            history.rounds.len() as f64,
+            history.final_accuracy(),
+            history.total_comm.total() as f64,
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -243,5 +500,113 @@ mod tests {
             }
         }
         assert!(!sink.has_outputs(), "dead observer must eventually be culled");
+    }
+
+    #[test]
+    fn heartbeat_reaches_sockets_only_after_the_interval() {
+        let sink = EventSink::new(None).with_heartbeat(Duration::from_millis(5));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        sink.subscribe(TcpStream::connect(addr).unwrap());
+        let (mut server_side, _) = listener.accept().unwrap();
+
+        sink.tick(); // arms the clock only — no heartbeat yet
+        std::thread::sleep(Duration::from_millis(10));
+        sink.tick(); // past the interval: emits heartbeat 1
+        sink.tick(); // clock was just refreshed: silent
+        sink.observers.lock().unwrap().clear(); // close so read terminates
+
+        let mut buf = String::new();
+        server_side.read_to_string(&mut buf).unwrap();
+        let lines: Vec<&str> = buf.lines().collect();
+        assert_eq!(lines.len(), 1, "exactly one heartbeat: {buf:?}");
+        let hb = Json::parse(lines[0]).unwrap();
+        assert_eq!(hb.get("event").unwrap().as_str(), Some("heartbeat"));
+        assert_eq!(hb.get("seq").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn tick_culls_a_peer_that_vanished_without_a_fin() {
+        let sink = EventSink::new(None).with_heartbeat(Duration::from_millis(1));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        drop(client); // peer gone; no more emits will happen
+        sink.subscribe(server_side);
+        sink.tick(); // arm
+        // Heartbeats alone must discover the dead peer (the PR-8 behaviour
+        // only culled on the next *event* write, which may never come).
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(2));
+            sink.tick();
+            if !sink.has_outputs() {
+                break;
+            }
+        }
+        assert!(!sink.has_outputs(), "heartbeat ticks must cull the dead peer");
+    }
+
+    #[test]
+    fn health_observer_fires_anomaly_events_and_postmortem_dump() {
+        use crate::comm::ByteMeter;
+        use crate::sim::{ClientEvent, ClientOutcome};
+
+        let dir = std::env::temp_dir().join("sfprompt_health_obs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let events_path = dir.join("events.jsonl");
+        let pm_path = dir.join("postmortem.jsonl");
+        std::fs::remove_file(&pm_path).ok();
+
+        let sink = EventSink::new(Some(File::create(&events_path).unwrap()));
+        let registry = Arc::new(HealthRegistry::new());
+        let flight = Arc::new(FlightRecorder::with_capacity(64));
+        let mut obs = HealthObserver::new(registry.clone(), flight.clone(), sink)
+            .with_postmortem(Some(pm_path.clone()))
+            .quiet(true);
+
+        let rec = |round: usize, loss: f64| RoundRecord {
+            round,
+            mean_local_loss: loss,
+            mean_split_loss: loss,
+            eval_accuracy: f64::NAN,
+            comm: ByteMeter::default(),
+            wall_s: 0.0,
+            sim_latency_s: 1.0,
+            clients: (0..3)
+                .map(|c| ClientEvent { client: c, at_s: 1.0, outcome: ClientOutcome::Done })
+                .collect(),
+        };
+        obs.on_run_start(Method::SfPrompt, &FedConfig::default());
+        obs.on_round_end(&rec(0, 1.0), 1.0); // baseline
+        obs.on_round_end(&rec(1, 100.0), 2.0); // 100x baseline: explodes
+
+        let anomalies = registry.anomalies();
+        assert_eq!(anomalies.len(), 1);
+        assert_eq!(anomalies[0].kind, crate::telemetry::AnomalyKind::ExplodingLoss);
+
+        let text = std::fs::read_to_string(&events_path).unwrap();
+        let anomaly_line = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .find(|j| j.get("event").and_then(Json::as_str) == Some("health_anomaly"))
+            .expect("health_anomaly event line emitted");
+        assert_eq!(
+            anomaly_line.get("kind").and_then(Json::as_str),
+            Some("loss_exploding")
+        );
+
+        let pm = std::fs::read_to_string(&pm_path).expect("post-mortem dumped on anomaly");
+        let meta = Json::parse(pm.lines().next().unwrap()).unwrap();
+        assert_eq!(meta.get("ev").and_then(Json::as_str), Some("meta"));
+        assert!(
+            pm.lines()
+                .skip(1)
+                .map(|l| Json::parse(l).unwrap())
+                .any(|j| j.get("kind").and_then(Json::as_str) == Some("anomaly")),
+            "flight dump carries the anomaly entry"
+        );
+        std::fs::remove_file(&events_path).ok();
+        std::fs::remove_file(&pm_path).ok();
     }
 }

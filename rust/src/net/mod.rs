@@ -13,8 +13,8 @@
 //!   and control messages; typed [`wire::NetError`]s for every way a
 //!   socket can lie (truncation, oversize, garbage, stall, version skew).
 //! * [`control`] — strict unknown-rejecting JSON control plane: Hello /
-//!   Welcome (carrying the full `RunSpec`) / Reject / Observe /
-//!   RoundReport (bit-exact hex floats) / Shutdown.
+//!   Welcome (carrying the full `RunSpec`) / Reject / Observe / Status /
+//!   StatusReply / RoundReport (bit-exact hex floats) / Shutdown.
 //! * [`tcp`] — [`tcp::TcpLink`], the socket-backed
 //!   [`crate::transport::Transport`] with timeouts, connect retry with
 //!   backoff, and telemetry byte counters.
@@ -23,21 +23,29 @@
 //! * [`client`] — the client process: handshake, deterministic state
 //!   rebuild, per-owned-client workers over one demultiplexed socket.
 //! * [`events`] — line-delimited JSON round events to a file and to
-//!   `Observe`-subscribed sockets (`docs/NET.md` has the schema).
+//!   `Observe`-subscribed sockets (`docs/NET.md` has the schema), with
+//!   heartbeat-based dead-peer culling and the health observer that feeds
+//!   the live-operations layer (`docs/OPS.md`).
+//! * [`prom`] — `GET /metrics` Prometheus text exposition over a minimal
+//!   HTTP/1.0 responder (`serve --prom ADDR`).
 //!
-//! CLI: `sfprompt serve --listen ADDR --processes N …` and
-//! `sfprompt client --connect HOST:PORT …`; see `docs/NET.md`.
+//! CLI: `sfprompt serve --listen ADDR --processes N …`,
+//! `sfprompt client --connect HOST:PORT …`, and the live-ops consoles
+//! `sfprompt top --connect HOST:PORT`; see `docs/NET.md` and
+//! `docs/OPS.md`.
 
 pub mod client;
 pub mod control;
 pub mod events;
+pub mod prom;
 pub mod serve;
 pub mod tcp;
 pub mod wire;
 
 pub use client::{run_client, ClientOptions, ClientSummary};
 pub use control::{Control, SHUTDOWN_COMPLETE};
-pub use events::{EventSink, EventStreamObserver};
+pub use events::{EventSink, EventStreamObserver, HealthObserver, DEFAULT_HEARTBEAT};
+pub use prom::{spawn_metrics_server, PromHandle};
 pub use serve::{owned_clients, serve, ServeOptions};
 pub use tcp::{ConnectOptions, TcpLink};
 pub use wire::{NetError, NetMsg, MAX_MSG_LEN, NET_PROTO_VERSION};

@@ -1,0 +1,161 @@
+//! Prometheus text exposition over a minimal HTTP/1.0 responder.
+//!
+//! `sfprompt serve --prom ADDR` spawns [`spawn_metrics_server`], which
+//! answers `GET /metrics` with the live [`MetricsRegistry`] rendered by
+//! `MetricsRegistry::to_prometheus_text` (text format 0.0.4: one `# TYPE`
+//! per family, histograms as cumulative `_bucket`/`_sum`/`_count`).
+//!
+//! Zero dependencies and deliberately tiny: this is not a web server. One
+//! request per connection, `Connection: close`, a bounded header read with
+//! timeouts, and only two routes (`/` banner, `/metrics`). That is exactly
+//! the subset a Prometheus scraper (or `curl`) exercises, and nothing a
+//! hostile peer can wedge: a slow-loris connection times out, an oversized
+//! header is cut off at 8 KiB, and every connection is handled inline on
+//! the responder thread — a stalled scrape delays the next scrape, never
+//! the federation.
+//!
+//! [`MetricsRegistry`]: crate::telemetry::MetricsRegistry
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::telemetry::Telemetry;
+
+/// Per-connection socket timeout: a scraper that stalls longer gets cut.
+const HTTP_IO_TIMEOUT: Duration = Duration::from_secs(5);
+/// Request headers larger than this are truncated (the request line is all
+/// we parse anyway).
+const MAX_HEADER_BYTES: usize = 8 * 1024;
+
+/// Running exporter; stops (and joins its thread) on drop.
+pub struct PromHandle {
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl PromHandle {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for PromHandle {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Bind `addr` and serve `GET /metrics` from `telemetry` on a background
+/// thread until the handle is dropped.
+pub fn spawn_metrics_server(addr: &str, telemetry: Arc<Telemetry>) -> Result<PromHandle> {
+    let listener = TcpListener::bind(addr)
+        .with_context(|| format!("binding Prometheus exporter on {addr}"))?;
+    let local = listener.local_addr().context("exporter local_addr")?;
+    listener.set_nonblocking(true).context("exporter set_nonblocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let thread_stop = stop.clone();
+    let join = std::thread::spawn(move || responder_loop(listener, &telemetry, &thread_stop));
+    Ok(PromHandle { stop, join: Some(join), addr: local })
+}
+
+fn responder_loop(listener: TcpListener, telemetry: &Telemetry, stop: &AtomicBool) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                let _ = answer(stream, telemetry); // a bad scrape is the scraper's problem
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+fn answer(mut stream: TcpStream, telemetry: &Telemetry) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(HTTP_IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(HTTP_IO_TIMEOUT))?;
+
+    let mut head = Vec::new();
+    let mut chunk = [0u8; 1024];
+    while !head.windows(4).any(|w| w == b"\r\n\r\n") && head.len() < MAX_HEADER_BYTES {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&chunk[..n]);
+    }
+    let head = String::from_utf8_lossy(&head);
+    let mut request_line = head.lines().next().unwrap_or("").split_whitespace();
+    let method = request_line.next().unwrap_or("");
+    let path = request_line.next().unwrap_or("");
+
+    let (status, content_type, body) = match (method, path) {
+        ("GET", "/metrics") | ("GET", "/metrics/") => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            telemetry.metrics.to_prometheus_text(),
+        ),
+        ("GET", "/") => (
+            "200 OK",
+            "text/plain; charset=utf-8",
+            "sfprompt metrics exporter; scrape /metrics\n".to_string(),
+        ),
+        _ => ("404 Not Found", "text/plain; charset=utf-8", "not found\n".to_string()),
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(format!("GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").as_bytes()).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_with_type_headers_and_404s_elsewhere() {
+        let telemetry = Arc::new(Telemetry::new());
+        telemetry.metrics.counter_add("net/tx_frames", 7);
+        telemetry.metrics.observe("stage/head_forward", 0.25);
+        let handle = spawn_metrics_server("127.0.0.1:0", telemetry.clone()).unwrap();
+
+        let resp = http_get(handle.addr(), "/metrics");
+        assert!(resp.starts_with("HTTP/1.0 200 OK\r\n"), "got: {resp}");
+        assert!(resp.contains("Content-Type: text/plain; version=0.0.4"));
+        let body = resp.split("\r\n\r\n").nth(1).unwrap();
+        assert!(body.contains("# TYPE sfprompt_net counter"), "body: {body}");
+        assert!(body.contains("sfprompt_net{item=\"tx_frames\"} 7"), "body: {body}");
+        assert!(body.contains("# TYPE sfprompt_stage histogram"), "body: {body}");
+        assert!(body.contains("le=\"+Inf\""), "body: {body}");
+
+        let missing = http_get(handle.addr(), "/nope");
+        assert!(missing.starts_with("HTTP/1.0 404"), "got: {missing}");
+
+        let banner = http_get(handle.addr(), "/");
+        assert!(banner.contains("scrape /metrics"));
+        drop(handle); // joins the responder thread
+    }
+}

@@ -18,10 +18,13 @@
 //! * one **reader thread** per client process funnels inbound messages
 //!   into a shared mpsc channel (frames and round reports alike);
 //! * writes go through per-process `Mutex<TcpLink>` write halves;
-//! * a background **acceptor** admits event-stream observers mid-run and
-//!   politely rejects latecomer clients;
+//! * a background **acceptor** admits event-stream observers mid-run,
+//!   answers one-shot `status` probes (see [`HealthRegistry`] and
+//!   `docs/OPS.md`), drives the event sink's heartbeat, and politely
+//!   rejects latecomer clients;
 //! * the driver thread runs the round loop exactly like the in-process
-//!   path.
+//!   path, with a [`HealthObserver`] teeing every callback into the
+//!   health registry and the always-on [`FlightRecorder`].
 //!
 //! Failure surface: a client that disconnects or aborts mid-run fails the
 //! round with a typed, attributed error; on any exit (success or error)
@@ -29,11 +32,12 @@
 //! sockets down so nothing hangs.
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::net::{TcpListener, TcpStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
@@ -49,11 +53,13 @@ use crate::federation::{
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet};
 use crate::sim::Fleet;
+use crate::telemetry::{FlightRecorder, HealthRegistry};
 use crate::transport::{Frame, FrameHub, Transport, WireFormat, WIRE_VERSION};
+use crate::util::json::Json;
 use crate::util::rng::{seeds, Rng};
 
 use super::control::{Control, SHUTDOWN_COMPLETE};
-use super::events::{EventSink, EventStreamObserver};
+use super::events::{EventSink, EventStreamObserver, HealthObserver};
 use super::tcp::TcpLink;
 use super::wire::{NetError, NetMsg, NET_PROTO_VERSION};
 
@@ -69,6 +75,14 @@ pub struct ServeOptions {
     pub io_timeout: Duration,
     /// Event-line fan-out (file and/or subscribed observer sockets).
     pub events: EventSink,
+    /// Live health book-keeping; `status` requests snapshot it at any
+    /// point in the run (shared so the caller can inspect it afterwards).
+    pub health: Arc<HealthRegistry>,
+    /// Always-on bounded ring of recent health/span entries; dumped as a
+    /// post-mortem when the run fails or an anomaly fires.
+    pub flight: Arc<FlightRecorder>,
+    /// Where to dump the flight ring on failure/anomaly (None = never).
+    pub postmortem: Option<PathBuf>,
     /// Suppress per-connection stderr chatter.
     pub quiet: bool,
 }
@@ -80,9 +94,48 @@ impl Default for ServeOptions {
             run_id: String::new(),
             io_timeout: Duration::from_secs(60),
             events: EventSink::default(),
+            health: Arc::new(HealthRegistry::new()),
+            flight: Arc::new(FlightRecorder::new()),
+            postmortem: None,
             quiet: false,
         }
     }
+}
+
+/// Point-in-time `status` reply body: the health registry snapshot plus
+/// run identity and the hottest telemetry stages (when tracing is on).
+/// Schema documented in `docs/OPS.md`; consumed by `sfprompt top`.
+fn status_snapshot(spec: &RunSpec, opts: &ServeOptions) -> Json {
+    let mut o = match opts.health.status_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!("status_json always returns an object"),
+    };
+    o.insert("run_id".into(), Json::Str(opts.run_id.clone()));
+    o.insert("processes".into(), Json::Num(opts.processes as f64));
+    o.insert("config".into(), Json::Str(spec.config.clone()));
+    o.insert("flight_recorded".into(), Json::Num(opts.flight.recorded() as f64));
+    let mut hottest = Vec::new();
+    if let Some(t) = crate::telemetry::active() {
+        // Aggregate closed spans by cat/name, keep the five hottest.
+        let mut totals: BTreeMap<(String, String), (f64, u64)> = BTreeMap::new();
+        for r in t.tracer.records() {
+            let e = totals.entry((r.cat.to_string(), r.name)).or_insert((0.0, 0));
+            e.0 += r.end_s - r.start_s;
+            e.1 += 1;
+        }
+        let mut rows: Vec<_> = totals.into_iter().collect();
+        rows.sort_by(|a, b| b.1 .0.total_cmp(&a.1 .0));
+        for ((cat, name), (total_s, count)) in rows.into_iter().take(5) {
+            let mut row = BTreeMap::new();
+            row.insert("cat".into(), Json::Str(cat));
+            row.insert("name".into(), Json::Str(name));
+            row.insert("total_s".into(), Json::Num(total_s));
+            row.insert("count".into(), Json::Num(count as f64));
+            hottest.push(Json::Obj(row));
+        }
+    }
+    o.insert("hottest".into(), Json::Arr(hottest));
+    Json::Obj(o)
 }
 
 /// The logical clients process `p` of `n` owns.
@@ -347,7 +400,7 @@ fn admit_connection(
         link.shutdown();
     };
     match link.recv_msg(false) {
-        Ok(Some(NetMsg::Control(Control::Hello { proto, wire, name, run_id }))) => {
+        Ok(Some(NetMsg::Control(Control::Hello { proto, wire, name, run_id }, _))) => {
             if !accepting_clients {
                 reject(&mut link, "run already in progress (connect as an observer)".into());
                 return None;
@@ -406,7 +459,7 @@ fn admit_connection(
                 }
             }
         }
-        Ok(Some(NetMsg::Control(Control::Observe { proto }))) => {
+        Ok(Some(NetMsg::Control(Control::Observe { proto }, _))) => {
             if proto != NET_PROTO_VERSION {
                 reject(&mut link, format!("observer protocol v{proto} != v{NET_PROTO_VERSION}"));
                 return None;
@@ -417,7 +470,23 @@ fn admit_connection(
             opts.events.subscribe(link.into_stream());
             None
         }
-        Ok(Some(NetMsg::Control(other))) => {
+        Ok(Some(NetMsg::Control(Control::Status { proto }, _))) => {
+            if proto != NET_PROTO_VERSION {
+                reject(&mut link, format!("status protocol v{proto} != v{NET_PROTO_VERSION}"));
+                return None;
+            }
+            // One snapshot per connection: reply and hang up (`sfprompt
+            // top` reconnects per poll).
+            let reply = Control::StatusReply { body: status_snapshot(spec, opts) };
+            if let Err(e) = link.send_control(&reply) {
+                if !opts.quiet {
+                    eprintln!("serve: status reply to {peer} failed ({e})");
+                }
+            }
+            link.shutdown();
+            None
+        }
+        Ok(Some(NetMsg::Control(other, _))) => {
             reject(&mut link, format!("expected hello or observe, got {:?}", other.kind()));
             None
         }
@@ -437,8 +506,16 @@ fn admit_connection(
 }
 
 /// Reader-thread body: funnel one client process's inbound messages into
-/// the shared hub channel until the socket closes or the run stops.
-fn reader_loop(mut link: TcpLink, tx: Sender<Result<HubMsg>>, process: usize, stop: &AtomicBool) {
+/// the shared hub channel until the socket closes or the run stops. Every
+/// received frame feeds the health registry's per-client byte/liveness
+/// accounting — the real socket traffic, not the simulated meter.
+fn reader_loop(
+    mut link: TcpLink,
+    tx: Sender<Result<HubMsg>>,
+    process: usize,
+    stop: &AtomicBool,
+    health: &HealthRegistry,
+) {
     loop {
         if stop.load(Ordering::Relaxed) {
             return;
@@ -446,6 +523,7 @@ fn reader_loop(mut link: TcpLink, tx: Sender<Result<HubMsg>>, process: usize, st
         match link.recv_msg(true) {
             Ok(None) => continue, // idle poll; re-check the stop flag
             Ok(Some(NetMsg::Frame(frame, n))) => {
+                health.client_bytes(frame.client as usize, n as u64);
                 if tx.send(Ok(HubMsg::Frame(frame, n))).is_err() {
                     return;
                 }
@@ -455,7 +533,7 @@ fn reader_loop(mut link: TcpLink, tx: Sender<Result<HubMsg>>, process: usize, st
                 client,
                 local_losses,
                 split_losses,
-            }))) => {
+            }, _))) => {
                 if tx
                     .send(Ok(HubMsg::Report { round, client, local_losses, split_losses }))
                     .is_err()
@@ -463,7 +541,7 @@ fn reader_loop(mut link: TcpLink, tx: Sender<Result<HubMsg>>, process: usize, st
                     return;
                 }
             }
-            Ok(Some(NetMsg::Control(other))) => {
+            Ok(Some(NetMsg::Control(other, _))) => {
                 let _ = tx.send(Err(anyhow!(
                     "client process {process} sent unexpected control {:?}",
                     other.kind()
@@ -487,8 +565,11 @@ fn reader_loop(mut link: TcpLink, tx: Sender<Result<HubMsg>>, process: usize, st
     }
 }
 
-/// Background acceptor after admission: observers may subscribe mid-run;
-/// latecomer clients get a polite reject.
+/// Background acceptor after admission: observers may subscribe and
+/// `status` probes get answered mid-run; latecomer clients get a polite
+/// reject. The idle branch doubles as the liveness clock — it drives the
+/// event sink's heartbeat, which culls observer sockets whose peer
+/// vanished without a FIN.
 fn acceptor_loop(listener: TcpListener, spec: &RunSpec, opts: &ServeOptions, stop: &AtomicBool) {
     if listener.set_nonblocking(true).is_err() {
         return;
@@ -501,6 +582,7 @@ fn acceptor_loop(listener: TcpListener, spec: &RunSpec, opts: &ServeOptions, sto
                 let _ = admit_connection(stream, spec, opts, usize::MAX, false);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                opts.events.tick();
                 std::thread::sleep(Duration::from_millis(50));
             }
             Err(_) => return,
@@ -594,7 +676,8 @@ pub fn serve(
         for (process, reader) in readers.into_iter().enumerate() {
             let tx = tx.clone();
             let stop = &stop;
-            scope.spawn(move || reader_loop(reader, tx, process, stop));
+            let health = &*opts.health;
+            scope.spawn(move || reader_loop(reader, tx, process, stop, health));
         }
         drop(tx); // readers hold the only senders now
         scope.spawn(|| acceptor_loop(listener, spec, opts, &stop));
@@ -612,8 +695,13 @@ pub fn serve(
             history: RunHistory::default(),
             net: &net,
         };
+        let mut health_obs =
+            HealthObserver::new(opts.health.clone(), opts.flight.clone(), opts.events.clone())
+                .with_postmortem(opts.postmortem.clone())
+                .quiet(opts.quiet);
         let mut event_obs = EventStreamObserver::new(opts.events.clone());
-        let mut tee = Tee(obs, &mut event_obs);
+        let mut inner = Tee(&mut health_obs, &mut event_obs);
+        let mut tee = Tee(obs, &mut inner);
         let result = drive(&mut engine, &mut tee);
 
         // --- Teardown, success or not: tell every client, drop the
@@ -622,6 +710,13 @@ pub fn serve(
             Ok(_) => SHUTDOWN_COMPLETE.to_string(),
             Err(e) => format!("run failed: {e}"),
         };
+        if let Err(e) = &result {
+            // The run died: seal the health state and flush the flight
+            // ring so the evidence outlives the process.
+            opts.flight.record("health", &format!("run_failed: {e}"), 0.0, 0.0, 0.0);
+            opts.health.end_run(true);
+            health_obs.dump_postmortem("run failed");
+        }
         stop.store(true, Ordering::Relaxed);
         for writer in &net.writers {
             let mut link = writer.lock().expect("writer lock poisoned");
@@ -631,5 +726,6 @@ pub fn serve(
         result
     })?;
 
-    Ok(RunReport::new(spec, head_bytes * spec.fed.num_clients as u64, history))
+    Ok(RunReport::new(spec, head_bytes * spec.fed.num_clients as u64, history)
+        .with_health(opts.health.to_json()))
 }

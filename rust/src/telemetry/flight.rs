@@ -1,0 +1,281 @@
+//! Flight recorder: a bounded, lock-light ring of recent events.
+//!
+//! Post-hoc traces (`--trace FILE`) answer "where did the time go" after a
+//! *successful* run; the flight recorder answers "what were the last things
+//! that happened" when a run **dies** — a client aborts, the driver errors,
+//! or an anomaly fires ([`super::health`]). It is cheap enough to leave on
+//! for every served run:
+//!
+//! * **bounded** — a fixed-capacity ring pre-allocated at construction;
+//!   old entries are overwritten, never grown;
+//! * **alloc-free on the record path** — every slot is a fixed-size
+//!   `Copy` struct (`&'static str` kind + a truncated inline name buffer +
+//!   three `f64` payload slots), so [`FlightRecorder::record`] performs no
+//!   heap allocation (guarded by `benches/telemetry.rs`);
+//! * **lock-light** — one short mutex hold per record (a few stores);
+//!   recording happens at *event* rate (per round / client / span close),
+//!   not per kernel iteration.
+//!
+//! When a [`Tracer`](super::Tracer) has a recorder attached
+//! ([`super::Telemetry::attach_flight`]), every span closure is mirrored
+//! into the ring with the span's category as the entry kind.
+//!
+//! ## Post-mortem dump
+//!
+//! [`FlightRecorder::to_jsonl`] serialises the surviving window oldest →
+//! newest as JSON Lines: a meta header
+//! `{"ev":"meta","format":"sfprompt-flight","version":1,...}` followed by
+//! one `{"ev":"flight",...}` line per entry. `sfprompt serve` writes this
+//! to the `--postmortem` path when the run fails, a client sends `Abort`,
+//! or a health anomaly fires; `sfprompt report --health FILE` renders it.
+//! See `docs/OPS.md`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default ring capacity: enough for several rounds of a large cohort's
+/// events plus the span tail, at ~100 bytes per slot.
+pub const DEFAULT_FLIGHT_CAPACITY: usize = 1024;
+
+/// Inline name-buffer size; longer names are truncated (lossy UTF-8 on
+/// read-out), never allocated.
+const NAME_CAP: usize = 32;
+
+#[derive(Clone, Copy)]
+struct Slot {
+    seq: u64,
+    t_s: f64,
+    kind: &'static str,
+    name_len: u8,
+    name: [u8; NAME_CAP],
+    v: [f64; 3],
+}
+
+impl Default for Slot {
+    fn default() -> Slot {
+        Slot { seq: 0, t_s: 0.0, kind: "", name_len: 0, name: [0; NAME_CAP], v: [0.0; 3] }
+    }
+}
+
+#[derive(Default)]
+struct Ring {
+    /// Pre-allocated to capacity at construction; never resized.
+    slots: Vec<Slot>,
+    /// Next write position (wraps).
+    next: usize,
+    /// Total entries ever recorded (monotone; `seq - len` were overwritten).
+    seq: u64,
+}
+
+/// One recovered entry (read path only — allocates for the name copy).
+#[derive(Debug, Clone)]
+pub struct FlightEvent {
+    /// Monotone sequence number over the recorder's lifetime.
+    pub seq: u64,
+    /// Seconds since the recorder was created.
+    pub t_s: f64,
+    /// Event kind: an observer event (`"run_start"`, `"round_end"`,
+    /// `"anomaly"`, ...) or a span category (`"round"`, `"stage"`, ...).
+    pub kind: &'static str,
+    /// Short label (span name, anomaly kind, drop reason); may be
+    /// truncated to the inline buffer size.
+    pub name: String,
+    /// Kind-specific numeric payload (round / client / value slots).
+    pub v: [f64; 3],
+}
+
+/// Bounded ring of recent events; see the module docs.
+pub struct FlightRecorder {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl Default for FlightRecorder {
+    fn default() -> FlightRecorder {
+        FlightRecorder::with_capacity(DEFAULT_FLIGHT_CAPACITY)
+    }
+}
+
+impl FlightRecorder {
+    pub fn new() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    /// A recorder whose ring holds the last `capacity` (≥ 1) entries.
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        let capacity = capacity.max(1);
+        FlightRecorder {
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { slots: vec![Slot::default(); capacity], next: 0, seq: 0 }),
+        }
+    }
+
+    /// Record one entry. Alloc-free: the kind is a static string, the name
+    /// is copied (truncated) into the slot's inline buffer, and the slot
+    /// itself was pre-allocated.
+    pub fn record(&self, kind: &'static str, name: &str, v0: f64, v1: f64, v2: f64) {
+        let t_s = self.epoch.elapsed().as_secs_f64();
+        let mut g = self.ring.lock().unwrap();
+        let pos = g.next;
+        let seq = g.seq;
+        let slot = &mut g.slots[pos];
+        slot.seq = seq;
+        slot.t_s = t_s;
+        slot.kind = kind;
+        let n = name.len().min(NAME_CAP);
+        slot.name[..n].copy_from_slice(&name.as_bytes()[..n]);
+        slot.name_len = n as u8;
+        slot.v = [v0, v1, v2];
+        g.next = (pos + 1) % g.slots.len();
+        g.seq += 1;
+    }
+
+    /// Total entries ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.ring.lock().unwrap().seq
+    }
+
+    /// Entries currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        let g = self.ring.lock().unwrap();
+        (g.seq as usize).min(g.slots.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.lock().unwrap().seq == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.ring.lock().unwrap().slots.len()
+    }
+
+    /// The surviving window, oldest → newest.
+    pub fn events(&self) -> Vec<FlightEvent> {
+        let g = self.ring.lock().unwrap();
+        let cap = g.slots.len();
+        let held = (g.seq as usize).min(cap);
+        let start = if (g.seq as usize) > cap { g.next } else { 0 };
+        (0..held)
+            .map(|i| {
+                let s = &g.slots[(start + i) % cap];
+                FlightEvent {
+                    seq: s.seq,
+                    t_s: s.t_s,
+                    kind: s.kind,
+                    name: String::from_utf8_lossy(&s.name[..s.name_len as usize]).into_owned(),
+                    v: s.v,
+                }
+            })
+            .collect()
+    }
+
+    /// JSON Lines serialisation: meta header, then one line per surviving
+    /// entry (oldest first). Every line is strict JSON.
+    pub fn to_jsonl(&self) -> String {
+        let events = self.events();
+        let recorded = self.recorded();
+        let mut meta = BTreeMap::new();
+        meta.insert("ev".into(), Json::Str("meta".into()));
+        meta.insert("format".into(), Json::Str("sfprompt-flight".into()));
+        meta.insert("version".into(), Json::Num(1.0));
+        meta.insert("capacity".into(), Json::Num(self.capacity() as f64));
+        meta.insert("recorded".into(), Json::Num(recorded as f64));
+        meta.insert(
+            "dropped".into(),
+            Json::Num((recorded - events.len() as u64) as f64),
+        );
+        let mut out = Json::Obj(meta).to_string();
+        out.push('\n');
+        for e in &events {
+            let mut o = BTreeMap::new();
+            o.insert("ev".into(), Json::Str("flight".into()));
+            o.insert("seq".into(), Json::Num(e.seq as f64));
+            o.insert("t_s".into(), Json::Num(e.t_s));
+            o.insert("kind".into(), Json::Str(e.kind.into()));
+            o.insert("name".into(), Json::Str(e.name.clone()));
+            o.insert("v0".into(), Json::Num(e.v[0]));
+            o.insert("v1".into(), Json::Num(e.v[1]));
+            o.insert("v2".into(), Json::Num(e.v[2]));
+            out.push_str(&Json::Obj(o).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the post-mortem JSONL to `path` (parent dirs must exist).
+    pub fn dump_to(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("writing post-mortem {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_keeping_the_newest_entries() {
+        let f = FlightRecorder::with_capacity(4);
+        for i in 0..10 {
+            f.record("round_start", "r", i as f64, 0.0, 0.0);
+        }
+        assert_eq!(f.recorded(), 10);
+        assert_eq!(f.len(), 4);
+        let events = f.events();
+        let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "oldest entries overwritten first");
+        let rounds: Vec<f64> = events.iter().map(|e| e.v[0]).collect();
+        assert_eq!(rounds, vec![6.0, 7.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn long_names_truncate_instead_of_allocating() {
+        let f = FlightRecorder::with_capacity(2);
+        let long = "x".repeat(NAME_CAP * 3);
+        f.record("anomaly", &long, 1.0, 2.0, 3.0);
+        let e = &f.events()[0];
+        assert_eq!(e.name.len(), NAME_CAP);
+        assert_eq!(e.v, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn jsonl_parses_line_by_line_with_meta_header() {
+        let f = FlightRecorder::with_capacity(8);
+        f.record("run_start", "sfprompt", 2.0, 6.0, 0.0);
+        f.record("client_dropped", "deadline", 0.0, 3.0, 1.5);
+        let text = f.to_jsonl();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].get("ev").and_then(Json::as_str), Some("meta"));
+        assert_eq!(
+            lines[0].get("format").and_then(Json::as_str),
+            Some("sfprompt-flight")
+        );
+        assert_eq!(lines[0].get("dropped").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(lines[1].get("kind").and_then(Json::as_str), Some("run_start"));
+        assert_eq!(
+            lines[2].get("name").and_then(Json::as_str),
+            Some("deadline")
+        );
+        assert_eq!(lines[2].get("v1").and_then(Json::as_f64), Some(3.0));
+    }
+
+    #[test]
+    fn dump_writes_a_parseable_file() {
+        let f = FlightRecorder::with_capacity(4);
+        f.record("eval", "", 1.0, 0.25, 0.0);
+        let dir = std::env::temp_dir().join("sfprompt_flight_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("postmortem.jsonl");
+        f.dump_to(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines() {
+            Json::parse(line).expect("every dumped line is strict JSON");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

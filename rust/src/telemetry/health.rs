@@ -1,0 +1,655 @@
+//! Per-client health registry + run-level anomaly detection.
+//!
+//! SFPrompt's setting is a fleet of heterogeneous, resource-limited
+//! devices — exactly the regime where a long-lived coordinator needs live
+//! answers: *which clients are healthy, which are straggling, is the run
+//! itself diverging?* The [`HealthRegistry`] is the serving coordinator's
+//! source of truth for those questions:
+//!
+//! * **per-client state** ([`ClientHealth`]) — last-seen wall timestamp
+//!   (from real socket traffic and observer events), rounds done/dropped,
+//!   cumulative and current-round received bytes, a per-round latency EWMA
+//!   over the simulated finish clock, and a straggler flag (EWMA more than
+//!   [`HealthConfig::straggler_factor`] × the fleet median);
+//! * **run-level anomaly detection** ([`AnomalyDetector`]) — pure,
+//!   unit-testable rules over the round stream: non-finite mean loss,
+//!   exploding loss (vs the first finite baseline), zero-survivor streaks,
+//!   and stalled eval accuracy (a full window within epsilon).
+//!
+//! The registry is driven by the serve-side observer chain
+//! (`net::events::HealthObserver`), which also emits every anomaly and
+//! straggler flag as typed `health_anomaly` / `health_straggler` event
+//! lines and mirrors them into the flight recorder ([`super::flight`]).
+//! Snapshots surface in three places: the `status` control request
+//! (`docs/OPS.md`), the `"health"` block of a served `RunReport`, and the
+//! `sfprompt top` console table.
+//!
+//! Everything here is plain data + a mutex — no I/O, no net types — so the
+//! detector rules stay trivially testable.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Thresholds for anomaly + straggler detection. Defaults are deliberately
+/// loose: they flag runs that are *broken*, not merely noisy.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Loss > `explode_factor` × the first finite loss ⇒ exploding.
+    pub explode_factor: f64,
+    /// This many consecutive rounds with zero deadline survivors ⇒ anomaly.
+    pub zero_survivor_streak: usize,
+    /// Number of most-recent evals inspected for a stall.
+    pub stall_window: usize,
+    /// The window stalls when max − min accuracy ≤ this.
+    pub stall_eps: f64,
+    /// Client EWMA > `straggler_factor` × fleet median ⇒ straggler.
+    pub straggler_factor: f64,
+    /// EWMA smoothing for per-round client latency.
+    pub ewma_alpha: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> HealthConfig {
+        HealthConfig {
+            explode_factor: 10.0,
+            zero_survivor_streak: 2,
+            stall_window: 5,
+            stall_eps: 1e-3,
+            straggler_factor: 2.0,
+            ewma_alpha: 0.3,
+        }
+    }
+}
+
+/// What went wrong at run level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AnomalyKind {
+    /// A round's mean loss came back NaN/inf with live survivors.
+    NonFiniteLoss,
+    /// Mean loss exceeded `explode_factor` × the first finite loss.
+    ExplodingLoss,
+    /// `zero_survivor_streak` consecutive rounds aggregated nobody.
+    ZeroSurvivorStreak,
+    /// Eval accuracy flat (within `stall_eps`) across the whole window.
+    StalledAccuracy,
+}
+
+impl AnomalyKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            AnomalyKind::NonFiniteLoss => "loss_non_finite",
+            AnomalyKind::ExplodingLoss => "loss_exploding",
+            AnomalyKind::ZeroSurvivorStreak => "zero_survivor_streak",
+            AnomalyKind::StalledAccuracy => "accuracy_stalled",
+        }
+    }
+}
+
+/// One fired anomaly: the round it fired on, the observed value, and the
+/// threshold it crossed.
+#[derive(Debug, Clone)]
+pub struct Anomaly {
+    pub round: usize,
+    pub kind: AnomalyKind,
+    pub value: f64,
+    pub threshold: f64,
+}
+
+impl Anomaly {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("round".into(), Json::Num(self.round as f64));
+        o.insert("kind".into(), Json::Str(self.kind.label().into()));
+        o.insert("value".into(), num_or_null(self.value));
+        o.insert("threshold".into(), num_or_null(self.threshold));
+        Json::Obj(o)
+    }
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Pure run-level anomaly rules (no clock, no I/O). Feed it the round
+/// stream; it returns whatever fired.
+#[derive(Debug, Clone)]
+pub struct AnomalyDetector {
+    cfg: HealthConfig,
+    baseline_loss: Option<f64>,
+    zero_streak: usize,
+    accs: Vec<f64>,
+    stall_fired: bool,
+}
+
+impl AnomalyDetector {
+    pub fn new(cfg: HealthConfig) -> AnomalyDetector {
+        AnomalyDetector {
+            cfg,
+            baseline_loss: None,
+            zero_streak: 0,
+            accs: Vec::new(),
+            stall_fired: false,
+        }
+    }
+
+    /// Inspect one finished round. `local_loss` / `split_loss` are the
+    /// round means (NaN when no survivors reported them).
+    pub fn on_round(
+        &mut self,
+        round: usize,
+        local_loss: f64,
+        split_loss: f64,
+        survivors: usize,
+    ) -> Vec<Anomaly> {
+        let mut fired = Vec::new();
+
+        // Zero-survivor rounds legitimately produce NaN means, so the loss
+        // rules only apply when somebody actually reported a loss.
+        if survivors == 0 {
+            self.zero_streak += 1;
+            if self.zero_streak == self.cfg.zero_survivor_streak {
+                fired.push(Anomaly {
+                    round,
+                    kind: AnomalyKind::ZeroSurvivorStreak,
+                    value: self.zero_streak as f64,
+                    threshold: self.cfg.zero_survivor_streak as f64,
+                });
+            }
+            return fired;
+        }
+        self.zero_streak = 0;
+
+        let loss = if split_loss.is_finite() { split_loss } else { local_loss };
+        if !local_loss.is_finite() || !split_loss.is_finite() {
+            fired.push(Anomaly {
+                round,
+                kind: AnomalyKind::NonFiniteLoss,
+                value: if local_loss.is_finite() { split_loss } else { local_loss },
+                threshold: f64::INFINITY,
+            });
+        }
+        if loss.is_finite() {
+            match self.baseline_loss {
+                None => self.baseline_loss = Some(loss),
+                Some(base) => {
+                    let limit = base * self.cfg.explode_factor;
+                    if base > 0.0 && loss > limit {
+                        fired.push(Anomaly {
+                            round,
+                            kind: AnomalyKind::ExplodingLoss,
+                            value: loss,
+                            threshold: limit,
+                        });
+                    }
+                }
+            }
+        }
+        fired
+    }
+
+    /// Inspect one eval point. Fires at most once per run (a stall is a
+    /// state, not a stream of incidents).
+    pub fn on_eval(&mut self, round: usize, accuracy: f64) -> Option<Anomaly> {
+        self.accs.push(accuracy);
+        if self.stall_fired || self.accs.len() < self.cfg.stall_window {
+            return None;
+        }
+        let window = &self.accs[self.accs.len() - self.cfg.stall_window..];
+        let lo = window.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = window.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        if (hi - lo).abs() <= self.cfg.stall_eps {
+            self.stall_fired = true;
+            return Some(Anomaly {
+                round,
+                kind: AnomalyKind::StalledAccuracy,
+                value: accuracy,
+                threshold: self.cfg.stall_eps,
+            });
+        }
+        None
+    }
+}
+
+/// Live state for one logical client.
+#[derive(Debug, Clone, Default)]
+pub struct ClientHealth {
+    pub rounds_done: u64,
+    pub rounds_dropped: u64,
+    pub last_round: usize,
+    /// Wall seconds (registry epoch) of the last frame or observer event
+    /// attributed to this client; negative when never seen.
+    pub last_seen_s: f64,
+    /// EWMA of the per-round simulated finish clock.
+    pub latency_ewma_s: f64,
+    /// Socket bytes received from this client over the whole run.
+    pub bytes_rx: u64,
+    /// Socket bytes received since the last round ended — the in-flight
+    /// window `status` shows while a round is running.
+    pub in_flight_bytes: u64,
+    pub straggler: bool,
+}
+
+/// A client newly flagged slow at a round boundary.
+#[derive(Debug, Clone)]
+pub struct StragglerFlag {
+    pub round: usize,
+    pub client: usize,
+    pub ewma_s: f64,
+    pub median_s: f64,
+}
+
+/// Everything a round boundary surfaced.
+#[derive(Debug, Default)]
+pub struct RoundHealth {
+    pub anomalies: Vec<Anomaly>,
+    pub new_stragglers: Vec<StragglerFlag>,
+}
+
+#[derive(Default)]
+struct HealthState {
+    clients: BTreeMap<usize, ClientHealth>,
+    detector: Option<AnomalyDetector>,
+    anomalies: Vec<Anomaly>,
+    run_state: &'static str,
+    method: String,
+    rounds_total: usize,
+    rounds_done: usize,
+    num_clients: usize,
+    total_bytes: u64,
+    raw_bytes: u64,
+    sim_s: f64,
+    last_local_loss: f64,
+    last_split_loss: f64,
+    last_accuracy: f64,
+}
+
+/// Mutex-guarded health book-keeping; one per served run. All methods lock
+/// briefly and never allocate more than the entry they insert.
+pub struct HealthRegistry {
+    cfg: HealthConfig,
+    epoch: Instant,
+    state: Mutex<HealthState>,
+}
+
+impl Default for HealthRegistry {
+    fn default() -> HealthRegistry {
+        HealthRegistry::new()
+    }
+}
+
+impl HealthRegistry {
+    pub fn new() -> HealthRegistry {
+        HealthRegistry::with_config(HealthConfig::default())
+    }
+
+    pub fn with_config(cfg: HealthConfig) -> HealthRegistry {
+        HealthRegistry {
+            cfg,
+            epoch: Instant::now(),
+            state: Mutex::new(HealthState {
+                run_state: "waiting",
+                last_local_loss: f64::NAN,
+                last_split_loss: f64::NAN,
+                last_accuracy: f64::NAN,
+                ..HealthState::default()
+            }),
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Reset for a fresh run.
+    pub fn begin_run(&self, method: &str, rounds_total: usize, num_clients: usize) {
+        let mut g = self.state.lock().unwrap();
+        g.clients.clear();
+        g.anomalies.clear();
+        g.detector = Some(AnomalyDetector::new(self.cfg.clone()));
+        g.run_state = "running";
+        g.method = method.to_string();
+        g.rounds_total = rounds_total;
+        g.rounds_done = 0;
+        g.num_clients = num_clients;
+        g.total_bytes = 0;
+        g.raw_bytes = 0;
+        g.sim_s = 0.0;
+        g.last_local_loss = f64::NAN;
+        g.last_split_loss = f64::NAN;
+        g.last_accuracy = f64::NAN;
+    }
+
+    /// Attribute `n` received socket bytes to `client` (called from the
+    /// serve reader threads — this is the real liveness signal).
+    pub fn client_bytes(&self, client: usize, n: u64) {
+        let now = self.now_s();
+        let mut g = self.state.lock().unwrap();
+        let c = g.clients.entry(client).or_insert_with(new_client);
+        c.bytes_rx += n;
+        c.in_flight_bytes += n;
+        c.last_seen_s = now;
+    }
+
+    /// A client finished its round at simulated clock `finish_s`.
+    pub fn client_done(&self, round: usize, client: usize, finish_s: f64) {
+        let now = self.now_s();
+        let alpha = self.cfg.ewma_alpha;
+        let mut g = self.state.lock().unwrap();
+        let c = g.clients.entry(client).or_insert_with(new_client);
+        c.latency_ewma_s = if c.rounds_done == 0 {
+            finish_s
+        } else {
+            alpha * finish_s + (1.0 - alpha) * c.latency_ewma_s
+        };
+        c.rounds_done += 1;
+        c.last_round = round;
+        c.last_seen_s = now;
+    }
+
+    /// A client missed the round (deadline / offline).
+    pub fn client_dropped(&self, round: usize, client: usize) {
+        let mut g = self.state.lock().unwrap();
+        let c = g.clients.entry(client).or_insert_with(new_client);
+        c.rounds_dropped += 1;
+        c.last_round = round;
+    }
+
+    /// One eval point; returns a stall anomaly if it fired.
+    pub fn eval(&self, round: usize, accuracy: f64) -> Option<Anomaly> {
+        let mut g = self.state.lock().unwrap();
+        g.last_accuracy = accuracy;
+        let fired = g.detector.as_mut().and_then(|d| d.on_eval(round, accuracy));
+        if let Some(a) = &fired {
+            g.anomalies.push(a.clone());
+        }
+        fired
+    }
+
+    /// Close a round: run the detector, recompute straggler flags, roll up
+    /// byte totals. Returns what fired so the observer can emit events.
+    #[allow(clippy::too_many_arguments)]
+    pub fn round_end(
+        &self,
+        round: usize,
+        local_loss: f64,
+        split_loss: f64,
+        survivors: usize,
+        round_bytes: u64,
+        round_raw_bytes: u64,
+        sim_s: f64,
+    ) -> RoundHealth {
+        let mut g = self.state.lock().unwrap();
+        g.rounds_done = g.rounds_done.max(round + 1);
+        g.total_bytes += round_bytes;
+        g.raw_bytes += round_raw_bytes;
+        g.sim_s = sim_s;
+        g.last_local_loss = local_loss;
+        g.last_split_loss = split_loss;
+        let mut out = RoundHealth::default();
+        if let Some(d) = g.detector.as_mut() {
+            out.anomalies = d.on_round(round, local_loss, split_loss, survivors);
+        }
+        g.anomalies.extend(out.anomalies.iter().cloned());
+
+        // Straggler pass: EWMA vs the fleet median, over clients that have
+        // finished at least one round. Needs ≥ 3 participants to mean
+        // anything.
+        let mut ewmas: Vec<f64> = g
+            .clients
+            .values()
+            .filter(|c| c.rounds_done > 0)
+            .map(|c| c.latency_ewma_s)
+            .collect();
+        if ewmas.len() >= 3 {
+            ewmas.sort_by(f64::total_cmp);
+            let median = ewmas[ewmas.len() / 2];
+            if median > 0.0 {
+                let limit = median * self.cfg.straggler_factor;
+                for (&id, c) in g.clients.iter_mut() {
+                    let slow = c.rounds_done > 0 && c.latency_ewma_s > limit;
+                    if slow && !c.straggler {
+                        out.new_stragglers.push(StragglerFlag {
+                            round,
+                            client: id,
+                            ewma_s: c.latency_ewma_s,
+                            median_s: median,
+                        });
+                    }
+                    c.straggler = slow;
+                }
+            }
+        }
+        // The round is over: its bytes are no longer in flight.
+        for c in g.clients.values_mut() {
+            c.in_flight_bytes = 0;
+        }
+        out
+    }
+
+    /// Seal the run.
+    pub fn end_run(&self, failed: bool) {
+        let mut g = self.state.lock().unwrap();
+        g.run_state = if failed { "failed" } else { "complete" };
+    }
+
+    pub fn anomalies(&self) -> Vec<Anomaly> {
+        self.state.lock().unwrap().anomalies.clone()
+    }
+
+    /// Snapshot of one client (tests / tooling).
+    pub fn client(&self, id: usize) -> Option<ClientHealth> {
+        self.state.lock().unwrap().clients.get(&id).cloned()
+    }
+
+    /// The `"health"` block of a served `RunReport`: per-client rollups and
+    /// the anomaly list. Wall-clock ages are included — report consumers
+    /// that compare runs canonicalize the whole block away (`sfprompt
+    /// diff`, the CI equality check).
+    pub fn to_json(&self) -> Json {
+        let g = self.state.lock().unwrap();
+        let clients: BTreeMap<String, Json> = g
+            .clients
+            .iter()
+            .map(|(id, c)| (id.to_string(), client_json(c)))
+            .collect();
+        let anomalies: Vec<Json> = g.anomalies.iter().map(Anomaly::to_json).collect();
+        let stragglers: Vec<Json> = g
+            .clients
+            .iter()
+            .filter(|(_, c)| c.straggler)
+            .map(|(id, _)| Json::Num(*id as f64))
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("state".into(), Json::Str(g.run_state.into()));
+        o.insert("rounds_done".into(), Json::Num(g.rounds_done as f64));
+        o.insert("anomalies".into(), Json::Arr(anomalies));
+        o.insert("stragglers".into(), Json::Arr(stragglers));
+        o.insert("clients".into(), Json::Obj(clients));
+        Json::Obj(o)
+    }
+
+    /// The point-in-time `status` snapshot body (`docs/OPS.md` schema):
+    /// run/round progress, the per-client table with last-seen ages, byte
+    /// and compression totals, and the anomaly list. The caller (serve)
+    /// merges in spec identity and hottest-stage rows.
+    pub fn status_json(&self) -> Json {
+        let now = self.now_s();
+        let g = self.state.lock().unwrap();
+        let clients: BTreeMap<String, Json> = g
+            .clients
+            .iter()
+            .map(|(id, c)| {
+                let mut o = match client_json(c) {
+                    Json::Obj(o) => o,
+                    _ => unreachable!(),
+                };
+                let age = if c.last_seen_s < 0.0 { -1.0 } else { now - c.last_seen_s };
+                o.insert("last_seen_age_s".into(), Json::Num(age));
+                (id.to_string(), Json::Obj(o))
+            })
+            .collect();
+        let ratio = if g.raw_bytes > 0 {
+            g.total_bytes as f64 / g.raw_bytes as f64
+        } else {
+            1.0
+        };
+        let mut bytes = BTreeMap::new();
+        bytes.insert("total".into(), Json::Num(g.total_bytes as f64));
+        bytes.insert("raw".into(), Json::Num(g.raw_bytes as f64));
+        bytes.insert("compression_ratio".into(), Json::Num(ratio));
+        let mut last = BTreeMap::new();
+        last.insert("local_loss".into(), num_or_null(g.last_local_loss));
+        last.insert("split_loss".into(), num_or_null(g.last_split_loss));
+        last.insert("accuracy".into(), num_or_null(g.last_accuracy));
+        let mut o = BTreeMap::new();
+        o.insert("state".into(), Json::Str(g.run_state.into()));
+        o.insert("method".into(), Json::Str(g.method.clone()));
+        o.insert("round".into(), Json::Num(g.rounds_done as f64));
+        o.insert("rounds_total".into(), Json::Num(g.rounds_total as f64));
+        o.insert("num_clients".into(), Json::Num(g.num_clients as f64));
+        o.insert("sim_s".into(), Json::Num(g.sim_s));
+        o.insert("uptime_s".into(), Json::Num(now));
+        o.insert("bytes".into(), Json::Obj(bytes));
+        o.insert("last".into(), Json::Obj(last));
+        o.insert(
+            "anomalies".into(),
+            Json::Arr(g.anomalies.iter().map(Anomaly::to_json).collect()),
+        );
+        o.insert("clients".into(), Json::Obj(clients));
+        Json::Obj(o)
+    }
+}
+
+fn new_client() -> ClientHealth {
+    ClientHealth { last_seen_s: -1.0, ..ClientHealth::default() }
+}
+
+fn client_json(c: &ClientHealth) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("rounds_done".into(), Json::Num(c.rounds_done as f64));
+    o.insert("rounds_dropped".into(), Json::Num(c.rounds_dropped as f64));
+    o.insert("last_round".into(), Json::Num(c.last_round as f64));
+    o.insert("latency_ewma_s".into(), Json::Num(c.latency_ewma_s));
+    o.insert("bytes_rx".into(), Json::Num(c.bytes_rx as f64));
+    o.insert("in_flight_bytes".into(), Json::Num(c.in_flight_bytes as f64));
+    o.insert("straggler".into(), Json::Bool(c.straggler));
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_finite_loss_fires_only_with_survivors() {
+        let mut d = AnomalyDetector::new(HealthConfig::default());
+        // No survivors: NaN means are expected, not anomalous (the streak
+        // rule owns that case).
+        assert!(d.on_round(0, f64::NAN, f64::NAN, 0).is_empty());
+        let fired = d.on_round(1, 2.0, f64::NAN, 3);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AnomalyKind::NonFiniteLoss);
+    }
+
+    #[test]
+    fn exploding_loss_compares_to_first_finite_baseline() {
+        let mut d = AnomalyDetector::new(HealthConfig::default());
+        assert!(d.on_round(0, 2.0, 2.0, 3).is_empty(), "baseline round");
+        assert!(d.on_round(1, 2.1, 4.0, 3).is_empty(), "2x is fine");
+        let fired = d.on_round(2, 2.0, 30.0, 3);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AnomalyKind::ExplodingLoss);
+        assert_eq!(fired[0].threshold, 20.0);
+    }
+
+    #[test]
+    fn zero_survivor_streak_fires_once_at_threshold() {
+        let mut d = AnomalyDetector::new(HealthConfig::default());
+        assert!(d.on_round(0, f64::NAN, f64::NAN, 0).is_empty());
+        let fired = d.on_round(1, f64::NAN, f64::NAN, 0);
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].kind, AnomalyKind::ZeroSurvivorStreak);
+        // Streak continues: no re-fire; a survivor round resets it.
+        assert!(d.on_round(2, f64::NAN, f64::NAN, 0).is_empty());
+        assert!(d.on_round(3, 1.0, 1.0, 2).is_empty());
+        assert!(d.on_round(4, f64::NAN, f64::NAN, 0).is_empty());
+        let again = d.on_round(5, f64::NAN, f64::NAN, 0);
+        assert_eq!(again.len(), 1, "a fresh streak fires again");
+    }
+
+    #[test]
+    fn stalled_accuracy_needs_a_full_flat_window() {
+        let mut d = AnomalyDetector::new(HealthConfig::default());
+        for r in 0..4 {
+            assert!(d.on_eval(r, 0.5).is_none(), "window not full yet");
+        }
+        let fired = d.on_eval(4, 0.5).expect("flat window fires");
+        assert_eq!(fired.kind, AnomalyKind::StalledAccuracy);
+        assert!(d.on_eval(5, 0.5).is_none(), "latched: fires once");
+    }
+
+    #[test]
+    fn improving_accuracy_never_stalls() {
+        let mut d = AnomalyDetector::new(HealthConfig::default());
+        for r in 0..10 {
+            assert!(d.on_eval(r, 0.1 * r as f64).is_none());
+        }
+    }
+
+    #[test]
+    fn registry_tracks_ewma_bytes_and_stragglers() {
+        let reg = HealthRegistry::new();
+        reg.begin_run("sfprompt", 4, 4);
+        reg.client_bytes(3, 1000);
+        for c in 0..3 {
+            reg.client_done(0, c, 1.0);
+        }
+        reg.client_done(0, 3, 10.0); // 10x the median
+        let out = reg.round_end(0, 1.0, 1.0, 4, 2048, 4096, 10.0);
+        assert!(out.anomalies.is_empty());
+        assert_eq!(out.new_stragglers.len(), 1);
+        assert_eq!(out.new_stragglers[0].client, 3);
+        let c3 = reg.client(3).unwrap();
+        assert!(c3.straggler);
+        assert_eq!(c3.bytes_rx, 1000);
+        assert_eq!(c3.in_flight_bytes, 0, "reset at the round boundary");
+        let j = reg.status_json();
+        assert_eq!(j.get("state").and_then(Json::as_str), Some("running"));
+        assert_eq!(
+            j.get("bytes").and_then(|b| b.get("total")).and_then(Json::as_f64),
+            Some(2048.0)
+        );
+        assert_eq!(
+            j.get("bytes")
+                .and_then(|b| b.get("compression_ratio"))
+                .and_then(Json::as_f64),
+            Some(0.5)
+        );
+        reg.end_run(false);
+        let h = reg.to_json();
+        assert_eq!(h.get("state").and_then(Json::as_str), Some("complete"));
+        assert_eq!(
+            h.get("stragglers").and_then(Json::as_arr).map(|a| a.len()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn eval_stall_lands_in_the_registry_anomaly_list() {
+        let reg = HealthRegistry::new();
+        reg.begin_run("sfprompt", 10, 2);
+        for r in 0..5 {
+            reg.eval(r, 0.25);
+        }
+        let anomalies = reg.anomalies();
+        assert_eq!(anomalies.len(), 1);
+        assert_eq!(anomalies[0].kind, AnomalyKind::StalledAccuracy);
+    }
+}

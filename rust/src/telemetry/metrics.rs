@@ -299,6 +299,111 @@ impl MetricsRegistry {
         o.insert("hottest_stages".into(), hottest);
         Json::Obj(o)
     }
+
+    /// Render the registry as Prometheus text exposition (format 0.0.4):
+    /// one `# TYPE` line per family, counters/gauges as plain samples,
+    /// histograms as **cumulative** `_bucket{le="..."}` series ending in
+    /// `le="+Inf"` plus `_sum`/`_count`. Registry names of the form
+    /// `family/item` (e.g. `stage_s/head_forward`, `wire_bytes/Upload`)
+    /// become one family with an `item` label, so per-stage and per-kind
+    /// series group the way Prometheus expects. Everything is prefixed
+    /// `sfprompt_`. Served by `sfprompt serve --prom ADDR`; validated by
+    /// `python/tools/check_prom.py`.
+    pub fn to_prometheus_text(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+
+        let mut counter_fams: BTreeMap<String, Vec<(Option<String>, u64)>> = BTreeMap::new();
+        for (name, v) in &g.counters {
+            let (fam, item) = prom_split(name);
+            counter_fams.entry(fam).or_default().push((item, *v));
+        }
+        for (fam, rows) in &counter_fams {
+            out.push_str(&format!("# TYPE {fam} counter\n"));
+            for (item, v) in rows {
+                out.push_str(&format!("{}{} {v}\n", fam, prom_labels(item, None)));
+            }
+        }
+
+        let mut gauge_fams: BTreeMap<String, Vec<(Option<String>, f64)>> = BTreeMap::new();
+        for (name, v) in &g.gauges {
+            let (fam, item) = prom_split(name);
+            gauge_fams.entry(fam).or_default().push((item, *v));
+        }
+        for (fam, rows) in &gauge_fams {
+            out.push_str(&format!("# TYPE {fam} gauge\n"));
+            for (item, v) in rows {
+                out.push_str(&format!("{}{} {v}\n", fam, prom_labels(item, None)));
+            }
+        }
+
+        let mut hist_fams: BTreeMap<String, Vec<(Option<String>, &Histogram)>> = BTreeMap::new();
+        for (name, h) in &g.hists {
+            let (fam, item) = prom_split(name);
+            hist_fams.entry(fam).or_default().push((item, h));
+        }
+        for (fam, rows) in &hist_fams {
+            out.push_str(&format!("# TYPE {fam} histogram\n"));
+            for (item, h) in rows {
+                let mut cum = 0u64;
+                for i in 0..NUM_BUCKETS - 1 {
+                    cum += h.counts[i];
+                    let le = format!("{}", bucket_bound(i));
+                    out.push_str(&format!(
+                        "{fam}_bucket{} {cum}\n",
+                        prom_labels(item, Some(&le))
+                    ));
+                }
+                out.push_str(&format!(
+                    "{fam}_bucket{} {}\n",
+                    prom_labels(item, Some("+Inf")),
+                    h.count
+                ));
+                out.push_str(&format!("{fam}_sum{} {}\n", prom_labels(item, None), h.sum));
+                out.push_str(&format!(
+                    "{fam}_count{} {}\n",
+                    prom_labels(item, None),
+                    h.count
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Split a registry name into a sanitised Prometheus family plus the
+/// optional `item` label value (the part after the first `/`).
+fn prom_split(name: &str) -> (String, Option<String>) {
+    let (fam, item) = match name.split_once('/') {
+        Some((f, i)) => (f, Some(i.to_string())),
+        None => (name, None),
+    };
+    // The `sfprompt_` prefix also guarantees a legal leading character, so
+    // only the character set needs sanitising.
+    let mut out = String::with_capacity(fam.len() + 9);
+    out.push_str("sfprompt_");
+    for ch in fam.chars() {
+        let ok = ch.is_ascii_alphanumeric() || ch == '_' || ch == ':';
+        out.push(if ok { ch } else { '_' });
+    }
+    (out, item)
+}
+
+/// Render the `{...}` label block: optional `item`, optional `le`.
+fn prom_labels(item: &Option<String>, le: Option<&str>) -> String {
+    let mut parts = Vec::new();
+    if let Some(i) = item {
+        let escaped = i.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n");
+        parts.push(format!("item=\"{escaped}\""));
+    }
+    if let Some(le) = le {
+        parts.push(format!("le=\"{le}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
 }
 
 #[cfg(test)]
@@ -388,6 +493,53 @@ mod tests {
         let hot = m.hottest_stages(1);
         let row = &hot.as_arr().unwrap()[0];
         assert_eq!(row.get("achieved_gflops").and_then(Json::as_f64), Some(g));
+    }
+
+    #[test]
+    fn prometheus_text_groups_families_and_labels_items() {
+        let m = MetricsRegistry::new();
+        m.counter_add("wire_bytes/Upload", 128);
+        m.counter_add("wire_bytes/SmashedData", 64);
+        m.counter_add("net_tx_bytes", 9);
+        m.gauge_set("eval_accuracy", 0.75);
+        let text = m.to_prometheus_text();
+        assert_eq!(
+            text.matches("# TYPE sfprompt_wire_bytes counter").count(),
+            1,
+            "one TYPE line per family:\n{text}"
+        );
+        assert!(text.contains("sfprompt_wire_bytes{item=\"Upload\"} 128"), "{text}");
+        assert!(text.contains("sfprompt_wire_bytes{item=\"SmashedData\"} 64"), "{text}");
+        assert!(text.contains("sfprompt_net_tx_bytes 9"), "{text}");
+        assert!(text.contains("# TYPE sfprompt_eval_accuracy gauge"), "{text}");
+        assert!(text.contains("sfprompt_eval_accuracy 0.75"), "{text}");
+    }
+
+    #[test]
+    fn prometheus_histogram_buckets_are_cumulative_and_end_at_inf() {
+        let m = MetricsRegistry::new();
+        m.observe("stage_s/head_forward", 0.5);
+        m.observe("stage_s/head_forward", 0.5);
+        m.observe("stage_s/head_forward", 1e9); // overflow bucket
+        let text = m.to_prometheus_text();
+        assert!(text.contains("# TYPE sfprompt_stage_s histogram"), "{text}");
+        let bucket_counts: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("sfprompt_stage_s_bucket{item=\"head_forward\""))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(bucket_counts.len(), NUM_BUCKETS, "every bound plus +Inf");
+        assert!(
+            bucket_counts.windows(2).all(|w| w[0] <= w[1]),
+            "cumulative counts must be monotone: {bucket_counts:?}"
+        );
+        assert_eq!(*bucket_counts.last().unwrap(), 3, "+Inf carries the total");
+        assert!(
+            text.contains("sfprompt_stage_s_bucket{item=\"head_forward\",le=\"+Inf\"} 3"),
+            "{text}"
+        );
+        assert!(text.contains("sfprompt_stage_s_count{item=\"head_forward\"} 3"), "{text}");
+        assert!(text.contains("sfprompt_stage_s_sum{item=\"head_forward\"} "), "{text}");
     }
 
     #[test]

@@ -11,7 +11,17 @@
 //! * [`MetricsRegistry`] — counters/gauges/fixed-bucket histograms: stage
 //!   latency and achieved GFLOP/s (vs the `flops/` analytic counts), frame
 //!   encode/decode time, bytes per message kind, compress/decompress time,
-//!   FedAvg aggregation time, EL2N pruning time, fleet events.
+//!   FedAvg aggregation time, EL2N pruning time, fleet events. Also
+//!   renders as Prometheus text exposition
+//!   ([`MetricsRegistry::to_prometheus_text`], served by
+//!   `sfprompt serve --prom ADDR`).
+//!
+//! The **live-operations** layer (docs/OPS.md) builds on two more pieces
+//! that work without the global sink: [`HealthRegistry`] — per-client
+//! liveness/latency/straggler state plus run-level anomaly detection
+//! ([`AnomalyDetector`]: non-finite/exploding loss, zero-survivor streaks,
+//! stalled accuracy) — and [`FlightRecorder`] — a bounded, alloc-free ring
+//! of recent events dumped as post-mortem JSONL when a served run dies.
 //!
 //! ## Enabling
 //!
@@ -40,10 +50,17 @@
 //! stacks. See `docs/TELEMETRY.md` for the span taxonomy, metric names,
 //! and file schemas.
 
+mod flight;
+mod health;
 mod metrics;
 mod observer;
 mod tracer;
 
+pub use flight::{FlightEvent, FlightRecorder, DEFAULT_FLIGHT_CAPACITY};
+pub use health::{
+    Anomaly, AnomalyDetector, AnomalyKind, ClientHealth, HealthConfig, HealthRegistry,
+    RoundHealth, StragglerFlag,
+};
 pub use metrics::{Histogram, MetricsRegistry};
 pub use observer::TelemetryObserver;
 pub use tracer::{chrome_trace_from_records, SpanRecord, Tracer};
@@ -87,6 +104,14 @@ impl Telemetry {
     /// Innermost span open on the current thread (for explicit parenting).
     pub fn current_span_id(&self) -> Option<u64> {
         self.tracer.current_span_id()
+    }
+
+    /// Mirror every span closure into `flight`'s ring (kind = the span's
+    /// category, name = the span name, payload = start/duration/thread).
+    /// The live-operations layer attaches the serve run's flight recorder
+    /// here so a post-mortem shows the last spans, not just round events.
+    pub fn attach_flight(&self, flight: Arc<FlightRecorder>) {
+        self.tracer.attach_flight(flight);
     }
 }
 

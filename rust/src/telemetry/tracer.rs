@@ -20,9 +20,10 @@
 use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use super::flight::FlightRecorder;
 use crate::util::json::Json;
 
 /// Process-unique tracer ids, so thread-local span stacks never confuse two
@@ -84,6 +85,9 @@ pub struct Tracer {
     epoch: Instant,
     next_span_id: AtomicU64,
     state: Mutex<TraceState>,
+    /// Optional flight-recorder mirror: span closures land in its ring
+    /// (kind = category) so a post-mortem shows the final spans.
+    flight: Mutex<Option<Arc<FlightRecorder>>>,
 }
 
 impl Default for Tracer {
@@ -99,7 +103,14 @@ impl Tracer {
             epoch: Instant::now(),
             next_span_id: AtomicU64::new(1),
             state: Mutex::new(TraceState::default()),
+            flight: Mutex::new(None),
         }
+    }
+
+    /// Mirror span closures into `flight` from now on (see
+    /// [`crate::telemetry::Telemetry::attach_flight`]).
+    pub(crate) fn attach_flight(&self, flight: Arc<FlightRecorder>) {
+        *self.flight.lock().unwrap() = Some(flight);
     }
 
     fn now_s(&self) -> f64 {
@@ -149,6 +160,9 @@ impl Tracer {
         });
         let mut st = self.state.lock().unwrap();
         if let Some(span) = st.open.remove(&id) {
+            if let Some(f) = self.flight.lock().unwrap().as_ref() {
+                f.record(span.cat, &span.name, span.start_s, end_s - span.start_s, span.tid as f64);
+            }
             st.closed.push(SpanRecord {
                 id,
                 parent: span.parent,

@@ -1,0 +1,181 @@
+//! Live-operations integration tests over real localhost TCP.
+//!
+//! Pins the PR-9 acceptance surface: a serving coordinator answers the
+//! one-shot `status` control probe mid-admission, rejects a status request
+//! carrying unknown keys (strict control plane), attaches the `health`
+//! block to the final `RunReport`, and leaves a parseable post-mortem
+//! flight dump behind when a client process aborts the run.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use sfprompt::federation::{Method, NullObserver, RunSpec};
+use sfprompt::net::{
+    self, ClientOptions, ConnectOptions, Control, NetMsg, ServeOptions, TcpLink,
+    NET_PROTO_VERSION,
+};
+use sfprompt::util::json::Json;
+
+fn tiny_spec() -> RunSpec {
+    let mut spec = RunSpec::new("tiny", "cifar10", Method::SfPrompt);
+    spec.fed.rounds = 2;
+    spec.fed.num_clients = 6;
+    spec.fed.clients_per_round = 3;
+    spec.fed.local_epochs = 1;
+    spec.samples_per_client = 8;
+    spec.eval_samples = 32;
+    spec.fed.eval_limit = Some(32);
+    spec
+}
+
+fn test_connect() -> ConnectOptions {
+    ConnectOptions {
+        retries: 50,
+        backoff: Duration::from_millis(20),
+        io_timeout: Duration::from_secs(30),
+    }
+}
+
+fn test_serve_opts(processes: usize) -> ServeOptions {
+    ServeOptions {
+        processes,
+        run_id: "test-run".into(),
+        io_timeout: Duration::from_secs(30),
+        quiet: true,
+        ..ServeOptions::default()
+    }
+}
+
+/// One typed `status` probe against `addr`; returns the reply body.
+fn probe_status(addr: &str) -> Json {
+    let mut link = TcpLink::connect(addr, &test_connect()).unwrap();
+    link.send_control(&Control::Status { proto: NET_PROTO_VERSION }).unwrap();
+    match link.recv_msg(false).unwrap() {
+        Some(NetMsg::Control(Control::StatusReply { body }, _)) => body,
+        other => panic!("expected a status reply, got {other:?}"),
+    }
+}
+
+#[test]
+fn status_probe_answers_during_admission_and_the_report_carries_health() {
+    let spec = tiny_spec();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let artifacts = sfprompt::artifacts_root();
+    thread::scope(|s| {
+        let server = s.spawn(|| {
+            net::serve(listener, &spec, &artifacts, &test_serve_opts(1), &mut NullObserver)
+        });
+
+        // 1. Probe before any client process joins: the registry is still
+        //    in its pre-run state and the snapshot carries run identity.
+        let body = probe_status(&addr);
+        assert_eq!(body.get("state").unwrap().as_str(), Some("waiting"), "body: {body}");
+        assert_eq!(body.get("run_id").unwrap().as_str(), Some("test-run"));
+        assert_eq!(body.get("processes").unwrap().as_f64(), Some(1.0));
+        assert_eq!(body.get("config").unwrap().as_str(), Some("tiny"));
+        assert!(body.get("clients").unwrap().as_obj().is_some(), "body: {body}");
+
+        // 2. A status envelope smuggling an unknown key is refused by the
+        //    strict control plane — and the slot stays open.
+        let mut sneaky = TcpStream::connect(&addr).unwrap();
+        let json = br#"{"kind":"status","proto":1,"verbose":true}"#;
+        let mut body_bytes = b"NC".to_vec();
+        body_bytes.push(NET_PROTO_VERSION);
+        body_bytes.extend_from_slice(json);
+        let mut msg = (body_bytes.len() as u32).to_le_bytes().to_vec();
+        msg.extend_from_slice(&body_bytes);
+        sneaky.write_all(&msg).unwrap();
+        let mut sneaky = TcpLink::from_stream(sneaky, Duration::from_secs(30)).unwrap();
+        match sneaky.recv_msg(false).unwrap() {
+            Some(NetMsg::Control(Control::Reject { reason }, _)) => {
+                assert!(reason.contains("handshake failed"), "unexpected reason: {reason}");
+            }
+            other => panic!("expected Reject, got {other:?}"),
+        }
+        drop(sneaky);
+
+        // 3. A conforming client completes the run; the returned report
+        //    carries the sealed health block.
+        let client = s.spawn(|| {
+            let opts = ClientOptions {
+                connect: test_connect(),
+                name: "probed".into(),
+                run_id: "test-run".into(),
+                quiet: true,
+            };
+            net::run_client(&addr, &artifacts, &opts)
+        });
+        let report = server.join().unwrap().expect("serve failed");
+        client.join().unwrap().expect("client failed");
+
+        let health = report.to_json().get("health").cloned().expect("report has a health block");
+        assert_eq!(health.get("state").unwrap().as_str(), Some("complete"), "health: {health}");
+        assert_eq!(
+            health.get("rounds_done").unwrap().as_f64(),
+            Some(spec.fed.rounds as f64),
+            "health: {health}"
+        );
+        let anomalies = health.get("anomalies").unwrap().as_arr().unwrap();
+        assert!(anomalies.is_empty(), "tiny run must be anomaly-free: {health}");
+    });
+}
+
+#[test]
+fn aborted_client_leaves_a_parseable_postmortem_dump() {
+    let spec = tiny_spec();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let artifacts = sfprompt::artifacts_root();
+    let dir = std::env::temp_dir().join(format!("sfprompt-health-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pm = dir.join("postmortem.jsonl");
+    let opts = ServeOptions {
+        io_timeout: Duration::from_secs(5),
+        postmortem: Some(pm.clone()),
+        ..test_serve_opts(1)
+    };
+    thread::scope(|s| {
+        let server =
+            s.spawn(|| net::serve(listener, &spec, &artifacts, &opts, &mut NullObserver));
+
+        // Handshake like a real client process, then vanish without a FIN
+        // ceremony: the run must fail and dump the flight ring.
+        let mut deserter = TcpLink::connect(&addr, &test_connect()).unwrap();
+        deserter
+            .send_control(&Control::Hello {
+                proto: NET_PROTO_VERSION,
+                wire: sfprompt::transport::WIRE_VERSION,
+                name: "deserter".into(),
+                run_id: "test-run".into(),
+            })
+            .unwrap();
+        match deserter.recv_msg(false).unwrap() {
+            Some(NetMsg::Control(c, _)) => assert_eq!(c.kind(), "welcome"),
+            other => panic!("expected welcome, got {other:?}"),
+        }
+        drop(deserter);
+
+        let err = server.join().unwrap().expect_err("run must fail when its only process dies");
+        let err = format!("{err:#}");
+        assert!(!err.is_empty());
+    });
+
+    let text = std::fs::read_to_string(&pm).expect("post-mortem dump must exist");
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| Json::parse(l).expect("every post-mortem line is strict JSON"))
+        .collect();
+    assert!(!lines.is_empty());
+    assert_eq!(lines[0].get("ev").unwrap().as_str(), Some("meta"));
+    assert_eq!(lines[0].get("format").unwrap().as_str(), Some("sfprompt-flight"));
+    // The failure itself is on the ring: serve records a run_failed entry
+    // before sealing, so the dump is never just a header.
+    assert!(
+        lines[1..].iter().any(|l| l.get("ev").and_then(Json::as_str) == Some("flight")),
+        "dump: {text}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -41,12 +41,13 @@ fn in_process_report(spec: &RunSpec) -> RunReport {
     RunReport::new(spec, run.setup_bytes(), hist)
 }
 
-/// Strip real-wall-time fields so reports compare exactly.
+/// Strip real-wall-time fields — and the serve-only `health` block, which
+/// carries wall-clock ages by design — so reports compare exactly.
 fn strip_wall(v: &Json) -> Json {
     match v {
         Json::Obj(o) => Json::Obj(
             o.iter()
-                .filter(|(k, _)| k.as_str() != "wall_s")
+                .filter(|(k, _)| k.as_str() != "wall_s" && k.as_str() != "health")
                 .map(|(k, x)| (k.clone(), strip_wall(x)))
                 .collect(),
         ),
@@ -174,7 +175,7 @@ fn wire_version_mismatch_is_refused_and_the_run_survives() {
         })
         .unwrap();
         match bad.recv_msg(false).unwrap() {
-            Some(net::NetMsg::Control(Control::Reject { reason })) => {
+            Some(net::NetMsg::Control(Control::Reject { reason }, _)) => {
                 assert!(reason.contains("wire version"), "unexpected reason: {reason}");
             }
             other => panic!("expected Reject, got {other:?}"),
