@@ -8,6 +8,8 @@ loudly (exit 1) on the first violation:
   * every sample's metric name has a preceding `# TYPE` declaration of
     counter / gauge / histogram, and every declared family has samples;
   * counter and `_count`/`_bucket` values are finite and non-negative;
+  * label values use only the text-format escapes `\\\\`, `\\"`, and `\\n`
+    (the exposition the Rust side's `prom_labels` emits);
   * each histogram exposes `_bucket` samples with cumulative,
     monotonically non-decreasing counts over increasing `le` bounds,
     ending at `le="+Inf"`, plus `_sum` and `_count` samples where
@@ -15,8 +17,11 @@ loudly (exit 1) on the first violation:
 
 With --require NAME (repeatable), the named family must be present — the
 CI networked smoke uses this to pin the socket byte counters.
+`--self-test` runs the built-in escaping fixtures (valid escape
+sequences must parse, invalid ones must be rejected) and exits.
 
     python3 python/tools/check_prom.py metrics.txt --require sfprompt_net_rx_bytes
+    python3 python/tools/check_prom.py --self-test
 """
 
 import argparse
@@ -37,13 +42,51 @@ def fail(msg: str) -> None:
     sys.exit(f"check_prom: FAIL: {msg}")
 
 
+def split_label_pairs(raw: str, lineno: int) -> list:
+    """Split `k="v",k2="v2"` on commas outside quoted values (a label value
+    may itself contain a comma)."""
+    pairs, buf, in_str, esc = [], "", False, False
+    for ch in raw:
+        if esc:
+            buf += ch
+            esc = False
+        elif ch == "\\" and in_str:
+            buf += ch
+            esc = True
+        elif ch == '"':
+            in_str = not in_str
+            buf += ch
+        elif ch == "," and not in_str:
+            if buf:
+                pairs.append(buf)
+            buf = ""
+        else:
+            buf += ch
+    if in_str:
+        fail(f"line {lineno}: unterminated label value in {raw!r}")
+    if buf:
+        pairs.append(buf)
+    return pairs
+
+
 def parse_labels(raw: str, lineno: int) -> dict:
     labels = {}
-    for part in filter(None, raw.split(",")):
+    for part in split_label_pairs(raw, lineno):
         if not LABEL_RE.match(part):
             fail(f"line {lineno}: bad label pair {part!r}")
         key, value = part.split("=", 1)
-        labels[key] = value[1:-1]
+        body = value[1:-1]
+        # Text format 0.0.4: the only legal escapes in a label value are
+        # \\ (backslash), \" (quote), and \n (newline).
+        i = 0
+        while i < len(body):
+            if body[i] == "\\":
+                if i + 1 >= len(body) or body[i + 1] not in ("\\", '"', "n"):
+                    fail(f"line {lineno}: invalid escape sequence in label value {body!r}")
+                i += 2
+            else:
+                i += 1
+        labels[key] = body
     return labels
 
 
@@ -152,14 +195,67 @@ def check(text: str, require: list) -> None:
     )
 
 
+# Escaping fixtures for --self-test: (description, exposition, must_pass).
+# The positive case mirrors what the Rust exporter's `prom_labels` emits
+# for hostile label values (quotes, backslashes, newlines, commas).
+ESCAPING_FIXTURES = [
+    (
+        "escaped quote, backslash, newline, and comma in label values",
+        '# TYPE sfprompt_stage_calls counter\n'
+        'sfprompt_stage_calls{stage="say \\"hi\\"",path="C:\\\\tmp",note="a\\nb",csv="x,y"} 3\n',
+        True,
+    ),
+    (
+        "invalid escape sequence \\t is rejected",
+        '# TYPE sfprompt_stage_calls counter\n'
+        'sfprompt_stage_calls{stage="tab\\there"} 1\n',
+        False,
+    ),
+    (
+        "trailing lone backslash is rejected",
+        '# TYPE sfprompt_stage_calls counter\n'
+        'sfprompt_stage_calls{stage="oops\\"} 1\n',
+        False,
+    ),
+    (
+        "unterminated label value is rejected",
+        '# TYPE sfprompt_stage_calls counter\n'
+        'sfprompt_stage_calls{stage="open} 1\n',
+        False,
+    ),
+]
+
+
+def self_test() -> None:
+    for desc, text, must_pass in ESCAPING_FIXTURES:
+        try:
+            check(text, [])
+            passed = True
+        except SystemExit:
+            passed = False
+        if passed != must_pass:
+            verdict = "passed" if passed else "failed"
+            sys.exit(f"check_prom: SELF-TEST FAIL: fixture {desc!r} unexpectedly {verdict}")
+    print(f"check_prom: self-test OK — {len(ESCAPING_FIXTURES)} escaping fixtures")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("path", help="scrape body file, or - for stdin")
+    ap.add_argument("path", nargs="?", help="scrape body file, or - for stdin")
     ap.add_argument(
         "--require", action="append", default=[],
         help="metric family that must be present (repeatable)",
     )
+    ap.add_argument(
+        "--self-test", action="store_true",
+        help="run the built-in label-escaping fixtures and exit",
+    )
     args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    if not args.path:
+        ap.error("give a scrape body file (or - for stdin), or --self-test")
     if args.path == "-":
         text = sys.stdin.read()
     else:

@@ -15,12 +15,22 @@ Checks, failing loudly (exit 1) on the first violation:
   * with --events: a round-event JSONL stream (`serve --events FILE` or an
     observer-socket capture) where every line names a known event kind —
     including the live-ops kinds `heartbeat`, `health_anomaly`, and
-    `health_straggler` (docs/OPS.md) — and carries that kind's keys.
+    `health_straggler` (docs/OPS.md) — and carries that kind's keys;
+  * with --merged: the trace is a `sfprompt trace merge` output — a v2
+    merged header naming >= 2 processes, every span carries a valid `proc`
+    index, every parent resolves, every non-coordinator span reaches a
+    coordinator (proc 0) ancestor, and a child may escape its parent's
+    interval only when the merge flagged the edge `skew` (docs/TRACING.md);
+  * with --report: the RunReport JSON's `"ledger"` block re-adds to the
+    report's measured `comm` block bit-exactly (per-kind wire and raw
+    bytes, uplink/downlink, message count) — re-attribution, never
+    re-measurement.
 
 Used by the CI telemetry and networked smoke steps:
 
     python3 python/tools/check_trace.py trace.jsonl --metrics metrics.json
     python3 python/tools/check_trace.py --events events.jsonl
+    python3 python/tools/check_trace.py merged.jsonl --merged --report report.json
 """
 
 import argparse
@@ -106,6 +116,146 @@ def check_trace(path: str) -> dict:
     return by_cat
 
 
+def check_merged(path: str) -> dict:
+    """Validate a `sfprompt trace merge` output (docs/TRACING.md)."""
+    with open(path, "r", encoding="utf-8") as f:
+        lines = [ln for ln in f.read().splitlines() if ln.strip()]
+    if not lines:
+        fail(f"{path}: empty merged trace")
+
+    meta = json.loads(lines[0])
+    if meta.get("ev") != "meta" or meta.get("format") != "sfprompt-trace":
+        fail(f"{path}: first line is not an sfprompt-trace meta header: {meta}")
+    if meta.get("merged") is not True or meta.get("version") != 2:
+        fail(f"{path}: not a merged v2 trace header: {meta}")
+    trace_id = meta.get("trace_id")
+    if not (isinstance(trace_id, str) and len(trace_id) == 32 and int(trace_id, 16) != 0):
+        fail(f"{path}: merged header needs a non-zero 32-hex trace_id, got {trace_id!r}")
+    procs = meta.get("processes")
+    if not (isinstance(procs, list) and len(procs) >= 2):
+        fail(f"{path}: merged header must name >= 2 processes, got {procs!r}")
+    for i, p in enumerate(procs):
+        for key in ("process", "span_base", "offset_s", "rtt_s"):
+            if key not in p:
+                fail(f"{path}: process entry {i} missing {key!r}: {p}")
+    if procs[0]["process"] != "coordinator" or procs[0]["span_base"] != 0:
+        fail(f"{path}: process 0 must be the coordinator at span_base 0: {procs[0]}")
+
+    spans = {}
+    for lineno, line in enumerate(lines[1:], 2):
+        s = json.loads(line)
+        if s.get("ev") != "span":
+            fail(f"{path}:{lineno}: unexpected event {s.get('ev')!r}")
+        for key in REQUIRED_SPAN_KEYS + ("proc",):
+            if key not in s:
+                fail(f"{path}:{lineno}: merged span missing key {key!r}: {s}")
+        if not (0 <= s["proc"] < len(procs)):
+            fail(f"{path}:{lineno}: span #{s['id']} has out-of-range proc {s['proc']}")
+        if s.get("open") is True:
+            fail(f"{path}:{lineno}: span #{s['id']} {s['cat']}/{s['name']} never closed")
+        if s["t1_s"] < s["t0_s"]:
+            fail(f"{path}:{lineno}: span #{s['id']} ends before it starts")
+        spans[s["id"]] = s
+
+    cross_edges = 0
+    for s in spans.values():
+        pid = s["parent"]
+        if pid is None:
+            # Only the coordinator's root (the run span) may be parentless.
+            if s["proc"] != 0:
+                fail(f"{path}: non-coordinator span #{s['id']} {s['name']} has no parent")
+            continue
+        if pid not in spans:
+            fail(f"{path}: span #{s['id']} has dangling parent {pid}")
+        p = spans[pid]
+        if p["proc"] != s["proc"]:
+            cross_edges += 1
+            if "rp" not in s:
+                fail(
+                    f"{path}: cross-process edge #{s['id']} -> #{pid} "
+                    f"lost its rp provenance"
+                )
+        contained = p["t0_s"] <= s["t0_s"] and s["t1_s"] <= p["t1_s"]
+        if not contained and s.get("skew") is not True:
+            fail(
+                f"{path}: child #{s['id']} {s['name']} escapes parent "
+                f"#{pid} {p['name']} without a skew flag"
+            )
+        if s.get("skew") is True and p["proc"] == s["proc"]:
+            fail(f"{path}: same-process edge #{s['id']} -> #{pid} flagged skew")
+
+    if cross_edges == 0:
+        fail(f"{path}: merged trace has no cross-process edges")
+
+    # Every client-process span must have a coordinator-side ancestor.
+    for s in spans.values():
+        if s["proc"] == 0:
+            continue
+        seen, cur = set(), s
+        while cur["parent"] is not None:
+            if cur["id"] in seen:
+                fail(f"{path}: parent cycle through span #{cur['id']}")
+            seen.add(cur["id"])
+            cur = spans[cur["parent"]]
+        if cur["proc"] != 0:
+            fail(
+                f"{path}: span #{s['id']} {s['name']} (proc {s['proc']}) never "
+                f"reaches a coordinator ancestor (stops at #{cur['id']})"
+            )
+
+    by_proc = {}
+    for s in spans.values():
+        by_proc[s["proc"]] = by_proc.get(s["proc"], 0) + 1
+    print(
+        f"check_trace: {path}: OK — merged, {len(spans)} spans across "
+        f"{len(procs)} processes {dict(sorted(by_proc.items()))}, "
+        f"{cross_edges} cross-process edges"
+    )
+    return spans
+
+
+def check_report_ledger(path: str) -> None:
+    """The report's ledger must re-add to its measured comm block exactly."""
+    with open(path, "r", encoding="utf-8") as f:
+        report = json.load(f)
+    ledger = report.get("ledger")
+    if ledger is None:
+        fail(f"{path}: report has no \"ledger\" block")
+    if ledger.get("format") != "sfprompt-ledger":
+        fail(f"{path}: ledger format {ledger.get('format')!r}")
+    comm = report.get("comm")
+    if comm is None:
+        fail(f"{path}: report has no \"comm\" block")
+
+    wire, raw, up, down, messages = {}, {}, 0, 0, 0
+    for row in ledger.get("rows", []):
+        kind = row["kind"]
+        wire[kind] = wire.get(kind, 0) + row["up_bytes"] + row["down_bytes"]
+        raw[kind] = raw.get(kind, 0) + row["raw_bytes"]
+        up += row["up_bytes"]
+        down += row["down_bytes"]
+        messages += row["messages"]
+
+    if wire != comm.get("by_kind"):
+        fail(f"{path}: ledger wire bytes {wire} != comm.by_kind {comm.get('by_kind')}")
+    if raw != comm.get("by_kind_raw"):
+        fail(f"{path}: ledger raw bytes {raw} != comm.by_kind_raw {comm.get('by_kind_raw')}")
+    if up != comm.get("uplink_bytes") or down != comm.get("downlink_bytes"):
+        fail(
+            f"{path}: ledger directions ({up} up / {down} down) != comm "
+            f"({comm.get('uplink_bytes')} / {comm.get('downlink_bytes')})"
+        )
+    if messages != comm.get("messages"):
+        fail(f"{path}: ledger counts {messages} messages, comm {comm.get('messages')}")
+    totals = ledger.get("totals", {})
+    if totals.get("by_kind") != wire or totals.get("raw_by_kind") != raw:
+        fail(f"{path}: ledger totals block disagrees with its own rows")
+    print(
+        f"check_trace: {path}: OK — ledger re-adds to comm exactly "
+        f"({len(ledger.get('rows', []))} rows, {messages} messages)"
+    )
+
+
 def check_metrics(path: str) -> None:
     with open(path, "r", encoding="utf-8") as f:
         m = json.load(f)
@@ -174,11 +324,25 @@ def main() -> None:
         "--events",
         help="round-event JSONL file (serve --events or an observer capture)",
     )
+    ap.add_argument(
+        "--merged", action="store_true",
+        help="the trace file is a `sfprompt trace merge` output",
+    )
+    ap.add_argument(
+        "--report",
+        help="RunReport JSON whose ledger block must re-add to its comm block",
+    )
     args = ap.parse_args()
-    if not args.trace and not args.events:
-        ap.error("nothing to check: give a trace file and/or --events")
+    if not args.trace and not args.events and not args.report:
+        ap.error("nothing to check: give a trace file, --events, and/or --report")
 
-    if args.trace:
+    if args.trace and args.merged:
+        spans = check_merged(args.trace)
+        if args.expect_rounds is not None:
+            got = sum(1 for s in spans.values() if s["cat"] == "round")
+            if got != args.expect_rounds:
+                fail(f"{args.trace}: expected {args.expect_rounds} round spans, got {got}")
+    elif args.trace:
         by_cat = check_trace(args.trace)
         for cat in ("run", "round", "client", "phase", "stage"):
             if not by_cat.get(cat):
@@ -191,6 +355,8 @@ def main() -> None:
         check_metrics(args.metrics)
     if args.events:
         check_events(args.events)
+    if args.report:
+        check_report_ledger(args.report)
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ use crate::model::{fedavg_multi, init_params, ParamSet, SegmentParams};
 use crate::partition::partition;
 use crate::runtime::HostTensor;
 use crate::sim::{Fleet, RoundOutcome, SimClock};
+use crate::telemetry::Ledger;
 use crate::transport::{
     channel_pair, dense_segments_wire_len, encoded_frame_len, Frame, Payload, Transport,
     WireFormat,
@@ -63,6 +64,10 @@ pub(crate) struct BaselineEngine<'a> {
     train: &'a SynthDataset,
     eval: Option<&'a SynthDataset>,
     history: RunHistory,
+    /// Per-(round, client, kind) re-attribution of every `comm` record —
+    /// kept in lock-step with the `ByteMeter` calls below so
+    /// [`Ledger::reconcile`] holds bit-exactly.
+    ledger: Ledger,
 }
 
 /// Deadline epilogue shared by both baseline rounds: resolve the round's
@@ -155,6 +160,7 @@ impl<'a> BaselineEngine<'a> {
             train,
             eval,
             history: RunHistory::default(),
+            ledger: Ledger::new(),
         }
     }
 
@@ -213,7 +219,8 @@ impl<'a> BaselineEngine<'a> {
             let n = s_end
                 .send(&Frame::new(MsgKind::FullModel, r32, cid as u32, payload), WireFormat::F32)?;
             comm.record(MsgKind::FullModel, Direction::Downlink, n);
-            clock.charge_transfer(slot, n);
+            let dt = clock.charge_transfer(slot, n);
+            self.ledger.tap(r32, cid as u32, MsgKind::FullModel, Direction::Downlink, n, n, dt);
             let (frame, _) = c_end.recv()?;
             let mut segs = take_segments(frame.payload, &["head", "body", "tail"])?;
             let mut tail = segs.pop().expect("tail");
@@ -264,17 +271,15 @@ impl<'a> BaselineEngine<'a> {
                 }
                 payload => take_segments(payload, &["head", "body", "tail"])?,
             };
-            comm.record_with_raw(
-                MsgKind::FullModel,
-                Direction::Uplink,
-                n,
-                dense_segments_wire_len(&segs.iter().collect::<Vec<_>>()),
-            );
-            clock.charge_transfer(slot, n);
-            clock.charge_compute(
+            let raw = dense_segments_wire_len(&segs.iter().collect::<Vec<_>>());
+            comm.record_with_raw(MsgKind::FullModel, Direction::Uplink, n, raw);
+            let dt = clock.charge_transfer(slot, n);
+            self.ledger.tap(r32, cid as u32, MsgKind::FullModel, Direction::Uplink, n, raw, dt);
+            let compute_s = clock.charge_compute(
                 slot,
                 crate::flops::fl_client_round_flops(&cfg, n_k, self.fed.local_epochs),
             );
+            self.ledger.tap_compute(r32, cid as u32, compute_s);
             clock.mark_done(slot);
 
             updates.push((slot, segs, n_k));
@@ -343,7 +348,10 @@ impl<'a> BaselineEngine<'a> {
                 WireFormat::F32,
             )?;
             comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-            clock.charge_transfer(slot, n);
+            let dt = clock.charge_transfer(slot, n);
+            self.ledger.tap(
+                r32, cid as u32, MsgKind::ModelDistribution, Direction::Downlink, n, n, dt,
+            );
             let (frame, _) = c_end.recv()?;
             let mut segs = take_segments(frame.payload, &["head", "tail"])?;
             let mut tail = segs.pop().expect("tail");
@@ -372,13 +380,12 @@ impl<'a> BaselineEngine<'a> {
                         wire,
                     )?;
                     let (frame, n) = s_end.recv()?;
-                    comm.record_with_raw(
-                        MsgKind::SmashedData,
-                        Direction::Uplink,
-                        n,
-                        encoded_frame_len(&frame, WireFormat::F32),
+                    let raw = encoded_frame_len(&frame, WireFormat::F32);
+                    comm.record_with_raw(MsgKind::SmashedData, Direction::Uplink, n, raw);
+                    let dt = clock.charge_transfer(slot, n);
+                    self.ledger.tap(
+                        r32, cid as u32, MsgKind::SmashedData, Direction::Uplink, n, raw, dt,
                     );
-                    clock.charge_transfer(slot, n);
                     let server_smashed = frame.payload.into_tensor()?;
 
                     // server: body forward; ship activations downlink.
@@ -395,7 +402,10 @@ impl<'a> BaselineEngine<'a> {
                         WireFormat::F32,
                     )?;
                     comm.record(MsgKind::BodyOutput, Direction::Downlink, n);
-                    clock.charge_transfer(slot, n);
+                    let dt = clock.charge_transfer(slot, n);
+                    self.ledger.tap(
+                        r32, cid as u32, MsgKind::BodyOutput, Direction::Downlink, n, n, dt,
+                    );
                     let (frame, _) = c_end.recv()?;
                     let body_out = frame.payload.into_tensor()?;
 
@@ -420,13 +430,12 @@ impl<'a> BaselineEngine<'a> {
                             wire,
                         )?;
                         let (frame, n) = s_end.recv()?;
-                        comm.record_with_raw(
-                            MsgKind::GradBodyOut,
-                            Direction::Uplink,
-                            n,
-                            encoded_frame_len(&frame, WireFormat::F32),
+                        let raw = encoded_frame_len(&frame, WireFormat::F32);
+                        comm.record_with_raw(MsgKind::GradBodyOut, Direction::Uplink, n, raw);
+                        let dt = clock.charge_transfer(slot, n);
+                        self.ledger.tap(
+                            r32, cid as u32, MsgKind::GradBodyOut, Direction::Uplink, n, raw, dt,
                         );
-                        clock.charge_transfer(slot, n);
                         let g_body_out = frame.payload.into_tensor()?;
 
                         // server: body backward + body update.
@@ -449,7 +458,10 @@ impl<'a> BaselineEngine<'a> {
                             WireFormat::F32,
                         )?;
                         comm.record(MsgKind::GradSmashed, Direction::Downlink, n);
-                        clock.charge_transfer(slot, n);
+                        let dt = clock.charge_transfer(slot, n);
+                        self.ledger.tap(
+                            r32, cid as u32, MsgKind::GradSmashed, Direction::Downlink, n, n, dt,
+                        );
                         let (frame, _) = c_end.recv()?;
                         let g_smashed = frame.payload.into_tensor()?;
 
@@ -485,17 +497,15 @@ impl<'a> BaselineEngine<'a> {
                 }
                 payload => take_segments(payload, &["head", "tail"])?,
             };
-            comm.record_with_raw(
-                MsgKind::Upload,
-                Direction::Uplink,
-                n,
-                dense_segments_wire_len(&segs.iter().collect::<Vec<_>>()),
-            );
-            clock.charge_transfer(slot, n);
-            clock.charge_compute(
+            let raw = dense_segments_wire_len(&segs.iter().collect::<Vec<_>>());
+            comm.record_with_raw(MsgKind::Upload, Direction::Uplink, n, raw);
+            let dt = clock.charge_transfer(slot, n);
+            self.ledger.tap(r32, cid as u32, MsgKind::Upload, Direction::Uplink, n, raw, dt);
+            let compute_s = clock.charge_compute(
                 slot,
                 crate::flops::sfl_client_round_flops(&cfg, n_k, self.fed.local_epochs, full_ft),
             );
+            self.ledger.tap_compute(r32, cid as u32, compute_s);
             clock.mark_done(slot);
 
             updates.push((slot, segs, n_k));
@@ -560,5 +570,9 @@ impl FederatedRun for BaselineEngine<'_> {
             ),
             None => Ok(f64::NAN),
         }
+    }
+
+    fn ledger(&self) -> Option<&Ledger> {
+        Some(&self.ledger)
     }
 }

@@ -45,6 +45,7 @@ use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet, SegmentParams};
 use crate::runtime::HostTensor;
 use crate::sim::{Fleet, RoundOutcome, SimClock};
+use crate::telemetry::Ledger;
 use crate::transport::{
     dense_segments_wire_len, encoded_frame_len, Frame, FrameHub, Hub, Payload, WireFormat,
 };
@@ -71,6 +72,9 @@ pub(crate) struct SfPromptEngine<'a> {
     train: &'a SynthDataset,
     eval: Option<&'a SynthDataset>,
     history: RunHistory,
+    /// Per-(round, client, kind) re-attribution of the byte meter plus
+    /// sim-clock transfer/compute seconds (docs/TRACING.md).
+    ledger: Ledger,
 }
 
 impl<'a> SfPromptEngine<'a> {
@@ -102,6 +106,7 @@ impl<'a> SfPromptEngine<'a> {
             train,
             eval,
             history: RunHistory::default(),
+            ledger: Ledger::new(),
         })
     }
 
@@ -133,7 +138,8 @@ impl<'a> SfPromptEngine<'a> {
         // uploads are deltas against exactly what was distributed. ---
         let dist_ref =
             [self.global.get("tail")?.clone(), self.global.get("prompt")?.clone()];
-        distribute_model(&hub, &selected, round as u32, &dist_ref, &mut comm, &mut clock)?;
+        let ledger = &mut self.ledger;
+        distribute_model(&hub, &selected, round as u32, &dist_ref, &mut comm, &mut clock, ledger)?;
 
         // Threads own the online selected clients; park stand-ins.
         let mut endpoints: Vec<Option<_>> = endpoints.into_iter().map(Some).collect();
@@ -203,7 +209,7 @@ impl<'a> SfPromptEngine<'a> {
             let serve_span = telemetry.as_ref().map(|t| t.span("phase", "serve"));
             let agg_result = serve_round(
                 backend, body_prep, &hub, selected_ref, round as u32,
-                &n_ks, &fed, &dist_ref, &mut comm, &mut clock,
+                &n_ks, &fed, &dist_ref, &mut comm, &mut clock, ledger,
             );
             drop(serve_span);
             // Dropping the hub unblocks any client still waiting on a recv
@@ -325,6 +331,10 @@ impl FederatedRun for SfPromptEngine<'_> {
             None => Ok(f64::NAN),
         }
     }
+
+    fn ledger(&self) -> Option<&Ledger> {
+        Some(&self.ledger)
+    }
 }
 
 /// Round start: send the aggregated `[tail, prompt]` pair to every
@@ -332,6 +342,7 @@ impl FederatedRun for SfPromptEngine<'_> {
 /// metering each encoded frame and charging its transfer time. Shared by
 /// the in-process engine and the networked serve loop — the `FrameHub`
 /// decides whether "send" means an mpsc push or a socket write.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn distribute_model(
     hub: &dyn FrameHub,
     selected: &[usize],
@@ -339,6 +350,7 @@ pub(crate) fn distribute_model(
     dist_ref: &[SegmentParams; 2],
     comm: &mut ByteMeter,
     clock: &mut SimClock,
+    ledger: &mut Ledger,
 ) -> Result<()> {
     let telemetry = crate::telemetry::active();
     let _dist_span = telemetry.as_ref().map(|t| t.span("phase", "distribute"));
@@ -350,7 +362,8 @@ pub(crate) fn distribute_model(
         let frame = Frame::new(MsgKind::ModelDistribution, round, cid as u32, dist.clone());
         let n = hub.send_to(slot, &frame, WireFormat::F32)?;
         comm.record(MsgKind::ModelDistribution, Direction::Downlink, n);
-        clock.charge_transfer(slot, n);
+        let dt = clock.charge_transfer(slot, n);
+        ledger.tap(round, cid as u32, MsgKind::ModelDistribution, Direction::Downlink, n, n, dt);
     }
     Ok(())
 }
@@ -379,6 +392,7 @@ pub(crate) fn serve_round(
     dist_ref: &[SegmentParams; 2],
     comm: &mut ByteMeter,
     clock: &mut SimClock,
+    ledger: &mut Ledger,
 ) -> Result<(Option<(SegmentParams, SegmentParams)>, RoundOutcome)> {
     let slot_of = |cid: u32| {
         selected
@@ -413,16 +427,16 @@ pub(crate) fn serve_round(
         let slot = slot_of(frame.client)?;
         // Compressed uploads record their raw equivalent only after
         // reconstruction (below); every other uplink frame is dense
-        // already, so its f32 re-measure is the raw side directly.
-        if !matches!(frame.payload, Payload::Compressed(_)) {
-            comm.record_with_raw(
-                frame.kind,
-                Direction::Uplink,
-                n,
-                encoded_frame_len(&frame, WireFormat::F32),
-            );
+        // already, so its f32 re-measure is the raw side directly. The
+        // transfer time is charged here either way — `dt` stays live so
+        // the compressed-upload arm can attribute it with the bytes.
+        let raw = (!matches!(frame.payload, Payload::Compressed(_)))
+            .then(|| encoded_frame_len(&frame, WireFormat::F32));
+        let dt = clock.charge_transfer(slot, n);
+        if let Some(raw) = raw {
+            comm.record_with_raw(frame.kind, Direction::Uplink, n, raw);
+            ledger.tap(round, frame.client, frame.kind, Direction::Uplink, n, raw, dt);
         }
-        clock.charge_transfer(slot, n);
         match frame.kind {
             MsgKind::SmashedData => {
                 // Pull every other SmashedData frame from this turn's
@@ -438,13 +452,10 @@ pub(crate) fn serve_round(
                     }
                     let (f2, n2) = queue.remove(i).expect("index checked");
                     let s2 = slot_of(f2.client)?;
-                    comm.record_with_raw(
-                        f2.kind,
-                        Direction::Uplink,
-                        n2,
-                        encoded_frame_len(&f2, WireFormat::F32),
-                    );
-                    clock.charge_transfer(s2, n2);
+                    let raw2 = encoded_frame_len(&f2, WireFormat::F32);
+                    comm.record_with_raw(f2.kind, Direction::Uplink, n2, raw2);
+                    let dt2 = clock.charge_transfer(s2, n2);
+                    ledger.tap(round, f2.client, f2.kind, Direction::Uplink, n2, raw2, dt2);
                     cids.push(f2.client);
                     slots.push(s2);
                     inputs.push(f2.payload.into_tensor()?);
@@ -460,7 +471,8 @@ pub(crate) fn serve_round(
                         Frame::new(MsgKind::BodyOutput, round, cid, Payload::Tensor(body_out));
                     let nb = hub.send_to(s, &reply, WireFormat::F32)?;
                     comm.record(MsgKind::BodyOutput, Direction::Downlink, nb);
-                    clock.charge_transfer(s, nb);
+                    let dtb = clock.charge_transfer(s, nb);
+                    ledger.tap(round, cid, MsgKind::BodyOutput, Direction::Downlink, nb, nb, dtb);
                 }
             }
             MsgKind::GradBodyOut => {
@@ -475,13 +487,10 @@ pub(crate) fn serve_round(
                     }
                     let (f2, n2) = queue.remove(i).expect("index checked");
                     let s2 = slot_of(f2.client)?;
-                    comm.record_with_raw(
-                        f2.kind,
-                        Direction::Uplink,
-                        n2,
-                        encoded_frame_len(&f2, WireFormat::F32),
-                    );
-                    clock.charge_transfer(s2, n2);
+                    let raw2 = encoded_frame_len(&f2, WireFormat::F32);
+                    comm.record_with_raw(f2.kind, Direction::Uplink, n2, raw2);
+                    let dt2 = clock.charge_transfer(s2, n2);
+                    ledger.tap(round, f2.client, f2.kind, Direction::Uplink, n2, raw2, dt2);
                     cids.push(f2.client);
                     slots.push(s2);
                     grads.push(f2.payload.into_tensor()?);
@@ -503,7 +512,8 @@ pub(crate) fn serve_round(
                         Frame::new(MsgKind::GradSmashed, round, cid, Payload::Tensor(g_smashed));
                     let nb = hub.send_to(s, &reply, WireFormat::F32)?;
                     comm.record(MsgKind::GradSmashed, Direction::Downlink, nb);
-                    clock.charge_transfer(s, nb);
+                    let dtb = clock.charge_transfer(s, nb);
+                    ledger.tap(round, cid, MsgKind::GradSmashed, Direction::Downlink, nb, nb, dtb);
                 }
             }
             MsgKind::Upload => {
@@ -513,11 +523,19 @@ pub(crate) fn serve_round(
                         let segs = decompress_update(&refs, &csegs).map_err(|e| {
                             e.context(format!("client {}: compressed upload", frame.client))
                         })?;
-                        comm.record_with_raw(
+                        let raw = dense_segments_wire_len(&segs.iter().collect::<Vec<_>>());
+                        comm.record_with_raw(MsgKind::Upload, Direction::Uplink, n, raw);
+                        // `dt` was charged at the top of the loop before the
+                        // payload kind was known; attribute it here with the
+                        // reconstructed raw bytes.
+                        ledger.tap(
+                            round,
+                            frame.client,
                             MsgKind::Upload,
                             Direction::Uplink,
                             n,
-                            dense_segments_wire_len(&segs.iter().collect::<Vec<_>>()),
+                            raw,
+                            dt,
                         );
                         segs
                     }
@@ -535,7 +553,7 @@ pub(crate) fn serve_round(
                 uploads[slot] = Some((tail, prompt));
                 // The client's whole round of device work, charged now
                 // that its Phase-2 batch count is known.
-                clock.charge_compute(
+                let compute_s = clock.charge_compute(
                     slot,
                     crate::flops::sfprompt_client_round_flops(
                         cfg,
@@ -545,6 +563,7 @@ pub(crate) fn serve_round(
                         fed.local_loss_update,
                     ),
                 );
+                ledger.tap_compute(round, frame.client, compute_s);
                 clock.mark_done(slot);
                 pending -= 1;
             }
@@ -590,7 +609,8 @@ pub(crate) fn serve_round(
             let frame = Frame::new(MsgKind::AggregateBroadcast, round, cid as u32, bc.clone());
             let n = hub.send_to(slot, &frame, WireFormat::F32)?;
             comm.record(MsgKind::AggregateBroadcast, Direction::Downlink, n);
-            clock.charge_transfer(slot, n);
+            let dt = clock.charge_transfer(slot, n);
+            ledger.tap(round, cid as u32, MsgKind::AggregateBroadcast, Direction::Downlink, n, n, dt);
         }
         Some((tail, prompt))
     };

@@ -66,6 +66,14 @@ pub trait FederatedRun {
     /// Evaluate the current global model on the eval split (NaN when the
     /// run was built without one).
     fn final_eval(&mut self) -> Result<f64>;
+
+    /// The per-(round, client, msg-kind) communication-cost ledger
+    /// accumulated so far — a re-attribution of [`Self::comm_totals`]
+    /// onto the paper's phase structure (docs/TRACING.md). `None` for
+    /// engines that do not keep one.
+    fn ledger(&self) -> Option<&crate::telemetry::Ledger> {
+        None
+    }
 }
 
 /// Validated, consuming builder — the only constructor for engines.

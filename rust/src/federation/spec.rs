@@ -366,11 +366,25 @@ pub struct RunReport {
     /// deterministic report contract: comparisons (`sfprompt diff`, the CI
     /// equality check) canonicalize it away.
     pub health: Option<Json>,
+    /// Optional per-(round, client, msg-kind) communication-cost ledger
+    /// (normally [`crate::telemetry::Ledger::to_json`]), emitted under a
+    /// `"ledger"` key. A re-attribution of the measured `ByteMeter` data —
+    /// its per-kind sums equal `comm.by_kind` exactly — but, carrying
+    /// sim-clock transfer/compute seconds, it is canonicalized away by
+    /// comparisons like `wall_s`/`health`/`telemetry`.
+    pub ledger: Option<Json>,
 }
 
 impl RunReport {
     pub fn new(spec: &RunSpec, setup_bytes: u64, history: RunHistory) -> RunReport {
-        RunReport { spec: spec.clone(), setup_bytes, history, telemetry: None, health: None }
+        RunReport {
+            spec: spec.clone(),
+            setup_bytes,
+            history,
+            telemetry: None,
+            health: None,
+            ledger: None,
+        }
     }
 
     /// Attach a telemetry metrics block (normally
@@ -384,6 +398,13 @@ impl RunReport {
     /// [`crate::telemetry::HealthRegistry::to_json`]) to the report.
     pub fn with_health(mut self, health: Json) -> RunReport {
         self.health = Some(health);
+        self
+    }
+
+    /// Attach a communication-cost ledger block (normally
+    /// [`crate::telemetry::Ledger::to_json`]) to the report.
+    pub fn with_ledger(mut self, ledger: Json) -> RunReport {
+        self.ledger = Some(ledger);
         self
     }
 
@@ -465,6 +486,9 @@ impl RunReport {
         }
         if let Some(hh) = &self.health {
             o.insert("health".to_string(), hh.clone());
+        }
+        if let Some(l) = &self.ledger {
+            o.insert("ledger".to_string(), l.clone());
         }
         Json::Obj(o)
     }

@@ -175,6 +175,26 @@
 //! socket that sends one `observe` handshake). Zero new dependencies:
 //! threaded blocking `std::net`. See docs/NET.md.
 //!
+//! ## Distributed tracing & the cost ledger (docs/TRACING.md)
+//!
+//! A networked run traced on every process stays one story: the
+//! handshake propagates a run-wide 128-bit trace id and gives each
+//! process a disjoint span-id block, per-round `RoundCtx` control
+//! messages let client processes parent their spans under the
+//! coordinator's round spans across process boundaries (serialised as
+//! remote-parent `rp` edges), and NTP-style clock estimation (handshake
+//! timestamps plus periodic probes, all bit-exact hex floats) measures
+//! each client's clock offset/RTT against the coordinator. `sfprompt
+//! trace merge A.jsonl B.jsonl ...` stitches the per-process files into
+//! one causally-consistent tree on the coordinator timeline — remote
+//! parents resolved, impossible overlaps flagged `skew` rather than
+//! clamped. Alongside, [`telemetry::Ledger`] re-attributes the byte
+//! meter's measurements onto (round, client, paper-phase, message-kind)
+//! cells — reconciled **bit-exactly** against [`comm::ByteMeter`] at the
+//! end of every run, sealed into the `RunReport` as `"ledger"`, and
+//! rendered by `report --waterfall` as a per-round
+//! communication-vs-compute waterfall.
+//!
 //! ## Live operations (docs/OPS.md)
 //!
 //! A serving coordinator is observable while it runs and debuggable when

@@ -9,8 +9,10 @@
 //!   client     --connect HOST:PORT         run a networked client process
 //!   top        --connect HOST:PORT         live status console for a server
 //!   diff       A.json B.json               compare reports/bench snapshots
+//!   trace      merge A.jsonl B.jsonl ...   stitch per-process traces into one tree
 //!   report     --trace t.jsonl             pretty-print a saved trace
 //!              --health e.jsonl            anomaly timeline from event/flight logs
+//!              --waterfall report.json     per-round communication-cost waterfall
 //!   experiment --id <fig2|fig4|...|all>    regenerate a paper table/figure
 //!   analyze                                closed-form cost model sweep
 
@@ -29,7 +31,9 @@ use sfprompt::federation::{
 use sfprompt::net;
 use sfprompt::partition::Partition;
 use sfprompt::sim::FleetSpec;
-use sfprompt::telemetry::{self, SpanRecord, Telemetry, TelemetryObserver};
+use sfprompt::telemetry::{
+    self, merge_traces, ProcessTrace, SpanRecord, Telemetry, TelemetryObserver,
+};
 use sfprompt::transport::WireFormat;
 use sfprompt::util::cli::Args;
 use sfprompt::util::csv::CsvWriter;
@@ -57,10 +61,14 @@ USAGE:
                       [--prom HOST:PORT] [--postmortem FILE.jsonl]
   sfprompt client     --connect HOST:PORT [--name STR] [--run-id ID]
                       [--retries N] [--backoff-ms N] [--io-timeout-s F] [--quiet]
+                      [--trace FILE.jsonl]
   sfprompt top        --connect HOST:PORT [--interval-s F] [--once] [--json]
   sfprompt diff       A.json B.json [--tolerance F] [--print-canon]
+  sfprompt trace      merge A.jsonl B.jsonl [...] [--out MERGED.jsonl]
+                      [--chrome OUT.json]
   sfprompt report     --trace FILE.jsonl [--chrome OUT.json] [--top N]
   sfprompt report     --health FILE.jsonl
+  sfprompt report     --waterfall REPORT.json [--round N]
   sfprompt experiment --id <table1|table2|table3|fig2|fig4|fig5|fig6|fig7|wire|fleet|compress|all>
                       [--out DIR] [--rounds N] [--scale F] [--seed N]
   sfprompt analyze    [--out DIR]
@@ -113,11 +121,22 @@ always-on flight recorder (a bounded ring of recent health/span entries)
 the moment the run fails or an anomaly fires, and `report --health FILE`
 renders the anomaly timeline from an event stream or flight dump.
 
+Distributed tracing (docs/TRACING.md): when `serve --trace` and
+`client --trace` both record, the handshake propagates one trace id,
+per-process span-id blocks, and an NTP-style clock-offset estimate, so
+client-side spans carry their coordinator-side parents. `trace merge`
+stitches the per-process JSONL files into one causally-consistent tree
+(re-based onto the coordinator timeline; impossible nestings are flagged
+`skew`, never fabricated). Traced runs seal a per-(round, client, phase)
+communication-cost ledger into the report's `"ledger"` block — a pure
+re-attribution of the measured ByteMeter bytes — which
+`report --waterfall` renders as a per-round cost waterfall.
+
 `diff A B` compares two RunReports or BENCH_*.json snapshots field by
 field after canonicalizing wall-clock-dependent blocks away (wall_s,
-health, telemetry, machine, note); perf-pattern fields (mean_ms, p95_ms,
-...) compare within --tolerance (default 0.10 relative). Exit codes:
-0 match, 1 regression/divergence, 2 usage or unreadable input.
+health, telemetry, ledger, machine, note); perf-pattern fields (mean_ms,
+p95_ms, ...) compare within --tolerance (default 0.10 relative). Exit
+codes: 0 match, 1 regression/divergence, 2 usage or unreadable input.
 ";
 
 fn main() {
@@ -140,6 +159,7 @@ fn dispatch(args: Args) -> Result<()> {
         Some("client") => client_cmd(&args),
         Some("top") => top_cmd(&args),
         Some("diff") => diff_cmd(&args),
+        Some("trace") => trace_cmd(&args),
         Some("report") => report(&args),
         Some("experiment") => experiment(&args),
         Some("analyze") => analyze(&args),
@@ -385,6 +405,15 @@ fn train(args: &Args) -> Result<()> {
         if let Some(t) = &telemetry {
             report = report.with_telemetry(t.metrics.to_json());
         }
+        // The engines keep a per-(round, client, phase) ledger in lock-step
+        // with the ByteMeter; reconcile (any divergence is an engine bug)
+        // and seal it into the report for `report --waterfall`.
+        if let Some(ledger) = run.ledger().filter(|l| !l.is_empty()) {
+            ledger
+                .reconcile(&report.history.total_comm)
+                .map_err(|e| anyhow!("ledger/meter divergence: {e}"))?;
+            report = report.with_ledger(ledger.to_json());
+        }
         println!("{}", report.to_json());
         return Ok(());
     }
@@ -568,7 +597,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
 
 /// `client --connect HOST:PORT`: run one networked client process. The
 /// server's `Welcome` carries the full RunSpec, so no other run flags are
-/// needed — everything else here tunes the connection itself.
+/// needed — everything else here tunes the connection itself. `--trace`
+/// records this process's spans; joined with a traced server's welcome
+/// context they parent under the coordinator's rounds (`trace merge`).
 fn client_cmd(args: &Args) -> Result<()> {
     let addr = args
         .get("connect")
@@ -585,7 +616,27 @@ fn client_cmd(args: &Args) -> Result<()> {
         run_id: args.get_or("run-id", "").to_string(),
         quiet: args.has_flag("quiet"),
     };
-    let summary = net::run_client(addr, &sfprompt::artifacts_root(), &opts)?;
+    let trace_path = args.get("trace");
+    let telemetry = trace_path.is_some().then(|| {
+        let t = Arc::new(Telemetry::new());
+        telemetry::install(t.clone());
+        t
+    });
+    let run = net::run_client(addr, &sfprompt::artifacts_root(), &opts);
+    if telemetry.is_some() {
+        telemetry::uninstall();
+    }
+    if let (Some(t), Some(path)) = (&telemetry, trace_path) {
+        let dangling = t.tracer.finish();
+        if dangling > 0 {
+            eprintln!("warning: {dangling} telemetry spans never closed (flagged open:true)");
+        }
+        // Written even when the run failed — a partial client trace is
+        // exactly what a post-mortem merge wants.
+        std::fs::write(path, t.tracer.to_jsonl())
+            .with_context(|| format!("writing trace {path}"))?;
+    }
+    let summary = run?;
     println!(
         "client: process {}/{} served clients {:?} for {} client-round(s); run complete",
         summary.process + 1,
@@ -593,6 +644,9 @@ fn client_cmd(args: &Args) -> Result<()> {
         summary.client_ids,
         summary.rounds_participated
     );
+    if let Some(path) = trace_path {
+        println!("client: trace -> {path}");
+    }
     Ok(())
 }
 
@@ -734,11 +788,13 @@ fn top_cmd(args: &Args) -> Result<()> {
 }
 
 /// Recursively drop the fields two honest runs are allowed to disagree on:
-/// wall-clock blocks (`wall_s`, `health`, `telemetry`), machine context,
-/// and prose notes. Everything that remains is part of the deterministic
-/// contract.
+/// wall-clock blocks (`wall_s`, `health`, `telemetry`, `ledger` — the
+/// ledger's byte columns are deterministic but its transfer/compute
+/// seconds follow the fleet clock, and untraced runs omit the block
+/// entirely), machine context, and prose notes. Everything that remains is
+/// part of the deterministic contract.
 fn diff_canon(v: &Json) -> Json {
-    const DROP: [&str; 5] = ["wall_s", "health", "telemetry", "machine", "note"];
+    const DROP: [&str; 6] = ["wall_s", "health", "telemetry", "ledger", "machine", "note"];
     match v {
         Json::Obj(o) => Json::Obj(
             o.iter()
@@ -859,6 +915,166 @@ fn diff_cmd(args: &Args) -> Result<()> {
         eprintln!("  {d}");
     }
     std::process::exit(1);
+}
+
+/// `trace merge A.jsonl B.jsonl [...]`: stitch per-process traces from one
+/// traced networked run into a single causally-consistent tree. Remote
+/// parent references resolve across files, client spans are re-based onto
+/// the coordinator timeline using each trace's recorded clock offset, and
+/// nestings that escape their parent beyond the clock estimate's RTT bound
+/// are flagged `skew` (never silently clamped). See docs/TRACING.md.
+fn trace_cmd(args: &Args) -> Result<()> {
+    if args.positional.get(1).map(|s| s.as_str()) != Some("merge") {
+        eprintln!(
+            "usage: sfprompt trace merge A.jsonl B.jsonl [...] [--out MERGED.jsonl] \
+             [--chrome OUT.json]"
+        );
+        std::process::exit(2);
+    }
+    let inputs = &args.positional[2..];
+    if inputs.len() < 2 {
+        bail!("trace merge needs at least two per-process trace files");
+    }
+    let mut traces = Vec::with_capacity(inputs.len());
+    for path in inputs {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {path}"))?;
+        traces.push(ProcessTrace::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?);
+    }
+    let merged = merge_traces(&traces).map_err(|e| anyhow!("trace merge: {e}"))?;
+
+    let remote = merged.spans.iter().filter(|s| s.remote).count();
+    let skewed = merged.spans.iter().filter(|s| s.skew).count();
+    eprintln!(
+        "merged trace {:032x}: {} spans from {} process(es), {} cross-process edge(s){}",
+        merged.trace_id,
+        merged.spans.len(),
+        merged.processes.len(),
+        remote,
+        if skewed > 0 { format!(", {skewed} flagged skew") } else { String::new() }
+    );
+    for p in &merged.processes {
+        eprintln!(
+            "  {:<14} span_base={:#x}  clock offset {:+.6}s (rtt {:.6}s)",
+            p.process, p.span_base, p.offset_s, p.rtt_s
+        );
+    }
+
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, merged.to_jsonl())
+                .with_context(|| format!("writing merged trace {out}"))?;
+            eprintln!("merged trace -> {out}");
+        }
+        None => print!("{}", merged.to_jsonl()),
+    }
+    if let Some(out) = args.get("chrome") {
+        std::fs::write(out, format!("{}\n", merged.to_chrome_trace()))
+            .with_context(|| format!("writing chrome trace {out}"))?;
+        eprintln!("chrome trace -> {out} (open in Perfetto or chrome://tracing)");
+    }
+    Ok(())
+}
+
+/// `report --waterfall REPORT.json [--round N]`: render the report's
+/// `"ledger"` block — measured bytes re-attributed per (round, client,
+/// phase) — as a per-round communication-cost waterfall.
+fn report_waterfall(path: &str, args: &Args) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading report {path}"))?;
+    let v = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let ledger = v.get("ledger").ok_or_else(|| {
+        anyhow!(
+            "{path} has no \"ledger\" block — produce the report from a traced run \
+             (train/serve with --trace or --metrics)"
+        )
+    })?;
+    if ledger.get("format").and_then(Json::as_str) != Some("sfprompt-ledger") {
+        bail!("{path}: \"ledger\" block is not an sfprompt-ledger document");
+    }
+    let rows = ledger
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{path}: ledger has no rows array"))?;
+    let only_round = args.get("round").map(|r| r.parse::<u64>()).transpose()
+        .map_err(|_| anyhow!("--round must be an integer"))?;
+
+    // (round -> phase -> (bytes, transfer_s)), plus per-round compute.
+    let mut per_round: BTreeMap<u64, BTreeMap<String, (u64, f64)>> = BTreeMap::new();
+    for row in rows {
+        let round = row.get("round").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+        if only_round.is_some_and(|r| r != round) {
+            continue;
+        }
+        let phase = row
+            .get("phase")
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string();
+        let bytes = (row.get("up_bytes").and_then(Json::as_f64).unwrap_or(0.0)
+            + row.get("down_bytes").and_then(Json::as_f64).unwrap_or(0.0)) as u64;
+        let transfer = row.get("transfer_s").and_then(Json::as_f64).unwrap_or(0.0);
+        let e = per_round.entry(round).or_default().entry(phase).or_insert((0, 0.0));
+        e.0 += bytes;
+        e.1 += transfer;
+    }
+    let mut compute: BTreeMap<u64, f64> = BTreeMap::new();
+    if let Some(cs) = ledger.get("compute").and_then(Json::as_arr) {
+        for c in cs {
+            let round = c.get("round").and_then(Json::as_f64).unwrap_or(-1.0) as u64;
+            if only_round.is_some_and(|r| r != round) {
+                continue;
+            }
+            *compute.entry(round).or_insert(0.0) +=
+                c.get("compute_s").and_then(Json::as_f64).unwrap_or(0.0);
+        }
+    }
+    if per_round.is_empty() {
+        bail!("no ledger rows{}", only_round.map_or(String::new(), |r| format!(" for round {r}")));
+    }
+
+    let max_cost = per_round
+        .values()
+        .flat_map(|phases| phases.values().map(|(_, s)| *s))
+        .chain(compute.values().copied())
+        .fold(0.0f64, f64::max);
+    let bar = |cost: f64| -> String {
+        const WIDTH: usize = 40;
+        let n = if max_cost > 0.0 {
+            ((cost / max_cost) * WIDTH as f64).round() as usize
+        } else {
+            0
+        };
+        "#".repeat(n.min(WIDTH))
+    };
+    println!("communication-cost waterfall ({path}):");
+    for (round, phases) in &per_round {
+        println!("round {round}:");
+        for (phase, (bytes, transfer)) in phases {
+            println!(
+                "  {:<14} {:>12.3} MB {:>10.3}s |{}",
+                phase,
+                *bytes as f64 / 1e6,
+                transfer,
+                bar(*transfer)
+            );
+        }
+        if let Some(c) = compute.get(round) {
+            println!("  {:<14} {:>15} {:>10.3}s |{}", "compute", "-", c, bar(*c));
+        }
+    }
+    if let Some(totals) = ledger.get("totals") {
+        let tf = |k: &str| totals.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "totals: {:.3} MB up / {:.3} MB down, {} messages, transfer {:.3}s, compute {:.3}s",
+            tf("up_bytes") / 1e6,
+            tf("down_bytes") / 1e6,
+            tf("messages") as u64,
+            tf("transfer_s"),
+            tf("compute_s")
+        );
+    }
+    Ok(())
 }
 
 /// Console rendering of `MetricsRegistry::hottest_stages` (a JSON array).
@@ -1041,9 +1257,12 @@ fn report(args: &Args) -> Result<()> {
     if let Some(path) = args.get("health") {
         return report_health(path);
     }
-    let path = args
-        .get("trace")
-        .ok_or_else(|| anyhow!("report needs --trace FILE.jsonl (or --health FILE.jsonl)"))?;
+    if let Some(path) = args.get("waterfall") {
+        return report_waterfall(path, args);
+    }
+    let path = args.get("trace").ok_or_else(|| {
+        anyhow!("report needs --trace FILE.jsonl, --health FILE.jsonl, or --waterfall REPORT.json")
+    })?;
     let text =
         std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
     let records = parse_trace(&text)?;

@@ -17,11 +17,19 @@
 //! mutex — sends are whole frames, so interleaving is frame-atomic. After
 //! each completed round a worker reports its loss vectors back with a
 //! `RoundReport` control message (bit-exact hex floats).
+//!
+//! When this process is traced (`client --trace`), the welcome handshake
+//! also delivers the run's trace id, this process's span-id block, and the
+//! NTP timestamp legs for the clock-offset estimate; `RoundCtx` messages
+//! then parent each round's `client:N` span under the coordinator's round
+//! span, and idle time on the socket is used for `ClockProbe` re-estimates.
+//! See docs/TRACING.md for the full model.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -72,6 +80,17 @@ pub struct ClientSummary {
     pub rounds_participated: usize,
 }
 
+/// How long the demultiplexer lets the socket stay idle before using the
+/// silence to refresh this process's clock-offset estimate (traced runs
+/// only; see docs/TRACING.md).
+const CLOCK_PROBE_INTERVAL: Duration = Duration::from_secs(5);
+
+/// "Now" on this process's trace timebase; 0.0 when untraced, in which
+/// case the NTP legs are ignored by both sides.
+fn client_now_s() -> f64 {
+    crate::telemetry::active().map_or(0.0, |t| t.tracer.now_s())
+}
+
 /// Frames routed to one worker, or the end-of-run signal.
 enum WorkerMsg {
     Frame(Frame, usize),
@@ -107,7 +126,11 @@ impl Transport for WorkerLink<'_> {
 }
 
 /// Worker-thread body: run every round the server assigns to this client.
-/// Returns the number of rounds completed.
+/// Returns the number of rounds completed. In a traced run, each round's
+/// work runs under a `client:N` span whose remote parent is the
+/// coordinator's round span (delivered out-of-band via `RoundCtx`), so the
+/// phase spans [`client_split_round`] opens nest correctly after a trace
+/// merge.
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     mut client: Client,
@@ -118,9 +141,11 @@ fn worker_loop(
     head: &PreparedSegment,
     fed: &FedConfig,
     cfg: &ModelConfig,
+    round_ctx: &Mutex<BTreeMap<u32, u64>>,
     quiet: bool,
 ) -> Result<usize> {
     let cid = client.id as u32;
+    let telemetry = crate::telemetry::active();
     let mut rounds = 0usize;
     loop {
         let (frame, n) = match rx.recv() {
@@ -134,10 +159,20 @@ fn worker_loop(
             );
         }
         let round = frame.round;
+        let round_span = telemetry.as_ref().map(|t| {
+            let name = format!("client:{}", client.id);
+            let parent = round_ctx.lock().expect("round context poisoned").get(&round).copied();
+            match parent {
+                Some(p) if t.tracer.trace_id() != 0 => t.span_remote("client", &name, p),
+                _ => t.span("client", &name),
+            }
+        });
         let mut link = WorkerLink { pending: Some((frame, n)), rx: &rx, writer };
-        match client_split_round(
+        let result = client_split_round(
             &mut client, backend, examples, head, fed, cfg, round, &mut link,
-        ) {
+        );
+        drop(round_span);
+        match result {
             Ok(out) => {
                 let report = Control::RoundReport {
                     round,
@@ -177,8 +212,9 @@ pub fn run_client(
         wire: WIRE_VERSION,
         name: opts.name.clone(),
         run_id: opts.run_id.clone(),
+        t0: client_now_s(),
     })?;
-    let (process, processes, client_ids, spec) = match link.recv_msg(false)? {
+    let (process, processes, client_ids, spec, sync) = match link.recv_msg(false)? {
         Some(NetMsg::Control(Control::Welcome {
             proto,
             wire,
@@ -187,14 +223,21 @@ pub fn run_client(
             processes,
             client_ids,
             spec,
+            trace_id,
+            span_base,
+            t0,
+            t1,
+            t2,
         }, _)) => {
+            // The t3 leg: welcome receive time on this process's timebase.
+            let t3 = client_now_s();
             if proto != NET_PROTO_VERSION {
                 bail!("server speaks net protocol v{proto}, this client v{NET_PROTO_VERSION}");
             }
             if wire != WIRE_VERSION {
                 bail!("server speaks codec wire v{wire}, this client v{WIRE_VERSION}");
             }
-            (process, processes, client_ids, spec)
+            (process, processes, client_ids, spec, (trace_id, span_base, t0, t1, t2, t3))
         }
         Some(NetMsg::Control(Control::Reject { reason }, _)) => {
             bail!("server rejected the handshake: {reason}")
@@ -223,6 +266,23 @@ pub fn run_client(
         );
     }
 
+    // Adopt the run's distributed-trace identity before any span opens:
+    // the welcome's NTP legs (t0 send, t1 server-receive, t2 server-send,
+    // t3 receive) give offset = ((t1-t0)+(t2-t3))/2 — coordinator time
+    // minus this process's time — and rtt = (t3-t0)-(t2-t1), both recorded
+    // in the trace header so `sfprompt trace merge` can re-base this
+    // process's spans onto the coordinator timeline (docs/TRACING.md).
+    let telemetry = crate::telemetry::active();
+    if let Some(t) = &telemetry {
+        let (trace_id, span_base, t0, t1, t2, t3) = sync;
+        if trace_id != 0 {
+            t.tracer.set_trace_context(trace_id, &format!("client-{process}"), span_base);
+            let offset = ((t1 - t0) + (t2 - t3)) / 2.0;
+            let rtt = (t3 - t0) - (t2 - t1);
+            t.tracer.set_clock(offset, rtt);
+        }
+    }
+
     let backend = spec.open_backend(artifacts_root)?;
     let backend: &dyn Backend = backend.as_ref();
     let manifest = backend.manifest();
@@ -245,6 +305,10 @@ pub fn run_client(
     let examples = &train.examples;
 
     let writer = Mutex::new(link.try_clone().context("splitting the socket")?);
+    // Round → coordinator-side parent span id, fed by `RoundCtx` control
+    // messages (always sent before the round's first frame) and read by the
+    // workers when they open their `client:N` spans.
+    let round_ctx: Mutex<BTreeMap<u32, u64>> = Mutex::new(BTreeMap::new());
 
     let (reason, rounds) = std::thread::scope(|scope| {
         let mut senders: BTreeMap<u32, Sender<WorkerMsg>> = BTreeMap::new();
@@ -256,16 +320,51 @@ pub fn run_client(
             let head = &head_prep;
             let fed = &fed;
             let cfg = &cfg;
+            let round_ctx = &round_ctx;
             let quiet = opts.quiet;
             handles.push(scope.spawn(move || {
-                worker_loop(client, rx, writer, backend, examples, head, fed, cfg, quiet)
+                worker_loop(
+                    client, rx, writer, backend, examples, head, fed, cfg, round_ctx, quiet,
+                )
             }));
         }
 
         // --- Demultiplexer: the socket's read half, on this thread. ---
+        let mut last_probe = Instant::now();
         let demux: Result<String> = loop {
             match link.recv_msg(true) {
-                Ok(None) => continue, // idle between rounds
+                Ok(None) => {
+                    // Idle between rounds: traced clients use the silence
+                    // to refresh their clock-offset estimate.
+                    if let Some(t) = &telemetry {
+                        if t.tracer.trace_id() != 0
+                            && last_probe.elapsed() >= CLOCK_PROBE_INTERVAL
+                        {
+                            last_probe = Instant::now();
+                            let probe = Control::ClockProbe { t0: t.tracer.now_s() };
+                            let sent = writer
+                                .lock()
+                                .expect("writer lock poisoned")
+                                .send_control(&probe);
+                            if let Err(e) = sent {
+                                break Err(e.context("connection to server lost"));
+                            }
+                        }
+                    }
+                    continue;
+                }
+                Ok(Some(NetMsg::Control(Control::RoundCtx { round, parent }, _))) => {
+                    round_ctx.lock().expect("round context poisoned").insert(round, parent);
+                }
+                Ok(Some(NetMsg::Control(Control::ClockReply { t0, t1, t2 }, _))) => {
+                    if let Some(t) = &telemetry {
+                        let t3 = t.tracer.now_s();
+                        t.tracer.set_clock(
+                            ((t1 - t0) + (t2 - t3)) / 2.0,
+                            (t3 - t0) - (t2 - t1),
+                        );
+                    }
+                }
                 Ok(Some(NetMsg::Frame(frame, n))) => match senders.get(&frame.client) {
                     Some(tx) => {
                         if tx.send(WorkerMsg::Frame(frame, n)).is_err() {

@@ -28,11 +28,17 @@ pub const SHUTDOWN_COMPLETE: &str = "run complete";
 pub enum Control {
     /// Client → server, first message on a connection: identify and pin
     /// both protocol layers. An empty `run_id` means "whatever run you are
-    /// serving".
-    Hello { proto: u8, wire: u8, name: String, run_id: String },
+    /// serving". `t0` is the client's send timestamp (its local monotonic
+    /// clock) — the first leg of the NTP-style handshake clock estimate
+    /// (docs/TRACING.md); the server echoes it in [`Control::Welcome`].
+    Hello { proto: u8, wire: u8, name: String, run_id: String, t0: f64 },
     /// Server → client, handshake accept: the process's slice of the
     /// federation plus the full [`RunSpec`], from which the client
-    /// regenerates its datasets and RNG streams deterministically.
+    /// regenerates its datasets and RNG streams deterministically. Also
+    /// carries the distributed-trace identity (run-wide `trace_id`, this
+    /// process's disjoint span-id block) and the server-side NTP
+    /// timestamps: `t0` echoes the Hello's stamp, `t1`/`t2` are the
+    /// server's receive/send times on its own clock.
     Welcome {
         proto: u8,
         wire: u8,
@@ -44,7 +50,27 @@ pub enum Control {
         /// Logical client ids this process owns (`cid % processes == process`).
         client_ids: Vec<usize>,
         spec: RunSpec,
+        /// Run-wide 128-bit trace id (0 when the server runs untraced).
+        trace_id: u128,
+        /// Start of this process's span-id block; the client allocates
+        /// span ids from `span_base + 1`.
+        span_base: u64,
+        /// NTP handshake legs: client send (echoed), server recv, server send.
+        t0: f64,
+        t1: f64,
+        t2: f64,
     },
+    /// Server → client, immediately before a round's first data frame:
+    /// the coordinator-side span id this process's `client:N` spans
+    /// should parent under. TCP ordering guarantees it lands before the
+    /// round's `ModelDistribution` frame.
+    RoundCtx { round: u32, parent: u64 },
+    /// Client → server: a periodic NTP-style clock probe (`t0` = client
+    /// send time). The server answers with [`Control::ClockReply`].
+    ClockProbe { t0: f64 },
+    /// Server → client: `t0` echoed, `t1`/`t2` server recv/send times —
+    /// the client computes offset/RTT and re-stamps its trace header.
+    ClockReply { t0: f64, t1: f64, t2: f64 },
     /// Server → peer, handshake refuse (version mismatch, wrong run id,
     /// run already full); the server closes the connection after sending.
     Reject { reason: String },
@@ -71,6 +97,22 @@ pub enum Control {
 
 fn hex_losses(vals: &[f64]) -> Json {
     Json::Arr(vals.iter().map(|v| Json::Str(format!("{:016x}", v.to_bits()))).collect())
+}
+
+/// One f64 as a 16-hex-digit bit pattern — same bit-exact transport as
+/// the loss vectors, used for the NTP timestamp legs.
+fn hex_f64(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+fn f64_from_hex(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<f64> {
+    let s = obj
+        .get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("control {kind:?} needs hex bit-pattern string key {key:?}"))?;
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|_| anyhow!("control {kind:?} key {key:?} is not a 64-bit hex pattern"))?;
+    Ok(f64::from_bits(bits))
 }
 
 fn losses_from(v: &Json, key: &str) -> Result<Vec<f64>> {
@@ -113,6 +155,16 @@ fn u32_field(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<u32>
         .ok_or_else(|| anyhow!("control {kind:?} needs non-negative integer key {key:?}"))
 }
 
+/// Span ids / span bases: non-negative integers. They stay below 2^53
+/// by construction (per-process blocks start at `(process + 1) << 40`),
+/// so a JSON number carries them exactly.
+fn u64_field(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<u64> {
+    obj.get(key)
+        .and_then(Json::as_i64)
+        .and_then(|n| u64::try_from(n).ok())
+        .ok_or_else(|| anyhow!("control {kind:?} needs non-negative integer key {key:?}"))
+}
+
 fn str_field(obj: &BTreeMap<String, Json>, kind: &str, key: &str) -> Result<String> {
     obj.get(key)
         .and_then(Json::as_str)
@@ -125,6 +177,9 @@ impl Control {
         match self {
             Control::Hello { .. } => "hello",
             Control::Welcome { .. } => "welcome",
+            Control::RoundCtx { .. } => "round_ctx",
+            Control::ClockProbe { .. } => "clock",
+            Control::ClockReply { .. } => "clock_reply",
             Control::Reject { .. } => "reject",
             Control::Observe { .. } => "observe",
             Control::Status { .. } => "status",
@@ -138,13 +193,27 @@ impl Control {
         let mut o = BTreeMap::new();
         o.insert("kind".to_string(), Json::Str(self.kind().to_string()));
         match self {
-            Control::Hello { proto, wire, name, run_id } => {
+            Control::Hello { proto, wire, name, run_id, t0 } => {
                 o.insert("proto".to_string(), Json::Num(*proto as f64));
                 o.insert("wire".to_string(), Json::Num(*wire as f64));
                 o.insert("name".to_string(), Json::Str(name.clone()));
                 o.insert("run_id".to_string(), Json::Str(run_id.clone()));
+                o.insert("t0".to_string(), hex_f64(*t0));
             }
-            Control::Welcome { proto, wire, run_id, process, processes, client_ids, spec } => {
+            Control::Welcome {
+                proto,
+                wire,
+                run_id,
+                process,
+                processes,
+                client_ids,
+                spec,
+                trace_id,
+                span_base,
+                t0,
+                t1,
+                t2,
+            } => {
                 o.insert("proto".to_string(), Json::Num(*proto as f64));
                 o.insert("wire".to_string(), Json::Num(*wire as f64));
                 o.insert("run_id".to_string(), Json::Str(run_id.clone()));
@@ -155,6 +224,23 @@ impl Control {
                     Json::Arr(client_ids.iter().map(|&c| Json::Num(c as f64)).collect()),
                 );
                 o.insert("spec".to_string(), spec.to_json());
+                o.insert("trace_id".to_string(), Json::Str(format!("{trace_id:032x}")));
+                o.insert("span_base".to_string(), Json::Num(*span_base as f64));
+                o.insert("t0".to_string(), hex_f64(*t0));
+                o.insert("t1".to_string(), hex_f64(*t1));
+                o.insert("t2".to_string(), hex_f64(*t2));
+            }
+            Control::RoundCtx { round, parent } => {
+                o.insert("round".to_string(), Json::Num(*round as f64));
+                o.insert("parent".to_string(), Json::Num(*parent as f64));
+            }
+            Control::ClockProbe { t0 } => {
+                o.insert("t0".to_string(), hex_f64(*t0));
+            }
+            Control::ClockReply { t0, t1, t2 } => {
+                o.insert("t0".to_string(), hex_f64(*t0));
+                o.insert("t1".to_string(), hex_f64(*t1));
+                o.insert("t2".to_string(), hex_f64(*t2));
             }
             Control::Reject { reason } => {
                 o.insert("reason".to_string(), Json::Str(reason.clone()));
@@ -189,19 +275,33 @@ impl Control {
             .ok_or_else(|| anyhow!("control message needs a string \"kind\""))?;
         match kind {
             "hello" => {
-                check_keys(obj, kind, &["proto", "wire", "name", "run_id"])?;
+                check_keys(obj, kind, &["proto", "wire", "name", "run_id", "t0"])?;
                 Ok(Control::Hello {
                     proto: u8_field(obj, kind, "proto")?,
                     wire: u8_field(obj, kind, "wire")?,
                     name: str_field(obj, kind, "name")?,
                     run_id: str_field(obj, kind, "run_id")?,
+                    t0: f64_from_hex(obj, kind, "t0")?,
                 })
             }
             "welcome" => {
                 check_keys(
                     obj,
                     kind,
-                    &["proto", "wire", "run_id", "process", "processes", "client_ids", "spec"],
+                    &[
+                        "proto",
+                        "wire",
+                        "run_id",
+                        "process",
+                        "processes",
+                        "client_ids",
+                        "spec",
+                        "trace_id",
+                        "span_base",
+                        "t0",
+                        "t1",
+                        "t2",
+                    ],
                 )?;
                 let client_ids = obj
                     .get("client_ids")
@@ -216,6 +316,10 @@ impl Control {
                 let spec = RunSpec::from_json(
                     obj.get("spec").ok_or_else(|| anyhow!("control \"welcome\" needs \"spec\""))?,
                 )?;
+                let trace_hex = str_field(obj, kind, "trace_id")?;
+                let trace_id = u128::from_str_radix(&trace_hex, 16).map_err(|_| {
+                    anyhow!("control \"welcome\" key \"trace_id\" is not a 128-bit hex pattern")
+                })?;
                 Ok(Control::Welcome {
                     proto: u8_field(obj, kind, "proto")?,
                     wire: u8_field(obj, kind, "wire")?,
@@ -229,6 +333,30 @@ impl Control {
                     })?,
                     client_ids,
                     spec,
+                    trace_id,
+                    span_base: u64_field(obj, kind, "span_base")?,
+                    t0: f64_from_hex(obj, kind, "t0")?,
+                    t1: f64_from_hex(obj, kind, "t1")?,
+                    t2: f64_from_hex(obj, kind, "t2")?,
+                })
+            }
+            "round_ctx" => {
+                check_keys(obj, kind, &["round", "parent"])?;
+                Ok(Control::RoundCtx {
+                    round: u32_field(obj, kind, "round")?,
+                    parent: u64_field(obj, kind, "parent")?,
+                })
+            }
+            "clock" => {
+                check_keys(obj, kind, &["t0"])?;
+                Ok(Control::ClockProbe { t0: f64_from_hex(obj, kind, "t0")? })
+            }
+            "clock_reply" => {
+                check_keys(obj, kind, &["t0", "t1", "t2"])?;
+                Ok(Control::ClockReply {
+                    t0: f64_from_hex(obj, kind, "t0")?,
+                    t1: f64_from_hex(obj, kind, "t1")?,
+                    t2: f64_from_hex(obj, kind, "t2")?,
                 })
             }
             "reject" => {
@@ -266,8 +394,8 @@ impl Control {
                 Ok(Control::Shutdown { reason: str_field(obj, kind, "reason")? })
             }
             other => bail!(
-                "unknown control kind {other:?} (known: hello welcome reject observe \
-                 status status_reply round_report shutdown)"
+                "unknown control kind {other:?} (known: hello welcome round_ctx clock \
+                 clock_reply reject observe status status_reply round_report shutdown)"
             ),
         }
     }
@@ -318,15 +446,66 @@ mod tests {
             processes: 2,
             client_ids: vec![1, 3, 5],
             spec: spec.clone(),
+            trace_id: 0xdead_beef_dead_beef_dead_beef_dead_beef,
+            span_base: 2 << 40,
+            t0: 0.5,
+            t1: 1.25,
+            t2: 1.5,
         };
         match roundtrip(&c) {
-            Control::Welcome { client_ids, spec: got, process, processes, .. } => {
+            Control::Welcome {
+                client_ids,
+                spec: got,
+                process,
+                processes,
+                trace_id,
+                span_base,
+                t0,
+                t1,
+                t2,
+                ..
+            } => {
                 assert_eq!(client_ids, vec![1, 3, 5]);
                 assert_eq!((process, processes), (1, 2));
                 assert_eq!(got.to_json(), spec.to_json());
+                assert_eq!(trace_id, 0xdead_beef_dead_beef_dead_beef_dead_beef);
+                assert_eq!(span_base, 2 << 40);
+                assert_eq!((t0, t1, t2), (0.5, 1.25, 1.5));
             }
             other => panic!("wrong kind: {other:?}"),
         }
+    }
+
+    #[test]
+    fn clock_and_round_ctx_roundtrip_bit_exactly() {
+        // NTP legs must survive bit-exactly — including values a JSON
+        // number would mangle.
+        let t0 = f64::from_bits(0x3ff0_0000_0000_0001);
+        match roundtrip(&Control::ClockProbe { t0 }) {
+            Control::ClockProbe { t0: got } => assert_eq!(got.to_bits(), t0.to_bits()),
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match roundtrip(&Control::ClockReply { t0, t1: 2.0, t2: f64::NAN }) {
+            Control::ClockReply { t0: a, t1: b, t2: c } => {
+                assert_eq!(a.to_bits(), t0.to_bits());
+                assert_eq!(b, 2.0);
+                assert!(c.is_nan());
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        match roundtrip(&Control::RoundCtx { round: 7, parent: (3 << 40) + 9 }) {
+            Control::RoundCtx { round, parent } => {
+                assert_eq!((round, parent), (7, (3 << 40) + 9));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+        // Strict keys apply to the new kinds too.
+        let err = Control::from_json(
+            &Json::parse(r#"{"kind":"clock","t0":"0000000000000000","drift":1}"#).unwrap(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("drift"), "{err}");
     }
 
     #[test]
@@ -352,7 +531,8 @@ mod tests {
 
     #[test]
     fn unknown_keys_and_kinds_are_rejected() {
-        let good = Control::Hello { proto: 1, wire: 2, name: "x".into(), run_id: String::new() };
+        let good =
+            Control::Hello { proto: 1, wire: 2, name: "x".into(), run_id: String::new(), t0: 0.0 };
         let mut o = match good.to_json() {
             Json::Obj(o) => o,
             _ => unreachable!(),

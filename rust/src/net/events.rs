@@ -27,7 +27,18 @@
 //! | `run_end`        | `rounds`, `final_accuracy`, `total_bytes`            |
 //! | `health_anomaly` | `round`, `kind`, `value`, `threshold` ([`HealthObserver`]) |
 //! | `health_straggler` | `round`, `client`, `ewma_s`, `median_s`            |
-//! | `heartbeat`      | `seq` (socket-only; never written to the file)       |
+//! | `heartbeat`      | `seq`, `clocks` (socket-only; never written to the file) |
+//!
+//! The heartbeat's optional `clocks` object piggybacks the latest
+//! clock-offset re-estimates from client [`Control::ClockProbe`] exchanges:
+//! `{"<process>": {"offset_s": ..., "probes": N}}`, keyed by client process
+//! index. Consumers that only know v1 heartbeats still parse the line —
+//! `seq` is unchanged and extra keys are additive (check_trace.py --events
+//! stays green). `offset_s` here is the coordinator's one-way estimate
+//! (receive-stamp minus client send-stamp, so it includes the uplink
+//! delay); the precise two-sided offset lives in the client's trace header.
+//!
+//! [`Control::ClockProbe`]: crate::net::control::Control::ClockProbe
 
 use std::collections::BTreeMap;
 use std::fs::File;
@@ -67,6 +78,14 @@ struct HbState {
     seq: u64,
 }
 
+/// Latest clock-offset re-estimate for one client process, as seen by the
+/// coordinator when servicing a `ClockProbe`.
+#[derive(Clone, Copy)]
+struct ClockEstimate {
+    offset_s: f64,
+    probes: u64,
+}
+
 /// Where event lines go: an optional file plus any number of observer
 /// sockets (shared with the acceptor thread, which appends mid-run).
 #[derive(Clone)]
@@ -74,6 +93,9 @@ pub struct EventSink {
     file: Arc<Mutex<Option<File>>>,
     observers: Arc<Mutex<Vec<TcpStream>>>,
     hb: Arc<Mutex<HbState>>,
+    /// Per-process clock re-estimates, written by the reader threads when a
+    /// probe is serviced, drained into heartbeat lines.
+    clocks: Arc<Mutex<BTreeMap<usize, ClockEstimate>>>,
     heartbeat: Duration,
 }
 
@@ -89,6 +111,7 @@ impl EventSink {
             file: Arc::new(Mutex::new(file)),
             observers: Arc::default(),
             hb: Arc::default(),
+            clocks: Arc::default(),
             heartbeat: DEFAULT_HEARTBEAT,
         }
     }
@@ -105,6 +128,16 @@ impl EventSink {
     pub fn subscribe(&self, stream: TcpStream) {
         stream.set_write_timeout(Some(OBSERVER_WRITE_TIMEOUT)).ok();
         self.observers.lock().expect("observer list poisoned").push(stream);
+    }
+
+    /// Note a serviced clock probe: the next heartbeat line carries the
+    /// latest estimate per process under its `clocks` key. Called from the
+    /// reader threads, so this only touches its own lock.
+    pub fn record_clock(&self, process: usize, offset_s: f64) {
+        let mut clocks = self.clocks.lock().expect("clock estimates poisoned");
+        let entry = clocks.entry(process).or_insert(ClockEstimate { offset_s, probes: 0 });
+        entry.offset_s = offset_s;
+        entry.probes += 1;
     }
 
     pub fn has_outputs(&self) -> bool {
@@ -158,6 +191,18 @@ impl EventSink {
         let mut o = BTreeMap::new();
         o.insert("event".to_string(), Json::Str("heartbeat".to_string()));
         o.insert("seq".to_string(), Json::Num(due as f64));
+        let clocks = self.clocks.lock().expect("clock estimates poisoned");
+        if !clocks.is_empty() {
+            let mut c = BTreeMap::new();
+            for (process, est) in clocks.iter() {
+                let mut e = BTreeMap::new();
+                e.insert("offset_s".to_string(), num_or_null(est.offset_s));
+                e.insert("probes".to_string(), Json::Num(est.probes as f64));
+                c.insert(process.to_string(), Json::Obj(e));
+            }
+            o.insert("clocks".to_string(), Json::Obj(c));
+        }
+        drop(clocks);
         self.write_sockets(&format!("{}\n", Json::Obj(o)));
     }
 
@@ -523,6 +568,31 @@ mod tests {
         let hb = Json::parse(lines[0]).unwrap();
         assert_eq!(hb.get("event").unwrap().as_str(), Some("heartbeat"));
         assert_eq!(hb.get("seq").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn heartbeat_piggybacks_clock_estimates_without_breaking_the_schema() {
+        let sink = EventSink::new(None).with_heartbeat(Duration::from_millis(5));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        sink.subscribe(TcpStream::connect(addr).unwrap());
+        let (mut server_side, _) = listener.accept().unwrap();
+
+        sink.record_clock(1, 0.25);
+        sink.record_clock(1, 0.125); // latest estimate wins, probes accumulate
+        sink.tick(); // arm
+        std::thread::sleep(Duration::from_millis(10));
+        sink.tick(); // heartbeat with clocks
+        sink.observers.lock().unwrap().clear();
+
+        let mut buf = String::new();
+        server_side.read_to_string(&mut buf).unwrap();
+        let hb = Json::parse(buf.lines().next().unwrap()).unwrap();
+        assert_eq!(hb.get("event").unwrap().as_str(), Some("heartbeat"));
+        assert_eq!(hb.get("seq").and_then(Json::as_f64), Some(1.0), "v1 key unchanged");
+        let clock = hb.get("clocks").and_then(|c| c.get("1")).expect("clocks.1 present");
+        assert_eq!(clock.get("offset_s").and_then(Json::as_f64), Some(0.125));
+        assert_eq!(clock.get("probes").and_then(Json::as_f64), Some(2.0));
     }
 
     #[test]

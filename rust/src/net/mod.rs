@@ -13,8 +13,11 @@
 //!   and control messages; typed [`wire::NetError`]s for every way a
 //!   socket can lie (truncation, oversize, garbage, stall, version skew).
 //! * [`control`] — strict unknown-rejecting JSON control plane: Hello /
-//!   Welcome (carrying the full `RunSpec`) / Reject / Observe / Status /
-//!   StatusReply / RoundReport (bit-exact hex floats) / Shutdown.
+//!   Welcome (carrying the full `RunSpec`, the distributed-trace identity,
+//!   and the NTP handshake legs) / RoundCtx (per-round cross-process span
+//!   parent) / ClockProbe / ClockReply (periodic clock re-estimation) /
+//!   Reject / Observe / Status / StatusReply / RoundReport (bit-exact hex
+//!   floats) / Shutdown. Tracing semantics in `docs/TRACING.md`.
 //! * [`tcp`] — [`tcp::TcpLink`], the socket-backed
 //!   [`crate::transport::Transport`] with timeouts, connect retry with
 //!   backoff, and telemetry byte counters.

@@ -53,7 +53,7 @@ use crate::federation::{
 use crate::metrics::{evaluate, RoundRecord, RunHistory};
 use crate::model::{init_params, ParamSet};
 use crate::sim::Fleet;
-use crate::telemetry::{FlightRecorder, HealthRegistry};
+use crate::telemetry::{FlightRecorder, HealthRegistry, Ledger};
 use crate::transport::{Frame, FrameHub, Transport, WireFormat, WIRE_VERSION};
 use crate::util::json::Json;
 use crate::util::rng::{seeds, Rng};
@@ -143,6 +143,33 @@ pub fn owned_clients(num_clients: usize, processes: usize, p: usize) -> Vec<usiz
     (0..num_clients).filter(|cid| cid % processes == p).collect()
 }
 
+/// "Now" on the coordinator's trace timebase (the tracer epoch every
+/// coordinator span is stamped against); 0.0 when the server is untraced —
+/// the NTP legs are then meaningless and clients ignore them.
+fn server_now_s() -> f64 {
+    crate::telemetry::active().map_or(0.0, |t| t.tracer.now_s())
+}
+
+/// Deterministic 128-bit trace id for a served run: FNV-1a over the run id
+/// and seed. Deterministic so re-serving the same spec yields joinable
+/// artifacts; forced non-zero because zero means "untraced".
+fn derive_trace_id(run_id: &str, seed: u64) -> u128 {
+    let mut h: u128 = 0x6c62272e07bb014262b821756295c58d;
+    let prime: u128 = 0x0000000001000000000000000000013b;
+    for b in run_id.bytes().chain(seed.to_le_bytes()) {
+        h ^= b as u128;
+        h = h.wrapping_mul(prime);
+    }
+    h | 1
+}
+
+/// Start of client process `p`'s span-id block: `(p + 1) << 40` keeps every
+/// id below 2^53 (exact in JSON's f64) while leaving each process a
+/// trillion ids. The coordinator allocates from base 0.
+pub(crate) fn span_base_for(process: usize) -> u64 {
+    ((process as u64) + 1) << 40
+}
+
 /// Inbound traffic from the reader threads: data frames for the round
 /// router, round reports for the loss bookkeeping.
 enum HubMsg {
@@ -213,6 +240,9 @@ struct RemoteEngine<'a> {
     body_prep: PreparedSegment,
     eval: Option<&'a SynthDataset>,
     history: RunHistory,
+    /// Per-(round, client, message-kind) re-attribution of the ByteMeter's
+    /// measurements; reconciled against `history.total_comm` after the run.
+    ledger: Ledger,
     net: &'a NetRuntime,
 }
 
@@ -235,12 +265,34 @@ impl RemoteEngine<'_> {
 
         let dist_ref =
             [self.global.get("tail")?.clone(), self.global.get("prompt")?.clone()];
-        distribute_model(&hub, &selected, round as u32, &dist_ref, &mut comm, &mut clock)?;
+
+        // Hand every client process this round's trace context before any
+        // frame flies: the coordinator-side round span (currently on this
+        // thread's span stack) becomes the remote parent that client-side
+        // `client:N` spans attach to when the traces are merged.
+        if let Some(t) = &telemetry {
+            if t.tracer.trace_id() != 0 {
+                if let Some(parent) = t.current_span_id() {
+                    let ctx = Control::RoundCtx { round: round as u32, parent };
+                    for writer in &self.net.writers {
+                        writer
+                            .lock()
+                            .expect("writer lock poisoned")
+                            .send_control(&ctx)?;
+                    }
+                }
+            }
+        }
+
+        distribute_model(
+            &hub, &selected, round as u32, &dist_ref, &mut comm, &mut clock,
+            &mut self.ledger,
+        )?;
 
         let serve_span = telemetry.as_ref().map(|t| t.span("phase", "serve"));
         let (agg, outcome) = serve_round(
             self.backend, &self.body_prep, &hub, &selected, round as u32,
-            &n_ks, &self.fed, &dist_ref, &mut comm, &mut clock,
+            &n_ks, &self.fed, &dist_ref, &mut comm, &mut clock, &mut self.ledger,
         )?;
         drop(serve_span);
 
@@ -361,6 +413,10 @@ impl FederatedRun for RemoteEngine<'_> {
         &self.history.total_comm
     }
 
+    fn ledger(&self) -> Option<&Ledger> {
+        Some(&self.ledger)
+    }
+
     fn setup_bytes(&self) -> u64 {
         self.setup_bytes
     }
@@ -376,11 +432,15 @@ impl FederatedRun for RemoteEngine<'_> {
 }
 
 /// Answer one fresh connection's first message during admission. Returns
-/// the admitted client link, if this connection became one.
+/// the admitted client link, if this connection became one. `trace_id` is
+/// the run's distributed-trace id (0 when untraced); the welcome carries it
+/// plus the NTP-style timestamp legs the client uses to estimate its clock
+/// offset from the coordinator (docs/TRACING.md).
 fn admit_connection(
     stream: TcpStream,
     spec: &RunSpec,
     opts: &ServeOptions,
+    trace_id: u128,
     admitted: usize,
     accepting_clients: bool,
 ) -> Option<TcpLink> {
@@ -400,7 +460,10 @@ fn admit_connection(
         link.shutdown();
     };
     match link.recv_msg(false) {
-        Ok(Some(NetMsg::Control(Control::Hello { proto, wire, name, run_id }, _))) => {
+        Ok(Some(NetMsg::Control(Control::Hello { proto, wire, name, run_id, t0 }, _))) => {
+            // Receive timestamp of the hello on the coordinator timebase:
+            // the t1 leg of the client's offset estimate.
+            let t1 = server_now_s();
             if !accepting_clients {
                 reject(&mut link, "run already in progress (connect as an observer)".into());
                 return None;
@@ -441,6 +504,11 @@ fn admit_connection(
                 processes: opts.processes,
                 client_ids,
                 spec: spec.clone(),
+                trace_id,
+                span_base: span_base_for(admitted),
+                t0,
+                t1,
+                t2: server_now_s(),
             };
             match link.send_control(&welcome) {
                 Ok(_) => {
@@ -508,13 +576,17 @@ fn admit_connection(
 /// Reader-thread body: funnel one client process's inbound messages into
 /// the shared hub channel until the socket closes or the run stops. Every
 /// received frame feeds the health registry's per-client byte/liveness
-/// accounting — the real socket traffic, not the simulated meter.
+/// accounting — the real socket traffic, not the simulated meter. Clock
+/// probes are answered inline (stamp receive/send, echo) so the client can
+/// refresh its offset estimate without a round trip through the driver.
 fn reader_loop(
     mut link: TcpLink,
     tx: Sender<Result<HubMsg>>,
     process: usize,
     stop: &AtomicBool,
     health: &HealthRegistry,
+    writer: &Mutex<TcpLink>,
+    events: &EventSink,
 ) {
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -522,6 +594,17 @@ fn reader_loop(
         }
         match link.recv_msg(true) {
             Ok(None) => continue, // idle poll; re-check the stop flag
+            Ok(Some(NetMsg::Control(Control::ClockProbe { t0 }, _))) => {
+                let t1 = server_now_s();
+                // One-way estimate only (the precise two-sided offset is
+                // computed client-side from the full reply); enough for the
+                // heartbeat's coarse "who re-synced" view.
+                events.record_clock(process, t1 - t0);
+                let reply = Control::ClockReply { t0, t1, t2: server_now_s() };
+                if writer.lock().expect("writer lock poisoned").send_control(&reply).is_err() {
+                    return;
+                }
+            }
             Ok(Some(NetMsg::Frame(frame, n))) => {
                 health.client_bytes(frame.client as usize, n as u64);
                 if tx.send(Ok(HubMsg::Frame(frame, n))).is_err() {
@@ -578,8 +661,9 @@ fn acceptor_loop(listener: TcpListener, spec: &RunSpec, opts: &ServeOptions, sto
         match listener.accept() {
             Ok((stream, _)) => {
                 let _ = stream.set_nonblocking(false);
-                // `accepting_clients: false`: the cohort is sealed.
-                let _ = admit_connection(stream, spec, opts, usize::MAX, false);
+                // `accepting_clients: false`: the cohort is sealed (so no
+                // welcome is ever sent and the trace id is moot).
+                let _ = admit_connection(stream, spec, opts, 0, usize::MAX, false);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 opts.events.tick();
@@ -643,6 +727,18 @@ pub fn serve(
     let body_prep = backend.prepare_segment(global.get("body")?)?;
     let fleet = spec.builder().resolved_fleet();
 
+    // --- Distributed-trace identity: when this process is traced, mint
+    // the run's trace id and claim the coordinator's span-id block before
+    // any span opens, so every coordinator span lands in the right tree.
+    let trace_id = match crate::telemetry::active() {
+        Some(t) => {
+            let id = derive_trace_id(&opts.run_id, spec.fed.seed);
+            t.tracer.set_trace_context(id, "coordinator", 0);
+            id
+        }
+        None => 0,
+    };
+
     // --- Admission: blocking accepts until the cohort is full. ---
     if !opts.quiet {
         eprintln!(
@@ -655,7 +751,7 @@ pub fn serve(
     while admitted_links.len() < opts.processes {
         let (stream, _) = listener.accept()?;
         if let Some(link) =
-            admit_connection(stream, spec, opts, admitted_links.len(), true)
+            admit_connection(stream, spec, opts, trace_id, admitted_links.len(), true)
         {
             admitted_links.push(link);
         }
@@ -672,12 +768,14 @@ pub fn serve(
     let net = NetRuntime { writers, rx, processes: opts.processes, stash: RefCell::new(Vec::new()) };
     let stop = AtomicBool::new(false);
 
-    let history = std::thread::scope(|scope| {
+    let (history, ledger_json) = std::thread::scope(|scope| {
         for (process, reader) in readers.into_iter().enumerate() {
             let tx = tx.clone();
             let stop = &stop;
             let health = &*opts.health;
-            scope.spawn(move || reader_loop(reader, tx, process, stop, health));
+            let writer = &net.writers[process];
+            let events = &opts.events;
+            scope.spawn(move || reader_loop(reader, tx, process, stop, health, writer, events));
         }
         drop(tx); // readers hold the only senders now
         scope.spawn(|| acceptor_loop(listener, spec, opts, &stop));
@@ -693,6 +791,7 @@ pub fn serve(
             body_prep,
             eval: Some(&eval),
             history: RunHistory::default(),
+            ledger: Ledger::new(),
             net: &net,
         };
         let mut health_obs =
@@ -702,7 +801,17 @@ pub fn serve(
         let mut event_obs = EventStreamObserver::new(opts.events.clone());
         let mut inner = Tee(&mut health_obs, &mut event_obs);
         let mut tee = Tee(obs, &mut inner);
-        let result = drive(&mut engine, &mut tee);
+        let result = drive(&mut engine, &mut tee).and_then(|history| {
+            // The ledger is a re-attribution of the ByteMeter's numbers;
+            // any divergence is a coordinator bug, not a client's.
+            engine
+                .ledger
+                .reconcile(&history.total_comm)
+                .map_err(|e| anyhow!("ledger/meter divergence: {e}"))?;
+            Ok(history)
+        });
+        let ledger_json =
+            if engine.ledger.is_empty() { None } else { Some(engine.ledger.to_json()) };
 
         // --- Teardown, success or not: tell every client, drop the
         // sockets (wakes blocked readers with EOF), stop the acceptor. ---
@@ -723,9 +832,13 @@ pub fn serve(
             let _ = link.send_control(&Control::Shutdown { reason: reason.clone() });
             link.shutdown();
         }
-        result
+        result.map(|history| (history, ledger_json))
     })?;
 
-    Ok(RunReport::new(spec, head_bytes * spec.fed.num_clients as u64, history)
-        .with_health(opts.health.to_json()))
+    let mut report = RunReport::new(spec, head_bytes * spec.fed.num_clients as u64, history)
+        .with_health(opts.health.to_json());
+    if let Some(ledger) = ledger_json {
+        report = report.with_ledger(ledger);
+    }
+    Ok(report)
 }

@@ -241,6 +241,7 @@ mod tests {
                 wire: crate::transport::WIRE_VERSION,
                 name: "t".into(),
                 run_id: String::new(),
+                t0: 0.0,
             })
             .unwrap();
         client.send(&frame(&[4.0]), WireFormat::F32).unwrap();

@@ -33,7 +33,11 @@ use super::control::Control;
 /// Version of the *net* layer protocol (envelope + control-message
 /// schema). Independent of the codec's `WIRE_VERSION`, which every data
 /// frame still carries and which the handshake pins separately.
-pub const NET_PROTO_VERSION: u8 = 1;
+///
+/// v2: distributed tracing — `hello` carries an NTP `t0`, `welcome`
+/// carries the trace identity + timestamp legs, and the `round_ctx` /
+/// `clock` / `clock_reply` kinds exist (docs/TRACING.md).
+pub const NET_PROTO_VERSION: u8 = 2;
 
 /// Magic tag opening every control-message body.
 pub(crate) const CONTROL_MAGIC: [u8; 2] = *b"NC";
@@ -344,6 +348,7 @@ mod tests {
             wire: crate::transport::WIRE_VERSION,
             name: "dev-board-4".into(),
             run_id: "run-17".into(),
+            t0: 0.25,
         };
         let bytes = control_bytes(&c);
         let n = bytes.len();

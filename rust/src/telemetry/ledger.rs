@@ -1,0 +1,323 @@
+//! Per-(round, client, phase, message-kind) communication-cost ledger.
+//!
+//! SFPrompt's headline numbers are *attribution* claims — how much of the
+//! traffic and compute belongs to Phase 1 (network-free local update +
+//! pruning), Phase 2 (split execution), and Phase 3 (upload/aggregate).
+//! [`ByteMeter`] measures totals per kind; this ledger re-attributes the
+//! **same measurements** onto the paper's structure: every engine tap
+//! site that records into the meter also taps the ledger with the same
+//! `(wire, raw)` byte counts plus the sim-clock transfer time that
+//! [`crate::sim::SimClock::charge_transfer`] returned for the message,
+//! and every `charge_compute` call taps its analytic compute seconds.
+//!
+//! The invariant — checked by [`Ledger::reconcile`] and property-tested
+//! in `tests/proptests.rs` — is that per-kind row sums equal the meter's
+//! `by_kind` / `raw_by_kind` totals **bit-exactly**: the ledger is a
+//! re-attribution, never a re-measurement.
+//!
+//! A sealed run carries the ledger in its `RunReport` under `"ledger"`
+//! (see docs/TRACING.md for the schema); `sfprompt report --waterfall`
+//! renders it as a per-round transfer-vs-compute waterfall.
+
+use std::collections::BTreeMap;
+
+use crate::comm::{ByteMeter, Direction, MsgKind};
+use crate::util::json::Json;
+
+/// The paper phase a message kind belongs to (Algorithm 2's structure).
+pub fn phase_of(kind: MsgKind) -> &'static str {
+    match kind {
+        MsgKind::ModelDistribution => "distribute",
+        MsgKind::SmashedData
+        | MsgKind::BodyOutput
+        | MsgKind::GradBodyOut
+        | MsgKind::GradSmashed => "phase2_split",
+        MsgKind::Upload | MsgKind::AggregateBroadcast => "phase3_upload",
+        MsgKind::FullModel => "full_exchange",
+        MsgKind::Abort => "control",
+    }
+}
+
+/// One (round, client, kind) cell: bytes by direction, the dense-f32
+/// equivalent, message count, and accumulated sim-clock transfer time.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct LedgerRow {
+    pub up_bytes: u64,
+    pub down_bytes: u64,
+    pub raw_bytes: u64,
+    pub messages: u64,
+    pub transfer_s: f64,
+}
+
+/// The cost ledger: a sparse table over (round, client, msg-kind) plus a
+/// per-(round, client) compute-seconds table.
+#[derive(Debug, Default, Clone)]
+pub struct Ledger {
+    rows: BTreeMap<(u32, u32, &'static str), LedgerRow>,
+    compute: BTreeMap<(u32, u32), f64>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    /// Record one transmission — called at the **same site**, with the
+    /// **same byte counts**, as the paired `ByteMeter` record, plus the
+    /// `dt` seconds `SimClock::charge_transfer` returned for it.
+    pub fn tap(
+        &mut self,
+        round: u32,
+        client: u32,
+        kind: MsgKind,
+        dir: Direction,
+        wire_bytes: usize,
+        raw_bytes: usize,
+        transfer_s: f64,
+    ) {
+        let row = self.rows.entry((round, client, kind.label())).or_default();
+        match dir {
+            Direction::Uplink => row.up_bytes += wire_bytes as u64,
+            Direction::Downlink => row.down_bytes += wire_bytes as u64,
+        }
+        row.raw_bytes += raw_bytes as u64;
+        row.messages += 1;
+        row.transfer_s += transfer_s;
+    }
+
+    /// Record the seconds `SimClock::charge_compute` charged a client for
+    /// its round's local compute.
+    pub fn tap_compute(&mut self, round: u32, client: u32, secs: f64) {
+        *self.compute.entry((round, client)).or_insert(0.0) += secs;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty() && self.compute.is_empty()
+    }
+
+    /// Per-kind (wire, raw) byte sums across all rows — the quantities
+    /// that must equal the meter's `by_kind` / `raw_by_kind` exactly.
+    pub fn by_kind_totals(&self) -> (BTreeMap<&'static str, u64>, BTreeMap<&'static str, u64>) {
+        let mut wire: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut raw: BTreeMap<&'static str, u64> = BTreeMap::new();
+        for ((_, _, kind), row) in &self.rows {
+            *wire.entry(kind).or_insert(0) += row.up_bytes + row.down_bytes;
+            *raw.entry(kind).or_insert(0) += row.raw_bytes;
+        }
+        (wire, raw)
+    }
+
+    /// Total messages across all rows (must equal `ByteMeter::messages`).
+    pub fn total_messages(&self) -> u64 {
+        self.rows.values().map(|r| r.messages).sum()
+    }
+
+    /// Check the re-attribution invariant against the meter that was fed
+    /// at the same tap sites. `Err` carries a human-readable diagnosis.
+    pub fn reconcile(&self, meter: &ByteMeter) -> Result<(), String> {
+        let (wire, raw) = self.by_kind_totals();
+        if wire != meter.by_kind {
+            return Err(format!(
+                "ledger wire bytes diverge from ByteMeter: ledger {wire:?} vs meter {:?}",
+                meter.by_kind
+            ));
+        }
+        if raw != meter.raw_by_kind {
+            return Err(format!(
+                "ledger raw bytes diverge from ByteMeter: ledger {raw:?} vs meter {:?}",
+                meter.raw_by_kind
+            ));
+        }
+        if self.total_messages() != meter.messages {
+            return Err(format!(
+                "ledger counts {} messages, meter {}",
+                self.total_messages(),
+                meter.messages
+            ));
+        }
+        let up: u64 = self.rows.values().map(|r| r.up_bytes).sum();
+        let down: u64 = self.rows.values().map(|r| r.down_bytes).sum();
+        if up != meter.uplink || down != meter.downlink {
+            return Err(format!(
+                "ledger directions ({up} up / {down} down) diverge from meter ({} / {})",
+                meter.uplink, meter.downlink
+            ));
+        }
+        Ok(())
+    }
+
+    /// Rounds present in the ledger, ascending.
+    pub fn rounds(&self) -> Vec<u32> {
+        let mut out: Vec<u32> = self.rows.keys().map(|(r, _, _)| *r).collect();
+        out.extend(self.compute.keys().map(|(r, _)| *r));
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// All rows of one round as (client, kind, row), plus that round's
+    /// per-client compute seconds — the waterfall renderer's view.
+    pub fn round_view(&self, round: u32) -> (Vec<(u32, &'static str, &LedgerRow)>, BTreeMap<u32, f64>) {
+        let rows = self
+            .rows
+            .iter()
+            .filter(|((r, _, _), _)| *r == round)
+            .map(|((_, c, k), row)| (*c, *k, row))
+            .collect();
+        let compute = self
+            .compute
+            .iter()
+            .filter(|((r, _), _)| *r == round)
+            .map(|((_, c), s)| (*c, *s))
+            .collect();
+        (rows, compute)
+    }
+
+    /// The `"ledger"` block sealed into a `RunReport`.
+    pub fn to_json(&self) -> Json {
+        let mut rows = Vec::with_capacity(self.rows.len());
+        for ((round, client, kind), row) in &self.rows {
+            let mut o = BTreeMap::new();
+            o.insert("round".to_string(), Json::Num(*round as f64));
+            o.insert("client".to_string(), Json::Num(*client as f64));
+            o.insert("kind".to_string(), Json::Str((*kind).to_string()));
+            o.insert(
+                "phase".to_string(),
+                Json::Str(phase_label_of(kind).to_string()),
+            );
+            o.insert("up_bytes".to_string(), Json::Num(row.up_bytes as f64));
+            o.insert("down_bytes".to_string(), Json::Num(row.down_bytes as f64));
+            o.insert("raw_bytes".to_string(), Json::Num(row.raw_bytes as f64));
+            o.insert("messages".to_string(), Json::Num(row.messages as f64));
+            o.insert("transfer_s".to_string(), Json::Num(row.transfer_s));
+            rows.push(Json::Obj(o));
+        }
+        let mut compute = Vec::with_capacity(self.compute.len());
+        for ((round, client), secs) in &self.compute {
+            let mut o = BTreeMap::new();
+            o.insert("round".to_string(), Json::Num(*round as f64));
+            o.insert("client".to_string(), Json::Num(*client as f64));
+            o.insert("compute_s".to_string(), Json::Num(*secs));
+            compute.push(Json::Obj(o));
+        }
+        let (wire, raw) = self.by_kind_totals();
+        let mut totals = BTreeMap::new();
+        totals.insert(
+            "by_kind".to_string(),
+            Json::Obj(wire.iter().map(|(k, v)| ((*k).to_string(), Json::Num(*v as f64))).collect()),
+        );
+        totals.insert(
+            "raw_by_kind".to_string(),
+            Json::Obj(raw.iter().map(|(k, v)| ((*k).to_string(), Json::Num(*v as f64))).collect()),
+        );
+        totals.insert(
+            "up_bytes".to_string(),
+            Json::Num(self.rows.values().map(|r| r.up_bytes).sum::<u64>() as f64),
+        );
+        totals.insert(
+            "down_bytes".to_string(),
+            Json::Num(self.rows.values().map(|r| r.down_bytes).sum::<u64>() as f64),
+        );
+        totals.insert("messages".to_string(), Json::Num(self.total_messages() as f64));
+        totals.insert(
+            "transfer_s".to_string(),
+            Json::Num(self.rows.values().map(|r| r.transfer_s).sum()),
+        );
+        totals.insert(
+            "compute_s".to_string(),
+            Json::Num(self.compute.values().sum()),
+        );
+        let mut o = BTreeMap::new();
+        o.insert("format".to_string(), Json::Str("sfprompt-ledger".to_string()));
+        o.insert("version".to_string(), Json::Num(1.0));
+        o.insert("rows".to_string(), Json::Arr(rows));
+        o.insert("compute".to_string(), Json::Arr(compute));
+        o.insert("totals".to_string(), Json::Obj(totals));
+        Json::Obj(o)
+    }
+}
+
+/// [`phase_of`] keyed by the *label* (the rows table stores labels so the
+/// BTreeMap orders kinds alphabetically, matching `ByteMeter::by_kind`).
+fn phase_label_of(label: &str) -> &'static str {
+    for kind in [
+        MsgKind::ModelDistribution,
+        MsgKind::SmashedData,
+        MsgKind::BodyOutput,
+        MsgKind::GradBodyOut,
+        MsgKind::GradSmashed,
+        MsgKind::Upload,
+        MsgKind::AggregateBroadcast,
+        MsgKind::FullModel,
+        MsgKind::Abort,
+    ] {
+        if kind.label() == label {
+            return phase_of(kind);
+        }
+    }
+    "unknown"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_reconciles_with_a_meter_fed_at_the_same_sites() {
+        let mut meter = ByteMeter::default();
+        let mut ledger = Ledger::new();
+        let sites = [
+            (0u32, 3u32, MsgKind::ModelDistribution, Direction::Downlink, 1000usize, 1000usize),
+            (0, 3, MsgKind::SmashedData, Direction::Uplink, 400, 400),
+            (0, 3, MsgKind::Upload, Direction::Uplink, 120, 800),
+            (1, 5, MsgKind::SmashedData, Direction::Uplink, 401, 401),
+            (1, 5, MsgKind::AggregateBroadcast, Direction::Downlink, 900, 900),
+        ];
+        for (round, client, kind, dir, wire, raw) in sites {
+            meter.record_with_raw(kind, dir, wire, raw);
+            ledger.tap(round, client, kind, dir, wire, raw, 0.25);
+        }
+        ledger.tap_compute(0, 3, 1.5);
+        ledger.reconcile(&meter).unwrap();
+
+        // Dropping one tap breaks the invariant loudly.
+        meter.record(MsgKind::Upload, Direction::Uplink, 64);
+        let err = ledger.reconcile(&meter).unwrap_err();
+        assert!(err.contains("diverge"), "{err}");
+    }
+
+    #[test]
+    fn phases_follow_the_paper_structure() {
+        assert_eq!(phase_of(MsgKind::ModelDistribution), "distribute");
+        assert_eq!(phase_of(MsgKind::SmashedData), "phase2_split");
+        assert_eq!(phase_of(MsgKind::GradSmashed), "phase2_split");
+        assert_eq!(phase_of(MsgKind::Upload), "phase3_upload");
+        assert_eq!(phase_of(MsgKind::FullModel), "full_exchange");
+        assert_eq!(phase_label_of("upload"), "phase3_upload");
+        assert_eq!(phase_label_of("nonsense"), "unknown");
+    }
+
+    #[test]
+    fn json_block_carries_rows_compute_and_totals() {
+        let mut ledger = Ledger::new();
+        ledger.tap(2, 1, MsgKind::Upload, Direction::Uplink, 100, 400, 0.5);
+        ledger.tap_compute(2, 1, 2.0);
+        let j = ledger.to_json();
+        assert_eq!(j.get("format").and_then(Json::as_str), Some("sfprompt-ledger"));
+        let rows = j.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("phase").and_then(Json::as_str), Some("phase3_upload"));
+        assert_eq!(rows[0].get("raw_bytes").and_then(Json::as_f64), Some(400.0));
+        let totals = j.get("totals").unwrap();
+        assert_eq!(totals.get("compute_s").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            totals.get("by_kind").and_then(|b| b.get("upload")).and_then(Json::as_f64),
+            Some(100.0)
+        );
+        assert!(!ledger.is_empty());
+        assert_eq!(ledger.rounds(), vec![2]);
+        let (rows, compute) = ledger.round_view(2);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(compute.get(&1), Some(&2.0));
+    }
+}

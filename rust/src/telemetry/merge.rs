@@ -1,0 +1,535 @@
+//! Cross-process trace stitching (`sfprompt trace merge`).
+//!
+//! A networked run writes one JSONL trace per process (coordinator plus
+//! each client process), each stamped against its own monotonic epoch and
+//! carrying the distributed-trace identity from the v2 header: a shared
+//! 128-bit `trace_id`, a disjoint span-id block (`span_base`), and an
+//! NTP-style clock estimate against the coordinator
+//! (`coordinator_time = local_time + offset_s`, error bounded by `rtt_s`).
+//! This module joins those files into one causally-consistent tree:
+//!
+//! * **Re-basing** — every span's `t0_s`/`t1_s` shift by its process's
+//!   offset onto the coordinator timeline. Durations are untouched (both
+//!   endpoints shift together), so per-process monotonicity survives.
+//! * **Remote-parent resolution** — spans recorded with `rp` (a parent id
+//!   living in another process) get a real parent edge once the owning
+//!   trace is present; an `rp` that resolves to no span is an error, not
+//!   a silent root.
+//! * **Skew flagging** — after re-basing, a child that escapes its remote
+//!   parent's interval by more than the clock estimate's RTT bound is
+//!   flagged `skew: true`. Timestamps are never clamped or fabricated —
+//!   the flag tells the reader the overlap is a clock artefact.
+//!
+//! The merged document serialises as JSONL (a `merged: true` v2 header
+//! listing every process, then spans tagged with their process index) or
+//! as Chrome trace-event JSON with one `pid` per process. See
+//! docs/TRACING.md for the full schema and worked examples.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+/// Tolerance added to every skew comparison so exact-boundary floating
+/// point never flags a legitimate edge.
+const SKEW_EPS: f64 = 1e-9;
+
+#[derive(Debug, Clone)]
+struct ParsedSpan {
+    id: u64,
+    parent: Option<u64>,
+    remote_parent: Option<u64>,
+    cat: String,
+    name: String,
+    tid: u64,
+    t0_s: f64,
+    t1_s: f64,
+    sim_s: Option<f64>,
+    attrs: Vec<(String, f64)>,
+    open: bool,
+}
+
+/// One per-process trace file, parsed from the JSONL the [`super::Tracer`]
+/// writes (v1 single-process or v2 distributed headers).
+#[derive(Debug, Clone)]
+pub struct ProcessTrace {
+    /// Process label from the v2 header ("coordinator", "client-0", ...);
+    /// empty for v1 traces.
+    pub process: String,
+    /// Run-wide trace id (0 for v1 traces).
+    pub trace_id: u128,
+    /// Start of this process's span-id block.
+    pub span_base: u64,
+    /// `(offset_s, rtt_s)` against the coordinator; `None` means this
+    /// process *is* the coordinator timeline (offset treated as 0).
+    pub clock: Option<(f64, f64)>,
+    spans: Vec<ParsedSpan>,
+}
+
+impl ProcessTrace {
+    /// Parse one trace file. Strict about structure (header first, every
+    /// span line carries the required keys) but tolerant of unknown keys,
+    /// mirroring the Python validator.
+    pub fn parse(text: &str) -> Result<ProcessTrace, String> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let head = lines.next().ok_or("empty trace file")?;
+        let meta = Json::parse(head).map_err(|e| format!("bad meta line: {e}"))?;
+        if meta.get("ev").and_then(Json::as_str) != Some("meta")
+            || meta.get("format").and_then(Json::as_str) != Some("sfprompt-trace")
+        {
+            return Err("first line is not an sfprompt-trace meta header".into());
+        }
+        let version = meta
+            .get("version")
+            .and_then(Json::as_i64)
+            .ok_or("meta missing version")?;
+        if !(1..=2).contains(&version) {
+            return Err(format!("unsupported trace version {version}"));
+        }
+        let trace_id = match meta.get("trace_id").and_then(Json::as_str) {
+            Some(h) => u128::from_str_radix(h, 16).map_err(|_| "bad trace_id hex")?,
+            None => 0,
+        };
+        let process = meta
+            .get("process")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string();
+        let span_base = meta
+            .get("span_base")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64;
+        let clock = meta.get("clock").map(|c| {
+            let off = c.get("offset_s").and_then(Json::as_f64).unwrap_or(0.0);
+            let rtt = c.get("rtt_s").and_then(Json::as_f64).unwrap_or(0.0);
+            (off, rtt)
+        });
+        let mut spans = Vec::new();
+        for (i, line) in lines.enumerate() {
+            let j = Json::parse(line).map_err(|e| format!("bad span line {}: {e}", i + 2))?;
+            if j.get("ev").and_then(Json::as_str) != Some("span") {
+                return Err(format!("line {} is not a span", i + 2));
+            }
+            let id = j
+                .get("id")
+                .and_then(Json::as_i64)
+                .ok_or_else(|| format!("span line {} missing id", i + 2))? as u64;
+            let need_f64 = |key: &str| {
+                j.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("span {id} missing {key}"))
+            };
+            let parent = match j.get("parent") {
+                Some(Json::Null) | None => None,
+                Some(p) => Some(p.as_i64().ok_or_else(|| format!("span {id} bad parent"))? as u64),
+            };
+            let remote_parent = j.get("rp").and_then(Json::as_i64).map(|v| v as u64);
+            let attrs = j
+                .get("attrs")
+                .and_then(Json::as_obj)
+                .map(|o| {
+                    o.iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|n| (k.clone(), n)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            spans.push(ParsedSpan {
+                id,
+                parent,
+                remote_parent,
+                cat: j.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+                name: j.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                tid: j.get("tid").and_then(Json::as_i64).unwrap_or(0) as u64,
+                t0_s: need_f64("t0_s")?,
+                t1_s: need_f64("t1_s")?,
+                sim_s: j.get("sim_s").and_then(Json::as_f64),
+                attrs,
+                open: j.get("open").and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        Ok(ProcessTrace { process, trace_id, span_base, clock, spans })
+    }
+}
+
+/// One span in the merged tree, re-based onto the coordinator timeline.
+#[derive(Debug, Clone)]
+pub struct MergedSpan {
+    /// Index into [`MergedTrace::processes`].
+    pub proc: usize,
+    pub id: u64,
+    /// Resolved parent — local edges kept, `rp` edges resolved.
+    pub parent: Option<u64>,
+    /// True when the parent edge crossed a process boundary.
+    pub remote: bool,
+    pub cat: String,
+    pub name: String,
+    pub tid: u64,
+    /// Re-based wall clock (coordinator timeline).
+    pub t0_s: f64,
+    pub t1_s: f64,
+    pub sim_s: Option<f64>,
+    pub attrs: Vec<(String, f64)>,
+    pub open: bool,
+    /// True when this span escapes its remote parent's interval by more
+    /// than the clock estimate's RTT bound — a clock artefact the merge
+    /// surfaces instead of hiding.
+    pub skew: bool,
+}
+
+/// Per-process header info carried into the merged document.
+#[derive(Debug, Clone)]
+pub struct MergedProcess {
+    pub process: String,
+    pub span_base: u64,
+    /// Offset applied during re-basing (0 for the coordinator).
+    pub offset_s: f64,
+    /// RTT bound of the clock estimate (0 for the coordinator).
+    pub rtt_s: f64,
+}
+
+/// The stitched, causally-consistent union of several process traces.
+#[derive(Debug, Clone)]
+pub struct MergedTrace {
+    pub trace_id: u128,
+    pub processes: Vec<MergedProcess>,
+    /// All spans, sorted by re-based start time.
+    pub spans: Vec<MergedSpan>,
+}
+
+/// Join per-process traces into one tree. Errors (rather than guessing)
+/// on: mismatched trace ids, colliding span ids, or an `rp` that resolves
+/// to no span in any input.
+pub fn merge_traces(traces: &[ProcessTrace]) -> Result<MergedTrace, String> {
+    if traces.is_empty() {
+        return Err("no traces to merge".into());
+    }
+    // All non-zero trace ids must agree; with >1 process they must be set.
+    let mut trace_id = 0u128;
+    for t in traces {
+        if t.trace_id != 0 {
+            if trace_id != 0 && t.trace_id != trace_id {
+                return Err(format!(
+                    "trace id mismatch: {:032x} vs {:032x}",
+                    trace_id, t.trace_id
+                ));
+            }
+            trace_id = t.trace_id;
+        } else if traces.len() > 1 {
+            return Err(format!(
+                "trace '{}' has no trace_id — not part of a distributed run",
+                t.process
+            ));
+        }
+    }
+    // Canonical process order — ascending span base puts the coordinator
+    // (base 0) first however the files were listed on the command line.
+    let mut ordered: Vec<&ProcessTrace> = traces.iter().collect();
+    ordered.sort_by_key(|t| t.span_base);
+
+    let processes: Vec<MergedProcess> = ordered
+        .iter()
+        .map(|t| {
+            let (offset_s, rtt_s) = t.clock.unwrap_or((0.0, 0.0));
+            MergedProcess {
+                process: t.process.clone(),
+                span_base: t.span_base,
+                offset_s,
+                rtt_s,
+            }
+        })
+        .collect();
+
+    // Re-base and check span-id uniqueness across the union.
+    let mut spans: Vec<MergedSpan> = Vec::new();
+    let mut owner: BTreeMap<u64, usize> = BTreeMap::new();
+    for (pi, t) in ordered.iter().enumerate() {
+        let off = processes[pi].offset_s;
+        for s in &t.spans {
+            if owner.insert(s.id, spans.len()).is_some() {
+                return Err(format!("span id {} appears in two traces", s.id));
+            }
+            let (parent, remote) = match s.remote_parent {
+                Some(rp) => (Some(rp), true),
+                None => (s.parent, false),
+            };
+            spans.push(MergedSpan {
+                proc: pi,
+                id: s.id,
+                parent,
+                remote,
+                cat: s.cat.clone(),
+                name: s.name.clone(),
+                tid: s.tid,
+                t0_s: s.t0_s + off,
+                t1_s: s.t1_s + off,
+                sim_s: s.sim_s,
+                attrs: s.attrs.clone(),
+                open: s.open,
+                skew: false,
+            });
+        }
+    }
+
+    // Resolve every parent edge and flag skew on cross-process ones.
+    for i in 0..spans.len() {
+        let Some(pid) = spans[i].parent else { continue };
+        let Some(&pj) = owner.get(&pid) else {
+            return Err(format!(
+                "span {} ({}) has unresolvable parent {}",
+                spans[i].id, spans[i].name, pid
+            ));
+        };
+        if spans[i].remote {
+            let bound = processes[spans[i].proc].rtt_s + SKEW_EPS;
+            let (c0, c1) = (spans[i].t0_s, spans[i].t1_s);
+            let (p0, p1) = (spans[pj].t0_s, spans[pj].t1_s);
+            if c0 < p0 - bound || c1 > p1 + bound {
+                spans[i].skew = true;
+            }
+        } else if spans[pj].proc != spans[i].proc {
+            return Err(format!(
+                "span {} has a local parent edge into another process",
+                spans[i].id
+            ));
+        }
+    }
+    spans.sort_by(|a, b| a.t0_s.total_cmp(&b.t0_s).then(a.id.cmp(&b.id)));
+    Ok(MergedTrace { trace_id, processes, spans })
+}
+
+impl MergedTrace {
+    /// JSONL serialisation: a `merged: true` v2 header naming every
+    /// process, then one span per line in re-based start order. Same span
+    /// schema as a single-process trace plus `proc` (process index) and
+    /// `skew` where flagged; `rp` is kept for provenance on remote edges.
+    pub fn to_jsonl(&self) -> String {
+        let mut meta = BTreeMap::new();
+        meta.insert("ev".into(), Json::Str("meta".into()));
+        meta.insert("format".into(), Json::Str("sfprompt-trace".into()));
+        meta.insert("version".into(), Json::Num(2.0));
+        meta.insert("merged".into(), Json::Bool(true));
+        meta.insert(
+            "trace_id".into(),
+            Json::Str(format!("{:032x}", self.trace_id)),
+        );
+        let procs: Vec<Json> = self
+            .processes
+            .iter()
+            .map(|p| {
+                let mut o = BTreeMap::new();
+                o.insert("process".into(), Json::Str(p.process.clone()));
+                o.insert("span_base".into(), Json::Num(p.span_base as f64));
+                o.insert("offset_s".into(), Json::Num(p.offset_s));
+                o.insert("rtt_s".into(), Json::Num(p.rtt_s));
+                Json::Obj(o)
+            })
+            .collect();
+        meta.insert("processes".into(), Json::Arr(procs));
+        let mut out = Json::Obj(meta).to_string();
+        out.push('\n');
+        for s in &self.spans {
+            let mut o = BTreeMap::new();
+            o.insert("ev".into(), Json::Str("span".into()));
+            o.insert("id".into(), Json::Num(s.id as f64));
+            o.insert(
+                "parent".into(),
+                s.parent.map_or(Json::Null, |p| Json::Num(p as f64)),
+            );
+            if s.remote {
+                o.insert("rp".into(), Json::Num(s.parent.unwrap_or(0) as f64));
+            }
+            o.insert("proc".into(), Json::Num(s.proc as f64));
+            o.insert("cat".into(), Json::Str(s.cat.clone()));
+            o.insert("name".into(), Json::Str(s.name.clone()));
+            o.insert("tid".into(), Json::Num(s.tid as f64));
+            o.insert("t0_s".into(), Json::Num(s.t0_s));
+            o.insert("t1_s".into(), Json::Num(s.t1_s));
+            if let Some(sim) = s.sim_s {
+                o.insert("sim_s".into(), Json::Num(sim));
+            }
+            if s.open {
+                o.insert("open".into(), Json::Bool(true));
+            }
+            if s.skew {
+                o.insert("skew".into(), Json::Bool(true));
+            }
+            if !s.attrs.is_empty() {
+                let attrs: BTreeMap<String, Json> = s
+                    .attrs
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect();
+                o.insert("attrs".into(), Json::Obj(attrs));
+            }
+            out.push_str(&Json::Obj(o).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Chrome trace-event JSON with one `pid` per process (pid = process
+    /// index + 1, named via metadata events) — Perfetto shows the
+    /// coordinator and each client as separate process tracks on the
+    /// shared, re-based timeline.
+    pub fn to_chrome_trace(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        for (pi, p) in self.processes.iter().enumerate() {
+            let mut e = BTreeMap::new();
+            e.insert("name".into(), Json::Str("process_name".into()));
+            e.insert("ph".into(), Json::Str("M".into()));
+            e.insert("pid".into(), Json::Num((pi + 1) as f64));
+            e.insert("tid".into(), Json::Num(0.0));
+            let mut args = BTreeMap::new();
+            args.insert("name".into(), Json::Str(p.process.clone()));
+            e.insert("args".into(), Json::Obj(args));
+            events.push(Json::Obj(e));
+        }
+        for s in &self.spans {
+            let mut e = BTreeMap::new();
+            e.insert("name".into(), Json::Str(s.name.clone()));
+            e.insert("cat".into(), Json::Str(s.cat.clone()));
+            e.insert("ph".into(), Json::Str("X".into()));
+            e.insert("ts".into(), Json::Num(s.t0_s * 1e6));
+            e.insert("dur".into(), Json::Num((s.t1_s - s.t0_s) * 1e6));
+            e.insert("pid".into(), Json::Num((s.proc + 1) as f64));
+            e.insert("tid".into(), Json::Num(s.tid as f64));
+            let mut args = BTreeMap::new();
+            if let Some(sim) = s.sim_s {
+                args.insert("sim_s".into(), Json::Num(sim));
+            }
+            if s.skew {
+                args.insert("skew".into(), Json::Num(1.0));
+            }
+            for (k, v) in &s.attrs {
+                args.insert(k.clone(), Json::Num(*v));
+            }
+            if !args.is_empty() {
+                e.insert("args".into(), Json::Obj(args));
+            }
+            events.push(Json::Obj(e));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("traceEvents".into(), Json::Arr(events));
+        doc.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+        Json::Obj(doc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Tracer;
+
+    /// Build a coordinator + one client trace pair the way the networked
+    /// run does: shared trace id, disjoint span bases, client clock offset.
+    fn traced_pair(offset: f64, rtt: f64) -> (String, String) {
+        let coord = Tracer::new();
+        coord.set_trace_context(0xabc, "coordinator", 0);
+        let run = coord.open("run", "run:sfprompt", None);
+        let round = coord.open("round", "round:0", None);
+        coord.close(round, None, Vec::new());
+        coord.close(run, None, Vec::new());
+        coord.finish();
+
+        let client = Tracer::new();
+        client.set_trace_context(0xabc, "client-0", 1u64 << 40);
+        client.set_clock(offset, rtt);
+        let c = client.open_remote("client", "client:0", round);
+        let phase = client.open("phase", "phase1_local", None);
+        client.close(phase, None, Vec::new());
+        client.close(c, None, Vec::new());
+        client.finish();
+        (coord.to_jsonl(), client.to_jsonl())
+    }
+
+    #[test]
+    fn merge_resolves_remote_parents_and_rebases() {
+        let (a, b) = traced_pair(5.0, 0.001);
+        let ta = ProcessTrace::parse(&a).unwrap();
+        let tb = ProcessTrace::parse(&b).unwrap();
+        let merged = merge_traces(&[ta, tb]).unwrap();
+        assert_eq!(merged.trace_id, 0xabc);
+        assert_eq!(merged.processes.len(), 2);
+        let client = merged
+            .spans
+            .iter()
+            .find(|s| s.name.starts_with("client:"))
+            .unwrap();
+        assert!(client.remote);
+        let round = merged.spans.iter().find(|s| s.cat == "round").unwrap();
+        assert_eq!(client.parent, Some(round.id));
+        // Client timestamps moved onto the coordinator timeline.
+        assert!(client.t0_s >= 5.0);
+        // Local nesting inside the client process survived the merge.
+        let phase = merged.spans.iter().find(|s| s.cat == "phase").unwrap();
+        assert_eq!(phase.parent, Some(client.id));
+        assert!(!phase.remote);
+        // Per-process order is preserved: phase sits inside client.
+        assert!(phase.t0_s >= client.t0_s - 1e-9 && phase.t1_s <= client.t1_s + 1e-9);
+    }
+
+    #[test]
+    fn large_offset_flags_skew_instead_of_clamping() {
+        let (a, b) = traced_pair(5.0, 0.001);
+        let ta = ProcessTrace::parse(&a).unwrap();
+        let tb = ProcessTrace::parse(&b).unwrap();
+        let merged = merge_traces(&[ta, tb]).unwrap();
+        let client = merged
+            .spans
+            .iter()
+            .find(|s| s.name.starts_with("client:"))
+            .unwrap();
+        // A +5s offset pushes the client span far outside its parent
+        // round span: flagged, and the timestamps left alone.
+        assert!(client.skew);
+        assert!(client.t1_s > 5.0);
+    }
+
+    #[test]
+    fn unresolvable_remote_parent_is_an_error() {
+        let (_, b) = traced_pair(0.0, 0.0);
+        let tb = ProcessTrace::parse(&b).unwrap();
+        let err = merge_traces(&[tb]).unwrap_err();
+        assert!(err.contains("unresolvable"), "got: {err}");
+    }
+
+    #[test]
+    fn mismatched_trace_ids_are_an_error() {
+        let t1 = Tracer::new();
+        t1.set_trace_context(1, "coordinator", 0);
+        let s = t1.open("run", "run:x", None);
+        t1.close(s, None, Vec::new());
+        t1.finish();
+        let t2 = Tracer::new();
+        t2.set_trace_context(2, "client-0", 1 << 40);
+        let s = t2.open("run", "run:y", None);
+        t2.close(s, None, Vec::new());
+        t2.finish();
+        let a = ProcessTrace::parse(&t1.to_jsonl()).unwrap();
+        let b = ProcessTrace::parse(&t2.to_jsonl()).unwrap();
+        assert!(merge_traces(&[a, b]).unwrap_err().contains("mismatch"));
+    }
+
+    #[test]
+    fn merged_jsonl_round_trips_and_marks_processes() {
+        let (a, b) = traced_pair(0.0, 0.01);
+        let ta = ProcessTrace::parse(&a).unwrap();
+        let tb = ProcessTrace::parse(&b).unwrap();
+        let merged = merge_traces(&[ta, tb]).unwrap();
+        let text = merged.to_jsonl();
+        let mut lines = text.lines();
+        let meta = Json::parse(lines.next().unwrap()).unwrap();
+        assert_eq!(meta.get("merged"), Some(&Json::Bool(true)));
+        assert_eq!(
+            meta.get("processes").and_then(Json::as_arr).unwrap().len(),
+            2
+        );
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("proc").and_then(Json::as_i64).is_some());
+        }
+        let chrome = merged.to_chrome_trace();
+        let evs = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 2 process_name metadata events + 4 spans.
+        assert_eq!(evs.len(), 6);
+    }
+}

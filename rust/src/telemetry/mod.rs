@@ -52,6 +52,8 @@
 
 mod flight;
 mod health;
+mod ledger;
+mod merge;
 mod metrics;
 mod observer;
 mod tracer;
@@ -61,6 +63,8 @@ pub use health::{
     Anomaly, AnomalyDetector, AnomalyKind, ClientHealth, HealthConfig, HealthRegistry,
     RoundHealth, StragglerFlag,
 };
+pub use ledger::{phase_of, Ledger, LedgerRow};
+pub use merge::{merge_traces, MergedProcess, MergedSpan, MergedTrace, ProcessTrace};
 pub use metrics::{Histogram, MetricsRegistry};
 pub use observer::TelemetryObserver;
 pub use tracer::{chrome_trace_from_records, SpanRecord, Tracer};
@@ -98,6 +102,20 @@ impl Telemetry {
         parent: Option<u64>,
     ) -> SpanGuard {
         let id = self.tracer.open(cat, name, Some(parent));
+        SpanGuard { telemetry: self.clone(), id, sim_s: None, attrs: Vec::new() }
+    }
+
+    /// Open a span whose parent span lives in **another process** (the
+    /// coordinator's round span, carried over the control plane). Locally
+    /// the span is a root; the cross-process edge is serialised as `rp`
+    /// and resolved by `sfprompt trace merge` (docs/TRACING.md).
+    pub fn span_remote(
+        self: &Arc<Self>,
+        cat: &'static str,
+        name: &str,
+        remote_parent: u64,
+    ) -> SpanGuard {
+        let id = self.tracer.open_remote(cat, name, remote_parent);
         SpanGuard { telemetry: self.clone(), id, sim_s: None, attrs: Vec::new() }
     }
 

@@ -43,11 +43,33 @@ fn current_thread_id() -> u64 {
     THREAD_ID.with(|t| *t)
 }
 
+/// Distributed-trace identity, set once per process: on the coordinator
+/// when a traced serve starts, on clients from the `Welcome` handshake.
+/// Absent (all defaults) for single-process traces — `to_jsonl` then
+/// emits the v1 header unchanged. See docs/TRACING.md.
+#[derive(Default, Clone)]
+struct TraceMeta {
+    /// 128-bit run-wide trace id (0 = unset / single-process).
+    trace_id: u128,
+    /// Human label for this process ("coordinator", "client-0", ...).
+    process: Option<String>,
+    /// Span ids for this process start at `span_base + 1` — each process
+    /// allocates from a disjoint block so merged ids never collide.
+    span_base: u64,
+    /// `(offset_s, rtt_s)`: coordinator_time = local_time + offset, and
+    /// the round-trip time of the estimate (the merge tool's error bound).
+    clock: Option<(f64, f64)>,
+}
+
 /// One finished (or force-closed) span.
 #[derive(Debug, Clone)]
 pub struct SpanRecord {
     pub id: u64,
     pub parent: Option<u64>,
+    /// Parent span id living in *another process* (serialised as `rp`).
+    /// The span is a local root; `trace merge` resolves this into a real
+    /// parent edge once the owning trace is present.
+    pub remote_parent: Option<u64>,
     /// Taxonomy level: "run", "round", "phase", "client", "stage", ...
     pub cat: &'static str,
     pub name: String,
@@ -67,6 +89,7 @@ pub struct SpanRecord {
 
 struct OpenSpan {
     parent: Option<u64>,
+    remote_parent: Option<u64>,
     cat: &'static str,
     name: String,
     tid: u64,
@@ -84,6 +107,7 @@ pub struct Tracer {
     tracer_id: u64,
     epoch: Instant,
     next_span_id: AtomicU64,
+    meta: Mutex<TraceMeta>,
     state: Mutex<TraceState>,
     /// Optional flight-recorder mirror: span closures land in its ring
     /// (kind = category) so a post-mortem shows the final spans.
@@ -102,9 +126,41 @@ impl Tracer {
             tracer_id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
             epoch: Instant::now(),
             next_span_id: AtomicU64::new(1),
+            meta: Mutex::new(TraceMeta::default()),
             state: Mutex::new(TraceState::default()),
             flight: Mutex::new(None),
         }
+    }
+
+    /// Adopt a distributed-trace identity: the run-wide `trace_id`, this
+    /// process's label, and the start of its disjoint span-id block. Call
+    /// before any span opens — ids already handed out keep their old base.
+    pub fn set_trace_context(&self, trace_id: u128, process: &str, span_base: u64) {
+        {
+            let mut m = self.meta.lock().unwrap();
+            m.trace_id = trace_id;
+            m.process = Some(process.to_string());
+            m.span_base = span_base;
+        }
+        self.next_span_id.store(span_base + 1, Ordering::SeqCst);
+    }
+
+    /// Record the latest clock estimate against the coordinator:
+    /// coordinator_time = local_time + `offset_s`, error bounded by
+    /// `rtt_s`. Later estimates overwrite earlier ones (the header keeps
+    /// only the freshest).
+    pub fn set_clock(&self, offset_s: f64, rtt_s: f64) {
+        self.meta.lock().unwrap().clock = Some((offset_s, rtt_s));
+    }
+
+    /// The run-wide trace id (0 until [`Tracer::set_trace_context`]).
+    pub fn trace_id(&self) -> u128 {
+        self.meta.lock().unwrap().trace_id
+    }
+
+    /// Latest `(offset_s, rtt_s)` clock estimate, if any.
+    pub fn clock(&self) -> Option<(f64, f64)> {
+        self.meta.lock().unwrap().clock
     }
 
     /// Mirror span closures into `flight` from now on (see
@@ -113,7 +169,10 @@ impl Tracer {
         *self.flight.lock().unwrap() = Some(flight);
     }
 
-    fn now_s(&self) -> f64 {
+    /// Seconds since this tracer's epoch — the timebase every span in this
+    /// process is stamped with. Public so the networked client can stamp
+    /// its NTP-style clock probes on the same clock as its spans.
+    pub fn now_s(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
     }
 
@@ -134,10 +193,28 @@ impl Tracer {
     /// pushed on this thread's stack either way, so spans opened after it on
     /// this thread nest inside it.
     pub(crate) fn open(&self, cat: &'static str, name: &str, parent: Option<Option<u64>>) -> u64 {
+        self.open_impl(cat, name, parent, None)
+    }
+
+    /// Open a span whose parent lives in another process: locally a root
+    /// (nothing here contains it), but recorded with `remote_parent` so
+    /// `trace merge` can attach it under the owning process's span.
+    pub(crate) fn open_remote(&self, cat: &'static str, name: &str, remote_parent: u64) -> u64 {
+        self.open_impl(cat, name, Some(None), Some(remote_parent))
+    }
+
+    fn open_impl(
+        &self,
+        cat: &'static str,
+        name: &str,
+        parent: Option<Option<u64>>,
+        remote_parent: Option<u64>,
+    ) -> u64 {
         let parent = parent.unwrap_or_else(|| self.current_span_id());
         let id = self.next_span_id.fetch_add(1, Ordering::Relaxed);
         let span = OpenSpan {
             parent,
+            remote_parent,
             cat,
             name: name.to_string(),
             tid: current_thread_id(),
@@ -166,6 +243,7 @@ impl Tracer {
             st.closed.push(SpanRecord {
                 id,
                 parent: span.parent,
+                remote_parent: span.remote_parent,
                 cat: span.cat,
                 name: span.name,
                 tid: span.tid,
@@ -190,6 +268,7 @@ impl Tracer {
                 st.closed.push(SpanRecord {
                     id: *id,
                     parent: span.parent,
+                    remote_parent: span.remote_parent,
                     cat: span.cat,
                     name: span.name,
                     tid: span.tid,
@@ -225,6 +304,9 @@ impl Tracer {
             "parent".into(),
             r.parent.map_or(Json::Null, |p| Json::Num(p as f64)),
         );
+        if let Some(rp) = r.remote_parent {
+            o.insert("rp".into(), Json::Num(rp as f64));
+        }
         o.insert("cat".into(), Json::Str(r.cat.into()));
         o.insert("name".into(), Json::Str(r.name.clone()));
         o.insert("tid".into(), Json::Num(r.tid as f64));
@@ -250,10 +332,31 @@ impl Tracer {
     /// JSON Lines serialisation: a `meta` header line, then one span per
     /// line in start order. See `docs/TELEMETRY.md` for the schema.
     pub fn to_jsonl(&self) -> String {
+        let tm = self.meta.lock().unwrap().clone();
         let mut meta = BTreeMap::new();
         meta.insert("ev".into(), Json::Str("meta".into()));
         meta.insert("format".into(), Json::Str("sfprompt-trace".into()));
-        meta.insert("version".into(), Json::Num(1.0));
+        if tm.trace_id == 0 {
+            // Single-process trace: the v1 header, unchanged.
+            meta.insert("version".into(), Json::Num(1.0));
+        } else {
+            // Distributed trace: v2 adds the run-wide identity, this
+            // process's label and span-id block, and the freshest clock
+            // estimate against the coordinator timeline.
+            meta.insert("version".into(), Json::Num(2.0));
+            meta.insert("trace_id".into(), Json::Str(format!("{:032x}", tm.trace_id)));
+            meta.insert(
+                "process".into(),
+                Json::Str(tm.process.clone().unwrap_or_default()),
+            );
+            meta.insert("span_base".into(), Json::Num(tm.span_base as f64));
+            if let Some((offset_s, rtt_s)) = tm.clock {
+                let mut clock = BTreeMap::new();
+                clock.insert("offset_s".into(), Json::Num(offset_s));
+                clock.insert("rtt_s".into(), Json::Num(rtt_s));
+                meta.insert("clock".into(), Json::Obj(clock));
+            }
+        }
         let mut out = Json::Obj(meta).to_string();
         out.push('\n');
         for r in self.records() {
@@ -385,6 +488,49 @@ mod tests {
         assert_eq!(span.get("parent"), Some(&Json::Null));
         assert!(span.get("t1_s").and_then(Json::as_f64).unwrap() >= 0.0);
         assert_eq!(span.get("open"), None);
+    }
+
+    #[test]
+    fn trace_context_rebases_span_ids_and_upgrades_the_header() {
+        let t = Tracer::new();
+        t.set_trace_context(0xfeed_beef, "client-1", 2u64 << 40);
+        t.set_clock(-0.125, 0.002);
+        let id = t.open_remote("client", "client:1", 77);
+        assert_eq!(id, (2u64 << 40) + 1);
+        t.close(id, None, Vec::new());
+        t.finish();
+        let text = t.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        let meta = Json::parse(lines[0]).unwrap();
+        assert_eq!(meta.get("version").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(
+            meta.get("trace_id").and_then(Json::as_str),
+            Some("000000000000000000000000feedbeef")
+        );
+        assert_eq!(meta.get("process").and_then(Json::as_str), Some("client-1"));
+        assert_eq!(
+            meta.get("span_base").and_then(Json::as_f64),
+            Some((2u64 << 40) as f64)
+        );
+        let clock = meta.get("clock").unwrap();
+        assert_eq!(clock.get("offset_s").and_then(Json::as_f64), Some(-0.125));
+        assert_eq!(clock.get("rtt_s").and_then(Json::as_f64), Some(0.002));
+        let span = Json::parse(lines[1]).unwrap();
+        // Locally a root, but carries the cross-process parent as `rp`.
+        assert_eq!(span.get("parent"), Some(&Json::Null));
+        assert_eq!(span.get("rp").and_then(Json::as_f64), Some(77.0));
+    }
+
+    #[test]
+    fn unset_trace_context_keeps_the_v1_header() {
+        let t = Tracer::new();
+        let a = t.open("run", "run:x", None);
+        t.close(a, None, Vec::new());
+        t.finish();
+        let meta = Json::parse(t.to_jsonl().lines().next().unwrap()).unwrap();
+        assert_eq!(meta.get("version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(meta.get("trace_id"), None);
+        assert_eq!(meta.get("clock"), None);
     }
 
     #[test]

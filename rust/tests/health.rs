@@ -150,6 +150,7 @@ fn aborted_client_leaves_a_parseable_postmortem_dump() {
                 wire: sfprompt::transport::WIRE_VERSION,
                 name: "deserter".into(),
                 run_id: "test-run".into(),
+                t0: 0.0,
             })
             .unwrap();
         match deserter.recv_msg(false).unwrap() {

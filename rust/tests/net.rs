@@ -41,13 +41,16 @@ fn in_process_report(spec: &RunSpec) -> RunReport {
     RunReport::new(spec, run.setup_bytes(), hist)
 }
 
-/// Strip real-wall-time fields — and the serve-only `health` block, which
-/// carries wall-clock ages by design — so reports compare exactly.
+/// Strip real-wall-time fields — the serve-only `health` block (wall-clock
+/// ages by design), the serve-only `ledger` block (the in-process report
+/// here is built without one), and any `telemetry` block — so reports
+/// compare exactly. Mirrors the DROP list of `sfprompt diff`.
 fn strip_wall(v: &Json) -> Json {
+    const STRIP: [&str; 4] = ["wall_s", "health", "ledger", "telemetry"];
     match v {
         Json::Obj(o) => Json::Obj(
             o.iter()
-                .filter(|(k, _)| k.as_str() != "wall_s" && k.as_str() != "health")
+                .filter(|(k, _)| !STRIP.contains(&k.as_str()))
                 .map(|(k, x)| (k.clone(), strip_wall(x)))
                 .collect(),
         ),
@@ -135,6 +138,25 @@ fn tcp_loopback_report_is_byte_identical_to_in_process() {
     // frames for distribution + phase-2 + upload are far beyond 1 KB even
     // on the tiny config.
     assert!(report.history.total_comm.total() > 1024);
+
+    // The serve report seals a cost ledger whose totals re-add to the
+    // measured meter exactly (reconcile already gated the run on the
+    // per-kind sums; spot-check the sealed JSON here).
+    let json = report.to_json();
+    let ledger = json.get("ledger").expect("serve report must carry a cost ledger");
+    assert_eq!(ledger.get("format").and_then(Json::as_str), Some("sfprompt-ledger"));
+    let totals = ledger.get("totals").expect("ledger totals");
+    let comm = &report.history.total_comm;
+    assert_eq!(totals.get("up_bytes").and_then(Json::as_f64), Some(comm.uplink as f64));
+    assert_eq!(totals.get("down_bytes").and_then(Json::as_f64), Some(comm.downlink as f64));
+    assert_eq!(totals.get("messages").and_then(Json::as_f64), Some(comm.messages as f64));
+    for (&kind, &bytes) in &comm.by_kind {
+        assert_eq!(
+            totals.get("by_kind").and_then(|b| b.get(kind)).and_then(Json::as_f64),
+            Some(bytes as f64),
+            "ledger by_kind[{kind}] must equal the meter"
+        );
+    }
 }
 
 #[test]
@@ -172,6 +194,7 @@ fn wire_version_mismatch_is_refused_and_the_run_survives() {
             wire: 99,
             name: "time-traveller".into(),
             run_id: String::new(),
+            t0: 0.0,
         })
         .unwrap();
         match bad.recv_msg(false).unwrap() {

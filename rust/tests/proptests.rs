@@ -743,6 +743,7 @@ fn prop_net_stream_reassembles_any_message_mix_under_any_segmentation() {
                         wire: WIRE_VERSION,
                         name: format!("peer-{}", rng.below(100)),
                         run_id: format!("run-{}", rng.below(10)),
+                        t0: f64::from_bits(rng.next_u64()),
                     },
                     1 => Control::Reject { reason: "no".repeat(rng.below(40)) },
                     2 => Control::RoundReport {
@@ -834,6 +835,122 @@ fn prop_round_report_losses_roundtrip_bit_exact_through_the_envelope() {
                 assert_eq!(got_split, split, "case {case}: split loss bits drifted");
             }
             other => panic!("case {case}: expected a round report, got {other:?}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- ledger
+
+#[test]
+fn prop_ledger_reattributes_the_meter_bit_exactly() {
+    // The communication-cost ledger is a RE-ATTRIBUTION of the ByteMeter's
+    // measurements: feed both at the same sites with the same byte counts
+    // (as every engine tap site does) and the per-kind row sums must equal
+    // the meter's by_kind / raw_by_kind totals exactly — no tolerance.
+    // Then a single missed tap must be caught by reconcile().
+    use sfprompt::telemetry::Ledger;
+
+    const KINDS: [MsgKind; 8] = [
+        MsgKind::ModelDistribution,
+        MsgKind::SmashedData,
+        MsgKind::BodyOutput,
+        MsgKind::GradBodyOut,
+        MsgKind::GradSmashed,
+        MsgKind::Upload,
+        MsgKind::AggregateBroadcast,
+        MsgKind::FullModel,
+    ];
+    let mut rng = Rng::new(111);
+    for case in 0..CASES {
+        let mut meter = ByteMeter::default();
+        let mut ledger = Ledger::new();
+        for _ in 0..1 + rng.below(120) {
+            let kind = KINDS[rng.below(KINDS.len())];
+            let dir =
+                if rng.below(2) == 0 { Direction::Uplink } else { Direction::Downlink };
+            let wire = rng.below(1 << 20);
+            let raw = wire + rng.below(1 << 20);
+            let (round, client) = (rng.below(8) as u32, rng.below(16) as u32);
+            meter.record_with_raw(kind, dir, wire, raw);
+            ledger.tap(round, client, kind, dir, wire, raw, rng.below(1000) as f64 * 1e-3);
+            if rng.below(4) == 0 {
+                ledger.tap_compute(round, client, 0.25);
+            }
+        }
+        let (wire_sums, raw_sums) = ledger.by_kind_totals();
+        assert_eq!(wire_sums, meter.by_kind, "case {case}: wire sums diverge");
+        assert_eq!(raw_sums, meter.raw_by_kind, "case {case}: raw sums diverge");
+        ledger.reconcile(&meter).unwrap_or_else(|e| panic!("case {case}: {e}"));
+
+        // One meter record without its ledger tap — reconcile must refuse.
+        meter.record(KINDS[rng.below(KINDS.len())], Direction::Uplink, 1 + rng.below(64));
+        assert!(ledger.reconcile(&meter).is_err(), "case {case}: missed tap undetected");
+    }
+}
+
+#[test]
+fn prop_clock_messages_round_trip_ntp_legs_bit_exactly() {
+    // The NTP handshake and re-estimation messages carry raw monotonic
+    // timestamps; any rounding would corrupt the derived offset/RTT. Every
+    // leg must survive the wire with its exact f64 bit pattern, including
+    // weird values (subnormals, infinities, negative zero).
+    use sfprompt::net::wire::{control_bytes, read_message};
+    use sfprompt::net::{Control, NetMsg};
+
+    let mut rng = Rng::new(112);
+    for case in 0..CASES {
+        let weird = [
+            0.0f64.to_bits(),
+            (-0.0f64).to_bits(),
+            f64::INFINITY.to_bits(),
+            f64::NEG_INFINITY.to_bits(),
+            f64::MIN_POSITIVE.to_bits(),
+            1u64,
+        ];
+        let mut gen = |rng: &mut Rng| {
+            if rng.uniform() < 0.3 {
+                weird[rng.below(weird.len())]
+            } else {
+                rng.next_u64()
+            }
+        };
+        let legs = [gen(&mut rng), gen(&mut rng), gen(&mut rng)];
+        let msgs = [
+            Control::ClockProbe { t0: f64::from_bits(legs[0]) },
+            Control::ClockReply {
+                t0: f64::from_bits(legs[0]),
+                t1: f64::from_bits(legs[1]),
+                t2: f64::from_bits(legs[2]),
+            },
+            Control::RoundCtx { round: case as u32, parent: rng.next_u64() >> 11 },
+        ];
+        for msg in msgs {
+            let bytes = control_bytes(&msg);
+            let mut r = Segmented { data: bytes, pos: 0, sizes: vec![5; 4096], next: 0 };
+            let got = match read_message(&mut r, false).unwrap().unwrap() {
+                NetMsg::Control(c, _) => c,
+                other => panic!("case {case}: expected control, got {other:?}"),
+            };
+            match (&msg, &got) {
+                (Control::ClockProbe { t0: a }, Control::ClockProbe { t0: b }) => {
+                    assert_eq!(a.to_bits(), b.to_bits(), "case {case}: probe t0 drifted");
+                }
+                (
+                    Control::ClockReply { t0: a0, t1: a1, t2: a2 },
+                    Control::ClockReply { t0: b0, t1: b1, t2: b2 },
+                ) => {
+                    assert_eq!(a0.to_bits(), b0.to_bits(), "case {case}: reply t0 drifted");
+                    assert_eq!(a1.to_bits(), b1.to_bits(), "case {case}: reply t1 drifted");
+                    assert_eq!(a2.to_bits(), b2.to_bits(), "case {case}: reply t2 drifted");
+                }
+                (
+                    Control::RoundCtx { round: ra, parent: pa },
+                    Control::RoundCtx { round: rb, parent: pb },
+                ) => {
+                    assert_eq!((ra, pa), (rb, pb), "case {case}: round context drifted");
+                }
+                (sent, got) => panic!("case {case}: kind changed: {sent:?} -> {got:?}"),
+            }
         }
     }
 }

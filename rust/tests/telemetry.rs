@@ -13,7 +13,9 @@ use sfprompt::backend::NativeBackend;
 use sfprompt::data::{synth::DatasetProfile, SynthDataset};
 use sfprompt::federation::{drive, FedConfig, Method, RunBuilder, Selection};
 use sfprompt::partition::Partition;
-use sfprompt::telemetry::{self, SpanRecord, Telemetry, TelemetryObserver};
+use sfprompt::telemetry::{
+    self, merge_traces, MergedTrace, ProcessTrace, SpanRecord, Telemetry, TelemetryObserver,
+};
 use sfprompt::transport::WireFormat;
 use sfprompt::util::json::Json;
 
@@ -291,6 +293,146 @@ fn baseline_runs_are_traced_too() {
     );
     assert!(sink.metrics.histogram_count("aggregate_s") >= 2);
     assert!(sink.metrics.histogram_count("stage_s/head_forward_noprompt") > 0);
+}
+
+/// Invariants a merged (multi-process) trace must satisfy on top of the
+/// single-process ones:
+/// 1. canonical process order — coordinator (span_base 0) is process 0;
+/// 2. every parent edge resolves inside the merged document;
+/// 3. an edge is flagged `remote` iff it crosses a process boundary;
+/// 4. every non-coordinator span reaches a coordinator ancestor;
+/// 5. a child escapes its parent's interval only where `skew` is flagged.
+fn assert_merged_invariants(merged: &MergedTrace) {
+    use std::collections::BTreeMap;
+    assert_eq!(merged.processes[0].span_base, 0, "coordinator must be process 0");
+    assert_eq!(merged.processes[0].process, "coordinator");
+    let by_id: BTreeMap<u64, &sfprompt::telemetry::MergedSpan> =
+        merged.spans.iter().map(|s| (s.id, s)).collect();
+    for s in &merged.spans {
+        assert!(!s.open, "merged span {} left open", s.name);
+        if let Some(pid) = s.parent {
+            let p = by_id.get(&pid).unwrap_or_else(|| panic!("dangling parent {pid}"));
+            assert_eq!(
+                s.remote,
+                p.proc != s.proc,
+                "span {}: remote flag must mean a cross-process edge",
+                s.name
+            );
+            let escapes = s.t0_s < p.t0_s - 0.5 || s.t1_s > p.t1_s + 0.5;
+            assert!(
+                !escapes || s.skew,
+                "span {} escapes its parent without a skew flag",
+                s.name
+            );
+        }
+        // Walk to a root: every non-coordinator span must pass through
+        // the coordinator process on the way.
+        if s.proc != 0 {
+            let mut cur: &sfprompt::telemetry::MergedSpan = s;
+            let mut hops = 0;
+            while let Some(pid) = cur.parent {
+                cur = by_id.get(&pid).unwrap();
+                hops += 1;
+                assert!(hops < 10_000, "parent cycle at span {}", s.name);
+                if cur.proc == 0 {
+                    break;
+                }
+            }
+            assert_eq!(
+                cur.proc, 0,
+                "span {} never reaches a coordinator ancestor",
+                s.name
+            );
+        }
+    }
+    // Merged spans are sorted by re-based start time.
+    for w in merged.spans.windows(2) {
+        assert!(w[0].t0_s <= w[1].t0_s + 1e-12);
+    }
+}
+
+#[test]
+fn distributed_traces_merge_into_one_causal_tree() {
+    // Three "processes" exactly as a networked run wires them: one
+    // coordinator sink plus two client sinks with disjoint span-id blocks,
+    // sharing a trace id, with honestly-measured clock offsets (each
+    // client's epoch measured against the coordinator's, like the NTP
+    // handshake does over the socket).
+    let coord = Arc::new(Telemetry::new());
+    coord.tracer.set_trace_context(0xfeed, "coordinator", 0);
+    let run = coord.span("run", "run:sfprompt");
+    let round = coord.span_under("round", "round:0", Some(run.id()));
+    let round_id = round.id();
+
+    let mut client_sinks = Vec::new();
+    for p in 0..2u64 {
+        let sink = Arc::new(Telemetry::new());
+        sink.tracer.set_trace_context(0xfeed, &format!("client-{p}"), (p + 1) << 40);
+        // coordinator_time = client_time + offset: measured at creation.
+        sink.tracer.set_clock(coord.tracer.now_s(), 0.01);
+        {
+            let c = sink.span_remote("client", &format!("client:{p}"), round_id);
+            let _phase = sink.span_under("phase", "phase2_split", Some(c.id()));
+        }
+        assert_eq!(sink.tracer.finish(), 0);
+        client_sinks.push(sink);
+    }
+    drop(round);
+    drop(run);
+    assert_eq!(coord.tracer.finish(), 0);
+
+    // Merge with the coordinator listed LAST: the merge must still put it
+    // first (canonical span_base order), like `trace merge` on any argv.
+    let traces: Vec<ProcessTrace> = [&client_sinks[1], &client_sinks[0], &coord]
+        .iter()
+        .map(|s| ProcessTrace::parse(&s.tracer.to_jsonl()).unwrap())
+        .collect();
+    let merged = merge_traces(&traces).unwrap();
+    assert_eq!(merged.trace_id, 0xfeed);
+    assert_eq!(merged.processes.len(), 3);
+    assert_merged_invariants(&merged);
+
+    // Both client spans resolved onto the coordinator's round span.
+    let remotes: Vec<_> = merged.spans.iter().filter(|s| s.remote).collect();
+    assert_eq!(remotes.len(), 2, "one cross-process edge per client");
+    for r in &remotes {
+        assert_eq!(r.parent, Some(round_id));
+    }
+    // Honest clocks on one machine: nothing should be flagged.
+    assert!(merged.spans.iter().all(|s| !s.skew), "no skew with measured offsets");
+
+    // The merged JSONL re-parses as a v2 trace and keeps every span.
+    let reparsed = ProcessTrace::parse(&merged.to_jsonl()).unwrap();
+    assert_eq!(reparsed.trace_id, 0xfeed);
+}
+
+#[test]
+fn lying_clocks_surface_as_skew_flags_not_clamped_timestamps() {
+    let coord = Arc::new(Telemetry::new());
+    coord.tracer.set_trace_context(0xbad, "coordinator", 0);
+    let round = coord.span("round", "round:0");
+    let round_id = round.id();
+    let client = Arc::new(Telemetry::new());
+    client.tracer.set_trace_context(0xbad, "client-0", 1 << 40);
+    // A wildly wrong offset with a tight claimed RTT bound.
+    client.tracer.set_clock(120.0, 0.001);
+    {
+        let _c = client.span_remote("client", "client:0", round_id);
+    }
+    client.tracer.finish();
+    drop(round);
+    coord.tracer.finish();
+
+    let merged = merge_traces(&[
+        ProcessTrace::parse(&coord.tracer.to_jsonl()).unwrap(),
+        ProcessTrace::parse(&client.tracer.to_jsonl()).unwrap(),
+    ])
+    .unwrap();
+    let c = merged.spans.iter().find(|s| s.cat == "client").unwrap();
+    assert!(c.skew, "the impossible overlap must be flagged");
+    assert!(c.t0_s >= 120.0, "timestamps are re-based but never clamped");
+    let r = merged.spans.iter().find(|s| s.cat == "round").unwrap();
+    assert!(c.t0_s > r.t1_s, "the flagged child genuinely escapes its parent");
 }
 
 #[test]
